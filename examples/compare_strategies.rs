@@ -1,0 +1,87 @@
+//! Exp. 1 on real hardware (this machine): train the `small` model under
+//! every checkpointing strategy at per-iteration frequency and print the
+//! measured training time / stall / storage table — the real-path
+//! counterpart of `lowdiff exp exp1` (which simulates the paper's A100
+//! testbed at full scale).
+//!
+//!   cargo run --release --example compare_strategies -- [--iters N]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use lowdiff::coordinator::driver::{train, StrategyKind, TrainConfig};
+use lowdiff::runtime::{artifacts_dir, ModelRuntime};
+use lowdiff::storage::{LocalDir, StorageBackend, Throttled};
+use lowdiff::util::cli::Args;
+
+fn main() -> Result<()> {
+    lowdiff::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1), &["throttle"])?;
+    let iters: u64 = args.parse_or("iters", 40u64)?;
+    // --throttle emulates the paper's SSD bandwidth so write costs are
+    // visible even on a fast local disk
+    let throttle = args.flag("throttle");
+
+    let mrt = ModelRuntime::load(&artifacts_dir(), "small")?;
+    println!(
+        "comparing strategies on `small` ({} params, {} iters, per-iteration ckpt{})\n",
+        mrt.n_params(),
+        iters,
+        if throttle { ", throttled storage" } else { "" }
+    );
+
+    let strategies = [
+        StrategyKind::None,
+        StrategyKind::LowDiff,
+        StrategyKind::LowDiffPlus,
+        StrategyKind::NaiveDc,
+        StrategyKind::CheckFreq,
+        StrategyKind::Gemini,
+        StrategyKind::TorchSave,
+    ];
+    let mut rows = Vec::new();
+    for strategy in strategies {
+        let dir = std::env::temp_dir().join(format!("lowdiff-cmp-{}", strategy.name()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let local = LocalDir::new(&dir)?;
+        let store: Arc<dyn StorageBackend> = if throttle {
+            // ~200 MB/s with 3 ms per-op latency: a slow SATA-class disk
+            Arc::new(Throttled::new(local, 200e6, std::time::Duration::from_millis(3)))
+        } else {
+            Arc::new(local)
+        };
+        let cfg = TrainConfig {
+            strategy,
+            iters,
+            // per-iteration frequency for the frequent-ckpt systems; the
+            // full-state systems checkpoint every iteration too (Exp. 1)
+            diff_every: 1,
+            full_every: match strategy {
+                StrategyKind::CheckFreq | StrategyKind::Gemini | StrategyKind::TorchSave => 1,
+                _ => 20,
+            },
+            batch_size: 4,
+            eval_every: iters,
+            ..TrainConfig::default()
+        };
+        let report = train(&mrt, store, &cfg)?;
+        println!("{}", report.row());
+        rows.push((strategy.name(), report));
+    }
+
+    // summary vs the no-checkpoint upper bound
+    let base = rows[0].1.wall_secs;
+    println!("\nslowdown vs W/O CKPT:");
+    for (name, r) in &rows {
+        println!(
+            "  {:<12} {:>6.1}%  (stall {:>5.2}s, queue-blocked {:>5.2}s, {} writes)",
+            name,
+            (r.wall_secs - base) / base * 100.0,
+            r.stall_secs,
+            r.queue_blocked_secs,
+            r.writes
+        );
+    }
+    println!("\ncompare_strategies OK");
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: every L2 computation -> artifacts/<model>.<name>.hlo.txt.
+
+Interchange format is HLO *text*, never `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts` (build-time only; Python is never on the Rust
+request path). Emits per model:
+
+  <m>.init.hlo.txt      (seed i32[1])                  -> (params,)
+  <m>.grads.hlo.txt     (params, tokens i32[B,S])      -> (loss, grads)
+  <m>.eval.hlo.txt      (params, tokens)               -> (loss,)
+  <m>.adam.hlo.txt      (p, m, v, g, step f32[1])      -> (p', m', v')
+  <m>.compress.hlo.txt  (g, residual)                  -> (masked, res', t)
+  <m>.fused.hlo.txt     (p, m, v, res, tokens, step)   -> (loss, p', m', v',
+                                                           res', cgrad, t)
+  <m>.layout.txt        flat-vector layer map + config for the Rust side
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+RHO = 0.01  # paper's common compression ratio (SS VIII-A)
+LR = 1e-3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tuple_wrap(fn):
+    """Ensure the lowered entry returns a tuple (rust unwraps tupled root)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def lower_model(cfg: M.ModelConfig, outdir: str, verbose: bool = True):
+    F = M.num_params(cfg)
+    f32v = jax.ShapeDtypeStruct((F,), jnp.float32)
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    seed = jax.ShapeDtypeStruct((1,), jnp.int32)
+    step = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    artifacts = {
+        "init": (lambda s: (M.init_params(cfg, s),), (seed,)),
+        "grads": (_tuple_wrap(M.grad_fn(cfg)), (f32v, tok)),
+        "eval": (lambda p, t: (M.loss_fn(cfg, p, t),), (f32v, tok)),
+        "adam": (_tuple_wrap(M.adam_step(cfg, lr=LR)), (f32v,) * 4 + (step,)),
+        "compress": (_tuple_wrap(M.compress_step(cfg, rho=RHO)), (f32v, f32v)),
+        "fused": (
+            _tuple_wrap(M.fused_step(cfg, rho=RHO, lr=LR)),
+            (f32v, f32v, f32v, f32v, tok, step),
+        ),
+    }
+    for name, (fn, specs) in artifacts.items():
+        path = os.path.join(outdir, f"{cfg.name}.{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"  {path}: {len(text) / 1e6:.2f} MB", flush=True)
+
+    write_layout(cfg, outdir)
+
+
+def write_layout(cfg: M.ModelConfig, outdir: str):
+    """Plain-text layout + config consumed by rust/src/model/layout.rs."""
+    k = max(1, int(RHO * M.num_params(cfg)))
+    lines = [
+        "# lowdiff model layout v1",
+        f"model {cfg.name}",
+        f"n_params {M.num_params(cfg)}",
+        f"vocab {cfg.vocab}",
+        f"d_model {cfg.d_model}",
+        f"n_layers {cfg.n_layers}",
+        f"n_heads {cfg.n_heads}",
+        f"d_ff {cfg.d_ff}",
+        f"seq_len {cfg.seq_len}",
+        f"batch {cfg.batch}",
+        f"block {cfg.block}",
+        f"rho {RHO}",
+        f"k {k}",
+        f"lr {LR}",
+        "tensors",
+    ]
+    lines += [f"{name} {off} {n}" for name, off, n in M.layout(cfg)]
+    with open(os.path.join(outdir, f"{cfg.name}.layout.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="tiny,small,e2e",
+        help=f"comma-separated subset of {sorted(M.CONFIGS)}",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        print(f"lowering {cfg.name} ({M.num_params(cfg) / 1e6:.2f}M params)")
+        lower_model(cfg, args.out)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

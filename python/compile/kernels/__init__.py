@@ -1,0 +1,1 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""

@@ -1,0 +1,79 @@
+"""Fused Adam update as a Pallas kernel.
+
+One grid step streams four input tiles (p, m, v, g) and writes three output
+tiles (p', m', v') — 7 x 256 KiB = 1.75 MiB of VMEM per step, bandwidth
+bound on the VPU with no MXU involvement. Fusing the whole update into one
+pass is the TPU restatement of DeepSpeed's fused CUDA Adam: the win is one
+HBM round-trip for the entire state instead of ~10 for the unfused op graph.
+
+Bias correction factors bc1 = 1/(1-b1^t), bc2 = 1/(1-b2^t) depend on the
+step and are computed at L2 (two scalar pow ops) and passed as a (2,) hyper
+vector so the kernel itself stays step-agnostic and cacheable.
+
+This same kernel is the recovery-path "diff merge" (paper Eq.(7):
+C_t^D = Adam(G_t)): replaying a differential checkpoint IS an Adam
+application of the stored compressed gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import ADAM_MAX_BLOCK, BLOCK, INTERPRET, nblocks, pad1d
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+
+def _adam_kernel(lr: float):
+    def kernel(p_ref, m_ref, v_ref, g_ref, h_ref, po_ref, mo_ref, vo_ref):
+        g = g_ref[...]
+        m2 = B1 * m_ref[...] + (1.0 - B1) * g
+        v2 = B2 * v_ref[...] + (1.0 - B2) * g * g
+        bc1 = h_ref[0]
+        bc2 = h_ref[1]
+        update = lr * (m2 * bc1) / (jnp.sqrt(v2 * bc2) + EPS)
+        po_ref[...] = p_ref[...] - update
+        mo_ref[...] = m2
+        vo_ref[...] = v2
+
+    return kernel
+
+
+def bias_correction(step) -> jax.Array:
+    """hyper = [1/(1-b1^t), 1/(1-b2^t)] for a (possibly traced) step."""
+    t = jnp.asarray(step, jnp.float32)
+    return jnp.stack([1.0 / (1.0 - B1**t), 1.0 / (1.0 - B2**t)])
+
+
+def adam_update(p, m, v, g, step, lr: float = 1e-3, block: int = BLOCK):
+    """One fused Adam step over flat f32 vectors. Returns (p', m', v').
+
+    `step` is 1-based and may be a traced scalar.
+    """
+    block = min(block, ADAM_MAX_BLOCK)  # VMEM cap (common.py §Perf)
+    pp, n = pad1d(p, block)
+    mp, _ = pad1d(m, block)
+    vp, _ = pad1d(v, block)
+    gp, _ = pad1d(g, block)
+    nb = nblocks(pp.shape[0], block)
+    hyper = bias_correction(step)
+    shape = jax.ShapeDtypeStruct(pp.shape, jnp.float32)
+    po, mo, vo = pl.pallas_call(
+        _adam_kernel(lr),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[shape, shape, shape],
+        interpret=INTERPRET,
+    )(pp, mp, vp, gp, hyper)
+    return po[:n], mo[:n], vo[:n]

@@ -1,0 +1,48 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package operate on flat (1-D) f32 vectors, tiled into
+VMEM-sized blocks via BlockSpec. Callers pad to a block multiple with
+`pad1d` and slice the result back.
+
+TPU adaptation note (DESIGN.md §4): block sizes are chosen so every operand
+tile of the element-wise kernels fits VMEM comfortably. BLOCK=65536 f32 =
+256 KiB per operand; the fused Adam kernel streams 4 inputs + 3 outputs =
+1.75 MiB per grid step, far under the ~16 MiB VMEM budget, leaving room for
+double-buffering the HBM<->VMEM pipeline.
+"""
+
+import jax.numpy as jnp
+
+# Default 1-D block: 64Ki f32 elements = 256 KiB per operand tile.
+BLOCK = 65536
+
+# Per-kernel VMEM caps (§Perf iteration 1, see EXPERIMENTS.md):
+# the fused Adam kernel streams 7 tiles/step — at the coarse per-model
+# blocks used to bound interpret-mode HLO size, 1M-element blocks put it at
+# 175% of the 16 MiB VMEM budget. Cap so the hungriest kernels stay under
+# ~50% (leaving room for double-buffering); cheap kernels keep the coarse
+# block (fewer grid steps).
+ADAM_MAX_BLOCK = 262144      # 7 tiles -> 7.3 MB (44% VMEM)
+EF_MAX_BLOCK = 524288        # 4 tiles + threshold -> 8.4 MB (50% VMEM)
+
+# Pallas kernels MUST run interpret=True in this environment: the CPU PJRT
+# plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+INTERPRET = True
+
+
+def pad1d(x, block: int = BLOCK):
+    """Flatten and zero-pad x to a multiple of `block`.
+
+    Returns (padded, original_len).
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, n
+
+
+def nblocks(n_padded: int, block: int = BLOCK) -> int:
+    assert n_padded % block == 0
+    return n_padded // block

@@ -1,0 +1,73 @@
+"""Per-block symmetric int8 quantization as Pallas kernels.
+
+The paper's other compression family (§II-C Quantization, QSGD-style [5],
+8-bit [13]). Each quantization block (QBLOCK elements) gets one f32 scale =
+absmax/127. The Pallas grid tile (common.BLOCK) holds BLOCK/QBLOCK
+quantization blocks, so the scale reduction is a reshaped row-max inside a
+single VMEM pass — no cross-tile communication, the same structure as the
+per-warp absmax GPU quantizers use.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, INTERPRET, nblocks, pad1d
+
+QBLOCK = 256  # elements per quantization scale
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    rows = x_ref[...].reshape(-1, QBLOCK)
+    absmax = jnp.max(jnp.abs(rows), axis=1)
+    scale = absmax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(rows / safe[:, None]), -127, 127)
+    q_ref[...] = q.reshape(-1).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quant8(x: jax.Array, block: int = BLOCK):
+    """Quantize flat f32 x. Returns (q int8 [n_pad], scales f32 [n_pad/QBLOCK],
+    original length n)."""
+    padded, n = pad1d(x, block)
+    nb = nblocks(padded.shape[0], block)
+    spb = block // QBLOCK  # scales per grid tile
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((spb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(padded.shape, jnp.int8),
+            jax.ShapeDtypeStruct((padded.shape[0] // QBLOCK,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(padded)
+    return q, s, n
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    rows = q_ref[...].reshape(-1, QBLOCK).astype(jnp.float32)
+    o_ref[...] = (rows * s_ref[...][:, None]).reshape(-1)
+
+
+def dequant8(q: jax.Array, scales: jax.Array, n: int, block: int = BLOCK):
+    """Inverse of quant8; returns flat f32 of length n."""
+    nb = nblocks(q.shape[0], block)
+    spb = block // QBLOCK
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((spb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(q, scales)
+    return out[:n]

@@ -1,0 +1,69 @@
+"""Pallas partial-reduction kernels: per-block absmax and count(|x| >= t).
+
+These are the building blocks of the communication-avoiding top-k threshold
+search (DESIGN.md §4): each grid step reduces one VMEM-resident block to a
+scalar; the tiny per-block vectors are combined at L2. This mirrors the
+block-local-heap structure GPU top-k kernels use, restated for the TPU VPU
+(full-tile reductions instead of warp shuffles).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, INTERPRET, nblocks, pad1d
+
+
+def _absmax_kernel(x_ref, o_ref):
+    o_ref[0] = jnp.max(jnp.abs(x_ref[...]))
+
+
+def block_absmax(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Per-block max |x| of a flat padded vector. Returns (nblocks,) f32."""
+    nb = nblocks(x.shape[0], block)
+    return pl.pallas_call(
+        _absmax_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+
+
+def absmax(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Global max |x| (combines the per-block partials at L2)."""
+    padded, _ = pad1d(x, block)
+    return jnp.max(block_absmax(padded, block))
+
+
+def _count_ge_kernel(x_ref, t_ref, o_ref):
+    t = t_ref[0]
+    o_ref[0] = jnp.sum((jnp.abs(x_ref[...]) >= t).astype(jnp.int32))
+
+
+def block_count_ge(x: jax.Array, t: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Per-block count of |x| >= t. x must be padded; t is a (1,) f32.
+
+    Zero-padding is harmless as long as t > 0 (padding never counts); the
+    threshold search below keeps t strictly positive.
+    """
+    nb = nblocks(x.shape[0], block)
+    return pl.pallas_call(
+        _count_ge_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.int32),
+        interpret=INTERPRET,
+    )(x, t)
+
+
+def count_ge(x: jax.Array, t: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Global count of |x| >= t (scalar int32)."""
+    padded, _ = pad1d(x, block)
+    t = jnp.asarray(t, jnp.float32).reshape(1)
+    return jnp.sum(block_count_ge(padded, t, block))

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (python/tests/) asserts the
+Pallas kernels (interpret=True) match these within tolerance, and the Rust
+side's storage codecs are tested against dumps produced from these.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- top-k ----
+def topk_mask_ref(g: jax.Array, k: int) -> jax.Array:
+    """Dense top-k sparsification: keep the k largest-|.| entries of flat g.
+
+    Returns g * mask (same shape). Exact selection via jax.lax.top_k.
+    """
+    absg = jnp.abs(g.reshape(-1))
+    _, idx = jax.lax.top_k(absg, k)
+    mask = jnp.zeros_like(absg, dtype=bool).at[idx].set(True)
+    return (g.reshape(-1) * mask).reshape(g.shape)
+
+
+def threshold_mask_ref(g: jax.Array, t) -> jax.Array:
+    """Keep entries with |g| >= t (the kernel's sparsification primitive)."""
+    return jnp.where(jnp.abs(g) >= t, g, jnp.zeros_like(g))
+
+
+def count_ge_ref(x_abs: jax.Array, t) -> jax.Array:
+    """Number of entries with x_abs >= t."""
+    return jnp.sum(x_abs >= t).astype(jnp.int32)
+
+
+def kth_magnitude_ref(g: jax.Array, k: int) -> jax.Array:
+    """The k-th largest |g| — the exact top-k threshold."""
+    vals, _ = jax.lax.top_k(jnp.abs(g.reshape(-1)), k)
+    return vals[-1]
+
+
+def sparsify_ef_ref(g: jax.Array, residual: jax.Array, k: int):
+    """Top-k sparsification with error feedback.
+
+    corrected = g + residual; masked = topk(corrected);
+    new_residual = corrected - masked.
+    Invariant: masked + new_residual == g + residual (exactly).
+    """
+    corrected = g + residual
+    masked = topk_mask_ref(corrected, k)
+    return masked, corrected - masked
+
+
+# ----------------------------------------------------------------- adam ----
+def adam_ref(p, m, v, g, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step (Kingma & Ba). `step` is 1-based.
+
+    Returns (p', m', v'). Matches the paper's Eq.(4) M_{t+1} = M_t + Adam(G_t)
+    with M = (params, m, v) — a full model state is 3*Psi (Finding 2).
+    """
+    step = jnp.asarray(step, dtype=jnp.float32)
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    bc1 = 1.0 / (1.0 - b1**step)
+    bc2 = 1.0 / (1.0 - b2**step)
+    update = lr * (m2 * bc1) / (jnp.sqrt(v2 * bc2) + eps)
+    return p - update, m2, v2
+
+
+# ---------------------------------------------------------------- quant ----
+def quant8_ref(g: jax.Array, block: int = 256):
+    """Per-block symmetric int8 quantization of a flat vector.
+
+    Pads to a multiple of `block`. Returns (q int8 [n_pad], scales f32
+    [n_pad/block]). scale = absmax/127 per block (0 -> scale 0).
+    """
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = absmax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequant8_ref(q: jax.Array, scale: jax.Array, n: int, block: int = 256):
+    """Inverse of quant8_ref (up to rounding error <= scale/2 per element)."""
+    blocks = q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
+    return blocks.reshape(-1)[:n]

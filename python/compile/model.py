@@ -1,0 +1,228 @@
+"""Layer-2: JAX transformer LM (fwd/bwd) over a single flat parameter vector.
+
+The entire model state lives in ONE flat f32 vector so the Rust coordinator
+(L3) can treat parameters, Adam moments, gradients, and compressed
+differentials as opaque same-length buffers — exactly the view a
+checkpointing system needs. The (name, offset, len) layout is exported to
+`artifacts/<model>.layout.txt` and is what LowDiff+ uses for *layer-wise*
+gradient streaming (paper §VI-A): a "layer" is a contiguous flat slice.
+
+Architecture: pre-LN causal transformer decoder, learned positions, tied
+output head — a GPT-2-shaped model scaled by config (Table II analogues).
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int  # tokens per sample (targets are the 1-shifted sequence)
+    batch: int
+    # Pallas 1-D block for the element-wise kernels lowered into this
+    # model's artifacts. Coarser for big models to bound unrolled-grid HLO
+    # size under interpret=True (DESIGN.md §4).
+    block: int = 65536
+
+
+# The model zoo. `tiny` drives unit tests, `small` the quickstart,
+# `e2e` the end-to-end training example (EXPERIMENTS.md §E2E), `gpt2s`
+# is a ~GPT2-S-class config for scale checks (artifact built on demand).
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                        d_ff=256, seq_len=32, batch=4, block=16384),
+    "small": ModelConfig("small", vocab=1024, d_model=192, n_layers=4,
+                         n_heads=6, d_ff=768, seq_len=64, batch=8,
+                         block=262144),
+    "e2e": ModelConfig("e2e", vocab=8192, d_model=512, n_layers=8, n_heads=8,
+                       d_ff=2048, seq_len=128, batch=8, block=1048576),
+    "gpt2s": ModelConfig("gpt2s", vocab=16384, d_model=768, n_layers=12,
+                         n_heads=12, d_ff=3072, seq_len=256, batch=4,
+                         block=4194304),
+}
+
+
+# ------------------------------------------------------------- layout ------
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list; flat offsets follow this order."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes += [
+            (p + "ln1.scale", (cfg.d_model,)),
+            (p + "ln1.bias", (cfg.d_model,)),
+            (p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2.scale", (cfg.d_model,)),
+            (p + "ln2.bias", (cfg.d_model,)),
+            (p + "mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.b1", (cfg.d_ff,)),
+            (p + "mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.b2", (cfg.d_model,)),
+        ]
+    shapes += [
+        ("lnf.scale", (cfg.d_model,)),
+        ("lnf.bias", (cfg.d_model,)),
+    ]
+    return shapes
+
+
+def layout(cfg: ModelConfig) -> List[Tuple[str, int, int]]:
+    """(name, offset, len) per tensor in the flat vector."""
+    out, off = [], 0
+    for name, shape in param_shapes(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        out.append((name, off, n))
+        off += n
+    return out
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(n for _, _, n in layout(cfg))
+
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> Dict[str, jax.Array]:
+    params = {}
+    for (name, shape), (_, off, n) in zip(param_shapes(cfg), layout(cfg)):
+        params[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> jax.Array:
+    """Flat init vector from an int32[1] seed (lowered to HLO so Rust can
+    self-initialize without a Python runtime)."""
+    key = jax.random.PRNGKey(seed[0].astype(jnp.uint32))
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        n_in = shape[0] if len(shape) > 1 else shape[0]
+        if name.endswith(("scale",)):
+            chunk = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("bias", "b1", "b2")):
+            chunk = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 0.02 if name in ("embed", "pos") else (2.0 / (n_in + shape[-1])) ** 0.5
+            chunk = std * jax.random.normal(sub, shape, jnp.float32)
+        chunks.append(chunk.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+# ------------------------------------------------------------ forward ------
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: ModelConfig, x, wqkv, wo):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    qkv = x @ wqkv  # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    logits = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(causal, logits, jnp.float32(-1e9))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def forward_logits(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array):
+    """tokens int32 [batch, seq_len] -> logits [batch, seq_len, vocab]."""
+    p = unflatten(cfg, flat)
+    x = p["embed"][tokens] + p["pos"][None, : tokens.shape[1], :]
+    for i in range(cfg.n_layers):
+        q = f"layer{i}."
+        a = _attention(cfg, _layer_norm(x, p[q + "ln1.scale"], p[q + "ln1.bias"]),
+                       p[q + "attn.wqkv"], p[q + "attn.wo"])
+        x = x + a
+        hmid = jax.nn.gelu(_layer_norm(x, p[q + "ln2.scale"], p[q + "ln2.bias"])
+                           @ p[q + "mlp.w1"] + p[q + "mlp.b1"])
+        x = x + hmid @ p[q + "mlp.w2"] + p[q + "mlp.b2"]
+    x = _layer_norm(x, p["lnf.scale"], p["lnf.bias"])
+    return x @ p["embed"].T  # tied head
+
+
+def loss_fn(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array):
+    """Next-token cross-entropy; tokens [batch, seq_len], predicts t+1."""
+    logits = forward_logits(cfg, flat, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def grad_fn(cfg: ModelConfig):
+    """(flat, tokens) -> (loss, flat_grads). The paper's Backward (Eq.(2))."""
+    return jax.value_and_grad(lambda f, t: loss_fn(cfg, f, t))
+
+
+# ----------------------------------------------------- composed steps ------
+def fused_step(cfg: ModelConfig, rho: float = 0.01, lr: float = 1e-3):
+    """Full LowDiff training iteration as ONE lowered computation:
+
+      (p, m, v, residual, tokens, step) ->
+          (loss, p', m', v', residual', compressed_grad, threshold)
+
+    Backward (L2 autodiff) -> top-k compress with error feedback (L1 Pallas)
+    -> fused Adam (L1 Pallas). The compressed (dense-masked) gradient comes
+    out as a first-class output precisely so the Rust coordinator can reuse
+    it as the differential checkpoint (paper Eq.(7)) with zero extra
+    computation — the core LowDiff idea.
+    """
+    from .kernels import adam as adam_k
+    from .kernels import topk as topk_k
+
+    k = max(1, int(rho * num_params(cfg)))
+
+    def step_fn(p, m, v, residual, tokens, step):
+        loss, g = grad_fn(cfg)(p, tokens)
+        masked, new_res, t = topk_k.sparsify_ef(g, residual, k, block=cfg.block)
+        p2, m2, v2 = adam_k.adam_update(p, m, v, masked, step[0],
+                                        lr=lr, block=cfg.block)
+        return loss, p2, m2, v2, new_res, masked, t
+
+    return step_fn
+
+
+def adam_step(cfg: ModelConfig, lr: float = 1e-3):
+    """(p, m, v, g, step) -> (p', m', v') — update only (Pallas Adam).
+
+    Also the recovery-path diff-merge: applying a stored compressed gradient
+    to a full checkpoint is exactly this computation (Alg.1 line 18).
+    """
+    from .kernels import adam as adam_k
+
+    def fn(p, m, v, g, step):
+        return adam_k.adam_update(p, m, v, g, step[0], lr=lr, block=cfg.block)
+
+    return fn
+
+
+def compress_step(cfg: ModelConfig, rho: float = 0.01):
+    """(g, residual) -> (masked, residual', threshold) — Pallas top-k EF."""
+    from .kernels import topk as topk_k
+
+    k = max(1, int(rho * num_params(cfg)))
+
+    def fn(g, residual):
+        return topk_k.sparsify_ef(g, residual, k, block=cfg.block)
+
+    return fn

@@ -1,0 +1,90 @@
+"""L1/L2 performance analysis (EXPERIMENTS.md §Perf).
+
+Pallas interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so
+L1 is analyzed structurally: VMEM footprint per grid step and the
+bytes-moved roofline of each kernel, per model block size. L2 is profiled
+via HLO op counts of the lowered artifacts (fusion sanity: no exploded op
+counts, no duplicated backward subgraphs).
+
+Usage: cd python && python -m compile.perf_analysis
+"""
+
+import os
+import re
+
+from . import model as M
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM budget (v4-class)
+HBM_BW = 1.2e12  # ~1.2 TB/s HBM (A100-class translate: 2 TB/s; ratio holds)
+
+
+def kernel_vmem_report(cfg: M.ModelConfig):
+    """Fused Adam: 4 in + 3 out tiles; EF-sparsify: 2 in + 2 out + scalar;
+    count/absmax reductions: 1 in + tiny out."""
+    from .kernels.common import ADAM_MAX_BLOCK, EF_MAX_BLOCK
+
+    rows = []
+    for name, n_tiles, cap in [
+        ("adam (p,m,v,g -> p',m',v')", 7, ADAM_MAX_BLOCK),
+        ("sparsify_ef (g,r -> masked,r')", 4, EF_MAX_BLOCK),
+        ("count_ge / absmax (reduce)", 1, None),
+        ("quant8 (x -> q,scales)", 2, None),
+    ]:
+        b = min(cfg.block, cap) if cap else cfg.block
+        vmem = n_tiles * b * 4
+        rows.append((name, b, vmem, vmem / VMEM_BYTES))
+    return rows
+
+
+def kernel_roofline(cfg: M.ModelConfig):
+    """Bytes moved per full-vector invocation (HBM<->VMEM), and the
+    roofline time at HBM bandwidth. All kernels are element-wise/reduction
+    (VPU): bandwidth-bound, zero MXU use — the efficiency target is
+    bytes-moved/peak-BW, matching the paper's 'DC time << iteration'."""
+    n = M.num_params(cfg)
+    out = {}
+    out["adam"] = 7 * n * 4  # read p,m,v,g; write p,m,v
+    from .kernels.topk import BISECT_ITERS
+    out["sparsify_ef"] = (2 + 2) * n * 4 + BISECT_ITERS * n * 4  # + bisection passes
+    out["sparsify_ef_note"] = f"{BISECT_ITERS} bisection count passes re-read |g|"
+    out["quant8"] = n * 4 + n + n // 256 * 4
+    return n, out
+
+
+def hlo_op_counts(path: str):
+    ops = {}
+    with open(path) as f:
+        for line in f:
+            m = re.search(r"=\s+\w+\[?[^=]*\]?\s+(\w+)\(", line)
+            if m:
+                ops[m.group(1)] = ops.get(m.group(1), 0) + 1
+    return ops
+
+
+def main():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    for name in ["tiny", "small", "e2e"]:
+        cfg = M.CONFIGS[name]
+        n, roof = kernel_roofline(cfg)
+        print(f"\n=== {name} ({n/1e6:.2f}M params, block={cfg.block}) ===")
+        print("L1 VMEM per grid step (budget 16 MiB):")
+        for kname, b, vmem, frac in kernel_vmem_report(cfg):
+            print(f"  {kname:<34} block {b:>8} -> {vmem/1e6:7.2f} MB ({frac*100:5.1f}% VMEM)")
+        print("L1 HBM roofline per invocation (@1.2 TB/s):")
+        for k in ["adam", "sparsify_ef", "quant8"]:
+            by = roof[k]
+            print(f"  {k:<12} {by/1e6:9.1f} MB moved -> {by/HBM_BW*1e6:8.1f} µs")
+        print(f"  note: {roof['sparsify_ef_note']}")
+        print("L2 HLO op profile (lowered artifacts):")
+        for a in ["grads", "fused"]:
+            p = os.path.join(art, f"{name}.{a}.hlo.txt")
+            if not os.path.exists(p):
+                continue
+            ops = hlo_op_counts(p)
+            total = sum(ops.values())
+            top = sorted(ops.items(), key=lambda kv: -kv[1])[:6]
+            print(f"  {a:<6} {total:5d} ops; top: " + ", ".join(f"{k}={v}" for k, v in top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

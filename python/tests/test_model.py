@@ -1,0 +1,148 @@
+"""L2 model: layout, shapes, gradients, and the fused LowDiff step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jnp.array([7], jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(3)
+    return jnp.asarray(
+        rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32
+    )
+
+
+def test_layout_is_contiguous_and_complete():
+    lay = M.layout(CFG)
+    off = 0
+    for name, o, n in lay:
+        assert o == off, name
+        assert n > 0
+        off += n
+    assert off == M.num_params(CFG)
+
+
+def test_layout_matches_artifact_file():
+    with open("../artifacts/tiny.layout.txt") as f:
+        text = f.read()
+    assert f"n_params {M.num_params(CFG)}" in text
+    for name, off, n in M.layout(CFG):
+        assert f"{name} {off} {n}" in text
+
+
+def test_unflatten_shapes(params):
+    p = M.unflatten(CFG, params)
+    assert p["embed"].shape == (CFG.vocab, CFG.d_model)
+    assert p["layer0.attn.wqkv"].shape == (CFG.d_model, 3 * CFG.d_model)
+    assert p["lnf.scale"].shape == (CFG.d_model,)
+
+
+def test_init_deterministic():
+    a = M.init_params(CFG, jnp.array([7], jnp.int32))
+    b = M.init_params(CFG, jnp.array([7], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = M.init_params(CFG, jnp.array([8], jnp.int32))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    loss = M.loss_fn(CFG, params, tokens)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.3
+
+
+def test_grads_finite_and_full_coverage(params, tokens):
+    loss, g = M.grad_fn(CFG)(params, tokens)
+    g = np.asarray(g)
+    assert np.all(np.isfinite(g))
+    # "general DNN models are updated entirely": every tensor gets gradient
+    for name, off, n in M.layout(CFG):
+        if name == "pos":
+            # positions beyond seq_len-1 (inputs are [:, :-1]) get no grad
+            continue
+        assert np.any(g[off : off + n] != 0), f"no gradient for {name}"
+
+
+def test_loss_decreases_with_training(params, tokens):
+    p = params
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    loss0 = float(M.loss_fn(CFG, p, tokens))
+    step_fn = jax.jit(M.fused_step(CFG, rho=0.05, lr=1e-2))
+    for t in range(1, 16):
+        res = jnp.zeros_like(p) if t == 1 else res
+        loss, p, m, v, res, _, _ = step_fn(p, m, v, res, tokens, jnp.array([float(t)]))
+    assert float(loss) < loss0 - 0.5
+
+
+def test_fused_step_consistency(params, tokens):
+    """fused == grads -> compress_ef -> adam composed manually."""
+    p = params
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    res = jnp.zeros_like(p)
+    step = jnp.array([1.0])
+
+    loss_f, p_f, m_f, v_f, res_f, cg_f, t_f = M.fused_step(CFG)(p, m, v, res, tokens, step)
+
+    loss_g, g = M.grad_fn(CFG)(p, tokens)
+    cg, res2, t = M.compress_step(CFG)(g, res)
+    p2, m2, v2 = M.adam_step(CFG)(p, m, v, cg, step)
+
+    np.testing.assert_allclose(float(loss_f), float(loss_g), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(cg_f), np.asarray(cg))
+    np.testing.assert_array_equal(np.asarray(p_f), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(m_f), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v2))
+
+
+def test_compressed_grad_sparsity(params, tokens):
+    _, g = M.grad_fn(CFG)(params, tokens)
+    cg, _, _ = M.compress_step(CFG, rho=0.01)(g, jnp.zeros_like(g))
+    k = max(1, int(0.01 * M.num_params(CFG)))
+    assert int(jnp.sum(cg != 0)) == k
+
+
+def test_adam_step_matches_oracle(params, tokens):
+    _, g = M.grad_fn(CFG)(params, tokens)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    got = M.adam_step(CFG)(params, m, v, g, jnp.array([1.0]))
+    want = ref.adam_ref(params, m, v, g, 1)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7)
+
+
+def test_recovery_replay_equivalence(params, tokens):
+    """Paper Eq.(6)/(7): replaying stored compressed grads through Adam
+    reconstructs the exact post-training state (concat/replay mode)."""
+    p = params
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    res = jnp.zeros_like(p)
+    step_fn = jax.jit(M.fused_step(CFG))
+    diffs = []
+    for t in range(1, 5):
+        _, p, m, v, res, cg, _ = step_fn(p, m, v, res, tokens, jnp.array([float(t)]))
+        diffs.append(cg)
+
+    # recover from the initial full checkpoint + stored differentials
+    rp, rm, rv = params, jnp.zeros_like(p), jnp.zeros_like(p)
+    adam = M.adam_step(CFG)
+    for t, cg in enumerate(diffs, start=1):
+        rp, rm, rv = adam(rp, rm, rv, cg, jnp.array([float(t)]))
+
+    np.testing.assert_array_equal(np.asarray(rp), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(rm), np.asarray(m))
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(v))

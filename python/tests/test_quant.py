@@ -1,0 +1,72 @@
+"""Per-block int8 quantization kernels vs oracle and error bounds."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant import QBLOCK, dequant8, quant8
+
+BLK = 1024
+
+
+def _rand(rng, n, scale=1.0):
+    return jnp.asarray((rng.normal(size=n) * scale).astype("float32"))
+
+
+def test_quant_matches_ref(rng):
+    x = _rand(rng, 3000)
+    q, s, n = quant8(x, BLK)
+    qr, sr = ref.quant8_ref(x, QBLOCK)
+    np.testing.assert_array_equal(np.asarray(q)[: qr.shape[0]], np.asarray(qr))
+    np.testing.assert_allclose(
+        np.asarray(s)[: sr.shape[0]], np.asarray(sr), rtol=1e-7
+    )
+
+
+def test_roundtrip_error_bound(rng):
+    x = _rand(rng, 5000)
+    q, s, n = quant8(x, BLK)
+    d = dequant8(q, s, n, BLK)
+    err = np.abs(np.asarray(d) - np.asarray(x))
+    # each element's error <= its block's scale / 2 (+ float slack)
+    scales = np.repeat(np.asarray(s), QBLOCK)[:n]
+    assert np.all(err <= scales / 2 + 1e-7)
+
+
+def test_zero_block():
+    x = jnp.zeros(2 * QBLOCK, jnp.float32)
+    q, s, n = quant8(x, BLK)
+    assert int(jnp.sum(jnp.abs(q.astype(jnp.int32)))) == 0
+    d = dequant8(q, s, n, BLK)
+    np.testing.assert_array_equal(np.asarray(d), 0.0)
+
+
+def test_extreme_range(rng):
+    # one huge value per block shouldn't break the others catastrophically
+    x = _rand(rng, QBLOCK).at[0].set(1e6)
+    q, s, n = quant8(x, BLK)
+    d = dequant8(q, s, n, BLK)
+    assert abs(float(d[0]) - 1e6) / 1e6 < 1e-2
+
+
+def test_q_range(rng):
+    x = _rand(rng, 4000, scale=100.0)
+    q, _, _ = quant8(x, BLK)
+    qn = np.asarray(q).astype(np.int32)
+    assert qn.min() >= -127 and qn.max() <= 127
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    n=st.integers(min_value=1, max_value=4000),
+    scale=st.floats(min_value=1e-4, max_value=1e4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_roundtrip(n, scale, seed):
+    x = _rand(np.random.default_rng(seed), n, scale)
+    q, s, nn = quant8(x, BLK)
+    d = dequant8(q, s, nn, BLK)
+    scales = np.repeat(np.asarray(s), QBLOCK)[:n]
+    assert np.all(np.abs(np.asarray(d) - np.asarray(x)) <= scales / 2 + 1e-6 * scale)

@@ -1,0 +1,65 @@
+"""Pallas partial-reduction kernels vs jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.reduce import absmax, block_absmax, block_count_ge, count_ge
+from compile.kernels.common import pad1d
+
+BLK = 1024
+
+
+def _rand(rng, n):
+    return jnp.asarray(rng.normal(size=n).astype("float32"))
+
+
+def test_absmax_matches_ref(rng):
+    x = _rand(rng, 5000)
+    assert float(absmax(x, BLK)) == float(jnp.max(jnp.abs(x)))
+
+
+def test_block_absmax_per_block(rng):
+    x = _rand(rng, 4 * BLK)
+    per = block_absmax(x, BLK)
+    expect = jnp.max(jnp.abs(x.reshape(4, BLK)), axis=1)
+    np.testing.assert_allclose(np.asarray(per), np.asarray(expect))
+
+
+def test_count_ge_matches_ref(rng):
+    x = _rand(rng, 3000)
+    for t in [0.1, 0.5, 1.0, 2.5]:
+        assert int(count_ge(x, t, BLK)) == int(ref.count_ge_ref(jnp.abs(x), t))
+
+
+def test_count_ge_zero_padding_not_counted(rng):
+    # padding is zeros; any t > 0 must not count it
+    x = _rand(rng, BLK + 7)
+    c = count_ge(x, 1e-30, BLK)
+    assert int(c) == int(jnp.sum(jnp.abs(x) >= 1e-30))
+
+
+def test_block_count_ge_per_block(rng):
+    x, _ = pad1d(_rand(rng, 2 * BLK), BLK)
+    t = jnp.array([0.7], jnp.float32)
+    per = block_count_ge(x, t, BLK)
+    expect = jnp.sum(jnp.abs(x.reshape(2, BLK)) >= 0.7, axis=1)
+    np.testing.assert_array_equal(np.asarray(per), np.asarray(expect))
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(min_value=1, max_value=6000),
+    t=st.floats(min_value=1e-3, max_value=4.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_count_ge_property(n, t, seed):
+    x = _rand(np.random.default_rng(seed), n)
+    assert int(count_ge(x, t, BLK)) == int(np.sum(np.abs(np.asarray(x)) >= t))
+
+
+def test_absmax_empty_sign_invariance(rng):
+    x = _rand(rng, 100)
+    assert float(absmax(x, BLK)) == float(absmax(-x, BLK))

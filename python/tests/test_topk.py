@@ -1,0 +1,112 @@
+"""Top-k threshold sparsification kernels vs exact jax.lax.top_k oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.topk import find_threshold, sparsify, sparsify_ef, threshold_mask
+
+BLK = 1024
+
+
+def _rand(rng, n):
+    return jnp.asarray(rng.normal(size=n).astype("float32"))
+
+
+def test_threshold_mask_matches_ref(rng):
+    g = _rand(rng, 3000)
+    got = threshold_mask(g, 0.8, BLK)
+    want = ref.threshold_mask_ref(g, 0.8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_find_threshold_exact_on_continuous(rng):
+    g = _rand(rng, 5000)
+    k = 50
+    t = find_threshold(g, k, BLK)
+    t_ref = ref.kth_magnitude_ref(g, k)
+    # bisection lower bound: selects >= k, and t <= kth magnitude
+    assert float(t) <= float(t_ref) + 1e-6
+    count = int(jnp.sum(jnp.abs(g) >= t))
+    assert count == k  # continuous values: no ties, converges exactly
+
+
+def test_sparsify_selects_topk_set(rng):
+    g = _rand(rng, 4000)
+    k = 40
+    masked, _ = sparsify(g, k, BLK)
+    want = ref.topk_mask_ref(g, k)
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(want))
+
+
+def test_sparsify_with_ties():
+    # all-equal magnitudes: threshold selection keeps >= k (all of them)
+    g = jnp.ones(100, jnp.float32)
+    masked, t = sparsify(g, 10, BLK)
+    assert int(jnp.sum(masked != 0)) >= 10
+
+
+def test_sparsify_k_equals_n(rng):
+    g = _rand(rng, 500)
+    masked, _ = sparsify(g, 500, BLK)
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(g))
+
+
+def test_error_feedback_invariant(rng):
+    """masked + new_residual == g + residual exactly (fused kernel)."""
+    g = _rand(rng, 3000)
+    r = _rand(rng, 3000) * 0.1
+    masked, new_r, _ = sparsify_ef(g, r, 30, BLK)
+    np.testing.assert_array_equal(
+        np.asarray(masked + new_r), np.asarray(g + r)
+    )
+
+
+def test_error_feedback_matches_ref(rng):
+    g = _rand(rng, 2000)
+    r = _rand(rng, 2000) * 0.05
+    masked, new_r, _ = sparsify_ef(g, r, 25, BLK)
+    want_m, want_r = ref.sparsify_ef_ref(g, r, 25)
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(want_m))
+    np.testing.assert_array_equal(np.asarray(new_r), np.asarray(want_r))
+
+
+def test_residual_accumulates_dropped_mass(rng):
+    g = _rand(rng, 1000)
+    masked, new_r, _ = sparsify_ef(g, jnp.zeros(1000), 10, BLK)
+    # dropped mass ends up in the residual, nothing vanishes
+    np.testing.assert_allclose(
+        float(jnp.sum(jnp.abs(masked)) + jnp.sum(jnp.abs(new_r))),
+        float(jnp.sum(jnp.abs(g))),
+        rtol=1e-6,
+    )
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    n=st.integers(min_value=10, max_value=5000),
+    frac=st.floats(min_value=0.001, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sparsify_property_count_and_dominance(n, frac, seed):
+    """Selected count == k and selected set magnitude-dominates dropped."""
+    g = _rand(np.random.default_rng(seed), n)
+    k = max(1, min(n, int(frac * n)))
+    masked, t = sparsify(g, k, BLK)
+    m = np.asarray(masked)
+    gnp = np.asarray(g)
+    nnz = int(np.sum(m != 0))
+    assert nnz == k
+    kept_min = np.min(np.abs(m[m != 0])) if nnz else np.inf
+    dropped = gnp[m == 0]
+    if dropped.size:
+        assert kept_min >= np.max(np.abs(dropped))
+
+
+def test_threshold_positive(rng):
+    # threshold is strictly positive so zero padding never selects
+    g = _rand(rng, 100)
+    _, t = sparsify(g, 5, BLK)
+    assert float(t) > 0

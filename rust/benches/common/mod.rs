@@ -1,0 +1,57 @@
+//! Minimal bench harness (criterion is unavailable offline): warmup +
+//! timed runs, median-of-N reporting, ns/op and throughput.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    samples: Vec<f64>,
+}
+
+/// Run `f` repeatedly for ~`budget_ms`, collecting per-call seconds.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Bench {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_millis() < budget_ms as u128 || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    Bench { name: name.to_string(), samples }
+}
+
+impl Bench {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12}/op   ({} samples)",
+            self.name,
+            lowdiff::util::human_duration(self.median()),
+            self.samples.len()
+        );
+    }
+
+    /// Report with bytes-throughput (for codec / IO benches).
+    pub fn report_bytes(&self, bytes_per_op: usize) {
+        let gbps = bytes_per_op as f64 / self.median() / 1e9;
+        println!(
+            "{:<44} {:>12}/op   {:>8.2} GB/s   ({} samples)",
+            self.name,
+            lowdiff::util::human_duration(self.median()),
+            gbps,
+            self.samples.len()
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Hot-path microbenchmarks (the §Perf L3 targets in EXPERIMENTS.md):
+//! reusing-queue throughput, compression codecs, checkpoint container
+//! encode, ring allreduce, Adam, sparse merge / recovery combine.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use std::sync::Arc;
+
+use common::bench;
+use lowdiff::checkpoint::format::{CkptKind, Container, PayloadCodec};
+use lowdiff::collective::ring_allreduce_sum;
+use lowdiff::compress::{encode, quant8, sparsify_ef, topk_mask, Codec};
+use lowdiff::coordinator::recovery::pairwise_merge;
+use lowdiff::coordinator::reusing_queue::ReusingQueue;
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::sparse::SparseGrad;
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+const N: usize = 1 << 20; // 1M elements = one GPT2-S-scale layer
+
+fn randn(n: usize, seed: u64) -> Flat {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0f32; n];
+    rng.fill_normal_f32(&mut v);
+    Flat(v)
+}
+
+fn main() {
+    println!("== hotpath microbenchmarks (N = {N} f32) ==\n");
+    let g = randn(N, 1);
+    let bytes = N * 4;
+
+    // --- compression --------------------------------------------------
+    let k = N / 100; // rho = 0.01
+    bench("topk_mask (rho=0.01)", 300, || {
+        std::hint::black_box(topk_mask(&g, k));
+    })
+    .report_bytes(bytes);
+
+    let mut residual = Flat::zeros(N);
+    bench("sparsify_ef (rho=0.01)", 300, || {
+        std::hint::black_box(sparsify_ef(&g, &mut residual, k));
+    })
+    .report_bytes(bytes);
+
+    bench("quant8", 300, || {
+        std::hint::black_box(quant8(&g));
+    })
+    .report_bytes(bytes);
+
+    // --- sparse codec ---------------------------------------------------
+    let masked = topk_mask(&g, k);
+    bench("SparseGrad::from_dense (compaction)", 300, || {
+        std::hint::black_box(SparseGrad::from_dense(&masked));
+    })
+    .report_bytes(bytes);
+
+    let sparse = SparseGrad::from_dense(&masked);
+    bench("sparse encode (TopK codec)", 300, || {
+        std::hint::black_box(encode(Codec::TopK, &masked));
+    })
+    .report_bytes(sparse.encoded_size());
+
+    let sparse2 = {
+        let m2 = topk_mask(&randn(N, 2), k);
+        SparseGrad::from_dense(&m2)
+    };
+    bench("sparse merge_sum (batching combine)", 300, || {
+        std::hint::black_box(sparse.merge_sum(&sparse2));
+    })
+    .report();
+
+    let grads: Vec<SparseGrad> = (0..16)
+        .map(|i| SparseGrad::from_dense(&topk_mask(&randn(N, 10 + i), k)))
+        .collect();
+    bench("pairwise_merge x16 (parallel recovery)", 400, || {
+        std::hint::black_box(pairwise_merge(grads.clone()));
+    })
+    .report();
+
+    // --- container ------------------------------------------------------
+    let payload = masked.to_le_bytes();
+    bench("container encode (raw)", 300, || {
+        let mut c = Container::new(CkptKind::Diff, 1, 1, 1);
+        c.push("grad", payload.clone());
+        std::hint::black_box(c.to_bytes().unwrap());
+    })
+    .report_bytes(payload.len());
+
+    bench("container encode (zstd)", 500, || {
+        let mut c = Container::new(CkptKind::Diff, 1, 1, 1).with_codec(PayloadCodec::Zstd);
+        c.push("grad", payload.clone());
+        std::hint::black_box(c.to_bytes().unwrap());
+    })
+    .report_bytes(payload.len());
+
+    // --- optimizer -------------------------------------------------------
+    let mut state = ModelState::new(randn(N, 3));
+    let adam = Adam::default();
+    bench("rust Adam apply (dense)", 300, || {
+        adam.apply(&mut state, &g);
+    })
+    .report_bytes(bytes * 4); // p, m, v, g streams
+
+    bench("rust Adam apply_sparse (rho=0.01)", 300, || {
+        adam.apply_sparse(&mut state, &sparse);
+    })
+    .report_bytes(bytes * 3);
+
+    // --- collective -------------------------------------------------------
+    let workers: Vec<Flat> = (0..4).map(|i| randn(N / 4, 20 + i)).collect();
+    bench("ring_allreduce_sum (4 workers, 256K each)", 300, || {
+        let mut w = workers.clone();
+        ring_allreduce_sum(&mut w);
+        std::hint::black_box(w);
+    })
+    .report_bytes(bytes);
+
+    // --- reusing queue ----------------------------------------------------
+    let q: Arc<ReusingQueue<Flat>> = ReusingQueue::new(64);
+    let payload = Arc::new(randn(N, 5));
+    let mut step = 0u64;
+    bench("reusing queue put+get (zero-copy handle)", 200, || {
+        step += 1;
+        q.put(step, Arc::clone(&payload));
+        std::hint::black_box(q.get().unwrap());
+    })
+    .report();
+
+    println!("\nhotpath bench done");
+}

@@ -1,0 +1,155 @@
+//! Regenerates every table and figure of the paper's evaluation (§VIII).
+//!
+//! - Simulated experiments (Fig. 1/4, Table I, Exp. 1-4, 7-10) replay the
+//!   strategy logic on the calibrated A100/V100 cluster model (sim/).
+//! - Real-path experiments (Exp. 5 recovery scaling, Exp. 6 batched-write
+//!   timing + buffer accounting) run the actual checkpoint/recovery code
+//!   on this machine.
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lowdiff::checkpoint::batched::{finalize, BatchBuffer, BatchMode};
+use lowdiff::checkpoint::diff::{write_diff, DiffPayload};
+use lowdiff::checkpoint::format::{model_signature, PayloadCodec};
+use lowdiff::checkpoint::full::write_full;
+use lowdiff::checkpoint::manifest::Manifest;
+use lowdiff::compress::topk_mask;
+use lowdiff::coordinator::recovery::{recover, RecoveryMode};
+use lowdiff::exp::{self, Table};
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{MemStore, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+fn main() {
+    println!("################ simulated experiments (paper-scale testbed) ################\n");
+    for t in exp::all_simulated() {
+        println!("{}", t.render());
+    }
+    println!("################ real-path experiments (this machine) ################\n");
+    println!("{}", exp5_real().render());
+    println!("{}", exp6_real().render());
+}
+
+/// Exp. 5 (Fig. 15), real path: recovery time vs full-checkpoint interval
+/// using the actual container decode + Adam replay / parallel merge.
+fn exp5_real() -> Table {
+    let n = 1_000_000usize; // 1M-param synthetic state
+    let sig = model_signature("bench", n);
+    let adam = Adam::default();
+    let mut rng = Rng::new(42);
+    let k = n / 100;
+
+    let mut t = Table::new(
+        "Exp. 5 (Fig. 15, real path) — recovery time vs #diffs (1M params)",
+        &["diffs since full", "serial replay (ms)", "parallel merge (ms)", "rounds"],
+    );
+    for n_diffs in [5usize, 10, 20, 50] {
+        // build a chain: full at 0 + n_diffs gradient diffs
+        let store = MemStore::new();
+        let mut p = vec![0f32; n];
+        rng.fill_normal_f32(&mut p);
+        let state = ModelState::new(Flat(p));
+        store
+            .put(&Manifest::full_name(0), &write_full(&state, sig, PayloadCodec::Raw).unwrap())
+            .unwrap();
+        for step in 1..=n_diffs as u64 {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            let sparse = SparseGrad::from_dense(&topk_mask(&Flat(g), k));
+            store
+                .put(
+                    &Manifest::diff_name(step),
+                    &write_diff(&DiffPayload::Gradient(sparse), sig, step, PayloadCodec::Raw)
+                        .unwrap(),
+                )
+                .unwrap();
+        }
+        let t0 = Instant::now();
+        let (_, s_stats) = recover(&store, sig, &adam, RecoveryMode::SerialReplay).unwrap();
+        let serial = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let (_, p_stats) = recover(&store, sig, &adam, RecoveryMode::ParallelMerge).unwrap();
+        let parallel = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(s_stats.n_diff_steps, n_diffs);
+        t.row(vec![
+            n_diffs.to_string(),
+            format!("{serial:.1}"),
+            format!("{parallel:.1}"),
+            p_stats.full_merge_rounds.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Exp. 6 (Fig. 16a), real path: average per-diff checkpoint write time vs
+/// batching size through the real BatchBuffer + storage, plus the CPU
+/// buffer bytes the offloaded batching holds (Fig. 16b's GPU-side saving).
+fn exp6_real() -> Table {
+    let n = 2_000_000usize;
+    let k = n / 100;
+    let sig = model_signature("bench6", n);
+    let mut rng = Rng::new(7);
+    let n_diffs = 40u64;
+
+    // pre-generate sparse gradients
+    let grads: Vec<SparseGrad> = (0..n_diffs)
+        .map(|_| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            SparseGrad::from_dense(&topk_mask(&Flat(g), k))
+        })
+        .collect();
+
+    let mut t = Table::new(
+        "Exp. 6 (Fig. 16, real path) — batched writes: time/diff + buffer bytes",
+        &["batch size", "writes", "avg ms/diff", "peak CPU buffer", "reduction %"],
+    );
+    // throttled store models a slow disk so the per-write cost is visible
+    let mut base_ms = 0.0f64;
+    for bs in [1usize, 2, 5, 10, 20] {
+        let store: Arc<dyn StorageBackend> = Arc::new(lowdiff::storage::Throttled::new(
+            MemStore::new(),
+            2.0e9,
+            std::time::Duration::from_millis(3),
+        ));
+        let mut buf = BatchBuffer::new(BatchMode::Concat, bs);
+        let mut peak = 0usize;
+        let mut writes = 0u64;
+        let t0 = Instant::now();
+        for (i, g) in grads.iter().enumerate() {
+            let maybe = buf.push(i as u64 + 1, g.clone());
+            peak = peak.max(buf.buffered_bytes());
+            if let Some(c) = maybe {
+                let (lo, hi) = (c.step_lo, c.step_hi);
+                let bytes = finalize(c, sig, PayloadCodec::Raw).unwrap();
+                store.put(&Manifest::batch_name(lo, hi), &bytes).unwrap();
+                writes += 1;
+            }
+        }
+        if let Some(c) = buf.flush() {
+            let (lo, hi) = (c.step_lo, c.step_hi);
+            let bytes = finalize(c, sig, PayloadCodec::Raw).unwrap();
+            store.put(&Manifest::batch_name(lo, hi), &bytes).unwrap();
+            writes += 1;
+        }
+        let avg_ms = t0.elapsed().as_secs_f64() * 1e3 / n_diffs as f64;
+        if bs == 1 {
+            base_ms = avg_ms;
+        }
+        t.row(vec![
+            bs.to_string(),
+            writes.to_string(),
+            format!("{avg_ms:.2}"),
+            lowdiff::util::human_bytes(peak as u64),
+            format!("{:.1}", (base_ms - avg_ms) / base_ms * 100.0),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,223 @@
+//! Batched gradient writing (paper §V-B, Fig. 6).
+//!
+//! The checkpointing process offloads compressed gradients to a CPU-memory
+//! buffer (step ①), groups `batch_size` of them (step ②), and persists the
+//! batch in ONE I/O (step ③) — amortizing the per-write cost that dominates
+//! at per-iteration frequency (Exp. 6 shows up to 30.9% ckpt-time savings).
+//!
+//! Two accumulation modes (DESIGN.md §8):
+//! - [`BatchMode::Sum`]: merge by index-union summation — the paper's
+//!   "gradient accumulation" scheme. Smallest writes; recovery applies the
+//!   summed gradient in one Adam step (approximate for non-linear Adam,
+//!   exactly as in the paper; drift is quantified in rust/tests/).
+//! - [`BatchMode::Concat`]: store each step's gradient as its own section.
+//!   Slightly larger, but recovery replays steps exactly (bit-faithful).
+
+use anyhow::{ensure, Result};
+
+use crate::checkpoint::format::{CkptKind, Container, PayloadCodec};
+use crate::sparse::SparseGrad;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchMode {
+    Sum,
+    Concat,
+}
+
+/// CPU-side batch buffer for differential checkpoints.
+#[derive(Debug)]
+pub struct BatchBuffer {
+    mode: BatchMode,
+    batch_size: usize,
+    pending: Vec<(u64, SparseGrad)>,
+}
+
+impl BatchBuffer {
+    pub fn new(mode: BatchMode, batch_size: usize) -> BatchBuffer {
+        assert!(batch_size >= 1);
+        BatchBuffer { mode, batch_size, pending: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Buffered payload bytes awaiting the batch write (the CPU-memory
+    /// cost that offloading moves off the GPU — Fig. 16b).
+    pub fn buffered_bytes(&self) -> usize {
+        self.pending.iter().map(|(_, g)| g.encoded_size()).sum()
+    }
+
+    /// Offer one step's compressed gradient; returns `Some(container)` when
+    /// the batch is full and must be written.
+    pub fn push(&mut self, step: u64, grad: SparseGrad) -> Option<Container> {
+        if let Some((last, _)) = self.pending.last() {
+            assert!(step > *last, "steps must arrive in order: {step} after {last}");
+        }
+        self.pending.push((step, grad));
+        if self.pending.len() >= self.batch_size {
+            Some(self.flush().expect("non-empty"))
+        } else {
+            None
+        }
+    }
+
+    /// Drain whatever is pending into a batch container (e.g. right before
+    /// a full checkpoint resets the chain). None if empty.
+    pub fn flush(&mut self) -> Option<Container> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let step_lo = self.pending.first().unwrap().0;
+        let step_hi = self.pending.last().unwrap().0;
+        let mut c = Container::new(CkptKind::BatchedDiff, 0, step_lo, step_hi);
+        match self.mode {
+            BatchMode::Sum => {
+                let mut it = self.pending.drain(..);
+                let (_, mut acc) = it.next().unwrap();
+                for (_, g) in it {
+                    acc = acc.merge_sum(&g);
+                }
+                c.push("sum", acc.to_bytes());
+            }
+            BatchMode::Concat => {
+                for (step, g) in self.pending.drain(..) {
+                    c.push(format!("step-{step}"), g.to_bytes());
+                }
+            }
+        }
+        Some(c)
+    }
+}
+
+/// Decode a batched container back to (step, gradient) pairs.
+/// `Sum` batches decode to a single pair at `step_hi` carrying the sum.
+pub fn read_batched(bytes: &[u8], model_sig: u64) -> Result<Vec<(u64, SparseGrad)>> {
+    let c = Container::from_bytes(bytes)?;
+    ensure!(c.kind == CkptKind::BatchedDiff, "not a batched diff: {:?}", c.kind);
+    // model_sig 0 containers come from pre-finalize buffers in tests
+    ensure!(
+        c.model_sig == model_sig || c.model_sig == 0,
+        "batch from a different model"
+    );
+    let mut out = Vec::new();
+    for s in &c.sections {
+        if s.name == "sum" {
+            out.push((c.step_hi, SparseGrad::from_bytes(&s.bytes)?));
+        } else if let Some(step) = s.name.strip_prefix("step-") {
+            out.push((step.parse()?, SparseGrad::from_bytes(&s.bytes)?));
+        }
+    }
+    ensure!(!out.is_empty(), "empty batch container");
+    Ok(out)
+}
+
+/// Attach the model signature and encode (the writer path helper).
+pub fn finalize(mut c: Container, model_sig: u64, codec: PayloadCodec) -> Result<Vec<u8>> {
+    c.model_sig = model_sig;
+    c = c.with_codec(codec);
+    c.to_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::tensor::Flat;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn grad(rng: &mut Rng, n: usize) -> SparseGrad {
+        let mut d = Flat::zeros(n);
+        for i in 0..n {
+            if rng.next_f64() < 0.2 {
+                d.0[i] = rng.normal() as f32;
+            }
+        }
+        SparseGrad::from_dense(&d)
+    }
+
+    #[test]
+    fn emits_exactly_at_batch_size() {
+        let mut rng = Rng::new(1);
+        let mut buf = BatchBuffer::new(BatchMode::Concat, 3);
+        assert!(buf.push(1, grad(&mut rng, 50)).is_none());
+        assert!(buf.push(2, grad(&mut rng, 50)).is_none());
+        let c = buf.push(3, grad(&mut rng, 50)).unwrap();
+        assert_eq!((c.step_lo, c.step_hi), (1, 3));
+        assert_eq!(c.sections.len(), 3);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn concat_roundtrip_preserves_steps() {
+        let mut rng = Rng::new(2);
+        let mut buf = BatchBuffer::new(BatchMode::Concat, 4);
+        let grads: Vec<_> = (1..=4).map(|s| (s, grad(&mut rng, 80))).collect();
+        let mut out = None;
+        for (s, g) in &grads {
+            out = buf.push(*s, g.clone());
+        }
+        let bytes = finalize(out.unwrap(), 7, PayloadCodec::Raw).unwrap();
+        let back = read_batched(&bytes, 7).unwrap();
+        assert_eq!(back, grads);
+    }
+
+    #[test]
+    fn sum_mode_conserves_dense_sum_property() {
+        prop_check("batch_sum_conservation", 32, |rng| {
+            let n = rng.range(1, 150);
+            let b = rng.range(1, 7);
+            let mut buf = BatchBuffer::new(BatchMode::Sum, b);
+            let mut want = Flat::zeros(n);
+            let mut out = None;
+            for s in 1..=b as u64 {
+                let g = grad(rng, n);
+                want.add_assign(&g.to_dense());
+                out = buf.push(s, g);
+            }
+            let c = out.expect("batch full");
+            let bytes = finalize(c, 1, PayloadCodec::Raw).unwrap();
+            let got = read_batched(&bytes, 1).unwrap();
+            prop_assert!(got.len() == 1);
+            prop_assert!(got[0].0 == b as u64);
+            prop_assert!(got[0].1.to_dense().max_abs_diff(&want) < 1e-5);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flush_drains_partial_batch() {
+        let mut rng = Rng::new(3);
+        let mut buf = BatchBuffer::new(BatchMode::Concat, 10);
+        buf.push(1, grad(&mut rng, 20));
+        buf.push(2, grad(&mut rng, 20));
+        let c = buf.flush().unwrap();
+        assert_eq!((c.step_lo, c.step_hi), (1, 2));
+        assert!(buf.flush().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "steps must arrive in order")]
+    fn out_of_order_rejected() {
+        let mut rng = Rng::new(4);
+        let mut buf = BatchBuffer::new(BatchMode::Sum, 10);
+        buf.push(5, grad(&mut rng, 10));
+        buf.push(4, grad(&mut rng, 10));
+    }
+
+    #[test]
+    fn buffered_bytes_tracks_pending() {
+        let mut rng = Rng::new(5);
+        let mut buf = BatchBuffer::new(BatchMode::Concat, 10);
+        assert_eq!(buf.buffered_bytes(), 0);
+        let g = grad(&mut rng, 100);
+        let sz = g.encoded_size();
+        buf.push(1, g);
+        assert_eq!(buf.buffered_bytes(), sz);
+    }
+}

@@ -1,0 +1,106 @@
+//! Differential checkpoints C^D.
+//!
+//! Two payload flavors, matching the two systems under comparison:
+//! - [`DiffPayload::Gradient`]: a **reused compressed gradient** — LowDiff's
+//!   differential (Eq. (7): C^D_t = Adam(G̃_t) semantically; the container
+//!   stores G̃_t itself and recovery replays it through the optimizer).
+//! - [`DiffPayload::StateDelta`]: a compressed **state delta**
+//!   M_{t+1} − M_t over the full 3Ψ state — the Naive DC / Check-N-Run
+//!   baseline (Eq. (5)); recovery adds deltas (linear, Eq. (6)).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::checkpoint::format::{CkptKind, Container, PayloadCodec};
+use crate::sparse::SparseGrad;
+
+/// What a differential carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DiffPayload {
+    /// k-sparse compressed gradient over Ψ params (LowDiff).
+    Gradient(SparseGrad),
+    /// k-sparse compressed delta over the 3Ψ state (Naive DC).
+    StateDelta(SparseGrad),
+}
+
+impl DiffPayload {
+    fn tag(&self) -> &'static str {
+        match self {
+            DiffPayload::Gradient(_) => "grad",
+            DiffPayload::StateDelta(_) => "delta",
+        }
+    }
+
+    pub fn sparse(&self) -> &SparseGrad {
+        match self {
+            DiffPayload::Gradient(s) | DiffPayload::StateDelta(s) => s,
+        }
+    }
+}
+
+/// Encode one differential checkpoint for step `step`.
+pub fn write_diff(
+    payload: &DiffPayload,
+    model_sig: u64,
+    step: u64,
+    codec: PayloadCodec,
+) -> Result<Vec<u8>> {
+    let mut c = Container::new(CkptKind::Diff, model_sig, step, step).with_codec(codec);
+    c.push(payload.tag(), payload.sparse().to_bytes());
+    c.to_bytes()
+}
+
+/// Decode a differential checkpoint.
+pub fn read_diff(bytes: &[u8], model_sig: u64) -> Result<(u64, DiffPayload)> {
+    let c = Container::from_bytes(bytes)?;
+    ensure!(c.kind == CkptKind::Diff, "not a diff checkpoint: {:?}", c.kind);
+    ensure!(c.model_sig == model_sig, "diff from a different model");
+    let payload = if let Ok(b) = c.section("grad") {
+        DiffPayload::Gradient(SparseGrad::from_bytes(b)?)
+    } else if let Ok(b) = c.section("delta") {
+        DiffPayload::StateDelta(SparseGrad::from_bytes(b)?)
+    } else {
+        bail!("diff container has neither `grad` nor `delta` section");
+    };
+    Ok((c.step_lo, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Flat;
+
+    fn sparse() -> SparseGrad {
+        SparseGrad::from_dense(&Flat(vec![0.0, 1.0, 0.0, -2.0]))
+    }
+
+    #[test]
+    fn gradient_roundtrip() {
+        let p = DiffPayload::Gradient(sparse());
+        let b = write_diff(&p, 9, 5, PayloadCodec::Raw).unwrap();
+        let (step, back) = read_diff(&b, 9).unwrap();
+        assert_eq!(step, 5);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn state_delta_roundtrip() {
+        let p = DiffPayload::StateDelta(sparse());
+        let b = write_diff(&p, 9, 6, PayloadCodec::Zstd).unwrap();
+        let (step, back) = read_diff(&b, 9).unwrap();
+        assert_eq!(step, 6);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn payload_kind_preserved() {
+        let g = write_diff(&DiffPayload::Gradient(sparse()), 1, 1, PayloadCodec::Raw).unwrap();
+        let (_, p) = read_diff(&g, 1).unwrap();
+        assert!(matches!(p, DiffPayload::Gradient(_)));
+    }
+
+    #[test]
+    fn wrong_sig_rejected() {
+        let b = write_diff(&DiffPayload::Gradient(sparse()), 1, 1, PayloadCodec::Raw).unwrap();
+        assert!(read_diff(&b, 2).is_err());
+    }
+}

@@ -1,0 +1,297 @@
+//! On-disk checkpoint container.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic "LDCK" | version u32 | kind u8 | payload_codec u8 | reserved u16
+//! model_sig u64 | step_lo u64 | step_hi u64 | n_sections u32
+//! per section: name_len u16 | name bytes | byte_len u64
+//! payload (all section bytes concatenated, optionally zstd-compressed)
+//! crc32 u32 (of the *encoded* payload) | magic "KCDL"
+//! ```
+//! CRC covers the payload; header corruption is caught by magic/version and
+//! bounds checks. `model_sig` ties a checkpoint to the model layout that
+//! produced it (mixing checkpoints across models is a recovery-time error,
+//! not a silent state corruption).
+
+use anyhow::{bail, ensure, Context, Result};
+use byteorder::{ByteOrder, LittleEndian as LE};
+
+pub const MAGIC: &[u8; 4] = b"LDCK";
+pub const MAGIC_END: &[u8; 4] = b"KCDL";
+pub const VERSION: u32 = 1;
+
+/// What the container holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptKind {
+    /// Full model state (params + Adam moments), 3Ψ.
+    Full = 0,
+    /// One differential checkpoint.
+    Diff = 1,
+    /// Batched differential checkpoint (C^B, §V-B).
+    BatchedDiff = 2,
+}
+
+impl CkptKind {
+    fn from_u8(v: u8) -> Result<CkptKind> {
+        Ok(match v {
+            0 => CkptKind::Full,
+            1 => CkptKind::Diff,
+            2 => CkptKind::BatchedDiff,
+            _ => bail!("unknown checkpoint kind {v}"),
+        })
+    }
+}
+
+/// Payload-level compression of the container bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadCodec {
+    Raw = 0,
+    Zstd = 1,
+}
+
+impl PayloadCodec {
+    fn from_u8(v: u8) -> Result<PayloadCodec> {
+        Ok(match v {
+            0 => PayloadCodec::Raw,
+            1 => PayloadCodec::Zstd,
+            _ => bail!("unknown payload codec {v}"),
+        })
+    }
+}
+
+/// Named byte blob inside a container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub bytes: Vec<u8>,
+}
+
+/// A decoded checkpoint container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Container {
+    pub kind: CkptKind,
+    pub codec: PayloadCodec,
+    /// layout signature (FNV-1a of model name + n_params)
+    pub model_sig: u64,
+    /// first training step covered (inclusive, 1-based Adam step)
+    pub step_lo: u64,
+    /// last training step covered (== step_lo except for batches)
+    pub step_hi: u64,
+    pub sections: Vec<Section>,
+}
+
+/// FNV-1a signature binding checkpoints to a model layout.
+pub fn model_signature(model: &str, n_params: usize) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in model.bytes().chain(n_params.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Container {
+    pub fn new(kind: CkptKind, model_sig: u64, step_lo: u64, step_hi: u64) -> Container {
+        Container { kind, codec: PayloadCodec::Raw, model_sig, step_lo, step_hi, sections: Vec::new() }
+    }
+
+    pub fn with_codec(mut self, codec: PayloadCodec) -> Container {
+        self.codec = codec;
+        self
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, bytes: Vec<u8>) {
+        self.sections.push(Section { name: name.into(), bytes });
+    }
+
+    pub fn section(&self, name: &str) -> Result<&[u8]> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.bytes.as_slice())
+            .with_context(|| format!("container missing section `{name}`"))
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.sections.iter().map(|s| s.bytes.len()).sum()
+    }
+
+    /// Serialize to the container wire format.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let raw_payload: Vec<u8> = {
+            let mut p = Vec::with_capacity(self.payload_bytes());
+            for s in &self.sections {
+                p.extend_from_slice(&s.bytes);
+            }
+            p
+        };
+        let payload = match self.codec {
+            PayloadCodec::Raw => raw_payload,
+            PayloadCodec::Zstd => zstd::encode_all(raw_payload.as_slice(), 1)?,
+        };
+        let crc = crc32fast::hash(&payload);
+
+        let mut out = Vec::with_capacity(payload.len() + 64);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind as u8);
+        out.push(self.codec as u8);
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&self.model_sig.to_le_bytes());
+        out.extend_from_slice(&self.step_lo.to_le_bytes());
+        out.extend_from_slice(&self.step_hi.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for s in &self.sections {
+            ensure!(s.name.len() <= u16::MAX as usize, "section name too long");
+            out.extend_from_slice(&(s.name.len() as u16).to_le_bytes());
+            out.extend_from_slice(s.name.as_bytes());
+            out.extend_from_slice(&(s.bytes.len() as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(MAGIC_END);
+        Ok(out)
+    }
+
+    /// Parse and verify a container.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Container> {
+        ensure!(bytes.len() >= 48, "container too short ({} bytes)", bytes.len());
+        ensure!(&bytes[0..4] == MAGIC, "bad magic");
+        ensure!(&bytes[bytes.len() - 4..] == MAGIC_END, "bad end magic (truncated?)");
+        let version = LE::read_u32(&bytes[4..8]);
+        ensure!(version == VERSION, "unsupported version {version}");
+        let kind = CkptKind::from_u8(bytes[8])?;
+        let codec = PayloadCodec::from_u8(bytes[9])?;
+        let model_sig = LE::read_u64(&bytes[12..20]);
+        let step_lo = LE::read_u64(&bytes[20..28]);
+        let step_hi = LE::read_u64(&bytes[28..36]);
+        let n_sections = LE::read_u32(&bytes[36..40]) as usize;
+        ensure!(n_sections <= 1 << 20, "implausible section count");
+
+        let mut pos = 40usize;
+        let mut metas: Vec<(String, usize)> = Vec::with_capacity(n_sections);
+        for _ in 0..n_sections {
+            ensure!(pos + 2 <= bytes.len(), "truncated section header");
+            let nlen = LE::read_u16(&bytes[pos..pos + 2]) as usize;
+            pos += 2;
+            ensure!(pos + nlen + 8 <= bytes.len(), "truncated section name");
+            let name = std::str::from_utf8(&bytes[pos..pos + nlen])?.to_string();
+            pos += nlen;
+            let blen = LE::read_u64(&bytes[pos..pos + 8]) as usize;
+            pos += 8;
+            metas.push((name, blen));
+        }
+        let payload_end = bytes.len() - 8;
+        ensure!(pos <= payload_end, "header overruns payload");
+        let payload = &bytes[pos..payload_end];
+        let crc_stored = LE::read_u32(&bytes[payload_end..payload_end + 4]);
+        let crc = crc32fast::hash(payload);
+        ensure!(crc == crc_stored, "payload CRC mismatch: {crc:#x} != {crc_stored:#x}");
+
+        let raw = match codec {
+            PayloadCodec::Raw => payload.to_vec(),
+            PayloadCodec::Zstd => zstd::decode_all(payload)?,
+        };
+        let expected: usize = metas.iter().map(|(_, l)| l).sum();
+        ensure!(raw.len() == expected, "payload {} != sections total {expected}", raw.len());
+
+        let mut sections = Vec::with_capacity(n_sections);
+        let mut off = 0usize;
+        for (name, blen) in metas {
+            sections.push(Section { name, bytes: raw[off..off + blen].to_vec() });
+            off += blen;
+        }
+        Ok(Container { kind, codec, model_sig, step_lo, step_hi, sections })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn sample(codec: PayloadCodec) -> Container {
+        let mut c = Container::new(CkptKind::Diff, model_signature("tiny", 100), 7, 7)
+            .with_codec(codec);
+        c.push("grad", vec![1, 2, 3, 4, 5]);
+        c.push("meta", vec![9; 100]);
+        c
+    }
+
+    #[test]
+    fn roundtrip_raw_and_zstd() {
+        for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+            let c = sample(codec);
+            let b = c.to_bytes().unwrap();
+            let d = Container::from_bytes(&b).unwrap();
+            assert_eq!(c, d);
+        }
+    }
+
+    #[test]
+    fn zstd_compresses_redundant_payload() {
+        let raw = sample(PayloadCodec::Raw).to_bytes().unwrap();
+        let z = sample(PayloadCodec::Zstd).to_bytes().unwrap();
+        assert!(z.len() < raw.len());
+    }
+
+    #[test]
+    fn crc_detects_payload_corruption() {
+        let mut b = sample(PayloadCodec::Raw).to_bytes().unwrap();
+        let mid = b.len() / 2;
+        b[mid] ^= 0xFF;
+        let err = Container::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("CRC") || err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let b = sample(PayloadCodec::Raw).to_bytes().unwrap();
+        for cut in [1, 10, b.len() / 2, b.len() - 1] {
+            assert!(Container::from_bytes(&b[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let mut b = sample(PayloadCodec::Raw).to_bytes().unwrap();
+        b[0] = b'X';
+        assert!(Container::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn model_signature_distinguishes() {
+        assert_ne!(model_signature("a", 10), model_signature("b", 10));
+        assert_ne!(model_signature("a", 10), model_signature("a", 11));
+        assert_eq!(model_signature("a", 10), model_signature("a", 10));
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        prop_check("container_roundtrip", 32, |rng| {
+            let mut c = Container::new(
+                CkptKind::BatchedDiff,
+                rng.next_u64(),
+                rng.next_u64() % 1000,
+                rng.next_u64() % 1000,
+            );
+            let nsec = rng.range(0, 6);
+            for i in 0..nsec {
+                let len = rng.range(0, 500);
+                let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                c.push(format!("s{i}"), bytes);
+            }
+            let back = Container::from_bytes(&c.to_bytes().unwrap()).unwrap();
+            prop_assert!(back == c);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn missing_section_error_names_it() {
+        let c = sample(PayloadCodec::Raw);
+        let err = c.section("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"));
+    }
+}

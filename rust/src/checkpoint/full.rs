@@ -1,0 +1,92 @@
+//! Full checkpoints C^F: the complete 3Ψ model state (params, adam_m,
+//! adam_v) plus the step counter. Written "regularly" (Alg. 1 line 12) at
+//! the tuned full-checkpoint frequency f* (§V-C).
+
+use anyhow::{ensure, Result};
+
+use crate::checkpoint::format::{CkptKind, Container, PayloadCodec};
+use crate::optim::ModelState;
+use crate::tensor::Flat;
+
+/// Encode a model state as a full-checkpoint container.
+pub fn write_full(state: &ModelState, model_sig: u64, codec: PayloadCodec) -> Result<Vec<u8>> {
+    let mut c = Container::new(CkptKind::Full, model_sig, state.step, state.step)
+        .with_codec(codec);
+    c.push("params", state.params.to_le_bytes());
+    c.push("adam_m", state.m.to_le_bytes());
+    c.push("adam_v", state.v.to_le_bytes());
+    c.to_bytes()
+}
+
+/// Decode a full checkpoint, verifying the model signature.
+pub fn read_full(bytes: &[u8], model_sig: u64) -> Result<ModelState> {
+    let c = Container::from_bytes(bytes)?;
+    ensure!(c.kind == CkptKind::Full, "not a full checkpoint: {:?}", c.kind);
+    ensure!(
+        c.model_sig == model_sig,
+        "checkpoint belongs to a different model (sig {:#x} != {:#x})",
+        c.model_sig,
+        model_sig
+    );
+    let params = Flat::from_le_bytes(c.section("params")?);
+    let m = Flat::from_le_bytes(c.section("adam_m")?);
+    let v = Flat::from_le_bytes(c.section("adam_v")?);
+    ensure!(params.len() == m.len() && m.len() == v.len(), "section length mismatch");
+    Ok(ModelState { params, m, v, step: c.step_lo })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::model_signature;
+    use crate::util::rng::Rng;
+
+    fn state(n: usize) -> ModelState {
+        let mut rng = Rng::new(3);
+        let mut p = vec![0f32; n];
+        let mut m = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        rng.fill_normal_f32(&mut p);
+        rng.fill_normal_f32(&mut m);
+        for x in v.iter_mut() {
+            *x = rng.next_f32();
+        }
+        ModelState { params: Flat(p), m: Flat(m), v: Flat(v), step: 42 }
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let sig = model_signature("t", 100);
+        let s = state(100);
+        for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+            let bytes = write_full(&s, sig, codec).unwrap();
+            let back = read_full(&bytes, sig).unwrap();
+            assert_eq!(back, s);
+        }
+    }
+
+    #[test]
+    fn full_is_3psi_bytes_raw() {
+        // Finding 2: full checkpoint carries 3Ψ of payload
+        let s = state(1000);
+        let bytes = write_full(&s, 1, PayloadCodec::Raw).unwrap();
+        let payload = 3 * 1000 * 4;
+        assert!(bytes.len() >= payload && bytes.len() < payload + 200);
+    }
+
+    #[test]
+    fn wrong_model_rejected() {
+        let s = state(10);
+        let bytes = write_full(&s, model_signature("a", 10), PayloadCodec::Raw).unwrap();
+        let err = read_full(&bytes, model_signature("b", 10)).unwrap_err().to_string();
+        assert!(err.contains("different model"), "{err}");
+    }
+
+    #[test]
+    fn diff_container_rejected_as_full() {
+        let mut c = Container::new(CkptKind::Diff, 1, 1, 1);
+        c.push("grad", vec![0; 8]);
+        let bytes = c.to_bytes().unwrap();
+        assert!(read_full(&bytes, 1).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Checkpoint object naming, recovery-chain discovery, and GC.
+//!
+//! Objects in a [`StorageBackend`](crate::storage::StorageBackend):
+//! ```text
+//! full-{step:012}.ldck          full checkpoint at Adam step `step`
+//! diff-{step:012}.ldck          one differential for step `step`
+//! batch-{lo:012}-{hi:012}.ldck  batched differentials for steps lo..=hi
+//! ```
+//! The recovery chain for the latest state is: the newest full checkpoint,
+//! plus every diff/batch object strictly after its step, in step order
+//! (paper Eq. (6)). GC drops objects made obsolete by a newer full
+//! checkpoint — keeping the previous chain until the new full is durable
+//! (never delete the chain you would recover from).
+
+use anyhow::{Context, Result};
+
+use crate::storage::StorageBackend;
+
+/// One recovery chain: a full checkpoint and its subsequent differentials.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Chain {
+    pub full: Option<(u64, String)>,
+    /// (step_lo, step_hi, object name), sorted by step_lo
+    pub diffs: Vec<(u64, u64, String)>,
+}
+
+impl Chain {
+    /// Latest step reconstructable from this chain.
+    pub fn latest_step(&self) -> u64 {
+        self.diffs
+            .last()
+            .map(|(_, hi, _)| *hi)
+            .or(self.full.as_ref().map(|(s, _)| *s))
+            .unwrap_or(0)
+    }
+}
+
+/// Naming + discovery over a storage backend.
+pub struct Manifest;
+
+impl Manifest {
+    pub fn full_name(step: u64) -> String {
+        format!("full-{step:012}.ldck")
+    }
+
+    pub fn diff_name(step: u64) -> String {
+        format!("diff-{step:012}.ldck")
+    }
+
+    pub fn batch_name(lo: u64, hi: u64) -> String {
+        format!("batch-{lo:012}-{hi:012}.ldck")
+    }
+
+    fn parse(name: &str) -> Option<(&'static str, u64, u64)> {
+        let stem = name.strip_suffix(".ldck")?;
+        if let Some(s) = stem.strip_prefix("full-") {
+            let step = s.parse().ok()?;
+            Some(("full", step, step))
+        } else if let Some(s) = stem.strip_prefix("diff-") {
+            let step = s.parse().ok()?;
+            Some(("diff", step, step))
+        } else if let Some(s) = stem.strip_prefix("batch-") {
+            let (lo, hi) = s.split_once('-')?;
+            Some(("batch", lo.parse().ok()?, hi.parse().ok()?))
+        } else {
+            None
+        }
+    }
+
+    /// Discover the newest recovery chain on a backend.
+    pub fn latest_chain(store: &dyn StorageBackend) -> Result<Chain> {
+        let mut fulls: Vec<(u64, String)> = Vec::new();
+        let mut diffs: Vec<(u64, u64, String)> = Vec::new();
+        for name in store.list().context("listing checkpoint store")? {
+            match Self::parse(&name) {
+                Some(("full", step, _)) => fulls.push((step, name)),
+                Some(("diff", lo, hi)) | Some(("batch", lo, hi)) => {
+                    diffs.push((lo, hi, name))
+                }
+                _ => {}
+            }
+        }
+        fulls.sort();
+        let full = fulls.last().cloned();
+        let base = full.as_ref().map(|(s, _)| *s).unwrap_or(0);
+        diffs.retain(|(lo, _, _)| *lo > base);
+        diffs.sort();
+        Ok(Chain { full, diffs })
+    }
+
+    /// Delete every diff/batch object covering steps strictly after
+    /// `step` — they belong to a timeline lost to a failure (the run was
+    /// rolled back to `step`) and must not pollute future recoveries.
+    pub fn truncate_after(store: &dyn StorageBackend, step: u64) -> Result<usize> {
+        let mut removed = 0;
+        for name in store.list()? {
+            if let Some((kind, lo, _)) = Self::parse(&name) {
+                if kind != "full" && lo > step {
+                    store.delete(&name)?;
+                    removed += 1;
+                }
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Delete every object made obsolete by the newest full checkpoint:
+    /// older fulls and all differentials at or before its step. Returns the
+    /// number of objects removed.
+    pub fn gc(store: &dyn StorageBackend) -> Result<usize> {
+        let mut fulls: Vec<(u64, String)> = Vec::new();
+        let mut others: Vec<(u64, String)> = Vec::new();
+        for name in store.list()? {
+            match Self::parse(&name) {
+                Some(("full", step, _)) => fulls.push((step, name)),
+                Some((_, lo, _)) => others.push((lo, name)),
+                _ => {}
+            }
+        }
+        fulls.sort();
+        let Some((newest, _)) = fulls.last().cloned() else {
+            return Ok(0);
+        };
+        let mut removed = 0;
+        for (step, name) in fulls.iter().take(fulls.len() - 1) {
+            let _ = step;
+            store.delete(name)?;
+            removed += 1;
+        }
+        for (lo, name) in others {
+            if lo <= newest {
+                store.delete(&name)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    #[test]
+    fn names_sort_numerically() {
+        assert!(Manifest::full_name(9) < Manifest::full_name(10));
+        assert!(Manifest::diff_name(99) < Manifest::diff_name(100));
+    }
+
+    #[test]
+    fn chain_discovery_orders_and_filters() {
+        let s = MemStore::new();
+        s.put(&Manifest::full_name(10), b"f").unwrap();
+        s.put(&Manifest::full_name(20), b"f").unwrap();
+        s.put(&Manifest::diff_name(15), b"d").unwrap(); // obsolete (< full 20)
+        s.put(&Manifest::diff_name(21), b"d").unwrap();
+        s.put(&Manifest::batch_name(22, 25), b"b").unwrap();
+        let chain = Manifest::latest_chain(&s).unwrap();
+        assert_eq!(chain.full.as_ref().unwrap().0, 20);
+        assert_eq!(
+            chain.diffs,
+            vec![
+                (21, 21, Manifest::diff_name(21)),
+                (22, 25, Manifest::batch_name(22, 25)),
+            ]
+        );
+        assert_eq!(chain.latest_step(), 25);
+    }
+
+    #[test]
+    fn chain_with_no_checkpoints_is_empty() {
+        let s = MemStore::new();
+        let chain = Manifest::latest_chain(&s).unwrap();
+        assert_eq!(chain, Chain::default());
+        assert_eq!(chain.latest_step(), 0);
+    }
+
+    #[test]
+    fn gc_keeps_live_chain_only() {
+        let s = MemStore::new();
+        s.put(&Manifest::full_name(10), b"f").unwrap();
+        s.put(&Manifest::diff_name(11), b"d").unwrap();
+        s.put(&Manifest::full_name(20), b"f").unwrap();
+        s.put(&Manifest::diff_name(20), b"d").unwrap(); // <= 20: obsolete
+        s.put(&Manifest::diff_name(21), b"d").unwrap(); // live
+        let removed = Manifest::gc(&s).unwrap();
+        assert_eq!(removed, 3);
+        assert_eq!(
+            s.list().unwrap(),
+            vec![Manifest::diff_name(21), Manifest::full_name(20)]
+        );
+    }
+
+    #[test]
+    fn gc_noop_without_full() {
+        let s = MemStore::new();
+        s.put(&Manifest::diff_name(5), b"d").unwrap();
+        assert_eq!(Manifest::gc(&s).unwrap(), 0);
+    }
+
+    #[test]
+    fn truncate_after_drops_lost_timeline() {
+        let s = MemStore::new();
+        s.put(&Manifest::full_name(8), b"f").unwrap();
+        s.put(&Manifest::diff_name(9), b"d").unwrap(); // <= 9: keep
+        s.put(&Manifest::diff_name(10), b"d").unwrap(); // > 9: lost timeline
+        s.put(&Manifest::batch_name(10, 12), b"b").unwrap();
+        let removed = Manifest::truncate_after(&s, 9).unwrap();
+        assert_eq!(removed, 2);
+        assert_eq!(
+            s.list().unwrap(),
+            vec![Manifest::diff_name(9), Manifest::full_name(8)]
+        );
+    }
+
+    #[test]
+    fn unknown_objects_ignored() {
+        let s = MemStore::new();
+        s.put("random.bin", b"x").unwrap();
+        s.put(&Manifest::full_name(1), b"f").unwrap();
+        let chain = Manifest::latest_chain(&s).unwrap();
+        assert_eq!(chain.full.as_ref().unwrap().0, 1);
+    }
+}

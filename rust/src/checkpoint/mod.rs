@@ -1,0 +1,21 @@
+//! Checkpoint containers and writers (DESIGN.md §5).
+//!
+//! - [`format`]: the on-disk container (magic, kind, steps, CRC32, optional
+//!   zstd) shared by all checkpoint types.
+//! - [`full`]: full checkpoints C^F — the 3Ψ model state.
+//! - [`diff`]: differential checkpoints C^D — a *reused compressed
+//!   gradient* (LowDiff, Eq. (7)) or a state delta (Naive DC, Eq. (5)).
+//! - [`batched`]: the §V-B batched gradient write buffer.
+//! - [`manifest`]: object naming, discovery of the recovery chain, GC.
+
+pub mod batched;
+pub mod diff;
+pub mod format;
+pub mod full;
+pub mod manifest;
+
+pub use batched::{BatchBuffer, BatchMode};
+pub use diff::{read_diff, write_diff, DiffPayload};
+pub use format::{CkptKind, Container, PayloadCodec, Section};
+pub use full::{read_full, write_full};
+pub use manifest::Manifest;

@@ -1,0 +1,363 @@
+//! The checkpointing process (paper Fig. 5, Alg. 1 lines 9-12).
+//!
+//! A dedicated thread consuming the [`ReusingQueue`]:
+//! - **Diff items** (reused compressed gradients): "offloaded" (compacted
+//!   to the k-sparse wire form — the GPU→CPU offload of Fig. 6 step ①),
+//!   buffered in the CPU [`BatchBuffer`] (step ②), and persisted as one
+//!   batched write when full (step ③).
+//! - **Full items** (model-state snapshots): pending diffs are flushed
+//!   first (they belong to the pre-full chain), then the 3Ψ state is
+//!   encoded and written; obsolete objects are GC'd.
+//!
+//! All storage I/O happens on this thread — the training thread's only
+//! costs are the O(1) queue put and the snapshot copy.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+
+
+use crate::checkpoint::batched::{finalize, BatchBuffer, BatchMode};
+use crate::checkpoint::diff::{write_diff, DiffPayload};
+use crate::checkpoint::format::PayloadCodec;
+use crate::checkpoint::full::write_full;
+use crate::checkpoint::manifest::Manifest;
+use crate::coordinator::reusing_queue::ReusingQueue;
+use crate::optim::ModelState;
+use crate::sparse::SparseGrad;
+use crate::storage::StorageBackend;
+use crate::tensor::Flat;
+
+/// What travels through the reusing queue to the checkpointing process.
+pub enum CkptItem {
+    /// dense-masked compressed gradient (LowDiff reuse path)
+    DiffDense(Flat),
+    /// pre-compacted sparse payload (Naive DC's state deltas)
+    DiffSparse(DiffPayload),
+    /// full model-state snapshot
+    Full(ModelState),
+}
+
+/// Counters shared with the training side / report.
+#[derive(Clone, Debug, Default)]
+pub struct CkptStats {
+    pub full_ckpts: u64,
+    pub diff_ckpts: u64,
+    pub writes: u64,
+    pub bytes_written: u64,
+    pub write_secs: f64,
+    pub offload_secs: f64,
+    pub peak_buffered_bytes: usize,
+    pub errors: u64,
+}
+
+/// Handle to the running checkpointing process.
+pub struct Checkpointer {
+    pub queue: Arc<ReusingQueue<CkptItem>>,
+    stats: Arc<Mutex<CkptStats>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Configuration of the checkpointing process.
+#[derive(Clone)]
+pub struct CkptConfig {
+    pub model_sig: u64,
+    pub batch_size: usize,
+    pub batch_mode: BatchMode,
+    pub codec: PayloadCodec,
+    pub queue_capacity: usize,
+    /// run GC after each full checkpoint
+    pub gc: bool,
+}
+
+impl Default for CkptConfig {
+    fn default() -> Self {
+        CkptConfig {
+            model_sig: 0,
+            batch_size: 1,
+            batch_mode: BatchMode::Concat,
+            codec: PayloadCodec::Raw,
+            queue_capacity: 8,
+            gc: true,
+        }
+    }
+}
+
+impl Checkpointer {
+    /// Spawn the checkpointing thread over `store`.
+    pub fn spawn(store: Arc<dyn StorageBackend>, cfg: CkptConfig) -> Checkpointer {
+        let queue: Arc<ReusingQueue<CkptItem>> = ReusingQueue::new(cfg.queue_capacity);
+        let stats = Arc::new(Mutex::new(CkptStats::default()));
+        let q = Arc::clone(&queue);
+        let st = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("ckpt".into())
+            .spawn(move || run_loop(q, store, cfg, st))
+            .expect("spawning checkpointer");
+        Checkpointer { queue, stats, handle: Some(handle) }
+    }
+
+    pub fn stats(&self) -> CkptStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Close the queue and wait for all pending work to be persisted.
+    pub fn finish(mut self) -> CkptStats {
+        self.queue.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_loop(
+    queue: Arc<ReusingQueue<CkptItem>>,
+    store: Arc<dyn StorageBackend>,
+    cfg: CkptConfig,
+    stats: Arc<Mutex<CkptStats>>,
+) {
+    let mut batch = BatchBuffer::new(cfg.batch_mode, cfg.batch_size);
+    let mut put = |bytes: Vec<u8>, name: String, st: &Mutex<CkptStats>| {
+        let t0 = Instant::now();
+        let res = store.put(&name, &bytes);
+        let mut s = st.lock().unwrap();
+        s.write_secs += t0.elapsed().as_secs_f64();
+        match res {
+            Ok(()) => {
+                s.writes += 1;
+                s.bytes_written += bytes.len() as u64;
+            }
+            Err(e) => {
+                log::error!("checkpoint write {name} failed: {e:#}");
+                s.errors += 1;
+            }
+        }
+    };
+
+    while let Some(entry) = queue.get() {
+        let step = entry.step;
+        // the queue hands us the sole surviving Arc once training has moved
+        // on; unwrap-or-clone keeps zero-copy in the common case
+        let item = Arc::try_unwrap(entry.payload).unwrap_or_else(|_| {
+            // training still holds a reference (it shouldn't for Full);
+            // fall back to reading through the Arc
+            panic!("checkpointer requires exclusive payload ownership")
+        });
+        match item {
+            CkptItem::DiffDense(dense) => {
+                let t0 = Instant::now();
+                let sparse = SparseGrad::from_dense(&dense); // offload/compact
+                drop(dense);
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.offload_secs += t0.elapsed().as_secs_f64();
+                    s.diff_ckpts += 1;
+                }
+                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut put);
+            }
+            CkptItem::DiffSparse(payload) => {
+                stats.lock().unwrap().diff_ckpts += 1;
+                match payload {
+                    DiffPayload::Gradient(g) => {
+                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut put)
+                    }
+                    delta @ DiffPayload::StateDelta(_) => {
+                        // Naive DC writes every delta unbatched (its cost)
+                        match write_diff(&delta, cfg.model_sig, step, cfg.codec) {
+                            Ok(bytes) => put(bytes, Manifest::diff_name(step), &stats),
+                            Err(e) => log::error!("encode diff {step}: {e:#}"),
+                        }
+                    }
+                }
+            }
+            CkptItem::Full(state) => {
+                // flush the pre-full chain first (order matters for GC)
+                if let Some(c) = batch.flush() {
+                    let (lo, hi) = (c.step_lo, c.step_hi);
+                    match finalize(c, cfg.model_sig, cfg.codec) {
+                        Ok(bytes) => put(bytes, Manifest::batch_name(lo, hi), &stats),
+                        Err(e) => log::error!("encode batch: {e:#}"),
+                    }
+                }
+                match write_full(&state, cfg.model_sig, cfg.codec) {
+                    Ok(bytes) => {
+                        put(bytes, Manifest::full_name(state.step), &stats);
+                        stats.lock().unwrap().full_ckpts += 1;
+                        if cfg.gc {
+                            if let Err(e) = Manifest::gc(store.as_ref()) {
+                                log::warn!("gc failed: {e:#}");
+                            }
+                        }
+                    }
+                    Err(e) => log::error!("encode full {step}: {e:#}"),
+                }
+            }
+        }
+    }
+    // drain the final partial batch on close
+    if let Some(c) = batch.flush() {
+        let (lo, hi) = (c.step_lo, c.step_hi);
+        if let Ok(bytes) = finalize(c, cfg.model_sig, cfg.codec) {
+            put(bytes, Manifest::batch_name(lo, hi), &stats);
+        }
+    }
+}
+
+fn handle_sparse(
+    step: u64,
+    sparse: SparseGrad,
+    batch: &mut BatchBuffer,
+    cfg: &CkptConfig,
+    stats: &Arc<Mutex<CkptStats>>,
+    put: &mut impl FnMut(Vec<u8>, String, &Mutex<CkptStats>),
+) {
+    if cfg.batch_size <= 1 {
+        match write_diff(&DiffPayload::Gradient(sparse), cfg.model_sig, step, cfg.codec) {
+            Ok(bytes) => put(bytes, Manifest::diff_name(step), stats),
+            Err(e) => log::error!("encode diff {step}: {e:#}"),
+        }
+        return;
+    }
+    let maybe = batch.push(step, sparse);
+    {
+        let mut s = stats.lock().unwrap();
+        s.peak_buffered_bytes = s.peak_buffered_bytes.max(batch.buffered_bytes());
+    }
+    if let Some(c) = maybe {
+        let (lo, hi) = (c.step_lo, c.step_hi);
+        match finalize(c, cfg.model_sig, cfg.codec) {
+            Ok(bytes) => put(bytes, Manifest::batch_name(lo, hi), stats),
+            Err(e) => log::error!("encode batch: {e:#}"),
+        }
+    }
+}
+
+/// Convenience: wait until the queue is drained (tests / barriers).
+pub fn drain(ckpt: &Checkpointer) {
+    while !ckpt.queue.is_empty() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::model_signature;
+    use crate::compress::topk_mask;
+    use crate::coordinator::recovery::{recover, RecoveryMode};
+    use crate::optim::Adam;
+    use crate::storage::MemStore;
+    use crate::util::rng::Rng;
+
+    fn cfg(n: usize, batch: usize) -> CkptConfig {
+        CkptConfig {
+            model_sig: model_signature("t", n),
+            batch_size: batch,
+            batch_mode: BatchMode::Concat,
+            codec: PayloadCodec::Raw,
+            queue_capacity: 4,
+            gc: false,
+        }
+    }
+
+    fn grad(rng: &mut Rng, n: usize) -> Flat {
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        topk_mask(&Flat(g), n / 10 + 1)
+    }
+
+    #[test]
+    fn end_to_end_diff_and_full_then_recover() {
+        let n = 150;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg(n, 1));
+        let adam = Adam::default();
+        let mut rng = Rng::new(11);
+        let mut state = ModelState::new(Flat(vec![0.5; n]));
+
+        // full checkpoint of the initial state
+        ck.queue.put(0, Arc::new(CkptItem::Full(state.clone())));
+        let mut want = state.clone();
+        for step in 1..=5u64 {
+            let g = grad(&mut rng, n);
+            let sparse = SparseGrad::from_dense(&g);
+            adam.apply_sparse(&mut want, &sparse);
+            state = want.clone();
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+        }
+        let stats = ck.finish();
+        assert_eq!(stats.full_ckpts, 1);
+        assert_eq!(stats.diff_ckpts, 5);
+        assert_eq!(stats.writes, 6);
+        assert_eq!(stats.errors, 0);
+
+        let (rec, rstats) = recover(
+            store.as_ref(),
+            model_signature("t", n),
+            &adam,
+            RecoveryMode::SerialReplay,
+        )
+        .unwrap();
+        assert_eq!(rec, want);
+        assert_eq!(rstats.recovered_step, 5);
+        let _ = state;
+    }
+
+    #[test]
+    fn batched_writes_reduce_write_count() {
+        let n = 100;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg(n, 4));
+        let mut rng = Rng::new(2);
+        for step in 1..=8u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        let stats = ck.finish();
+        assert_eq!(stats.diff_ckpts, 8);
+        assert_eq!(stats.writes, 2, "8 diffs at BS=4 -> 2 batched writes");
+        assert!(stats.peak_buffered_bytes > 0);
+    }
+
+    #[test]
+    fn partial_batch_flushed_on_close() {
+        let n = 80;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg(n, 10));
+        let mut rng = Rng::new(3);
+        for step in 1..=3u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        let stats = ck.finish();
+        assert_eq!(stats.writes, 1, "partial batch must still persist");
+        let names = store.list().unwrap();
+        assert!(names[0].starts_with("batch-"), "{names:?}");
+    }
+
+    #[test]
+    fn full_flushes_pending_batch_first() {
+        let n = 60;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg(n, 10));
+        let mut rng = Rng::new(4);
+        ck.queue.put(1, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        ck.queue.put(2, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        ck.queue
+            .put(2, Arc::new(CkptItem::Full(ModelState::new(Flat::zeros(n)))));
+        let stats = ck.finish();
+        assert_eq!(stats.writes, 2); // batch(1-2) + full(0)
+        let names = store.list().unwrap();
+        assert!(names.iter().any(|n| n.starts_with("batch-")));
+        assert!(names.iter().any(|n| n.starts_with("full-")));
+    }
+}

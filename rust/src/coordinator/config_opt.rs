@@ -1,0 +1,226 @@
+//! Checkpointing configuration optimization (paper §V-C).
+//!
+//! Models the wasted time T_wasted(f, b) of Eq. (8) over full-checkpoint
+//! frequency `f` (checkpoints per iteration... the paper uses f as full
+//! checkpoints per unit work; here f = 1/FCF_interval, i.e. checkpoints
+//! per iteration) and batching size `b`, derives the closed-form optimum
+//! (f*, b*) of Eq. (10), and provides the runtime stepwise tuner the
+//! implementation section (§VII-A) describes.
+
+/// Constant system parameters of Eq. (8).
+#[derive(Clone, Copy, Debug)]
+pub struct SystemParams {
+    /// number of GPUs N
+    pub n_gpus: f64,
+    /// mean time between failures M (hours or any consistent unit)
+    pub mtbf: f64,
+    /// checkpoint write bandwidth W (bytes per time-unit)
+    pub write_bw: f64,
+    /// full checkpoint size S (bytes)
+    pub full_size: f64,
+    /// total training run time T (same unit as mtbf)
+    pub total_time: f64,
+    /// time to load a full checkpoint R_F
+    pub r_full: f64,
+    /// time to merge one differential checkpoint R_D
+    pub r_diff: f64,
+}
+
+/// Eq. (8): T_wasted(f, b) =
+///   NT/M · ( b/2 + R_F + R_D/2·(1/(f·b) − 1) ) + NT·S·f / W
+pub fn wasted_time(p: &SystemParams, f: f64, b: f64) -> f64 {
+    assert!(f > 0.0 && b > 0.0);
+    let recovery = p.n_gpus * p.total_time / p.mtbf
+        * (b / 2.0 + p.r_full + p.r_diff / 2.0 * (1.0 / (f * b) - 1.0));
+    let steady = p.n_gpus * p.total_time * p.full_size * f / p.write_bw;
+    recovery + steady
+}
+
+/// Eq. (10): the closed-form stationary point
+/// (f*, b*) = ( cbrt(R_D·W² / (4·S²·M²)),  cbrt(2·S·R_D·M / W) ).
+pub fn optimal_config(p: &SystemParams) -> (f64, f64) {
+    let f = (p.r_diff * p.write_bw * p.write_bw
+        / (4.0 * p.full_size * p.full_size * p.mtbf * p.mtbf))
+        .cbrt();
+    let b = (2.0 * p.full_size * p.r_diff * p.mtbf / p.write_bw).cbrt();
+    (f, b)
+}
+
+/// Quantize the continuous optimum to usable integers: FCF interval
+/// (iterations between full checkpoints, = round(1/f*) clamped) and batch
+/// size, searching the 3×3 integer neighborhood for the lowest Eq.(8) value.
+pub fn optimal_config_integer(p: &SystemParams, iter_time: f64) -> (u64, usize) {
+    // f* is "full checkpoints per time-unit"; convert to an iteration
+    // interval via the iteration duration.
+    let (f_star, b_star) = optimal_config(p);
+    let interval0 = (1.0 / (f_star * iter_time)).max(1.0);
+    let b0 = b_star.max(1.0);
+    let mut best = (u64::MAX, usize::MAX);
+    let mut best_cost = f64::INFINITY;
+    for di in [-1.0, 0.0, 1.0] {
+        for db in [-1.0, 0.0, 1.0] {
+            let interval = (interval0 + di * interval0 * 0.25).round().max(1.0);
+            let b = (b0 + db).round().max(1.0);
+            let f = 1.0 / (interval * iter_time);
+            let cost = wasted_time(p, f, b);
+            if cost < best_cost {
+                best_cost = cost;
+                best = (interval as u64, b as usize);
+            }
+        }
+    }
+    best
+}
+
+/// Runtime stepwise tuner (§VII-A "Optimal configuration module"):
+/// starts from a config, observes runtime metrics (measured MTBF and
+/// bandwidth), and nudges (FCF interval, BS) toward the model optimum.
+#[derive(Debug)]
+pub struct AdaptiveTuner {
+    pub params: SystemParams,
+    pub iter_time: f64,
+    pub fcf_interval: u64,
+    pub batch_size: usize,
+}
+
+impl AdaptiveTuner {
+    pub fn new(params: SystemParams, iter_time: f64) -> AdaptiveTuner {
+        let (fcf, bs) = optimal_config_integer(&params, iter_time);
+        AdaptiveTuner { params, iter_time, fcf_interval: fcf, batch_size: bs }
+    }
+
+    /// Feed fresh runtime observations; config moves one step per call
+    /// (stepwise adjustment, never a jump — §VII-A).
+    pub fn observe(&mut self, measured_mtbf: f64, measured_bw: f64) {
+        self.params.mtbf = measured_mtbf;
+        self.params.write_bw = measured_bw;
+        let (want_fcf, want_bs) = optimal_config_integer(&self.params, self.iter_time);
+        self.fcf_interval = step_toward(self.fcf_interval as i64, want_fcf as i64).max(1) as u64;
+        self.batch_size = step_toward(self.batch_size as i64, want_bs as i64).max(1) as usize;
+    }
+}
+
+fn step_toward(cur: i64, want: i64) -> i64 {
+    // geometric-ish stepping: move at most 25% of the gap, at least 1
+    match want.cmp(&cur) {
+        std::cmp::Ordering::Equal => cur,
+        std::cmp::Ordering::Greater => cur + ((want - cur + 3) / 4).max(1),
+        std::cmp::Ordering::Less => cur - ((cur - want + 3) / 4).max(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> SystemParams {
+        // GPT2-L-flavored numbers: S = 8.7 GB, W = 2.5 GB/s,
+        // R_F = S/W ≈ 3.5 s, R_D small, times in seconds
+        SystemParams {
+            n_gpus: 8.0,
+            mtbf: 3600.0,
+            write_bw: 2.5e9,
+            full_size: 8.7e9,
+            total_time: 24.0 * 3600.0,
+            r_full: 3.5,
+            r_diff: 0.2,
+        }
+    }
+
+    #[test]
+    fn closed_form_is_stationary_point() {
+        // numeric gradient at (f*, b*) vanishes
+        let p = params();
+        let (f, b) = optimal_config(&p);
+        assert!(f > 0.0 && b > 0.0);
+        let h = 1e-7;
+        let dfdf = (wasted_time(&p, f * (1.0 + h), b) - wasted_time(&p, f * (1.0 - h), b))
+            / (2.0 * f * h);
+        let dfdb = (wasted_time(&p, f, b * (1.0 + h)) - wasted_time(&p, f, b * (1.0 - h)))
+            / (2.0 * b * h);
+        let scale = wasted_time(&p, f, b);
+        assert!(dfdf.abs() * f / scale < 1e-3, "df/df = {dfdf}");
+        assert!(dfdb.abs() * b / scale < 1e-3, "df/db = {dfdb}");
+    }
+
+    #[test]
+    fn optimum_beats_neighbors() {
+        let p = params();
+        let (f, b) = optimal_config(&p);
+        let best = wasted_time(&p, f, b);
+        for (mf, mb) in [(0.5, 1.0), (2.0, 1.0), (1.0, 0.5), (1.0, 2.0), (3.0, 3.0)] {
+            assert!(
+                wasted_time(&p, f * mf, b * mb) >= best,
+                "({mf},{mb}) beats optimum"
+            );
+        }
+    }
+
+    #[test]
+    fn wasted_time_u_shape_in_fcf() {
+        // Table I row structure: too-low and too-high FCF both hurt
+        let p = params();
+        let (f, b) = optimal_config(&p);
+        let low = wasted_time(&p, f / 10.0, b);
+        let high = wasted_time(&p, f * 10.0, b);
+        let best = wasted_time(&p, f, b);
+        assert!(low > best && high > best);
+    }
+
+    #[test]
+    fn u_shape_in_batch_size() {
+        // Table I column structure
+        let p = params();
+        let (f, b) = optimal_config(&p);
+        assert!(wasted_time(&p, f, b / 8.0) > wasted_time(&p, f, b));
+        assert!(wasted_time(&p, f, b * 8.0) > wasted_time(&p, f, b));
+    }
+
+    #[test]
+    fn more_failures_want_more_frequent_fulls() {
+        let p = params();
+        let mut p2 = p;
+        p2.mtbf = p.mtbf / 4.0;
+        let (f1, _) = optimal_config(&p);
+        let (f2, _) = optimal_config(&p2);
+        assert!(f2 > f1, "lower MTBF should raise full-ckpt frequency");
+    }
+
+    #[test]
+    fn faster_storage_wants_more_frequent_fulls_smaller_batches() {
+        let p = params();
+        let mut p2 = p;
+        p2.write_bw = p.write_bw * 8.0;
+        let (f1, b1) = optimal_config(&p);
+        let (f2, b2) = optimal_config(&p2);
+        assert!(f2 > f1);
+        assert!(b2 < b1);
+    }
+
+    #[test]
+    fn integer_config_sane() {
+        let p = params();
+        let (fcf, bs) = optimal_config_integer(&p, 1.9);
+        assert!(fcf >= 1 && fcf < 100_000);
+        assert!((1..=64).contains(&bs));
+    }
+
+    #[test]
+    fn tuner_converges_toward_model_optimum() {
+        let p = params();
+        let mut t = AdaptiveTuner::new(p, 1.9);
+        // perturb away from optimum
+        t.fcf_interval = 10_000;
+        t.batch_size = 64;
+        let (want_fcf, want_bs) = optimal_config_integer(&t.params, 1.9);
+        for _ in 0..200 {
+            t.observe(p.mtbf, p.write_bw);
+        }
+        assert!(
+            (t.fcf_interval as i64 - want_fcf as i64).abs() <= 1,
+            "{} vs {want_fcf}",
+            t.fcf_interval
+        );
+        assert!((t.batch_size as i64 - want_bs as i64).abs() <= 1);
+    }
+}

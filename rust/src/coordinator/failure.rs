@@ -1,0 +1,160 @@
+//! Failure injection and wasted-time accounting (paper §VIII Exp. 3/9).
+//!
+//! Failures arrive as a Poisson process with the configured MTBF
+//! (exponential inter-arrival, seeded — deterministic experiments). The
+//! paper's recovery taxonomy (§VI-C): **hardware** failures lose all
+//! process memory (recover from persistent storage); **software** failures
+//! kill only the training process, leaving the checkpointing process's CPU
+//! memory intact (LowDiff+ recovers from the in-memory replica).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    Hardware,
+    Software,
+}
+
+/// Deterministic failure schedule generator.
+#[derive(Debug)]
+pub struct FailureInjector {
+    rng: Rng,
+    /// MTBF in seconds of simulated wall-clock
+    mtbf: f64,
+    /// P(failure is software | failure) — the paper treats software bugs
+    /// as the common case (§VI-C)
+    p_software: f64,
+    next_at: f64,
+}
+
+impl FailureInjector {
+    pub fn new(mtbf_secs: f64, p_software: f64, seed: u64) -> FailureInjector {
+        assert!(mtbf_secs > 0.0);
+        let mut rng = Rng::new(seed);
+        let first = rng.exponential(mtbf_secs);
+        FailureInjector { rng, mtbf: mtbf_secs, p_software, next_at: first }
+    }
+
+    /// No failures ever (baseline runs).
+    pub fn never() -> FailureInjector {
+        FailureInjector {
+            rng: Rng::new(0),
+            mtbf: f64::INFINITY,
+            p_software: 0.0,
+            next_at: f64::INFINITY,
+        }
+    }
+
+    /// Time of the next scheduled failure.
+    pub fn next_at(&self) -> f64 {
+        self.next_at
+    }
+
+    /// Poll at simulated/wall time `now`; if a failure is due, consume it,
+    /// schedule the next, and return its kind.
+    pub fn poll(&mut self, now: f64) -> Option<FailureKind> {
+        if now < self.next_at {
+            return None;
+        }
+        self.next_at = now + self.rng.exponential(self.mtbf);
+        Some(if self.rng.next_f64() < self.p_software {
+            FailureKind::Software
+        } else {
+            FailureKind::Hardware
+        })
+    }
+}
+
+/// Wasted-time ledger (§II-B): recovery time + steady-state checkpoint
+/// overhead + recomputed work, vs productive training time.
+#[derive(Clone, Debug, Default)]
+pub struct WastedTime {
+    /// GPU time spent on checkpointing while healthy (stalls)
+    pub steady_overhead: f64,
+    /// time to reload/merge checkpoints after failures
+    pub recovery: f64,
+    /// progress lost and recomputed (from last covered step to failure)
+    pub lost_work: f64,
+    /// productive training compute
+    pub productive: f64,
+    pub n_failures: u64,
+}
+
+impl WastedTime {
+    pub fn total_wasted(&self) -> f64 {
+        self.steady_overhead + self.recovery + self.lost_work
+    }
+
+    /// Gemini's effective training time ratio (Exp. 9/10).
+    pub fn effective_ratio(&self) -> f64 {
+        let total = self.productive + self.total_wasted();
+        if total == 0.0 {
+            1.0
+        } else {
+            self.productive / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failures_arrive_at_mtbf_rate() {
+        let mut inj = FailureInjector::new(100.0, 0.5, 7);
+        let mut t = 0.0;
+        let mut count = 0;
+        while t < 100_000.0 {
+            t += 1.0;
+            if inj.poll(t).is_some() {
+                count += 1;
+            }
+        }
+        // ~1000 failures expected; Poisson sd ~32
+        assert!((800..1200).contains(&count), "count {count}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = FailureInjector::new(50.0, 0.5, 9);
+        let mut b = FailureInjector::new(50.0, 0.5, 9);
+        for i in 0..10_000 {
+            assert_eq!(a.poll(i as f64), b.poll(i as f64));
+        }
+    }
+
+    #[test]
+    fn never_never_fires() {
+        let mut inj = FailureInjector::never();
+        assert!(inj.poll(1e12).is_none());
+    }
+
+    #[test]
+    fn software_fraction_respected() {
+        let mut inj = FailureInjector::new(1.0, 0.8, 3);
+        let (mut sw, mut hw) = (0u32, 0u32);
+        let mut t = 0.0;
+        for _ in 0..20_000 {
+            t += 1.0;
+            match inj.poll(t) {
+                Some(FailureKind::Software) => sw += 1,
+                Some(FailureKind::Hardware) => hw += 1,
+                None => {}
+            }
+        }
+        let frac = sw as f64 / (sw + hw) as f64;
+        assert!((0.75..0.85).contains(&frac), "software fraction {frac}");
+    }
+
+    #[test]
+    fn effective_ratio_bounds() {
+        let mut w = WastedTime::default();
+        w.productive = 90.0;
+        w.steady_overhead = 5.0;
+        w.recovery = 3.0;
+        w.lost_work = 2.0;
+        assert!((w.effective_ratio() - 0.9).abs() < 1e-12);
+        assert_eq!(WastedTime::default().effective_ratio(), 1.0);
+    }
+}

@@ -1,0 +1,421 @@
+//! LowDiff+ (paper §VI): frequent checkpointing *without* gradient
+//! compression.
+//!
+//! - **Layer-wise gradient reusing & snapshotting** (§VI-A, Alg. 2): as
+//!   each layer's gradient is finalized, the training side enqueues a
+//!   zero-copy layer slice; a pool of snapshot threads copies slices into
+//!   CPU staging buffers concurrently (pipelining with later layers).
+//! - **CPU-resident replica + asynchronous persistence** (§VI-B): once a
+//!   step's slices have all landed, the checkpointing side applies the
+//!   gradient to a CPU [`ModelState`] replica via Rust Adam — an in-memory
+//!   checkpoint updated every iteration; the replica is persisted to
+//!   storage on a cadence, fully decoupled from training.
+//! - **Software-failure recovery** (§VI-C): the replica survives training-
+//!   process death; [`LowDiffPlus::replica`] hands it back instantly.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::checkpoint::format::PayloadCodec;
+use crate::checkpoint::full::write_full;
+use crate::checkpoint::manifest::Manifest;
+use crate::coordinator::reusing_queue::ReusingQueue;
+use crate::model::Layout;
+use crate::optim::{Adam, ModelState};
+use crate::storage::StorageBackend;
+use crate::tensor::Flat;
+
+/// One layer's gradient, shared zero-copy (all layers of a step share the
+/// same gradient allocation; the message carries the slice coordinates).
+pub struct LayerMsg {
+    pub grad: Arc<Flat>,
+    pub tensor_idx: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PlusStats {
+    pub inmem_ckpts: u64,
+    pub persisted: u64,
+    pub bytes_written: u64,
+    pub write_secs: f64,
+    pub snapshot_secs: f64,
+    pub cpu_update_secs: f64,
+}
+
+/// The LowDiff+ checkpointing process.
+pub struct LowDiffPlus {
+    pub queue: Arc<ReusingQueue<LayerMsg>>,
+    replica: Arc<Mutex<ModelState>>,
+    stats: Arc<Mutex<PlusStats>>,
+    /// last step fully applied to the replica
+    applied_step: Arc<AtomicU64>,
+    discard: Arc<AtomicBool>,
+    assembler: Option<JoinHandle<()>>,
+    snapshot_pool: Vec<JoinHandle<()>>,
+}
+
+pub struct PlusConfig {
+    pub model_sig: u64,
+    pub persist_every: u64,
+    pub codec: PayloadCodec,
+    pub queue_capacity: usize,
+    pub snapshot_threads: usize,
+    pub adam: Adam,
+}
+
+impl LowDiffPlus {
+    /// Spawn the checkpointing process. `initial` is the deep-copied GPU
+    /// state (the paper's `copy.deepcopy` at process start, §VII-B).
+    pub fn spawn(
+        layout: &Layout,
+        initial: ModelState,
+        store: Arc<dyn StorageBackend>,
+        cfg: PlusConfig,
+    ) -> LowDiffPlus {
+        let n_tensors = layout.n_tensors();
+        let tensors: Arc<Vec<(usize, usize)>> =
+            Arc::new(layout.tensors.iter().map(|t| (t.offset, t.len)).collect());
+        let queue: Arc<ReusingQueue<LayerMsg>> = ReusingQueue::new(cfg.queue_capacity);
+        let replica = Arc::new(Mutex::new(initial));
+        let stats = Arc::new(Mutex::new(PlusStats::default()));
+        let applied_step = Arc::new(AtomicU64::new(0));
+        let discard = Arc::new(AtomicBool::new(false));
+
+        // staging buffer: one slot per tensor, written by the snapshot
+        // pool, read by the assembler once a step completes
+        let staging: Arc<Vec<Mutex<Vec<f32>>>> = Arc::new(
+            tensors.iter().map(|&(_, len)| Mutex::new(vec![0f32; len])).collect(),
+        );
+
+        // snapshot pool: copies layer slices GPU->CPU (here: into staging)
+        let (work_tx, work_rx) = mpsc::channel::<(u64, LayerMsg)>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (done_tx, done_rx) = mpsc::channel::<u64>();
+        let mut snapshot_pool = Vec::new();
+        for i in 0..cfg.snapshot_threads.max(1) {
+            let rx = Arc::clone(&work_rx);
+            let tx = done_tx.clone();
+            let staging = Arc::clone(&staging);
+            let tensors = Arc::clone(&tensors);
+            let stats = Arc::clone(&stats);
+            snapshot_pool.push(
+                std::thread::Builder::new()
+                    .name(format!("snap-{i}"))
+                    .spawn(move || {
+                        loop {
+                            let msg = { rx.lock().unwrap().recv() };
+                            let Ok((step, m)) = msg else { break };
+                            let t0 = Instant::now();
+                            let (off, len) = tensors[m.tensor_idx];
+                            staging[m.tensor_idx]
+                                .lock()
+                                .unwrap()
+                                .copy_from_slice(m.grad.slice(off, len));
+                            stats.lock().unwrap().snapshot_secs += t0.elapsed().as_secs_f64();
+                            let _ = tx.send(step);
+                        }
+                    })
+                    .expect("snapshot thread"),
+            );
+        }
+        drop(done_tx);
+
+        // assembler: drives the queue, dispatches to the pool, applies each
+        // completed step to the replica, persists on cadence
+        let q = Arc::clone(&queue);
+        let rep = Arc::clone(&replica);
+        let st = Arc::clone(&stats);
+        let applied = Arc::clone(&applied_step);
+        let disc = Arc::clone(&discard);
+        let tensors2 = Arc::clone(&tensors);
+        let staging2 = Arc::clone(&staging);
+        let assembler = std::thread::Builder::new()
+            .name("lowdiff+".into())
+            .spawn(move || {
+                let mut pending = 0usize;
+                let mut cur_step = 0u64;
+                while let Some(entry) = q.get() {
+                    if disc.load(Ordering::Relaxed) {
+                        continue; // failure: drain without applying
+                    }
+                    if entry.step != cur_step {
+                        assert_eq!(pending, 0, "step {cur_step} incomplete");
+                        cur_step = entry.step;
+                    }
+                    let msg = Arc::try_unwrap(entry.payload)
+                        .unwrap_or_else(|_| panic!("layer msg must be exclusive"));
+                    work_tx.send((cur_step, msg)).expect("pool alive");
+                    pending += 1;
+                    if pending == n_tensors {
+                        // wait for all snapshot copies of this step
+                        for _ in 0..pending {
+                            let s = done_rx.recv().expect("pool alive");
+                            debug_assert_eq!(s, cur_step);
+                        }
+                        pending = 0;
+                        // CPU-side Adam update of the replica (§VI-B):
+                        // layer-wise application with the step's bias
+                        // correction fixed once the full gradient arrived
+                        let t0 = Instant::now();
+                        let mut r = rep.lock().unwrap();
+                        r.step += 1;
+                        let step_now = r.step;
+                        debug_assert_eq!(step_now, cur_step);
+                        for (idx, &(off, _len)) in tensors2.iter().enumerate() {
+                            let buf = staging2[idx].lock().unwrap();
+                            cfg.adam.apply_range(&mut r, &buf, off, step_now);
+                        }
+                        let snapshot_state = if cur_step % cfg.persist_every == 0 {
+                            Some(r.clone())
+                        } else {
+                            None
+                        };
+                        drop(r);
+                        {
+                            let mut s = st.lock().unwrap();
+                            s.cpu_update_secs += t0.elapsed().as_secs_f64();
+                            s.inmem_ckpts += 1;
+                        }
+                        applied.store(cur_step, Ordering::Release);
+                        // asynchronous persistence of the replica (the
+                        // paper's fused full+diff batching, Fig. 8)
+                        if let Some(state) = snapshot_state {
+                            let t0 = Instant::now();
+                            match write_full(&state, cfg.model_sig, cfg.codec) {
+                                Ok(bytes) => {
+                                    let name = Manifest::full_name(state.step);
+                                    if store.put(&name, &bytes).is_ok() {
+                                        let mut s = st.lock().unwrap();
+                                        s.persisted += 1;
+                                        s.bytes_written += bytes.len() as u64;
+                                        s.write_secs += t0.elapsed().as_secs_f64();
+                                    }
+                                    let _ = Manifest::gc(store.as_ref());
+                                }
+                                Err(e) => log::error!("persist replica: {e:#}"),
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("assembler thread");
+
+        LowDiffPlus {
+            queue,
+            replica,
+            stats,
+            applied_step,
+            discard,
+            assembler: Some(assembler),
+            snapshot_pool,
+        }
+    }
+
+    /// Enqueue every layer of a step's gradient, zero-copy (Alg. 2 line 16).
+    /// Returns the total time blocked on the queue (transmission stall).
+    pub fn put_step(&self, step: u64, grad: Arc<Flat>, layout: &Layout) -> std::time::Duration {
+        let mut blocked = std::time::Duration::ZERO;
+        // reverse layer order — gradients are produced back-to-front in the
+        // backward pass (Fig. 7)
+        for idx in (0..layout.n_tensors()).rev() {
+            blocked += self
+                .queue
+                .put(step, Arc::new(LayerMsg { grad: Arc::clone(&grad), tensor_idx: idx }));
+        }
+        blocked
+    }
+
+    /// Last step fully reflected in the CPU replica.
+    pub fn applied_step(&self) -> u64 {
+        self.applied_step.load(Ordering::Acquire)
+    }
+
+    /// Block until the replica has caught up to `step`.
+    pub fn wait_applied(&self, step: u64) {
+        while self.applied_step() < step {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    /// Clone of the in-memory checkpoint (software-failure recovery path —
+    /// near-instant compared to reloading from storage).
+    pub fn replica(&self) -> ModelState {
+        self.replica.lock().unwrap().clone()
+    }
+
+    pub fn stats(&self) -> PlusStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Simulate a *hardware* failure: the checkpointing process dies too;
+    /// in-flight work is discarded (only persisted checkpoints survive).
+    pub fn abort(mut self) -> PlusStats {
+        self.discard.store(true, Ordering::Relaxed);
+        self.shutdown();
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Graceful finish: drain, apply everything, stop.
+    pub fn finish(mut self) -> PlusStats {
+        self.shutdown();
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn shutdown(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.assembler.take() {
+            let _ = h.join();
+        }
+        // assembler drops work_tx on exit, stopping the pool
+        for h in self.snapshot_pool.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LowDiffPlus {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::model_signature;
+    use crate::checkpoint::full::read_full;
+    use crate::storage::MemStore;
+    use crate::util::rng::Rng;
+
+    fn tiny_layout(n_tensors: usize, per: usize) -> Layout {
+        Layout {
+            model: "t".into(),
+            n_params: n_tensors * per,
+            vocab: 16,
+            seq_len: 8,
+            batch: 1,
+            rho: 0.01,
+            k: 1,
+            lr: 1e-3,
+            tensors: (0..n_tensors)
+                .map(|i| crate::model::TensorSpec {
+                    name: format!("l{i}"),
+                    offset: i * per,
+                    len: per,
+                })
+                .collect(),
+        }
+    }
+
+    fn cfg(sig: u64, persist_every: u64) -> PlusConfig {
+        PlusConfig {
+            model_sig: sig,
+            persist_every,
+            codec: PayloadCodec::Raw,
+            queue_capacity: 16,
+            snapshot_threads: 2,
+            adam: Adam::default(),
+        }
+    }
+
+    #[test]
+    fn replica_tracks_training_exactly() {
+        let layout = tiny_layout(4, 25);
+        let n = layout.n_params;
+        let sig = model_signature("t", n);
+        let mut rng = Rng::new(1);
+        let mut p = vec![0f32; n];
+        rng.fill_normal_f32(&mut p);
+        let state0 = ModelState::new(Flat(p));
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let plus = LowDiffPlus::spawn(&layout, state0.clone(), Arc::clone(&store), cfg(sig, 100));
+
+        // "GPU" training loop with the same Adam
+        let adam = Adam::default();
+        let mut gpu = state0;
+        for step in 1..=6u64 {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            let g = Flat(g);
+            plus.put_step(step, Arc::new(g.clone()), &layout);
+            adam.apply(&mut gpu, &g);
+        }
+        plus.wait_applied(6);
+        let replica = plus.replica();
+        assert_eq!(replica.step, 6);
+        assert!(
+            replica.params.max_abs_diff(&gpu.params) < 1e-6,
+            "replica drift {}",
+            replica.params.max_abs_diff(&gpu.params)
+        );
+        plus.finish();
+    }
+
+    #[test]
+    fn persistence_cadence_and_recovery() {
+        let layout = tiny_layout(3, 20);
+        let n = layout.n_params;
+        let sig = model_signature("t", n);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let plus = LowDiffPlus::spawn(
+            &layout,
+            ModelState::new(Flat(vec![0.1; n])),
+            Arc::clone(&store),
+            cfg(sig, 2),
+        );
+        let mut rng = Rng::new(2);
+        for step in 1..=5u64 {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            plus.put_step(step, Arc::new(Flat(g)), &layout);
+        }
+        plus.wait_applied(5);
+        let replica = plus.replica();
+        let stats = plus.finish();
+        assert_eq!(stats.inmem_ckpts, 5);
+        assert_eq!(stats.persisted, 2, "steps 2 and 4 persist (gc keeps latest)");
+        // latest persisted full is step 4 (gc removed step 2)
+        let names = store.list().unwrap();
+        assert_eq!(names, vec![Manifest::full_name(4)]);
+        let disk = read_full(&store.get(&names[0]).unwrap(), sig).unwrap();
+        assert_eq!(disk.step, 4);
+        assert_eq!(replica.step, 5);
+    }
+
+    #[test]
+    fn abort_discards_inflight() {
+        let layout = tiny_layout(2, 10);
+        let n = layout.n_params;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let plus = LowDiffPlus::spawn(
+            &layout,
+            ModelState::new(Flat::zeros(n)),
+            Arc::clone(&store),
+            cfg(1, 1000),
+        );
+        let mut rng = Rng::new(3);
+        for step in 1..=3u64 {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            plus.put_step(step, Arc::new(Flat(g)), &layout);
+        }
+        let stats = plus.abort();
+        assert_eq!(stats.persisted, 0);
+        assert!(store.list().unwrap().is_empty());
+    }
+
+    #[test]
+    fn layer_messages_share_one_allocation() {
+        let layout = tiny_layout(5, 8);
+        let grad = Arc::new(Flat(vec![1.0; layout.n_params]));
+        // 5 layer messages, 1 allocation: Arc strong count goes to 6
+        let msgs: Vec<LayerMsg> = (0..5)
+            .map(|i| LayerMsg { grad: Arc::clone(&grad), tensor_idx: i })
+            .collect();
+        assert_eq!(Arc::strong_count(&grad), 6);
+        drop(msgs);
+        assert_eq!(Arc::strong_count(&grad), 1);
+    }
+}

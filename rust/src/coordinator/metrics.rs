@@ -1,0 +1,129 @@
+//! Run-level metrics: where every second of the training run went.
+//!
+//! The paper's evaluation splits time into productive compute, checkpoint-
+//! induced stalls (compression stalls + transmission stalls, Fig. 2),
+//! recovery, and lost work. [`RunReport`] is the common output of the real
+//! engine ([`crate::coordinator::driver`]) and feeds the experiment tables.
+
+use crate::util::stats::Welford;
+
+/// Aggregate report of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub strategy: String,
+    pub model: String,
+    pub workers: usize,
+    /// productive iterations completed (post-recovery re-runs not counted)
+    pub iters: u64,
+    pub wall_secs: f64,
+    /// PJRT compute (fwd/bwd + update) on the training path
+    pub compute_secs: f64,
+    /// gradient synchronization (collective) time
+    pub sync_secs: f64,
+    /// checkpoint-induced stalls on the training path
+    /// (snapshot copies, differential compression, sync writes)
+    pub stall_secs: f64,
+    /// transmission stall: time blocked on a full reusing queue
+    pub queue_blocked_secs: f64,
+    /// (step, loss) samples
+    pub losses: Vec<(u64, f32)>,
+    pub full_ckpts: u64,
+    pub diff_ckpts: u64,
+    /// storage objects written / bytes (from the checkpointer thread)
+    pub writes: u64,
+    pub bytes_written: u64,
+    /// peak bytes pending in the CPU batch buffer
+    pub peak_buffered_bytes: usize,
+    pub recoveries: u64,
+    pub recovery_secs: f64,
+    /// iterations lost to failures and re-run
+    pub lost_iters: u64,
+    /// per-iteration wall time distribution
+    pub iter_times: Welford,
+}
+
+impl RunReport {
+    pub fn new(strategy: &str, model: &str, workers: usize) -> RunReport {
+        RunReport {
+            strategy: strategy.to_string(),
+            model: model.to_string(),
+            workers,
+            ..Default::default()
+        }
+    }
+
+    /// Checkpointing overhead relative to pure compute+sync (the paper's
+    /// "runtime overhead" — LowDiff claims <3.1%).
+    pub fn overhead_ratio(&self) -> f64 {
+        let base = self.compute_secs + self.sync_secs;
+        if base == 0.0 {
+            0.0
+        } else {
+            (self.stall_secs + self.queue_blocked_secs) / base
+        }
+    }
+
+    /// Effective training time ratio (Gemini's metric, Exp. 9/10).
+    pub fn effective_ratio(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            return 1.0;
+        }
+        (self.compute_secs + self.sync_secs) / self.wall_secs
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.losses.last().map(|(_, l)| *l)
+    }
+
+    /// One-line table row used by examples and the bench harness.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<12} iters={:<5} wall={:>8.2}s compute={:>7.2}s stall={:>6.2}s qblk={:>6.2}s \
+             overhead={:>5.1}% full={} diff={} writes={} bytes={} rec={} loss={}",
+            self.strategy,
+            self.iters,
+            self.wall_secs,
+            self.compute_secs,
+            self.stall_secs,
+            self.queue_blocked_secs,
+            self.overhead_ratio() * 100.0,
+            self.full_ckpts,
+            self.diff_ckpts,
+            self.writes,
+            crate::util::human_bytes(self.bytes_written),
+            self.recoveries,
+            self.final_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_ratio_zero_base() {
+        let r = RunReport::new("x", "m", 1);
+        assert_eq!(r.overhead_ratio(), 0.0);
+    }
+
+    #[test]
+    fn overhead_and_effective() {
+        let mut r = RunReport::new("x", "m", 1);
+        r.compute_secs = 90.0;
+        r.sync_secs = 5.0;
+        r.stall_secs = 4.0;
+        r.queue_blocked_secs = 1.0;
+        r.wall_secs = 100.0;
+        assert!((r.overhead_ratio() - 5.0 / 95.0).abs() < 1e-12);
+        assert!((r.effective_ratio() - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_formats() {
+        let mut r = RunReport::new("lowdiff", "tiny", 2);
+        r.losses.push((10, 1.5));
+        assert!(r.row().contains("lowdiff"));
+        assert!(r.row().contains("1.500"));
+    }
+}

@@ -1,0 +1,29 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! - [`reusing_queue`]: the zero-copy FIFO between training and
+//!   checkpointing (§V-A).
+//! - [`checkpointer`]: the checkpointing process — offload, batch, persist
+//!   (§V-A/B, Fig. 6).
+//! - [`lowdiff_plus`]: layer-wise reuse + CPU replica + async persistence
+//!   (§VI).
+//! - [`config_opt`]: Eq. (8)–(10) wasted-time model and the (FCF, BS) tuner
+//!   (§V-C, Table I).
+//! - [`recovery`]: serial replay and parallel (log n) merge recovery
+//!   (Alg. 1, Fig. 10).
+//! - [`failure`]: MTBF failure injection + wasted-time ledger (Exp. 3/9).
+//! - [`driver`]: the real-engine training loop running every strategy
+//!   (LowDiff, LowDiff+, Naive DC, CheckFreq, Gemini, torch.save) over
+//!   actual PJRT compute and storage.
+//! - [`metrics`]: the per-run time ledger.
+
+pub mod checkpointer;
+pub mod config_opt;
+pub mod driver;
+pub mod failure;
+pub mod lowdiff_plus;
+pub mod metrics;
+pub mod recovery;
+pub mod reusing_queue;
+
+pub use driver::{train, Corpus, StrategyKind, TrainConfig};
+pub use metrics::RunReport;

@@ -1,0 +1,326 @@
+//! Failure recovery (paper Alg. 1 lines 13-19, §VII-A parallel recovery).
+//!
+//! Load the newest full checkpoint, then fold in every subsequent
+//! differential:
+//! - **Serial replay**: apply diffs in step order. For LowDiff gradient
+//!   diffs each application is one Adam step (Eq. (7)) — exact
+//!   reconstruction. n diffs → n merges.
+//! - **Parallel merge** (Fig. 10): combine diffs pairwise in log₂(n)
+//!   rounds, then apply the combined result to the full checkpoint. For
+//!   Naive DC state deltas the combine is addition — *exact*. For LowDiff
+//!   gradient diffs the combine sums gradients, collapsing several Adam
+//!   steps into one — the paper's batched/parallel approximation; the
+//!   drift bound is measured in rust/tests/recovery_equivalence.rs.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::batched::read_batched;
+use crate::checkpoint::diff::{read_diff, DiffPayload};
+use crate::checkpoint::format::{CkptKind, Container};
+use crate::checkpoint::full::read_full;
+use crate::checkpoint::manifest::Manifest;
+use crate::optim::{Adam, ModelState};
+use crate::sparse::SparseGrad;
+use crate::storage::StorageBackend;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryMode {
+    SerialReplay,
+    ParallelMerge,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    pub n_diff_objects: usize,
+    pub n_diff_steps: usize,
+    /// merge operations applied against the full checkpoint (the Fig. 10
+    /// metric: n for serial, ~log2(n) rounds for parallel)
+    pub full_merge_rounds: usize,
+    pub wall_secs: f64,
+    pub recovered_step: u64,
+}
+
+/// All (step, payload) diffs after `base_step`, in step order.
+fn load_diffs(
+    store: &dyn StorageBackend,
+    model_sig: u64,
+    chain: &crate::checkpoint::manifest::Chain,
+) -> Result<Vec<(u64, DiffPayload)>> {
+    let mut out = Vec::new();
+    for (_, _, name) in &chain.diffs {
+        let bytes = store.get(name)?;
+        // batched containers hold several steps; plain diffs one
+        let c = Container::from_bytes(&bytes)?;
+        match c.kind {
+            CkptKind::Diff => {
+                let (step, payload) = read_diff(&bytes, model_sig)?;
+                out.push((step, payload));
+            }
+            CkptKind::BatchedDiff => {
+                for (step, grad) in read_batched(&bytes, model_sig)? {
+                    out.push((step, DiffPayload::Gradient(grad)));
+                }
+            }
+            CkptKind::Full => bail!("full checkpoint {name} in diff chain"),
+        }
+    }
+    out.sort_by_key(|(s, _)| *s);
+    Ok(out)
+}
+
+/// Recover the newest reconstructable state from a checkpoint store.
+pub fn recover(
+    store: &dyn StorageBackend,
+    model_sig: u64,
+    adam: &Adam,
+    mode: RecoveryMode,
+) -> Result<(ModelState, RecoveryStats)> {
+    let start = Instant::now();
+    let chain = Manifest::latest_chain(store)?;
+    let (base_step, full_name) = chain
+        .full
+        .clone()
+        .context("no full checkpoint found — nothing to recover from")?;
+    let mut state = read_full(&store.get(&full_name)?, model_sig)?;
+    debug_assert_eq!(state.step, base_step);
+
+    let diffs = load_diffs(store, model_sig, &chain)?;
+    let mut stats = RecoveryStats {
+        n_diff_objects: chain.diffs.len(),
+        n_diff_steps: diffs.len(),
+        ..Default::default()
+    };
+
+    match mode {
+        RecoveryMode::SerialReplay => {
+            for (step, payload) in &diffs {
+                apply_one(adam, &mut state, payload);
+                debug_assert_eq!(state.step, *step);
+                stats.full_merge_rounds += 1;
+            }
+        }
+        RecoveryMode::ParallelMerge => {
+            // split by payload kind (chains are homogeneous in practice)
+            let mut grads: Vec<SparseGrad> = Vec::new();
+            let mut deltas: Vec<SparseGrad> = Vec::new();
+            let mut last_step = state.step;
+            for (step, payload) in &diffs {
+                last_step = *step;
+                match payload {
+                    DiffPayload::Gradient(g) => grads.push(g.clone()),
+                    DiffPayload::StateDelta(d) => deltas.push(d.clone()),
+                }
+            }
+            if !grads.is_empty() {
+                let (combined, rounds) = pairwise_merge(grads);
+                // one Adam application of the summed gradient (approximate
+                // collapse of k steps — see module docs)
+                adam.apply_sparse(&mut state, &combined);
+                state.step = last_step;
+                stats.full_merge_rounds = rounds + 1;
+            }
+            if !deltas.is_empty() {
+                let (combined, rounds) = pairwise_merge(deltas);
+                // state delta over (params, m, v) concatenated — exact
+                apply_state_delta(&mut state, &combined);
+                state.step = last_step;
+                stats.full_merge_rounds += rounds + 1;
+            }
+        }
+    }
+    stats.recovered_step = state.step;
+    stats.wall_secs = start.elapsed().as_secs_f64();
+    Ok((state, stats))
+}
+
+fn apply_one(adam: &Adam, state: &mut ModelState, payload: &DiffPayload) {
+    match payload {
+        DiffPayload::Gradient(g) => adam.apply_sparse(state, g),
+        DiffPayload::StateDelta(d) => {
+            apply_state_delta(state, d);
+            state.step += 1;
+        }
+    }
+}
+
+/// A Naive-DC state delta spans the concatenated (params | m | v) vector.
+fn apply_state_delta(state: &mut ModelState, delta: &SparseGrad) {
+    let n = state.n_params();
+    assert_eq!(delta.dense_len as usize, 3 * n, "state delta must cover 3Ψ");
+    for (&i, &v) in delta.indices.iter().zip(delta.values.iter()) {
+        let i = i as usize;
+        if i < n {
+            state.params.0[i] += v;
+        } else if i < 2 * n {
+            state.m.0[i - n] += v;
+        } else {
+            state.v.0[i - 2 * n] += v;
+        }
+    }
+}
+
+/// Pairwise (tournament) merge — Fig. 10's structure. Returns the combined
+/// gradient and the number of *rounds* (the critical-path merge count).
+pub fn pairwise_merge(mut items: Vec<SparseGrad>) -> (SparseGrad, usize) {
+    assert!(!items.is_empty());
+    let mut rounds = 0;
+    while items.len() > 1 {
+        rounds += 1;
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(a.merge_sum(&b)),
+                None => next.push(a),
+            }
+        }
+        items = next;
+    }
+    (items.pop().unwrap(), rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::diff::write_diff;
+    use crate::checkpoint::format::{model_signature, PayloadCodec};
+    use crate::checkpoint::full::write_full;
+    use crate::compress::topk_mask;
+    use crate::storage::MemStore;
+    use crate::tensor::Flat;
+    use crate::util::rng::Rng;
+
+    fn dense_grad(rng: &mut Rng, n: usize, k: usize) -> Flat {
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        topk_mask(&Flat(g), k)
+    }
+
+    /// Build a store with a full ckpt at step `base` plus `n_diffs`
+    /// gradient diffs; return (store, sig, expected final state).
+    fn build_gradient_chain(n: usize, n_diffs: usize) -> (MemStore, u64, ModelState) {
+        let sig = model_signature("t", n);
+        let mut rng = Rng::new(5);
+        let mut p = vec![0f32; n];
+        rng.fill_normal_f32(&mut p);
+        let mut state = ModelState::new(Flat(p));
+        let adam = Adam::default();
+        let store = MemStore::new();
+        store
+            .put(&Manifest::full_name(0), &write_full(&state, sig, PayloadCodec::Raw).unwrap())
+            .unwrap();
+        for _ in 0..n_diffs {
+            let g = dense_grad(&mut rng, n, n / 10 + 1);
+            let sparse = SparseGrad::from_dense(&g);
+            adam.apply_sparse(&mut state, &sparse);
+            store
+                .put(
+                    &Manifest::diff_name(state.step),
+                    &write_diff(&DiffPayload::Gradient(sparse), sig, state.step, PayloadCodec::Raw)
+                        .unwrap(),
+                )
+                .unwrap();
+        }
+        (store, sig, state)
+    }
+
+    #[test]
+    fn serial_replay_is_exact() {
+        let (store, sig, want) = build_gradient_chain(200, 6);
+        let (got, stats) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.n_diff_steps, 6);
+        assert_eq!(stats.full_merge_rounds, 6);
+        assert_eq!(stats.recovered_step, 6);
+    }
+
+    #[test]
+    fn parallel_merge_log_rounds_and_bounded_drift() {
+        let (store, sig, want) = build_gradient_chain(200, 8);
+        let (got, stats) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::ParallelMerge).unwrap();
+        // Fig. 10: 8 diffs -> 3 pairwise rounds + 1 full merge
+        assert_eq!(stats.full_merge_rounds, 4);
+        assert_eq!(got.step, want.step);
+        // approximate: parameters close but not exact (Adam non-linearity)
+        let drift = got.params.max_abs_diff(&want.params);
+        assert!(drift > 0.0, "sum-collapse should differ from exact replay");
+        assert!(drift < 0.05, "drift {drift} too large");
+    }
+
+    #[test]
+    fn state_delta_parallel_recovery_is_exact() {
+        // Naive DC: deltas are linear, parallel == serial exactly
+        let n = 120;
+        let sig = model_signature("d", n);
+        let mut rng = Rng::new(8);
+        let mut p = vec![0f32; n];
+        rng.fill_normal_f32(&mut p);
+        let state0 = ModelState::new(Flat(p));
+        let store = MemStore::new();
+        store
+            .put(&Manifest::full_name(0), &write_full(&state0, sig, PayloadCodec::Raw).unwrap())
+            .unwrap();
+        let mut want = state0.clone();
+        for step in 1..=5u64 {
+            // random sparse delta over 3Ψ
+            let mut d = vec![0f32; 3 * n];
+            for x in d.iter_mut() {
+                if rng.next_f64() < 0.1 {
+                    *x = rng.normal() as f32;
+                }
+            }
+            let delta = SparseGrad::from_dense(&Flat(d));
+            apply_state_delta(&mut want, &delta);
+            want.step += 1;
+            store
+                .put(
+                    &Manifest::diff_name(step),
+                    &write_diff(&DiffPayload::StateDelta(delta), sig, step, PayloadCodec::Raw)
+                        .unwrap(),
+                )
+                .unwrap();
+        }
+        let (serial, _) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap();
+        let (parallel, _) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::ParallelMerge).unwrap();
+        assert_eq!(serial, want);
+        // parallel combine reorders f32 additions: equal up to associativity
+        assert_eq!(parallel.step, want.step);
+        assert!(parallel.params.max_abs_diff(&want.params) < 1e-5);
+        assert!(parallel.m.max_abs_diff(&want.m) < 1e-5);
+        assert!(parallel.v.max_abs_diff(&want.v) < 1e-5);
+    }
+
+    #[test]
+    fn recovery_without_full_fails_clearly() {
+        let store = MemStore::new();
+        let err = recover(&store, 1, &Adam::default(), RecoveryMode::SerialReplay)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no full checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn pairwise_merge_rounds_are_log2() {
+        let g = SparseGrad { dense_len: 4, indices: vec![0], values: vec![1.0] };
+        for (n, want) in [(1, 0), (2, 1), (3, 2), (5, 3), (8, 3), (9, 4), (16, 4)] {
+            let (_, rounds) = pairwise_merge(vec![g.clone(); n]);
+            assert_eq!(rounds, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pairwise_merge_sums_all() {
+        let items: Vec<SparseGrad> = (0..7)
+            .map(|i| SparseGrad { dense_len: 8, indices: vec![i], values: vec![1.0] })
+            .collect();
+        let (merged, _) = pairwise_merge(items);
+        assert_eq!(merged.nnz(), 7);
+        assert!(merged.values.iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,243 @@
+//! The Reusing Queue (paper §V-A): the FIFO channel through which the
+//! training process hands *compressed gradients* to the checkpointing
+//! process for reuse as differential checkpoints.
+//!
+//! Requirements from the paper:
+//! - **R1 sequential order**: FIFO delivery so differentials apply in step
+//!   order (Eq. (6)); enforced here with monotonically increasing sequence
+//!   numbers checked on both ends.
+//! - **R2 cheap transmission**: the CUDA-IPC zero-copy of the paper becomes
+//!   `Arc` handle passing (DESIGN.md §7) — enqueue cost is O(1) in the
+//!   gradient size; the payload is never copied.
+//!
+//! The queue is bounded: when the checkpointer falls behind, `put` blocks —
+//! this IS the paper's *transmission stall* (Challenge 2), surfaced as
+//! measurable backpressure instead of hidden buffering. `put_nowait`
+//! reports would-block for strategies that prefer dropping frequency.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queue entry: the training step that produced the gradient plus the
+/// shared payload handle.
+#[derive(Clone, Debug)]
+pub struct Entry<T> {
+    pub step: u64,
+    pub payload: Arc<T>,
+}
+
+struct Inner<T> {
+    queue: VecDeque<Entry<T>>,
+    closed: bool,
+    last_put_step: u64,
+    last_got_step: u64,
+    /// total time producers spent blocked on a full queue
+    put_blocked: Duration,
+}
+
+/// Bounded MPSC FIFO with step-order enforcement.
+pub struct ReusingQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> ReusingQueue<T> {
+    pub fn new(capacity: usize) -> Arc<ReusingQueue<T>> {
+        assert!(capacity >= 1);
+        Arc::new(ReusingQueue {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::with_capacity(capacity),
+                closed: false,
+                last_put_step: 0,
+                last_got_step: 0,
+                put_blocked: Duration::ZERO,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        })
+    }
+
+    /// Blocking enqueue. Panics on out-of-order steps (R1) or a closed
+    /// queue. Returns how long the call blocked (the transmission stall).
+    pub fn put(&self, step: u64, payload: Arc<T>) -> Duration {
+        let start = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "put on closed queue");
+        assert!(step >= g.last_put_step, "out-of-order put: {step} after {}", g.last_put_step);
+        while g.queue.len() >= self.capacity {
+            g = self.not_full.wait(g).unwrap();
+            assert!(!g.closed, "queue closed while blocked in put");
+        }
+        let blocked = start.elapsed();
+        g.put_blocked += blocked;
+        g.last_put_step = step;
+        g.queue.push_back(Entry { step, payload });
+        drop(g);
+        self.not_empty.notify_one();
+        blocked
+    }
+
+    /// Non-blocking enqueue; Err(payload) if the queue is full.
+    pub fn put_nowait(&self, step: u64, payload: Arc<T>) -> Result<(), Arc<T>> {
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "put on closed queue");
+        if g.queue.len() >= self.capacity {
+            return Err(payload);
+        }
+        assert!(step >= g.last_put_step, "out-of-order put: {step} after {}", g.last_put_step);
+        g.last_put_step = step;
+        g.queue.push_back(Entry { step, payload });
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue; None once the queue is closed AND drained.
+    pub fn get(&self) -> Option<Entry<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(e) = g.queue.pop_front() {
+                debug_assert!(e.step >= g.last_got_step, "FIFO order violated");
+                g.last_got_step = e.step;
+                drop(g);
+                self.not_full.notify_one();
+                return Some(e);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the producer side; consumers drain then see None.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cumulative producer backpressure (the measured transmission stall).
+    pub fn total_put_blocked(&self) -> Duration {
+        self.inner.lock().unwrap().put_blocked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Flat;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = ReusingQueue::new(16);
+        for s in 1..=10u64 {
+            q.put(s, Arc::new(s));
+        }
+        q.close();
+        let mut got = Vec::new();
+        while let Some(e) = q.get() {
+            got.push(e.step);
+        }
+        assert_eq!(got, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_copy_same_allocation() {
+        // R2: the consumer sees the exact same allocation, no copy
+        let q = ReusingQueue::new(4);
+        let payload = Arc::new(Flat(vec![1.0; 1000]));
+        let ptr = payload.0.as_ptr();
+        q.put(1, payload);
+        let got = q.get().unwrap();
+        assert!(std::ptr::eq(ptr, got.payload.0.as_ptr()));
+    }
+
+    #[test]
+    fn bounded_put_blocks_until_get() {
+        let q = ReusingQueue::new(1);
+        q.put(1, Arc::new(0u64));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.put(2, Arc::new(0u64)));
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(q.len(), 1); // producer still blocked
+        let _ = q.get().unwrap();
+        h.join().unwrap();
+        assert!(q.total_put_blocked() >= Duration::from_millis(40));
+        assert_eq!(q.get().unwrap().step, 2);
+    }
+
+    #[test]
+    fn put_nowait_reports_full() {
+        let q = ReusingQueue::new(1);
+        assert!(q.put_nowait(1, Arc::new(())).is_ok());
+        assert!(q.put_nowait(2, Arc::new(())).is_err());
+        let _ = q.get();
+        assert!(q.put_nowait(2, Arc::new(())).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = ReusingQueue::new(8);
+        q.put(1, Arc::new(()));
+        q.put(2, Arc::new(()));
+        q.close();
+        assert!(q.get().is_some());
+        assert!(q.get().is_some());
+        assert!(q.get().is_none());
+        assert!(q.get().is_none());
+    }
+
+    #[test]
+    fn consumer_wakes_on_close() {
+        let q: Arc<ReusingQueue<()>> = ReusingQueue::new(1);
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.get());
+        thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order")]
+    fn rejects_step_regression() {
+        let q = ReusingQueue::new(4);
+        q.put(5, Arc::new(()));
+        q.put(4, Arc::new(()));
+    }
+
+    #[test]
+    fn producer_consumer_threads_full_stream() {
+        let q = ReusingQueue::new(4);
+        let qp = Arc::clone(&q);
+        let producer = thread::spawn(move || {
+            for s in 1..=500u64 {
+                qp.put(s, Arc::new(Flat(vec![s as f32; 10])));
+            }
+            qp.close();
+        });
+        let mut expected = 1u64;
+        while let Some(e) = q.get() {
+            assert_eq!(e.step, expected);
+            assert_eq!(e.payload.0[0], expected as f32);
+            expected += 1;
+        }
+        assert_eq!(expected, 501);
+        producer.join().unwrap();
+    }
+}

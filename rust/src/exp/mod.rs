@@ -1,0 +1,521 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§VIII) — see DESIGN.md §9 for the experiment index.
+//!
+//! Simulated experiments (paper-scale hardware) run on [`crate::sim`];
+//! real-path experiments (Exp. 5/6/7 and the E2E run) exercise the actual
+//! checkpoint/recovery code over real storage. Each function returns a
+//! [`Table`] that prints in the same rows/series the paper reports.
+
+use crate::coordinator::config_opt::{wasted_time, SystemParams};
+use crate::coordinator::driver::StrategyKind;
+use crate::model::{zoo, ZooModel};
+use crate::sim::{calib, max_frequency_within, simulate, SimConfig};
+use crate::simnet::{A100, V100};
+
+/// A printable experiment result table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out += &fmt_row(&self.headers, &widths);
+        out += "\n";
+        out += &"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1));
+        out += "\n";
+        for row in &self.rows {
+            out += &fmt_row(row, &widths);
+            out += "\n";
+        }
+        out
+    }
+}
+
+const STRATS: [StrategyKind; 5] = [
+    StrategyKind::None,
+    StrategyKind::NaiveDc,
+    StrategyKind::CheckFreq,
+    StrategyKind::Gemini,
+    StrategyKind::LowDiff,
+];
+
+fn paper_models() -> Vec<ZooModel> {
+    vec![zoo::RESNET101, zoo::VGG19, zoo::BERT_B, zoo::BERT_L, zoo::GPT2_S, zoo::GPT2_L]
+}
+
+fn cfg_for(model: ZooModel, s: StrategyKind) -> SimConfig {
+    let mut c = SimConfig::new(model, s);
+    match s {
+        // per-iteration frequency for the frequent-checkpointing systems
+        StrategyKind::Gemini => c.full_every = 100,
+        StrategyKind::CheckFreq => c.full_every = 1, // forced per-iteration (Exp. 1 setting)
+        StrategyKind::NaiveDc => {
+            c.diff_every = 1;
+            c.full_every = 100;
+        }
+        StrategyKind::LowDiff | StrategyKind::LowDiffPlus => {
+            c.diff_every = 1;
+            c.full_every = 100;
+        }
+        _ => {}
+    }
+    c
+}
+
+/// Fig. 1: impact of Naive DC compression/transmission frequency on GPT2-L.
+pub fn fig1() -> Table {
+    let mut t = Table::new(
+        "Fig. 1 — DC compression & transmission frequency impact (GPT2-L, 1000 iters)",
+        &["freq (iters)", "compress slowdown %", "transmit slowdown %"],
+    );
+    let base = simulate(&SimConfig::new(zoo::GPT2_L, StrategyKind::None)).total_time;
+    for freq in [8u64, 4, 2, 1] {
+        // compression-only cost
+        let mut c = SimConfig::new(zoo::GPT2_L, StrategyKind::NaiveDc);
+        c.diff_every = freq;
+        c.full_every = u64::MAX / 2;
+        let full = simulate(&c).total_time;
+        // transmission share: same run minus the modeled compression stalls
+        let compress_stall = (1000 / freq) as f64
+            * calib::COMPRESS_SEC_PER_ELEM
+            * (3 * zoo::GPT2_L.params) as f64;
+        let comp_pct = compress_stall / base * 100.0;
+        let trans_pct = (full - base - compress_stall) / base * 100.0;
+        t.row(vec![
+            freq.to_string(),
+            format!("{comp_pct:.1}"),
+            format!("{trans_pct:.1}"),
+        ]);
+    }
+    t
+}
+
+/// Fig. 4: iteration vs full-checkpoint vs differential-checkpoint time.
+pub fn fig4() -> Table {
+    let mut t = Table::new(
+        "Fig. 4 — iteration / full ckpt / DC time (s, A100 model)",
+        &["model", "iteration", "full ckpt", "diff ckpt", "DC/iter %"],
+    );
+    for m in [zoo::BERT_B, zoo::BERT_L, zoo::GPT2_S, zoo::GPT2_L] {
+        let full_b = calib::full_bytes(&m);
+        let diff_b = calib::lowdiff_diff_bytes(&m, 0.01);
+        let full_t = A100.pcie_time(full_b) + A100.ssd_write_time(full_b);
+        let diff_t = A100.pcie_time(diff_b) + A100.ssd_write_time(diff_b);
+        t.row(vec![
+            m.name.to_string(),
+            format!("{:.2}", m.iter_time_a100),
+            format!("{full_t:.2}"),
+            format!("{diff_t:.3}"),
+            format!("{:.1}", diff_t / m.iter_time_a100 * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Table I: normalized wasted time over the (FCF, BS) grid.
+///
+/// The paper's Table I is an *accelerated stress measurement* (its optimum
+/// sits at FCF = 20 iterations — physically meaningful only under very
+/// frequent failures). We reproduce it with the stress parameters that
+/// Eq. (10) maps to that optimum (MTBF 25 s, R_D 0.285 s), which is the
+/// inverse calibration of the published normalized grid.
+pub fn table1() -> Table {
+    let full = calib::full_bytes(&zoo::GPT2_S) as f64;
+    let p = SystemParams {
+        n_gpus: 8.0,
+        mtbf: 25.0,
+        write_bw: A100.ssd_bw,
+        full_size: full,
+        total_time: 3600.0,
+        r_full: full / A100.ssd_bw,
+        r_diff: 0.285,
+    };
+    let iter_t = zoo::GPT2_S.iter_time_a100;
+    let fcfs = [10u64, 20, 50, 100];
+    let bss = [1u64, 2, 3, 4, 5, 6];
+    let mut grid = Vec::new();
+    let mut min = f64::INFINITY;
+    for &fcf in &fcfs {
+        let mut row = Vec::new();
+        for &bs in &bss {
+            let f = 1.0 / (fcf as f64 * iter_t);
+            let w = wasted_time(&p, f, bs as f64);
+            min = min.min(w);
+            row.push(w);
+        }
+        grid.push(row);
+    }
+    let mut t = Table::new(
+        "Table I — normalized wasted time, FCF x BS (GPT2-S, stress failures)",
+        &["FCF\\BS", "1", "2", "3", "4", "5", "6"],
+    );
+    for (i, &fcf) in fcfs.iter().enumerate() {
+        let mut cells = vec![fcf.to_string()];
+        cells.extend(grid[i].iter().map(|w| format!("{:.3}", w / min)));
+        t.row(cells);
+    }
+    t
+}
+
+/// Exp. 1 (Fig. 11): training time, per-iteration checkpointing.
+pub fn exp1() -> Table {
+    let mut t = Table::new(
+        "Exp. 1 (Fig. 11) — training time, 1000 iters, per-iteration ckpt (s)",
+        &["model", "wo-ckpt", "naive-dc", "checkfreq", "gemini", "lowdiff", "lowdiff ovh %"],
+    );
+    for m in paper_models() {
+        let times: Vec<f64> = STRATS
+            .iter()
+            .map(|&s| simulate(&cfg_for(m, s)).total_time)
+            .collect();
+        let ovh = (times[4] - times[0]) / times[0] * 100.0;
+        let mut cells = vec![m.name.to_string()];
+        cells.extend(times.iter().map(|x| format!("{x:.0}")));
+        cells.push(format!("{ovh:.1}"));
+        t.row(cells);
+    }
+    t
+}
+
+/// Exp. 2 (Fig. 12): LowDiff+ training time (no compression).
+pub fn exp2() -> Table {
+    let mut t = Table::new(
+        "Exp. 2 (Fig. 12) — training time without compression (s)",
+        &["model", "wo-ckpt", "checkfreq", "gemini", "lowdiff+", "lowdiff+ ovh %"],
+    );
+    for m in paper_models() {
+        let wo = simulate(&cfg_for(m, StrategyKind::None)).total_time;
+        let cf = simulate(&cfg_for(m, StrategyKind::CheckFreq)).total_time;
+        let gm = simulate(&cfg_for(m, StrategyKind::Gemini)).total_time;
+        let lp = simulate(&cfg_for(m, StrategyKind::LowDiffPlus)).total_time;
+        t.row(vec![
+            m.name.to_string(),
+            format!("{wo:.0}"),
+            format!("{cf:.0}"),
+            format!("{gm:.0}"),
+            format!("{lp:.0}"),
+            format!("{:.1}", (lp - wo) / wo * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Exp. 3 (Fig. 13): wasted time under MTBF ∈ {0.5, 1, 2} h (GPT2-S).
+pub fn exp3() -> Table {
+    let mut t = Table::new(
+        "Exp. 3 (Fig. 13) — wasted time vs MTBF (GPT2-S, hours of waste)",
+        &["mtbf (h)", "naive-dc", "checkfreq", "gemini", "lowdiff", "lowdiff+(S)", "lowdiff+(P)"],
+    );
+    for mtbf_h in [0.5f64, 1.0, 2.0] {
+        let run = |s: StrategyKind, p_soft: f64| -> f64 {
+            let mut c = cfg_for(zoo::GPT2_S, s);
+            c.iters = 50_000;
+            c.mtbf_secs = Some(mtbf_h * 3600.0);
+            c.p_software = p_soft;
+            if s == StrategyKind::LowDiff {
+                // paper: LowDiff tunes (FCF, BS) via Eq. (10)
+                let p = SystemParams {
+                    n_gpus: 8.0,
+                    mtbf: mtbf_h * 3600.0,
+                    write_bw: A100.ssd_bw,
+                    full_size: calib::full_bytes(&zoo::GPT2_S) as f64,
+                    total_time: c.iters as f64 * zoo::GPT2_S.iter_time_a100,
+                    r_full: calib::full_bytes(&zoo::GPT2_S) as f64 / A100.ssd_bw,
+                    r_diff: calib::MERGE_ALPHA,
+                };
+                let (fcf, bs) = crate::coordinator::config_opt::optimal_config_integer(
+                    &p,
+                    zoo::GPT2_S.iter_time_a100,
+                );
+                c.full_every = fcf;
+                c.batch_size = bs as u64;
+            }
+            simulate(&c).wasted.total_wasted() / 3600.0
+        };
+        t.row(vec![
+            format!("{mtbf_h}"),
+            format!("{:.3}", run(StrategyKind::NaiveDc, 0.7)),
+            format!("{:.3}", run(StrategyKind::CheckFreq, 0.7)),
+            format!("{:.3}", run(StrategyKind::Gemini, 0.0)),
+            format!("{:.3}", run(StrategyKind::LowDiff, 0.7)),
+            format!("{:.3}", run(StrategyKind::LowDiffPlus, 1.0)),
+            format!("{:.3}", run(StrategyKind::LowDiffPlus, 0.0)),
+        ]);
+    }
+    t
+}
+
+/// Exp. 4 (Fig. 14): max checkpoint frequency within a 3.5% slowdown.
+pub fn exp4() -> Table {
+    let mut t = Table::new(
+        "Exp. 4 (Fig. 14) — smallest ckpt interval (iters) within 3.5% slowdown",
+        &["model", "naive-dc", "checkfreq", "gemini", "lowdiff", "lowdiff+(S)", "lowdiff+(P)"],
+    );
+    for m in [zoo::RESNET101, zoo::BERT_L, zoo::GPT2_S, zoo::GPT2_L] {
+        let f = |s: StrategyKind, full_mode: bool| {
+            let v = max_frequency_within(&SimConfig::new(m, s), 0.035, full_mode);
+            if v == u64::MAX { ">64".to_string() } else { v.to_string() }
+        };
+        // LowDiff+(S) = in-memory snapshot interval; (P) = persistence interval
+        let plus_s = f(StrategyKind::LowDiffPlus, false);
+        let plus_p = {
+            let mut c = SimConfig::new(m, StrategyKind::LowDiffPlus);
+            c.diff_every = 1;
+            let base = simulate(&SimConfig::new(m, StrategyKind::None)).total_time;
+            let mut ans = ">64".to_string();
+            for interval in 1..=64u64 {
+                c.full_every = interval;
+                let t = simulate(&c).total_time;
+                // persistence must also keep up with the SSD (sustained)
+                let ssd_ok = calib::full_bytes(&m) as f64 / A100.ssd_bw
+                    <= interval as f64 * m.iter_time_a100;
+                if (t - base) / base <= 0.035 && ssd_ok {
+                    ans = interval.to_string();
+                    break;
+                }
+            }
+            ans
+        };
+        t.row(vec![
+            m.name.to_string(),
+            f(StrategyKind::NaiveDc, false),
+            f(StrategyKind::CheckFreq, true),
+            f(StrategyKind::Gemini, false),
+            f(StrategyKind::LowDiff, false),
+            plus_s,
+            plus_p,
+        ]);
+    }
+    t
+}
+
+/// Exp. 8 (Fig. 17): compression ratio ρ vs max checkpoint frequency.
+pub fn exp8() -> Table {
+    let mut t = Table::new(
+        "Exp. 8 (Fig. 17) — max ckpt interval (iters) vs compression ratio",
+        &["rho", "GPT2-S", "GPT2-L"],
+    );
+    for rho in [0.001f64, 0.005, 0.01, 0.05, 0.075, 0.1] {
+        let f = |m: ZooModel| {
+            let mut c = SimConfig::new(m, StrategyKind::LowDiff);
+            c.rho = rho;
+            let v = max_frequency_within(&c, 0.035, false);
+            if v == u64::MAX { ">64".into() } else { v.to_string() }
+        };
+        t.row(vec![format!("{rho}"), f(zoo::GPT2_S), f(zoo::GPT2_L)]);
+    }
+    t
+}
+
+/// Exp. 9 (Fig. 18): effective training ratio under frequent failures (V100).
+pub fn exp9() -> Table {
+    let mut t = Table::new(
+        "Exp. 9 (Fig. 18) — effective training time ratio vs MTBF (V100, %)",
+        &["mtbf (h)", "torch-save", "checkfreq", "gemini", "lowdiff", "lowdiff+(S)", "lowdiff+(P)"],
+    );
+    for mtbf_h in [0.1f64, 0.3, 0.5, 1.0, 2.0, 5.0] {
+        let run = |s: StrategyKind, p_soft: f64| {
+            let mut c = cfg_for(zoo::GPT2_S, s);
+            c.hw = V100;
+            c.iters = 100_000;
+            c.mtbf_secs = Some(mtbf_h * 3600.0);
+            c.p_software = p_soft;
+            if s == StrategyKind::TorchSave {
+                c.full_every = 100;
+            }
+            format!("{:.1}", simulate(&c).wasted.effective_ratio() * 100.0)
+        };
+        t.row(vec![
+            format!("{mtbf_h}"),
+            run(StrategyKind::TorchSave, 0.7),
+            run(StrategyKind::CheckFreq, 0.7),
+            run(StrategyKind::Gemini, 0.0),
+            run(StrategyKind::LowDiff, 0.7),
+            run(StrategyKind::LowDiffPlus, 1.0),
+            run(StrategyKind::LowDiffPlus, 0.0),
+        ]);
+    }
+    t
+}
+
+/// Exp. 10 (Fig. 19): effective training ratio vs cluster size.
+pub fn exp10() -> Table {
+    let mut t = Table::new(
+        "Exp. 10 (Fig. 19) — effective training time ratio vs #GPUs (%)",
+        &["gpus", "torch-save", "checkfreq", "gemini", "lowdiff", "lowdiff+"],
+    );
+    for n_gpus in [8u32, 16, 32, 64] {
+        // failure rate scales with cluster size: MTBF_cluster = MTBF_node/N
+        let mtbf = 3600.0 * 24.0 / n_gpus as f64;
+        let run = |s: StrategyKind| {
+            let mut c = cfg_for(zoo::GPT2_S, s);
+            c.hw = V100;
+            c.n_gpus = n_gpus;
+            c.iters = 100_000;
+            c.mtbf_secs = Some(mtbf);
+            if s == StrategyKind::TorchSave {
+                c.full_every = 100;
+            }
+            format!("{:.1}", simulate(&c).wasted.effective_ratio() * 100.0)
+        };
+        t.row(vec![
+            n_gpus.to_string(),
+            run(StrategyKind::TorchSave),
+            run(StrategyKind::CheckFreq),
+            run(StrategyKind::Gemini),
+            run(StrategyKind::LowDiff),
+            run(StrategyKind::LowDiffPlus),
+        ]);
+    }
+    t
+}
+
+/// Exp. 7 (Table III): checkpoint storage bytes per strategy — computed
+/// from the real container encoders over synthetic states at zoo sizes is
+/// impractical at 762M params on this box, so sizes use the same byte
+/// formulas the real writers produce (validated against them in tests).
+pub fn exp7() -> Table {
+    let mut t = Table::new(
+        "Exp. 7 (Table III) — checkpoint storage overhead",
+        &["model", "full ckpt", "naive-dc diff", "lowdiff diff", "full/lowdiff"],
+    );
+    for m in paper_models() {
+        let full = calib::full_bytes(&m);
+        let dc = calib::naive_dc_diff_bytes(&m, 0.01);
+        let ld = calib::lowdiff_diff_bytes(&m, 0.01);
+        t.row(vec![
+            m.name.to_string(),
+            crate::util::human_bytes(full),
+            crate::util::human_bytes(dc),
+            crate::util::human_bytes(ld),
+            format!("{:.0}x", full as f64 / ld as f64),
+        ]);
+    }
+    t
+}
+
+/// All simulated experiments, in paper order.
+pub fn all_simulated() -> Vec<Table> {
+    vec![fig1(), fig4(), table1(), exp1(), exp2(), exp3(), exp4(), exp7(), exp8(), exp9(), exp10()]
+}
+
+pub fn by_name(name: &str) -> Option<Table> {
+    Some(match name {
+        "fig1" => fig1(),
+        "fig4" => fig4(),
+        "table1" => table1(),
+        "exp1" => exp1(),
+        "exp2" => exp2(),
+        "exp3" => exp3(),
+        "exp4" => exp4(),
+        "exp7" => exp7(),
+        "exp8" => exp8(),
+        "exp9" => exp9(),
+        "exp10" => exp10(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_nonempty() {
+        for t in [fig4(), table1(), exp7()] {
+            let s = t.render();
+            assert!(s.lines().count() >= 4, "{s}");
+        }
+    }
+
+    #[test]
+    fn table1_minimum_at_moderate_config() {
+        // Table I shape: the minimum is strictly inside the grid
+        let t = table1();
+        let vals: Vec<Vec<f64>> = t
+            .rows
+            .iter()
+            .map(|r| r[1..].iter().map(|c| c.parse().unwrap()).collect())
+            .collect();
+        let mut min_pos = (0, 0);
+        let mut min = f64::INFINITY;
+        for (i, row) in vals.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                if v < min {
+                    min = v;
+                    min_pos = (i, j);
+                }
+            }
+        }
+        assert_eq!(min, 1.0, "normalization anchors min at 1.0");
+        assert!(min_pos.1 > 0, "BS=1 should not be optimal (batching helps)");
+    }
+
+    #[test]
+    fn exp1_lowdiff_overhead_column_small() {
+        let t = exp1();
+        for row in &t.rows {
+            let ovh: f64 = row.last().unwrap().parse().unwrap();
+            assert!(ovh < 5.0, "{}: {ovh}%", row[0]);
+        }
+    }
+
+    #[test]
+    fn exp9_lowdiff_plus_s_wins_under_frequent_failures() {
+        // paper Fig. 18: in-memory recovery dominates when failures are
+        // frequent (LowDiff+(S) 94.0% vs LowDiff 92% at MTBF 0.3h); at
+        // large MTBFs the curves converge and LowDiff's lower steady
+        // overhead can edge ahead — we assert the robust low-MTBF claim
+        // plus LowDiff > CheckFreq everywhere.
+        let t = exp9();
+        for row in &t.rows {
+            let mtbf: f64 = row[0].parse().unwrap();
+            let checkfreq: f64 = row[2].parse().unwrap();
+            let lowdiff: f64 = row[4].parse().unwrap();
+            let plus_s: f64 = row[5].parse().unwrap();
+            assert!(lowdiff > checkfreq, "{row:?}");
+            if mtbf <= 0.3 {
+                assert!(plus_s > lowdiff, "{row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in ["fig1", "fig4", "table1", "exp1", "exp2", "exp3", "exp4", "exp7", "exp8", "exp9", "exp10"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

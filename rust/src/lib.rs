@@ -1,0 +1,37 @@
+//! # LowDiff — frequent differential checkpointing via compressed-gradient reuse
+//!
+//! Rust + JAX + Pallas reproduction of *"Optimizing Frequent Checkpointing via
+//! Low-Cost Differential for Distributed Training Systems"* (Yao et al.,
+//! CS.DC 2025).
+//!
+//! Three layers (DESIGN.md §3):
+//! - **L3 (this crate)**: the coordinator — training/checkpointing processes,
+//!   reusing queue, batched writes, recovery, configuration tuning, baselines,
+//!   storage, collectives, and the discrete-event cluster simulator that
+//!   regenerates every figure/table of the paper's evaluation.
+//! - **L2** (`python/compile/model.py`): JAX transformer fwd/bwd, AOT-lowered
+//!   to HLO text in `artifacts/`, executed here via PJRT ([`runtime`]).
+//! - **L1** (`python/compile/kernels/`): Pallas kernels (top-k compress,
+//!   fused Adam, int8 quant) lowered inside the L2 computations.
+//!
+//! Python never runs after `make artifacts`; the hot path is pure Rust.
+
+pub mod checkpoint;
+pub mod collective;
+pub mod compress;
+pub mod coordinator;
+pub mod exp;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod simnet;
+pub mod sparse;
+pub mod storage;
+pub mod tensor;
+pub mod util;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,162 @@
+//! `lowdiff` — the coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train     run a real training job with a chosen checkpointing strategy
+//!   recover   restore the latest state from a checkpoint directory
+//!   exp       regenerate a paper experiment table (or `all`)
+//!   info      print artifact/model information
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use lowdiff::checkpoint::batched::BatchMode;
+use lowdiff::checkpoint::format::{model_signature, PayloadCodec};
+use lowdiff::coordinator::driver::{train, StrategyKind, TrainConfig};
+use lowdiff::coordinator::recovery::{recover, RecoveryMode};
+use lowdiff::optim::Adam;
+use lowdiff::runtime::{artifacts_dir, ModelRuntime};
+use lowdiff::storage::{LocalDir, StorageBackend};
+use lowdiff::util::cli::Args;
+
+const USAGE: &str = "\
+usage: lowdiff <command> [options]
+
+commands:
+  train    --model <tiny|small|e2e> --strategy <lowdiff|lowdiff+|naive-dc|checkfreq|gemini|torch-save|none>
+           [--iters N] [--workers W] [--full-every F] [--batch-size B]
+           [--diff-every D] [--ckpt-dir DIR] [--mtbf SECS] [--zstd]
+           [--batch-mode sum|concat] [--seed S]
+  recover  --model <name> --ckpt-dir DIR [--parallel]
+  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|all>
+  info     --model <name>
+";
+
+fn main() {
+    lowdiff::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &["zstd", "parallel", "verbose"])?;
+    match args.subcommand(USAGE)? {
+        "train" => cmd_train(&args),
+        "recover" => cmd_recover(&args),
+        "exp" => cmd_exp(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny").to_string();
+    let strategy = StrategyKind::parse(args.get_or("strategy", "lowdiff"))
+        .context("bad --strategy")?;
+    let ckpt_dir = PathBuf::from(
+        args.get_or("ckpt-dir", &format!("/tmp/lowdiff-ckpt-{model}")),
+    );
+    let cfg = TrainConfig {
+        strategy,
+        iters: args.parse_or("iters", 50u64)?,
+        workers: args.parse_or("workers", 1usize)?,
+        diff_every: args.parse_or("diff-every", 1u64)?,
+        full_every: args.parse_or("full-every", 20u64)?,
+        batch_size: args.parse_or("batch-size", 2usize)?,
+        batch_mode: match args.get_or("batch-mode", "concat") {
+            "sum" => BatchMode::Sum,
+            _ => BatchMode::Concat,
+        },
+        codec: if args.flag("zstd") { PayloadCodec::Zstd } else { PayloadCodec::Raw },
+        seed: args.parse_or("seed", 42u64)?,
+        mtbf_secs: args.get("mtbf").map(|s| s.parse()).transpose()?,
+        eval_every: args.parse_or("eval-every", 10u64)?,
+        ..TrainConfig::default()
+    };
+
+    let mrt = ModelRuntime::load(&artifacts_dir(), &model)
+        .with_context(|| format!("loading model `{model}` (run `make artifacts`?)"))?;
+    log::info!(
+        "training {model} ({} params) with {} for {} iters -> {}",
+        mrt.n_params(),
+        strategy.name(),
+        cfg.iters,
+        ckpt_dir.display()
+    );
+    let store: Arc<dyn StorageBackend> = Arc::new(LocalDir::new(&ckpt_dir)?);
+    let report = train(&mrt, store, &cfg)?;
+    println!("{}", report.row());
+    for (step, loss) in &report.losses {
+        println!("  step {step:>6}  loss {loss:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_recover(args: &Args) -> Result<()> {
+    let model = args.require("model")?.to_string();
+    let ckpt_dir = PathBuf::from(args.require("ckpt-dir")?);
+    let mrt = ModelRuntime::load(&artifacts_dir(), &model)?;
+    let sig = model_signature(&model, mrt.n_params());
+    let mode = if args.flag("parallel") {
+        RecoveryMode::ParallelMerge
+    } else {
+        RecoveryMode::SerialReplay
+    };
+    let store = LocalDir::new(&ckpt_dir)?;
+    let adam = Adam { lr: mrt.layout.lr as f32 };
+    let (state, stats) = recover(&store, sig, &adam, mode)?;
+    println!(
+        "recovered step {} from {} diffs in {} merge rounds ({:.3}s), |params| = {:.4}",
+        state.step,
+        stats.n_diff_steps,
+        stats.full_merge_rounds,
+        stats.wall_secs,
+        state.params.l2_norm()
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    if which == "all" {
+        for t in lowdiff::exp::all_simulated() {
+            println!("{}", t.render());
+        }
+        return Ok(());
+    }
+    match lowdiff::exp::by_name(which) {
+        Some(t) => {
+            println!("{}", t.render());
+            Ok(())
+        }
+        None => bail!("unknown experiment `{which}`\n{USAGE}"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny");
+    let layout = lowdiff::model::Layout::load(
+        &artifacts_dir().join(format!("{model}.layout.txt")),
+    )?;
+    println!(
+        "model {}: {} params ({} tensors), vocab {}, seq {}, batch {}, rho {}, k {}",
+        layout.model,
+        layout.n_params,
+        layout.n_tensors(),
+        layout.vocab,
+        layout.seq_len,
+        layout.batch,
+        layout.rho,
+        layout.k
+    );
+    println!("full checkpoint: {}", lowdiff::util::human_bytes(layout.full_ckpt_bytes()));
+    println!(
+        "lowdiff differential: {}",
+        lowdiff::util::human_bytes(8 * layout.k as u64)
+    );
+    Ok(())
+}

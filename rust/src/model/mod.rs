@@ -1,0 +1,215 @@
+//! Model metadata: artifact layout files + the paper's model zoo.
+//!
+//! [`Layout`] parses `artifacts/<m>.layout.txt` (emitted by
+//! `python/compile/aot.py`) — the contract between the flat-vector L2 world
+//! and the L3 coordinator. [`zoo`] carries the paper's Table II models with
+//! the sizes the simulator needs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One named tensor's slice of the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Parsed layout + config of one AOT-compiled model.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub model: String,
+    pub n_params: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub rho: f64,
+    /// top-k element count at the artifact's compression ratio
+    pub k: usize,
+    pub lr: f64,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl Layout {
+    pub fn load(path: &Path) -> Result<Layout> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading layout {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Layout> {
+        let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+        let mut tensors = Vec::new();
+        let mut in_tensors = false;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "tensors" {
+                in_tensors = true;
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            if in_tensors {
+                let name = parts.next().context("tensor name")?;
+                let offset: usize = parts.next().context("offset")?.parse()?;
+                let len: usize = parts.next().context("len")?.parse()?;
+                tensors.push(TensorSpec { name: name.to_string(), offset, len });
+            } else {
+                let k = parts.next().context("key")?;
+                let v = parts.next().context("value")?;
+                kv.insert(k, v);
+            }
+        }
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k).copied().with_context(|| format!("layout missing key `{k}`"))
+        };
+        let layout = Layout {
+            model: get("model")?.to_string(),
+            n_params: get("n_params")?.parse()?,
+            vocab: get("vocab")?.parse()?,
+            seq_len: get("seq_len")?.parse()?,
+            batch: get("batch")?.parse()?,
+            rho: get("rho")?.parse()?,
+            k: get("k")?.parse()?,
+            lr: get("lr")?.parse()?,
+            tensors,
+        };
+        layout.validate()?;
+        Ok(layout)
+    }
+
+    /// Layout invariants: contiguous, complete, non-empty tensors.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for t in &self.tensors {
+            if t.offset != off {
+                bail!("tensor {} offset {} != expected {off}", t.name, t.offset);
+            }
+            if t.len == 0 {
+                bail!("tensor {} empty", t.name);
+            }
+            off += t.len;
+        }
+        if off != self.n_params {
+            bail!("layout covers {off} of {} params", self.n_params);
+        }
+        Ok(())
+    }
+
+    /// Number of "layers" for layer-wise streaming = number of tensors.
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Full checkpoint bytes: 3Ψ f32 (params + Adam m + v).
+    pub fn full_ckpt_bytes(&self) -> u64 {
+        3 * self.n_params as u64 * 4
+    }
+}
+
+/// Paper Table II model zoo entry (used by the simulator and Exp. 7).
+#[derive(Clone, Copy, Debug)]
+pub struct ZooModel {
+    pub name: &'static str,
+    /// parameter count Ψ
+    pub params: u64,
+    /// measured A100 iteration time (s) — calibration, see sim/calib.rs
+    pub iter_time_a100: f64,
+}
+
+/// Table II + Fig. 4 calibration (derivations in sim/calib.rs).
+pub mod zoo {
+    use super::ZooModel;
+
+    pub const RESNET50: ZooModel = ZooModel { name: "ResNet-50", params: 25_600_000, iter_time_a100: 0.30 };
+    pub const RESNET101: ZooModel = ZooModel { name: "ResNet-101", params: 44_500_000, iter_time_a100: 0.45 };
+    pub const VGG16: ZooModel = ZooModel { name: "VGG-16", params: 138_800_000, iter_time_a100: 0.55 };
+    pub const VGG19: ZooModel = ZooModel { name: "VGG-19", params: 143_700_000, iter_time_a100: 0.60 };
+    pub const BERT_B: ZooModel = ZooModel { name: "BERT-B", params: 110_000_000, iter_time_a100: 0.65 };
+    pub const BERT_L: ZooModel = ZooModel { name: "BERT-L", params: 334_000_000, iter_time_a100: 1.10 };
+    pub const GPT2_S: ZooModel = ZooModel { name: "GPT2-S", params: 117_000_000, iter_time_a100: 0.70 };
+    pub const GPT2_L: ZooModel = ZooModel { name: "GPT2-L", params: 762_000_000, iter_time_a100: 1.90 };
+
+    pub const ALL: [ZooModel; 8] = [
+        RESNET50, RESNET101, VGG16, VGG19, BERT_B, BERT_L, GPT2_S, GPT2_L,
+    ];
+
+    pub fn by_name(name: &str) -> Option<ZooModel> {
+        ALL.iter().copied().find(|m| m.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# lowdiff model layout v1
+model tiny
+n_params 20
+vocab 256
+d_model 64
+n_layers 2
+n_heads 4
+d_ff 256
+seq_len 32
+batch 4
+block 16384
+rho 0.01
+k 1
+lr 0.001
+tensors
+embed 0 12
+pos 12 8
+";
+
+    #[test]
+    fn parses_sample() {
+        let l = Layout::parse(SAMPLE).unwrap();
+        assert_eq!(l.model, "tiny");
+        assert_eq!(l.n_params, 20);
+        assert_eq!(l.tensors.len(), 2);
+        assert_eq!(l.tensors[1], TensorSpec { name: "pos".into(), offset: 12, len: 8 });
+        assert_eq!(l.full_ckpt_bytes(), 240);
+    }
+
+    #[test]
+    fn rejects_gap() {
+        let bad = SAMPLE.replace("pos 12 8", "pos 13 7");
+        assert!(Layout::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_incomplete_coverage() {
+        let bad = SAMPLE.replace("pos 12 8", "pos 12 7");
+        assert!(Layout::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_key() {
+        let bad = SAMPLE.replace("n_params 20\n", "");
+        assert!(Layout::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny.layout.txt");
+        if path.exists() {
+            let l = Layout::load(&path).unwrap();
+            assert_eq!(l.model, "tiny");
+            assert!(l.n_params > 100_000);
+            assert_eq!(l.k, (l.rho * l.n_params as f64) as usize);
+        }
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        assert_eq!(zoo::by_name("gpt2-l").unwrap().params, 762_000_000);
+        assert!(zoo::by_name("nope").is_none());
+    }
+}

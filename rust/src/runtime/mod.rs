@@ -1,0 +1,235 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the Rust hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO *text* →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. Text is
+//! the interchange format because jax ≥ 0.5 emits 64-bit-id protos that
+//! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`).
+//!
+//! [`ModelRuntime`] bundles the per-model artifact set (init/grads/eval/
+//! adam/compress/fused) behind typed wrappers over [`crate::tensor::Flat`].
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::Layout;
+use crate::tensor::Flat;
+
+/// One compiled PJRT client + a registry of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, executables: HashMap::new() })
+    }
+
+    /// Load + compile an HLO text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute a loaded artifact; returns the decomposed root tuple.
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("executable `{name}` not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        // aot.py lowers with return_tuple=True: root is always a tuple
+        Ok(literal.to_tuple()?)
+    }
+}
+
+/// Literal conversion helpers.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+pub fn lit_f32_scalar1(v: f32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(v.len(), rows * cols);
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+pub fn to_flat(l: &xla::Literal) -> Result<Flat> {
+    Ok(Flat(l.to_vec::<f32>()?))
+}
+
+pub fn to_f32_scalar(l: &xla::Literal) -> Result<f32> {
+    Ok(l.to_vec::<f32>()?[0])
+}
+
+/// The per-model artifact bundle: typed entry points into the L2/L1
+/// computations, plus the parsed [`Layout`].
+pub struct ModelRuntime {
+    rt: Runtime,
+    pub layout: Layout,
+    model: String,
+}
+
+/// Output of one fused LowDiff training step (see `model.py::fused_step`).
+pub struct FusedOut {
+    pub loss: f32,
+    pub params: Flat,
+    pub m: Flat,
+    pub v: Flat,
+    pub residual: Flat,
+    /// dense-masked compressed gradient — the reusable differential
+    pub cgrad: Flat,
+    pub threshold: f32,
+}
+
+impl ModelRuntime {
+    /// Load every artifact of `model` from `dir` (skips `fused`/`init` if
+    /// absent so trimmed artifact sets still work).
+    pub fn load(dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let layout = Layout::load(&dir.join(format!("{model}.layout.txt")))?;
+        let mut rt = Runtime::cpu()?;
+        for name in ["init", "grads", "eval", "adam", "compress", "fused"] {
+            let path: PathBuf = dir.join(format!("{model}.{name}.hlo.txt"));
+            if path.exists() {
+                rt.load(name, &path)?;
+            } else {
+                log::warn!("artifact {} missing, skipping", path.display());
+            }
+        }
+        Ok(ModelRuntime { rt, layout, model: model.to_string() })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layout.n_params
+    }
+
+    /// Initialize the flat parameter vector from a seed (runs the lowered
+    /// `init_params` — Rust never needs Python to start training).
+    pub fn init(&self, seed: i32) -> Result<Flat> {
+        let out = self.rt.exec("init", &[xla::Literal::vec1(&[seed])])?;
+        to_flat(&out[0])
+    }
+
+    /// Forward+backward: (params, tokens) -> (loss, grads). Eq. (1)-(2).
+    pub fn grads(&self, params: &Flat, tokens: &[i32]) -> Result<(f32, Flat)> {
+        let toks = lit_i32_2d(tokens, self.layout.batch, self.layout.seq_len)?;
+        let out = self.rt.exec("grads", &[lit_f32(&params.0), toks])?;
+        Ok((to_f32_scalar(&out[0])?, to_flat(&out[1])?))
+    }
+
+    /// Loss only.
+    pub fn eval(&self, params: &Flat, tokens: &[i32]) -> Result<f32> {
+        let toks = lit_i32_2d(tokens, self.layout.batch, self.layout.seq_len)?;
+        let out = self.rt.exec("eval", &[lit_f32(&params.0), toks])?;
+        to_f32_scalar(&out[0])
+    }
+
+    /// Fused Adam (L1 Pallas kernel): (p, m, v, g, step) -> (p', m', v').
+    /// Also the recovery diff-merge (Eq. (7)).
+    pub fn adam(
+        &self,
+        p: &Flat,
+        m: &Flat,
+        v: &Flat,
+        g: &Flat,
+        step: u64,
+    ) -> Result<(Flat, Flat, Flat)> {
+        let out = self.rt.exec(
+            "adam",
+            &[
+                lit_f32(&p.0),
+                lit_f32(&m.0),
+                lit_f32(&v.0),
+                lit_f32(&g.0),
+                lit_f32_scalar1(step as f32),
+            ],
+        )?;
+        Ok((to_flat(&out[0])?, to_flat(&out[1])?, to_flat(&out[2])?))
+    }
+
+    /// Top-k compression with error feedback (L1 Pallas kernels):
+    /// (g, residual) -> (masked, residual', threshold).
+    pub fn compress(&self, g: &Flat, residual: &Flat) -> Result<(Flat, Flat, f32)> {
+        let out = self.rt.exec("compress", &[lit_f32(&g.0), lit_f32(&residual.0)])?;
+        Ok((to_flat(&out[0])?, to_flat(&out[1])?, to_f32_scalar(&out[2])?))
+    }
+
+    /// One full LowDiff iteration in a single XLA execution.
+    pub fn fused(
+        &self,
+        p: &Flat,
+        m: &Flat,
+        v: &Flat,
+        residual: &Flat,
+        tokens: &[i32],
+        step: u64,
+    ) -> Result<FusedOut> {
+        let toks = lit_i32_2d(tokens, self.layout.batch, self.layout.seq_len)?;
+        let out = self.rt.exec(
+            "fused",
+            &[
+                lit_f32(&p.0),
+                lit_f32(&m.0),
+                lit_f32(&v.0),
+                lit_f32(&residual.0),
+                toks,
+                lit_f32_scalar1(step as f32),
+            ],
+        )?;
+        Ok(FusedOut {
+            loss: to_f32_scalar(&out[0])?,
+            params: to_flat(&out[1])?,
+            m: to_flat(&out[2])?,
+            v: to_flat(&out[3])?,
+            residual: to_flat(&out[4])?,
+            cgrad: to_flat(&out[5])?,
+            threshold: to_f32_scalar(&out[6])?,
+        })
+    }
+}
+
+/// Default artifacts directory (repo-root relative, overridable).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("LOWDIFF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+// PJRT integration tests live in rust/tests/runtime_integration.rs (they
+// need `make artifacts` to have run; unit tests here stay hermetic).

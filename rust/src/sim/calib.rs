@@ -1,0 +1,127 @@
+//! Simulator calibration constants, derived from the paper's own
+//! measurements (DESIGN.md §6). Each constant cites its source.
+
+use crate::model::ZooModel;
+
+/// Compression throughput of top-k over a state/gradient buffer,
+/// seconds per element.
+///
+/// Derivation: Fig. 1(a) — compressing GPT2-L differentials (3Ψ = 2.29G
+/// elements) at per-iteration frequency slows training by ~57%, i.e. adds
+/// ~1.08 s to a 1.9 s iteration ⇒ ~4.7e-10 s/elem.
+pub const COMPRESS_SEC_PER_ELEM: f64 = 4.7e-10;
+
+/// Recovery merge time per differential checkpoint (R_D), seconds.
+/// Fig. 15: ~50 diffs dominate recovery growth of a few seconds for
+/// GPT2-S ⇒ ~0.05-0.1 s per merge; we use the per-element rate applied to
+/// rho*Psi values plus fixed overhead.
+pub const MERGE_ALPHA: f64 = 0.02;
+pub const MERGE_SEC_PER_ELEM: f64 = 2.0e-9;
+
+/// Fraction of an iteration during which gradient/host traffic can hide
+/// behind compute (the backward+update window, Fig. 3): the paper's DC
+/// times are 20.5-24.6% of iteration and fully hidden (Fig. 4).
+pub const OVERLAP_WINDOW: f64 = 0.75;
+
+/// Gemini checkpoints the full state to *remote* CPU memory over the
+/// 25 Gbps network (its design isolates failures across hosts) with
+/// replication; the traffic scheduler hides part of the copy behind
+/// compute. Calibrated so Exp. 1's GPT2-S gap (LowDiff cuts training time
+/// by ~46% vs Gemini at per-iteration frequency) is reproduced.
+pub const GEMINI_OVERLAP: f64 = 0.4;
+pub const GEMINI_REPLICATION: u64 = 2;
+
+/// LowDiff+ streams the raw Ψ-sized gradient over PCIe every iteration;
+/// the layer-wise pipeline overlaps most of it, but PCIe contention leaves
+/// ~90% of the copy visible (Exp. 2: 7.2-9.1% overhead, attributed by the
+/// paper to "frequent and large-volume gradient transfers occupying PCIe
+/// bandwidth").
+pub const PLUS_PCIE_CONTENTION: f64 = 0.9;
+
+/// Snapshot copy efficiency: fraction of PCIe peak achieved by
+/// tensor-by-tensor snapshot copies (CheckFreq-style snapshots).
+pub const SNAPSHOT_EFF: f64 = 0.7;
+
+/// torch.save-style serialization throughput (pickle + tensor copy) that
+/// CheckFreq's persist phase and the synchronous baseline pay per byte.
+pub const SERIALIZE_BW: f64 = 1.0e9;
+
+/// torch.load-style deserialization throughput on the recovery path.
+pub const DESERIALIZE_BW: f64 = 0.5e9;
+
+/// Fixed process-restart cost after a failure when the job must rebuild
+/// from persistent storage (respawn workers, reinit NCCL, dataloaders):
+/// the dominant constant in practice and the reason in-memory recovery
+/// (LowDiff+(S), Gemini software failures) is "near-instantaneous" in the
+/// paper's words (§VIII Exp. 5/9).
+pub const RESTART_STORAGE: f64 = 45.0;
+/// Restart cost when the in-memory replica survives (software failure):
+/// reinitialize the training process and copy the state back.
+pub const RESTART_MEM: f64 = 5.0;
+
+/// Bytes of a full checkpoint: 3Ψ f32 (params + Adam m + v) — Table III
+/// (e.g. GPT2-L: 3 * 762e6 * 4 = 9.1 GB vs the paper's 8.7 GB).
+pub fn full_bytes(m: &ZooModel) -> u64 {
+    3 * m.params * 4
+}
+
+/// Bytes of a LowDiff differential: k = ρΨ (index u32 + value f32).
+pub fn lowdiff_diff_bytes(m: &ZooModel, rho: f64) -> u64 {
+    ((rho * m.params as f64) as u64) * 8
+}
+
+/// Bytes of a Naive DC differential: k = ρ·3Ψ over the state delta.
+/// NOTE (Exp. 7): the paper reports larger Naive DC diffs because
+/// Check-N-Run does not compress optimizer state; we model that too:
+/// compressed params delta + UNCOMPRESSED optimizer delta (2Ψ f32).
+pub fn naive_dc_diff_bytes(m: &ZooModel, rho: f64) -> u64 {
+    ((rho * m.params as f64) as u64) * 8 + 2 * m.params * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn table3_full_sizes_within_20pct() {
+        // Table III column "Full CKPT"
+        for (m, paper_bytes) in [
+            (zoo::RESNET101, 511e6),
+            (zoo::VGG19, 1.7e9),
+            (zoo::BERT_B, 1.3e9),
+            (zoo::BERT_L, 3.8e9),
+            (zoo::GPT2_S, 1.4e9),
+            (zoo::GPT2_L, 8.7e9),
+        ] {
+            let ours = full_bytes(&m) as f64;
+            let ratio = ours / paper_bytes;
+            assert!((0.8..1.25).contains(&ratio), "{}: {ours} vs {paper_bytes}", m.name);
+        }
+    }
+
+    #[test]
+    fn naive_dc_between_lowdiff_and_full() {
+        // Table III ordering: LowDiff << Naive DC < Full
+        for m in zoo::ALL {
+            let ld = lowdiff_diff_bytes(&m, 0.01);
+            let dc = naive_dc_diff_bytes(&m, 0.01);
+            let full = full_bytes(&m);
+            assert!(ld < dc && dc < full, "{}", m.name);
+            assert!(full / ld > 30, "LowDiff should be >30x smaller than full");
+        }
+    }
+
+    #[test]
+    fn dc_time_fraction_matches_fig4() {
+        // Fig. 4: DC (compressed-gradient write) is 20-25% of iteration.
+        // Our model: pcie offload + ssd write of the diff vs iter time.
+        use crate::simnet::A100;
+        for m in [zoo::BERT_B, zoo::BERT_L, zoo::GPT2_S, zoo::GPT2_L] {
+            let bytes = lowdiff_diff_bytes(&m, 0.01);
+            let dc = A100.pcie_time(bytes) + A100.ssd_write_time(bytes);
+            let frac = dc / m.iter_time_a100;
+            assert!(frac < 0.30, "{}: DC {frac} of iteration", m.name);
+        }
+    }
+}

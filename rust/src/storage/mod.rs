@@ -1,0 +1,262 @@
+//! Storage backends for checkpoint persistence.
+//!
+//! [`StorageBackend`] abstracts the destination (paper: local SSD or remote
+//! storage). Implementations:
+//! - [`LocalDir`]: real files + fsync — the default for the real engine.
+//! - [`Throttled`]: wraps any backend with a token-bucket bandwidth model so
+//!   the real engine can emulate the paper's SSD/remote bandwidths.
+//! - [`MemStore`]: in-memory map — Gemini-style CPU-memory checkpoint tier
+//!   and unit-test backend.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Abstract checkpoint store keyed by object name.
+pub trait StorageBackend: Send + Sync {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()>;
+    fn get(&self, name: &str) -> Result<Vec<u8>>;
+    fn delete(&self, name: &str) -> Result<()>;
+    fn list(&self) -> Result<Vec<String>>;
+    fn exists(&self, name: &str) -> bool {
+        self.get(name).is_ok()
+    }
+}
+
+/// Real directory-backed store (atomic rename, optional fsync).
+pub struct LocalDir {
+    root: PathBuf,
+    fsync: bool,
+}
+
+impl LocalDir {
+    pub fn new(root: impl Into<PathBuf>) -> Result<LocalDir> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating {}", root.display()))?;
+        Ok(LocalDir { root, fsync: false })
+    }
+
+    /// Enable fsync-on-put (durability at the cost of write latency).
+    pub fn with_fsync(mut self, fsync: bool) -> Self {
+        self.fsync = fsync;
+        self
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        // flatten any path separators so names can't escape the root
+        self.root.join(name.replace('/', "_"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+impl StorageBackend for LocalDir {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let tmp = self.path(&format!("{name}.tmp"));
+        let fin = self.path(name);
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        if self.fsync {
+            f.sync_all()?;
+        }
+        drop(f);
+        std::fs::rename(&tmp, &fin)?;
+        Ok(())
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        std::fs::read(self.path(name)).with_context(|| format!("read {name}"))
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        std::fs::remove_file(self.path(name)).with_context(|| format!("delete {name}"))
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for e in std::fs::read_dir(&self.root)? {
+            let e = e?;
+            let name = e.file_name().to_string_lossy().to_string();
+            if !name.ends_with(".tmp") {
+                out.push(name);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// In-memory store (Gemini-style CPU-memory checkpoint tier; test backend).
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.map.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+}
+
+impl StorageBackend for MemStore {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        self.map.lock().unwrap().insert(name.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        self.map
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no object {name}"))
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        self.map.lock().unwrap().remove(name);
+        Ok(())
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let mut v: Vec<String> = self.map.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        Ok(v)
+    }
+}
+
+/// Token-bucket bandwidth throttle around any backend: writes block until
+/// `bytes / bandwidth` (+ fixed per-op latency) has elapsed — emulates the
+/// paper's SSD on hardware we don't have without distorting correctness.
+pub struct Throttled<B: StorageBackend> {
+    inner: B,
+    bytes_per_sec: f64,
+    per_op_latency: Duration,
+    /// time before which the device is busy
+    busy_until: Mutex<Instant>,
+}
+
+impl<B: StorageBackend> Throttled<B> {
+    pub fn new(inner: B, bytes_per_sec: f64, per_op_latency: Duration) -> Self {
+        Throttled {
+            inner,
+            bytes_per_sec,
+            per_op_latency,
+            busy_until: Mutex::new(Instant::now()),
+        }
+    }
+
+    fn throttle(&self, bytes: usize) {
+        let cost = Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec)
+            + self.per_op_latency;
+        let wake = {
+            let mut busy = self.busy_until.lock().unwrap();
+            let start = (*busy).max(Instant::now());
+            *busy = start + cost;
+            *busy
+        };
+        let now = Instant::now();
+        if wake > now {
+            std::thread::sleep(wake - now);
+        }
+    }
+}
+
+impl<B: StorageBackend> StorageBackend for Throttled<B> {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        self.throttle(bytes.len());
+        self.inner.put(name, bytes)
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        self.inner.get(name)
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        self.inner.delete(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memstore_roundtrip() {
+        let s = MemStore::new();
+        s.put("a", b"hello").unwrap();
+        assert_eq!(s.get("a").unwrap(), b"hello");
+        assert!(s.get("b").is_err());
+        assert_eq!(s.list().unwrap(), vec!["a"]);
+        s.delete("a").unwrap();
+        assert!(!s.exists("a"));
+    }
+
+    #[test]
+    fn localdir_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lowdiff_test_{}", std::process::id()));
+        let s = LocalDir::new(&dir).unwrap();
+        s.put("ckpt-1", b"abc").unwrap();
+        s.put("ckpt-2", b"defg").unwrap();
+        assert_eq!(s.get("ckpt-1").unwrap(), b"abc");
+        assert_eq!(s.list().unwrap(), vec!["ckpt-1", "ckpt-2"]);
+        s.delete("ckpt-1").unwrap();
+        assert_eq!(s.list().unwrap(), vec!["ckpt-2"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn localdir_overwrite_is_atomic_replace() {
+        let dir = std::env::temp_dir().join(format!("lowdiff_test_ow_{}", std::process::id()));
+        let s = LocalDir::new(&dir).unwrap();
+        s.put("x", b"one").unwrap();
+        s.put("x", b"two").unwrap();
+        assert_eq!(s.get("x").unwrap(), b"two");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn throttle_enforces_bandwidth() {
+        let s = Throttled::new(MemStore::new(), 1e6, Duration::ZERO); // 1 MB/s
+        let start = Instant::now();
+        s.put("a", &vec![0u8; 100_000]).unwrap(); // 0.1 s at 1 MB/s
+        let dt = start.elapsed().as_secs_f64();
+        assert!(dt >= 0.09, "throttle too fast: {dt}");
+    }
+
+    #[test]
+    fn throttle_serializes_concurrent_writers() {
+        use std::sync::Arc;
+        let s = Arc::new(Throttled::new(MemStore::new(), 1e6, Duration::ZERO));
+        let start = Instant::now();
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    s.put(&format!("o{i}"), &vec![0u8; 25_000]).unwrap();
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // 4 * 25 KB at 1 MB/s = 0.1 s total device time
+        assert!(start.elapsed().as_secs_f64() >= 0.09);
+    }
+}

@@ -1,0 +1,165 @@
+//! Flat f32 tensor buffers — the L3 view of model state.
+//!
+//! The entire model is ONE flat vector (see `python/compile/model.py`): the
+//! coordinator never needs shapes, only contiguous byte ranges. `Flat` adds
+//! the handful of element-wise ops the checkpointing paths need (axpy for
+//! delta computation, add for batch accumulation) plus (de)serialization.
+
+use std::sync::Arc;
+
+/// A flat f32 buffer with value semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Flat(pub Vec<f32>);
+
+impl Flat {
+    pub fn zeros(n: usize) -> Flat {
+        Flat(vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// self += other (batch accumulation — paper §V-B "tensor addition").
+    pub fn add_assign(&mut self, other: &Flat) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a += b;
+        }
+    }
+
+    /// self = a - b (differential computation, Naive DC: C^D = M_{t+1} - M_t).
+    pub fn diff(a: &Flat, b: &Flat) -> Flat {
+        assert_eq!(a.len(), b.len());
+        Flat(a.0.iter().zip(b.0.iter()).map(|(x, y)| x - y).collect())
+    }
+
+    /// self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Flat) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.0.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.0.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Flat) -> f32 {
+        assert_eq!(self.len(), other.len());
+        self.0
+            .iter()
+            .zip(other.0.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.0.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Little-endian raw bytes (the checkpoint payload encoding).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 4);
+        for x in &self.0 {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_le_bytes(bytes: &[u8]) -> Flat {
+        assert_eq!(bytes.len() % 4, 0);
+        Flat(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        )
+    }
+
+    /// Contiguous sub-range view (a "layer" in LowDiff+'s layer-wise
+    /// streaming is exactly such a slice — DESIGN.md §3).
+    pub fn slice(&self, offset: usize, len: usize) -> &[f32] {
+        &self.0[offset..offset + len]
+    }
+}
+
+/// Shared immutable gradient handle.
+///
+/// This is the zero-copy substitution for the paper's CUDA-IPC queue
+/// (DESIGN.md §7): enqueueing transfers an `Arc` (16 bytes), never the
+/// payload, and both the training and checkpointing sides read the same
+/// allocation — the same "share the memory handle, not the data" property.
+pub type SharedFlat = Arc<Flat>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{arb_vec_f32, prop_check};
+
+    #[test]
+    fn add_assign_and_diff_roundtrip() {
+        let a = Flat(vec![1.0, 2.0, 3.0]);
+        let b = Flat(vec![0.5, -1.0, 4.0]);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        let d = Flat::diff(&c, &b);
+        assert_eq!(d, a);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let a = Flat(vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 1e30]);
+        assert_eq!(Flat::from_le_bytes(&a.to_le_bytes()), a);
+    }
+
+    #[test]
+    fn serialization_roundtrip_property() {
+        prop_check("flat_bytes_roundtrip", 64, |rng| {
+            let v = Flat(arb_vec_f32(rng, 300));
+            prop_assert!(Flat::from_le_bytes(&v.to_le_bytes()) == v);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let mut a = Flat(vec![1.0, 2.0]);
+        a.axpy(0.5, &Flat(vec![4.0, -4.0]));
+        assert_eq!(a.0, vec![3.0, 0.0]);
+    }
+
+    #[test]
+    fn l2_norm() {
+        assert!((Flat(vec![3.0, 4.0]).l2_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_is_layer_view() {
+        let a = Flat((0..10).map(|i| i as f32).collect());
+        assert_eq!(a.slice(3, 4), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let mut a = Flat::zeros(3);
+        a.add_assign(&Flat::zeros(4));
+    }
+}

@@ -1,0 +1,136 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Typed getters parse on demand with helpful errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed argument bag for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Flag names the caller declared as boolean (no value consumed).
+    /// Kept for introspection/debug output.
+    #[allow(dead_code)]
+    bool_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    /// `bool_flags` lists options that never take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&'static str]) -> Result<Args> {
+        let mut out = Args { bool_flags: bool_flags.to_vec(), ..Default::default() };
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        // treat as flag if no value follows
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(), iter.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    /// First positional (the subcommand), error with usage text otherwise.
+    pub fn subcommand(&self, usage: &str) -> Result<&str> {
+        match self.positional.first() {
+            Some(s) => Ok(s.as_str()),
+            None => bail!("missing subcommand\n{usage}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = args(&["train", "--model", "tiny", "--iters=100"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.parse_or("iters", 0u64).unwrap(), 100);
+    }
+
+    #[test]
+    fn bool_flags_consume_no_value() {
+        let a = args(&["--verbose", "run"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn trailing_option_without_value_is_flag() {
+        let a = args(&["--dry-run"]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn adjacent_options_do_not_eat_each_other() {
+        let a = args(&["--fast", "--model", "tiny"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("model"), Some("tiny"));
+    }
+
+    #[test]
+    fn typed_parse_errors_mention_flag() {
+        let a = args(&["--iters", "abc"]);
+        let err = a.parse_or("iters", 0u64).unwrap_err().to_string();
+        assert!(err.contains("--iters=abc"), "{err}");
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = args(&[]);
+        assert!(a.require("model").is_err());
+    }
+}

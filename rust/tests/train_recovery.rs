@@ -1,0 +1,188 @@
+//! End-to-end driver integration: every strategy trains through the real
+//! engine, checkpoints land on storage, and recovery reconstructs the
+//! training state. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use lowdiff::checkpoint::batched::BatchMode;
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::coordinator::driver::{train, StrategyKind, TrainConfig};
+use lowdiff::coordinator::recovery::{recover, RecoveryMode};
+use lowdiff::optim::Adam;
+use lowdiff::runtime::{artifacts_dir, ModelRuntime};
+use lowdiff::storage::{MemStore, StorageBackend};
+/// PJRT clients are thread-local (Rc internals): each test builds its own.
+fn load_mrt() -> ModelRuntime {
+    ModelRuntime::load(&artifacts_dir(), "tiny").expect("run `make artifacts` first")
+}
+
+fn run(
+    mrt: &ModelRuntime,
+    cfg: &TrainConfig,
+) -> (Arc<dyn StorageBackend>, lowdiff::coordinator::RunReport) {
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let report = train(mrt, Arc::clone(&store), cfg).expect("train");
+    (store, report)
+}
+
+fn base(strategy: StrategyKind) -> TrainConfig {
+    TrainConfig {
+        strategy,
+        iters: 12,
+        full_every: 5,
+        batch_size: 2,
+        batch_mode: BatchMode::Concat,
+        eval_every: 4,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn lowdiff_recovery_reaches_final_step_exactly() {
+    let mrt = load_mrt();
+    let (store, report) = run(&mrt, &base(StrategyKind::LowDiff));
+    assert_eq!(report.iters, 12);
+    assert_eq!(report.diff_ckpts, 12);
+    assert_eq!(report.full_ckpts, 3); // anchor@0 + steps 5, 10
+
+    let sig = model_signature("tiny", mrt.n_params());
+    let adam = Adam { lr: mrt.layout.lr as f32 };
+    let (state, stats) =
+        recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(state.step, 12, "chain: full@10 + diffs 11,12");
+    assert_eq!(stats.n_diff_steps, 2);
+
+    // and the recovered state equals a fresh deterministic re-run
+    let (_, report2) = run(&mrt, &base(StrategyKind::LowDiff));
+    assert_eq!(report2.final_loss(), report.final_loss());
+}
+
+#[test]
+fn lowdiff_sum_batches_have_bounded_drift() {
+    let mrt = load_mrt();
+    let mut cfg = base(StrategyKind::LowDiff);
+    cfg.batch_mode = BatchMode::Sum;
+    cfg.full_every = 100; // diffs only after the initial segment
+    let (store, _) = run(&mrt, &cfg);
+    let sig = model_signature("tiny", mrt.n_params());
+    let adam = Adam { lr: mrt.layout.lr as f32 };
+    // sum batches collapse steps: recovery is approximate (DESIGN.md §8)
+    let (state, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay)
+        .unwrap_or_else(|_| panic!("sum-mode chain must still recover"));
+    // exact replay reference
+    let mut cfg2 = cfg.clone();
+    cfg2.batch_mode = BatchMode::Concat;
+    let (store2, _) = run(&mrt, &cfg2);
+    let (exact, _) =
+        recover(store2.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    let drift = state.params.max_abs_diff(&exact.params);
+    assert!(drift < 0.05, "sum-mode drift {drift}");
+}
+
+#[test]
+fn naive_dc_recovery_is_close() {
+    let mrt = load_mrt();
+    let (store, report) = run(&mrt, &base(StrategyKind::NaiveDc));
+    assert_eq!(report.diff_ckpts, 12);
+    let sig = model_signature("tiny", mrt.n_params());
+    let adam = Adam { lr: mrt.layout.lr as f32 };
+    let (state, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(state.step, 12);
+    // Naive DC compresses the delta (rho of 3Ψ): recovery is approximate
+    // by design; it must still land near the re-run state
+    let (store2, _) = run(&mrt, &base(StrategyKind::LowDiff));
+    let (exact, _) = recover(store2.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    let rel = state.params.max_abs_diff(&exact.params) / exact.params.l2_norm() as f32;
+    assert!(rel < 0.01, "naive-dc drift {rel}");
+}
+
+#[test]
+fn torch_save_writes_synchronously() {
+    let mrt = load_mrt();
+    let (store, report) = run(&mrt, &base(StrategyKind::TorchSave));
+    assert_eq!(report.full_ckpts, 2);
+    assert!(report.stall_secs > 0.0, "sync writes must stall training");
+    // GC keeps only the newest full
+    assert_eq!(store.list().unwrap().len(), 1);
+}
+
+#[test]
+fn gemini_memory_tier_plus_disk() {
+    let mrt = load_mrt();
+    let (store, report) = run(&mrt, &base(StrategyKind::Gemini));
+    assert_eq!(report.full_ckpts, 12, "per-iteration in-memory fulls");
+    // disk persistence at full_every cadence
+    let names = store.list().unwrap();
+    assert!(!names.is_empty());
+    assert!(names.iter().all(|n| n.starts_with("full-")));
+}
+
+#[test]
+fn lowdiff_plus_replica_matches_training() {
+    let mrt = load_mrt();
+    let (store, report) = run(&mrt, &base(StrategyKind::LowDiffPlus));
+    assert_eq!(report.iters, 12);
+    assert_eq!(report.diff_ckpts, 12, "per-iteration in-memory ckpts");
+    // persisted replica checkpoints exist and recover
+    let sig = model_signature("tiny", mrt.n_params());
+    let adam = Adam { lr: mrt.layout.lr as f32 };
+    let (state, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(state.step, 10, "last persisted replica at step 10");
+
+    // the replica path must equal the compressed path's exact re-run? No —
+    // LowDiff+ trains UNcompressed, so compare against its own re-run.
+    let (_, report2) = run(&mrt, &base(StrategyKind::LowDiffPlus));
+    assert_eq!(report2.final_loss(), report.final_loss());
+}
+
+#[test]
+fn strategies_agree_on_initial_loss() {
+    let mrt = load_mrt();
+    // same seed => same data => same first recorded loss everywhere
+    let mut first: Option<f32> = None;
+    for s in [
+        StrategyKind::None,
+        StrategyKind::LowDiff,
+        StrategyKind::CheckFreq,
+        StrategyKind::TorchSave,
+    ] {
+        let mut cfg = base(s);
+        cfg.iters = 4;
+        cfg.eval_every = 4;
+        let (_, report) = run(&mrt, &cfg);
+        let l = report.losses[0].1;
+        match first {
+            None => first = Some(l),
+            Some(f) => assert_eq!(f, l, "{:?}", s),
+        }
+    }
+}
+
+#[test]
+fn failure_injection_recovers_and_completes() {
+    let mrt = load_mrt();
+    let mut cfg = base(StrategyKind::LowDiff);
+    cfg.iters = 20;
+    cfg.mtbf_secs = Some(1.5); // aggressive: expect a few failures
+    cfg.full_every = 4;
+    let (_, report) = run(&mrt, &cfg);
+    assert_eq!(report.iters, 20, "must finish despite failures");
+    if report.recoveries > 0 {
+        assert!(report.recovery_secs > 0.0);
+    }
+}
+
+#[test]
+fn multi_worker_data_parallel_trains() {
+    let mrt = load_mrt();
+    let mut cfg = base(StrategyKind::LowDiff);
+    cfg.workers = 2;
+    cfg.iters = 6;
+    cfg.eval_every = 2;
+    let (_, report) = run(&mrt, &cfg);
+    assert_eq!(report.iters, 6);
+    assert_eq!(report.workers, 2);
+    let first = report.losses.first().unwrap().1;
+    let last = report.losses.last().unwrap().1;
+    assert!(last < first, "2-worker training must reduce loss: {first} -> {last}");
+}
