@@ -1,0 +1,75 @@
+//! Sharded + tiered storage engine demo — no PJRT artifacts needed.
+//!
+//! Drives the checkpointer through a 4-shard writer pool over a tiered
+//! (memory-over-disk) backend, crashes the engine mid-batch, and shows
+//! recovery reconstructing the last complete chain from the durable tier.
+//!
+//!   cargo run --release --example sharded_storage -- [--shards 4] [--writers 4]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use lowdiff::checkpoint::diff::{write_diff, DiffPayload};
+use lowdiff::checkpoint::format::{model_signature, PayloadCodec};
+use lowdiff::checkpoint::full::write_full;
+use lowdiff::checkpoint::manifest::Manifest;
+use lowdiff::compress::topk_mask;
+use lowdiff::coordinator::recovery::{recover, RecoveryMode};
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{LocalDir, MemStore, Sharded, StorageBackend, Tiered};
+use lowdiff::tensor::Flat;
+use lowdiff::util::cli::Args;
+use lowdiff::util::rng::Rng;
+
+fn main() -> Result<()> {
+    lowdiff::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let n_shards: usize = args.parse_or("shards", 4usize)?;
+    let writers: usize = args.parse_or("writers", 4usize)?;
+    let n: usize = 4096;
+    let steps: u64 = 12;
+    let sig = model_signature("demo", n);
+    let adam = Adam::default();
+
+    let dir = std::env::temp_dir().join("lowdiff-sharded-demo");
+    let _ = std::fs::remove_dir_all(&dir);
+    let durable: Arc<dyn StorageBackend> = Arc::new(LocalDir::new(&dir)?);
+    let fast: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let tiered = Arc::new(Tiered::new(fast, Arc::clone(&durable)));
+    let engine = Sharded::new(tiered.clone() as Arc<dyn StorageBackend>, n_shards, writers);
+    println!("engine: {n_shards} shards x {writers} writers, mem tier over {}", dir.display());
+
+    // build a training timeline and enqueue its checkpoints async
+    let mut rng = Rng::new(7);
+    let mut state = ModelState::new(Flat(vec![0.5; n]));
+    engine.put(&Manifest::full_name(0), &write_full(&state, sig, PayloadCodec::Raw)?)?;
+    let mut handles = Vec::new();
+    for step in 1..=steps {
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        let sparse = SparseGrad::from_dense(&topk_mask(&Flat(g), n / 100 + 1));
+        adam.apply_sparse(&mut state, &sparse);
+        let bytes = write_diff(&DiffPayload::Gradient(sparse), sig, step, PayloadCodec::Raw)?;
+        handles.push(engine.put_async(&Manifest::diff_name(step), bytes));
+    }
+    // wait for half the chain, then crash the writer pool mid-batch
+    for h in &handles[..steps as usize / 2] {
+        h.wait().map_err(anyhow::Error::msg)?;
+    }
+    println!("crash! killing the writer pool with writes in flight...");
+    let _ = engine.kill();
+    tiered.wait_idle(); // whatever committed also finishes spilling
+    drop(tiered); // the memory tier dies with the process
+
+    // restart: read the durable tier through a fresh engine view
+    let reader = Sharded::new(durable, 1, 2);
+    let (recovered, stats) = recover(&reader, sig, &adam, RecoveryMode::SerialReplay)?;
+    println!(
+        "recovered step {} of {steps} ({} diff objects, {} dropped, {} damaged)",
+        stats.recovered_step, stats.n_diff_objects, stats.dropped_diff_steps, stats.damaged_objects
+    );
+    assert!(recovered.step >= steps / 2, "committed prefix must survive");
+    println!("|params| = {:.4} — a state the run really visited", recovered.params.l2_norm());
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Storage-engine bench: single-object synchronous writes vs the sharded
+//! async writer pool, across shard counts × pool sizes, under throttled
+//! per-lane bandwidth (the paper's SSD model) and raw MemStore (pure
+//! engine overhead).
+//!
+//! Run: `cargo bench --bench storage_shard`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lowdiff::storage::{MemStore, Sharded, StorageBackend, Throttled};
+
+const OBJ_BYTES: usize = 4 << 20; // one batched gradient write
+const N_OBJECTS: usize = 8;
+
+fn run_sync(dev: Arc<dyn StorageBackend>, payload: &[u8]) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..N_OBJECTS {
+        dev.put(&format!("batch-{i:03}"), payload).unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn run_sharded(lanes: Vec<Arc<dyn StorageBackend>>, shards: usize, writers: usize, payload: &[u8]) -> f64 {
+    let eng = Sharded::with_lanes(lanes, shards, writers);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..N_OBJECTS)
+        .map(|i| eng.put_async(&format!("batch-{i:03}"), payload.to_vec()))
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn report(label: &str, secs: f64, base: f64) {
+    let mb = (OBJ_BYTES * N_OBJECTS) as f64 / 1e6;
+    println!(
+        "{label:<38} {:>8.1} ms   {:>8.0} MB/s   {:>5.2}x",
+        secs * 1e3,
+        mb / secs,
+        base / secs
+    );
+}
+
+fn main() {
+    let payload = vec![0x5Au8; OBJ_BYTES];
+    println!(
+        "== storage_shard: {N_OBJECTS} x {} MiB batched writes ==\n",
+        OBJ_BYTES >> 20
+    );
+
+    // throttled-device scan: same driver as `lowdiff exp sharded` — one
+    // implementation, two entry points
+    println!("{}", lowdiff::exp::exp_sharded().render());
+
+    println!("-- extra shard/pool points on throttled lanes --");
+    let mk_dev = || -> Arc<dyn StorageBackend> {
+        Arc::new(Throttled::new(MemStore::new(), 256e6, Duration::from_millis(2)))
+    };
+    let base = run_sync(mk_dev(), &payload);
+    report("single object, synchronous", base, base);
+    for (shards, writers) in [(1usize, 2usize), (2, 4), (4, 2), (16, 8)] {
+        let lanes: Vec<Arc<dyn StorageBackend>> = (0..shards).map(|_| mk_dev()).collect();
+        let secs = run_sharded(lanes, shards, writers, &payload);
+        report(&format!("sharded x{shards}, {writers} writers"), secs, base);
+    }
+
+    println!("\n-- raw MemStore (engine overhead only) --");
+    let mem_base = run_sync(Arc::new(MemStore::new()), &payload);
+    report("single object, synchronous", mem_base, mem_base);
+    for (shards, writers) in [(4usize, 4usize), (8, 8)] {
+        let lanes: Vec<Arc<dyn StorageBackend>> =
+            (0..shards).map(|_| Arc::new(MemStore::new()) as Arc<dyn StorageBackend>).collect();
+        let secs = run_sharded(lanes, shards, writers, &payload);
+        report(&format!("sharded x{shards}, {writers} writers"), secs, mem_base);
+    }
+
+    println!("\nstorage_shard bench done");
+}

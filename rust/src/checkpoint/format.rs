@@ -205,6 +205,95 @@ impl Container {
     }
 }
 
+/// Magic for the shard index (commit record) written by the sharded
+/// storage engine alongside the shard data objects.
+pub const SHARD_MAGIC: &[u8; 4] = b"LDSI";
+pub const SHARD_VERSION: u32 = 1;
+
+/// Per-shard metadata inside a [`ShardIndex`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub len: u64,
+    pub crc32: u32,
+}
+
+/// Commit record for one logical object split into `n` shards
+/// (`Sharded` engine, crate::storage). Records the shard count, total
+/// length, and a per-shard (length, CRC32) pair so recovery can read
+/// shards in parallel and detect torn or partial writes. The index is
+/// written only after every shard is durable: its presence *is* the
+/// commit point.
+///
+/// Wire layout (little-endian):
+/// ```text
+/// magic "LDSI" | version u32 | n_shards u32 | total_len u64
+/// per shard: len u64 | crc32 u32
+/// crc32 u32 (of all preceding bytes)
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardIndex {
+    pub total_len: u64,
+    pub shards: Vec<ShardMeta>,
+}
+
+impl ShardIndex {
+    /// Build the index for `bytes` split into the given shard slices.
+    pub fn build(shards: &[&[u8]]) -> ShardIndex {
+        ShardIndex {
+            total_len: shards.iter().map(|s| s.len() as u64).sum(),
+            shards: shards
+                .iter()
+                .map(|s| ShardMeta { len: s.len() as u64, crc32: crc32fast::hash(s) })
+                .collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + 12 * self.shards.len() + 4);
+        out.extend_from_slice(SHARD_MAGIC);
+        out.extend_from_slice(&SHARD_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.shards.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.total_len.to_le_bytes());
+        for s in &self.shards {
+            out.extend_from_slice(&s.len.to_le_bytes());
+            out.extend_from_slice(&s.crc32.to_le_bytes());
+        }
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<ShardIndex> {
+        ensure!(bytes.len() >= 24, "shard index too short ({} bytes)", bytes.len());
+        ensure!(&bytes[0..4] == SHARD_MAGIC, "bad shard index magic");
+        let version = LE::read_u32(&bytes[4..8]);
+        ensure!(version == SHARD_VERSION, "unsupported shard index version {version}");
+        let n = LE::read_u32(&bytes[8..12]) as usize;
+        ensure!(n >= 1 && n <= 1 << 16, "implausible shard count {n}");
+        let want = 20 + 12 * n + 4;
+        ensure!(bytes.len() == want, "shard index length {} != {want}", bytes.len());
+        let crc_stored = LE::read_u32(&bytes[want - 4..]);
+        let crc = crc32fast::hash(&bytes[..want - 4]);
+        ensure!(crc == crc_stored, "shard index CRC mismatch (torn index write?)");
+        let total_len = LE::read_u64(&bytes[12..20]);
+        let mut shards = Vec::with_capacity(n);
+        let mut pos = 20;
+        for _ in 0..n {
+            let len = LE::read_u64(&bytes[pos..pos + 8]);
+            let crc32 = LE::read_u32(&bytes[pos + 8..pos + 12]);
+            shards.push(ShardMeta { len, crc32 });
+            pos += 12;
+        }
+        let sum: u64 = shards.iter().map(|s| s.len).sum();
+        ensure!(sum == total_len, "shard lengths {sum} != total {total_len}");
+        Ok(ShardIndex { total_len, shards })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,5 +382,49 @@ mod tests {
         let c = sample(PayloadCodec::Raw);
         let err = c.section("nope").unwrap_err().to_string();
         assert!(err.contains("nope"));
+    }
+
+    #[test]
+    fn shard_index_roundtrip() {
+        let a = b"hello".as_slice();
+        let b = b"world!!".as_slice();
+        let idx = ShardIndex::build(&[a, b]);
+        assert_eq!(idx.n_shards(), 2);
+        assert_eq!(idx.total_len, 12);
+        let back = ShardIndex::from_bytes(&idx.to_bytes()).unwrap();
+        assert_eq!(back, idx);
+        assert_eq!(back.shards[0].crc32, crc32fast::hash(a));
+    }
+
+    #[test]
+    fn shard_index_detects_corruption_and_truncation() {
+        let idx = ShardIndex::build(&[b"abc".as_slice(), b"defg".as_slice()]);
+        let bytes = idx.to_bytes();
+        for cut in [0, 4, bytes.len() - 1] {
+            assert!(ShardIndex::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut bad = bytes.clone();
+        bad[14] ^= 0xFF;
+        let err = ShardIndex::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("CRC") || err.contains("length") || err.contains("total"), "{err}");
+    }
+
+    #[test]
+    fn shard_index_roundtrip_property() {
+        prop_check("shard_index_roundtrip", 32, |rng| {
+            let n = rng.range(1, 9);
+            let blobs: Vec<Vec<u8>> = (0..n)
+                .map(|_| {
+                    let len = rng.range(0, 200);
+                    (0..len).map(|_| rng.next_u64() as u8).collect()
+                })
+                .collect();
+            let slices: Vec<&[u8]> = blobs.iter().map(|b| b.as_slice()).collect();
+            let idx = ShardIndex::build(&slices);
+            let back = ShardIndex::from_bytes(&idx.to_bytes())
+                .map_err(|e| format!("decode: {e:#}"))?;
+            prop_assert!(back == idx);
+            Ok(())
+        });
     }
 }

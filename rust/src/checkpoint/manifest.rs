@@ -38,9 +38,46 @@ impl Chain {
 /// Naming + discovery over a storage backend.
 pub struct Manifest;
 
+/// Suffix of the shard-index (commit record) object for a sharded write.
+pub const SHARD_INDEX_SUFFIX: &str = ".shards";
+
 impl Manifest {
     pub fn full_name(step: u64) -> String {
         format!("full-{step:012}.ldck")
+    }
+
+    /// Name of the commit record for a logical object written sharded.
+    pub fn shard_index_name(name: &str) -> String {
+        format!("{name}{SHARD_INDEX_SUFFIX}")
+    }
+
+    /// Name of shard `i` (0-based) of `n` for a logical object.
+    pub fn shard_name(name: &str, i: usize, n: usize) -> String {
+        format!("{name}.s{i:03}of{n:03}")
+    }
+
+    /// Logical object name if `name` is a shard-index object.
+    pub fn shard_index_base(name: &str) -> Option<&str> {
+        name.strip_suffix(SHARD_INDEX_SUFFIX)
+    }
+
+    /// True for physical shard artifacts (`*.sNNNofMMM` data or `*.shards`
+    /// index objects) — chain discovery and GC must look through the
+    /// sharded view, never treat these as checkpoint objects.
+    pub fn is_shard_artifact(name: &str) -> bool {
+        if name.ends_with(SHARD_INDEX_SUFFIX) {
+            return true;
+        }
+        match name.rfind(".s") {
+            Some(pos) => {
+                let tail = &name[pos + 2..];
+                tail.len() == 8
+                    && &tail[3..5] == "of"
+                    && tail[..3].bytes().all(|b| b.is_ascii_digit())
+                    && tail[5..].bytes().all(|b| b.is_ascii_digit())
+            }
+            None => false,
+        }
     }
 
     pub fn diff_name(step: u64) -> String {
@@ -221,5 +258,30 @@ mod tests {
         s.put(&Manifest::full_name(1), b"f").unwrap();
         let chain = Manifest::latest_chain(&s).unwrap();
         assert_eq!(chain.full.as_ref().unwrap().0, 1);
+    }
+
+    #[test]
+    fn shard_names_roundtrip_and_classify() {
+        let base = Manifest::diff_name(7);
+        let idx = Manifest::shard_index_name(&base);
+        assert_eq!(Manifest::shard_index_base(&idx), Some(base.as_str()));
+        assert!(Manifest::is_shard_artifact(&idx));
+        assert!(Manifest::is_shard_artifact(&Manifest::shard_name(&base, 2, 4)));
+        assert!(!Manifest::is_shard_artifact(&base));
+        assert!(!Manifest::is_shard_artifact("random.bin"));
+        assert!(!Manifest::is_shard_artifact("x.s12of4")); // malformed widths
+    }
+
+    #[test]
+    fn chain_discovery_skips_shard_artifacts() {
+        // a raw inner store holds shard data + index objects; discovery on
+        // it must not mistake them for checkpoint objects
+        let s = MemStore::new();
+        let full = Manifest::full_name(3);
+        s.put(&Manifest::shard_name(&full, 0, 2), b"a").unwrap();
+        s.put(&Manifest::shard_name(&full, 1, 2), b"b").unwrap();
+        s.put(&Manifest::shard_index_name(&full), b"i").unwrap();
+        let chain = Manifest::latest_chain(&s).unwrap();
+        assert!(chain.full.is_none(), "shard artifacts are not logical objects");
     }
 }

@@ -9,14 +9,17 @@
 //!   first (they belong to the pre-full chain), then the 3Ψ state is
 //!   encoded and written; obsolete objects are GC'd.
 //!
-//! All storage I/O happens on this thread — the training thread's only
-//! costs are the O(1) queue put and the snapshot copy.
+//! All storage I/O happens on this thread *or* — with `n_shards > 1` or
+//! `writers > 1` in [`CkptConfig`] — on the sharded engine's writer pool:
+//! the checkpointer then only encodes and enqueues, reaping completions
+//! asynchronously and draining the pool before GC and shutdown (GC must
+//! never run while the full checkpoint it keys on is still in flight).
+//! The training thread's only costs stay the O(1) queue put and the
+//! snapshot copy.
 
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
-
-
 
 use crate::checkpoint::batched::{finalize, BatchBuffer, BatchMode};
 use crate::checkpoint::diff::{write_diff, DiffPayload};
@@ -26,7 +29,7 @@ use crate::checkpoint::manifest::Manifest;
 use crate::coordinator::reusing_queue::ReusingQueue;
 use crate::optim::ModelState;
 use crate::sparse::SparseGrad;
-use crate::storage::StorageBackend;
+use crate::storage::{Sharded, StorageBackend, WriteHandle};
 use crate::tensor::Flat;
 
 /// What travels through the reusing queue to the checkpointing process.
@@ -46,10 +49,22 @@ pub struct CkptStats {
     pub diff_ckpts: u64,
     pub writes: u64,
     pub bytes_written: u64,
+    /// Direct mode: wall time inside synchronous puts. Engine mode: wall
+    /// time the checkpointer spent *blocked* on the writer pool (barriers
+    /// before GC / shutdown) — the overlap-visible cost, not device time.
     pub write_secs: f64,
     pub offload_secs: f64,
     pub peak_buffered_bytes: usize,
     pub errors: u64,
+    /// peak logical writes simultaneously in flight on the writer pool
+    pub inflight_peak: usize,
+    /// physical objects written by the sharded engine (shards + commit
+    /// records); 0 in direct mode
+    pub shard_writes: u64,
+    /// fast→durable tier traffic reported by the backend (Tiered), as of
+    /// checkpointer shutdown — late spills keep draining afterwards
+    pub spill_bytes: u64,
+    pub spill_errors: u64,
 }
 
 /// Handle to the running checkpointing process.
@@ -69,6 +84,11 @@ pub struct CkptConfig {
     pub queue_capacity: usize,
     /// run GC after each full checkpoint
     pub gc: bool,
+    /// shards per checkpoint object; >1 (or `writers` > 1) routes writes
+    /// through the sharded async engine ([`Sharded`])
+    pub n_shards: usize,
+    /// storage writer-pool threads for the sharded engine
+    pub writers: usize,
 }
 
 impl Default for CkptConfig {
@@ -80,7 +100,17 @@ impl Default for CkptConfig {
             codec: PayloadCodec::Raw,
             queue_capacity: 8,
             gc: true,
+            n_shards: 1,
+            writers: 1,
         }
+    }
+}
+
+impl CkptConfig {
+    /// True when writes go through the sharded async engine instead of
+    /// synchronous single-object puts.
+    pub fn uses_engine(&self) -> bool {
+        self.n_shards > 1 || self.writers > 1
     }
 }
 
@@ -121,6 +151,135 @@ impl Drop for Checkpointer {
     }
 }
 
+/// One logical write still in flight on the sharded engine.
+struct Inflight {
+    name: String,
+    bytes: u64,
+    handle: WriteHandle,
+}
+
+/// The checkpointer's storage sink: synchronous single-object puts, or the
+/// sharded async engine with completion reaping.
+enum Writer {
+    Direct(Arc<dyn StorageBackend>),
+    Engine { eng: Sharded, inflight: Vec<Inflight> },
+}
+
+impl Writer {
+    fn new(store: Arc<dyn StorageBackend>, cfg: &CkptConfig) -> Writer {
+        if cfg.uses_engine() {
+            Writer::Engine {
+                eng: Sharded::new(store, cfg.n_shards, cfg.writers),
+                inflight: Vec::new(),
+            }
+        } else {
+            Writer::Direct(store)
+        }
+    }
+
+    /// The logical object view (GC, recovery interop must see through the
+    /// shard layout).
+    fn view(&self) -> &dyn StorageBackend {
+        match self {
+            Writer::Direct(s) => s.as_ref(),
+            Writer::Engine { eng, .. } => eng,
+        }
+    }
+
+    fn submit(&mut self, bytes: Vec<u8>, name: String, stats: &Mutex<CkptStats>) {
+        match self {
+            Writer::Direct(store) => {
+                let t0 = Instant::now();
+                let res = store.put(&name, &bytes);
+                let mut s = stats.lock().unwrap();
+                s.write_secs += t0.elapsed().as_secs_f64();
+                match res {
+                    Ok(()) => {
+                        s.writes += 1;
+                        s.bytes_written += bytes.len() as u64;
+                    }
+                    Err(e) => {
+                        log::error!("checkpoint write {name} failed: {e:#}");
+                        s.errors += 1;
+                    }
+                }
+            }
+            Writer::Engine { eng, inflight } => {
+                let len = bytes.len() as u64;
+                let handle = eng.put_async(&name, bytes);
+                inflight.push(Inflight { name, bytes: len, handle });
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.inflight_peak = s.inflight_peak.max(inflight.len());
+                }
+                Self::reap(inflight, stats);
+                // backpressure: don't let encoded-but-unwritten checkpoints
+                // pile up without bound when the device is slower than the
+                // trainer — block on the oldest write past the cap, which
+                // propagates through the reusing queue as a visible stall
+                let cap = (eng.n_writers() * 4).max(8);
+                while inflight.len() > cap {
+                    let w = inflight.remove(0);
+                    let t0 = Instant::now();
+                    let res = w.handle.wait();
+                    let mut dt_stats = stats.lock().unwrap();
+                    dt_stats.write_secs += t0.elapsed().as_secs_f64();
+                    drop(dt_stats);
+                    Self::account(&w.name, w.bytes, res, stats);
+                }
+            }
+        }
+    }
+
+    /// Harvest completed handles without blocking.
+    fn reap(inflight: &mut Vec<Inflight>, stats: &Mutex<CkptStats>) {
+        inflight.retain(|w| match w.handle.try_result() {
+            None => true,
+            Some(res) => {
+                Self::account(&w.name, w.bytes, res, stats);
+                false
+            }
+        });
+    }
+
+    /// Block until every in-flight write committed (pre-GC / shutdown
+    /// barrier). No-op in direct mode.
+    fn barrier(&mut self, stats: &Mutex<CkptStats>) {
+        if let Writer::Engine { inflight, .. } = self {
+            let t0 = Instant::now();
+            for w in inflight.drain(..) {
+                let res = w.handle.wait();
+                Self::account(&w.name, w.bytes, res, stats);
+            }
+            stats.lock().unwrap().write_secs += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    fn account(name: &str, bytes: u64, res: Result<(), String>, stats: &Mutex<CkptStats>) {
+        let mut s = stats.lock().unwrap();
+        match res {
+            Ok(()) => {
+                s.writes += 1;
+                s.bytes_written += bytes;
+            }
+            Err(e) => {
+                log::error!("checkpoint write {name} failed: {e}");
+                s.errors += 1;
+            }
+        }
+    }
+
+    /// Fold backend-level counters (shard fan-out, tier spill) into the
+    /// final stats snapshot.
+    fn finish(self, stats: &Mutex<CkptStats>) {
+        let sst = self.view().storage_stats();
+        let mut s = stats.lock().unwrap();
+        s.shard_writes = sst.physical_writes;
+        s.spill_bytes = sst.spill_bytes;
+        s.spill_errors = sst.spill_errors;
+    }
+}
+
 fn run_loop(
     queue: Arc<ReusingQueue<CkptItem>>,
     store: Arc<dyn StorageBackend>,
@@ -128,22 +287,7 @@ fn run_loop(
     stats: Arc<Mutex<CkptStats>>,
 ) {
     let mut batch = BatchBuffer::new(cfg.batch_mode, cfg.batch_size);
-    let mut put = |bytes: Vec<u8>, name: String, st: &Mutex<CkptStats>| {
-        let t0 = Instant::now();
-        let res = store.put(&name, &bytes);
-        let mut s = st.lock().unwrap();
-        s.write_secs += t0.elapsed().as_secs_f64();
-        match res {
-            Ok(()) => {
-                s.writes += 1;
-                s.bytes_written += bytes.len() as u64;
-            }
-            Err(e) => {
-                log::error!("checkpoint write {name} failed: {e:#}");
-                s.errors += 1;
-            }
-        }
-    };
+    let mut writer = Writer::new(store, &cfg);
 
     while let Some(entry) = queue.get() {
         let step = entry.step;
@@ -164,18 +308,20 @@ fn run_loop(
                     s.offload_secs += t0.elapsed().as_secs_f64();
                     s.diff_ckpts += 1;
                 }
-                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut put);
+                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut writer);
             }
             CkptItem::DiffSparse(payload) => {
                 stats.lock().unwrap().diff_ckpts += 1;
                 match payload {
                     DiffPayload::Gradient(g) => {
-                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut put)
+                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut writer)
                     }
                     delta @ DiffPayload::StateDelta(_) => {
                         // Naive DC writes every delta unbatched (its cost)
                         match write_diff(&delta, cfg.model_sig, step, cfg.codec) {
-                            Ok(bytes) => put(bytes, Manifest::diff_name(step), &stats),
+                            Ok(bytes) => {
+                                writer.submit(bytes, Manifest::diff_name(step), &stats)
+                            }
                             Err(e) => log::error!("encode diff {step}: {e:#}"),
                         }
                     }
@@ -186,16 +332,20 @@ fn run_loop(
                 if let Some(c) = batch.flush() {
                     let (lo, hi) = (c.step_lo, c.step_hi);
                     match finalize(c, cfg.model_sig, cfg.codec) {
-                        Ok(bytes) => put(bytes, Manifest::batch_name(lo, hi), &stats),
+                        Ok(bytes) => writer.submit(bytes, Manifest::batch_name(lo, hi), &stats),
                         Err(e) => log::error!("encode batch: {e:#}"),
                     }
                 }
                 match write_full(&state, cfg.model_sig, cfg.codec) {
                     Ok(bytes) => {
-                        put(bytes, Manifest::full_name(state.step), &stats);
+                        writer.submit(bytes, Manifest::full_name(state.step), &stats);
                         stats.lock().unwrap().full_ckpts += 1;
                         if cfg.gc {
-                            if let Err(e) = Manifest::gc(store.as_ref()) {
+                            // GC keys on the newest durable full: drain the
+                            // pool so it never deletes the chain a not-yet-
+                            // committed full is supposed to supersede
+                            writer.barrier(&stats);
+                            if let Err(e) = Manifest::gc(writer.view()) {
                                 log::warn!("gc failed: {e:#}");
                             }
                         }
@@ -209,9 +359,13 @@ fn run_loop(
     if let Some(c) = batch.flush() {
         let (lo, hi) = (c.step_lo, c.step_hi);
         if let Ok(bytes) = finalize(c, cfg.model_sig, cfg.codec) {
-            put(bytes, Manifest::batch_name(lo, hi), &stats);
+            writer.submit(bytes, Manifest::batch_name(lo, hi), &stats);
         }
     }
+    // shutdown barrier: every enqueued write must commit (or report) before
+    // `finish()` returns to the caller
+    writer.barrier(&stats);
+    writer.finish(&stats);
 }
 
 fn handle_sparse(
@@ -220,11 +374,11 @@ fn handle_sparse(
     batch: &mut BatchBuffer,
     cfg: &CkptConfig,
     stats: &Arc<Mutex<CkptStats>>,
-    put: &mut impl FnMut(Vec<u8>, String, &Mutex<CkptStats>),
+    writer: &mut Writer,
 ) {
     if cfg.batch_size <= 1 {
         match write_diff(&DiffPayload::Gradient(sparse), cfg.model_sig, step, cfg.codec) {
-            Ok(bytes) => put(bytes, Manifest::diff_name(step), stats),
+            Ok(bytes) => writer.submit(bytes, Manifest::diff_name(step), stats),
             Err(e) => log::error!("encode diff {step}: {e:#}"),
         }
         return;
@@ -237,7 +391,7 @@ fn handle_sparse(
     if let Some(c) = maybe {
         let (lo, hi) = (c.step_lo, c.step_hi);
         match finalize(c, cfg.model_sig, cfg.codec) {
-            Ok(bytes) => put(bytes, Manifest::batch_name(lo, hi), stats),
+            Ok(bytes) => writer.submit(bytes, Manifest::batch_name(lo, hi), stats),
             Err(e) => log::error!("encode batch: {e:#}"),
         }
     }
@@ -268,6 +422,7 @@ mod tests {
             codec: PayloadCodec::Raw,
             queue_capacity: 4,
             gc: false,
+            ..CkptConfig::default()
         }
     }
 
@@ -342,6 +497,89 @@ mod tests {
         assert_eq!(stats.writes, 1, "partial batch must still persist");
         let names = store.list().unwrap();
         assert!(names[0].starts_with("batch-"), "{names:?}");
+    }
+
+    #[test]
+    fn engine_mode_recovers_identically_to_direct() {
+        let n = 150;
+        let run = |n_shards: usize, writers: usize| -> (Arc<dyn StorageBackend>, CkptStats) {
+            let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+            let mut c = cfg(n, 2);
+            c.n_shards = n_shards;
+            c.writers = writers;
+            let ck = Checkpointer::spawn(Arc::clone(&store), c);
+            let mut rng = Rng::new(21);
+            let mut state = ModelState::new(Flat(vec![0.25; n]));
+            ck.queue.put(0, Arc::new(CkptItem::Full(state.clone())));
+            let adam = Adam::default();
+            for step in 1..=6u64 {
+                let g = grad(&mut rng, n);
+                adam.apply_sparse(&mut state, &SparseGrad::from_dense(&g));
+                ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+            }
+            (store, ck.finish())
+        };
+        let (direct_store, direct_stats) = run(1, 1);
+        let (eng_store, eng_stats) = run(4, 3);
+        assert_eq!(direct_stats.writes, eng_stats.writes);
+        assert_eq!(direct_stats.errors, 0);
+        assert_eq!(eng_stats.errors, 0);
+        assert_eq!(eng_stats.shard_writes, 4 * 5, "4 shards + index per object");
+        assert!(eng_stats.inflight_peak >= 1);
+        assert_eq!(direct_stats.shard_writes, 0);
+
+        let adam = Adam::default();
+        let sig = model_signature("t", n);
+        let (a, _) =
+            recover(direct_store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+        let reader = crate::storage::Sharded::new(eng_store, 1, 1);
+        let (b, _) = recover(&reader, sig, &adam, RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(a, b, "sharded engine must be bit-identical to direct writes");
+    }
+
+    #[test]
+    fn engine_mode_gc_waits_for_inflight_full() {
+        let n = 100;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let mut c = cfg(n, 1);
+        c.gc = true;
+        c.n_shards = 2;
+        c.writers = 2;
+        let ck = Checkpointer::spawn(Arc::clone(&store), c);
+        let mut rng = Rng::new(31);
+        ck.queue.put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.1; n])))));
+        for step in 1..=3u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        let mut st = ModelState::new(Flat(vec![0.2; n]));
+        st.step = 3;
+        ck.queue.put(3, Arc::new(CkptItem::Full(st)));
+        let stats = ck.finish();
+        assert_eq!(stats.errors, 0);
+        // GC ran against the logical view: only the newest full survives
+        let reader = crate::storage::Sharded::new(store, 1, 1);
+        let names = reader.list().unwrap();
+        assert_eq!(names, vec![Manifest::full_name(3)], "{names:?}");
+    }
+
+    #[test]
+    fn injected_put_failures_hit_the_errors_counter() {
+        use crate::storage::{FaultConfig, FaultyStore};
+        let n = 120;
+        // grace covers the anchor full write; every later put fails
+        let store: Arc<dyn StorageBackend> = Arc::new(FaultyStore::new(
+            MemStore::new(),
+            FaultConfig { put_fail: 1.0, grace_ops: 1, ..FaultConfig::default() },
+        ));
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg(n, 1));
+        let mut rng = Rng::new(17);
+        ck.queue.put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.0; n])))));
+        for step in 1..=4u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        let stats = ck.finish();
+        assert_eq!(stats.writes, 1, "only the in-grace anchor landed");
+        assert_eq!(stats.errors, 4, "every post-grace diff write must be counted");
     }
 
     #[test]

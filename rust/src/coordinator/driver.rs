@@ -114,6 +114,11 @@ pub struct TrainConfig {
     pub eval_every: u64,
     /// snapshot pool size for LowDiff+
     pub snapshot_threads: usize,
+    /// shards per checkpoint object (>1 routes persistence through the
+    /// sharded async storage engine)
+    pub n_shards: usize,
+    /// storage writer-pool threads for the sharded engine
+    pub writers: usize,
 }
 
 impl Default for TrainConfig {
@@ -134,6 +139,8 @@ impl Default for TrainConfig {
             recovery_mode: RecoveryMode::SerialReplay,
             eval_every: 10,
             snapshot_threads: 2,
+            n_shards: 1,
+            writers: 1,
         }
     }
 }
@@ -202,6 +209,13 @@ pub fn train(
 
     // per-strategy checkpointing processes
     let mem_tier: Arc<dyn StorageBackend> = Arc::new(crate::storage::MemStore::new());
+    // recovery/GC interop must see logical objects even when the
+    // checkpointer writes them sharded
+    let logical: Arc<dyn StorageBackend> = if cfg.n_shards > 1 || cfg.writers > 1 {
+        Arc::new(crate::storage::Sharded::new(Arc::clone(&store), 1, 1))
+    } else {
+        Arc::clone(&store)
+    };
     let mut procs = spawn_procs(cfg, sig, layout, &state, &store, &mem_tier);
     // anchor the differential chain: a recovery needs a base full
     // checkpoint (Eq. (6) starts from C^F)
@@ -383,7 +397,7 @@ pub fn train(
             report.recoveries += 1;
             let t0 = Instant::now();
             let (recovered, from_memory) =
-                handle_failure(kind, cfg, procs, &store, &mem_tier, sig, &adam, &params0)?;
+                handle_failure(kind, cfg, procs, &logical, &mem_tier, sig, &adam, &params0)?;
             let lost = step.saturating_sub(recovered.step);
             report.lost_iters += lost;
             log::info!(
@@ -399,7 +413,7 @@ pub fn train(
             }
             prev_state_for_dc = (cfg.strategy == StrategyKind::NaiveDc).then(|| state.clone());
             // drop differentials from the lost timeline (steps > recovered)
-            let _ = Manifest::truncate_after(store.as_ref(), state.step);
+            let _ = Manifest::truncate_after(logical.as_ref(), state.step);
             // restart the checkpointing process (new process after crash)
             procs = spawn_procs(cfg, sig, layout, &state, &store, &mem_tier);
             anchor_chain(&mut procs, &state, &mut report);
@@ -451,6 +465,8 @@ fn spawn_procs(
         codec: cfg.codec,
         queue_capacity: cfg.queue_capacity,
         gc: true,
+        n_shards: cfg.n_shards,
+        writers: cfg.writers,
     };
     match cfg.strategy {
         StrategyKind::None => Procs::NoneAtAll,
@@ -465,9 +481,11 @@ fn spawn_procs(
             ),
         },
         StrategyKind::Gemini => Procs::Gemini {
+            // the memory tier stays single-object: software-failure
+            // recovery reads it raw, and sharding a memcpy buys nothing
             mem: Checkpointer::spawn(
                 Arc::clone(mem_tier),
-                CkptConfig { batch_size: 1, ..base.clone() },
+                CkptConfig { batch_size: 1, n_shards: 1, writers: 1, ..base.clone() },
             ),
             disk: Checkpointer::spawn(Arc::clone(store), base),
         },
@@ -570,6 +588,9 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             report.writes += s.writes;
             report.bytes_written += s.bytes_written;
             report.peak_buffered_bytes = report.peak_buffered_bytes.max(s.peak_buffered_bytes);
+            report.shard_writes += s.shard_writes;
+            report.spill_bytes += s.spill_bytes;
+            report.inflight_peak = report.inflight_peak.max(s.inflight_peak);
         }
         Procs::Gemini { mem, disk } => {
             let sm = mem.finish();
@@ -577,6 +598,9 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             // memory-tier traffic isn't storage I/O; only disk writes count
             report.writes += sd.writes;
             report.bytes_written += sd.bytes_written;
+            report.shard_writes += sd.shard_writes;
+            report.spill_bytes += sd.spill_bytes;
+            report.inflight_peak = report.inflight_peak.max(sd.inflight_peak);
             let _ = sm;
         }
         Procs::Plus { plus } => {

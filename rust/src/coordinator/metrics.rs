@@ -34,6 +34,12 @@ pub struct RunReport {
     pub bytes_written: u64,
     /// peak bytes pending in the CPU batch buffer
     pub peak_buffered_bytes: usize,
+    /// physical shard/commit objects written by the sharded engine
+    pub shard_writes: u64,
+    /// fast→durable tier spill traffic (Tiered backend)
+    pub spill_bytes: u64,
+    /// peak logical checkpoint writes in flight on the writer pool
+    pub inflight_peak: usize,
     pub recoveries: u64,
     pub recovery_secs: f64,
     /// iterations lost to failures and re-run

@@ -28,8 +28,12 @@ commands:
            [--iters N] [--workers W] [--full-every F] [--batch-size B]
            [--diff-every D] [--ckpt-dir DIR] [--mtbf SECS] [--zstd]
            [--batch-mode sum|concat] [--seed S]
+           [--shards N]   checkpoint shards per object (>1 = sharded async engine)
+           [--writers W]  storage writer-pool threads for the sharded engine
+           [--fsync]      fsync files AND parent dir on every put (durable)
   recover  --model <name> --ckpt-dir DIR [--parallel]
-  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|all>
+           (reads sharded and single-object layouts transparently)
+  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|all>
   info     --model <name>
 ";
 
@@ -43,7 +47,7 @@ fn main() {
 }
 
 fn run(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["zstd", "parallel", "verbose"])?;
+    let args = Args::parse(raw, &["zstd", "parallel", "verbose", "fsync"])?;
     match args.subcommand(USAGE)? {
         "train" => cmd_train(&args),
         "recover" => cmd_recover(&args),
@@ -75,6 +79,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.parse_or("seed", 42u64)?,
         mtbf_secs: args.get("mtbf").map(|s| s.parse()).transpose()?,
         eval_every: args.parse_or("eval-every", 10u64)?,
+        n_shards: args.parse_or("shards", 1usize)?,
+        writers: args.parse_or("writers", 1usize)?,
         ..TrainConfig::default()
     };
 
@@ -87,7 +93,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.iters,
         ckpt_dir.display()
     );
-    let store: Arc<dyn StorageBackend> = Arc::new(LocalDir::new(&ckpt_dir)?);
+    let store: Arc<dyn StorageBackend> =
+        Arc::new(LocalDir::new(&ckpt_dir)?.with_fsync(args.flag("fsync")));
     let report = train(&mrt, store, &cfg)?;
     println!("{}", report.row());
     for (step, loss) in &report.losses {
@@ -106,7 +113,13 @@ fn cmd_recover(args: &Args) -> Result<()> {
     } else {
         RecoveryMode::SerialReplay
     };
-    let store = LocalDir::new(&ckpt_dir)?;
+    // the sharded view reads both layouts: shard sets via their commit
+    // record (shards loaded in parallel), plain objects via fallback
+    let store = lowdiff::storage::Sharded::new(
+        Arc::new(LocalDir::new(&ckpt_dir)?) as Arc<dyn StorageBackend>,
+        1,
+        2,
+    );
     let adam = Adam { lr: mrt.layout.lr as f32 };
     let (state, stats) = recover(&store, sig, &adam, mode)?;
     println!(
@@ -117,6 +130,12 @@ fn cmd_recover(args: &Args) -> Result<()> {
         stats.wall_secs,
         state.params.l2_norm()
     );
+    if stats.damaged_objects > 0 || stats.dropped_diff_steps > 0 {
+        println!(
+            "warning: chain truncated ({} damaged objects, {} diff steps dropped)",
+            stats.damaged_objects, stats.dropped_diff_steps
+        );
+    }
     Ok(())
 }
 

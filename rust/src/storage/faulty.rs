@@ -1,0 +1,198 @@
+//! Deterministic fault injection for storage paths.
+//!
+//! Wraps any backend and injects, on a seeded [`Rng`] schedule:
+//! - **put errors**: the write fails cleanly (nothing lands);
+//! - **torn writes**: a strict prefix of the bytes lands and the put
+//!   *reports success* — the lying-hardware / crash-mid-write case that
+//!   per-shard CRCs and container end-magic must catch at read time;
+//! - **get errors**: transient read failures.
+//!
+//! Determinism: one RNG draw per operation, in operation order. Drive the
+//! store from a single thread (or a 1-writer pool) for exactly
+//! reproducible schedules; under a multi-writer pool the *set* of faults
+//! is still seed-stable per operation count, only their assignment to
+//! names can vary with interleaving.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::storage::{StorageBackend, StorageStats};
+use crate::util::rng::Rng;
+
+/// Fault schedule configuration. Rates are probabilities in [0, 1].
+#[derive(Clone, Copy, Debug)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// P(put returns Err with nothing written)
+    pub put_fail: f64,
+    /// P(put writes a truncated prefix and returns Ok)
+    pub torn_write: f64,
+    /// P(get returns Err)
+    pub get_fail: f64,
+    /// operations to pass through before any fault fires (lets tests lay
+    /// down a known-good base checkpoint first)
+    pub grace_ops: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { seed: 0xFA017, put_fail: 0.0, torn_write: 0.0, get_fail: 0.0, grace_ops: 0 }
+    }
+}
+
+/// Injected-fault counters (for asserting the schedule actually fired).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub put_errors: u64,
+    pub torn_writes: u64,
+    pub get_errors: u64,
+    pub ops: u64,
+}
+
+struct FaultState {
+    rng: Rng,
+    counts: FaultCounts,
+}
+
+/// Fault-injecting wrapper around any [`StorageBackend`].
+pub struct FaultyStore<B: StorageBackend> {
+    inner: B,
+    cfg: FaultConfig,
+    state: Mutex<FaultState>,
+}
+
+impl<B: StorageBackend> FaultyStore<B> {
+    pub fn new(inner: B, cfg: FaultConfig) -> FaultyStore<B> {
+        FaultyStore {
+            inner,
+            cfg,
+            state: Mutex::new(FaultState { rng: Rng::new(cfg.seed), counts: FaultCounts::default() }),
+        }
+    }
+
+    pub fn injected(&self) -> FaultCounts {
+        self.state.lock().unwrap().counts
+    }
+
+    /// Draw the fate of the next operation: (in_grace, uniform draw,
+    /// truncation fraction for torn writes).
+    fn draw(&self) -> (bool, f64, f64) {
+        let mut st = self.state.lock().unwrap();
+        st.counts.ops += 1;
+        let in_grace = st.counts.ops <= self.cfg.grace_ops;
+        let u = st.rng.next_f64();
+        let frac = st.rng.next_f64();
+        (in_grace, u, frac)
+    }
+}
+
+impl<B: StorageBackend> StorageBackend for FaultyStore<B> {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let (in_grace, u, frac) = self.draw();
+        if !in_grace {
+            if u < self.cfg.put_fail {
+                self.state.lock().unwrap().counts.put_errors += 1;
+                return Err(anyhow!("injected put failure for {name}"));
+            }
+            if u < self.cfg.put_fail + self.cfg.torn_write && !bytes.is_empty() {
+                self.state.lock().unwrap().counts.torn_writes += 1;
+                // strict prefix: at least 0, at most len-1 bytes survive
+                let keep = ((bytes.len() as f64) * frac) as usize;
+                let keep = keep.min(bytes.len() - 1);
+                self.inner.put(name, &bytes[..keep])?;
+                return Ok(()); // the lie: caller believes the write landed
+            }
+        }
+        self.inner.put(name, bytes)
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        let (in_grace, u, _) = self.draw();
+        if !in_grace && u < self.cfg.get_fail {
+            self.state.lock().unwrap().counts.get_errors += 1;
+            return Err(anyhow!("injected get failure for {name}"));
+        }
+        self.inner.get(name)
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        self.inner.delete(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.inner.exists(name)
+    }
+
+    fn storage_stats(&self) -> StorageStats {
+        self.inner.storage_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    #[test]
+    fn deterministic_schedule() {
+        let run = |seed: u64| -> (FaultCounts, Vec<bool>) {
+            let s = FaultyStore::new(
+                MemStore::new(),
+                FaultConfig { seed, put_fail: 0.3, ..FaultConfig::default() },
+            );
+            let outcomes: Vec<bool> =
+                (0..50).map(|i| s.put(&format!("o{i}"), b"x").is_ok()).collect();
+            (s.injected(), outcomes)
+        };
+        let (c1, o1) = run(7);
+        let (c2, o2) = run(7);
+        assert_eq!(c1, c2);
+        assert_eq!(o1, o2);
+        assert!(c1.put_errors > 0, "schedule must actually fire: {c1:?}");
+        let (c3, _) = run(8);
+        assert_ne!(c1.put_errors, c3.put_errors, "different seed, different schedule");
+    }
+
+    #[test]
+    fn grace_period_passes_through() {
+        let s = FaultyStore::new(
+            MemStore::new(),
+            FaultConfig { put_fail: 1.0, grace_ops: 5, ..FaultConfig::default() },
+        );
+        for i in 0..5 {
+            s.put(&format!("g{i}"), b"ok").unwrap();
+        }
+        assert!(s.put("post-grace", b"x").is_err());
+        assert_eq!(s.injected().put_errors, 1);
+    }
+
+    #[test]
+    fn torn_write_lies_and_truncates() {
+        let s = FaultyStore::new(
+            MemStore::new(),
+            FaultConfig { torn_write: 1.0, ..FaultConfig::default() },
+        );
+        let data = vec![9u8; 100];
+        s.put("torn", &data).unwrap(); // reports success
+        let stored = s.get("torn").unwrap();
+        assert!(stored.len() < data.len(), "must be a strict prefix");
+        assert_eq!(stored, data[..stored.len()]);
+        assert_eq!(s.injected().torn_writes, 1);
+    }
+
+    #[test]
+    fn get_failures_fire() {
+        let s = FaultyStore::new(
+            MemStore::new(),
+            FaultConfig { get_fail: 1.0, grace_ops: 1, ..FaultConfig::default() },
+        );
+        s.put("a", b"x").unwrap(); // op 1: in grace
+        assert!(s.get("a").is_err());
+        assert_eq!(s.injected().get_errors, 1);
+    }
+}

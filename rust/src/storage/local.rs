@@ -1,0 +1,162 @@
+//! Real directory-backed store (atomic rename, optional fsync).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::storage::StorageBackend;
+
+/// Directory of checkpoint objects, one file per object.
+///
+/// Writes go to `{name}.tmp` and are atomically renamed into place; with
+/// [`with_fsync`](LocalDir::with_fsync) both the file contents *and the
+/// parent directory entry* are fsynced, so a completed `put` survives power
+/// loss (rename durability requires the directory fsync — see POSIX
+/// `fsync(2)` notes; the classic "rename without dir fsync" gap left the
+/// object vulnerable until the next journal flush).
+pub struct LocalDir {
+    root: PathBuf,
+    fsync: bool,
+}
+
+impl LocalDir {
+    pub fn new(root: impl Into<PathBuf>) -> Result<LocalDir> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating {}", root.display()))?;
+        Ok(LocalDir { root, fsync: false })
+    }
+
+    /// Enable fsync-on-put (durability at the cost of write latency).
+    pub fn with_fsync(mut self, fsync: bool) -> Self {
+        self.fsync = fsync;
+        self
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        // flatten any path separators so names can't escape the root
+        self.root.join(name.replace('/', "_"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Persist the directory entry after a rename. Errors are surfaced:
+    /// claiming durability while the metadata is only in the page cache is
+    /// exactly the torn-write class the recovery tests hunt for.
+    fn sync_dir(&self) -> Result<()> {
+        let dir = std::fs::File::open(&self.root)
+            .with_context(|| format!("open dir {}", self.root.display()))?;
+        dir.sync_all()
+            .with_context(|| format!("fsync dir {}", self.root.display()))
+    }
+}
+
+impl StorageBackend for LocalDir {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let tmp = self.path(&format!("{name}.tmp"));
+        let fin = self.path(name);
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        if self.fsync {
+            f.sync_all()?;
+        }
+        drop(f);
+        std::fs::rename(&tmp, &fin)?;
+        if self.fsync {
+            self.sync_dir()?;
+        }
+        Ok(())
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        std::fs::read(self.path(name)).with_context(|| format!("read {name}"))
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        std::fs::remove_file(self.path(name)).with_context(|| format!("delete {name}"))
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for e in std::fs::read_dir(&self.root)? {
+            let e = e?;
+            let name = e.file_name().to_string_lossy().to_string();
+            if !name.ends_with(".tmp") {
+                out.push(name);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Metadata-only check: a `stat` instead of reading the whole object
+    /// (the default trait impl pays a full `get`).
+    fn exists(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lowdiff_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn localdir_roundtrip() {
+        let dir = tmpdir("test");
+        let s = LocalDir::new(&dir).unwrap();
+        s.put("ckpt-1", b"abc").unwrap();
+        s.put("ckpt-2", b"defg").unwrap();
+        assert_eq!(s.get("ckpt-1").unwrap(), b"abc");
+        assert_eq!(s.list().unwrap(), vec!["ckpt-1", "ckpt-2"]);
+        s.delete("ckpt-1").unwrap();
+        assert_eq!(s.list().unwrap(), vec!["ckpt-2"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn localdir_overwrite_is_atomic_replace() {
+        let dir = tmpdir("test_ow");
+        let s = LocalDir::new(&dir).unwrap();
+        s.put("x", b"one").unwrap();
+        s.put("x", b"two").unwrap();
+        assert_eq!(s.get("x").unwrap(), b"two");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fsync_put_syncs_file_and_directory() {
+        // regression: the pre-fix put fsynced the file but not the parent
+        // directory entry. We can't pull the power in a unit test; assert
+        // the fsync path completes and the object is visible + readable.
+        let dir = tmpdir("test_fsync");
+        let s = LocalDir::new(&dir).unwrap().with_fsync(true);
+        s.put("durable", b"payload").unwrap();
+        assert_eq!(s.get("durable").unwrap(), b"payload");
+        assert!(s.exists("durable"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn exists_is_stat_based_and_correct() {
+        // regression: exists() used to route through get(), reading the
+        // whole object. The override must agree with get() on both
+        // present and absent names, including flattened path separators.
+        let dir = tmpdir("test_exists");
+        let s = LocalDir::new(&dir).unwrap();
+        s.put("a/b", &vec![7u8; 64 * 1024]).unwrap();
+        assert!(s.exists("a/b"));
+        assert!(s.exists("a_b"), "separator flattening maps to the same file");
+        assert!(!s.exists("missing"));
+        // a .tmp leftover is not an object, and exists must not invent it
+        assert!(!s.exists("ghost.tmp"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

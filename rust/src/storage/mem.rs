@@ -1,0 +1,88 @@
+//! In-memory store (Gemini-style CPU-memory checkpoint tier; test backend).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::storage::StorageBackend;
+
+/// Lock-protected name → bytes map. Used as the fast tier of [`Tiered`]
+/// (crate::storage::Tiered) and as the unit-test backend everywhere.
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.map.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+
+    /// Drop every object (simulates losing the CPU-memory tier in a crash).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+impl StorageBackend for MemStore {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        self.map.lock().unwrap().insert(name.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        self.map
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no object {name}"))
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        self.map.lock().unwrap().remove(name);
+        Ok(())
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let mut v: Vec<String> = self.map.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        Ok(v)
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.map.lock().unwrap().contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memstore_roundtrip() {
+        let s = MemStore::new();
+        s.put("a", b"hello").unwrap();
+        assert_eq!(s.get("a").unwrap(), b"hello");
+        assert!(s.get("b").is_err());
+        assert_eq!(s.list().unwrap(), vec!["a"]);
+        s.delete("a").unwrap();
+        assert!(!s.exists("a"));
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let s = MemStore::new();
+        s.put("a", b"1").unwrap();
+        s.put("b", b"22").unwrap();
+        assert_eq!(s.total_bytes(), 3);
+        s.clear();
+        assert_eq!(s.total_bytes(), 0);
+        assert!(s.list().unwrap().is_empty());
+    }
+}

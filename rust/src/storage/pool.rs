@@ -1,0 +1,320 @@
+//! Fixed-size writer thread pool with future-style completion handles.
+//!
+//! The checkpointing process enqueues storage writes and returns
+//! immediately; [`WriteHandle`] lets it reap completions (non-blocking) or
+//! barrier on them (before GC, at shutdown). The pool is strict FIFO —
+//! [`Sharded`](crate::storage::Sharded) relies on that to enqueue a
+//! commit-record job *after* its shard jobs without risking deadlock: by
+//! the time the finalizer is dequeued, every shard job ahead of it has
+//! already been dequeued by some worker.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolQueue {
+    jobs: VecDeque<Job>,
+    closed: bool,
+    /// crash simulation: discard queued jobs, workers exit immediately
+    abandoned: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    cv: Condvar,
+}
+
+/// Fixed-size pool of storage writer threads.
+pub struct WriterPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WriterPool {
+    /// Spawn `n` writer threads (`n >= 1`).
+    pub fn new(n: usize) -> WriterPool {
+        let n = n.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue {
+                jobs: VecDeque::new(),
+                closed: false,
+                abandoned: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("storage-wr-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawning storage writer")
+            })
+            .collect();
+        WriterPool { shared, workers }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job; panics if the pool is already closed.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        assert!(!q.closed && !q.abandoned, "submit on closed writer pool");
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Queued-but-not-yet-dequeued job count (diagnostics only).
+    pub fn backlog(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Crash simulation: discard every queued job and detach the worker
+    /// threads without joining them. Jobs already *dequeued* may still
+    /// finish (a real crash can also land mid-syscall); jobs still queued
+    /// never run. After `kill` the pool is unusable.
+    pub fn kill(mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.abandoned = true;
+            q.jobs.clear();
+        }
+        self.shared.cv.notify_all();
+        // detach: dropping a JoinHandle leaves the thread running free
+        self.workers.clear();
+    }
+}
+
+impl Drop for WriterPool {
+    /// Graceful shutdown: drain the queue, then join every worker.
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.abandoned {
+                    return;
+                }
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Completion state shared between a writer job and its waiters. Errors are
+/// carried as strings (anyhow errors aren't `Clone`; handles are).
+struct HandleInner {
+    state: Mutex<Option<Result<(), String>>>,
+    cv: Condvar,
+}
+
+/// Future-style handle to one logical asynchronous write.
+#[derive(Clone)]
+pub struct WriteHandle {
+    inner: Arc<HandleInner>,
+}
+
+impl WriteHandle {
+    /// A handle that will be completed later (by a pool job).
+    pub fn pending() -> WriteHandle {
+        WriteHandle {
+            inner: Arc::new(HandleInner { state: Mutex::new(None), cv: Condvar::new() }),
+        }
+    }
+
+    /// An already-completed handle (synchronous fast paths).
+    pub fn ready(res: Result<(), String>) -> WriteHandle {
+        let h = WriteHandle::pending();
+        h.complete(res);
+        h
+    }
+
+    /// Resolve the handle; waiters wake. Completing twice keeps the first
+    /// result (a killed pool may race a late worker).
+    pub fn complete(&self, res: Result<(), String>) {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.is_none() {
+            *st = Some(res);
+            self.inner.cv.notify_all();
+        }
+    }
+
+    /// Non-blocking probe: `None` while in flight.
+    pub fn try_result(&self) -> Option<Result<(), String>> {
+        self.inner.state.lock().unwrap().clone()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.inner.state.lock().unwrap().is_some()
+    }
+
+    /// Block until the write completes.
+    pub fn wait(&self) -> Result<(), String> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(res) = st.as_ref() {
+                return res.clone();
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Countdown aggregator: one slot per shard write; the finalizer blocks on
+/// [`ShardAgg::wait`] and sees the first error (if any).
+pub(crate) struct ShardAgg {
+    state: Mutex<AggState>,
+    cv: Condvar,
+}
+
+struct AggState {
+    remaining: usize,
+    first_err: Option<String>,
+}
+
+impl ShardAgg {
+    pub(crate) fn new(n: usize) -> Arc<ShardAgg> {
+        Arc::new(ShardAgg {
+            state: Mutex::new(AggState { remaining: n, first_err: None }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub(crate) fn done(&self, res: Result<(), String>) {
+        let mut st = self.state.lock().unwrap();
+        if let Err(e) = res {
+            if st.first_err.is_none() {
+                st.first_err = Some(e);
+            }
+        }
+        st.remaining = st.remaining.saturating_sub(1);
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    pub(crate) fn wait(&self) -> Result<(), String> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        match &st.first_err {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs_fifo_per_worker() {
+        let pool = WriterPool::new(3);
+        let count = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<WriteHandle> = (0..32)
+            .map(|_| {
+                let h = WriteHandle::pending();
+                let hc = h.clone();
+                let c = Arc::clone(&count);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    hc.complete(Ok(()));
+                });
+                h
+            })
+            .collect();
+        for h in &handles {
+            h.wait().unwrap();
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn drop_drains_queue_before_join() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WriterPool::new(1);
+            for _ in 0..16 {
+                let c = Arc::clone(&count);
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins after draining
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn kill_discards_queued_jobs() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let pool = WriterPool::new(1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        // first job blocks the single worker so the rest stay queued
+        let g = Arc::clone(&gate);
+        pool.submit(move || {
+            let (m, cv) = &*g;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        for _ in 0..8 {
+            let c = Arc::clone(&count);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.kill();
+        // release the blocked worker; its queue is gone, so nothing runs
+        let (m, cv) = &*gate;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(count.load(Ordering::SeqCst), 0, "queued jobs must not run after kill");
+    }
+
+    #[test]
+    fn handle_error_propagates_and_first_completion_wins() {
+        let h = WriteHandle::ready(Err("boom".into()));
+        h.complete(Ok(()));
+        assert_eq!(h.wait().unwrap_err(), "boom");
+        assert!(h.is_done());
+    }
+
+    #[test]
+    fn shard_agg_reports_first_error() {
+        let agg = ShardAgg::new(3);
+        agg.done(Ok(()));
+        agg.done(Err("shard 1 died".into()));
+        agg.done(Err("shard 2 died".into()));
+        assert_eq!(agg.wait().unwrap_err(), "shard 1 died");
+    }
+}

@@ -5,12 +5,17 @@
 use std::sync::Arc;
 
 use lowdiff::checkpoint::batched::BatchMode;
-use lowdiff::checkpoint::format::model_signature;
+use lowdiff::checkpoint::format::{model_signature, PayloadCodec};
+use lowdiff::compress::topk_mask;
+use lowdiff::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
 use lowdiff::coordinator::driver::{train, StrategyKind, TrainConfig};
 use lowdiff::coordinator::recovery::{recover, RecoveryMode};
-use lowdiff::optim::Adam;
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::prop_assert;
 use lowdiff::runtime::{artifacts_dir, ModelRuntime};
-use lowdiff::storage::{MemStore, StorageBackend};
+use lowdiff::storage::{MemStore, Sharded, StorageBackend, Tiered};
+use lowdiff::tensor::Flat;
+use lowdiff::util::prop::prop_check;
 /// PJRT clients are thread-local (Rc internals): each test builds its own.
 fn load_mrt() -> ModelRuntime {
     ModelRuntime::load(&artifacts_dir(), "tiny").expect("run `make artifacts` first")
@@ -170,6 +175,89 @@ fn failure_injection_recovers_and_completes() {
     if report.recoveries > 0 {
         assert!(report.recovery_secs > 0.0);
     }
+}
+
+/// Property: sharded + tiered persistence recovers **bit-identically** to
+/// the classic single-object synchronous path, across random shard counts,
+/// writer-pool sizes, batch sizes, and batch modes. Runs without PJRT
+/// artifacts (drives the checkpointer directly).
+#[test]
+fn sharded_tiered_recovery_matches_single_object_property() {
+    prop_check("sharded_tiered_recovery", 20, |rng| {
+        let n = rng.range(40, 160);
+        let steps = rng.range(3, 11) as u64;
+        let batch_size = rng.range(1, 5);
+        let batch_mode = if rng.next_f64() < 0.5 { BatchMode::Sum } else { BatchMode::Concat };
+        let n_shards = rng.range(1, 6);
+        let writers = rng.range(1, 5);
+        let sig = model_signature("prop", n);
+
+        // one shared gradient stream for both pipelines
+        let grads: Vec<Flat> = (0..steps)
+            .map(|_| {
+                let mut g = vec![0f32; n];
+                rng.fill_normal_f32(&mut g);
+                topk_mask(&Flat(g), n / 10 + 1)
+            })
+            .collect();
+        let state0 = ModelState::new(Flat(vec![0.3; n]));
+
+        let drive = |store: Arc<dyn StorageBackend>, shards: usize, writers: usize| {
+            let cfg = CkptConfig {
+                model_sig: sig,
+                batch_size,
+                batch_mode,
+                codec: PayloadCodec::Raw,
+                queue_capacity: 4,
+                gc: false,
+                n_shards: shards,
+                writers,
+            };
+            let ck = Checkpointer::spawn(store, cfg);
+            ck.queue.put(0, Arc::new(CkptItem::Full(state0.clone())));
+            for (i, g) in grads.iter().enumerate() {
+                ck.queue
+                    .put(i as u64 + 1, Arc::new(CkptItem::DiffDense(g.clone())));
+            }
+            ck.finish()
+        };
+
+        // classic path: single object, synchronous, one store
+        let direct: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let dstats = drive(Arc::clone(&direct), 1, 1);
+
+        // engine path: sharded writer pool over a tiered (mem-over-mem)
+        // backend with async spill
+        let fast: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let durable: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let tiered = Arc::new(Tiered::new(Arc::clone(&fast), Arc::clone(&durable)));
+        let estats = drive(tiered.clone() as Arc<dyn StorageBackend>, n_shards, writers);
+        tiered.wait_idle(); // persistence barrier: all spills durable
+
+        prop_assert!(dstats.errors == 0 && estats.errors == 0);
+        prop_assert!(
+            dstats.writes == estats.writes,
+            "logical writes differ: {} vs {}",
+            dstats.writes,
+            estats.writes
+        );
+
+        let adam = Adam::default();
+        let (a, _) = recover(direct.as_ref(), sig, &adam, RecoveryMode::SerialReplay)
+            .map_err(|e| format!("direct recovery: {e:#}"))?;
+        // read back through the engine view over the tiered store
+        let reader = Sharded::new(tiered.clone() as Arc<dyn StorageBackend>, 1, 1);
+        let (b, _) = recover(&reader, sig, &adam, RecoveryMode::SerialReplay)
+            .map_err(|e| format!("tiered recovery: {e:#}"))?;
+        prop_assert!(a == b, "sharded+tiered state diverged from single-object state");
+
+        // crash-and-restart view: the fast tier is gone, durable only
+        let cold = Sharded::new(Arc::clone(&durable), 1, 1);
+        let (c, _) = recover(&cold, sig, &adam, RecoveryMode::SerialReplay)
+            .map_err(|e| format!("durable-only recovery: {e:#}"))?;
+        prop_assert!(a == c, "durable tier alone must reconstruct the same state");
+        Ok(())
+    });
 }
 
 #[test]
