@@ -1,6 +1,9 @@
 //! Minimal bench harness (criterion is unavailable offline): warmup +
 //! timed runs, median-of-N reporting, ns/op and throughput.
 
+// each bench target compiles this module separately and uses a subset
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 pub struct Bench {

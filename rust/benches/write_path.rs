@@ -1,0 +1,246 @@
+//! Write-path copy accounting and throughput: the pre-change multi-copy
+//! pipeline (sparse→section vec → payload concat → container splice →
+//! sync-put `to_vec`) vs the pooled single-pass pipeline
+//! (`write_diff_into` / `BatchBuffer::flush_into` + `Sharded::put_async`
+//! over a shared `PutBuf`).
+//!
+//! The legacy pipeline is reimplemented here verbatim (the library's old
+//! encoders live on only as `#[cfg(test)]` oracles) so both its wall time
+//! and its bytes-copied count are *measured*, not estimated.
+//!
+//! Copy accounting: serialization copies (heap buffer -> heap buffer on
+//! the way to storage). Sum-mode accumulation traffic is reported too but
+//! excluded from the acceptance ratio — both pipelines move those bytes;
+//! the new one just does it without allocating.
+//!
+//! Run: `cargo bench --bench write_path`
+//! Acceptance (ISSUE 2): pooled path copies each differential checkpoint
+//! <= 1/2 the legacy bytes; results recorded in BENCH_write_path.json.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::bench;
+use lowdiff::checkpoint::batched::{BatchBuffer, BatchMode};
+use lowdiff::checkpoint::diff::{write_diff_into, DiffPayload};
+use lowdiff::checkpoint::format::PayloadCodec;
+use lowdiff::compress::topk_mask;
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{MemStore, Sharded, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::bufpool::BufPool;
+use lowdiff::util::rng::Rng;
+
+const N_PARAMS: usize = 1 << 16;
+const RHO: f64 = 0.01;
+const BATCH: usize = 4;
+const N_SHARDS: usize = 4;
+const WRITERS: usize = 2;
+
+fn gradient(rng: &mut Rng) -> SparseGrad {
+    let mut g = vec![0f32; N_PARAMS];
+    rng.fill_normal_f32(&mut g);
+    let k = ((N_PARAMS as f64 * RHO) as usize).max(1);
+    SparseGrad::from_dense(&topk_mask(&Flat(g), k))
+}
+
+// ---- the pre-change pipeline, reimplemented for measurement -------------
+
+/// Old `SparseGrad::to_bytes` → container section vec (copy 1).
+fn legacy_sparse_bytes(g: &SparseGrad, copied: &mut u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(g.encoded_size());
+    out.extend_from_slice(&g.dense_len.to_le_bytes());
+    out.extend_from_slice(&(g.nnz() as u32).to_le_bytes());
+    for i in &g.indices {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for v in &g.values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    *copied += out.len() as u64;
+    out
+}
+
+/// Old `Container::to_bytes` (Raw codec): payload concat (copy 2) + splice
+/// into the container buffer (copy 3).
+fn legacy_container_bytes(
+    kind: u8,
+    model_sig: u64,
+    step_lo: u64,
+    step_hi: u64,
+    sections: &[(String, Vec<u8>)],
+    copied: &mut u64,
+) -> Vec<u8> {
+    let raw_payload: Vec<u8> = {
+        let mut p = Vec::with_capacity(sections.iter().map(|(_, b)| b.len()).sum());
+        for (_, b) in sections {
+            p.extend_from_slice(b);
+        }
+        p
+    };
+    *copied += raw_payload.len() as u64;
+    let crc = crc32fast::hash(&raw_payload);
+    let mut out = Vec::with_capacity(raw_payload.len() + 64);
+    out.extend_from_slice(b"LDCK");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.push(kind);
+    out.push(0); // raw codec
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&model_sig.to_le_bytes());
+    out.extend_from_slice(&step_lo.to_le_bytes());
+    out.extend_from_slice(&step_hi.to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (name, bytes) in sections {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    }
+    out.extend_from_slice(&raw_payload);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(b"KCDL");
+    *copied += out.len() as u64;
+    out
+}
+
+/// One legacy Concat-batch checkpoint, ending in the old sync sharded
+/// put's `bytes.to_vec()` (copy 4).
+fn legacy_concat_batch(grads: &[SparseGrad], eng: &Sharded, step: u64, copied: &mut u64) {
+    let sections: Vec<(String, Vec<u8>)> = grads
+        .iter()
+        .enumerate()
+        .map(|(i, g)| (format!("step-{}", step + i as u64), legacy_sparse_bytes(g, copied)))
+        .collect();
+    let hi = step + grads.len() as u64 - 1;
+    let bytes = legacy_container_bytes(2, 1, step, hi, &sections, copied);
+    *copied += bytes.len() as u64; // old sync put: bytes.to_vec()
+    eng.put_async("batch-bench", bytes).wait().unwrap();
+}
+
+/// One legacy Sum-batch checkpoint: reallocating merge chain + the same
+/// serialization copies. Returns (serialization, accumulation) bytes.
+/// Accumulation counts merge outputs only — the old code *moved* the
+/// first gradient in, where the pooled path copies it into the persistent
+/// accumulator (so pooled accumulation reads ~8*nnz higher by design).
+fn legacy_sum_batch(grads: &[SparseGrad], eng: &Sharded, step: u64) -> (u64, u64) {
+    let (mut ser, mut acc_traffic) = (0u64, 0u64);
+    let mut acc = grads[0].clone(); // stand-in for the old move-in (uncounted)
+    for g in &grads[1..] {
+        acc = acc.merge_sum(g); // fresh union allocation per merge
+        acc_traffic += 8 * acc.nnz() as u64;
+    }
+    let sec = legacy_sparse_bytes(&acc, &mut ser);
+    let bytes = legacy_container_bytes(
+        2,
+        1,
+        step,
+        step + grads.len() as u64 - 1,
+        &[("sum".into(), sec)],
+        &mut ser,
+    );
+    ser += bytes.len() as u64; // old sync put: bytes.to_vec()
+    eng.put_async("batch-bench", bytes).wait().unwrap();
+    (ser, acc_traffic)
+}
+
+// ---- the pooled single-pass pipeline ------------------------------------
+
+/// One pooled batch checkpoint (either mode). Returns (serialization,
+/// accumulation) bytes as counted by the production counters.
+fn pooled_batch(
+    grads: &[SparseGrad],
+    pool: &BufPool,
+    batch: &mut BatchBuffer,
+    eng: &Sharded,
+    step: u64,
+) -> (u64, u64) {
+    for (i, g) in grads.iter().enumerate() {
+        batch.offer(step + i as u64, g.clone());
+    }
+    let mut buf = pool.checkout();
+    let (_, _, appended) =
+        batch.flush_into(1, PayloadCodec::Raw, &mut buf).unwrap().expect("batch");
+    eng.put_async("batch-bench", buf).wait().unwrap();
+    (appended as u64, batch.take_copied())
+}
+
+fn mk_eng() -> Sharded {
+    Sharded::new(Arc::new(MemStore::new()) as Arc<dyn StorageBackend>, N_SHARDS, WRITERS)
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let grads: Vec<SparseGrad> = (0..BATCH).map(|_| gradient(&mut rng)).collect();
+    let nnz: usize = grads.iter().map(|g| g.nnz()).sum();
+    println!(
+        "== write_path: {BATCH}-step batches, {N_PARAMS} params, rho={RHO} ({nnz} nnz total), \
+         {N_SHARDS} shards x {WRITERS} writers ==\n"
+    );
+
+    // ---- bytes copied per checkpoint ------------------------------------
+    // single unbatched diff (batch_size = 1 path)
+    let mut diff_legacy = 0u64;
+    let sec = legacy_sparse_bytes(&grads[0], &mut diff_legacy);
+    let bytes = legacy_container_bytes(1, 1, 1, 1, &[("grad".into(), sec)], &mut diff_legacy);
+    diff_legacy += bytes.len() as u64; // old sync put to_vec
+    let pool = BufPool::new(8);
+    let mut out = pool.checkout();
+    let diff_pooled =
+        write_diff_into(&DiffPayload::Gradient(grads[0].clone()), 1, 1, PayloadCodec::Raw, &mut out)
+            .unwrap() as u64;
+    drop(out);
+    let diff_ratio = diff_legacy as f64 / diff_pooled as f64;
+
+    // Concat batch
+    let mut concat_legacy = 0u64;
+    let eng = mk_eng();
+    legacy_concat_batch(&grads, &eng, 1, &mut concat_legacy);
+    let eng = mk_eng();
+    let mut concat_buf = BatchBuffer::new(BatchMode::Concat, BATCH);
+    let (concat_pooled, _) = pooled_batch(&grads, &pool, &mut concat_buf, &eng, 1);
+    let concat_ratio = concat_legacy as f64 / concat_pooled as f64;
+
+    // Sum batch (accumulation traffic reported separately — it is
+    // inherent to the scheme and identical in both pipelines)
+    let eng = mk_eng();
+    let (sum_legacy, sum_legacy_acc) = legacy_sum_batch(&grads, &eng, 1);
+    let eng = mk_eng();
+    let mut sum_buf = BatchBuffer::new(BatchMode::Sum, BATCH);
+    let (sum_pooled, sum_pooled_acc) = pooled_batch(&grads, &pool, &mut sum_buf, &eng, 1);
+    let sum_ratio = sum_legacy as f64 / sum_pooled as f64;
+
+    println!("bytes copied per differential checkpoint (serialization copies):");
+    println!("  single diff : legacy {diff_legacy:>8} B   pooled {diff_pooled:>8} B   {diff_ratio:>5.2}x");
+    println!("  concat x{BATCH}   : legacy {concat_legacy:>8} B   pooled {concat_pooled:>8} B   {concat_ratio:>5.2}x");
+    println!("  sum x{BATCH}      : legacy {sum_legacy:>8} B   pooled {sum_pooled:>8} B   {sum_ratio:>5.2}x");
+    println!(
+        "  (sum accumulation: legacy {sum_legacy_acc} B merge output w/ per-merge allocs, \
+         pooled {sum_pooled_acc} B refill+merge output, alloc-free)\n"
+    );
+
+    // ---- wall time, steady state ----------------------------------------
+    let eng = mk_eng();
+    let legacy = bench("legacy sum: merge+encode+concat+put", 400, || {
+        let _ = legacy_sum_batch(&grads, &eng, 1);
+    });
+    legacy.report_bytes((sum_legacy + sum_legacy_acc) as usize);
+
+    let eng = mk_eng();
+    let mut buf = BatchBuffer::new(BatchMode::Sum, BATCH);
+    let pooled = bench("pooled sum: offer+flush_into+put_async", 400, || {
+        let _ = pooled_batch(&grads, &pool, &mut buf, &eng, 1);
+    });
+    pooled.report_bytes((sum_pooled + sum_pooled_acc) as usize);
+
+    println!(
+        "\nJSON (paste into BENCH_write_path.json):\n{{\n  \"workload\": {{\"n_params\": {N_PARAMS}, \"rho\": {RHO}, \"batch\": {BATCH}, \"n_shards\": {N_SHARDS}, \"writers\": {WRITERS}}},\n  \"bytes_copied\": {{\n    \"single_diff\": {{\"legacy\": {diff_legacy}, \"pooled\": {diff_pooled}, \"reduction_x\": {diff_ratio:.2}}},\n    \"concat_batch\": {{\"legacy\": {concat_legacy}, \"pooled\": {concat_pooled}, \"reduction_x\": {concat_ratio:.2}}},\n    \"sum_batch\": {{\"legacy\": {sum_legacy}, \"pooled\": {sum_pooled}, \"reduction_x\": {sum_ratio:.2}}}\n  }},\n  \"wall_per_sum_batch_ns\": {{\"legacy\": {:.0}, \"pooled\": {:.0}}}\n}}",
+        legacy.median() * 1e9,
+        pooled.median() * 1e9,
+    );
+
+    assert!(
+        diff_ratio >= 2.0 && concat_ratio >= 2.0,
+        "copy-reduction acceptance failed: diff {diff_ratio:.2}x / concat {concat_ratio:.2}x < 2x"
+    );
+    println!("\nwrite_path bench done (acceptance >= 2x copy reduction: PASS)");
+}

@@ -12,10 +12,23 @@
 //!   exactly as in the paper; drift is quantified in rust/tests/).
 //! - [`BatchMode::Concat`]: store each step's gradient as its own section.
 //!   Slightly larger, but recovery replays steps exactly (bit-faithful).
+//!
+//! Write-path note: `Sum` accumulates **in place** at [`offer`] time into a
+//! persistent accumulator/scratch pair — capacities ratchet up during the
+//! first batch and the steady-state loop performs zero heap allocations —
+//! and [`flush_into`] encodes the finalized container straight into a
+//! caller-provided (pooled) buffer in a single pass. The old
+//! `push`/`flush` + `finalize` sequence is kept as the compatible (and
+//! test-oracle) surface.
+//!
+//! [`offer`]: BatchBuffer::offer
+//! [`flush_into`]: BatchBuffer::flush_into
 
 use anyhow::{ensure, Result};
 
-use crate::checkpoint::format::{CkptKind, Container, PayloadCodec};
+use crate::checkpoint::format::{
+    encode_container_into, CkptKind, Container, ContainerView, PayloadCodec, SectionSrc,
+};
 use crate::sparse::SparseGrad;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,75 +42,217 @@ pub enum BatchMode {
 pub struct BatchBuffer {
     mode: BatchMode,
     batch_size: usize,
+    /// Concat mode: every step's gradient, retained separately.
     pending: Vec<(u64, SparseGrad)>,
+    /// Sum mode: persistent accumulator + merge scratch.
+    acc: SparseGrad,
+    scratch: SparseGrad,
+    count: usize,
+    step_lo: u64,
+    step_hi: u64,
+    /// bytes moved by in-buffer accumulation (acc refill + merge output);
+    /// drained into `CkptStats::bytes_copied` via [`take_copied`].
+    ///
+    /// [`take_copied`]: BatchBuffer::take_copied
+    copied: u64,
 }
 
 impl BatchBuffer {
     pub fn new(mode: BatchMode, batch_size: usize) -> BatchBuffer {
         assert!(batch_size >= 1);
-        BatchBuffer { mode, batch_size, pending: Vec::new() }
+        let empty = SparseGrad { dense_len: 0, indices: Vec::new(), values: Vec::new() };
+        BatchBuffer {
+            mode,
+            batch_size,
+            pending: Vec::new(),
+            acc: empty.clone(),
+            scratch: empty,
+            count: 0,
+            step_lo: 0,
+            step_hi: 0,
+            copied: 0,
+        }
     }
 
+    /// Gradients absorbed since the last flush.
     pub fn len(&self) -> usize {
-        self.pending.len()
+        match self.mode {
+            BatchMode::Sum => self.count,
+            BatchMode::Concat => self.pending.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.len() == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() >= self.batch_size
     }
 
     /// Buffered payload bytes awaiting the batch write (the CPU-memory
-    /// cost that offloading moves off the GPU — Fig. 16b).
+    /// cost that offloading moves off the GPU — Fig. 16b). For `Sum` this
+    /// is the accumulator itself, which is why the paper calls the scheme
+    /// memory-light.
     pub fn buffered_bytes(&self) -> usize {
-        self.pending.iter().map(|(_, g)| g.encoded_size()).sum()
+        match self.mode {
+            BatchMode::Sum => {
+                if self.count == 0 {
+                    0
+                } else {
+                    self.acc.encoded_size()
+                }
+            }
+            BatchMode::Concat => self.pending.iter().map(|(_, g)| g.encoded_size()).sum(),
+        }
+    }
+
+    /// Bytes moved by in-buffer accumulation since the last call.
+    pub fn take_copied(&mut self) -> u64 {
+        std::mem::take(&mut self.copied)
+    }
+
+    /// Absorb one step's compressed gradient; returns `true` when the
+    /// batch is full and must be flushed. `Sum` mode folds the gradient
+    /// into the accumulator immediately (allocation-free once warm).
+    pub fn offer(&mut self, step: u64, grad: SparseGrad) -> bool {
+        match self.mode {
+            BatchMode::Concat => {
+                if let Some((last, _)) = self.pending.last() {
+                    assert!(step > *last, "steps must arrive in order: {step} after {last}");
+                }
+                self.pending.push((step, grad));
+            }
+            BatchMode::Sum => {
+                if self.count == 0 {
+                    self.step_lo = step;
+                    // refill the persistent accumulator (copy, no alloc
+                    // once its capacity covers a batch's union)
+                    self.acc.dense_len = grad.dense_len;
+                    self.acc.indices.clear();
+                    self.acc.values.clear();
+                    self.acc.indices.extend_from_slice(&grad.indices);
+                    self.acc.values.extend_from_slice(&grad.values);
+                    self.copied += 8 * grad.nnz() as u64;
+                } else {
+                    assert!(
+                        step > self.step_hi,
+                        "steps must arrive in order: {step} after {}",
+                        self.step_hi
+                    );
+                    self.acc.merge_sum_into(&grad, &mut self.scratch);
+                    self.copied += 8 * self.acc.nnz() as u64;
+                }
+                self.step_hi = step;
+                self.count += 1;
+            }
+        }
+        self.is_full()
     }
 
     /// Offer one step's compressed gradient; returns `Some(container)` when
-    /// the batch is full and must be written.
+    /// the batch is full. Compatibility wrapper over [`offer`] +
+    /// [`flush`]; the pooled write path uses those directly.
+    ///
+    /// [`offer`]: BatchBuffer::offer
+    /// [`flush`]: BatchBuffer::flush
     pub fn push(&mut self, step: u64, grad: SparseGrad) -> Option<Container> {
-        if let Some((last, _)) = self.pending.last() {
-            assert!(step > *last, "steps must arrive in order: {step} after {last}");
-        }
-        self.pending.push((step, grad));
-        if self.pending.len() >= self.batch_size {
+        if self.offer(step, grad) {
             Some(self.flush().expect("non-empty"))
         } else {
             None
         }
     }
 
-    /// Drain whatever is pending into a batch container (e.g. right before
-    /// a full checkpoint resets the chain). None if empty.
-    pub fn flush(&mut self) -> Option<Container> {
-        if self.pending.is_empty() {
-            return None;
+    /// Single-pass drain: encode whatever is pending as a **finalized**
+    /// batch container (signature + codec applied) straight into `out`,
+    /// typically a pooled buffer. Returns `(step_lo, step_hi,
+    /// bytes_appended)`, or `None` if empty. The encoded bytes are
+    /// bit-identical to `finalize(flush(), ..)` (property-tested).
+    pub fn flush_into(
+        &mut self,
+        model_sig: u64,
+        codec: PayloadCodec,
+        out: &mut Vec<u8>,
+    ) -> Result<Option<(u64, u64, usize)>> {
+        if self.is_empty() {
+            return Ok(None);
         }
-        let step_lo = self.pending.first().unwrap().0;
-        let step_hi = self.pending.last().unwrap().0;
-        let mut c = Container::new(CkptKind::BatchedDiff, 0, step_lo, step_hi);
         match self.mode {
             BatchMode::Sum => {
-                let mut it = self.pending.drain(..);
-                let (_, mut acc) = it.next().unwrap();
-                for (_, g) in it {
-                    acc = acc.merge_sum(&g);
-                }
-                c.push("sum", acc.to_bytes());
+                let (lo, hi) = (self.step_lo, self.step_hi);
+                let n = encode_container_into(
+                    CkptKind::BatchedDiff,
+                    codec,
+                    model_sig,
+                    lo,
+                    hi,
+                    &[SectionSrc::sparse("sum", &self.acc)],
+                    out,
+                )?;
+                self.count = 0;
+                self.acc.indices.clear(); // capacities survive for the next batch
+                self.acc.values.clear();
+                Ok(Some((lo, hi, n)))
             }
             BatchMode::Concat => {
+                let lo = self.pending.first().unwrap().0;
+                let hi = self.pending.last().unwrap().0;
+                let names: Vec<String> =
+                    self.pending.iter().map(|(s, _)| format!("step-{s}")).collect();
+                let secs: Vec<SectionSrc<'_>> = names
+                    .iter()
+                    .zip(self.pending.iter())
+                    .map(|(name, (_, g))| SectionSrc::sparse(name, g))
+                    .collect();
+                let n = encode_container_into(
+                    CkptKind::BatchedDiff,
+                    codec,
+                    model_sig,
+                    lo,
+                    hi,
+                    &secs,
+                    out,
+                )?;
+                self.pending.clear();
+                Ok(Some((lo, hi, n)))
+            }
+        }
+    }
+
+    /// Drain whatever is pending into a batch container (e.g. right before
+    /// a full checkpoint resets the chain). None if empty. Compatibility
+    /// surface: the pooled path is [`flush_into`](BatchBuffer::flush_into).
+    pub fn flush(&mut self) -> Option<Container> {
+        if self.is_empty() {
+            return None;
+        }
+        match self.mode {
+            BatchMode::Sum => {
+                let mut c = Container::new(CkptKind::BatchedDiff, 0, self.step_lo, self.step_hi);
+                c.push("sum", self.acc.to_bytes());
+                self.count = 0;
+                self.acc.indices.clear();
+                self.acc.values.clear();
+                Some(c)
+            }
+            BatchMode::Concat => {
+                let step_lo = self.pending.first().unwrap().0;
+                let step_hi = self.pending.last().unwrap().0;
+                let mut c = Container::new(CkptKind::BatchedDiff, 0, step_lo, step_hi);
                 for (step, g) in self.pending.drain(..) {
                     c.push(format!("step-{step}"), g.to_bytes());
                 }
+                Some(c)
             }
         }
-        Some(c)
     }
 }
 
 /// Decode a batched container back to (step, gradient) pairs.
 /// `Sum` batches decode to a single pair at `step_hi` carrying the sum.
 pub fn read_batched(bytes: &[u8], model_sig: u64) -> Result<Vec<(u64, SparseGrad)>> {
-    let c = Container::from_bytes(bytes)?;
+    let c = ContainerView::parse(bytes)?;
     ensure!(c.kind == CkptKind::BatchedDiff, "not a batched diff: {:?}", c.kind);
     // model_sig 0 containers come from pre-finalize buffers in tests
     ensure!(
@@ -105,11 +260,11 @@ pub fn read_batched(bytes: &[u8], model_sig: u64) -> Result<Vec<(u64, SparseGrad
         "batch from a different model"
     );
     let mut out = Vec::new();
-    for s in &c.sections {
-        if s.name == "sum" {
-            out.push((c.step_hi, SparseGrad::from_bytes(&s.bytes)?));
-        } else if let Some(step) = s.name.strip_prefix("step-") {
-            out.push((step.parse()?, SparseGrad::from_bytes(&s.bytes)?));
+    for (name, bytes) in c.sections() {
+        if name == "sum" {
+            out.push((c.step_hi, SparseGrad::from_bytes(bytes)?));
+        } else if let Some(step) = name.strip_prefix("step-") {
+            out.push((step.parse()?, SparseGrad::from_bytes(bytes)?));
         }
     }
     ensure!(!out.is_empty(), "empty batch container");
@@ -155,16 +310,19 @@ mod tests {
 
     #[test]
     fn concat_roundtrip_preserves_steps() {
+        // gradients are moved into the buffer (no clone on offer); the
+        // expected pairs are regenerated from the same seeded RNG
         let mut rng = Rng::new(2);
         let mut buf = BatchBuffer::new(BatchMode::Concat, 4);
-        let grads: Vec<_> = (1..=4).map(|s| (s, grad(&mut rng, 80))).collect();
         let mut out = None;
-        for (s, g) in &grads {
-            out = buf.push(*s, g.clone());
+        for s in 1..=4u64 {
+            out = buf.push(s, grad(&mut rng, 80));
         }
         let bytes = finalize(out.unwrap(), 7, PayloadCodec::Raw).unwrap();
         let back = read_batched(&bytes, 7).unwrap();
-        assert_eq!(back, grads);
+        let mut rng = Rng::new(2);
+        let want: Vec<_> = (1..=4u64).map(|s| (s, grad(&mut rng, 80))).collect();
+        assert_eq!(back, want);
     }
 
     #[test]
@@ -188,6 +346,55 @@ mod tests {
             prop_assert!(got[0].1.to_dense().max_abs_diff(&want) < 1e-5);
             Ok(())
         });
+    }
+
+    #[test]
+    fn flush_into_bit_identical_to_finalize_flush_property() {
+        prop_check("batch_flush_into_oracle", 32, |rng| {
+            for mode in [BatchMode::Sum, BatchMode::Concat] {
+                for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+                    let n = rng.range(1, 120);
+                    let b = rng.range(1, 6);
+                    let grads: Vec<SparseGrad> = (0..b).map(|_| grad(rng, n)).collect();
+                    let mut legacy = BatchBuffer::new(mode, b + 1); // no auto-flush
+                    let mut pooled = BatchBuffer::new(mode, b + 1);
+                    for (i, g) in grads.iter().enumerate() {
+                        legacy.offer(i as u64 + 1, g.clone());
+                        pooled.offer(i as u64 + 1, g.clone());
+                    }
+                    let want = finalize(legacy.flush().unwrap(), 9, codec)
+                        .map_err(|e| format!("finalize: {e:#}"))?;
+                    let mut out = Vec::new();
+                    let (lo, hi, appended) = pooled
+                        .flush_into(9, codec, &mut out)
+                        .map_err(|e| format!("flush_into: {e:#}"))?
+                        .expect("non-empty");
+                    prop_assert!(out == want);
+                    prop_assert!(appended == out.len());
+                    prop_assert!(lo == 1 && hi == b as u64);
+                    prop_assert!(pooled.is_empty());
+                    let empty = pooled.flush_into(9, codec, &mut Vec::new()).unwrap();
+                    prop_assert!(empty.is_none());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sum_offer_accumulates_in_place_and_counts_copies() {
+        let mut rng = Rng::new(9);
+        let mut buf = BatchBuffer::new(BatchMode::Sum, 8);
+        assert_eq!(buf.take_copied(), 0);
+        let g1 = grad(&mut rng, 100);
+        let n1 = g1.nnz() as u64;
+        buf.offer(1, g1);
+        assert_eq!(buf.take_copied(), 8 * n1, "refill copies the first gradient");
+        let g2 = grad(&mut rng, 100);
+        buf.offer(2, g2);
+        assert!(buf.take_copied() > 0, "merge output is accounted");
+        assert_eq!(buf.len(), 2);
+        assert!(buf.buffered_bytes() > 0);
     }
 
     #[test]

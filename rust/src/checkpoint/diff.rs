@@ -10,7 +10,9 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::checkpoint::format::{CkptKind, Container, PayloadCodec};
+use crate::checkpoint::format::{
+    encode_container_into, CkptKind, ContainerView, PayloadCodec, SectionSrc,
+};
 use crate::sparse::SparseGrad;
 
 /// What a differential carries.
@@ -44,14 +46,36 @@ pub fn write_diff(
     step: u64,
     codec: PayloadCodec,
 ) -> Result<Vec<u8>> {
-    let mut c = Container::new(CkptKind::Diff, model_sig, step, step).with_codec(codec);
-    c.push(payload.tag(), payload.sparse().to_bytes());
-    c.to_bytes()
+    let mut out = Vec::new();
+    write_diff_into(payload, model_sig, step, codec, &mut out)?;
+    Ok(out)
 }
 
-/// Decode a differential checkpoint.
+/// Single-pass encode into `out` (typically a pooled buffer): the sparse
+/// payload is serialized straight into the container — one copy from the
+/// in-memory gradient to the write buffer. Returns bytes appended.
+pub fn write_diff_into(
+    payload: &DiffPayload,
+    model_sig: u64,
+    step: u64,
+    codec: PayloadCodec,
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    encode_container_into(
+        CkptKind::Diff,
+        codec,
+        model_sig,
+        step,
+        step,
+        &[SectionSrc::sparse(payload.tag(), payload.sparse())],
+        out,
+    )
+}
+
+/// Decode a differential checkpoint (borrowing reader; the sparse payload
+/// is parsed straight off the section slice).
 pub fn read_diff(bytes: &[u8], model_sig: u64) -> Result<(u64, DiffPayload)> {
-    let c = Container::from_bytes(bytes)?;
+    let c = ContainerView::parse(bytes)?;
     ensure!(c.kind == CkptKind::Diff, "not a diff checkpoint: {:?}", c.kind);
     ensure!(c.model_sig == model_sig, "diff from a different model");
     let payload = if let Ok(b) = c.section("grad") {

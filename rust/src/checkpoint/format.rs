@@ -13,8 +13,13 @@
 //! produced it (mixing checkpoints across models is a recovery-time error,
 //! not a silent state corruption).
 
+use std::borrow::Cow;
+
 use anyhow::{bail, ensure, Context, Result};
 use byteorder::{ByteOrder, LittleEndian as LE};
+
+use crate::sparse::SparseGrad;
+use crate::tensor::Flat;
 
 pub const MAGIC: &[u8; 4] = b"LDCK";
 pub const MAGIC_END: &[u8; 4] = b"KCDL";
@@ -116,8 +121,37 @@ impl Container {
         self.sections.iter().map(|s| s.bytes.len()).sum()
     }
 
-    /// Serialize to the container wire format.
+    /// Serialize to the container wire format (single-pass; see
+    /// [`encode_container_into`]).
     pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Single-pass append of the wire encoding to `out` (typically a
+    /// pooled buffer). Returns the bytes appended.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> Result<usize> {
+        let secs: Vec<SectionSrc<'_>> = self
+            .sections
+            .iter()
+            .map(|s| SectionSrc::bytes(&s.name, &s.bytes))
+            .collect();
+        encode_container_into(
+            self.kind,
+            self.codec,
+            self.model_sig,
+            self.step_lo,
+            self.step_hi,
+            &secs,
+            out,
+        )
+    }
+
+    /// Pre-change two-copy encoder (raw payload concat, then splice), kept
+    /// verbatim as the bit-identity oracle for the single-pass encoder.
+    #[cfg(test)]
+    pub fn to_bytes_reference(&self) -> Result<Vec<u8>> {
         let raw_payload: Vec<u8> = {
             let mut p = Vec::with_capacity(self.payload_bytes());
             for s in &self.sections {
@@ -153,8 +187,168 @@ impl Container {
         Ok(out)
     }
 
-    /// Parse and verify a container.
+    /// Parse and verify a container (owning decode; the zero-copy variant
+    /// is [`ContainerView::parse`]).
     pub fn from_bytes(bytes: &[u8]) -> Result<Container> {
+        Ok(ContainerView::parse(bytes)?.to_container())
+    }
+}
+
+/// Borrowed payload source for single-pass container encoding: either
+/// bytes that already exist, or a typed object that knows how to serialize
+/// itself straight into the output buffer — which is what lets a
+/// differential checkpoint go from its in-memory sparse form to container
+/// bytes in exactly one copy.
+pub enum PayloadSrc<'a> {
+    Bytes(&'a [u8]),
+    Sparse(&'a SparseGrad),
+    FlatF32(&'a Flat),
+}
+
+impl PayloadSrc<'_> {
+    /// Encoded length of this payload on the wire.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            PayloadSrc::Bytes(b) => b.len(),
+            PayloadSrc::Sparse(s) => s.encoded_size(),
+            PayloadSrc::FlatF32(f) => 4 * f.len(),
+        }
+    }
+
+    fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            PayloadSrc::Bytes(b) => out.extend_from_slice(b),
+            PayloadSrc::Sparse(s) => s.encode_into(out),
+            PayloadSrc::FlatF32(f) => {
+                out.reserve(4 * f.len());
+                for x in &f.0 {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// One named section source for [`encode_container_into`].
+pub struct SectionSrc<'a> {
+    pub name: &'a str,
+    pub payload: PayloadSrc<'a>,
+}
+
+impl<'a> SectionSrc<'a> {
+    pub fn bytes(name: &'a str, b: &'a [u8]) -> SectionSrc<'a> {
+        SectionSrc { name, payload: PayloadSrc::Bytes(b) }
+    }
+    pub fn sparse(name: &'a str, s: &'a SparseGrad) -> SectionSrc<'a> {
+        SectionSrc { name, payload: PayloadSrc::Sparse(s) }
+    }
+    pub fn flat(name: &'a str, f: &'a Flat) -> SectionSrc<'a> {
+        SectionSrc { name, payload: PayloadSrc::FlatF32(f) }
+    }
+}
+
+// Staging buffer for the Zstd payload (the compressor needs the raw
+// stream; reusing one thread-local keeps even that path alloc-free in
+// steady state). Raw-codec encoding never touches it.
+thread_local! {
+    static ZSTD_SCRATCH: std::cell::RefCell<Vec<u8>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Single-pass container encoder: header, section table, payload, CRC and
+/// end magic are appended to `out` in one forward pass. For the Raw codec
+/// the CRC is fused into the payload copy (each section is hashed as it
+/// lands in `out`) and **no intermediate payload buffer exists**; for Zstd
+/// the raw stream is staged once in a reusable thread-local scratch and
+/// compressed straight into `out`. Bit-identical to the pre-change
+/// two-copy encoder (property-tested against it). Returns bytes appended.
+pub fn encode_container_into(
+    kind: CkptKind,
+    codec: PayloadCodec,
+    model_sig: u64,
+    step_lo: u64,
+    step_hi: u64,
+    sections: &[SectionSrc<'_>],
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    let start = out.len();
+    let payload_len: usize = sections.iter().map(|s| s.payload.encoded_len()).sum();
+    let meta_len: usize = sections.iter().map(|s| 2 + s.name.len() + 8).sum();
+    // reserve the exact output for Raw; for Zstd only the header — the
+    // compressed size is unknown and reserving raw_len would permanently
+    // inflate recycled pool buffers to uncompressed capacity
+    let reserve_payload = match codec {
+        PayloadCodec::Raw => payload_len,
+        PayloadCodec::Zstd => 0,
+    };
+    out.reserve(40 + meta_len + reserve_payload + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind as u8);
+    out.push(codec as u8);
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&model_sig.to_le_bytes());
+    out.extend_from_slice(&step_lo.to_le_bytes());
+    out.extend_from_slice(&step_hi.to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for s in sections {
+        ensure!(s.name.len() <= u16::MAX as usize, "section name too long");
+        out.extend_from_slice(&(s.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(s.name.as_bytes());
+        out.extend_from_slice(&(s.payload.encoded_len() as u64).to_le_bytes());
+    }
+    let payload_start = out.len();
+    let crc = match codec {
+        PayloadCodec::Raw => {
+            let mut hasher = crc32fast::Hasher::new();
+            for s in sections {
+                let sec_start = out.len();
+                s.payload.write_to(out);
+                hasher.update(&out[sec_start..]);
+            }
+            hasher.finalize()
+        }
+        PayloadCodec::Zstd => {
+            ZSTD_SCRATCH.with(|cell| -> Result<()> {
+                let mut scratch = cell.borrow_mut();
+                scratch.clear();
+                scratch.reserve(payload_len);
+                for s in sections {
+                    s.payload.write_to(&mut scratch);
+                }
+                // same streaming path `zstd::encode_all` uses internally,
+                // so the compressed bytes are identical to the old encoder
+                zstd::stream::copy_encode(scratch.as_slice(), &mut *out, 1)?;
+                Ok(())
+            })?;
+            crc32fast::hash(&out[payload_start..])
+        }
+    };
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(MAGIC_END);
+    Ok(out.len() - start)
+}
+
+/// A parsed container whose sections *borrow* the input buffer (Raw codec;
+/// Zstd payloads are decompressed into one owned buffer, still without the
+/// per-section `to_vec` of the owning decode). Section names borrow the
+/// header region. This is the recovery-path reader: a chain replay decodes
+/// every differential without duplicating its payload.
+pub struct ContainerView<'a> {
+    pub kind: CkptKind,
+    pub codec: PayloadCodec,
+    pub model_sig: u64,
+    pub step_lo: u64,
+    pub step_hi: u64,
+    names: Vec<&'a str>,
+    ranges: Vec<(usize, usize)>,
+    payload: Cow<'a, [u8]>,
+}
+
+impl<'a> ContainerView<'a> {
+    /// Parse and verify; identical validation (and error wording) to the
+    /// owning [`Container::from_bytes`], which now delegates here.
+    pub fn parse(bytes: &'a [u8]) -> Result<ContainerView<'a>> {
         ensure!(bytes.len() >= 48, "container too short ({} bytes)", bytes.len());
         ensure!(&bytes[0..4] == MAGIC, "bad magic");
         ensure!(&bytes[bytes.len() - 4..] == MAGIC_END, "bad end magic (truncated?)");
@@ -169,17 +363,17 @@ impl Container {
         ensure!(n_sections <= 1 << 20, "implausible section count");
 
         let mut pos = 40usize;
-        let mut metas: Vec<(String, usize)> = Vec::with_capacity(n_sections);
+        let mut names: Vec<&'a str> = Vec::with_capacity(n_sections);
+        let mut lens: Vec<usize> = Vec::with_capacity(n_sections);
         for _ in 0..n_sections {
             ensure!(pos + 2 <= bytes.len(), "truncated section header");
             let nlen = LE::read_u16(&bytes[pos..pos + 2]) as usize;
             pos += 2;
             ensure!(pos + nlen + 8 <= bytes.len(), "truncated section name");
-            let name = std::str::from_utf8(&bytes[pos..pos + nlen])?.to_string();
+            names.push(std::str::from_utf8(&bytes[pos..pos + nlen])?);
             pos += nlen;
-            let blen = LE::read_u64(&bytes[pos..pos + 8]) as usize;
+            lens.push(LE::read_u64(&bytes[pos..pos + 8]) as usize);
             pos += 8;
-            metas.push((name, blen));
         }
         let payload_end = bytes.len() - 8;
         ensure!(pos <= payload_end, "header overruns payload");
@@ -188,20 +382,59 @@ impl Container {
         let crc = crc32fast::hash(payload);
         ensure!(crc == crc_stored, "payload CRC mismatch: {crc:#x} != {crc_stored:#x}");
 
-        let raw = match codec {
-            PayloadCodec::Raw => payload.to_vec(),
-            PayloadCodec::Zstd => zstd::decode_all(payload)?,
+        let raw: Cow<'a, [u8]> = match codec {
+            PayloadCodec::Raw => Cow::Borrowed(payload),
+            PayloadCodec::Zstd => Cow::Owned(zstd::decode_all(payload)?),
         };
-        let expected: usize = metas.iter().map(|(_, l)| l).sum();
+        let expected: usize = lens.iter().sum();
         ensure!(raw.len() == expected, "payload {} != sections total {expected}", raw.len());
 
-        let mut sections = Vec::with_capacity(n_sections);
+        let mut ranges = Vec::with_capacity(n_sections);
         let mut off = 0usize;
-        for (name, blen) in metas {
-            sections.push(Section { name, bytes: raw[off..off + blen].to_vec() });
+        for blen in lens {
+            ranges.push((off, off + blen));
             off += blen;
         }
-        Ok(Container { kind, codec, model_sig, step_lo, step_hi, sections })
+        Ok(ContainerView { kind, codec, model_sig, step_lo, step_hi, names, ranges, payload: raw })
+    }
+
+    pub fn n_sections(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Borrowed bytes of the named section.
+    pub fn section(&self, name: &str) -> Result<&[u8]> {
+        self.names
+            .iter()
+            .position(|n| *n == name)
+            .map(|i| {
+                let (a, b) = self.ranges[i];
+                &self.payload[a..b]
+            })
+            .with_context(|| format!("container missing section `{name}`"))
+    }
+
+    /// Iterate `(name, bytes)` pairs in wire order, borrowing both.
+    pub fn sections(&self) -> impl Iterator<Item = (&str, &[u8])> + '_ {
+        self.names
+            .iter()
+            .zip(self.ranges.iter())
+            .map(|(n, &(a, b))| (*n, &self.payload[a..b]))
+    }
+
+    /// Materialize an owning [`Container`] (one copy per section).
+    pub fn to_container(&self) -> Container {
+        Container {
+            kind: self.kind,
+            codec: self.codec,
+            model_sig: self.model_sig,
+            step_lo: self.step_lo,
+            step_hi: self.step_hi,
+            sections: self
+                .sections()
+                .map(|(name, bytes)| Section { name: name.to_string(), bytes: bytes.to_vec() })
+                .collect(),
+        }
     }
 }
 
@@ -375,6 +608,88 @@ mod tests {
             prop_assert!(back == c);
             Ok(())
         });
+    }
+
+    #[test]
+    fn single_pass_encoder_bit_identical_to_reference_property() {
+        prop_check("container_encoder_oracle", 64, |rng| {
+            for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+                let mut c = Container::new(
+                    CkptKind::BatchedDiff,
+                    rng.next_u64(),
+                    rng.next_u64() % 1000,
+                    rng.next_u64() % 1000,
+                )
+                .with_codec(codec);
+                let nsec = rng.range(0, 6);
+                for i in 0..nsec {
+                    let len = rng.range(0, 500);
+                    let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                    c.push(format!("s{i}"), bytes);
+                }
+                prop_assert!(c.to_bytes().unwrap() == c.to_bytes_reference().unwrap());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn typed_payload_sources_match_pushed_bytes_property() {
+        use crate::tensor::Flat;
+        prop_check("container_typed_src_oracle", 64, |rng| {
+            // a sparse gradient and a dense flat, via typed sources
+            let n = rng.range(1, 200);
+            let mut dense = Flat::zeros(n);
+            for i in 0..n {
+                if rng.next_f64() < 0.3 {
+                    dense.0[i] = rng.normal() as f32;
+                }
+            }
+            let sparse = crate::sparse::SparseGrad::from_dense(&dense);
+            for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+                let mut out = Vec::new();
+                let appended = encode_container_into(
+                    CkptKind::Diff,
+                    codec,
+                    7,
+                    3,
+                    3,
+                    &[SectionSrc::sparse("grad", &sparse), SectionSrc::flat("dense", &dense)],
+                    &mut out,
+                )
+                .unwrap();
+                prop_assert!(appended == out.len());
+                let mut want = Container::new(CkptKind::Diff, 7, 3, 3).with_codec(codec);
+                want.push("grad", sparse.to_bytes_reference());
+                want.push("dense", dense.to_le_bytes());
+                prop_assert!(out == want.to_bytes_reference().unwrap());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn container_view_borrows_sections() {
+        for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+            let c = sample(codec);
+            let bytes = c.to_bytes().unwrap();
+            let view = ContainerView::parse(&bytes).unwrap();
+            assert_eq!(view.kind, c.kind);
+            assert_eq!(view.n_sections(), 2);
+            assert_eq!(view.section("grad").unwrap(), &[1, 2, 3, 4, 5]);
+            assert_eq!(view.section("meta").unwrap(), &[9; 100]);
+            assert!(view.section("nope").unwrap_err().to_string().contains("nope"));
+            let names: Vec<&str> = view.sections().map(|(n, _)| n).collect();
+            assert_eq!(names, vec!["grad", "meta"]);
+            assert_eq!(view.to_container(), c);
+            if codec == PayloadCodec::Raw {
+                // raw sections alias the input buffer — the zero-copy claim
+                let sec = view.section("grad").unwrap();
+                let base = bytes.as_ptr() as usize;
+                let p = sec.as_ptr() as usize;
+                assert!(p >= base && p + sec.len() <= base + bytes.len());
+            }
+        }
     }
 
     #[test]

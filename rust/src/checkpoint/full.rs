@@ -4,23 +4,46 @@
 
 use anyhow::{ensure, Result};
 
-use crate::checkpoint::format::{CkptKind, Container, PayloadCodec};
+use crate::checkpoint::format::{
+    encode_container_into, CkptKind, ContainerView, PayloadCodec, SectionSrc,
+};
 use crate::optim::ModelState;
 use crate::tensor::Flat;
 
 /// Encode a model state as a full-checkpoint container.
 pub fn write_full(state: &ModelState, model_sig: u64, codec: PayloadCodec) -> Result<Vec<u8>> {
-    let mut c = Container::new(CkptKind::Full, model_sig, state.step, state.step)
-        .with_codec(codec);
-    c.push("params", state.params.to_le_bytes());
-    c.push("adam_m", state.m.to_le_bytes());
-    c.push("adam_v", state.v.to_le_bytes());
-    c.to_bytes()
+    let mut out = Vec::new();
+    write_full_into(state, model_sig, codec, &mut out)?;
+    Ok(out)
+}
+
+/// Single-pass encode into `out`: the 3Ψ state tensors are serialized
+/// straight into the container (no per-section byte vectors). Returns
+/// bytes appended.
+pub fn write_full_into(
+    state: &ModelState,
+    model_sig: u64,
+    codec: PayloadCodec,
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    encode_container_into(
+        CkptKind::Full,
+        codec,
+        model_sig,
+        state.step,
+        state.step,
+        &[
+            SectionSrc::flat("params", &state.params),
+            SectionSrc::flat("adam_m", &state.m),
+            SectionSrc::flat("adam_v", &state.v),
+        ],
+        out,
+    )
 }
 
 /// Decode a full checkpoint, verifying the model signature.
 pub fn read_full(bytes: &[u8], model_sig: u64) -> Result<ModelState> {
-    let c = Container::from_bytes(bytes)?;
+    let c = ContainerView::parse(bytes)?;
     ensure!(c.kind == CkptKind::Full, "not a full checkpoint: {:?}", c.kind);
     ensure!(
         c.model_sig == model_sig,
@@ -38,7 +61,7 @@ pub fn read_full(bytes: &[u8], model_sig: u64) -> Result<ModelState> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::checkpoint::format::model_signature;
+    use crate::checkpoint::format::{model_signature, Container};
     use crate::util::rng::Rng;
 
     fn state(n: usize) -> ModelState {

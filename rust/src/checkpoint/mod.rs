@@ -15,7 +15,10 @@ pub mod full;
 pub mod manifest;
 
 pub use batched::{BatchBuffer, BatchMode};
-pub use diff::{read_diff, write_diff, DiffPayload};
-pub use format::{CkptKind, Container, PayloadCodec, Section};
-pub use full::{read_full, write_full};
+pub use diff::{read_diff, write_diff, write_diff_into, DiffPayload};
+pub use format::{
+    encode_container_into, CkptKind, Container, ContainerView, PayloadCodec, PayloadSrc, Section,
+    SectionSrc,
+};
+pub use full::{read_full, write_full, write_full_into};
 pub use manifest::Manifest;

@@ -78,8 +78,12 @@ pub fn ring_allreduce_mean(workers: &mut [Flat]) {
 pub fn sparse_allgather_sum(workers: &[SparseGrad]) -> SparseGrad {
     assert!(!workers.is_empty());
     let mut acc = workers[0].clone();
+    // in-place fold: one scratch ping-pongs with the accumulator instead of
+    // allocating a fresh union per merge (per-iteration sync hot path)
+    let mut scratch =
+        SparseGrad { dense_len: acc.dense_len, indices: Vec::new(), values: Vec::new() };
     for w in &workers[1..] {
-        acc = acc.merge_sum(w);
+        acc.merge_sum_into(w, &mut scratch);
     }
     acc
 }

@@ -13,9 +13,26 @@
 use crate::sparse::SparseGrad;
 use crate::tensor::Flat;
 
+// Default magnitude scratch for `topk_mask` callers that don't own one;
+// reused across calls on the same thread, so the full-model-size `Vec<f32>`
+// is allocated once, not per checkpoint.
+thread_local! {
+    static TOPK_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Exact top-k by |value|: returns the dense-masked tensor.
 /// O(n) average via quickselect on magnitudes, then one masking pass.
+/// Uses a thread-local magnitude scratch; hot loops that want full control
+/// pass their own via [`topk_mask_with_scratch`].
 pub fn topk_mask(x: &Flat, k: usize) -> Flat {
+    TOPK_SCRATCH.with(|cell| topk_mask_with_scratch(x, k, &mut cell.borrow_mut()))
+}
+
+/// [`topk_mask`] with a caller-owned magnitude scratch: `scratch` is
+/// cleared and refilled (capacity reused), never reallocated once it has
+/// grown to the model size.
+pub fn topk_mask_with_scratch(x: &Flat, k: usize, scratch: &mut Vec<f32>) -> Flat {
     let n = x.len();
     if k >= n {
         return x.clone();
@@ -25,7 +42,10 @@ pub fn topk_mask(x: &Flat, k: usize) -> Flat {
     }
     // §Perf iteration 3: std introselect (select_nth_unstable) replaced the
     // hand-rolled three-way quickselect — 16.7 ms -> see EXPERIMENTS.md.
-    let mut mags: Vec<f32> = x.0.iter().map(|v| v.abs()).collect();
+    scratch.clear();
+    scratch.reserve(n);
+    scratch.extend(x.0.iter().map(|v| v.abs()));
+    let mags = scratch;
     let kth = {
         let (_, kth, _) =
             mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
@@ -243,6 +263,23 @@ mod tests {
     fn topk_with_ties() {
         let x = Flat(vec![1.0; 8]);
         assert_eq!(topk_mask(&x, 3).count_nonzero(), 3);
+    }
+
+    #[test]
+    fn topk_scratch_variant_matches_and_reuses_capacity() {
+        prop_check("topk_scratch_equiv", 32, |rng| {
+            let v = Flat(arb_vec_f32(rng, 300));
+            let k = rng.range(0, v.len() + 2);
+            let mut scratch = Vec::new();
+            let a = topk_mask(&v, k);
+            let b = topk_mask_with_scratch(&v, k, &mut scratch);
+            prop_assert!(a == b);
+            // a second call of the same size must not grow the scratch
+            let cap = scratch.capacity();
+            let _ = topk_mask_with_scratch(&v, k, &mut scratch);
+            prop_assert!(scratch.capacity() == cap, "scratch regrew");
+            Ok(())
+        });
     }
 
     #[test]

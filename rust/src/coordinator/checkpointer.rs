@@ -16,21 +16,30 @@
 //! never run while the full checkpoint it keys on is still in flight).
 //! The training thread's only costs stay the O(1) queue put and the
 //! snapshot copy.
+//!
+//! Every write is encoded in a **single pass into a pooled buffer**
+//! ([`BufPool`]): sparse payloads serialize straight into the container
+//! bytes (one copy), `Sum` batches accumulate in place at offer time, and
+//! the sharded engine slices the pooled buffer zero-copy — the buffer
+//! recycles when its write commits. `CkptStats { bytes_copied, pool_hits,
+//! pool_misses }` make the copy discipline observable; see
+//! docs/STORAGE.md, "Write-path anatomy".
 
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::checkpoint::batched::{finalize, BatchBuffer, BatchMode};
-use crate::checkpoint::diff::{write_diff, DiffPayload};
+use crate::checkpoint::batched::{BatchBuffer, BatchMode};
+use crate::checkpoint::diff::{write_diff_into, DiffPayload};
 use crate::checkpoint::format::PayloadCodec;
-use crate::checkpoint::full::write_full;
+use crate::checkpoint::full::write_full_into;
 use crate::checkpoint::manifest::Manifest;
 use crate::coordinator::reusing_queue::ReusingQueue;
 use crate::optim::ModelState;
 use crate::sparse::SparseGrad;
 use crate::storage::{Sharded, StorageBackend, WriteHandle};
 use crate::tensor::Flat;
+use crate::util::bufpool::{BufPool, PooledBuf};
 
 /// What travels through the reusing queue to the checkpointing process.
 pub enum CkptItem {
@@ -65,6 +74,15 @@ pub struct CkptStats {
     /// checkpointer shutdown — late spills keep draining afterwards
     pub spill_bytes: u64,
     pub spill_errors: u64,
+    /// bytes moved between heap buffers on the write path after the sparse
+    /// compaction: encode output + Sum-mode accumulation traffic. The
+    /// pooled single-pass pipeline moves each payload once; the pre-change
+    /// pipeline moved it 3-4x (see docs/STORAGE.md, "Write-path anatomy").
+    pub bytes_copied: u64,
+    /// encode-buffer pool counters, as of checkpointer shutdown: hits are
+    /// recycled checkouts (steady state should be all hits)
+    pub pool_hits: u64,
+    pub pool_misses: u64,
 }
 
 /// Handle to the running checkpointing process.
@@ -111,6 +129,13 @@ impl CkptConfig {
     /// synchronous single-object puts.
     pub fn uses_engine(&self) -> bool {
         self.n_shards > 1 || self.writers > 1
+    }
+
+    /// Max logical writes allowed in flight before the checkpointer blocks
+    /// (engine-mode backpressure). The encode-buffer pool is sized from
+    /// this too, so steady-state checkouts always find a recycled buffer.
+    pub fn inflight_cap(&self) -> usize {
+        (self.writers * 4).max(8)
     }
 }
 
@@ -162,7 +187,7 @@ struct Inflight {
 /// sharded async engine with completion reaping.
 enum Writer {
     Direct(Arc<dyn StorageBackend>),
-    Engine { eng: Sharded, inflight: Vec<Inflight> },
+    Engine { eng: Sharded, inflight: Vec<Inflight>, cap: usize },
 }
 
 impl Writer {
@@ -171,6 +196,7 @@ impl Writer {
             Writer::Engine {
                 eng: Sharded::new(store, cfg.n_shards, cfg.writers),
                 inflight: Vec::new(),
+                cap: cfg.inflight_cap(),
             }
         } else {
             Writer::Direct(store)
@@ -186,17 +212,21 @@ impl Writer {
         }
     }
 
-    fn submit(&mut self, bytes: Vec<u8>, name: String, stats: &Mutex<CkptStats>) {
+    /// Hand one encoded (pooled) buffer to storage. Direct mode writes
+    /// synchronously and the buffer recycles on drop right here; engine
+    /// mode shares it with the writer pool zero-copy — it recycles when
+    /// the commit finalizer releases the last reference.
+    fn submit(&mut self, buf: PooledBuf, name: String, stats: &Mutex<CkptStats>) {
         match self {
             Writer::Direct(store) => {
                 let t0 = Instant::now();
-                let res = store.put(&name, &bytes);
+                let res = store.put(&name, &buf);
                 let mut s = stats.lock().unwrap();
                 s.write_secs += t0.elapsed().as_secs_f64();
                 match res {
                     Ok(()) => {
                         s.writes += 1;
-                        s.bytes_written += bytes.len() as u64;
+                        s.bytes_written += buf.len() as u64;
                     }
                     Err(e) => {
                         log::error!("checkpoint write {name} failed: {e:#}");
@@ -204,9 +234,9 @@ impl Writer {
                     }
                 }
             }
-            Writer::Engine { eng, inflight } => {
-                let len = bytes.len() as u64;
-                let handle = eng.put_async(&name, bytes);
+            Writer::Engine { eng, inflight, cap } => {
+                let len = buf.len() as u64;
+                let handle = eng.put_async(&name, buf);
                 inflight.push(Inflight { name, bytes: len, handle });
                 {
                     let mut s = stats.lock().unwrap();
@@ -217,8 +247,7 @@ impl Writer {
                 // pile up without bound when the device is slower than the
                 // trainer — block on the oldest write past the cap, which
                 // propagates through the reusing queue as a visible stall
-                let cap = (eng.n_writers() * 4).max(8);
-                while inflight.len() > cap {
+                while inflight.len() > *cap {
                     let w = inflight.remove(0);
                     let t0 = Instant::now();
                     let res = w.handle.wait();
@@ -288,6 +317,9 @@ fn run_loop(
 ) {
     let mut batch = BatchBuffer::new(cfg.batch_mode, cfg.batch_size);
     let mut writer = Writer::new(store, &cfg);
+    // one encode buffer per possible in-flight write, plus slack for the
+    // one being filled: steady state checks out only recycled buffers
+    let pool = BufPool::new(cfg.inflight_cap() + 2);
 
     while let Some(entry) = queue.get() {
         let step = entry.step;
@@ -308,19 +340,21 @@ fn run_loop(
                     s.offload_secs += t0.elapsed().as_secs_f64();
                     s.diff_ckpts += 1;
                 }
-                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut writer);
+                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut writer, &pool);
             }
             CkptItem::DiffSparse(payload) => {
                 stats.lock().unwrap().diff_ckpts += 1;
                 match payload {
                     DiffPayload::Gradient(g) => {
-                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut writer)
+                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut writer, &pool)
                     }
                     delta @ DiffPayload::StateDelta(_) => {
                         // Naive DC writes every delta unbatched (its cost)
-                        match write_diff(&delta, cfg.model_sig, step, cfg.codec) {
-                            Ok(bytes) => {
-                                writer.submit(bytes, Manifest::diff_name(step), &stats)
+                        let mut buf = pool.checkout();
+                        match write_diff_into(&delta, cfg.model_sig, step, cfg.codec, &mut buf) {
+                            Ok(copied) => {
+                                stats.lock().unwrap().bytes_copied += copied as u64;
+                                writer.submit(buf, Manifest::diff_name(step), &stats)
                             }
                             Err(e) => log::error!("encode diff {step}: {e:#}"),
                         }
@@ -329,16 +363,12 @@ fn run_loop(
             }
             CkptItem::Full(state) => {
                 // flush the pre-full chain first (order matters for GC)
-                if let Some(c) = batch.flush() {
-                    let (lo, hi) = (c.step_lo, c.step_hi);
-                    match finalize(c, cfg.model_sig, cfg.codec) {
-                        Ok(bytes) => writer.submit(bytes, Manifest::batch_name(lo, hi), &stats),
-                        Err(e) => log::error!("encode batch: {e:#}"),
-                    }
-                }
-                match write_full(&state, cfg.model_sig, cfg.codec) {
-                    Ok(bytes) => {
-                        writer.submit(bytes, Manifest::full_name(state.step), &stats);
+                flush_batch(&mut batch, &cfg, &stats, &mut writer, &pool);
+                let mut buf = pool.checkout();
+                match write_full_into(&state, cfg.model_sig, cfg.codec, &mut buf) {
+                    Ok(copied) => {
+                        stats.lock().unwrap().bytes_copied += copied as u64;
+                        writer.submit(buf, Manifest::full_name(state.step), &stats);
                         stats.lock().unwrap().full_ckpts += 1;
                         if cfg.gc {
                             // GC keys on the newest durable full: drain the
@@ -356,18 +386,45 @@ fn run_loop(
         }
     }
     // drain the final partial batch on close
-    if let Some(c) = batch.flush() {
-        let (lo, hi) = (c.step_lo, c.step_hi);
-        if let Ok(bytes) = finalize(c, cfg.model_sig, cfg.codec) {
-            writer.submit(bytes, Manifest::batch_name(lo, hi), &stats);
-        }
-    }
+    flush_batch(&mut batch, &cfg, &stats, &mut writer, &pool);
     // shutdown barrier: every enqueued write must commit (or report) before
     // `finish()` returns to the caller
     writer.barrier(&stats);
+    {
+        let mut s = stats.lock().unwrap();
+        s.pool_hits = pool.hits();
+        s.pool_misses = pool.misses();
+    }
     writer.finish(&stats);
 }
 
+/// Drain the batch buffer into a pooled buffer in one encoding pass and
+/// submit it. No-op when the batch is empty.
+fn flush_batch(
+    batch: &mut BatchBuffer,
+    cfg: &CkptConfig,
+    stats: &Arc<Mutex<CkptStats>>,
+    writer: &mut Writer,
+    pool: &BufPool,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let mut buf = pool.checkout();
+    match batch.flush_into(cfg.model_sig, cfg.codec, &mut buf) {
+        Ok(Some((lo, hi, copied))) => {
+            {
+                let mut s = stats.lock().unwrap();
+                s.bytes_copied += copied as u64 + batch.take_copied();
+            }
+            writer.submit(buf, Manifest::batch_name(lo, hi), stats);
+        }
+        Ok(None) => {}
+        Err(e) => log::error!("encode batch: {e:#}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn handle_sparse(
     step: u64,
     sparse: SparseGrad,
@@ -375,25 +432,27 @@ fn handle_sparse(
     cfg: &CkptConfig,
     stats: &Arc<Mutex<CkptStats>>,
     writer: &mut Writer,
+    pool: &BufPool,
 ) {
     if cfg.batch_size <= 1 {
-        match write_diff(&DiffPayload::Gradient(sparse), cfg.model_sig, step, cfg.codec) {
-            Ok(bytes) => writer.submit(bytes, Manifest::diff_name(step), stats),
+        let mut buf = pool.checkout();
+        let payload = DiffPayload::Gradient(sparse);
+        match write_diff_into(&payload, cfg.model_sig, step, cfg.codec, &mut buf) {
+            Ok(copied) => {
+                stats.lock().unwrap().bytes_copied += copied as u64;
+                writer.submit(buf, Manifest::diff_name(step), stats)
+            }
             Err(e) => log::error!("encode diff {step}: {e:#}"),
         }
         return;
     }
-    let maybe = batch.push(step, sparse);
+    let full = batch.offer(step, sparse);
     {
         let mut s = stats.lock().unwrap();
         s.peak_buffered_bytes = s.peak_buffered_bytes.max(batch.buffered_bytes());
     }
-    if let Some(c) = maybe {
-        let (lo, hi) = (c.step_lo, c.step_hi);
-        match finalize(c, cfg.model_sig, cfg.codec) {
-            Ok(bytes) => writer.submit(bytes, Manifest::batch_name(lo, hi), stats),
-            Err(e) => log::error!("encode batch: {e:#}"),
-        }
+    if full {
+        flush_batch(batch, cfg, stats, writer, pool);
     }
 }
 
@@ -580,6 +639,39 @@ mod tests {
         let stats = ck.finish();
         assert_eq!(stats.writes, 1, "only the in-grace anchor landed");
         assert_eq!(stats.errors, 4, "every post-grace diff write must be counted");
+    }
+
+    #[test]
+    fn steady_state_loop_recycles_pooled_buffers() {
+        let n = 150;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let mut c = cfg(n, 2);
+        c.n_shards = 2;
+        c.writers = 2;
+        c.gc = true; // mid-run Full barriers the pool -> deterministic recycle
+        let ck = Checkpointer::spawn(Arc::clone(&store), c);
+        let mut rng = Rng::new(7);
+        ck.queue.put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.1; n])))));
+        for step in 1..=8u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        let mut mid = ModelState::new(Flat(vec![0.2; n]));
+        mid.step = 8;
+        ck.queue.put(8, Arc::new(CkptItem::Full(mid)));
+        for step in 9..=16u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        let stats = ck.finish();
+        assert_eq!(stats.errors, 0);
+        assert!(stats.pool_hits > 0, "steady-state encode must reuse pooled buffers");
+        assert!(
+            stats.pool_misses <= 8 + 2,
+            "misses bounded by the retention cap, got {}",
+            stats.pool_misses
+        );
+        // Concat batching copies each payload exactly once on its way to
+        // storage, so copied bytes == logical bytes written
+        assert_eq!(stats.bytes_copied, stats.bytes_written);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::checkpoint::format::{model_signature, PayloadCodec};
 use crate::checkpoint::full::write_full;
 use crate::checkpoint::manifest::Manifest;
 use crate::collective::sparse_allgather_sum;
-use crate::compress::topk_mask;
+use crate::compress::topk_mask_with_scratch;
 use crate::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
 use crate::coordinator::failure::{FailureInjector, FailureKind};
 use crate::coordinator::lowdiff_plus::{LowDiffPlus, PlusConfig};
@@ -227,6 +227,9 @@ pub fn train(
     } else {
         None
     };
+    // caller-owned top-k magnitude scratch: Naive DC compresses a 3Ψ delta
+    // every diff interval; the scratch is allocated once, not per iteration
+    let mut topk_scratch: Vec<f32> = Vec::new();
     let max_attempts = cfg.iters * 5 + 100;
     let mut attempts = 0u64;
 
@@ -328,7 +331,8 @@ pub fn train(
                     delta.extend(Flat::diff(&state.m, &prev.m).0);
                     delta.extend(Flat::diff(&state.v, &prev.v).0);
                     let k = ((layout.rho * (3 * n) as f64) as usize).max(1);
-                    let masked = topk_mask(&Flat(delta), k); // compression stall
+                    // compression stall (scratch reused across iterations)
+                    let masked = topk_mask_with_scratch(&Flat(delta), k, &mut topk_scratch);
                     let sparse = SparseGrad::from_dense(&masked);
                     report.queue_blocked_secs += ckpt
                         .queue
@@ -589,6 +593,9 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             report.bytes_written += s.bytes_written;
             report.peak_buffered_bytes = report.peak_buffered_bytes.max(s.peak_buffered_bytes);
             report.shard_writes += s.shard_writes;
+            report.bytes_copied += s.bytes_copied;
+            report.pool_hits += s.pool_hits;
+            report.pool_misses += s.pool_misses;
             report.spill_bytes += s.spill_bytes;
             report.inflight_peak = report.inflight_peak.max(s.inflight_peak);
         }
@@ -599,6 +606,9 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             report.writes += sd.writes;
             report.bytes_written += sd.bytes_written;
             report.shard_writes += sd.shard_writes;
+            report.bytes_copied += sd.bytes_copied;
+            report.pool_hits += sd.pool_hits;
+            report.pool_misses += sd.pool_misses;
             report.spill_bytes += sd.spill_bytes;
             report.inflight_peak = report.inflight_peak.max(sd.inflight_peak);
             let _ = sm;

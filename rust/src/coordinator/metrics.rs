@@ -36,6 +36,12 @@ pub struct RunReport {
     pub peak_buffered_bytes: usize,
     /// physical shard/commit objects written by the sharded engine
     pub shard_writes: u64,
+    /// write-path heap-to-heap traffic (encode + batch accumulation); the
+    /// pooled single-pass pipeline keeps this ~= bytes_written
+    pub bytes_copied: u64,
+    /// encode-buffer pool counters (recycled vs fresh checkouts)
+    pub pool_hits: u64,
+    pub pool_misses: u64,
     /// fast→durable tier spill traffic (Tiered backend)
     pub spill_bytes: u64,
     /// peak logical checkpoint writes in flight on the writer pool

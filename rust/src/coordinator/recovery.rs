@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::batched::read_batched;
 use crate::checkpoint::diff::{read_diff, DiffPayload};
-use crate::checkpoint::format::{CkptKind, Container};
+use crate::checkpoint::format::{CkptKind, ContainerView};
 use crate::checkpoint::full::read_full;
 use crate::checkpoint::manifest::Manifest;
 use crate::optim::{Adam, ModelState};
@@ -133,9 +133,11 @@ fn load_diffs(
             break;
         }
         let parsed = bytes.map_err(anyhow::Error::msg).and_then(|b| {
-            let c = Container::from_bytes(&b)?;
+            // borrowing parse: kind dispatch must not duplicate the payload
+            // (read_diff/read_batched re-parse, but also borrow)
+            let kind = ContainerView::parse(&b)?.kind;
             // batched containers hold several steps; plain diffs one
-            match c.kind {
+            match kind {
                 CkptKind::Diff => {
                     let (step, payload) = read_diff(&b, model_sig)?;
                     Ok(vec![(step, payload)])

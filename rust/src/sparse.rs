@@ -61,33 +61,52 @@ impl SparseGrad {
     /// Index union; colliding entries add.
     pub fn merge_sum(&self, other: &SparseGrad) -> SparseGrad {
         assert_eq!(self.dense_len, other.dense_len);
-        // two-pointer merge over sorted index lists
         let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
         let mut values = Vec::with_capacity(self.nnz() + other.nnz());
-        let (mut i, mut j) = (0usize, 0usize);
-        while i < self.nnz() || j < other.nnz() {
-            let a = self.indices.get(i).copied().unwrap_or(u32::MAX);
-            let b = other.indices.get(j).copied().unwrap_or(u32::MAX);
-            if a < b {
-                indices.push(a);
-                values.push(self.values[i]);
-                i += 1;
-            } else if b < a {
-                indices.push(b);
-                values.push(other.values[j]);
-                j += 1;
-            } else {
-                indices.push(a);
-                values.push(self.values[i] + other.values[j]);
-                i += 1;
-                j += 1;
-            }
-        }
+        merge_sum_sorted(self, other, &mut indices, &mut values);
         SparseGrad { dense_len: self.dense_len, indices, values }
+    }
+
+    /// In-place batch accumulation: `self := self ⊎ other`, merging into
+    /// `scratch` and swapping. Once `scratch` has warmed up to the union
+    /// size this performs zero heap allocations — the §V-B Sum-mode batch
+    /// flush and the allgather fold both run on this.
+    pub fn merge_sum_into(&mut self, other: &SparseGrad, scratch: &mut SparseGrad) {
+        assert_eq!(self.dense_len, other.dense_len);
+        scratch.dense_len = self.dense_len;
+        scratch.indices.clear();
+        scratch.values.clear();
+        scratch.indices.reserve(self.nnz() + other.nnz());
+        scratch.values.reserve(self.nnz() + other.nnz());
+        merge_sum_sorted(self, other, &mut scratch.indices, &mut scratch.values);
+        std::mem::swap(self, scratch);
     }
 
     /// Serialize: [dense_len u32][nnz u32][indices...][values...] LE.
     pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_size());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Single-pass append of the wire encoding to `out` — the pooled-buffer
+    /// write path; no intermediate `Vec` is materialized.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.encoded_size());
+        out.extend_from_slice(&self.dense_len.to_le_bytes());
+        out.extend_from_slice(&(self.nnz() as u32).to_le_bytes());
+        for i in &self.indices {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in &self.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Pre-change encoder, kept verbatim as the bit-identity oracle for
+    /// [`encode_into`](SparseGrad::encode_into).
+    #[cfg(test)]
+    pub fn to_bytes_reference(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.encoded_size());
         out.extend_from_slice(&self.dense_len.to_le_bytes());
         out.extend_from_slice(&(self.nnz() as u32).to_le_bytes());
@@ -119,6 +138,30 @@ impl SparseGrad {
             values.push(f32::from_le_bytes(c.try_into().unwrap()));
         }
         Ok(SparseGrad { dense_len, indices, values })
+    }
+}
+
+/// Two-pointer union merge over sorted index lists; colliding entries add.
+/// Appends to `indices`/`values` (callers pre-reserve).
+fn merge_sum_sorted(a: &SparseGrad, b: &SparseGrad, indices: &mut Vec<u32>, values: &mut Vec<f32>) {
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.nnz() || j < b.nnz() {
+        let ai = a.indices.get(i).copied().unwrap_or(u32::MAX);
+        let bj = b.indices.get(j).copied().unwrap_or(u32::MAX);
+        if ai < bj {
+            indices.push(ai);
+            values.push(a.values[i]);
+            i += 1;
+        } else if bj < ai {
+            indices.push(bj);
+            values.push(b.values[j]);
+            j += 1;
+        } else {
+            indices.push(ai);
+            values.push(a.values[i] + b.values[j]);
+            i += 1;
+            j += 1;
+        }
     }
 }
 
@@ -194,6 +237,72 @@ mod tests {
             prop_assert!(m.indices.windows(2).all(|w| w[0] < w[1]));
             Ok(())
         });
+    }
+
+    #[test]
+    fn encode_into_is_bit_identical_to_reference_property() {
+        prop_check("sparse_encode_into_oracle", 128, |rng| {
+            let s = arb_sparse(rng, 600);
+            let mut out = Vec::new();
+            out.extend_from_slice(b"prefix"); // appends, never clobbers
+            s.encode_into(&mut out);
+            prop_assert!(&out[..6] == b"prefix");
+            prop_assert!(out[6..] == s.to_bytes_reference());
+            prop_assert!(s.to_bytes() == s.to_bytes_reference());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_sum_into_matches_merge_sum_property() {
+        prop_check("merge_sum_into_equiv", 64, |rng| {
+            let a = arb_sparse(rng, 300);
+            let mut b = arb_sparse(rng, 300);
+            b.dense_len = a.dense_len;
+            b.indices.retain(|&i| i < a.dense_len);
+            b.values.truncate(b.indices.len());
+            let want = a.merge_sum(&b);
+            let mut acc = a.clone();
+            let mut scratch = SparseGrad { dense_len: 0, indices: Vec::new(), values: Vec::new() };
+            acc.merge_sum_into(&b, &mut scratch);
+            prop_assert!(acc == want);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_sum_into_steady_state_allocates_nothing() {
+        // A persistent accumulator + scratch pair (how BatchBuffer uses the
+        // API): after one warm-up round the capacities of both buffers must
+        // stop growing — the zero-alloc claim of the Sum-mode batch flush.
+        let mk = |idx: Vec<u32>| SparseGrad {
+            dense_len: 100,
+            values: vec![1.0; idx.len()],
+            indices: idx,
+        };
+        let mut acc = mk(Vec::new());
+        let mut scratch = mk(Vec::new());
+        let mut warm_caps = (0, 0, 0, 0);
+        for round in 0..3 {
+            acc.indices.clear();
+            acc.values.clear();
+            acc.indices.extend_from_slice(&[1, 5, 9]);
+            acc.values.extend_from_slice(&[1.0; 3]);
+            acc.merge_sum_into(&mk(vec![2, 5]), &mut scratch);
+            acc.merge_sum_into(&mk(vec![0, 9, 50]), &mut scratch);
+            assert_eq!(acc.indices, vec![0, 1, 2, 5, 9, 50]);
+            let caps = (
+                acc.indices.capacity(),
+                acc.values.capacity(),
+                scratch.indices.capacity(),
+                scratch.values.capacity(),
+            );
+            if round == 1 {
+                warm_caps = caps;
+            } else if round == 2 {
+                assert_eq!(caps, warm_caps, "steady-state merge must not reallocate");
+            }
+        }
     }
 
     #[test]

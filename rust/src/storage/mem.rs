@@ -35,6 +35,17 @@ impl StorageBackend for MemStore {
         Ok(())
     }
 
+    /// Segmented put without an intermediate concat buffer: one exact
+    /// reserve, then extend per part straight into the stored vector.
+    fn put_vectored(&self, name: &str, parts: &[&[u8]]) -> Result<()> {
+        let mut buf = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+        for p in parts {
+            buf.extend_from_slice(p);
+        }
+        self.map.lock().unwrap().insert(name.to_string(), buf);
+        Ok(())
+    }
+
     fn get(&self, name: &str) -> Result<Vec<u8>> {
         self.map
             .lock()

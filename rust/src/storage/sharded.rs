@@ -30,7 +30,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::checkpoint::format::ShardIndex;
 use crate::checkpoint::manifest::Manifest;
 use crate::storage::pool::ShardAgg;
-use crate::storage::{StorageBackend, StorageStats, WriteHandle, WriterPool};
+use crate::storage::{PutBuf, StorageBackend, StorageStats, WriteHandle, WriterPool};
 
 /// Sharded, asynchronous write engine over one or more storage lanes.
 ///
@@ -101,15 +101,32 @@ impl Sharded {
         out
     }
 
+    /// Shared write prologue: split into per-shard ranges and build the
+    /// commit-record index over the slices. The sync and async put paths
+    /// both go through this, so the shard protocol has one definition.
+    fn split(bytes: &[u8], n: usize) -> (Vec<(usize, usize)>, ShardIndex) {
+        let ranges = Self::ranges(bytes.len(), n);
+        let slices: Vec<&[u8]> = ranges.iter().map(|&(a, b)| &bytes[a..b]).collect();
+        let index = ShardIndex::build(&slices);
+        (ranges, index)
+    }
+
     /// Enqueue a sharded write and return immediately. The handle resolves
     /// once every shard *and* the commit record are durable; on any shard
     /// failure the commit record is withheld and the handle reports the
     /// error (the object stays invisible).
-    pub fn put_async(&self, name: &str, bytes: Vec<u8>) -> WriteHandle {
+    ///
+    /// Accepts any [`PutBuf`] — a plain `Vec<u8>` or a pooled buffer. The
+    /// single backing allocation is shared with the writer pool behind an
+    /// `Arc`; every shard job reads its own `(offset, len)` slice, so no
+    /// per-shard copies exist. A pooled buffer recycles into its
+    /// [`BufPool`](crate::util::bufpool::BufPool) only after the commit
+    /// finalizer drops the last reference — never while the returned
+    /// [`WriteHandle`] is still in flight.
+    pub fn put_async(&self, name: &str, bytes: impl Into<PutBuf>) -> WriteHandle {
+        let bytes: PutBuf = bytes.into();
         let n = self.n_shards;
-        let ranges = Self::ranges(bytes.len(), n);
-        let slices: Vec<&[u8]> = ranges.iter().map(|&(a, b)| &bytes[a..b]).collect();
-        let index = ShardIndex::build(&slices);
+        let (ranges, index) = Self::split(&bytes, n);
         let index_bytes = index.to_bytes();
         let bytes = Arc::new(bytes);
 
@@ -140,6 +157,9 @@ impl Sharded {
         let inflight = Arc::clone(&self.inflight);
         let phys = Arc::clone(&self.physical_writes);
         self.pool.submit(move || {
+            // the finalizer pins the payload so a pooled buffer cannot be
+            // recycled before the logical write is fully resolved
+            let payload_pin = bytes;
             let res = agg.wait().and_then(|()| {
                 lane0
                     .put(&iname, &index_bytes)
@@ -149,6 +169,7 @@ impl Sharded {
                 phys.fetch_add(1, Ordering::SeqCst);
             }
             inflight.fetch_sub(1, Ordering::SeqCst);
+            drop(payload_pin);
             h.complete(res);
         });
         handle
@@ -196,11 +217,28 @@ impl Sharded {
 }
 
 impl StorageBackend for Sharded {
-    /// Synchronous facade over [`put_async`](Sharded::put_async).
+    /// Synchronous sharded write. Since the caller blocks until commit
+    /// anyway, the shards are written inline from *borrowed* slices of
+    /// `bytes` — no `to_vec` copy, no writer-pool round trip — in the same
+    /// order the async path guarantees: every shard first, the commit
+    /// record last (an interrupted sync put leaves the object invisible,
+    /// exactly like an interrupted async one).
     fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
-        self.put_async(name, bytes.to_vec())
-            .wait()
-            .map_err(|e| anyhow!("sharded put {name}: {e}"))
+        let n = self.n_shards;
+        let (ranges, index) = Self::split(bytes, n);
+        for (i, &(a, b)) in ranges.iter().enumerate() {
+            let sname = Manifest::shard_name(name, i, n);
+            self.lane(i)
+                .put(&sname, &bytes[a..b])
+                .map_err(|e| anyhow!("sharded put {name}: shard {sname}: {e:#}"))?;
+            self.physical_writes.fetch_add(1, Ordering::SeqCst);
+        }
+        let iname = Manifest::shard_index_name(name);
+        self.lanes[0]
+            .put(&iname, &index.to_bytes())
+            .map_err(|e| anyhow!("sharded put {name}: commit record {iname}: {e:#}"))?;
+        self.physical_writes.fetch_add(1, Ordering::SeqCst);
+        Ok(())
     }
 
     fn get(&self, name: &str) -> Result<Vec<u8>> {
@@ -425,5 +463,75 @@ mod tests {
         let (_, eng) = engine(4, 2);
         eng.put("empty", b"").unwrap();
         assert_eq!(eng.get("empty").unwrap(), Vec::<u8>::new());
+    }
+
+    /// A MemStore whose `put` blocks until the gate opens — freezes writer
+    /// threads mid-write so tests can observe in-flight state.
+    struct GatedStore {
+        inner: MemStore,
+        gate: std::sync::Mutex<bool>,
+        cv: std::sync::Condvar,
+    }
+
+    impl GatedStore {
+        fn new() -> GatedStore {
+            GatedStore {
+                inner: MemStore::new(),
+                gate: std::sync::Mutex::new(false),
+                cv: std::sync::Condvar::new(),
+            }
+        }
+        fn open(&self) {
+            *self.gate.lock().unwrap() = true;
+            self.cv.notify_all();
+        }
+    }
+
+    impl StorageBackend for GatedStore {
+        fn put(&self, name: &str, bytes: &[u8]) -> anyhow::Result<()> {
+            let mut open = self.gate.lock().unwrap();
+            while !*open {
+                open = self.cv.wait(open).unwrap();
+            }
+            drop(open);
+            self.inner.put(name, bytes)
+        }
+        fn get(&self, name: &str) -> anyhow::Result<Vec<u8>> {
+            self.inner.get(name)
+        }
+        fn delete(&self, name: &str) -> anyhow::Result<()> {
+            self.inner.delete(name)
+        }
+        fn list(&self) -> anyhow::Result<Vec<String>> {
+            self.inner.list()
+        }
+    }
+
+    #[test]
+    fn pooled_buffer_never_recycled_while_write_inflight() {
+        use crate::util::bufpool::BufPool;
+        let store = Arc::new(GatedStore::new());
+        let eng = Sharded::new(Arc::clone(&store) as Arc<dyn StorageBackend>, 2, 2);
+        let pool = BufPool::new(4);
+        let mut buf = pool.checkout();
+        buf.extend_from_slice(&payload(256));
+        let h = eng.put_async("obj", buf);
+        // writers are stuck on the gate: the logical write is in flight and
+        // the pooled buffer must NOT be back on the free list
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!h.is_done());
+        assert_eq!(pool.free_len(), 0, "buffer returned while write in flight");
+        store.open();
+        h.wait().unwrap();
+        // the finalizer drops its payload pin before completing the handle;
+        // shard-job clones die with their closures — poll for the recycle
+        let t0 = std::time::Instant::now();
+        while pool.free_len() == 0 && t0.elapsed().as_secs() < 2 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.free_len(), 1, "buffer must recycle after commit");
+        let _ = pool.checkout();
+        assert_eq!(pool.hits(), 1);
+        assert_eq!(eng.get("obj").unwrap(), payload(256));
     }
 }

@@ -1,0 +1,176 @@
+//! Reusable byte-buffer pool for the checkpoint write path.
+//!
+//! Per-iteration differential checkpointing encodes a fresh payload every
+//! step; allocating (and faulting in) a multi-megabyte `Vec<u8>` per
+//! checkpoint is exactly the alloc churn the paper's near-zero-overhead
+//! write path cannot afford. [`BufPool`] keeps a small free list of
+//! previously used buffers: `checkout` hands one out (cleared, capacity
+//! intact), dropping the [`PooledBuf`] recycles it — including when the
+//! drop happens on a storage writer thread after an async sharded write
+//! completes, which is what makes the steady-state encode loop
+//! allocation-free.
+//!
+//! Hit/miss counters feed `CkptStats { pool_hits, pool_misses }` so the
+//! steady-state claim is observable, not aspirational.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct PoolInner {
+    free: Mutex<Vec<Vec<u8>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// retention cap: buffers recycled beyond this are simply dropped so a
+    /// transient inflight spike can't pin memory forever
+    max_retained: usize,
+}
+
+/// Shared pool of reusable byte buffers (clone = same pool).
+#[derive(Clone)]
+pub struct BufPool {
+    inner: Arc<PoolInner>,
+}
+
+impl BufPool {
+    /// Pool retaining at most `max_retained` idle buffers.
+    pub fn new(max_retained: usize) -> BufPool {
+        BufPool {
+            inner: Arc::new(PoolInner {
+                free: Mutex::new(Vec::new()),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                max_retained: max_retained.max(1),
+            }),
+        }
+    }
+
+    /// Take a cleared buffer: recycled if one is free (hit), fresh
+    /// otherwise (miss). Capacity of recycled buffers is preserved, so
+    /// steady-state checkouts never reallocate.
+    pub fn checkout(&self) -> PooledBuf {
+        let recycled = self.inner.free.lock().unwrap().pop();
+        let buf = match recycled {
+            Some(b) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        PooledBuf { buf: Some(buf), pool: Arc::clone(&self.inner) }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.misses.load(Ordering::Relaxed)
+    }
+
+    /// Idle buffers currently available for checkout.
+    pub fn free_len(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+}
+
+/// A checked-out pool buffer. Derefs to `Vec<u8>`; dropping it returns the
+/// (cleared) buffer to its pool, from whatever thread the drop happens on.
+pub struct PooledBuf {
+    buf: Option<Vec<u8>>,
+    pool: Arc<PoolInner>,
+}
+
+impl PooledBuf {
+    /// Detach the buffer from the pool (it will not be recycled).
+    pub fn detach(mut self) -> Vec<u8> {
+        self.buf.take().unwrap_or_default()
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        self.buf.as_ref().expect("pooled buffer already detached")
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        self.buf.as_mut().expect("pooled buffer already detached")
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(mut b) = self.buf.take() {
+            let mut free = self.pool.free.lock().unwrap();
+            if free.len() < self.pool.max_retained {
+                b.clear();
+                free.push(b);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.buf {
+            Some(b) => write!(f, "PooledBuf({} bytes, cap {})", b.len(), b.capacity()),
+            None => write!(f, "PooledBuf(detached)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_recycle_preserves_capacity_and_counts() {
+        let pool = BufPool::new(4);
+        let mut b = pool.checkout();
+        assert_eq!(pool.misses(), 1);
+        b.extend_from_slice(&[1u8; 4096]);
+        let cap = b.capacity();
+        drop(b);
+        assert_eq!(pool.free_len(), 1);
+        let b2 = pool.checkout();
+        assert_eq!(pool.hits(), 1);
+        assert!(b2.is_empty(), "recycled buffers come back cleared");
+        assert!(b2.capacity() >= cap, "capacity survives the round trip");
+    }
+
+    #[test]
+    fn retention_cap_drops_excess_buffers() {
+        let pool = BufPool::new(2);
+        let bufs: Vec<PooledBuf> = (0..5).map(|_| pool.checkout()).collect();
+        drop(bufs);
+        assert_eq!(pool.free_len(), 2, "only max_retained buffers survive");
+        assert_eq!(pool.misses(), 5);
+    }
+
+    #[test]
+    fn detach_escapes_the_pool() {
+        let pool = BufPool::new(2);
+        let mut b = pool.checkout();
+        b.push(7);
+        let v = b.detach();
+        assert_eq!(v, vec![7]);
+        assert_eq!(pool.free_len(), 0);
+    }
+
+    #[test]
+    fn cross_thread_recycle() {
+        let pool = BufPool::new(4);
+        let mut b = pool.checkout();
+        b.extend_from_slice(b"payload");
+        let h = std::thread::spawn(move || drop(b));
+        h.join().unwrap();
+        assert_eq!(pool.free_len(), 1);
+        assert!(pool.checkout().capacity() >= 7);
+    }
+}

@@ -1,6 +1,7 @@
 //! Small substrates the offline environment forces us to own: RNG,
 //! statistics, property-testing, CLI parsing, logging, byte formatting.
 
+pub mod bufpool;
 pub mod cli;
 pub mod logging;
 pub mod prop;

@@ -1,0 +1,124 @@
+//! Allocation discipline of the differential write path (ISSUE 2
+//! acceptance): a `Sum`-mode batch cycle — offer every gradient, flush the
+//! encoded container into a reused output buffer — must perform **zero**
+//! heap allocations once capacities have warmed up. Verified with a
+//! counting global allocator scoped to the test thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use lowdiff::checkpoint::batched::{BatchBuffer, BatchMode};
+use lowdiff::checkpoint::format::PayloadCodec;
+use lowdiff::sparse::SparseGrad;
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator that counts alloc/realloc calls made by the current
+/// thread while the window is open. `try_with` keeps it safe during TLS
+/// teardown; const-initialized thread-locals never allocate on access.
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn bump() {
+        let _ = COUNTING.try_with(|on| {
+            if on.get() {
+                let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::bump();
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        CountingAlloc::bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn open_window() {
+    ALLOCS.with(|a| a.set(0));
+    COUNTING.with(|on| on.set(true));
+}
+
+fn close_window() -> u64 {
+    COUNTING.with(|on| on.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+/// Deterministic batch of sparse gradients (same seed => same nnz layout,
+/// so warm-up and measured cycles exercise identical capacities).
+fn make_batch(seed: u64, b: usize, n: usize) -> Vec<SparseGrad> {
+    let mut rng = Rng::new(seed);
+    (0..b)
+        .map(|_| {
+            let mut d = Flat::zeros(n);
+            for i in 0..n {
+                if rng.next_f64() < 0.05 {
+                    d.0[i] = rng.normal() as f32;
+                }
+            }
+            SparseGrad::from_dense(&d)
+        })
+        .collect()
+}
+
+#[test]
+fn sum_mode_batch_cycle_is_allocation_free_after_warmup() {
+    let (b, n) = (4usize, 4096usize);
+    let mut buf = BatchBuffer::new(BatchMode::Sum, b);
+    let mut out: Vec<u8> = Vec::new();
+
+    // warm-up cycle: accumulator, merge scratch and output buffer ratchet
+    // up to their steady-state capacities
+    for (i, g) in make_batch(1, b, n).into_iter().enumerate() {
+        buf.offer(i as u64 + 1, g);
+    }
+    buf.flush_into(7, PayloadCodec::Raw, &mut out).unwrap().expect("warmup batch");
+
+    // measured cycle: identical gradients, pre-built outside the window
+    let batch = make_batch(1, b, n);
+    out.clear();
+    open_window();
+    let mut full = false;
+    for (i, g) in batch.into_iter().enumerate() {
+        full = buf.offer(i as u64 + 1 + b as u64, g);
+    }
+    let flushed = buf.flush_into(7, PayloadCodec::Raw, &mut out).unwrap();
+    let allocs = close_window();
+
+    assert!(full, "batch must report full at batch_size");
+    let (lo, hi, appended) = flushed.expect("measured batch");
+    assert_eq!((lo, hi), (b as u64 + 1, 2 * b as u64));
+    assert_eq!(appended, out.len());
+    assert!(!out.is_empty());
+    assert_eq!(
+        allocs, 0,
+        "Sum-mode offer+flush allocated {allocs} times; the steady-state \
+         write path must only reuse warmed buffers"
+    );
+}
+
+#[test]
+fn counting_allocator_actually_counts() {
+    // sanity: the harness would pass vacuously if the window never counted
+    open_window();
+    let v: Vec<u8> = Vec::with_capacity(1024);
+    let n = close_window();
+    drop(v);
+    assert!(n >= 1, "allocation window failed to observe a fresh Vec");
+}
