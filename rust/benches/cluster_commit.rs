@@ -1,0 +1,128 @@
+//! Cluster-commit bench: global-commit overhead vs rank count.
+//!
+//! Drives the same training timeline (anchor full + diff epochs) through
+//! the multi-rank cluster runtime at 1/2/4/8 ranks, twice per rank count:
+//! once over raw MemStore lanes (coordination overhead only) and once over
+//! throttled 256 MB/s devices (the paper's SSD model, where rank fan-out
+//! should win wall-clock like sharding does). Reports wall per epoch, the
+//! coordinator's phase-2 share (record writes — the *cost of atomicity*),
+//! and record bytes.
+//!
+//! Run: `cargo bench --bench cluster_commit`; baseline in
+//! `BENCH_cluster.json`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::checkpoint::manifest::Manifest;
+use lowdiff::cluster::{partition_even, Cluster, ClusterConfig, ClusterStats};
+use lowdiff::compress::topk_mask;
+use lowdiff::optim::ModelState;
+use lowdiff::storage::{MemStore, Namespaced, StorageBackend, Throttled};
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+const N_PARAMS: usize = 256 * 1024;
+const STEPS: u64 = 16;
+const RHO: f64 = 0.01;
+
+/// One run at `ranks`; `throttled_devices` wraps every rank's namespace in
+/// its own 256 MB/s token bucket (Checkmate's per-rank device model — one
+/// SSD per rank, so rank fan-out multiplies aggregate bandwidth).
+fn drive(
+    store: Arc<dyn StorageBackend>,
+    ranks: usize,
+    throttled_devices: bool,
+) -> (f64, ClusterStats) {
+    let sig = model_signature("cluster-bench", N_PARAMS);
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let parts = partition_even(N_PARAMS, ranks);
+    let cluster = if throttled_devices {
+        let shared = Arc::clone(&store);
+        Cluster::spawn_with(Arc::clone(&store), parts, cfg, move |r| {
+            Arc::new(Throttled::new(
+                Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r)),
+                256e6,
+                Duration::from_millis(1),
+            )) as Arc<dyn StorageBackend>
+        })
+    } else {
+        Cluster::spawn(Arc::clone(&store), parts, cfg)
+    };
+    let mut rng = Rng::new(23);
+    let state = ModelState::new(Flat(vec![0.1; N_PARAMS]));
+    let k = ((N_PARAMS as f64 * RHO) as usize).max(1);
+    let t0 = Instant::now();
+    cluster.put_full(0, &state);
+    for step in 1..=STEPS {
+        let mut g = vec![0f32; N_PARAMS];
+        rng.fill_normal_f32(&mut g);
+        cluster.put_diff_dense(step, &topk_mask(&Flat(g), k));
+    }
+    let stats = cluster.finish();
+    (t0.elapsed().as_secs_f64(), stats)
+}
+
+fn report(label: &str, ranks: usize, wall: f64, stats: &ClusterStats) {
+    let epochs = STEPS + 1;
+    println!(
+        "{label:<28} ranks={ranks}  wall {:>7.1} ms ({:>6.2} ms/epoch)  commit {:>6.2} ms \
+         ({:>4.1}%)  records {:>5} B  torn {}",
+        wall * 1e3,
+        wall * 1e3 / epochs as f64,
+        stats.commit_secs * 1e3,
+        stats.commit_secs / wall * 100.0,
+        stats.record_bytes,
+        stats.torn_commits,
+    );
+}
+
+fn main() {
+    println!(
+        "== cluster_commit: {} params, rho {RHO}, {STEPS} diff epochs + anchor ==\n",
+        N_PARAMS
+    );
+
+    let mut json_rows = Vec::new();
+    println!("-- raw MemStore (coordination overhead only) --");
+    for ranks in [1usize, 2, 4, 8] {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let (wall, stats) = drive(store, ranks, false);
+        assert_eq!(stats.global_commits, STEPS + 1, "every epoch must commit");
+        assert_eq!(stats.torn_commits, 0);
+        report("mem", ranks, wall, &stats);
+        json_rows.push(format!(
+            "    {{\"lanes\": \"mem\", \"ranks\": {ranks}, \"wall_ms\": {:.2}, \
+             \"commit_ms\": {:.3}, \"record_bytes\": {}}}",
+            wall * 1e3,
+            stats.commit_secs * 1e3,
+            stats.record_bytes
+        ));
+    }
+
+    println!("\n-- one throttled 256 MB/s device per rank (aggregate bandwidth scales with R) --");
+    let mut base = None;
+    for ranks in [1usize, 2, 4, 8] {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let (wall, stats) = drive(store, ranks, true);
+        assert_eq!(stats.global_commits, STEPS + 1, "every epoch must commit");
+        assert_eq!(stats.torn_commits, 0);
+        report("per-rank device", ranks, wall, &stats);
+        let b = *base.get_or_insert(wall);
+        println!("{:>66}{:.2}x vs 1 rank", "", b / wall);
+        json_rows.push(format!(
+            "    {{\"lanes\": \"per-rank-256MBps\", \"ranks\": {ranks}, \"wall_ms\": {:.2}, \
+             \"commit_ms\": {:.3}, \"record_bytes\": {}}}",
+            wall * 1e3,
+            stats.commit_secs * 1e3,
+            stats.record_bytes
+        ));
+    }
+
+    println!(
+        "\nJSON (paste into BENCH_cluster.json \"measurements\"):\n[\n{}\n]",
+        json_rows.join(",\n")
+    );
+    println!("\ncluster_commit bench done");
+}

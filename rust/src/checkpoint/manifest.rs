@@ -11,6 +11,20 @@
 //! (paper Eq. (6)). GC drops objects made obsolete by a newer full
 //! checkpoint — keeping the previous chain until the new full is durable
 //! (never delete the chain you would recover from).
+//!
+//! The multi-rank cluster runtime ([`crate::cluster`]) adds two more
+//! name families on the same store:
+//! ```text
+//! rank-{r:04}/<object>          rank r's private chain (namespaced)
+//! global-{step:012}.gck         two-phase global commit record
+//! ```
+//! Flat discovery/GC ([`latest_chain`](Manifest::latest_chain),
+//! [`gc`](Manifest::gc), [`truncate_after`](Manifest::truncate_after)) is
+//! blind to both: namespaced names don't parse as checkpoint objects and
+//! `.gck` is not `.ldck`. Cluster-aware discovery uses
+//! [`rank_chain`](Manifest::rank_chain); cluster GC (which must never
+//! delete anything reachable from the newest *complete* global record)
+//! lives in [`crate::cluster::commit`].
 
 use anyhow::{Context, Result};
 
@@ -86,6 +100,75 @@ impl Manifest {
 
     pub fn batch_name(lo: u64, hi: u64) -> String {
         format!("batch-{lo:012}-{hi:012}.ldck")
+    }
+
+    /// Name of the two-phase global commit record for `step` (cluster
+    /// runtime; its presence is the commit point of a cross-rank epoch).
+    pub fn global_name(step: u64) -> String {
+        format!("global-{step:012}.gck")
+    }
+
+    /// Step of a global commit record, `None` for any other name.
+    pub fn parse_global(name: &str) -> Option<u64> {
+        name.strip_prefix("global-")?.strip_suffix(".gck")?.parse().ok()
+    }
+
+    /// Object-namespace prefix of cluster rank `r`. The namespace is
+    /// fixed-width 4 digits — [`parse_rank`](Manifest::parse_rank) rejects
+    /// anything else, and the cluster runtime refuses to spawn more than
+    /// 10000 ranks, so a wider prefix can never be written.
+    pub fn rank_prefix(rank: usize) -> String {
+        debug_assert!(rank < 10_000, "rank {rank} overflows the 4-digit namespace");
+        format!("rank-{rank:04}/")
+    }
+
+    /// Split a namespaced name into `(rank, inner name)`; `None` for
+    /// top-level objects.
+    pub fn parse_rank(name: &str) -> Option<(usize, &str)> {
+        let rest = name.strip_prefix("rank-")?;
+        let (digits, inner) = rest.split_once('/')?;
+        if digits.len() != 4 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        Some((digits.parse().ok()?, inner))
+    }
+
+    /// Step range `(kind, lo, hi)` of a checkpoint object name, looking
+    /// through a rank-namespace prefix if present. `None` for shard
+    /// artifacts, global records, and foreign names.
+    pub fn step_range(name: &str) -> Option<(&'static str, u64, u64)> {
+        let inner = Self::parse_rank(name).map(|(_, n)| n).unwrap_or(name);
+        Self::parse(inner)
+    }
+
+    /// Namespaced discovery: rank `r`'s newest recovery chain *at or
+    /// before* `cut`, from a listing of the shared store's logical names.
+    /// Returned object names keep their `rank-{r:04}/` prefix, so they can
+    /// be fetched directly through the same (shard-aware) view that
+    /// produced the listing. Diffs strictly after `cut` — stragglers of a
+    /// torn global commit — are excluded.
+    pub fn rank_chain(names: &[String], rank: usize, cut: u64) -> Chain {
+        let mut fulls: Vec<(u64, String)> = Vec::new();
+        let mut diffs: Vec<(u64, u64, String)> = Vec::new();
+        for name in names {
+            let Some((r, inner)) = Self::parse_rank(name) else { continue };
+            if r != rank {
+                continue;
+            }
+            match Self::parse(inner) {
+                Some(("full", step, _)) if step <= cut => fulls.push((step, name.clone())),
+                Some(("diff", lo, hi)) | Some(("batch", lo, hi)) if hi <= cut => {
+                    diffs.push((lo, hi, name.clone()))
+                }
+                _ => {}
+            }
+        }
+        fulls.sort();
+        let full = fulls.last().cloned();
+        let base = full.as_ref().map(|(s, _)| *s).unwrap_or(0);
+        diffs.retain(|(lo, _, _)| *lo > base);
+        diffs.sort();
+        Chain { full, diffs }
     }
 
     fn parse(name: &str) -> Option<(&'static str, u64, u64)> {
@@ -270,6 +353,67 @@ mod tests {
         assert!(!Manifest::is_shard_artifact(&base));
         assert!(!Manifest::is_shard_artifact("random.bin"));
         assert!(!Manifest::is_shard_artifact("x.s12of4")); // malformed widths
+    }
+
+    #[test]
+    fn global_and_rank_names_parse() {
+        assert_eq!(Manifest::global_name(7), "global-000000000007.gck");
+        assert_eq!(Manifest::parse_global(&Manifest::global_name(7)), Some(7));
+        assert_eq!(Manifest::parse_global("global-xx.gck"), None);
+        assert_eq!(Manifest::parse_global(&Manifest::full_name(7)), None);
+        assert_eq!(Manifest::rank_prefix(3), "rank-0003/");
+        let name = format!("{}{}", Manifest::rank_prefix(12), Manifest::diff_name(5));
+        assert_eq!(Manifest::parse_rank(&name), Some((12, Manifest::diff_name(5).as_str())));
+        assert_eq!(Manifest::parse_rank("rank-12/x"), None, "width must be 4");
+        assert_eq!(Manifest::parse_rank("full-000000000001.ldck"), None);
+        assert_eq!(Manifest::step_range(&name), Some(("diff", 5, 5)));
+        assert_eq!(Manifest::step_range(&Manifest::batch_name(2, 4)), Some(("batch", 2, 4)));
+        assert_eq!(Manifest::step_range(&Manifest::global_name(1)), None);
+    }
+
+    #[test]
+    fn flat_discovery_and_gc_ignore_cluster_objects() {
+        let s = MemStore::new();
+        s.put(&Manifest::full_name(4), b"f").unwrap();
+        s.put(&Manifest::global_name(9), b"g").unwrap();
+        let ns_full = format!("{}{}", Manifest::rank_prefix(0), Manifest::full_name(9));
+        s.put(&ns_full, b"nf").unwrap();
+        let chain = Manifest::latest_chain(&s).unwrap();
+        assert_eq!(chain.full.as_ref().unwrap().0, 4, "cluster names are invisible");
+        assert_eq!(Manifest::gc(&s).unwrap(), 0);
+        assert_eq!(Manifest::truncate_after(&s, 0).unwrap(), 0);
+        assert!(s.exists(&ns_full) && s.exists(&Manifest::global_name(9)));
+    }
+
+    #[test]
+    fn rank_chain_filters_namespace_and_cut() {
+        let ns = |r: usize, n: String| format!("{}{n}", Manifest::rank_prefix(r));
+        let names = vec![
+            ns(1, Manifest::full_name(0)),
+            ns(1, Manifest::full_name(4)),
+            ns(1, Manifest::diff_name(3)), // obsolete (< full 4)
+            ns(1, Manifest::diff_name(5)),
+            ns(1, Manifest::diff_name(6)),
+            ns(1, Manifest::diff_name(7)), // beyond the cut: straggler
+            ns(2, Manifest::diff_name(5)), // other rank
+            Manifest::global_name(6),      // top level
+        ];
+        let chain = Manifest::rank_chain(&names, 1, 6);
+        assert_eq!(chain.full.as_ref().unwrap().0, 4);
+        assert_eq!(
+            chain.diffs,
+            vec![
+                (5, 5, ns(1, Manifest::diff_name(5))),
+                (6, 6, ns(1, Manifest::diff_name(6))),
+            ]
+        );
+        assert_eq!(chain.latest_step(), 6);
+        // a cut before the newest full falls back to the older full
+        let older = Manifest::rank_chain(&names, 1, 3);
+        assert_eq!(older.full.as_ref().unwrap().0, 0);
+        assert_eq!(older.diffs, vec![(3, 3, ns(1, Manifest::diff_name(3)))]);
+        // unknown rank: empty chain
+        assert_eq!(Manifest::rank_chain(&names, 7, 6), Chain::default());
     }
 
     #[test]

@@ -1,0 +1,574 @@
+//! Two-phase global commit and consistent-cut recovery.
+//!
+//! **Phase 1** — every rank persists its own object for the epoch (diff or
+//! full, through its namespace and — if configured — its sharded engine)
+//! and acks with the object's name, length and CRC. **Phase 2** — the
+//! coordinator, having collected all R acks for the epoch *and committed
+//! every earlier epoch first*, writes one [`GlobalRecord`] as
+//! `global-{step:012}.gck`. The record's presence is the commit point
+//! (Check-N-Run's decoupled-shards-need-an-atomic-commit-record lesson);
+//! an epoch with any failed rank write is *torn*: no record is written and
+//! the per-rank stragglers are garbage awaiting truncation. A torn *diff*
+//! epoch also **poisons** later diff epochs (no records for them either)
+//! until a full epoch re-bases every rank's chain — so a committed record
+//! always references hole-free chains by construction (see
+//! `rank.rs::coordinator_loop`); recovery's chain verification is defense
+//! in depth against external damage.
+//!
+//! **Consistent cut**: the newest step whose global record parses, whose
+//! referenced per-rank objects all read back with the recorded CRC, and
+//! whose per-rank chains (newest full ≤ cut, diffs up to the cut) are
+//! complete — [`find_consistent_cut`] walks records newest→oldest and
+//! returns the first that verifies; torn or damaged newer records are
+//! skipped, never partially applied. [`recover_cluster`] then replays each
+//! rank's diffs through Adam and flattens the slices — bit-identical to
+//! single-state recovery because Adam is element-wise.
+//!
+//! [`gc_cluster`] deletes only what is *unreachable* from the newest
+//! complete record (older records, superseded per-rank objects, defunct
+//! rank namespaces after an elastic reshard), and never touches objects
+//! beyond the cut — they are phase 1 of an epoch still being committed.
+//! The "never delete the chain you would recover from" invariant is
+//! property-tested in `rust/tests/cluster_recovery.rs`.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+use byteorder::{ByteOrder, LittleEndian as LE};
+
+use crate::checkpoint::diff::{read_diff, DiffPayload};
+use crate::checkpoint::full::read_full;
+use crate::checkpoint::manifest::Manifest;
+use crate::cluster::{rank_sig, validate_partitions, Partition};
+use crate::optim::{Adam, ModelState};
+use crate::sparse::SparseGrad;
+use crate::storage::{Sharded, StorageBackend};
+
+pub const GLOBAL_MAGIC: &[u8; 4] = b"LDGC";
+pub const GLOBAL_VERSION: u32 = 1;
+
+/// What a rank persisted for one committed epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommitKind {
+    Full = 0,
+    Diff = 1,
+}
+
+impl CommitKind {
+    fn from_u8(v: u8) -> Result<CommitKind> {
+        Ok(match v {
+            0 => CommitKind::Full,
+            1 => CommitKind::Diff,
+            _ => bail!("unknown commit kind {v}"),
+        })
+    }
+}
+
+/// One rank's entry in a [`GlobalRecord`]: its partition and the durable
+/// object it contributed to this epoch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankObject {
+    pub rank: u32,
+    /// partition range over the flat parameter vector
+    pub offset: u64,
+    pub len: u64,
+    pub kind: CommitKind,
+    /// namespaced logical object name (`rank-{r:04}/diff-…`)
+    pub name: String,
+    /// length and CRC32 of the logical object bytes — re-verified at
+    /// recovery so an overwritten or torn object can't impersonate the
+    /// committed one
+    pub obj_len: u64,
+    pub obj_crc: u32,
+}
+
+impl RankObject {
+    pub fn partition(&self) -> Partition {
+        Partition { rank: self.rank as usize, offset: self.offset as usize, len: self.len as usize }
+    }
+}
+
+/// The phase-2 epoch record: every rank's object + CRC, plus the partition
+/// table that produced them (which is what makes elastic resharded
+/// recovery possible — a restart with different rank count reads R from
+/// the record, not from its own config).
+///
+/// Wire layout (little-endian):
+/// ```text
+/// magic "LDGC" | version u32 | model_sig u64 | step u64 | seq u64 | n_ranks u32
+/// per rank: rank u32 | offset u64 | len u64 | kind u8 | name_len u16
+///           | name bytes | obj_len u64 | obj_crc u32
+/// crc32 u32 (of all preceding bytes)
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobalRecord {
+    pub model_sig: u64,
+    /// training step this epoch captured
+    pub step: u64,
+    /// commit sequence number (strictly increasing; records are written in
+    /// seq order, so commit order is a prefix of epoch order)
+    pub seq: u64,
+    pub ranks: Vec<RankObject>,
+}
+
+impl GlobalRecord {
+    /// Total parameters covered by the partition table.
+    pub fn n_params(&self) -> usize {
+        self.ranks.iter().map(|r| r.len as usize).sum()
+    }
+
+    pub fn partitions(&self) -> Vec<Partition> {
+        self.ranks.iter().map(|r| r.partition()).collect()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let meta: usize = self.ranks.iter().map(|r| 4 + 8 + 8 + 1 + 2 + r.name.len() + 8 + 4).sum();
+        let mut out = Vec::with_capacity(36 + meta + 4);
+        out.extend_from_slice(GLOBAL_MAGIC);
+        out.extend_from_slice(&GLOBAL_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.model_sig.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(self.ranks.len() as u32).to_le_bytes());
+        for r in &self.ranks {
+            out.extend_from_slice(&r.rank.to_le_bytes());
+            out.extend_from_slice(&r.offset.to_le_bytes());
+            out.extend_from_slice(&r.len.to_le_bytes());
+            out.push(r.kind as u8);
+            debug_assert!(r.name.len() <= u16::MAX as usize);
+            out.extend_from_slice(&(r.name.len() as u16).to_le_bytes());
+            out.extend_from_slice(r.name.as_bytes());
+            out.extend_from_slice(&r.obj_len.to_le_bytes());
+            out.extend_from_slice(&r.obj_crc.to_le_bytes());
+        }
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<GlobalRecord> {
+        ensure!(bytes.len() >= 40, "global record too short ({} bytes)", bytes.len());
+        ensure!(&bytes[0..4] == GLOBAL_MAGIC, "bad global record magic");
+        let version = LE::read_u32(&bytes[4..8]);
+        ensure!(version == GLOBAL_VERSION, "unsupported global record version {version}");
+        let crc_stored = LE::read_u32(&bytes[bytes.len() - 4..]);
+        let crc = crc32fast::hash(&bytes[..bytes.len() - 4]);
+        ensure!(crc == crc_stored, "global record CRC mismatch (torn commit write?)");
+        let model_sig = LE::read_u64(&bytes[8..16]);
+        let step = LE::read_u64(&bytes[16..24]);
+        let seq = LE::read_u64(&bytes[24..32]);
+        let n = LE::read_u32(&bytes[32..36]) as usize;
+        ensure!(n >= 1 && n <= 1 << 16, "implausible rank count {n}");
+        let end = bytes.len() - 4;
+        let mut pos = 36usize;
+        let mut ranks = Vec::with_capacity(n);
+        for _ in 0..n {
+            ensure!(pos + 23 <= end, "truncated rank entry");
+            let rank = LE::read_u32(&bytes[pos..pos + 4]);
+            let offset = LE::read_u64(&bytes[pos + 4..pos + 12]);
+            let len = LE::read_u64(&bytes[pos + 12..pos + 20]);
+            let kind = CommitKind::from_u8(bytes[pos + 20])?;
+            let name_len = LE::read_u16(&bytes[pos + 21..pos + 23]) as usize;
+            pos += 23;
+            ensure!(pos + name_len + 12 <= end, "truncated rank entry name");
+            let name = std::str::from_utf8(&bytes[pos..pos + name_len])?.to_string();
+            pos += name_len;
+            let obj_len = LE::read_u64(&bytes[pos..pos + 8]);
+            let obj_crc = LE::read_u32(&bytes[pos + 8..pos + 12]);
+            pos += 12;
+            ranks.push(RankObject { rank, offset, len, kind, name, obj_len, obj_crc });
+        }
+        ensure!(pos == end, "global record trailing bytes");
+        let rec = GlobalRecord { model_sig, step, seq, ranks };
+        validate_partitions(&rec.partitions(), rec.n_params())
+            .context("global record partition table")?;
+        Ok(rec)
+    }
+}
+
+/// One rank's verified, loaded recovery chain at the cut.
+pub struct RankChain {
+    pub part: Partition,
+    /// the rank's newest full checkpoint at or before the cut
+    pub base: ModelState,
+    /// gradient diffs in `(base, cut]`, step order
+    pub diffs: Vec<(u64, SparseGrad)>,
+    /// every namespaced logical object this chain depends on (the GC
+    /// reachability set): base full + diff objects
+    pub objects: Vec<String>,
+}
+
+/// How the consistent cut was found.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterCutStats {
+    pub cut_step: u64,
+    pub cut_seq: u64,
+    /// ranks in the committed epoch (R at commit time, not restart time)
+    pub ranks: usize,
+    /// global records on the store
+    pub records_seen: usize,
+    /// newer records skipped as torn/unverifiable before the cut was found
+    pub records_skipped: usize,
+    /// diff steps replayed across all ranks
+    pub diff_steps_applied: usize,
+}
+
+/// Shard-aware logical view over the shared store (reads both sharded and
+/// plain per-rank objects). Each view carries a 1-thread writer pool, so
+/// callers build one per pass and share it, never one per operation.
+fn logical_view(store: &Arc<dyn StorageBackend>) -> Sharded {
+    Sharded::new(Arc::clone(store), 1, 1)
+}
+
+/// Walk global records newest→oldest; return the first whose referenced
+/// objects and per-rank chains fully verify, with the chains loaded.
+pub fn find_consistent_cut(
+    store: &Arc<dyn StorageBackend>,
+    model_sig: u64,
+) -> Result<Option<(GlobalRecord, Vec<RankChain>, ClusterCutStats)>> {
+    let logical = logical_view(store);
+    let names = logical.list().context("listing cluster store")?;
+    let mut steps: Vec<u64> = names.iter().filter_map(|n| Manifest::parse_global(n)).collect();
+    steps.sort_unstable();
+    let mut stats = ClusterCutStats { records_seen: steps.len(), ..Default::default() };
+    for &step in steps.iter().rev() {
+        let rec = logical
+            .get(&Manifest::global_name(step))
+            .map_err(|e| format!("{e:#}"))
+            .and_then(|b| GlobalRecord::from_bytes(&b).map_err(|e| format!("{e:#}")));
+        let rec = match rec {
+            Ok(r) if r.model_sig == model_sig => r,
+            Ok(r) => {
+                log::warn!(
+                    "global record {step}: foreign model sig {:#x}, skipping",
+                    r.model_sig
+                );
+                stats.records_skipped += 1;
+                continue;
+            }
+            Err(e) => {
+                log::warn!("global record {step} unreadable ({e}); skipping");
+                stats.records_skipped += 1;
+                continue;
+            }
+        };
+        match load_chains(&logical, &names, &rec, model_sig) {
+            Ok(chains) => {
+                stats.cut_step = rec.step;
+                stats.cut_seq = rec.seq;
+                stats.ranks = rec.ranks.len();
+                stats.diff_steps_applied = chains.iter().map(|c| c.diffs.len()).sum();
+                return Ok(Some((rec, chains, stats)));
+            }
+            Err(e) => {
+                log::warn!("global record {step} not recoverable ({e:#}); falling back");
+                stats.records_skipped += 1;
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Verify and load every rank chain referenced by `rec`. Any damaged,
+/// missing, torn, or discontinuous piece fails the whole record. Bases
+/// are resilient: a full checkpoint written by a *different* partitioning
+/// (an elastic re-anchor racing this record) carries a foreign rank
+/// signature and is skipped in favor of an older base of this chain's own
+/// generation, instead of failing the record.
+fn load_chains(
+    logical: &Sharded,
+    names: &[String],
+    rec: &GlobalRecord,
+    model_sig: u64,
+) -> Result<Vec<RankChain>> {
+    let cut = rec.step;
+    let mut out = Vec::with_capacity(rec.ranks.len());
+    for ro in &rec.ranks {
+        let part = ro.partition();
+        let rsig = rank_sig(model_sig, &part);
+        let rank = ro.rank as usize;
+        // the committed tip must still be the committed bytes
+        let tip = logical
+            .get(&ro.name)
+            .with_context(|| format!("rank {rank} tip {}", ro.name))?;
+        ensure!(
+            tip.len() as u64 == ro.obj_len && crc32fast::hash(&tip) == ro.obj_crc,
+            "rank {rank} tip {} does not match the committed CRC",
+            ro.name
+        );
+        // every chain object is fetched exactly once: the tip (base full
+        // or last diff) was just read, so hand its bytes back when the
+        // chain walk reaches it instead of re-reading through storage
+        let mut tip_bytes = Some(tip);
+        let mut fetch = |name: &str| -> Result<Vec<u8>> {
+            if name == ro.name {
+                if let Some(b) = tip_bytes.take() {
+                    return Ok(b);
+                }
+            }
+            logical.get(name)
+        };
+
+        // candidate bases, tried newest→oldest
+        let mut fulls: Vec<(u64, String)> = names
+            .iter()
+            .filter(|n| Manifest::parse_rank(n).map(|(r, _)| r) == Some(rank))
+            .filter_map(|n| match Manifest::step_range(n) {
+                Some(("full", s, _)) if s <= cut => Some((s, n.clone())),
+                _ => None,
+            })
+            .collect();
+        fulls.sort();
+        let mut found: Option<(u64, String, ModelState)> = None;
+        for (s, name) in fulls.iter().rev() {
+            match fetch(name).and_then(|b| read_full(&b, rsig)) {
+                Ok(st) if st.n_params() == part.len => {
+                    found = Some((*s, name.clone(), st));
+                    break;
+                }
+                _ => log::debug!("rank {rank}: base {name} foreign/unusable; trying older"),
+            }
+        }
+        let (base_step, base_name, base) = found.with_context(|| {
+            format!("rank {rank}: no readable full checkpoint at or before {cut}")
+        })?;
+
+        let mut chain_diffs: Vec<(u64, u64, String)> = names
+            .iter()
+            .filter(|n| Manifest::parse_rank(n).map(|(r, _)| r) == Some(rank))
+            .filter_map(|n| match Manifest::step_range(n) {
+                Some(("diff", lo, hi)) | Some(("batch", lo, hi))
+                    if lo > base_step && hi <= cut =>
+                {
+                    Some((lo, hi, n.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        chain_diffs.sort();
+
+        let mut objects = vec![base_name];
+        let mut diffs: Vec<(u64, SparseGrad)> = Vec::with_capacity(chain_diffs.len());
+        // a complete chain steps uniformly from the base to the cut. The
+        // stride is the smallest *inter-diff* gap (same heuristic as
+        // single-chain recovery); the base→first hop may legitimately be
+        // shorter — a full checkpoint off the diff cadence — so it seeds
+        // the stride only for single-diff chains and is otherwise checked
+        // against the inter-diff stride as an upper bound, never folded
+        // into the minimum (that would reject valid off-cadence bases).
+        let mut stride = chain_diffs
+            .first()
+            .map(|(lo, _, _)| lo.saturating_sub(base_step).max(1))
+            .unwrap_or(1);
+        if chain_diffs.len() >= 2 {
+            let mut adj = u64::MAX;
+            for w in chain_diffs.windows(2) {
+                adj = adj.min(w[1].0.saturating_sub(w[0].1));
+            }
+            stride = adj.max(1);
+        }
+        let mut prev_hi = base_step;
+        for (i, (lo, hi, name)) in chain_diffs.iter().enumerate() {
+            let hole = if i == 0 { *lo > base_step + stride } else { *lo != prev_hi + stride };
+            ensure!(!hole, "rank {rank} chain hole before {name}");
+            let bytes = fetch(name).with_context(|| format!("rank {rank} {name}"))?;
+            let (step, payload) =
+                read_diff(&bytes, rsig).with_context(|| format!("rank {rank} {name}"))?;
+            match payload {
+                DiffPayload::Gradient(g) => diffs.push((step, g)),
+                DiffPayload::StateDelta(_) => {
+                    bail!("rank {rank} {name}: state-delta diff in a cluster chain")
+                }
+            }
+            objects.push(name.clone());
+            prev_hi = *hi;
+        }
+        ensure!(prev_hi == cut, "rank {rank} chain ends at {prev_hi}, cut is {cut}");
+        diffs.sort_by_key(|(s, _)| *s);
+        out.push(RankChain { part, base, diffs, objects });
+    }
+    Ok(out)
+}
+
+/// Recover the newest consistent cluster cut as one flattened global
+/// state: per-rank serial replay (exact — Adam is element-wise, so slice
+/// recovery concatenates bit-identically), then flatten in rank order.
+pub fn recover_cluster(
+    store: &Arc<dyn StorageBackend>,
+    model_sig: u64,
+    adam: &Adam,
+) -> Result<(ModelState, ClusterCutStats)> {
+    let (rec, chains, stats) = find_consistent_cut(store, model_sig)?
+        .context("no consistent cluster cut — no complete global commit record found")?;
+    let mut slices = Vec::with_capacity(chains.len());
+    for ch in chains {
+        let mut st = ch.base;
+        for (_, g) in &ch.diffs {
+            adam.apply_sparse(&mut st, g);
+        }
+        st.step = rec.step;
+        slices.push((ch.part, st));
+    }
+    let state = crate::cluster::reshard::flatten(&slices)?;
+    Ok((state, stats))
+}
+
+/// Delete per-rank objects and global records from timelines beyond the
+/// cut (stragglers of torn commits, or a lost timeline after a rollback).
+/// Run after recovery, before new ranks resume writing.
+pub fn truncate_stragglers(store: &Arc<dyn StorageBackend>, cut: u64) -> Result<usize> {
+    let logical = logical_view(store);
+    let mut removed = 0;
+    for name in logical.list()? {
+        let doomed = match Manifest::parse_global(&name) {
+            Some(step) => step > cut,
+            None => {
+                Manifest::parse_rank(&name).is_some()
+                    && matches!(Manifest::step_range(&name), Some((_, lo, _)) if lo > cut)
+            }
+        };
+        if doomed {
+            logical.delete(&name)?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+/// Cluster GC: keep exactly the newest complete global record and every
+/// object reachable from it (each rank's base full + diffs up to the
+/// cut), plus any per-rank object *beyond* the cut (phase 1 of an epoch
+/// still committing). Everything else — older records, torn newer
+/// records, superseded per-rank objects, defunct namespaces left behind
+/// by an elastic reshard — is deleted. Returns objects removed; no-op
+/// when no complete record exists (never delete the chain you might still
+/// recover from).
+pub fn gc_cluster(store: &Arc<dyn StorageBackend>, model_sig: u64) -> Result<usize> {
+    let Some((rec, chains, _)) = find_consistent_cut(store, model_sig)? else {
+        return Ok(0);
+    };
+    let keep: HashSet<String> = chains
+        .into_iter()
+        .flat_map(|c| c.objects)
+        .chain(std::iter::once(Manifest::global_name(rec.step)))
+        .collect();
+    let logical = logical_view(store);
+    let names = logical.list()?;
+    sweep(&logical, &names, rec.step, &keep)
+}
+
+/// Commit-path GC: same sweep as [`gc_cluster`], but the keep set is
+/// built **by name only** from the record the coordinator just wrote —
+/// every referenced object was acked durable moments ago, so re-reading
+/// and CRC-verifying the whole checkpoint (what `gc_cluster` does for an
+/// untrusted store) would double storage traffic per full epoch for
+/// nothing. Crate-private: only sound when `rec` is the newest record on
+/// the store, which the coordinator's in-order commits guarantee.
+pub(crate) fn gc_with_record(store: &Arc<dyn StorageBackend>, rec: &GlobalRecord) -> Result<usize> {
+    let logical = logical_view(store);
+    let names = logical.list()?;
+    let mut keep: HashSet<String> = HashSet::new();
+    keep.insert(Manifest::global_name(rec.step));
+    for ro in &rec.ranks {
+        keep.insert(ro.name.clone());
+        let chain = Manifest::rank_chain(&names, ro.rank as usize, rec.step);
+        if let Some((_, full)) = chain.full {
+            keep.insert(full);
+        }
+        for (_, _, diff) in chain.diffs {
+            keep.insert(diff);
+        }
+    }
+    sweep(&logical, &names, rec.step, &keep)
+}
+
+/// Delete everything except `keep` and in-flight objects beyond `cut`,
+/// over an already-listed logical view (one view + one listing per pass).
+fn sweep(logical: &Sharded, names: &[String], cut: u64, keep: &HashSet<String>) -> Result<usize> {
+    let mut removed = 0;
+    for name in names {
+        if keep.contains(name) {
+            continue;
+        }
+        let doomed = if Manifest::parse_global(name).is_some() {
+            // the kept record is the only live one: older records are
+            // superseded, newer ones failed verification (torn)
+            true
+        } else if Manifest::parse_rank(name).is_some() {
+            // keep in-flight phase-1 objects beyond the cut
+            matches!(Manifest::step_range(name), Some((_, _, hi)) if hi <= cut)
+        } else {
+            false // top-level (non-cluster) objects are not ours to collect
+        };
+        if doomed {
+            logical.delete(name)?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(ranks: usize) -> GlobalRecord {
+        let mut pos = 0u64;
+        let objs = (0..ranks)
+            .map(|r| {
+                let len = 10 + r as u64;
+                let ro = RankObject {
+                    rank: r as u32,
+                    offset: pos,
+                    len,
+                    kind: if r % 2 == 0 { CommitKind::Diff } else { CommitKind::Full },
+                    name: format!("{}{}", Manifest::rank_prefix(r), Manifest::diff_name(7)),
+                    obj_len: 100 + r as u64,
+                    obj_crc: 0xABCD + r as u32,
+                };
+                pos += len;
+                ro
+            })
+            .collect();
+        GlobalRecord { model_sig: 0xFEED, step: 7, seq: 9, ranks: objs }
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        for ranks in [1usize, 2, 5] {
+            let rec = record(ranks);
+            let back = GlobalRecord::from_bytes(&rec.to_bytes()).unwrap();
+            assert_eq!(back, rec);
+            assert_eq!(back.partitions().len(), ranks);
+        }
+    }
+
+    #[test]
+    fn record_detects_corruption_and_truncation() {
+        let bytes = record(3).to_bytes();
+        for cut in [0, 10, bytes.len() / 2, bytes.len() - 1] {
+            assert!(GlobalRecord::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        let err = GlobalRecord::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("CRC") || err.contains("kind") || err.contains("utf-8"), "{err}");
+    }
+
+    #[test]
+    fn record_rejects_non_contiguous_partitions() {
+        let mut rec = record(2);
+        rec.ranks[1].offset += 1;
+        let err = GlobalRecord::from_bytes(&rec.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("partition"), "{err}");
+    }
+
+    #[test]
+    fn commit_kind_decodes() {
+        assert_eq!(CommitKind::from_u8(0).unwrap(), CommitKind::Full);
+        assert_eq!(CommitKind::from_u8(1).unwrap(), CommitKind::Diff);
+        assert!(CommitKind::from_u8(9).is_err());
+    }
+}

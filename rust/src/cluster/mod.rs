@@ -1,0 +1,307 @@
+//! Multi-rank cluster runtime: per-rank differential chains, two-phase
+//! global commit, and elastic resharded recovery.
+//!
+//! The single-process coordinator treats `TrainConfig::workers` as logical
+//! replicas of one global state; a *distributed* training system
+//! checkpoints differently (Checkmate, Check-N-Run): every rank owns a
+//! partition of the model + optimizer state, persists its own differential
+//! chain concurrently, and a coordinator stitches the per-rank chains into
+//! recoverable cross-rank epochs. This module is that orchestration layer,
+//! built on the storage engine of PRs 1–2:
+//!
+//! - [`Partition`] / [`partition_layout`] / [`partition_even`]: contiguous
+//!   slices of the flat parameter vector, split at tensor boundaries.
+//! - [`rank::Cluster`]: N rank threads, each writing its chain under a
+//!   `rank-{r:04}/` namespace ([`Namespaced`](crate::storage::Namespaced))
+//!   through its own [`BufPool`](crate::util::bufpool::BufPool) and —
+//!   when configured — its own [`Sharded`](crate::storage::Sharded)
+//!   engine.
+//! - [`commit`]: the two-phase global commit (phase 1: every rank's
+//!   object durable; phase 2: one `global-{step:012}.gck` record listing
+//!   every rank's object + CRC), consistent-cut recovery, straggler
+//!   truncation, and cluster GC.
+//! - [`reshard`]: elastic restart with R′ ≠ R ranks — recover the cut,
+//!   flatten, repartition.
+//!
+//! Because Adam is element-wise, recovering each rank's slice
+//! independently and concatenating is **bit-identical** to recovering the
+//! global state in one piece — the property the integration tests pin.
+//! Ordering rules and the consistent-cut definition are documented in
+//! `docs/CLUSTER.md`.
+
+pub mod commit;
+pub mod rank;
+pub mod reshard;
+
+pub use commit::{gc_cluster, recover_cluster, truncate_stragglers, ClusterCutStats, GlobalRecord};
+pub use rank::{Cluster, ClusterStats};
+pub use reshard::{elastic_restart, flatten, repartition};
+
+use anyhow::{ensure, Result};
+
+use crate::checkpoint::format::PayloadCodec;
+use crate::model::Layout;
+use crate::optim::ModelState;
+use crate::tensor::Flat;
+
+/// One rank's contiguous slice of the flat parameter vector (the optimizer
+/// moments are sliced with the same range — a partition owns 3·len state
+/// words).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub rank: usize,
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Partition {
+    pub fn end(&self) -> usize {
+        self.offset + self.len
+    }
+}
+
+/// Split `n` parameters across `ranks` contiguous near-equal partitions
+/// (first partitions take the remainder). For synthetic states without a
+/// tensor layout; every partition is non-empty.
+pub fn partition_even(n: usize, ranks: usize) -> Vec<Partition> {
+    assert!(ranks >= 1, "need at least one rank");
+    assert!(n >= ranks, "need at least one parameter per rank");
+    let base = n / ranks;
+    let rem = n % ranks;
+    let mut out = Vec::with_capacity(ranks);
+    let mut pos = 0;
+    for rank in 0..ranks {
+        let len = base + usize::from(rank < rem);
+        out.push(Partition { rank, offset: pos, len });
+        pos += len;
+    }
+    out
+}
+
+/// Split a model layout across `ranks` at **tensor boundaries**, greedily
+/// balancing parameter counts: each rank takes whole tensors until it
+/// reaches its proportional share, while always leaving at least one
+/// tensor per remaining rank.
+pub fn partition_layout(layout: &Layout, ranks: usize) -> Result<Vec<Partition>> {
+    ensure!(ranks >= 1, "need at least one rank");
+    ensure!(
+        layout.n_tensors() >= ranks,
+        "cannot split {} tensors across {ranks} ranks",
+        layout.n_tensors()
+    );
+    let n = layout.n_params;
+    let n_tensors = layout.tensors.len();
+    let mut out = Vec::with_capacity(ranks);
+    let mut t = 0usize; // next unassigned tensor
+    for rank in 0..ranks {
+        let start = layout.tensors[t].offset;
+        let remaining = ranks - rank - 1;
+        let target_end = n * (rank + 1) / ranks;
+        let mut end_t = t;
+        if remaining == 0 {
+            end_t = n_tensors - 1;
+        } else {
+            while end_t + 1 < n_tensors - remaining {
+                let tensor = &layout.tensors[end_t];
+                if tensor.offset + tensor.len >= target_end {
+                    break;
+                }
+                end_t += 1;
+            }
+        }
+        let last = &layout.tensors[end_t];
+        out.push(Partition { rank, offset: start, len: last.offset + last.len - start });
+        t = end_t + 1;
+    }
+    Ok(out)
+}
+
+/// Validate that `parts` tile `[0, n)` contiguously in rank order.
+pub fn validate_partitions(parts: &[Partition], n: usize) -> Result<()> {
+    ensure!(!parts.is_empty(), "empty partition table");
+    let mut pos = 0usize;
+    for (i, p) in parts.iter().enumerate() {
+        ensure!(p.rank == i, "partition {i} labeled rank {}", p.rank);
+        ensure!(p.offset == pos, "partition {i} starts at {} != {pos}", p.offset);
+        ensure!(p.len > 0, "partition {i} is empty");
+        pos = p.end();
+    }
+    ensure!(pos == n, "partitions cover {pos} of {n} params");
+    Ok(())
+}
+
+/// Layout signature of one rank's slice: the model signature mixed with
+/// the partition range (FNV-1a). Binds a rank's chain objects to both the
+/// model *and* the partitioning that produced them, so chains from a
+/// differently-sharded timeline can never be silently mixed.
+pub fn rank_sig(model_sig: u64, part: &Partition) -> u64 {
+    let mut h = model_sig ^ 0x9E37_79B9_7F4A_7C15;
+    for b in (part.offset as u64)
+        .to_le_bytes()
+        .into_iter()
+        .chain((part.len as u64).to_le_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Extract one rank's slice of the global state (params, m, v share the
+/// partition range; the step travels along).
+pub fn slice_state(state: &ModelState, part: &Partition) -> ModelState {
+    let r = part.offset..part.end();
+    ModelState {
+        params: Flat(state.params.0[r.clone()].to_vec()),
+        m: Flat(state.m.0[r.clone()].to_vec()),
+        v: Flat(state.v.0[r].to_vec()),
+        step: state.step,
+    }
+}
+
+/// Slice a dense (masked) gradient per partition — the training thread's
+/// only per-rank cost is this one Ψ-sized copy, fanned out to the rank
+/// threads which compact their slices off the training path.
+pub fn split_dense(grad: &Flat, parts: &[Partition]) -> Vec<Flat> {
+    parts
+        .iter()
+        .map(|p| Flat(grad.0[p.offset..p.end()].to_vec()))
+        .collect()
+}
+
+/// Configuration shared by every rank thread and the commit coordinator.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub model_sig: u64,
+    pub codec: PayloadCodec,
+    /// shards per rank object; >1 (or `writers` > 1) gives each rank its
+    /// own sharded async engine over its namespace
+    pub n_shards: usize,
+    /// storage writer-pool threads per rank engine
+    pub writers: usize,
+    /// run cluster GC after every committed full-checkpoint epoch
+    pub gc: bool,
+    /// per-rank command-queue depth (training-thread backpressure)
+    pub queue_capacity: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            model_sig: 0,
+            codec: PayloadCodec::Raw,
+            n_shards: 1,
+            writers: 1,
+            gc: true,
+            queue_capacity: 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorSpec;
+
+    fn layout(lens: &[usize]) -> Layout {
+        let mut tensors = Vec::new();
+        let mut off = 0;
+        for (i, &len) in lens.iter().enumerate() {
+            tensors.push(TensorSpec { name: format!("t{i}"), offset: off, len });
+            off += len;
+        }
+        Layout {
+            model: "test".into(),
+            n_params: off,
+            vocab: 16,
+            seq_len: 8,
+            batch: 1,
+            rho: 0.01,
+            k: 1,
+            lr: 1e-3,
+            tensors,
+        }
+    }
+
+    #[test]
+    fn even_partitions_tile_exactly() {
+        for (n, r) in [(10usize, 3usize), (7, 7), (100, 4), (5, 1)] {
+            let parts = partition_even(n, r);
+            assert_eq!(parts.len(), r);
+            validate_partitions(&parts, n).unwrap();
+            let spread = parts.iter().map(|p| p.len).max().unwrap()
+                - parts.iter().map(|p| p.len).min().unwrap();
+            assert!(spread <= 1, "near-equal split");
+        }
+    }
+
+    #[test]
+    fn layout_partitions_respect_tensor_boundaries() {
+        let l = layout(&[10, 30, 20, 25, 15]);
+        for ranks in 1..=5usize {
+            let parts = partition_layout(&l, ranks).unwrap();
+            assert_eq!(parts.len(), ranks);
+            validate_partitions(&parts, l.n_params).unwrap();
+            // every boundary coincides with a tensor start
+            for p in &parts[1..] {
+                assert!(
+                    l.tensors.iter().any(|t| t.offset == p.offset),
+                    "partition at {} splits a tensor",
+                    p.offset
+                );
+            }
+        }
+        assert!(partition_layout(&l, 6).is_err(), "more ranks than tensors");
+    }
+
+    #[test]
+    fn layout_partitions_are_roughly_balanced() {
+        let l = layout(&[25, 25, 25, 25]);
+        let parts = partition_layout(&l, 2).unwrap();
+        assert_eq!(parts[0].len, 50);
+        assert_eq!(parts[1].len, 50);
+    }
+
+    #[test]
+    fn rank_sig_distinguishes_partitionings() {
+        let a = Partition { rank: 0, offset: 0, len: 50 };
+        let b = Partition { rank: 0, offset: 0, len: 60 };
+        let c = Partition { rank: 1, offset: 50, len: 50 };
+        assert_ne!(rank_sig(7, &a), rank_sig(7, &b));
+        assert_ne!(rank_sig(7, &a), rank_sig(7, &c));
+        assert_ne!(rank_sig(7, &a), rank_sig(8, &a));
+        assert_eq!(rank_sig(7, &a), rank_sig(7, &a));
+    }
+
+    #[test]
+    fn slice_and_split_cover_the_state() {
+        let n = 10;
+        let state = ModelState {
+            params: Flat((0..n).map(|i| i as f32).collect()),
+            m: Flat((0..n).map(|i| 10.0 + i as f32).collect()),
+            v: Flat((0..n).map(|i| 20.0 + i as f32).collect()),
+            step: 3,
+        };
+        let parts = partition_even(n, 3);
+        let slices: Vec<ModelState> = parts.iter().map(|p| slice_state(&state, p)).collect();
+        assert_eq!(slices[0].params.0, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(slices[2].v.0, vec![27.0, 28.0, 29.0]);
+        assert!(slices.iter().all(|s| s.step == 3));
+        let dense = Flat((0..n).map(|i| -(i as f32)).collect());
+        let split = split_dense(&dense, &parts);
+        let total: usize = split.iter().map(|f| f.len()).sum();
+        assert_eq!(total, n);
+        assert_eq!(split[1].0, vec![-4.0, -5.0, -6.0]);
+    }
+
+    #[test]
+    fn validate_rejects_gaps_and_mislabels() {
+        let mut parts = partition_even(10, 2);
+        assert!(validate_partitions(&parts, 11).is_err());
+        parts[1].offset = 6;
+        assert!(validate_partitions(&parts, 10).is_err());
+        let mut relabeled = partition_even(10, 2);
+        relabeled[1].rank = 0;
+        assert!(validate_partitions(&relabeled, 10).is_err());
+    }
+}

@@ -1,0 +1,806 @@
+//! Rank threads and the cluster runtime handle.
+//!
+//! [`Cluster::spawn`] starts one thread per rank plus one commit
+//! coordinator. Each rank owns a [`Partition`] of the flat state and a
+//! private `rank-{r:04}/` namespace on the shared store
+//! ([`Namespaced`]); it compacts its slice of each masked gradient off
+//! the training path, encodes into its own pooled buffer
+//! ([`BufPool`]), persists through its own [`Sharded`] engine when
+//! `n_shards`/`writers` ask for one, and acks the durable object (name,
+//! length, CRC) to the coordinator — phase 1 of the two-phase commit.
+//! The coordinator assembles acks per epoch, **strictly in epoch order**,
+//! and writes the `global-{step:012}.gck` record once every rank is
+//! durable — phase 2 (see [`crate::cluster::commit`]).
+//!
+//! The training thread's cost per checkpoint is one Ψ-sized slice fan-out
+//! ([`Cluster::put_diff_dense`]) or one state snapshot slice
+//! ([`Cluster::put_full`]); everything else overlaps with training on the
+//! rank threads, exactly like the single-rank checkpointer — but R-wide.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::checkpoint::diff::{write_diff_into, DiffPayload};
+use crate::checkpoint::full::write_full_into;
+use crate::checkpoint::manifest::Manifest;
+use crate::cluster::commit::{gc_with_record, CommitKind, GlobalRecord, RankObject};
+use crate::cluster::{
+    rank_sig, slice_state, split_dense, validate_partitions, ClusterConfig, Partition,
+};
+use crate::coordinator::checkpointer::CkptStats;
+use crate::optim::ModelState;
+use crate::sparse::SparseGrad;
+use crate::storage::{Namespaced, Sharded, StorageBackend};
+use crate::tensor::Flat;
+use crate::util::bufpool::{BufPool, PooledBuf};
+
+/// What the training thread hands a rank.
+enum RankCmd {
+    /// dense-masked gradient slice (compacted on the rank thread)
+    Diff { seq: u64, step: u64, dense: Flat },
+    /// full state slice snapshot
+    Full { seq: u64, step: u64, state: ModelState },
+}
+
+/// Phase-1 completion report from a rank to the coordinator.
+struct RankAck {
+    rank: usize,
+    seq: u64,
+    step: u64,
+    kind: CommitKind,
+    /// `(namespaced logical name, bytes, crc32)` of the durable object
+    result: Result<(String, u64, u32), String>,
+}
+
+/// Aggregated result of a cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    /// per-rank write-path counters, rank order
+    pub per_rank: Vec<CkptStats>,
+    /// epochs whose global record was written (phase 2 reached)
+    pub global_commits: u64,
+    /// epochs abandoned: a rank write failed, a rank died, or the record
+    /// write itself failed
+    pub torn_commits: u64,
+    /// bytes of global commit records written
+    pub record_bytes: u64,
+    /// coordinator wall time in phase 2 (record writes + cluster GC)
+    pub commit_secs: f64,
+    /// objects removed by coordinator-run cluster GC
+    pub gc_removed: u64,
+}
+
+impl ClusterStats {
+    /// Cluster-wide totals (the numbers `RunReport` and the exp tables
+    /// aggregate — all ranks, not rank 0 only).
+    pub fn total(&self) -> CkptStats {
+        let mut out = CkptStats::default();
+        for s in &self.per_rank {
+            out.merge(s);
+        }
+        out
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct CoordStats {
+    commits: u64,
+    torn: u64,
+    record_bytes: u64,
+    commit_secs: f64,
+    gc_removed: u64,
+}
+
+/// Handle to a running rank cluster.
+pub struct Cluster {
+    partitions: Vec<Partition>,
+    txs: Vec<SyncSender<RankCmd>>,
+    rank_handles: Vec<JoinHandle<CkptStats>>,
+    coord: Option<JoinHandle<CoordStats>>,
+    /// for synthetic torn-acks on behalf of dead ranks (a failed send
+    /// means the rank thread is gone and will never ack this epoch);
+    /// dropped before joining the coordinator so its recv loop can end
+    ack_tx: Option<Sender<RankAck>>,
+    next_seq: AtomicU64,
+    /// epochs fully processed by the coordinator (committed + torn)
+    processed: Arc<AtomicU64>,
+    committed: Arc<AtomicU64>,
+}
+
+impl Cluster {
+    /// Spawn ranks over `store` with the conventional `rank-{r:04}/`
+    /// namespaces.
+    pub fn spawn(
+        store: Arc<dyn StorageBackend>,
+        partitions: Vec<Partition>,
+        cfg: ClusterConfig,
+    ) -> Cluster {
+        let shared = Arc::clone(&store);
+        Cluster::spawn_with(store, partitions, cfg, move |r| {
+            Arc::new(Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r)))
+                as Arc<dyn StorageBackend>
+        })
+    }
+
+    /// Spawn with a caller-provided per-rank store factory — the hook the
+    /// fault-injection tests use to wrap a single rank's namespace in a
+    /// [`FaultyStore`](crate::storage::FaultyStore). The returned store
+    /// MUST still map names into `rank-{r:04}/` on the shared store (wrap
+    /// a [`Namespaced`], don't replace it): the global record addresses
+    /// objects by their namespaced names.
+    pub fn spawn_with<F>(
+        store: Arc<dyn StorageBackend>,
+        partitions: Vec<Partition>,
+        cfg: ClusterConfig,
+        rank_store: F,
+    ) -> Cluster
+    where
+        F: Fn(usize) -> Arc<dyn StorageBackend>,
+    {
+        assert!(!partitions.is_empty(), "cluster needs at least one rank");
+        assert!(
+            partitions.len() <= 10_000,
+            "rank namespaces are 4-digit (`rank-{{r:04}}/`): at most 10000 ranks, got {}",
+            partitions.len()
+        );
+        // fail fast on malformed tables: the coordinator trusts rank
+        // labels and the record's reader would reject gaps/overlaps only
+        // at recovery time, when nothing can be re-written
+        let total: usize = partitions.iter().map(|p| p.len).sum();
+        validate_partitions(&partitions, total).expect("cluster partition table");
+        let (ack_tx, ack_rx) = channel::<RankAck>();
+        let mut txs = Vec::with_capacity(partitions.len());
+        let mut rank_handles = Vec::with_capacity(partitions.len());
+        for &part in &partitions {
+            let (tx, rx) = sync_channel::<RankCmd>(cfg.queue_capacity.max(1));
+            let rstore = rank_store(part.rank);
+            let acks = ack_tx.clone();
+            let rcfg = cfg.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("rank-{:04}", part.rank))
+                .spawn(move || rank_loop(part, rstore, rcfg, rx, acks))
+                .expect("spawning rank thread");
+            txs.push(tx);
+            rank_handles.push(h);
+        }
+        let cluster_acks = ack_tx.clone();
+        drop(ack_tx); // coordinator exits once rank + cluster senders are gone
+        let processed = Arc::new(AtomicU64::new(0));
+        let committed = Arc::new(AtomicU64::new(0));
+        let coord = {
+            let parts = partitions.clone();
+            let pr = Arc::clone(&processed);
+            let cm = Arc::clone(&committed);
+            std::thread::Builder::new()
+                .name("cluster-commit".into())
+                .spawn(move || coordinator_loop(store, cfg, parts, ack_rx, pr, cm))
+                .expect("spawning commit coordinator")
+        };
+        Cluster {
+            partitions,
+            txs,
+            rank_handles,
+            coord: Some(coord),
+            ack_tx: Some(cluster_acks),
+            next_seq: AtomicU64::new(0),
+            processed,
+            committed,
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn partitions(&self) -> &[Partition] {
+        &self.partitions
+    }
+
+    /// Epochs the coordinator has resolved (committed or torn).
+    pub fn epochs_processed(&self) -> u64 {
+        self.processed.load(Ordering::SeqCst)
+    }
+
+    /// Epochs whose global record is durable.
+    pub fn epochs_committed(&self) -> u64 {
+        self.committed.load(Ordering::SeqCst)
+    }
+
+    /// Block until at least `n` epochs are resolved (test/example
+    /// barrier; the run path never waits).
+    pub fn wait_epochs(&self, n: u64) {
+        while self.epochs_processed() < n {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Fan a dense-masked global gradient out as one differential epoch.
+    /// Cost on the caller: one Ψ-sized slice copy; compaction, encoding
+    /// and I/O happen on the rank threads. Returns time blocked on full
+    /// rank queues (transmission-stall backpressure).
+    pub fn put_diff_dense(&self, step: u64, grad: &Flat) -> Duration {
+        let seq = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let t0 = Instant::now();
+        let slices = split_dense(grad, &self.partitions);
+        for ((tx, part), dense) in self.txs.iter().zip(&self.partitions).zip(slices) {
+            if tx.send(RankCmd::Diff { seq, step, dense }).is_err() {
+                self.ack_dead_rank(part.rank, seq, step, CommitKind::Diff);
+            }
+        }
+        t0.elapsed()
+    }
+
+    /// Snapshot the global state as one full-checkpoint epoch (each rank
+    /// persists its slice; the commit record makes the set atomic).
+    pub fn put_full(&self, step: u64, state: &ModelState) -> Duration {
+        let seq = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let t0 = Instant::now();
+        for (tx, part) in self.txs.iter().zip(&self.partitions) {
+            let mut slice = slice_state(state, part);
+            slice.step = step;
+            if tx.send(RankCmd::Full { seq, step, state: slice }).is_err() {
+                self.ack_dead_rank(part.rank, seq, step, CommitKind::Full);
+            }
+        }
+        t0.elapsed()
+    }
+
+    /// A failed send means the rank thread is gone and will never ack;
+    /// tear the epoch on its behalf so epochs *sent after the death* can
+    /// still resolve. This is a partial mitigation: commands that were
+    /// already queued inside the dead rank were accepted but will never
+    /// be acked, so epochs from that window (and everything after them,
+    /// given in-order commits) resolve only at shutdown — an in-process
+    /// rank death is crash territory, handled by restart + consistent-cut
+    /// recovery, not by the live coordinator.
+    fn ack_dead_rank(&self, rank: usize, seq: u64, step: u64, kind: CommitKind) {
+        log::error!("rank {rank} is gone; epoch {seq} (step {step}) will be torn");
+        if let Some(acks) = &self.ack_tx {
+            let _ = acks.send(RankAck {
+                rank,
+                seq,
+                step,
+                kind,
+                result: Err("rank thread dead".into()),
+            });
+        }
+    }
+
+    /// Graceful shutdown: drain every rank queue, let the coordinator
+    /// resolve every epoch, and return the aggregated stats.
+    pub fn finish(mut self) -> ClusterStats {
+        self.txs.clear(); // close command queues; ranks drain and exit
+        let per_rank: Vec<CkptStats> = self
+            .rank_handles
+            .drain(..)
+            .map(|h| h.join().unwrap_or_default())
+            .collect();
+        self.ack_tx = None; // last sender gone: the coordinator can stop
+        let c = self
+            .coord
+            .take()
+            .and_then(|h| h.join().ok())
+            .unwrap_or_default();
+        ClusterStats {
+            per_rank,
+            global_commits: c.commits,
+            torn_commits: c.torn,
+            record_bytes: c.record_bytes,
+            commit_secs: c.commit_secs,
+            gc_removed: c.gc_removed,
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for h in self.rank_handles.drain(..) {
+            let _ = h.join();
+        }
+        self.ack_tx = None;
+        if let Some(h) = self.coord.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One rank's write loop: compact → encode (pooled) → persist → ack.
+fn rank_loop(
+    part: Partition,
+    store: Arc<dyn StorageBackend>,
+    cfg: ClusterConfig,
+    rx: Receiver<RankCmd>,
+    acks: Sender<RankAck>,
+) -> CkptStats {
+    let sig = rank_sig(cfg.model_sig, &part);
+    let prefix = Manifest::rank_prefix(part.rank);
+    let pool = BufPool::new(4);
+    let engine = (cfg.n_shards > 1 || cfg.writers > 1)
+        .then(|| Sharded::new(Arc::clone(&store), cfg.n_shards, cfg.writers));
+    let mut stats = CkptStats::default();
+
+    while let Ok(cmd) = rx.recv() {
+        let (seq, step, kind, encoded) = match cmd {
+            RankCmd::Diff { seq, step, dense } => {
+                let t0 = Instant::now();
+                let sparse = SparseGrad::from_dense(&dense); // offload/compact
+                drop(dense);
+                stats.offload_secs += t0.elapsed().as_secs_f64();
+                stats.diff_ckpts += 1;
+                let mut buf = pool.checkout();
+                let res =
+                    write_diff_into(&DiffPayload::Gradient(sparse), sig, step, cfg.codec, &mut buf)
+                        .map(|copied| (buf, Manifest::diff_name(step), copied))
+                        .map_err(|e| format!("encode diff {step}: {e:#}"));
+                (seq, step, CommitKind::Diff, res)
+            }
+            RankCmd::Full { seq, step, state } => {
+                stats.full_ckpts += 1;
+                let mut buf = pool.checkout();
+                let res = write_full_into(&state, sig, cfg.codec, &mut buf)
+                    .map(|copied| (buf, Manifest::full_name(step), copied))
+                    .map_err(|e| format!("encode full {step}: {e:#}"));
+                (seq, step, CommitKind::Full, res)
+            }
+        };
+        let result = match encoded {
+            Err(e) => {
+                log::error!("rank {}: {e}", part.rank);
+                stats.errors += 1;
+                Err(e)
+            }
+            Ok((buf, name, copied)) => {
+                stats.bytes_copied += copied as u64;
+                persist(engine.as_ref(), &store, &name, buf, &mut stats)
+                    .map(|(len, crc)| (format!("{prefix}{name}"), len, crc))
+            }
+        };
+        if acks.send(RankAck { rank: part.rank, seq, step, kind, result }).is_err() {
+            log::warn!("rank {}: coordinator gone; stopping", part.rank);
+            break;
+        }
+    }
+    stats.pool_hits = pool.hits();
+    stats.pool_misses = pool.misses();
+    if let Some(eng) = engine {
+        let sst = eng.storage_stats();
+        stats.shard_writes = sst.physical_writes;
+        stats.spill_bytes = sst.spill_bytes;
+        stats.spill_errors = sst.spill_errors;
+    }
+    stats
+}
+
+/// Phase 1 for one object: write through the rank's engine (or directly),
+/// blocking until durable — the ack must mean "on disk", or the commit
+/// record could reference bytes that never landed.
+fn persist(
+    engine: Option<&Sharded>,
+    store: &Arc<dyn StorageBackend>,
+    name: &str,
+    buf: PooledBuf,
+    stats: &mut CkptStats,
+) -> Result<(u64, u32), String> {
+    let len = buf.len() as u64;
+    let crc = crc32fast::hash(&buf);
+    let t0 = Instant::now();
+    let res = match engine {
+        Some(eng) => {
+            stats.inflight_peak = stats.inflight_peak.max(1);
+            eng.put_async(name, buf).wait()
+        }
+        None => store.put(name, &buf).map_err(|e| format!("{e:#}")),
+    };
+    stats.write_secs += t0.elapsed().as_secs_f64();
+    match res {
+        Ok(()) => {
+            stats.writes += 1;
+            stats.bytes_written += len;
+            Ok((len, crc))
+        }
+        Err(e) => {
+            log::error!("rank write {name} failed: {e}");
+            stats.errors += 1;
+            Err(e)
+        }
+    }
+}
+
+/// One epoch's phase-1 ledger.
+struct Pending {
+    step: u64,
+    kind: CommitKind,
+    objects: Vec<Option<RankObject>>,
+    received: usize,
+    failed: bool,
+}
+
+/// Phase 2: assemble acks per epoch and write records strictly in epoch
+/// order — a record for epoch k is written only after epochs `..k` were
+/// each either committed or declared torn, so commit order is always a
+/// prefix of epoch order (the consistent-cut walk relies on this).
+///
+/// A torn **diff** epoch poisons the pipeline: that rank's chain now has
+/// a hole, so committing any later diff epoch would certify a cut whose
+/// chain misses a gradient (a hole the recovery-side stride heuristic
+/// cannot always see — e.g. a single diff after the base looks like a
+/// legitimate longer cadence). Diff epochs are declared torn while
+/// poisoned; the next phase-1-complete **full** epoch re-bases every
+/// rank's chain and clears the poison. A torn full epoch loses only its
+/// own record — it holes no chain.
+fn coordinator_loop(
+    store: Arc<dyn StorageBackend>,
+    cfg: ClusterConfig,
+    partitions: Vec<Partition>,
+    ack_rx: Receiver<RankAck>,
+    processed: Arc<AtomicU64>,
+    committed: Arc<AtomicU64>,
+) -> CoordStats {
+    let n = partitions.len();
+    let mut pending: BTreeMap<u64, Pending> = BTreeMap::new();
+    let mut next_seq = 0u64;
+    let mut poisoned = false;
+    let mut out = CoordStats::default();
+    while let Ok(ack) = ack_rx.recv() {
+        let e = pending.entry(ack.seq).or_insert_with(|| Pending {
+            step: ack.step,
+            kind: ack.kind,
+            objects: vec![None; n],
+            received: 0,
+            failed: false,
+        });
+        e.received += 1;
+        match ack.result {
+            Ok((name, obj_len, obj_crc)) => {
+                let part = partitions[ack.rank];
+                e.objects[ack.rank] = Some(RankObject {
+                    rank: ack.rank as u32,
+                    offset: part.offset as u64,
+                    len: part.len as u64,
+                    kind: ack.kind,
+                    name,
+                    obj_len,
+                    obj_crc,
+                });
+            }
+            Err(err) => {
+                let (seq, step) = (ack.seq, ack.step);
+                log::warn!("epoch {seq} (step {step}): rank {} failed: {err}", ack.rank);
+                e.failed = true;
+            }
+        }
+        while pending.get(&next_seq).is_some_and(|p| p.received == n) {
+            let p = pending.remove(&next_seq).unwrap();
+            commit_epoch(&store, &cfg, next_seq, p, &committed, &mut poisoned, &mut out);
+            next_seq += 1;
+            processed.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+    // every rank sender is gone; epochs still missing acks are torn
+    if !pending.is_empty() {
+        log::warn!("{} epochs never completed phase 1 (torn)", pending.len());
+        out.torn += pending.len() as u64;
+        processed.fetch_add(pending.len() as u64, Ordering::SeqCst);
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn commit_epoch(
+    store: &Arc<dyn StorageBackend>,
+    cfg: &ClusterConfig,
+    seq: u64,
+    p: Pending,
+    committed: &AtomicU64,
+    poisoned: &mut bool,
+    out: &mut CoordStats,
+) {
+    let t0 = Instant::now();
+    if p.failed || p.objects.iter().any(Option::is_none) {
+        // phase 1 incomplete. A torn DIFF epoch holes that rank's chain —
+        // poison. A torn FULL epoch holes nothing (the diff progression is
+        // untouched; later recoveries just use an older base), so it only
+        // loses its own record.
+        if p.kind == CommitKind::Diff {
+            *poisoned = true;
+        }
+        out.torn += 1;
+        out.commit_secs += t0.elapsed().as_secs_f64();
+        return;
+    }
+    if *poisoned && p.kind == CommitKind::Diff {
+        // chains are holed upstream; a record here would certify an
+        // unrecoverable cut — wait for a full epoch to re-base
+        out.torn += 1;
+        out.commit_secs += t0.elapsed().as_secs_f64();
+        return;
+    }
+    if p.kind == CommitKind::Full {
+        // every rank's chain re-bases at this durable full, whether or
+        // not the record write below succeeds
+        *poisoned = false;
+    }
+    let rec = GlobalRecord {
+        model_sig: cfg.model_sig,
+        step: p.step,
+        seq,
+        ranks: p.objects.into_iter().map(Option::unwrap).collect(),
+    };
+    let bytes = rec.to_bytes();
+    match store.put(&Manifest::global_name(rec.step), &bytes) {
+        Ok(()) => {
+            out.commits += 1;
+            out.record_bytes += bytes.len() as u64;
+            committed.fetch_add(1, Ordering::SeqCst);
+            if cfg.gc && p.kind == CommitKind::Full {
+                match gc_with_record(store, &rec) {
+                    Ok(removed) => out.gc_removed += removed as u64,
+                    Err(e) => log::warn!("cluster gc failed: {e:#}"),
+                }
+            }
+        }
+        Err(e) => {
+            // phase 2 failed: no record, but every rank chain is intact,
+            // so later epochs stay committable (no poison)
+            log::warn!("global record for step {} failed: {e:#}", rec.step);
+            out.torn += 1;
+        }
+    }
+    out.commit_secs += t0.elapsed().as_secs_f64();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::format::model_signature;
+    use crate::cluster::{partition_even, recover_cluster};
+    use crate::compress::topk_mask;
+    use crate::optim::Adam;
+    use crate::storage::{FaultConfig, FaultyStore, MemStore};
+    use crate::util::rng::Rng;
+
+    fn grad(rng: &mut Rng, n: usize) -> Flat {
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        topk_mask(&Flat(g), n / 8 + 1)
+    }
+
+    fn drive(
+        cluster: &Cluster,
+        n: usize,
+        steps: u64,
+        seed: u64,
+    ) -> Vec<ModelState> {
+        // expected global state per step, via the same element-wise Adam
+        let adam = Adam::default();
+        let mut rng = Rng::new(seed);
+        let mut state = ModelState::new(Flat(vec![0.5; n]));
+        let mut timeline = vec![state.clone()];
+        cluster.put_full(0, &state);
+        for step in 1..=steps {
+            let g = grad(&mut rng, n);
+            cluster.put_diff_dense(step, &g);
+            adam.apply_sparse(&mut state, &SparseGrad::from_dense(&g));
+            timeline.push(state.clone());
+        }
+        timeline
+    }
+
+    #[test]
+    fn two_ranks_commit_every_epoch_and_recover_exactly() {
+        let n = 96;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let cfg = ClusterConfig { model_sig: model_signature("t", n), ..Default::default() };
+        let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 2), cfg.clone());
+        let timeline = drive(&cluster, n, 5, 11);
+        let stats = cluster.finish();
+        assert_eq!(stats.global_commits, 6, "anchor + 5 diffs all committed");
+        assert_eq!(stats.torn_commits, 0);
+        assert_eq!(stats.per_rank.len(), 2);
+        assert_eq!(stats.total().writes, 12, "2 ranks x 6 objects");
+        assert!(stats.record_bytes > 0);
+
+        let (got, cut) = recover_cluster(&store, cfg.model_sig, &Adam::default()).unwrap();
+        assert_eq!(cut.cut_step, 5);
+        assert_eq!(cut.ranks, 2);
+        assert_eq!(got, timeline[5], "slice recovery must be bit-identical");
+    }
+
+    #[test]
+    fn records_are_committed_in_epoch_order() {
+        let n = 64;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let cfg = ClusterConfig {
+            model_sig: model_signature("t", n),
+            gc: false,
+            ..Default::default()
+        };
+        let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 3), cfg);
+        drive(&cluster, n, 4, 3);
+        cluster.wait_epochs(5);
+        assert_eq!(cluster.epochs_committed(), 5);
+        drop(cluster);
+        let mut steps: Vec<u64> = store
+            .list()
+            .unwrap()
+            .iter()
+            .filter_map(|s| Manifest::parse_global(s))
+            .collect();
+        steps.sort_unstable();
+        assert_eq!(steps, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn failed_rank_write_tears_the_epoch_not_the_run() {
+        let n = 80;
+        let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let sig = model_signature("t", n);
+        let cfg = ClusterConfig { model_sig: sig, gc: false, ..Default::default() };
+        let shared = Arc::clone(&inner);
+        // rank 1's namespace dies after 3 writes (anchor + 2 diffs)
+        let cluster = Cluster::spawn_with(
+            Arc::clone(&inner),
+            partition_even(n, 2),
+            cfg,
+            move |r| {
+                let ns = Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r));
+                if r == 1 {
+                    Arc::new(FaultyStore::new(
+                        ns,
+                        FaultConfig { put_fail: 1.0, grace_ops: 3, ..FaultConfig::default() },
+                    )) as Arc<dyn StorageBackend>
+                } else {
+                    Arc::new(ns) as Arc<dyn StorageBackend>
+                }
+            },
+        );
+        let timeline = drive(&cluster, n, 6, 7);
+        let stats = cluster.finish();
+        assert_eq!(stats.global_commits, 3, "anchor + diffs 1,2");
+        assert_eq!(stats.torn_commits, 4, "diffs 3..=6 torn");
+        assert_eq!(stats.total().errors, 4);
+
+        let (got, cut) = recover_cluster(&inner, sig, &Adam::default()).unwrap();
+        assert_eq!(cut.cut_step, 2, "consistent cut = last fully-committed epoch");
+        assert_eq!(got, timeline[2]);
+        assert_eq!(cut.records_skipped, 0, "torn epochs never wrote records");
+    }
+
+    #[test]
+    fn off_cadence_base_full_does_not_reject_the_chain() {
+        // diff cadence 3, but a full checkpoint lands OFF the grid (step
+        // 7): the base→first-diff hop (2) is shorter than the chain
+        // stride (3). The stride heuristic must take the inter-diff gap,
+        // not fold the first hop into the minimum — otherwise committed
+        // epochs 9 and 12 would be rejected as holed and silently lost.
+        let n = 64;
+        let sig = model_signature("t", n);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let cfg = ClusterConfig { model_sig: sig, gc: false, ..Default::default() };
+        let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 2), cfg);
+        let adam = Adam::default();
+        let mut rng = Rng::new(41);
+        let state0 = ModelState::new(Flat(vec![0.5; n]));
+        cluster.put_full(0, &state0);
+        let g3 = grad(&mut rng, n);
+        cluster.put_diff_dense(3, &g3);
+        let mut base7 = state0.clone();
+        adam.apply_sparse(&mut base7, &SparseGrad::from_dense(&g3));
+        base7.step = 7;
+        cluster.put_full(7, &base7);
+        let g9 = grad(&mut rng, n);
+        cluster.put_diff_dense(9, &g9);
+        let g12 = grad(&mut rng, n);
+        cluster.put_diff_dense(12, &g12);
+        let stats = cluster.finish();
+        assert_eq!(stats.global_commits, 5);
+        assert_eq!(stats.torn_commits, 0);
+
+        // recovery-style oracle from the step-7 base
+        let mut expect = base7.clone();
+        adam.apply_sparse(&mut expect, &SparseGrad::from_dense(&g9));
+        adam.apply_sparse(&mut expect, &SparseGrad::from_dense(&g12));
+        expect.step = 12;
+
+        let (got, cut) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+        assert_eq!(cut.cut_step, 12, "off-cadence base must not truncate committed epochs");
+        assert_eq!(got, expect);
+    }
+
+    /// Fails exactly the puts whose name contains `needle`; everything
+    /// else passes — models a rank that drops one write and then heals.
+    struct FailName<B: StorageBackend> {
+        inner: B,
+        needle: String,
+    }
+
+    impl<B: StorageBackend> StorageBackend for FailName<B> {
+        fn put(&self, name: &str, bytes: &[u8]) -> anyhow::Result<()> {
+            anyhow::ensure!(!name.contains(&self.needle), "injected put failure for {name}");
+            self.inner.put(name, bytes)
+        }
+        fn get(&self, name: &str) -> anyhow::Result<Vec<u8>> {
+            self.inner.get(name)
+        }
+        fn delete(&self, name: &str) -> anyhow::Result<()> {
+            self.inner.delete(name)
+        }
+        fn list(&self) -> anyhow::Result<Vec<String>> {
+            self.inner.list()
+        }
+    }
+
+    #[test]
+    fn torn_epoch_poisons_diff_commits_until_a_full_rebases() {
+        // rank 1 fails ONLY its diff-1 write, then heals. Without the
+        // poison rule the coordinator would commit records for diffs 2,3
+        // whose rank-1 chain silently misses gradient 1 (a single diff
+        // after the base looks like a legitimate longer cadence to the
+        // recovery-side stride heuristic) — a certified wrong state.
+        let n = 80;
+        let sig = model_signature("t", n);
+        let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let cfg = ClusterConfig { model_sig: sig, gc: false, ..Default::default() };
+        let shared = Arc::clone(&inner);
+        let cluster = Cluster::spawn_with(
+            Arc::clone(&inner),
+            partition_even(n, 2),
+            cfg,
+            move |r| {
+                let ns = Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r));
+                if r == 1 {
+                    Arc::new(FailName { inner: ns, needle: Manifest::diff_name(1) })
+                        as Arc<dyn StorageBackend>
+                } else {
+                    Arc::new(ns) as Arc<dyn StorageBackend>
+                }
+            },
+        );
+        let adam = Adam::default();
+        let mut rng = Rng::new(13);
+        let mut state = ModelState::new(Flat(vec![0.5; n]));
+        cluster.put_full(0, &state);
+        for step in 1..=3u64 {
+            let g = grad(&mut rng, n);
+            cluster.put_diff_dense(step, &g);
+            adam.apply_sparse(&mut state, &SparseGrad::from_dense(&g));
+        }
+        cluster.put_full(3, &state); // re-bases every chain
+        let stats = cluster.finish();
+        assert_eq!(stats.global_commits, 2, "anchor + the re-basing full only");
+        assert_eq!(stats.torn_commits, 3, "torn epoch 1 + poisoned diffs 2,3");
+        assert!(!inner.exists(&Manifest::global_name(2)), "poisoned diff must not commit");
+
+        let (got, cut) = recover_cluster(&inner, sig, &Adam::default()).unwrap();
+        assert_eq!(cut.cut_step, 3);
+        assert_eq!(got, state, "recovery lands on the re-based full, never a holed chain");
+    }
+
+    #[test]
+    fn sharded_rank_engines_recover_identically_to_direct() {
+        let n = 120;
+        let sig = model_signature("t", n);
+        let run = |n_shards: usize, writers: usize| -> (Arc<dyn StorageBackend>, ModelState) {
+            let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+            let cfg = ClusterConfig { model_sig: sig, n_shards, writers, ..Default::default() };
+            let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 2), cfg);
+            let timeline = drive(&cluster, n, 4, 21);
+            let stats = cluster.finish();
+            assert_eq!(stats.torn_commits, 0);
+            if n_shards > 1 {
+                assert!(stats.total().shard_writes > 0, "per-rank engines must be exercised");
+            }
+            let (got, _) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+            assert_eq!(got, *timeline.last().unwrap());
+            (store, got)
+        };
+        let (_, direct) = run(1, 1);
+        let (_, sharded) = run(3, 2);
+        assert_eq!(direct, sharded, "engine topology must not change recovered bits");
+    }
+}

@@ -1,0 +1,173 @@
+//! Elastic resharded recovery: restart with R′ ≠ R ranks.
+//!
+//! A cluster checkpoint is R per-rank chains plus a global record carrying
+//! the partition table that produced them. An elastic restart therefore
+//! does not need the old rank count configured anywhere: it reads all R
+//! chains at the consistent cut (merging each rank's diffs into its base —
+//! [`recover_cluster`](crate::cluster::commit::recover_cluster)), flattens
+//! the slices into one global state, and [`repartition`]s that state
+//! across the new R′ partitions. [`elastic_restart`] wraps the whole
+//! sequence and re-anchors the new cluster: each new rank writes a full
+//! checkpoint of its (re-cut) slice at the cut step and the coordinator
+//! commits a fresh global record with the **new** partition table — from
+//! that point the old namespaces are garbage that the next cluster GC
+//! sweep reclaims.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cluster::commit::{recover_cluster, truncate_stragglers, ClusterCutStats};
+use crate::cluster::rank::Cluster;
+use crate::cluster::{slice_state, validate_partitions, ClusterConfig, Partition};
+use crate::optim::{Adam, ModelState};
+use crate::storage::StorageBackend;
+use crate::tensor::Flat;
+
+/// Concatenate per-rank state slices (in partition order) back into one
+/// global state. The slices must tile the parameter vector contiguously
+/// and agree on the step.
+pub fn flatten(slices: &[(Partition, ModelState)]) -> Result<ModelState> {
+    ensure!(!slices.is_empty(), "nothing to flatten");
+    let mut order: Vec<usize> = (0..slices.len()).collect();
+    order.sort_by_key(|&i| slices[i].0.offset);
+    let n: usize = slices.iter().map(|(p, _)| p.len).sum();
+    let step = slices[0].1.step;
+    let mut params = Vec::with_capacity(n);
+    let mut m = Vec::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    let mut pos = 0usize;
+    for &i in &order {
+        let (p, s) = &slices[i];
+        ensure!(p.offset == pos, "slice at {} leaves a gap at {pos}", p.offset);
+        ensure!(s.n_params() == p.len, "slice state {} != partition {}", s.n_params(), p.len);
+        ensure!(s.step == step, "slice steps disagree: {} != {step}", s.step);
+        params.extend_from_slice(&s.params.0);
+        m.extend_from_slice(&s.m.0);
+        v.extend_from_slice(&s.v.0);
+        pos = p.end();
+    }
+    Ok(ModelState { params: Flat(params), m: Flat(m), v: Flat(v), step })
+}
+
+/// Cut a flattened global state into slices for a (new) partition table.
+pub fn repartition(state: &ModelState, parts: &[Partition]) -> Result<Vec<ModelState>> {
+    validate_partitions(parts, state.n_params())?;
+    Ok(parts.iter().map(|p| slice_state(state, p)).collect())
+}
+
+/// Recover the consistent cut written by R ranks and restart the cluster
+/// with the given R′ partitions (R′ may differ from R — the record, not
+/// the caller, knows R). Stragglers beyond the cut are truncated, the new
+/// cluster is spawned, and the cut state is re-anchored as a full epoch
+/// under the new partitioning; the call **blocks until that anchor epoch
+/// commits** and errors if it tears, so the caller never trains on top of
+/// an unanchored reshard. Returns the running cluster, the recovered
+/// global state, and cut statistics.
+///
+/// Crash-window caveat: when the cut epoch was itself a *full* at step S,
+/// the re-anchor overwrites `rank-*/full-{S}` in place (names are
+/// step-keyed), so a crash inside this call — after the first overwrite,
+/// before the new record lands — can invalidate the old record's tip CRCs
+/// and force recovery back to an older cut. Diff-kind cuts have no such
+/// window (the anchor writes new names, and chain loading skips
+/// foreign-generation bases). Generation-tagged namespaces would remove
+/// the residual window; see docs/CLUSTER.md.
+pub fn elastic_restart(
+    store: &Arc<dyn StorageBackend>,
+    adam: &Adam,
+    new_parts: Vec<Partition>,
+    cfg: ClusterConfig,
+) -> Result<(Cluster, ModelState, ClusterCutStats)> {
+    let (state, cut) = recover_cluster(store, cfg.model_sig, adam)
+        .context("elastic restart: recovering the consistent cut")?;
+    validate_partitions(&new_parts, state.n_params())
+        .context("elastic restart: new partition table")?;
+    truncate_stragglers(store, cut.cut_step)
+        .context("elastic restart: truncating torn-commit stragglers")?;
+    let cluster = Cluster::spawn(Arc::clone(store), new_parts, cfg);
+    // re-anchor: every new rank needs a base full under ITS partitioning
+    // before it can extend the chain (old chains use the old rank sigs)
+    cluster.put_full(state.step, &state);
+    cluster.wait_epochs(1);
+    ensure!(
+        cluster.epochs_committed() >= 1,
+        "elastic restart: the re-anchor epoch tore (a rank write failed); \
+         recovery still finds the newest verifiable pre-reshard cut"
+    );
+    Ok((cluster, state, cut))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition_even;
+    use crate::util::rng::Rng;
+
+    fn state(n: usize, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed);
+        let mut p = vec![0f32; n];
+        let mut m = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        rng.fill_normal_f32(&mut p);
+        rng.fill_normal_f32(&mut m);
+        for x in v.iter_mut() {
+            *x = rng.next_f32();
+        }
+        ModelState { params: Flat(p), m: Flat(m), v: Flat(v), step: 9 }
+    }
+
+    #[test]
+    fn flatten_inverts_repartition_for_any_rank_counts() {
+        let n = 103;
+        let want = state(n, 5);
+        for r in [1usize, 2, 3, 7] {
+            let parts = partition_even(n, r);
+            let slices = repartition(&want, &parts).unwrap();
+            let pairs: Vec<(Partition, ModelState)> =
+                parts.iter().copied().zip(slices).collect();
+            assert_eq!(flatten(&pairs).unwrap(), want, "r={r}");
+        }
+    }
+
+    #[test]
+    fn flatten_accepts_any_slice_order() {
+        let n = 30;
+        let want = state(n, 8);
+        let parts = partition_even(n, 3);
+        let slices = repartition(&want, &parts).unwrap();
+        let mut pairs: Vec<(Partition, ModelState)> =
+            parts.iter().copied().zip(slices).collect();
+        pairs.reverse();
+        assert_eq!(flatten(&pairs).unwrap(), want);
+    }
+
+    #[test]
+    fn flatten_rejects_gaps_and_step_skew() {
+        let n = 20;
+        let s = state(n, 2);
+        let parts = partition_even(n, 2);
+        let slices = repartition(&s, &parts).unwrap();
+        // gap: drop one slice
+        let gap = vec![(parts[1], slices[1].clone())];
+        assert!(flatten(&gap).is_err());
+        // step skew
+        let mut skew = slices[1].clone();
+        skew.step += 1;
+        assert!(flatten(&[(parts[0], slices[0].clone()), (parts[1], skew)]).is_err());
+    }
+
+    #[test]
+    fn reshard_4_to_2_preserves_every_coordinate() {
+        let n = 64;
+        let want = state(n, 4);
+        let four = repartition(&want, &partition_even(n, 4)).unwrap();
+        let pairs: Vec<(Partition, ModelState)> =
+            partition_even(n, 4).into_iter().zip(four).collect();
+        let flat = flatten(&pairs).unwrap();
+        let two = repartition(&flat, &partition_even(n, 2)).unwrap();
+        let pairs2: Vec<(Partition, ModelState)> =
+            partition_even(n, 2).into_iter().zip(two).collect();
+        assert_eq!(flatten(&pairs2).unwrap(), want);
+    }
+}

@@ -85,6 +85,29 @@ pub struct CkptStats {
     pub pool_misses: u64,
 }
 
+impl CkptStats {
+    /// Component-wise aggregation: sums for counters, max for peaks. Used
+    /// to fold per-rank cluster stats into cluster-wide totals (and by
+    /// [`RunReport`](crate::coordinator::metrics::RunReport) absorption).
+    pub fn merge(&mut self, o: &CkptStats) {
+        self.full_ckpts += o.full_ckpts;
+        self.diff_ckpts += o.diff_ckpts;
+        self.writes += o.writes;
+        self.bytes_written += o.bytes_written;
+        self.write_secs += o.write_secs;
+        self.offload_secs += o.offload_secs;
+        self.peak_buffered_bytes = self.peak_buffered_bytes.max(o.peak_buffered_bytes);
+        self.errors += o.errors;
+        self.inflight_peak = self.inflight_peak.max(o.inflight_peak);
+        self.shard_writes += o.shard_writes;
+        self.spill_bytes += o.spill_bytes;
+        self.spill_errors += o.spill_errors;
+        self.bytes_copied += o.bytes_copied;
+        self.pool_hits += o.pool_hits;
+        self.pool_misses += o.pool_misses;
+    }
+}
+
 /// Handle to the running checkpointing process.
 pub struct Checkpointer {
     pub queue: Arc<ReusingQueue<CkptItem>>,

@@ -25,6 +25,7 @@ use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::format::{model_signature, PayloadCodec};
 use crate::checkpoint::full::write_full;
 use crate::checkpoint::manifest::Manifest;
+use crate::cluster::{self, Cluster, ClusterConfig};
 use crate::collective::sparse_allgather_sum;
 use crate::compress::topk_mask_with_scratch;
 use crate::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
@@ -119,6 +120,11 @@ pub struct TrainConfig {
     pub n_shards: usize,
     /// storage writer-pool threads for the sharded engine
     pub writers: usize,
+    /// cluster ranks: >1 partitions the state at tensor boundaries and
+    /// runs the multi-rank cluster runtime (per-rank differential chains
+    /// + two-phase global commit) instead of the single checkpointer —
+    /// LowDiff strategy only
+    pub ranks: usize,
 }
 
 impl Default for TrainConfig {
@@ -141,7 +147,15 @@ impl Default for TrainConfig {
             snapshot_threads: 2,
             n_shards: 1,
             writers: 1,
+            ranks: 1,
         }
+    }
+}
+
+impl TrainConfig {
+    /// True when persistence runs on the multi-rank cluster runtime.
+    pub fn uses_cluster(&self) -> bool {
+        self.ranks > 1 && self.strategy == StrategyKind::LowDiff
     }
 }
 
@@ -207,15 +221,19 @@ pub fn train(
         None => FailureInjector::never(),
     };
 
+    report.ranks = if cfg.uses_cluster() { cfg.ranks } else { 1 };
+
     // per-strategy checkpointing processes
     let mem_tier: Arc<dyn StorageBackend> = Arc::new(crate::storage::MemStore::new());
     // recovery/GC interop must see logical objects even when the
-    // checkpointer writes them sharded
-    let logical: Arc<dyn StorageBackend> = if cfg.n_shards > 1 || cfg.writers > 1 {
-        Arc::new(crate::storage::Sharded::new(Arc::clone(&store), 1, 1))
-    } else {
-        Arc::clone(&store)
-    };
+    // checkpointer writes them sharded; the cluster runtime builds its own
+    // shard-aware views, so it gets the raw store
+    let logical: Arc<dyn StorageBackend> =
+        if !cfg.uses_cluster() && (cfg.n_shards > 1 || cfg.writers > 1) {
+            Arc::new(crate::storage::Sharded::new(Arc::clone(&store), 1, 1))
+        } else {
+            Arc::clone(&store)
+        };
     let mut procs = spawn_procs(cfg, sig, layout, &state, &store, &mem_tier);
     // anchor the differential chain: a recovery needs a base full
     // checkpoint (Eq. (6) starts from C^F)
@@ -294,6 +312,15 @@ pub fn train(
                     report.diff_ckpts += 1;
                 }
             }
+            (Procs::Cluster { cluster }, StrategyKind::LowDiff) => {
+                if target % cfg.diff_every == 0 {
+                    // the rank fan-out: one Ψ-sized slice copy on the
+                    // training path; compaction/encode/IO on rank threads
+                    report.queue_blocked_secs +=
+                        cluster.put_diff_dense(target, &grad).as_secs_f64();
+                    report.diff_ckpts += 1;
+                }
+            }
             (Procs::Plus { plus }, StrategyKind::LowDiffPlus) => {
                 // layer-wise zero-copy reuse of the raw gradient
                 report.queue_blocked_secs +=
@@ -318,6 +345,14 @@ pub fn train(
                 if target % cfg.full_every == 0 {
                     let snap = state.clone(); // snapshot stall
                     ckpt.queue.put(target, Arc::new(CkptItem::Full(snap)));
+                    report.full_ckpts += 1;
+                }
+            }
+            (Procs::Cluster { cluster }, StrategyKind::LowDiff) => {
+                if target % cfg.full_every == 0 {
+                    // slice fan-out is the snapshot copy, one rank at a time
+                    report.queue_blocked_secs +=
+                        cluster.put_full(target, &state).as_secs_f64();
                     report.full_ckpts += 1;
                 }
             }
@@ -440,6 +475,11 @@ fn anchor_chain(procs: &mut Procs, state: &ModelState, report: &mut RunReport) {
             ckpt.queue.put(state.step, Arc::new(CkptItem::Full(state.clone())));
             report.full_ckpts += 1;
         }
+        Procs::Cluster { cluster } => {
+            // per-rank base fulls + a fresh global record at the anchor
+            cluster.put_full(state.step, state);
+            report.full_ckpts += 1;
+        }
         _ => {}
     }
 }
@@ -452,6 +492,7 @@ enum Procs {
     NaiveDc { ckpt: Checkpointer },
     Gemini { mem: Checkpointer, disk: Checkpointer },
     Plus { plus: LowDiffPlus },
+    Cluster { cluster: Cluster },
 }
 
 fn spawn_procs(
@@ -475,6 +516,26 @@ fn spawn_procs(
     match cfg.strategy {
         StrategyKind::None => Procs::NoneAtAll,
         StrategyKind::TorchSave => Procs::Sync,
+        StrategyKind::LowDiff if cfg.uses_cluster() => {
+            let parts = cluster::partition_layout(layout, cfg.ranks).unwrap_or_else(|e| {
+                log::warn!("tensor-boundary partitioning failed ({e:#}); splitting evenly");
+                cluster::partition_even(layout.n_params, cfg.ranks)
+            });
+            Procs::Cluster {
+                cluster: Cluster::spawn(
+                    Arc::clone(store),
+                    parts,
+                    ClusterConfig {
+                        model_sig: sig,
+                        codec: cfg.codec,
+                        n_shards: cfg.n_shards,
+                        writers: cfg.writers,
+                        gc: true,
+                        queue_capacity: cfg.queue_capacity,
+                    },
+                ),
+            }
+        }
         StrategyKind::LowDiff | StrategyKind::CheckFreq => Procs::LowDiff {
             ckpt: Checkpointer::spawn(Arc::clone(store), base),
         },
@@ -545,6 +606,28 @@ fn handle_failure(
             plus.abort();
             recover_from_disk(store, sig, adam, cfg, params0)
         }
+        (Procs::Cluster { cluster }, _) => {
+            // any failure kills the rank processes and the coordinator;
+            // recovery is the consistent cut over the per-rank chains
+            drop(cluster);
+            match cluster::recover_cluster(store, sig, adam) {
+                Ok((s, stats)) => {
+                    log::debug!(
+                        "cluster recovery: cut step {} across {} ranks ({} diff steps)",
+                        stats.cut_step,
+                        stats.ranks,
+                        stats.diff_steps_applied
+                    );
+                    // drop torn-commit stragglers from the lost timeline
+                    let _ = cluster::truncate_stragglers(store, s.step);
+                    Ok((s, false))
+                }
+                Err(e) => {
+                    log::warn!("no consistent cluster cut ({e:#}); restarting from scratch");
+                    Ok((ModelState::new(params0.clone()), false))
+                }
+            }
+        }
         (procs, _) => {
             // hardware (or strategies without an in-memory tier): all
             // process memory is gone; in-flight checkpoints are lost
@@ -588,30 +671,20 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
     match procs {
         Procs::NoneAtAll | Procs::Sync => {}
         Procs::LowDiff { ckpt } | Procs::NaiveDc { ckpt } => {
-            let s = ckpt.finish();
-            report.writes += s.writes;
-            report.bytes_written += s.bytes_written;
-            report.peak_buffered_bytes = report.peak_buffered_bytes.max(s.peak_buffered_bytes);
-            report.shard_writes += s.shard_writes;
-            report.bytes_copied += s.bytes_copied;
-            report.pool_hits += s.pool_hits;
-            report.pool_misses += s.pool_misses;
-            report.spill_bytes += s.spill_bytes;
-            report.inflight_peak = report.inflight_peak.max(s.inflight_peak);
+            report.absorb_ckpt(&ckpt.finish());
         }
         Procs::Gemini { mem, disk } => {
-            let sm = mem.finish();
-            let sd = disk.finish();
             // memory-tier traffic isn't storage I/O; only disk writes count
-            report.writes += sd.writes;
-            report.bytes_written += sd.bytes_written;
-            report.shard_writes += sd.shard_writes;
-            report.bytes_copied += sd.bytes_copied;
-            report.pool_hits += sd.pool_hits;
-            report.pool_misses += sd.pool_misses;
-            report.spill_bytes += sd.spill_bytes;
-            report.inflight_peak = report.inflight_peak.max(sd.inflight_peak);
-            let _ = sm;
+            let _ = mem.finish();
+            report.absorb_ckpt(&disk.finish());
+        }
+        Procs::Cluster { cluster } => {
+            let cs = cluster.finish();
+            // cluster-wide totals: every rank's counters, not rank 0's
+            report.absorb_ckpt(&cs.total());
+            report.bytes_written += cs.record_bytes;
+            report.global_commits += cs.global_commits;
+            report.torn_commits += cs.torn_commits;
         }
         Procs::Plus { plus } => {
             let s = plus.finish();

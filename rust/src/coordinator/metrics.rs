@@ -46,6 +46,13 @@ pub struct RunReport {
     pub spill_bytes: u64,
     /// peak logical checkpoint writes in flight on the writer pool
     pub inflight_peak: usize,
+    /// cluster runtime: rank threads persisting their own state partitions
+    /// (1 = classic single-chain checkpointing)
+    pub ranks: usize,
+    /// cluster runtime: epochs whose global commit record is durable
+    pub global_commits: u64,
+    /// cluster runtime: epochs abandoned mid-commit (a rank write failed)
+    pub torn_commits: u64,
     pub recoveries: u64,
     pub recovery_secs: f64,
     /// iterations lost to failures and re-run
@@ -60,8 +67,25 @@ impl RunReport {
             strategy: strategy.to_string(),
             model: model.to_string(),
             workers,
+            ranks: 1,
             ..Default::default()
         }
+    }
+
+    /// Fold one checkpointing process's counters into the run totals.
+    /// With the cluster runtime this is called once per rank, so every
+    /// table reports **cluster-wide** I/O, copy and pool numbers — not
+    /// rank 0's.
+    pub fn absorb_ckpt(&mut self, s: &crate::coordinator::checkpointer::CkptStats) {
+        self.writes += s.writes;
+        self.bytes_written += s.bytes_written;
+        self.peak_buffered_bytes = self.peak_buffered_bytes.max(s.peak_buffered_bytes);
+        self.shard_writes += s.shard_writes;
+        self.bytes_copied += s.bytes_copied;
+        self.pool_hits += s.pool_hits;
+        self.pool_misses += s.pool_misses;
+        self.spill_bytes += s.spill_bytes;
+        self.inflight_peak = self.inflight_peak.max(s.inflight_peak);
     }
 
     /// Checkpointing overhead relative to pure compute+sync (the paper's
@@ -129,6 +153,33 @@ mod tests {
         r.wall_secs = 100.0;
         assert!((r.overhead_ratio() - 5.0 / 95.0).abs() < 1e-12);
         assert!((r.effective_ratio() - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_ckpt_sums_counters_and_maxes_peaks() {
+        use crate::coordinator::checkpointer::CkptStats;
+        let mut r = RunReport::new("x", "m", 1);
+        let a = CkptStats {
+            writes: 2,
+            bytes_written: 10,
+            pool_hits: 1,
+            inflight_peak: 3,
+            ..CkptStats::default()
+        };
+        let b = CkptStats {
+            writes: 1,
+            bytes_written: 5,
+            pool_misses: 2,
+            inflight_peak: 2,
+            ..CkptStats::default()
+        };
+        r.absorb_ckpt(&a);
+        r.absorb_ckpt(&b);
+        assert_eq!(r.writes, 3);
+        assert_eq!(r.bytes_written, 15);
+        assert_eq!((r.pool_hits, r.pool_misses), (1, 2));
+        assert_eq!(r.inflight_peak, 3);
+        assert_eq!(r.ranks, 1, "default rank count");
     }
 
     #[test]

@@ -487,6 +487,65 @@ pub fn exp_sharded() -> Table {
     t
 }
 
+/// Cluster-runtime scan (real path, not simulated): a fixed training
+/// timeline checkpointed through the multi-rank cluster runtime at rank
+/// counts 1/2/4/8 — per-rank differential chains + the two-phase global
+/// commit. Columns report cluster-wide totals (every rank's counters,
+/// aggregated the same way `RunReport` does) plus the commit layer's
+/// overhead: records written, record bytes, and the coordinator's
+/// phase-2 wall share.
+pub fn exp_cluster() -> Table {
+    use crate::checkpoint::format::model_signature;
+    use crate::cluster::{partition_even, Cluster, ClusterConfig};
+    use crate::compress::topk_mask;
+    use crate::optim::ModelState;
+    use crate::storage::{MemStore, StorageBackend};
+    use crate::tensor::Flat;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let n: usize = 64 * 1024;
+    let steps: u64 = 8;
+    let sig = model_signature("cluster-exp", n);
+    let mut t = Table::new(
+        "Cluster runtime — per-rank chains + two-phase commit, 8 diff epochs",
+        &["ranks", "wall ms", "commits", "torn", "objects", "MiB written", "record B", "commit ms"],
+    );
+    for ranks in [1usize, 2, 4, 8] {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let cluster = Cluster::spawn(
+            Arc::clone(&store),
+            partition_even(n, ranks),
+            ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() },
+        );
+        let mut rng = Rng::new(17);
+        let state = ModelState::new(Flat(vec![0.1; n]));
+        let t0 = Instant::now();
+        cluster.put_full(0, &state);
+        for step in 1..=steps {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            let masked = topk_mask(&Flat(g), n / 100 + 1);
+            cluster.put_diff_dense(step, &masked);
+        }
+        let stats = cluster.finish();
+        let wall = t0.elapsed().as_secs_f64();
+        let total = stats.total();
+        t.row(vec![
+            ranks.to_string(),
+            format!("{:.1}", wall * 1e3),
+            stats.global_commits.to_string(),
+            stats.torn_commits.to_string(),
+            total.writes.to_string(),
+            format!("{:.2}", total.bytes_written as f64 / (1 << 20) as f64),
+            stats.record_bytes.to_string(),
+            format!("{:.1}", stats.commit_secs * 1e3),
+        ]);
+    }
+    t
+}
+
 /// All simulated experiments, in paper order.
 pub fn all_simulated() -> Vec<Table> {
     vec![fig1(), fig4(), table1(), exp1(), exp2(), exp3(), exp4(), exp7(), exp8(), exp9(), exp10()]
@@ -506,6 +565,7 @@ pub fn by_name(name: &str) -> Option<Table> {
         "exp9" => exp9(),
         "exp10" => exp10(),
         "sharded" => exp_sharded(),
+        "cluster" => exp_cluster(),
         _ => return None,
     })
 }
@@ -576,10 +636,23 @@ mod tests {
 
     #[test]
     fn by_name_covers_all() {
-        for n in ["fig1", "fig4", "table1", "exp1", "exp2", "exp3", "exp4", "exp7", "exp8", "exp9", "exp10", "sharded"] {
+        for n in ["fig1", "fig4", "table1", "exp1", "exp2", "exp3", "exp4", "exp7", "exp8", "exp9", "exp10", "sharded", "cluster"] {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn cluster_table_commits_every_epoch_at_all_rank_counts() {
+        let t = exp_cluster();
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            assert_eq!(row[2], "9", "anchor + 8 diff epochs committed: {row:?}");
+            assert_eq!(row[3], "0", "no torn epochs: {row:?}");
+            let ranks: u64 = row[0].parse().unwrap();
+            let objects: u64 = row[4].parse().unwrap();
+            assert_eq!(objects, ranks * 9, "one object per rank per epoch: {row:?}");
+        }
     }
 
     #[test]

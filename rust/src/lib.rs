@@ -17,6 +17,7 @@
 //! Python never runs after `make artifacts`; the hot path is pure Rust.
 
 pub mod checkpoint;
+pub mod cluster;
 pub mod collective;
 pub mod compress;
 pub mod coordinator;

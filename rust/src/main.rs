@@ -30,10 +30,12 @@ commands:
            [--batch-mode sum|concat] [--seed S]
            [--shards N]   checkpoint shards per object (>1 = sharded async engine)
            [--writers W]  storage writer-pool threads for the sharded engine
+           [--ranks R]    cluster ranks (>1 = per-rank chains + two-phase
+                          global commit; lowdiff strategy only)
            [--fsync]      fsync files AND parent dir on every put (durable)
   recover  --model <name> --ckpt-dir DIR [--parallel]
            (reads sharded and single-object layouts transparently)
-  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|all>
+  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|all>
   info     --model <name>
 ";
 
@@ -81,8 +83,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.parse_or("eval-every", 10u64)?,
         n_shards: args.parse_or("shards", 1usize)?,
         writers: args.parse_or("writers", 1usize)?,
+        ranks: args.parse_or("ranks", 1usize)?,
         ..TrainConfig::default()
     };
+    if cfg.ranks > 1 && !cfg.uses_cluster() {
+        bail!("--ranks > 1 requires --strategy lowdiff (the cluster runtime)");
+    }
 
     let mrt = ModelRuntime::load(&artifacts_dir(), &model)
         .with_context(|| format!("loading model `{model}` (run `make artifacts`?)"))?;

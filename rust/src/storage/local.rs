@@ -66,22 +66,35 @@ impl LocalDir {
     }
 
     fn path(&self, name: &str) -> PathBuf {
-        // flatten any path separators so names can't escape the root
-        self.root.join(name.replace('/', "_"))
+        // object names may carry namespace levels (`rank-0003/diff-…`, the
+        // cluster runtime's per-rank chains); map them to real
+        // subdirectories, neutralizing `..` segments and leading
+        // separators (join with an absolute path would *replace* the
+        // root) so names can't escape the store
+        let safe = name.replace("..", "_");
+        self.root.join(safe.trim_start_matches(['/', '\\']))
     }
 
     pub fn root(&self) -> &Path {
         &self.root
     }
 
-    /// Persist the directory entry after a rename. Errors are surfaced:
+    /// Persist a directory entry after a rename. Errors are surfaced:
     /// claiming durability while the metadata is only in the page cache is
-    /// exactly the torn-write class the recovery tests hunt for.
-    fn sync_dir(&self) -> Result<()> {
-        let dir = std::fs::File::open(&self.root)
-            .with_context(|| format!("open dir {}", self.root.display()))?;
-        dir.sync_all()
-            .with_context(|| format!("fsync dir {}", self.root.display()))
+    /// exactly the torn-write class the recovery tests hunt for. For
+    /// namespaced objects both the object's directory and the root are
+    /// synced (the subdirectory's own entry lives in the root).
+    fn sync_dirs(&self, parent: &Path) -> Result<()> {
+        for dir in [parent, self.root.as_path()] {
+            let f = std::fs::File::open(dir)
+                .with_context(|| format!("open dir {}", dir.display()))?;
+            f.sync_all()
+                .with_context(|| format!("fsync dir {}", dir.display()))?;
+            if parent == self.root {
+                break;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -89,6 +102,11 @@ impl StorageBackend for LocalDir {
     fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
         let tmp = self.path(&format!("{name}.tmp"));
         let fin = self.path(name);
+        let parent = fin.parent().unwrap_or(&self.root).to_path_buf();
+        if parent != self.root {
+            std::fs::create_dir_all(&parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
         let mut f = std::fs::File::create(&tmp)
             .with_context(|| format!("create {}", tmp.display()))?;
         f.write_all(bytes)?;
@@ -98,7 +116,7 @@ impl StorageBackend for LocalDir {
         drop(f);
         std::fs::rename(&tmp, &fin)?;
         if self.fsync {
-            self.sync_dir()?;
+            self.sync_dirs(&parent)?;
         }
         Ok(())
     }
@@ -109,6 +127,11 @@ impl StorageBackend for LocalDir {
     fn put_vectored(&self, name: &str, parts: &[&[u8]]) -> Result<()> {
         let tmp = self.path(&format!("{name}.tmp"));
         let fin = self.path(name);
+        let parent = fin.parent().unwrap_or(&self.root).to_path_buf();
+        if parent != self.root {
+            std::fs::create_dir_all(&parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
         let mut f = std::fs::File::create(&tmp)
             .with_context(|| format!("create {}", tmp.display()))?;
         write_all_vectored(&mut f, parts)?;
@@ -118,7 +141,7 @@ impl StorageBackend for LocalDir {
         drop(f);
         std::fs::rename(&tmp, &fin)?;
         if self.fsync {
-            self.sync_dir()?;
+            self.sync_dirs(&parent)?;
         }
         Ok(())
     }
@@ -132,14 +155,26 @@ impl StorageBackend for LocalDir {
     }
 
     fn list(&self) -> Result<Vec<String>> {
-        let mut out = Vec::new();
-        for e in std::fs::read_dir(&self.root)? {
-            let e = e?;
-            let name = e.file_name().to_string_lossy().to_string();
-            if !name.ends_with(".tmp") {
-                out.push(name);
+        fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+            for e in std::fs::read_dir(dir)? {
+                let p = e?.path();
+                if p.is_dir() {
+                    walk(root, &p, out)?;
+                    continue;
+                }
+                let rel = p
+                    .strip_prefix(root)
+                    .expect("walked path under root")
+                    .to_string_lossy()
+                    .replace(std::path::MAIN_SEPARATOR, "/");
+                if !rel.ends_with(".tmp") {
+                    out.push(rel);
+                }
             }
+            Ok(())
         }
+        let mut out = Vec::new();
+        walk(&self.root, &self.root, &mut out)?;
         out.sort();
         Ok(out)
     }
@@ -217,15 +252,44 @@ mod tests {
     fn exists_is_stat_based_and_correct() {
         // regression: exists() used to route through get(), reading the
         // whole object. The override must agree with get() on both
-        // present and absent names, including flattened path separators.
+        // present and absent names, including namespaced ones.
         let dir = tmpdir("test_exists");
         let s = LocalDir::new(&dir).unwrap();
         s.put("a/b", &vec![7u8; 64 * 1024]).unwrap();
         assert!(s.exists("a/b"));
-        assert!(s.exists("a_b"), "separator flattening maps to the same file");
         assert!(!s.exists("missing"));
         // a .tmp leftover is not an object, and exists must not invent it
         assert!(!s.exists("ghost.tmp"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn namespaced_names_roundtrip_through_subdirectories() {
+        // cluster chains live under `rank-{r:04}/`; the backing layout is a
+        // real subdirectory and list() reports the `/`-joined names back
+        let dir = tmpdir("test_ns");
+        let s = LocalDir::new(&dir).unwrap().with_fsync(true);
+        s.put("rank-0000/diff-1.ldck", b"d0").unwrap();
+        s.put("rank-0001/diff-1.ldck", b"d1").unwrap();
+        s.put("global-000000000001.gck", b"g").unwrap();
+        assert_eq!(s.get("rank-0001/diff-1.ldck").unwrap(), b"d1");
+        assert_eq!(
+            s.list().unwrap(),
+            vec![
+                "global-000000000001.gck",
+                "rank-0000/diff-1.ldck",
+                "rank-0001/diff-1.ldck"
+            ]
+        );
+        s.delete("rank-0000/diff-1.ldck").unwrap();
+        assert!(!s.exists("rank-0000/diff-1.ldck"));
+        // path escapes are neutralized, not honored: `..` segments and
+        // absolute names both resolve under the root
+        s.put("../escape", b"x").unwrap();
+        assert!(dir.join("_/escape").exists());
+        s.put("/abs/escape", b"y").unwrap();
+        assert!(dir.join("abs/escape").exists());
+        assert!(s.exists("/abs/escape"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

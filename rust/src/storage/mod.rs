@@ -34,6 +34,9 @@
 //!   so a crash mid-write leaves the object invisible, never half-visible.
 //! - [`Tiered`]: a fast tier (e.g. [`MemStore`]) over a durable tier with
 //!   asynchronous spill and read-through on recovery.
+//! - [`Namespaced`]: a prefix-scoped view of a shared backend — each
+//!   cluster rank writes its private `rank-{r:04}/` chain through one of
+//!   these (see [`crate::cluster`]).
 //! - [`FaultyStore`]: deterministic fault injection (put/get errors,
 //!   truncated "torn" writes) for the crash-consistency test suite.
 //!
@@ -57,6 +60,7 @@
 mod faulty;
 mod local;
 mod mem;
+mod namespaced;
 mod pool;
 mod sharded;
 mod throttled;
@@ -65,6 +69,7 @@ mod tiered;
 pub use faulty::{FaultConfig, FaultCounts, FaultyStore};
 pub use local::LocalDir;
 pub use mem::MemStore;
+pub use namespaced::Namespaced;
 pub use pool::{WriteHandle, WriterPool};
 pub use sharded::Sharded;
 pub use throttled::Throttled;

@@ -1,0 +1,142 @@
+//! Prefix-scoped view of a storage backend — one rank's private object
+//! namespace over a shared store.
+//!
+//! The cluster runtime gives every rank its own chain under
+//! `rank-{r:04}/` (see [`Manifest::rank_prefix`]
+//! (crate::checkpoint::manifest::Manifest::rank_prefix)): rank `r` writes
+//! through `Namespaced::new(store, Manifest::rank_prefix(r))` and sees a
+//! plain flat store, while the underlying backend holds every rank's
+//! objects side by side plus the top-level global commit records. `list`
+//! returns only (and strips) the prefix, so per-namespace chain discovery
+//! reuses [`Manifest::latest_chain`]
+//! (crate::checkpoint::manifest::Manifest::latest_chain) unchanged.
+//!
+//! The view is deliberately dumb: no caching, no stats of its own
+//! (`storage_stats` reports zeros — the shared inner store would otherwise
+//! be double-counted once per rank view).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::storage::{StorageBackend, StorageStats};
+
+/// A `{prefix}{name}` view over a shared backend.
+pub struct Namespaced {
+    inner: Arc<dyn StorageBackend>,
+    prefix: String,
+}
+
+impl Namespaced {
+    pub fn new(inner: Arc<dyn StorageBackend>, prefix: impl Into<String>) -> Namespaced {
+        Namespaced { inner, prefix: prefix.into() }
+    }
+
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+
+    fn full(&self, name: &str) -> String {
+        format!("{}{name}", self.prefix)
+    }
+}
+
+impl StorageBackend for Namespaced {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        self.inner.put(&self.full(name), bytes)
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        self.inner.get(&self.full(name))
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        self.inner.delete(&self.full(name))
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        Ok(self
+            .inner
+            .list()?
+            .into_iter()
+            .filter_map(|n| n.strip_prefix(&self.prefix).map(str::to_string))
+            .collect())
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.inner.exists(&self.full(name))
+    }
+
+    fn put_vectored(&self, name: &str, parts: &[&[u8]]) -> Result<()> {
+        self.inner.put_vectored(&self.full(name), parts)
+    }
+
+    fn storage_stats(&self) -> StorageStats {
+        StorageStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn shared() -> Arc<dyn StorageBackend> {
+        Arc::new(MemStore::new())
+    }
+
+    #[test]
+    fn scopes_all_operations() {
+        let inner = shared();
+        let a = Namespaced::new(Arc::clone(&inner), "rank-0000/");
+        let b = Namespaced::new(Arc::clone(&inner), "rank-0001/");
+        a.put("x", b"aa").unwrap();
+        b.put("x", b"bb").unwrap();
+        assert_eq!(a.get("x").unwrap(), b"aa");
+        assert_eq!(b.get("x").unwrap(), b"bb");
+        assert_eq!(inner.get("rank-0000/x").unwrap(), b"aa");
+        assert!(a.exists("x") && b.exists("x"));
+        assert_eq!(a.list().unwrap(), vec!["x"]);
+        a.delete("x").unwrap();
+        assert!(!a.exists("x"));
+        assert!(b.exists("x"), "sibling namespace untouched");
+    }
+
+    #[test]
+    fn list_hides_foreign_objects() {
+        let inner = shared();
+        inner.put("global-000000000001.gck", b"g").unwrap();
+        inner.put("rank-0001/full-1.ldck", b"f").unwrap();
+        let a = Namespaced::new(Arc::clone(&inner), "rank-0000/");
+        a.put("diff-1.ldck", b"d").unwrap();
+        assert_eq!(a.list().unwrap(), vec!["diff-1.ldck"]);
+    }
+
+    #[test]
+    fn put_vectored_lands_under_prefix() {
+        let inner = shared();
+        let a = Namespaced::new(Arc::clone(&inner), "ns/");
+        let parts: [&[u8]; 2] = [b"he", b"llo"];
+        a.put_vectored("v", &parts).unwrap();
+        assert_eq!(inner.get("ns/v").unwrap(), b"hello");
+    }
+
+    #[test]
+    fn sharded_engine_composes_over_namespace() {
+        use crate::storage::Sharded;
+        let inner = shared();
+        let ns: Arc<dyn StorageBackend> =
+            Arc::new(Namespaced::new(Arc::clone(&inner), "rank-0002/"));
+        let eng = Sharded::new(ns, 3, 2);
+        let data: Vec<u8> = (0..300u16).map(|i| (i % 251) as u8).collect();
+        eng.put("diff-000000000007.ldck", &data).unwrap();
+        assert_eq!(eng.get("diff-000000000007.ldck").unwrap(), data);
+        assert_eq!(eng.list().unwrap(), vec!["diff-000000000007.ldck"]);
+        // the shared store sees namespaced shard artifacts + commit record
+        assert!(inner
+            .list()
+            .unwrap()
+            .iter()
+            .all(|n| n.starts_with("rank-0002/")));
+    }
+}

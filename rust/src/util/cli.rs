@@ -4,10 +4,12 @@
 //! subcommands. Typed getters parse on demand with helpful errors.
 //!
 //! Storage-engine knobs surfaced by the `train` subcommand (see the USAGE
-//! text in `main.rs` and docs/STORAGE.md): `--shards N` splits every
-//! checkpoint object across N concurrently-written shards, `--writers W`
-//! sizes the storage writer pool, and the `--fsync` flag makes `LocalDir`
-//! fsync both the object file and its parent directory on every put.
+//! text in `main.rs`, docs/STORAGE.md and docs/CLUSTER.md): `--shards N`
+//! splits every checkpoint object across N concurrently-written shards,
+//! `--writers W` sizes the storage writer pool, `--ranks R` runs the
+//! multi-rank cluster runtime (per-rank differential chains + two-phase
+//! global commit), and the `--fsync` flag makes `LocalDir` fsync both the
+//! object file and its parent directory on every put.
 
 use std::collections::BTreeMap;
 

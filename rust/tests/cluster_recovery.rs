@@ -1,0 +1,254 @@
+//! Cluster crash-consistency integration suite (artifact-free: drives the
+//! cluster runtime directly, no PJRT).
+//!
+//! Pins the tentpole guarantees:
+//! 1. with a rank's writes killed mid-commit, recovery returns a
+//!    **bit-identical** global state at the last fully-committed epoch
+//!    (the consistent cut);
+//! 2. elastic restart R=4 → R′=2 yields a flattened model/optimizer state
+//!    identical to the R=4 consistent cut, and the resharded chain
+//!    extends it bit-identically;
+//! 3. cluster GC **never deletes any object reachable from the newest
+//!    complete global record** — across rank namespaces, under random
+//!    junk (torn records, stragglers, defunct namespaces). Property test.
+
+use std::sync::Arc;
+
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::checkpoint::manifest::Manifest;
+use lowdiff::cluster::commit::find_consistent_cut;
+use lowdiff::cluster::{
+    elastic_restart, gc_cluster, partition_even, recover_cluster, truncate_stragglers, Cluster,
+    ClusterConfig,
+};
+use lowdiff::compress::topk_mask;
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::prop_assert;
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{FaultConfig, FaultyStore, MemStore, Namespaced, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::prop::prop_check;
+use lowdiff::util::rng::Rng;
+
+fn grad(rng: &mut Rng, n: usize) -> Flat {
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g);
+    topk_mask(&Flat(g), n / 8 + 1)
+}
+
+/// Drive an anchor full + `steps` diff epochs (optionally a mid-run full),
+/// mirroring every update on a serial global state. Returns the expected
+/// state after each step — the oracle every recovery is compared against.
+fn drive(
+    cluster: &Cluster,
+    n: usize,
+    steps: u64,
+    full_at: Option<u64>,
+    seed: u64,
+) -> Vec<ModelState> {
+    let adam = Adam::default();
+    let mut rng = Rng::new(seed);
+    let mut state = ModelState::new(Flat(vec![0.5; n]));
+    let mut timeline = vec![state.clone()];
+    cluster.put_full(0, &state);
+    for step in 1..=steps {
+        let g = grad(&mut rng, n);
+        cluster.put_diff_dense(step, &g);
+        adam.apply_sparse(&mut state, &SparseGrad::from_dense(&g));
+        if full_at == Some(step) {
+            cluster.put_full(step, &state);
+        }
+        timeline.push(state.clone());
+    }
+    timeline
+}
+
+#[test]
+fn consistent_cut_is_bit_identical_when_a_rank_dies_mid_commit() {
+    let n = 192;
+    let sig = model_signature("cluster-t", n);
+    let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let shared = Arc::clone(&inner);
+    // rank 2's namespace dies after 6 writes (anchor + diffs 1..=5); the
+    // other three ranks keep writing — exactly a rank death mid-commit
+    let cluster = Cluster::spawn_with(Arc::clone(&inner), partition_even(n, 4), cfg, move |r| {
+        let ns = Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r));
+        if r == 2 {
+            Arc::new(FaultyStore::new(
+                ns,
+                FaultConfig { put_fail: 1.0, grace_ops: 6, ..FaultConfig::default() },
+            )) as Arc<dyn StorageBackend>
+        } else {
+            Arc::new(ns) as Arc<dyn StorageBackend>
+        }
+    });
+    let timeline = drive(&cluster, n, 10, None, 3);
+    let stats = cluster.finish();
+    assert_eq!(stats.global_commits, 6, "anchor + diffs 1..=5 committed");
+    assert_eq!(stats.torn_commits, 5, "epochs 6..=10 torn, run kept going");
+
+    let (got, cut) = recover_cluster(&inner, sig, &Adam::default()).unwrap();
+    assert_eq!(cut.cut_step, 5, "consistent cut = last fully-committed epoch");
+    assert_eq!(cut.ranks, 4);
+    assert_eq!(got, timeline[5], "bit-identical state at the cut");
+
+    // surviving ranks' stragglers (steps 6..=10) are truncated cleanly and
+    // recovery is unchanged
+    let removed = truncate_stragglers(&inner, cut.cut_step).unwrap();
+    assert_eq!(removed, 3 * 5, "3 healthy ranks x 5 straggler diffs");
+    let (again, cut2) = recover_cluster(&inner, sig, &Adam::default()).unwrap();
+    assert_eq!(cut2.cut_step, 5);
+    assert_eq!(again, got);
+}
+
+#[test]
+fn elastic_restart_4_to_2_preserves_the_consistent_cut() {
+    let n = 160;
+    let sig = model_signature("cluster-e", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let cfg = ClusterConfig { model_sig: sig, ..ClusterConfig::default() };
+    let c4 = Cluster::spawn(Arc::clone(&store), partition_even(n, 4), cfg.clone());
+    let timeline = drive(&c4, n, 6, None, 9);
+    let s4 = c4.finish();
+    assert_eq!(s4.torn_commits, 0);
+    assert_eq!(s4.per_rank.len(), 4);
+
+    // reference: recover the R=4 cut directly
+    let (ref4, cut4) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!(cut4.cut_step, 6);
+    assert_eq!(cut4.ranks, 4);
+    assert_eq!(ref4, timeline[6]);
+
+    // elastic restart with R' = 2: the record, not the caller, knows R
+    let (c2, state, cut) =
+        elastic_restart(&store, &Adam::default(), partition_even(n, 2), cfg).unwrap();
+    assert_eq!(cut.ranks, 4, "cut was written by 4 ranks");
+    assert_eq!(cut.cut_step, 6);
+    assert_eq!(state, ref4, "flattened R=4 cut == resharded start state");
+
+    // continue training on 2 ranks from the re-anchored cut
+    let adam = Adam::default();
+    let mut rng = Rng::new(77);
+    let mut expect = state.clone();
+    for step in 7..=8u64 {
+        let g = grad(&mut rng, n);
+        c2.put_diff_dense(step, &g);
+        adam.apply_sparse(&mut expect, &SparseGrad::from_dense(&g));
+    }
+    let s2 = c2.finish();
+    assert_eq!(s2.torn_commits, 0);
+    assert_eq!(s2.per_rank.len(), 2);
+
+    let (got, cut2) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!(cut2.cut_step, 8);
+    assert_eq!(cut2.ranks, 2, "newest record carries the new partition table");
+    assert_eq!(got, expect, "post-reshard chain extends the cut bit-identically");
+
+    // defunct namespaces (ranks 2,3 of the old run) are reclaimable garbage
+    gc_cluster(&store, sig).unwrap();
+    for name in store.list().unwrap() {
+        if let Some((r, _)) = Manifest::parse_rank(&name) {
+            assert!(r < 2, "defunct namespace object survived gc: {name}");
+        }
+    }
+    let (after_gc, _) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!(after_gc, expect);
+}
+
+#[test]
+fn sharded_rank_engines_with_gc_keep_only_the_live_chain() {
+    let n = 128;
+    let sig = model_signature("cluster-s", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let cfg = ClusterConfig { model_sig: sig, n_shards: 2, writers: 2, ..ClusterConfig::default() };
+    let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 4), cfg);
+    let timeline = drive(&cluster, n, 6, Some(4), 21);
+    let stats = cluster.finish();
+    assert_eq!(stats.torn_commits, 0);
+    assert_eq!(stats.global_commits, 8, "anchor + 6 diffs + mid-run full");
+    assert!(stats.gc_removed > 0, "the mid-run full's commit swept the old chain");
+    assert!(stats.total().shard_writes > 0, "per-rank sharded engines exercised");
+
+    let (got, cut) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!(cut.cut_step, 6);
+    assert_eq!(got, timeline[6], "sharded chains recover bit-identically");
+}
+
+#[test]
+fn gc_never_deletes_the_chain_you_would_recover_from() {
+    // The satellite invariant, across rank namespaces: whatever junk the
+    // store holds, gc preserves every object reachable from the newest
+    // complete global record, and recovery is unchanged afterwards.
+    prop_check("cluster_gc_reachability", 10, |rng| {
+        let ranks = rng.range(1, 4);
+        let steps = rng.range(2, 6) as u64;
+        let n = 24 * ranks + rng.range(0, 16);
+        let sig = model_signature("cluster-gc", n);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+        let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, ranks), cfg);
+        let full_at = (rng.next_f64() < 0.5).then_some(steps / 2).filter(|s| *s >= 1);
+        drive(&cluster, n, steps, full_at, rng.next_u64());
+        let stats = cluster.finish();
+        prop_assert!(stats.torn_commits == 0);
+
+        // junk: a torn newer record, a straggler diff beyond the cut (an
+        // epoch still committing), and a defunct namespace from an older
+        // timeline
+        let straggler = format!("{}{}", Manifest::rank_prefix(0), Manifest::diff_name(steps + 1));
+        let defunct = format!("{}{}", Manifest::rank_prefix(9), Manifest::full_name(0));
+        store.put(&Manifest::global_name(steps + 1), b"garbage-not-a-record").unwrap();
+        store.put(&straggler, b"phase-1-of-next-epoch").unwrap();
+        store.put(&defunct, b"old-timeline").unwrap();
+
+        let (before, cut_b) =
+            recover_cluster(&store, sig, &Adam::default()).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(cut_b.cut_step == steps);
+        let (_, chains, _) = find_consistent_cut(&store, sig)
+            .map_err(|e| format!("{e:#}"))?
+            .ok_or("no consistent cut before gc")?;
+        let reachable: Vec<String> = chains.iter().flat_map(|c| c.objects.clone()).collect();
+        prop_assert!(!reachable.is_empty());
+
+        gc_cluster(&store, sig).map_err(|e| format!("{e:#}"))?;
+
+        for name in &reachable {
+            prop_assert!(store.exists(name), "gc deleted reachable object {name}");
+        }
+        prop_assert!(store.exists(&Manifest::global_name(cut_b.cut_step)));
+        prop_assert!(store.exists(&straggler), "beyond-cut objects are in-flight, not garbage");
+        prop_assert!(!store.exists(&Manifest::global_name(steps + 1)), "torn record swept");
+        prop_assert!(!store.exists(&defunct), "defunct namespace swept");
+
+        let (after, cut_a) =
+            recover_cluster(&store, sig, &Adam::default()).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(cut_a.cut_step == cut_b.cut_step);
+        prop_assert!(after == before, "recovery changed after gc");
+        Ok(())
+    });
+}
+
+#[test]
+fn recovery_skips_a_torn_global_record_and_falls_back() {
+    // overwrite the newest record with garbage: the walk must fall back to
+    // the previous complete epoch, never fail or half-apply
+    let n = 96;
+    let sig = model_signature("cluster-f", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 3), cfg);
+    let timeline = drive(&cluster, n, 4, None, 5);
+    let stats = cluster.finish();
+    assert_eq!(stats.global_commits, 5);
+
+    let mut bytes = store.get(&Manifest::global_name(4)).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    store.put(&Manifest::global_name(4), &bytes).unwrap();
+
+    let (got, cut) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!(cut.cut_step, 3, "torn record skipped, previous epoch wins");
+    assert_eq!(cut.records_skipped, 1);
+    assert_eq!(got, timeline[3]);
+}

@@ -261,6 +261,30 @@ fn sharded_tiered_recovery_matches_single_object_property() {
 }
 
 #[test]
+fn cluster_ranks_recover_the_same_state_as_single_rank() {
+    let mrt = load_mrt();
+    let sig = model_signature("tiny", mrt.n_params());
+    let adam = Adam { lr: mrt.layout.lr as f32 };
+    // classic single-chain run → reference state
+    let (store1, _) = run(&mrt, &base(StrategyKind::LowDiff));
+    let (classic, _) = recover(store1.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+
+    // identical run, persisted by the 3-rank cluster runtime
+    let mut cfg = base(StrategyKind::LowDiff);
+    cfg.ranks = 3;
+    let (store2, report) = run(&mrt, &cfg);
+    assert_eq!(report.ranks, 3);
+    assert_eq!(report.iters, 12);
+    assert_eq!(report.global_commits, 15, "anchor + 12 diffs + fulls @5,10");
+    assert_eq!(report.torn_commits, 0);
+
+    let (clustered, cut) = lowdiff::cluster::recover_cluster(&store2, sig, &adam).unwrap();
+    assert_eq!(cut.cut_step, 12);
+    assert_eq!(cut.ranks, 3);
+    assert_eq!(clustered, classic, "per-rank chains must recover the identical state");
+}
+
+#[test]
 fn multi_worker_data_parallel_trains() {
     let mrt = load_mrt();
     let mut cfg = base(StrategyKind::LowDiff);
