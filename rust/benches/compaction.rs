@@ -1,0 +1,125 @@
+//! Chain-compaction bench: recovery replay cost over a 64-diff chain,
+//! uncompacted vs background-compacted at merge factors 4 and 8, plus the
+//! compactor's own pass cost.
+//!
+//! The headline metric is **replay objects touched** (deterministic:
+//! `⌈n/mf⌉` after a full compaction of a divisible chain, vs `n` raw) —
+//! the `R_D`-side quantity the §V-C tuner's `observe_compaction` feedback
+//! models. Wall times are machine-dependent and reported for context.
+//! Bit-identity of the recovered state is asserted on every run.
+//!
+//! Run: `cargo bench --bench compaction`; baseline in
+//! `BENCH_compaction.json`.
+
+mod common;
+
+use std::sync::Arc;
+
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::checkpoint::manifest::Manifest;
+use lowdiff::compress::topk_mask;
+use lowdiff::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
+use lowdiff::coordinator::recovery::{recover, RecoveryMode, RecoveryStats};
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::storage::{MemStore, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+const N_PARAMS: usize = 64 * 1024;
+const STEPS: u64 = 64;
+const RHO: f64 = 0.01;
+
+/// Persist the fixed timeline through the checkpointer at the given merge
+/// factor; returns the store and the compactor's counters.
+fn build(compact_every: usize) -> (Arc<dyn StorageBackend>, u64, u64) {
+    let sig = model_signature("compaction-bench", N_PARAMS);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let ck = Checkpointer::spawn(
+        Arc::clone(&store),
+        CkptConfig { model_sig: sig, gc: false, compact_every, ..CkptConfig::default() },
+    );
+    let mut rng = Rng::new(61);
+    let k = ((N_PARAMS as f64 * RHO) as usize).max(1);
+    ck.queue
+        .put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.1; N_PARAMS])))));
+    for step in 1..=STEPS {
+        let mut g = vec![0f32; N_PARAMS];
+        rng.fill_normal_f32(&mut g);
+        ck.queue
+            .put(step, Arc::new(CkptItem::DiffDense(topk_mask(&Flat(g), k))));
+    }
+    let stats = ck.finish();
+    assert_eq!(stats.errors, 0);
+    (store, stats.merged_written, stats.raw_compacted)
+}
+
+fn recover_once(store: &Arc<dyn StorageBackend>, sig: u64) -> (ModelState, RecoveryStats) {
+    recover(store.as_ref(), sig, &Adam::default(), RecoveryMode::SerialReplay).expect("recover")
+}
+
+fn main() {
+    let sig = model_signature("compaction-bench", N_PARAMS);
+    println!("chain: 1 anchor full + {STEPS} diffs, {N_PARAMS} params, rho {RHO}\n");
+
+    let (baseline_store, _, _) = build(0);
+    let (want, base_stats) = recover_once(&baseline_store, sig);
+    assert_eq!(base_stats.n_diff_objects, STEPS as usize);
+
+    let mut rows = Vec::new();
+    for mf in [0usize, 4, 8] {
+        let t0 = std::time::Instant::now();
+        let (store, merged, raw_compacted) = build(mf);
+        let build_secs = t0.elapsed().as_secs_f64();
+
+        let (state, rstats) = recover_once(&store, sig);
+        assert_eq!(state, want, "mf={mf}: compacted replay must be bit-identical");
+        if mf >= 2 {
+            assert!(
+                rstats.n_diff_objects <= (STEPS as usize).div_ceil(mf) + 1,
+                "mf={mf}: replay objects {} above the compaction bound",
+                rstats.n_diff_objects
+            );
+            assert_eq!(merged as usize, STEPS as usize / mf);
+        }
+        let chain_objects = store
+            .list()
+            .unwrap()
+            .iter()
+            .filter(|n| Manifest::step_range(n).is_some_and(|(k, _, _)| k != "full"))
+            .count();
+
+        let b = common::bench(&format!("recover mf={mf}"), 300, || {
+            let _ = recover_once(&store, sig);
+        });
+        b.report();
+        println!(
+            "  mf={mf:<3} chain objects {chain_objects:>3}  replay objects {:>3}  \
+             merged spans {merged:>2}  raws compacted {raw_compacted:>2}",
+            rstats.n_diff_objects
+        );
+        rows.push((mf, chain_objects, rstats.n_diff_objects, merged, b.median(), build_secs));
+    }
+
+    // machine-readable block for BENCH_compaction.json
+    println!("\n{{");
+    println!("  \"bench\": \"compaction\",");
+    for (mf, chain, replay, merged, recover_s, build_s) in &rows {
+        println!(
+            "  \"mf_{mf}\": {{ \"chain_objects\": {chain}, \"replay_objects\": {replay}, \
+             \"merged_spans\": {merged}, \"recover_ms\": {:.3}, \"build_ms\": {:.1} }},",
+            recover_s * 1e3,
+            build_s * 1e3
+        );
+    }
+    println!("  \"bit_identical\": true");
+    println!("}}");
+
+    // acceptance: compaction must cut replay objects by ~mf
+    let replay_raw = rows[0].2;
+    let replay_mf8 = rows[2].2;
+    assert!(
+        replay_mf8 * 4 < replay_raw,
+        "mf=8 must cut replay objects by >4x ({replay_raw} -> {replay_mf8})"
+    );
+    println!("\nacceptance: replay objects {replay_raw} -> {replay_mf8} at mf=8 (PASS)");
+}

@@ -34,6 +34,11 @@ pub enum CkptKind {
     Diff = 1,
     /// Batched differential checkpoint (C^B, §V-B).
     BatchedDiff = 2,
+    /// Compacted span of differentials (incremental-merging persistence,
+    /// §VI-B): the background compactor's rewrite of a run of raw
+    /// diff/batch objects into one container that preserves every
+    /// per-step payload (see `checkpoint::merged`).
+    MergedDiff = 3,
 }
 
 impl CkptKind {
@@ -42,6 +47,7 @@ impl CkptKind {
             0 => CkptKind::Full,
             1 => CkptKind::Diff,
             2 => CkptKind::BatchedDiff,
+            3 => CkptKind::MergedDiff,
             _ => bail!("unknown checkpoint kind {v}"),
         })
     }

@@ -2,15 +2,24 @@
 //!
 //! Objects in a [`StorageBackend`](crate::storage::StorageBackend):
 //! ```text
-//! full-{step:012}.ldck          full checkpoint at Adam step `step`
-//! diff-{step:012}.ldck          one differential for step `step`
-//! batch-{lo:012}-{hi:012}.ldck  batched differentials for steps lo..=hi
+//! full-{step:012}.ldck            full checkpoint at Adam step `step`
+//! diff-{step:012}.ldck            one differential for step `step`
+//! batch-{lo:012}-{hi:012}.ldck    batched differentials for steps lo..=hi
+//! merged-{lo:012}-{hi:012}.ldck   compacted span: the background chain
+//!                                 compactor's rewrite of raw diff/batch
+//!                                 objects covering steps lo..=hi
 //! ```
 //! The recovery chain for the latest state is: the newest full checkpoint,
-//! plus every diff/batch object strictly after its step, in step order
-//! (paper Eq. (6)). GC drops objects made obsolete by a newer full
-//! checkpoint — keeping the previous chain until the new full is durable
-//! (never delete the chain you would recover from).
+//! plus a **non-overlapping cover** of diff/batch/merged objects carrying
+//! steps after its step (hi-based — a compacted span may straddle the
+//! base full; replay skips its steps at or before the base), in step
+//! order (paper Eq. (6)). Merged spans and the raw
+//! objects they supersede can coexist for a moment (a crash between the
+//! merged write and the raw deletes); [`select_cover`](Manifest::select_cover)
+//! prefers the merged span and drops anything its range already covers. GC
+//! drops objects made obsolete by a newer full checkpoint — keeping the
+//! previous chain until the new full is durable (never delete the chain
+//! you would recover from).
 //!
 //! The multi-rank cluster runtime ([`crate::cluster`]) adds two more
 //! name families on the same store:
@@ -46,6 +55,30 @@ impl Chain {
             .map(|(_, hi, _)| *hi)
             .or(self.full.as_ref().map(|(s, _)| *s))
             .unwrap_or(0)
+    }
+
+    /// The chain's step stride — the hole-detection heuristic shared by
+    /// recovery, cluster chain loading, and the compactor: the smallest
+    /// spacing between *adjacent chain objects*, seeded by the
+    /// base→first hop for single-object chains. The base→first hop may
+    /// legitimately be shorter than the stride (a full checkpoint off the
+    /// diff cadence), so it never folds into the minimum; any jump larger
+    /// than the stride is treated as a hole — recovery truncates there
+    /// and the compactor refuses to merge across it.
+    pub fn stride(&self, base_step: u64) -> u64 {
+        let mut stride = self
+            .diffs
+            .first()
+            .map(|(lo, _, _)| lo.saturating_sub(base_step).max(1))
+            .unwrap_or(1);
+        if self.diffs.len() >= 2 {
+            let mut adj = u64::MAX;
+            for w in self.diffs.windows(2) {
+                adj = adj.min(w[1].0.saturating_sub(w[0].1));
+            }
+            stride = adj.max(1);
+        }
+        stride
     }
 }
 
@@ -102,10 +135,26 @@ impl Manifest {
         format!("batch-{lo:012}-{hi:012}.ldck")
     }
 
+    /// Name of a compacted differential span covering steps `lo..=hi`.
+    pub fn merged_name(lo: u64, hi: u64) -> String {
+        format!("merged-{lo:012}-{hi:012}.ldck")
+    }
+
     /// Name of the two-phase global commit record for `step` (cluster
     /// runtime; its presence is the commit point of a cross-rank epoch).
     pub fn global_name(step: u64) -> String {
         format!("global-{step:012}.gck")
+    }
+
+    /// Name of the elastic-reshard safety-net full: a top-level full
+    /// checkpoint of the recovered cut, written by `elastic_restart`
+    /// *before* the re-anchor can overwrite any step-keyed
+    /// `rank-*/full-{S}` name, and deleted once the anchor record
+    /// commits. Deliberately NOT a chain object (flat discovery ignores
+    /// it): only `recover_cluster_or_net` reads it, so a stale flat chain
+    /// on a reused store can never hijack cluster recovery.
+    pub fn reshard_net_name() -> &'static str {
+        "reshard-net.ldck"
     }
 
     /// Step of a global commit record, `None` for any other name.
@@ -157,7 +206,9 @@ impl Manifest {
             }
             match Self::parse(inner) {
                 Some(("full", step, _)) if step <= cut => fulls.push((step, name.clone())),
-                Some(("diff", lo, hi)) | Some(("batch", lo, hi)) if hi <= cut => {
+                Some(("diff", lo, hi)) | Some(("batch", lo, hi)) | Some(("merged", lo, hi))
+                    if hi <= cut =>
+                {
                     diffs.push((lo, hi, name.clone()))
                 }
                 _ => {}
@@ -166,9 +217,12 @@ impl Manifest {
         fulls.sort();
         let full = fulls.last().cloned();
         let base = full.as_ref().map(|(s, _)| *s).unwrap_or(0);
-        diffs.retain(|(lo, _, _)| *lo > base);
-        diffs.sort();
-        Chain { full, diffs }
+        // hi-based: a merged/batch span can STRADDLE the base full (the
+        // compactor ran before a mid-chain full became visible); it still
+        // carries the live steps after the base, so it stays in the chain
+        // and replay skips the steps at or before the base
+        diffs.retain(|(_, hi, _)| *hi > base);
+        Chain { full, diffs: Self::select_cover(diffs) }
     }
 
     fn parse(name: &str) -> Option<(&'static str, u64, u64)> {
@@ -182,9 +236,31 @@ impl Manifest {
         } else if let Some(s) = stem.strip_prefix("batch-") {
             let (lo, hi) = s.split_once('-')?;
             Some(("batch", lo.parse().ok()?, hi.parse().ok()?))
+        } else if let Some(s) = stem.strip_prefix("merged-") {
+            let (lo, hi) = s.split_once('-')?;
+            Some(("merged", lo.parse().ok()?, hi.parse().ok()?))
         } else {
             None
         }
+    }
+
+    /// Choose a non-overlapping replay cover from (possibly redundant)
+    /// differential objects. A crash between the compactor's merged write
+    /// and its raw deletes leaves both the merged span and (some of) the
+    /// raw objects it supersedes on the store; the cover prefers the
+    /// longest span starting earliest and drops anything whose range is
+    /// already covered. Plain chains (strictly increasing, disjoint
+    /// objects) pass through unchanged.
+    pub fn select_cover(mut diffs: Vec<(u64, u64, String)>) -> Vec<(u64, u64, String)> {
+        diffs.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)).then(a.2.cmp(&b.2)));
+        let mut out: Vec<(u64, u64, String)> = Vec::with_capacity(diffs.len());
+        for d in diffs {
+            match out.last() {
+                Some(prev) if d.0 <= prev.1 => {} // redundant: range already covered
+                _ => out.push(d),
+            }
+        }
+        out
     }
 
     /// Discover the newest recovery chain on a backend.
@@ -194,7 +270,7 @@ impl Manifest {
         for name in store.list().context("listing checkpoint store")? {
             match Self::parse(&name) {
                 Some(("full", step, _)) => fulls.push((step, name)),
-                Some(("diff", lo, hi)) | Some(("batch", lo, hi)) => {
+                Some(("diff", lo, hi)) | Some(("batch", lo, hi)) | Some(("merged", lo, hi)) => {
                     diffs.push((lo, hi, name))
                 }
                 _ => {}
@@ -203,17 +279,32 @@ impl Manifest {
         fulls.sort();
         let full = fulls.last().cloned();
         let base = full.as_ref().map(|(s, _)| *s).unwrap_or(0);
-        diffs.retain(|(lo, _, _)| *lo > base);
-        diffs.sort();
-        Ok(Chain { full, diffs })
+        // hi-based so spans straddling the base full stay live (see
+        // `rank_chain`); replay filters out their steps <= base
+        diffs.retain(|(_, hi, _)| *hi > base);
+        Ok(Chain { full, diffs: Self::select_cover(diffs) })
     }
 
-    /// Delete every diff/batch object covering steps strictly after
+    /// True for names the flat manifest must NEVER touch: anything under a
+    /// cluster rank namespace and global commit records. Flat GC and
+    /// truncation are *blind* to the cluster runtime's objects — deleting
+    /// them would hole a per-rank chain a committed global record still
+    /// references. `parse()` already fails on these names today; this
+    /// guard makes the invariant explicit (and future-proof against new
+    /// name families parsing accidentally).
+    fn is_cluster_name(name: &str) -> bool {
+        Self::parse_rank(name).is_some() || Self::parse_global(name).is_some()
+    }
+
+    /// Delete every diff/batch/merged object covering steps strictly after
     /// `step` — they belong to a timeline lost to a failure (the run was
     /// rolled back to `step`) and must not pollute future recoveries.
     pub fn truncate_after(store: &dyn StorageBackend, step: u64) -> Result<usize> {
         let mut removed = 0;
         for name in store.list()? {
+            if Self::is_cluster_name(&name) {
+                continue; // rank-namespaced chains are the cluster GC's
+            }
             if let Some((kind, lo, _)) = Self::parse(&name) {
                 if kind != "full" && lo > step {
                     store.delete(&name)?;
@@ -225,15 +316,20 @@ impl Manifest {
     }
 
     /// Delete every object made obsolete by the newest full checkpoint:
-    /// older fulls and all differentials at or before its step. Returns the
-    /// number of objects removed.
+    /// older fulls and all differentials whose entire step range lies at
+    /// or before its step (hi-based, matching discovery: a span straddling
+    /// the newest full still carries live steps and must survive). Returns
+    /// the number of objects removed.
     pub fn gc(store: &dyn StorageBackend) -> Result<usize> {
         let mut fulls: Vec<(u64, String)> = Vec::new();
         let mut others: Vec<(u64, String)> = Vec::new();
         for name in store.list()? {
+            if Self::is_cluster_name(&name) {
+                continue; // never collect under a rank namespace
+            }
             match Self::parse(&name) {
                 Some(("full", step, _)) => fulls.push((step, name)),
-                Some((_, lo, _)) => others.push((lo, name)),
+                Some((_, _, hi)) => others.push((hi, name)),
                 _ => {}
             }
         }
@@ -247,8 +343,8 @@ impl Manifest {
             store.delete(name)?;
             removed += 1;
         }
-        for (lo, name) in others {
-            if lo <= newest {
+        for (hi, name) in others {
+            if hi <= newest {
                 store.delete(&name)?;
                 removed += 1;
             }
@@ -414,6 +510,122 @@ mod tests {
         assert_eq!(older.diffs, vec![(3, 3, ns(1, Manifest::diff_name(3)))]);
         // unknown rank: empty chain
         assert_eq!(Manifest::rank_chain(&names, 7, 6), Chain::default());
+    }
+
+    #[test]
+    fn merged_names_parse_and_discover() {
+        assert_eq!(Manifest::merged_name(2, 5), "merged-000000000002-000000000005.ldck");
+        assert_eq!(
+            Manifest::step_range(&Manifest::merged_name(2, 5)),
+            Some(("merged", 2, 5))
+        );
+        let s = MemStore::new();
+        s.put(&Manifest::full_name(0), b"f").unwrap();
+        s.put(&Manifest::merged_name(1, 4), b"m").unwrap();
+        s.put(&Manifest::diff_name(5), b"d").unwrap();
+        let chain = Manifest::latest_chain(&s).unwrap();
+        assert_eq!(
+            chain.diffs,
+            vec![
+                (1, 4, Manifest::merged_name(1, 4)),
+                (5, 5, Manifest::diff_name(5)),
+            ]
+        );
+        assert_eq!(chain.latest_step(), 5);
+    }
+
+    #[test]
+    fn select_cover_prefers_merged_spans_over_covered_raws() {
+        // crash between the merged write and the raw deletes: both coexist
+        let diffs = vec![
+            (3, 3, Manifest::diff_name(3)),
+            (1, 4, Manifest::merged_name(1, 4)),
+            (1, 1, Manifest::diff_name(1)),
+            (5, 5, Manifest::diff_name(5)),
+            (2, 2, Manifest::diff_name(2)),
+        ];
+        let cover = Manifest::select_cover(diffs);
+        assert_eq!(
+            cover,
+            vec![
+                (1, 4, Manifest::merged_name(1, 4)),
+                (5, 5, Manifest::diff_name(5)),
+            ]
+        );
+        // plain chains pass through unchanged (just sorted)
+        let plain = vec![
+            (2, 2, Manifest::diff_name(2)),
+            (1, 1, Manifest::diff_name(1)),
+        ];
+        assert_eq!(
+            Manifest::select_cover(plain),
+            vec![
+                (1, 1, Manifest::diff_name(1)),
+                (2, 2, Manifest::diff_name(2)),
+            ]
+        );
+    }
+
+    #[test]
+    fn straddling_merged_span_is_discovered_and_kept() {
+        // the async-engine race: a span compacted before a mid-chain full
+        // became visible straddles the base; it carries the live steps
+        // 5..6 and must stay in the chain and survive GC
+        let s = MemStore::new();
+        s.put(&Manifest::merged_name(3, 6), b"m").unwrap();
+        s.put(&Manifest::full_name(4), b"f").unwrap();
+        let chain = Manifest::latest_chain(&s).unwrap();
+        assert_eq!(chain.full.as_ref().unwrap().0, 4);
+        assert_eq!(chain.diffs, vec![(3, 6, Manifest::merged_name(3, 6))]);
+        assert_eq!(chain.latest_step(), 6);
+        assert_eq!(Manifest::gc(&s).unwrap(), 0, "live straddling span must survive GC");
+    }
+
+    #[test]
+    fn gc_collects_merged_spans_below_the_newest_full() {
+        let s = MemStore::new();
+        s.put(&Manifest::merged_name(1, 4), b"m").unwrap();
+        s.put(&Manifest::full_name(4), b"f").unwrap();
+        s.put(&Manifest::merged_name(5, 8), b"m").unwrap();
+        let removed = Manifest::gc(&s).unwrap();
+        assert_eq!(removed, 1, "only the superseded span goes");
+        assert_eq!(
+            s.list().unwrap(),
+            vec![Manifest::full_name(4), Manifest::merged_name(5, 8)]
+        );
+        assert_eq!(Manifest::truncate_after(&s, 4).unwrap(), 1, "lost-timeline merged span");
+    }
+
+    #[test]
+    fn flat_gc_and_truncate_never_touch_rank_namespaces_regression() {
+        // PR-3 noted gap, now an explicit guard: whatever lives under a
+        // rank namespace (including names whose inner part parses as a
+        // perfectly ordinary checkpoint object) must survive flat GC and
+        // flat truncation — those chains belong to the cluster runtime.
+        let s = MemStore::new();
+        let ns = |r: usize, n: String| format!("{}{n}", Manifest::rank_prefix(r));
+        let cluster_objects = vec![
+            ns(0, Manifest::full_name(1)),       // older than the flat full
+            ns(0, Manifest::diff_name(2)),       // "obsolete" step
+            ns(3, Manifest::batch_name(2, 6)),   // spans the flat full step
+            ns(3, Manifest::merged_name(7, 9)),  // beyond the flat timeline
+            Manifest::global_name(9),            // commit record
+        ];
+        for name in &cluster_objects {
+            s.put(name, b"cluster").unwrap();
+        }
+        s.put(&Manifest::full_name(2), b"old-full").unwrap();
+        s.put(&Manifest::full_name(5), b"new-full").unwrap();
+        s.put(&Manifest::diff_name(3), b"obsolete").unwrap();
+        s.put(&Manifest::diff_name(7), b"lost-timeline").unwrap();
+
+        let removed = Manifest::gc(&s).unwrap();
+        assert_eq!(removed, 2, "old flat full + obsolete flat diff only");
+        let removed = Manifest::truncate_after(&s, 5).unwrap();
+        assert_eq!(removed, 1, "flat lost-timeline diff only");
+        for name in &cluster_objects {
+            assert!(s.exists(name), "flat GC/truncate deleted cluster object {name}");
+        }
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Merged differential containers C^M — the chain compactor's output
+//! (incremental-merging persistence, paper §VI-B spirit; Check-N-Run and
+//! "On Efficient Constructions of Checkpoints" both consolidate
+//! incrementals in the background to keep frequent differentials
+//! sustainable).
+//!
+//! A merged container rewrites a run of raw diff/batch objects covering
+//! steps `lo..=hi` as ONE storage object while preserving **every
+//! per-step payload** — recovery replays the same Adam applications in
+//! the same order, so the reconstructed state is bit-identical to
+//! replaying the raw chain; only the number of objects fetched shrinks
+//! (⌈n/merge_factor⌉ instead of n). Sections, in step order:
+//!
+//! ```text
+//! g-{step}   a gradient payload   (LowDiff differential)
+//! d-{step}   a state-delta payload (Naive DC differential)
+//! sum        optional: the index-union sum of an all-gradient span,
+//!            folded with `SparseGrad::merge_sum_into` — the precomputed
+//!            partial that parallel-merge recovery (Fig. 10) would build
+//!            from the per-step payloads anyway
+//! ```
+
+use anyhow::{bail, ensure, Result};
+
+use crate::checkpoint::diff::DiffPayload;
+use crate::checkpoint::format::{
+    encode_container_into, CkptKind, ContainerView, PayloadCodec, SectionSrc,
+};
+use crate::sparse::SparseGrad;
+
+/// Encode a merged span. `items` must be step-ascending and inside
+/// `lo..=hi`.
+pub fn write_merged(
+    items: &[(u64, DiffPayload)],
+    model_sig: u64,
+    lo: u64,
+    hi: u64,
+    codec: PayloadCodec,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    write_merged_into(items, model_sig, lo, hi, codec, &mut out)?;
+    Ok(out)
+}
+
+/// Single-pass encode of a merged span into `out`. Returns bytes appended.
+pub fn write_merged_into(
+    items: &[(u64, DiffPayload)],
+    model_sig: u64,
+    lo: u64,
+    hi: u64,
+    codec: PayloadCodec,
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    ensure!(!items.is_empty(), "empty merged span");
+    ensure!(items.windows(2).all(|w| w[0].0 < w[1].0), "merged steps must ascend");
+    ensure!(
+        lo <= items[0].0 && items[items.len() - 1].0 <= hi,
+        "span [{lo},{hi}] does not cover steps {}..{}",
+        items[0].0,
+        items[items.len() - 1].0
+    );
+    let sum = all_gradient_sum(items);
+    let names: Vec<String> = items
+        .iter()
+        .map(|(s, p)| match p {
+            DiffPayload::Gradient(_) => format!("g-{s}"),
+            DiffPayload::StateDelta(_) => format!("d-{s}"),
+        })
+        .collect();
+    let mut secs: Vec<SectionSrc<'_>> = names
+        .iter()
+        .zip(items)
+        .map(|(n, (_, p))| SectionSrc::sparse(n, p.sparse()))
+        .collect();
+    if let Some(s) = &sum {
+        secs.push(SectionSrc::sparse("sum", s));
+    }
+    encode_container_into(CkptKind::MergedDiff, codec, model_sig, lo, hi, &secs, out)
+}
+
+/// The union-sum summary of an all-gradient span (≥ 2 items), folded
+/// left-to-right with the zero-alloc merge core.
+fn all_gradient_sum(items: &[(u64, DiffPayload)]) -> Option<SparseGrad> {
+    if items.len() < 2 || !items.iter().all(|(_, p)| matches!(p, DiffPayload::Gradient(_))) {
+        return None;
+    }
+    let mut acc = items[0].1.sparse().clone();
+    let mut scratch = SparseGrad { dense_len: 0, indices: Vec::new(), values: Vec::new() };
+    for (_, p) in &items[1..] {
+        acc.merge_sum_into(p.sparse(), &mut scratch);
+    }
+    Some(acc)
+}
+
+/// Decode a merged span back to its per-step payloads (replay order).
+pub fn read_merged(bytes: &[u8], model_sig: u64) -> Result<Vec<(u64, DiffPayload)>> {
+    let c = ContainerView::parse(bytes)?;
+    ensure!(c.kind == CkptKind::MergedDiff, "not a merged diff: {:?}", c.kind);
+    ensure!(c.model_sig == model_sig, "merged diff from a different model");
+    let mut out = Vec::new();
+    for (name, b) in c.sections() {
+        if let Some(s) = name.strip_prefix("g-") {
+            out.push((s.parse::<u64>()?, DiffPayload::Gradient(SparseGrad::from_bytes(b)?)));
+        } else if let Some(s) = name.strip_prefix("d-") {
+            out.push((s.parse::<u64>()?, DiffPayload::StateDelta(SparseGrad::from_bytes(b)?)));
+        } else if name == "sum" {
+            // summary section, not a replay step
+        } else {
+            bail!("unknown merged section `{name}`");
+        }
+    }
+    ensure!(!out.is_empty(), "empty merged container");
+    ensure!(out.windows(2).all(|w| w[0].0 < w[1].0), "merged steps out of order");
+    Ok(out)
+}
+
+/// The precomputed gradient sum of an all-gradient merged span, if the
+/// writer included one.
+pub fn read_merged_sum(bytes: &[u8], model_sig: u64) -> Result<Option<SparseGrad>> {
+    let c = ContainerView::parse(bytes)?;
+    ensure!(c.kind == CkptKind::MergedDiff, "not a merged diff: {:?}", c.kind);
+    ensure!(c.model_sig == model_sig, "merged diff from a different model");
+    match c.section("sum") {
+        Ok(b) => Ok(Some(SparseGrad::from_bytes(b)?)),
+        Err(_) => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::tensor::Flat;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn grad(rng: &mut Rng, n: usize) -> SparseGrad {
+        let mut d = Flat::zeros(n);
+        for i in 0..n {
+            if rng.next_f64() < 0.25 {
+                d.0[i] = rng.normal() as f32;
+            }
+        }
+        SparseGrad::from_dense(&d)
+    }
+
+    #[test]
+    fn roundtrip_mixed_payloads_property() {
+        prop_check("merged_roundtrip", 32, |rng| {
+            let n = rng.range(1, 120);
+            let k = rng.range(1, 6);
+            let items: Vec<(u64, DiffPayload)> = (0..k)
+                .map(|i| {
+                    let p = if rng.next_f64() < 0.7 {
+                        DiffPayload::Gradient(grad(rng, n))
+                    } else {
+                        DiffPayload::StateDelta(grad(rng, n))
+                    };
+                    (i as u64 + 1, p)
+                })
+                .collect();
+            let (lo, hi) = (1, k as u64);
+            for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+                let bytes = write_merged(&items, 9, lo, hi, codec).unwrap();
+                let back = read_merged(&bytes, 9).map_err(|e| format!("{e:#}"))?;
+                prop_assert!(back == items);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sum_section_equals_left_fold_merge() {
+        let mut rng = Rng::new(4);
+        let n = 80;
+        let items: Vec<(u64, DiffPayload)> = (1..=4u64)
+            .map(|s| (s, DiffPayload::Gradient(grad(&mut rng, n))))
+            .collect();
+        let bytes = write_merged(&items, 3, 1, 4, PayloadCodec::Raw).unwrap();
+        let sum = read_merged_sum(&bytes, 3).unwrap().expect("all-gradient span has a sum");
+        // identical fold order => exact equality, not just dense-equivalent
+        let mut want = items[0].1.sparse().clone();
+        for (_, p) in &items[1..] {
+            want = want.merge_sum(p.sparse());
+        }
+        assert_eq!(sum, want);
+    }
+
+    #[test]
+    fn no_sum_for_single_or_delta_spans() {
+        let mut rng = Rng::new(5);
+        let single = vec![(1u64, DiffPayload::Gradient(grad(&mut rng, 40)))];
+        let b = write_merged(&single, 1, 1, 1, PayloadCodec::Raw).unwrap();
+        assert!(read_merged_sum(&b, 1).unwrap().is_none());
+        let mixed = vec![
+            (1u64, DiffPayload::Gradient(grad(&mut rng, 40))),
+            (2u64, DiffPayload::StateDelta(grad(&mut rng, 40))),
+        ];
+        let b = write_merged(&mixed, 1, 1, 2, PayloadCodec::Raw).unwrap();
+        assert!(read_merged_sum(&b, 1).unwrap().is_none());
+        assert_eq!(read_merged(&b, 1).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn wrong_sig_and_misordered_rejected() {
+        let mut rng = Rng::new(6);
+        let items = vec![
+            (1u64, DiffPayload::Gradient(grad(&mut rng, 20))),
+            (2u64, DiffPayload::Gradient(grad(&mut rng, 20))),
+        ];
+        let b = write_merged(&items, 7, 1, 2, PayloadCodec::Raw).unwrap();
+        assert!(read_merged(&b, 8).is_err(), "foreign model sig");
+        let misordered = vec![items[1].clone(), items[0].clone()];
+        assert!(write_merged(&misordered, 7, 1, 2, PayloadCodec::Raw).is_err());
+        assert!(write_merged(&items, 7, 2, 2, PayloadCodec::Raw).is_err(), "span must cover");
+        assert!(write_merged(&[], 7, 1, 2, PayloadCodec::Raw).is_err(), "empty span");
+    }
+}

@@ -6,6 +6,8 @@
 //! - [`diff`]: differential checkpoints C^D — a *reused compressed
 //!   gradient* (LowDiff, Eq. (7)) or a state delta (Naive DC, Eq. (5)).
 //! - [`batched`]: the §V-B batched gradient write buffer.
+//! - [`merged`]: compacted differential spans C^M — the background chain
+//!   compactor's output (incremental-merging persistence).
 //! - [`manifest`]: object naming, discovery of the recovery chain, GC.
 
 pub mod batched;
@@ -13,6 +15,7 @@ pub mod diff;
 pub mod format;
 pub mod full;
 pub mod manifest;
+pub mod merged;
 
 pub use batched::{BatchBuffer, BatchMode};
 pub use diff::{read_diff, write_diff, write_diff_into, DiffPayload};
@@ -22,3 +25,33 @@ pub use format::{
 };
 pub use full::{read_full, write_full, write_full_into};
 pub use manifest::Manifest;
+pub use merged::{read_merged, read_merged_sum, write_merged, write_merged_into};
+
+use anyhow::{bail, Result};
+
+/// Decode any diff-chain object — plain [`CkptKind::Diff`], batched, or a
+/// compacted [`CkptKind::MergedDiff`] span — to its per-step payloads in
+/// replay order. The single kind-dispatch shared by recovery
+/// (`coordinator::recovery::load_diffs`), cluster chain loading
+/// (`cluster::commit::load_chains`), and the compactor
+/// (`pipeline::compact`): adding a new chain kind means extending exactly
+/// this function.
+pub fn read_chain_object(
+    bytes: &[u8],
+    model_sig: u64,
+) -> Result<(CkptKind, Vec<(u64, DiffPayload)>)> {
+    let kind = ContainerView::parse(bytes)?.kind;
+    let items = match kind {
+        CkptKind::Diff => {
+            let (step, payload) = read_diff(bytes, model_sig)?;
+            vec![(step, payload)]
+        }
+        CkptKind::BatchedDiff => batched::read_batched(bytes, model_sig)?
+            .into_iter()
+            .map(|(s, g)| (s, DiffPayload::Gradient(g)))
+            .collect(),
+        CkptKind::MergedDiff => read_merged(bytes, model_sig)?,
+        CkptKind::Full => bail!("full checkpoint container in a diff chain"),
+    };
+    Ok((kind, items))
+}

@@ -37,9 +37,10 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 use byteorder::{ByteOrder, LittleEndian as LE};
 
-use crate::checkpoint::diff::{read_diff, DiffPayload};
+use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::full::read_full;
-use crate::checkpoint::manifest::Manifest;
+use crate::checkpoint::manifest::{Chain, Manifest};
+use crate::checkpoint::read_chain_object;
 use crate::cluster::{rank_sig, validate_partitions, Partition};
 use crate::optim::{Adam, ModelState};
 use crate::sparse::SparseGrad;
@@ -334,51 +335,49 @@ fn load_chains(
             format!("rank {rank}: no readable full checkpoint at or before {cut}")
         })?;
 
-        let mut chain_diffs: Vec<(u64, u64, String)> = names
+        let chain_diffs: Vec<(u64, u64, String)> = names
             .iter()
             .filter(|n| Manifest::parse_rank(n).map(|(r, _)| r) == Some(rank))
             .filter_map(|n| match Manifest::step_range(n) {
-                Some(("diff", lo, hi)) | Some(("batch", lo, hi))
-                    if lo > base_step && hi <= cut =>
+                // hi-based like flat discovery: a compacted span may
+                // straddle the base full; its steps <= base are skipped
+                // at replay below
+                Some(("diff", lo, hi)) | Some(("batch", lo, hi)) | Some(("merged", lo, hi))
+                    if hi > base_step && hi <= cut =>
                 {
                     Some((lo, hi, n.clone()))
                 }
                 _ => None,
             })
             .collect();
-        chain_diffs.sort();
+        // non-overlapping replay cover: compacted `MergedDiff` spans win
+        // over any leftover raws they supersede (crash mid-compaction)
+        let chain_diffs = Manifest::select_cover(chain_diffs);
 
         let mut objects = vec![base_name];
         let mut diffs: Vec<(u64, SparseGrad)> = Vec::with_capacity(chain_diffs.len());
-        // a complete chain steps uniformly from the base to the cut. The
-        // stride is the smallest *inter-diff* gap (same heuristic as
-        // single-chain recovery); the base→first hop may legitimately be
-        // shorter — a full checkpoint off the diff cadence — so it seeds
-        // the stride only for single-diff chains and is otherwise checked
-        // against the inter-diff stride as an upper bound, never folded
-        // into the minimum (that would reject valid off-cadence bases).
-        let mut stride = chain_diffs
-            .first()
-            .map(|(lo, _, _)| lo.saturating_sub(base_step).max(1))
-            .unwrap_or(1);
-        if chain_diffs.len() >= 2 {
-            let mut adj = u64::MAX;
-            for w in chain_diffs.windows(2) {
-                adj = adj.min(w[1].0.saturating_sub(w[0].1));
-            }
-            stride = adj.max(1);
-        }
+        // a complete chain steps uniformly from the base to the cut; the
+        // stride heuristic is shared with flat recovery and the compactor
+        // (see `Chain::stride` for the off-cadence-base rationale)
+        let span_chain = Chain { full: None, diffs: chain_diffs };
+        let stride = span_chain.stride(base_step);
+        let chain_diffs = &span_chain.diffs;
         let mut prev_hi = base_step;
         for (i, (lo, hi, name)) in chain_diffs.iter().enumerate() {
             let hole = if i == 0 { *lo > base_step + stride } else { *lo != prev_hi + stride };
             ensure!(!hole, "rank {rank} chain hole before {name}");
             let bytes = fetch(name).with_context(|| format!("rank {rank} {name}"))?;
-            let (step, payload) =
-                read_diff(&bytes, rsig).with_context(|| format!("rank {rank} {name}"))?;
-            match payload {
-                DiffPayload::Gradient(g) => diffs.push((step, g)),
-                DiffPayload::StateDelta(_) => {
-                    bail!("rank {rank} {name}: state-delta diff in a cluster chain")
+            let (_, items) = read_chain_object(&bytes, rsig)
+                .with_context(|| format!("rank {rank} {name}"))?;
+            for (step, payload) in items {
+                if step <= base_step {
+                    continue; // straddling span: the base already covers it
+                }
+                match payload {
+                    DiffPayload::Gradient(g) => diffs.push((step, g)),
+                    DiffPayload::StateDelta(_) => {
+                        bail!("rank {rank} {name}: state-delta diff in a cluster chain")
+                    }
                 }
             }
             objects.push(name.clone());
@@ -412,6 +411,49 @@ pub fn recover_cluster(
     }
     let state = crate::cluster::reshard::flatten(&slices)?;
     Ok((state, stats))
+}
+
+/// Cluster recovery with the **reshard safety-net fail-safe**: also read
+/// the dedicated net object
+/// ([`Manifest::reshard_net_name`] — written by
+/// [`elastic_restart`](crate::cluster::reshard::elastic_restart) before
+/// its re-anchor can overwrite any step-keyed `rank-*/full-{S}` name,
+/// deleted once the anchor record commits) and return whichever
+/// reconstructs the newer step. Only that one object is consulted —
+/// never the general flat chain — so a stale flat timeline left on a
+/// reused store can never hijack cluster recovery. Returns `None` cut
+/// stats when the net won.
+pub fn recover_cluster_or_net(
+    store: &Arc<dyn StorageBackend>,
+    model_sig: u64,
+    adam: &Adam,
+) -> Result<(ModelState, Option<ClusterCutStats>)> {
+    let cluster = recover_cluster(store, model_sig, adam);
+    let net = logical_view(store)
+        .get(Manifest::reshard_net_name())
+        .ok()
+        .and_then(|b| read_full(&b, model_sig).ok());
+    match (cluster, net) {
+        (Ok((cs, stats)), Some(ns)) => {
+            if ns.step > cs.step {
+                log::warn!(
+                    "reshard safety net (step {}) is newer than the cluster cut (step {}); \
+                     a re-anchor crashed mid-window — recovering from the net",
+                    ns.step,
+                    cs.step
+                );
+                Ok((ns, None))
+            } else {
+                Ok((cs, Some(stats)))
+            }
+        }
+        (Ok((cs, stats)), None) => Ok((cs, Some(stats))),
+        (Err(e), Some(ns)) => {
+            log::warn!("no consistent cluster cut ({e:#}); recovering from the reshard net");
+            Ok((ns, None))
+        }
+        (Err(e), None) => Err(e),
+    }
 }
 
 /// Delete per-rank objects and global records from timelines beyond the

@@ -33,7 +33,10 @@ pub mod commit;
 pub mod rank;
 pub mod reshard;
 
-pub use commit::{gc_cluster, recover_cluster, truncate_stragglers, ClusterCutStats, GlobalRecord};
+pub use commit::{
+    gc_cluster, recover_cluster, recover_cluster_or_net, truncate_stragglers, ClusterCutStats,
+    GlobalRecord,
+};
 pub use rank::{Cluster, ClusterStats};
 pub use reshard::{elastic_restart, flatten, repartition};
 
@@ -183,6 +186,10 @@ pub struct ClusterConfig {
     pub gc: bool,
     /// per-rank command-queue depth (training-thread backpressure)
     pub queue_capacity: usize,
+    /// background chain compaction: every this many committed diff epochs
+    /// the coordinator merges runs of that many raw per-rank diff objects
+    /// (strictly below the cut) into `MergedDiff` spans; < 2 disables
+    pub compact_every: usize,
 }
 
 impl Default for ClusterConfig {
@@ -194,6 +201,7 @@ impl Default for ClusterConfig {
             writers: 1,
             gc: true,
             queue_capacity: 8,
+            compact_every: 0,
         }
     }
 }

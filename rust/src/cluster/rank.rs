@@ -17,15 +17,14 @@
 //! ([`Cluster::put_full`]); everything else overlaps with training on the
 //! rank threads, exactly like the single-rank checkpointer — but R-wide.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::checkpoint::diff::{write_diff_into, DiffPayload};
-use crate::checkpoint::full::write_full_into;
+use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::manifest::Manifest;
 use crate::cluster::commit::{gc_with_record, CommitKind, GlobalRecord, RankObject};
 use crate::cluster::{
@@ -33,10 +32,9 @@ use crate::cluster::{
 };
 use crate::coordinator::checkpointer::CkptStats;
 use crate::optim::ModelState;
-use crate::sparse::SparseGrad;
+use crate::pipeline::{compact_chain, CompactStats, CompactorConfig, Encoder, Sink};
 use crate::storage::{Namespaced, Sharded, StorageBackend};
 use crate::tensor::Flat;
-use crate::util::bufpool::{BufPool, PooledBuf};
 
 /// What the training thread hands a rank.
 enum RankCmd {
@@ -68,10 +66,15 @@ pub struct ClusterStats {
     pub torn_commits: u64,
     /// bytes of global commit records written
     pub record_bytes: u64,
-    /// coordinator wall time in phase 2 (record writes + cluster GC)
+    /// coordinator wall time in phase 2 (record writes + cluster GC +
+    /// background compaction passes)
     pub commit_secs: f64,
     /// objects removed by coordinator-run cluster GC
     pub gc_removed: u64,
+    /// merged spans written by coordinator-run chain compaction
+    pub merged_written: u64,
+    /// raw per-rank diff objects superseded by merged spans
+    pub raw_compacted: u64,
 }
 
 impl ClusterStats {
@@ -93,6 +96,7 @@ struct CoordStats {
     record_bytes: u64,
     commit_secs: f64,
     gc_removed: u64,
+    compact: CompactStats,
 }
 
 /// Handle to a running rank cluster.
@@ -292,6 +296,8 @@ impl Cluster {
             record_bytes: c.record_bytes,
             commit_secs: c.commit_secs,
             gc_removed: c.gc_removed,
+            merged_written: c.compact.merged_written,
+            raw_compacted: c.compact.raw_compacted,
         }
     }
 }
@@ -309,7 +315,11 @@ impl Drop for Cluster {
     }
 }
 
-/// One rank's write loop: compact → encode (pooled) → persist → ack.
+/// One rank's write loop, composed from the shared pipeline stages
+/// ([`crate::pipeline`]): compact → encode (pooled) → persist-durable →
+/// ack. The [`Sink::persist_durable`] call blocks until the object is on
+/// disk — the ack must mean "durable", or the commit record could
+/// reference bytes that never landed.
 fn rank_loop(
     part: Partition,
     store: Arc<dyn StorageBackend>,
@@ -319,31 +329,27 @@ fn rank_loop(
 ) -> CkptStats {
     let sig = rank_sig(cfg.model_sig, &part);
     let prefix = Manifest::rank_prefix(part.rank);
-    let pool = BufPool::new(4);
-    let engine = (cfg.n_shards > 1 || cfg.writers > 1)
-        .then(|| Sharded::new(Arc::clone(&store), cfg.n_shards, cfg.writers));
+    let enc = Encoder::new(sig, cfg.codec, 4);
+    let mut sink = Sink::new(Arc::clone(&store), cfg.n_shards, cfg.writers, 4);
     let mut stats = CkptStats::default();
 
     while let Ok(cmd) = rx.recv() {
         let (seq, step, kind, encoded) = match cmd {
             RankCmd::Diff { seq, step, dense } => {
                 let t0 = Instant::now();
-                let sparse = SparseGrad::from_dense(&dense); // offload/compact
+                let sparse = enc.compact(&dense); // offload stage
                 drop(dense);
                 stats.offload_secs += t0.elapsed().as_secs_f64();
                 stats.diff_ckpts += 1;
-                let mut buf = pool.checkout();
-                let res =
-                    write_diff_into(&DiffPayload::Gradient(sparse), sig, step, cfg.codec, &mut buf)
-                        .map(|copied| (buf, Manifest::diff_name(step), copied))
-                        .map_err(|e| format!("encode diff {step}: {e:#}"));
+                let res = enc
+                    .encode_diff(step, &DiffPayload::Gradient(sparse))
+                    .map_err(|e| format!("encode diff {step}: {e:#}"));
                 (seq, step, CommitKind::Diff, res)
             }
             RankCmd::Full { seq, step, state } => {
                 stats.full_ckpts += 1;
-                let mut buf = pool.checkout();
-                let res = write_full_into(&state, sig, cfg.codec, &mut buf)
-                    .map(|copied| (buf, Manifest::full_name(step), copied))
+                let res = enc
+                    .encode_full(&state)
                     .map_err(|e| format!("encode full {step}: {e:#}"));
                 (seq, step, CommitKind::Full, res)
             }
@@ -354,9 +360,9 @@ fn rank_loop(
                 stats.errors += 1;
                 Err(e)
             }
-            Ok((buf, name, copied)) => {
-                stats.bytes_copied += copied as u64;
-                persist(engine.as_ref(), &store, &name, buf, &mut stats)
+            Ok(obj) => {
+                let name = obj.name.clone();
+                sink.persist_durable(obj, &mut stats)
                     .map(|(len, crc)| (format!("{prefix}{name}"), len, crc))
             }
         };
@@ -365,50 +371,10 @@ fn rank_loop(
             break;
         }
     }
-    stats.pool_hits = pool.hits();
-    stats.pool_misses = pool.misses();
-    if let Some(eng) = engine {
-        let sst = eng.storage_stats();
-        stats.shard_writes = sst.physical_writes;
-        stats.spill_bytes = sst.spill_bytes;
-        stats.spill_errors = sst.spill_errors;
-    }
+    stats.pool_hits = enc.pool_hits();
+    stats.pool_misses = enc.pool_misses();
+    sink.finish_local(&mut stats);
     stats
-}
-
-/// Phase 1 for one object: write through the rank's engine (or directly),
-/// blocking until durable — the ack must mean "on disk", or the commit
-/// record could reference bytes that never landed.
-fn persist(
-    engine: Option<&Sharded>,
-    store: &Arc<dyn StorageBackend>,
-    name: &str,
-    buf: PooledBuf,
-    stats: &mut CkptStats,
-) -> Result<(u64, u32), String> {
-    let len = buf.len() as u64;
-    let crc = crc32fast::hash(&buf);
-    let t0 = Instant::now();
-    let res = match engine {
-        Some(eng) => {
-            stats.inflight_peak = stats.inflight_peak.max(1);
-            eng.put_async(name, buf).wait()
-        }
-        None => store.put(name, &buf).map_err(|e| format!("{e:#}")),
-    };
-    stats.write_secs += t0.elapsed().as_secs_f64();
-    match res {
-        Ok(()) => {
-            stats.writes += 1;
-            stats.bytes_written += len;
-            Ok((len, crc))
-        }
-        Err(e) => {
-            log::error!("rank write {name} failed: {e}");
-            stats.errors += 1;
-            Err(e)
-        }
-    }
 }
 
 /// One epoch's phase-1 ledger.
@@ -445,6 +411,24 @@ fn coordinator_loop(
     let mut pending: BTreeMap<u64, Pending> = BTreeMap::new();
     let mut next_seq = 0u64;
     let mut poisoned = false;
+    let mut diffs_since_compact = 0usize;
+    // tips of the PREVIOUS committed record: the compactor must not
+    // consume them either, or the newest record's one-deep fallback (a
+    // later torn/damaged record) would lose its CRC-pinned tip objects
+    let mut prev_tips: HashSet<String> = HashSet::new();
+    // one logical view shared by every compaction pass. Mirror the rank
+    // write path: wrap in a shard-aware view ONLY when ranks shard —
+    // `Sharded::put` always writes shard + index objects, which would turn
+    // plain-layout merged spans into shard artifacts invisible to raw
+    // store listings (and each Sharded carries a writer thread; never
+    // build one per pass)
+    let compact_view: Option<Arc<dyn StorageBackend>> = (cfg.compact_every >= 2).then(|| {
+        if cfg.n_shards > 1 || cfg.writers > 1 {
+            Arc::new(Sharded::new(Arc::clone(&store), 1, 1)) as Arc<dyn StorageBackend>
+        } else {
+            Arc::clone(&store)
+        }
+    });
     let mut out = CoordStats::default();
     while let Ok(ack) = ack_rx.recv() {
         let e = pending.entry(ack.seq).or_insert_with(|| Pending {
@@ -476,7 +460,23 @@ fn coordinator_loop(
         }
         while pending.get(&next_seq).is_some_and(|p| p.received == n) {
             let p = pending.remove(&next_seq).unwrap();
-            commit_epoch(&store, &cfg, next_seq, p, &committed, &mut poisoned, &mut out);
+            let kind = p.kind;
+            let rec = commit_epoch(&store, &cfg, next_seq, p, &committed, &mut poisoned, &mut out);
+            if let Some(rec) = rec {
+                // background incremental merging: every `compact_every`
+                // committed diff epochs, compact each rank's chain below
+                // the newly-committed cut (docs/PIPELINE.md)
+                if let Some(view) = &compact_view {
+                    if kind == CommitKind::Diff {
+                        diffs_since_compact += 1;
+                        if diffs_since_compact >= cfg.compact_every {
+                            diffs_since_compact = 0;
+                            compact_cluster_chains(view.as_ref(), &cfg, &rec, &prev_tips, &mut out);
+                        }
+                    }
+                }
+                prev_tips = rec.ranks.iter().map(|r| r.name.clone()).collect();
+            }
             next_seq += 1;
             processed.fetch_add(1, Ordering::SeqCst);
         }
@@ -499,7 +499,7 @@ fn commit_epoch(
     committed: &AtomicU64,
     poisoned: &mut bool,
     out: &mut CoordStats,
-) {
+) -> Option<GlobalRecord> {
     let t0 = Instant::now();
     if p.failed || p.objects.iter().any(Option::is_none) {
         // phase 1 incomplete. A torn DIFF epoch holes that rank's chain —
@@ -511,14 +511,14 @@ fn commit_epoch(
         }
         out.torn += 1;
         out.commit_secs += t0.elapsed().as_secs_f64();
-        return;
+        return None;
     }
     if *poisoned && p.kind == CommitKind::Diff {
         // chains are holed upstream; a record here would certify an
         // unrecoverable cut — wait for a full epoch to re-base
         out.torn += 1;
         out.commit_secs += t0.elapsed().as_secs_f64();
-        return;
+        return None;
     }
     if p.kind == CommitKind::Full {
         // every rank's chain re-bases at this durable full, whether or
@@ -532,7 +532,7 @@ fn commit_epoch(
         ranks: p.objects.into_iter().map(Option::unwrap).collect(),
     };
     let bytes = rec.to_bytes();
-    match store.put(&Manifest::global_name(rec.step), &bytes) {
+    let committed_rec = match store.put(&Manifest::global_name(rec.step), &bytes) {
         Ok(()) => {
             out.commits += 1;
             out.record_bytes += bytes.len() as u64;
@@ -543,12 +543,61 @@ fn commit_epoch(
                     Err(e) => log::warn!("cluster gc failed: {e:#}"),
                 }
             }
+            Some(rec)
         }
         Err(e) => {
             // phase 2 failed: no record, but every rank chain is intact,
             // so later epochs stay committable (no poison)
             log::warn!("global record for step {} failed: {e:#}", rec.step);
             out.torn += 1;
+            None
+        }
+    };
+    out.commit_secs += t0.elapsed().as_secs_f64();
+    committed_rec
+}
+
+/// Coordinator-run background compaction (incremental-merging
+/// persistence): for every rank in the just-committed record, merge runs
+/// of raw diff objects **strictly below the cut** into `MergedDiff`
+/// spans. Protected from consumption: the new record's tip objects AND
+/// the previous record's (both have CRC-pinned tips a fallback may need
+/// to re-verify), so recovery keeps at least one-deep record fallback.
+/// Raw diffs become collectible only through `compact_chain`'s
+/// durable-and-verified-before-delete rule (docs/PIPELINE.md).
+fn compact_cluster_chains(
+    logical: &dyn StorageBackend,
+    cfg: &ClusterConfig,
+    rec: &GlobalRecord,
+    prev_tips: &HashSet<String>,
+    out: &mut CoordStats,
+) {
+    let t0 = Instant::now();
+    let names = match logical.list() {
+        Ok(n) => n,
+        Err(e) => {
+            log::warn!("compaction listing failed: {e:#}");
+            return;
+        }
+    };
+    let mut protect: HashSet<String> = rec.ranks.iter().map(|r| r.name.clone()).collect();
+    protect.extend(prev_tips.iter().cloned());
+    for ro in &rec.ranks {
+        let part = ro.partition();
+        let ccfg = CompactorConfig {
+            model_sig: rank_sig(cfg.model_sig, &part),
+            codec: cfg.codec,
+            merge_factor: cfg.compact_every,
+            // phase-1 acks are blocking-durable and the record committed,
+            // so everything at or below the cut is settled
+            settle_tail: 0,
+        };
+        // the chain strictly below the cut: tips at the cut stay raw
+        let chain = Manifest::rank_chain(&names, ro.rank as usize, rec.step.saturating_sub(1));
+        // tail merging keeps the replayable set within ⌈n/mf⌉ + 2 (the
+        // two protected record tips stay raw alongside the merged spans)
+        if let Err(e) = compact_chain(logical, &chain, &ccfg, &protect, true, &mut out.compact) {
+            log::warn!("rank {} compaction failed: {e:#}", ro.rank);
         }
     }
     out.commit_secs += t0.elapsed().as_secs_f64();
@@ -561,6 +610,7 @@ mod tests {
     use crate::cluster::{partition_even, recover_cluster};
     use crate::compress::topk_mask;
     use crate::optim::Adam;
+    use crate::sparse::SparseGrad;
     use crate::storage::{FaultConfig, FaultyStore, MemStore};
     use crate::util::rng::Rng;
 

@@ -17,6 +17,8 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::checkpoint::full::write_full;
+use crate::checkpoint::manifest::Manifest;
 use crate::cluster::commit::{recover_cluster, truncate_stragglers, ClusterCutStats};
 use crate::cluster::rank::Cluster;
 use crate::cluster::{slice_state, validate_partitions, ClusterConfig, Partition};
@@ -65,14 +67,20 @@ pub fn repartition(state: &ModelState, parts: &[Partition]) -> Result<Vec<ModelS
 /// an unanchored reshard. Returns the running cluster, the recovered
 /// global state, and cut statistics.
 ///
-/// Crash-window caveat: when the cut epoch was itself a *full* at step S,
-/// the re-anchor overwrites `rank-*/full-{S}` in place (names are
+/// Crash-window fail-safe: when the cut epoch was itself a *full* at step
+/// S, the re-anchor overwrites `rank-*/full-{S}` in place (names are
 /// step-keyed), so a crash inside this call — after the first overwrite,
-/// before the new record lands — can invalidate the old record's tip CRCs
-/// and force recovery back to an older cut. Diff-kind cuts have no such
-/// window (the anchor writes new names, and chain loading skips
-/// foreign-generation bases). Generation-tagged namespaces would remove
-/// the residual window; see docs/CLUSTER.md.
+/// before the new record lands — invalidates the old record's tip CRCs.
+/// The recovered cut is therefore persisted as a dedicated top-level
+/// **safety-net full** ([`Manifest::reshard_net_name`], not a chain
+/// object) *before* the new cluster touches any rank-namespaced name;
+/// [`recover_cluster_or_net`](crate::cluster::commit::recover_cluster_or_net)
+/// falls back to it whenever the cluster walk lands on an older step. The
+/// net is deleted once the re-anchor record is durable. Diff-kind cuts
+/// never had the window (the anchor writes new names, and chain loading
+/// skips foreign-generation bases), but the net is written
+/// unconditionally — one full write per restart removes the case
+/// analysis. See docs/CLUSTER.md.
 pub fn elastic_restart(
     store: &Arc<dyn StorageBackend>,
     adam: &Adam,
@@ -85,6 +93,15 @@ pub fn elastic_restart(
         .context("elastic restart: new partition table")?;
     truncate_stragglers(store, cut.cut_step)
         .context("elastic restart: truncating torn-commit stragglers")?;
+    // fail-safe net: the cut survives as a dedicated top-level full until
+    // the re-anchor commits, closing the step-keyed overwrite window
+    // (recover_cluster_or_net reads exactly this object and nothing else)
+    let net_name = Manifest::reshard_net_name();
+    let net = write_full(&state, cfg.model_sig, cfg.codec)
+        .context("elastic restart: encoding the safety-net full")?;
+    store
+        .put(net_name, &net)
+        .context("elastic restart: writing the safety-net full")?;
     let cluster = Cluster::spawn(Arc::clone(store), new_parts, cfg);
     // re-anchor: every new rank needs a base full under ITS partitioning
     // before it can extend the chain (old chains use the old rank sigs)
@@ -93,8 +110,10 @@ pub fn elastic_restart(
     ensure!(
         cluster.epochs_committed() >= 1,
         "elastic restart: the re-anchor epoch tore (a rank write failed); \
-         recovery still finds the newest verifiable pre-reshard cut"
+         recover_cluster_or_net still restores the cut via the safety-net full"
     );
+    // the anchor record is durable: the net is redundant now
+    let _ = store.delete(net_name);
     Ok((cluster, state, cut))
 }
 

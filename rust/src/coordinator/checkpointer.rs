@@ -17,29 +17,36 @@
 //! The training thread's only costs stay the O(1) queue put and the
 //! snapshot copy.
 //!
-//! Every write is encoded in a **single pass into a pooled buffer**
-//! ([`BufPool`]): sparse payloads serialize straight into the container
-//! bytes (one copy), `Sum` batches accumulate in place at offer time, and
-//! the sharded engine slices the pooled buffer zero-copy — the buffer
-//! recycles when its write commits. `CkptStats { bytes_copied, pool_hits,
-//! pool_misses }` make the copy discipline observable; see
-//! docs/STORAGE.md, "Write-path anatomy".
+//! The snapshot→encode→persist stages are the shared pipeline layer
+//! ([`crate::pipeline`]): an [`Encoder`] does pooled single-pass
+//! container encoding (sparse payloads serialize straight into container
+//! bytes, `Sum` batches accumulate in place at offer time), a [`Sink`]
+//! persists (direct or sharded-async, slicing the pooled buffer
+//! zero-copy), and `CkptStats { bytes_copied, pool_hits, pool_misses }`
+//! keep the copy discipline observable; see docs/STORAGE.md
+//! ("Write-path anatomy") and docs/PIPELINE.md (stage model).
+//!
+//! With `compact_every >= 2` a background [`Compactor`] additionally
+//! merges every run of that many persisted raw diff objects into one
+//! `MergedDiff` span, bounding recovery replay at `⌈n/merge_factor⌉`
+//! objects per chain (docs/PIPELINE.md, "Chain compaction").
 
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::checkpoint::batched::{BatchBuffer, BatchMode};
-use crate::checkpoint::diff::{write_diff_into, DiffPayload};
+use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::format::PayloadCodec;
-use crate::checkpoint::full::write_full_into;
 use crate::checkpoint::manifest::Manifest;
 use crate::coordinator::reusing_queue::ReusingQueue;
 use crate::optim::ModelState;
+use crate::pipeline::{Compactor, CompactorConfig, Encoded, Encoder, Sink};
 use crate::sparse::SparseGrad;
-use crate::storage::{Sharded, StorageBackend, WriteHandle};
+use crate::storage::{Sharded, StorageBackend};
 use crate::tensor::Flat;
-use crate::util::bufpool::{BufPool, PooledBuf};
+
+pub use crate::pipeline::CkptStats;
 
 /// What travels through the reusing queue to the checkpointing process.
 pub enum CkptItem {
@@ -49,63 +56,6 @@ pub enum CkptItem {
     DiffSparse(DiffPayload),
     /// full model-state snapshot
     Full(ModelState),
-}
-
-/// Counters shared with the training side / report.
-#[derive(Clone, Debug, Default)]
-pub struct CkptStats {
-    pub full_ckpts: u64,
-    pub diff_ckpts: u64,
-    pub writes: u64,
-    pub bytes_written: u64,
-    /// Direct mode: wall time inside synchronous puts. Engine mode: wall
-    /// time the checkpointer spent *blocked* on the writer pool (barriers
-    /// before GC / shutdown) — the overlap-visible cost, not device time.
-    pub write_secs: f64,
-    pub offload_secs: f64,
-    pub peak_buffered_bytes: usize,
-    pub errors: u64,
-    /// peak logical writes simultaneously in flight on the writer pool
-    pub inflight_peak: usize,
-    /// physical objects written by the sharded engine (shards + commit
-    /// records); 0 in direct mode
-    pub shard_writes: u64,
-    /// fast→durable tier traffic reported by the backend (Tiered), as of
-    /// checkpointer shutdown — late spills keep draining afterwards
-    pub spill_bytes: u64,
-    pub spill_errors: u64,
-    /// bytes moved between heap buffers on the write path after the sparse
-    /// compaction: encode output + Sum-mode accumulation traffic. The
-    /// pooled single-pass pipeline moves each payload once; the pre-change
-    /// pipeline moved it 3-4x (see docs/STORAGE.md, "Write-path anatomy").
-    pub bytes_copied: u64,
-    /// encode-buffer pool counters, as of checkpointer shutdown: hits are
-    /// recycled checkouts (steady state should be all hits)
-    pub pool_hits: u64,
-    pub pool_misses: u64,
-}
-
-impl CkptStats {
-    /// Component-wise aggregation: sums for counters, max for peaks. Used
-    /// to fold per-rank cluster stats into cluster-wide totals (and by
-    /// [`RunReport`](crate::coordinator::metrics::RunReport) absorption).
-    pub fn merge(&mut self, o: &CkptStats) {
-        self.full_ckpts += o.full_ckpts;
-        self.diff_ckpts += o.diff_ckpts;
-        self.writes += o.writes;
-        self.bytes_written += o.bytes_written;
-        self.write_secs += o.write_secs;
-        self.offload_secs += o.offload_secs;
-        self.peak_buffered_bytes = self.peak_buffered_bytes.max(o.peak_buffered_bytes);
-        self.errors += o.errors;
-        self.inflight_peak = self.inflight_peak.max(o.inflight_peak);
-        self.shard_writes += o.shard_writes;
-        self.spill_bytes += o.spill_bytes;
-        self.spill_errors += o.spill_errors;
-        self.bytes_copied += o.bytes_copied;
-        self.pool_hits += o.pool_hits;
-        self.pool_misses += o.pool_misses;
-    }
 }
 
 /// Handle to the running checkpointing process.
@@ -130,6 +80,9 @@ pub struct CkptConfig {
     pub n_shards: usize,
     /// storage writer-pool threads for the sharded engine
     pub writers: usize,
+    /// background chain compaction: merge every run of this many persisted
+    /// raw diff objects into one `MergedDiff` span; < 2 disables
+    pub compact_every: usize,
 }
 
 impl Default for CkptConfig {
@@ -143,6 +96,7 @@ impl Default for CkptConfig {
             gc: true,
             n_shards: 1,
             writers: 1,
+            compact_every: 0,
         }
     }
 }
@@ -199,136 +153,52 @@ impl Drop for Checkpointer {
     }
 }
 
-/// One logical write still in flight on the sharded engine.
-struct Inflight {
-    name: String,
-    bytes: u64,
-    handle: WriteHandle,
+/// The checkpointer's composition of the shared pipeline stages: encode
+/// (pooled), persist (direct or sharded-async), and the optional
+/// background chain compactor.
+struct WritePath {
+    enc: Encoder,
+    sink: Sink,
+    compactor: Option<Compactor>,
 }
 
-/// The checkpointer's storage sink: synchronous single-object puts, or the
-/// sharded async engine with completion reaping.
-enum Writer {
-    Direct(Arc<dyn StorageBackend>),
-    Engine { eng: Sharded, inflight: Vec<Inflight>, cap: usize },
-}
-
-impl Writer {
-    fn new(store: Arc<dyn StorageBackend>, cfg: &CkptConfig) -> Writer {
-        if cfg.uses_engine() {
-            Writer::Engine {
-                eng: Sharded::new(store, cfg.n_shards, cfg.writers),
-                inflight: Vec::new(),
-                cap: cfg.inflight_cap(),
-            }
-        } else {
-            Writer::Direct(store)
-        }
-    }
-
-    /// The logical object view (GC, recovery interop must see through the
-    /// shard layout).
-    fn view(&self) -> &dyn StorageBackend {
-        match self {
-            Writer::Direct(s) => s.as_ref(),
-            Writer::Engine { eng, .. } => eng,
-        }
-    }
-
-    /// Hand one encoded (pooled) buffer to storage. Direct mode writes
-    /// synchronously and the buffer recycles on drop right here; engine
-    /// mode shares it with the writer pool zero-copy — it recycles when
-    /// the commit finalizer releases the last reference.
-    fn submit(&mut self, buf: PooledBuf, name: String, stats: &Mutex<CkptStats>) {
-        match self {
-            Writer::Direct(store) => {
-                let t0 = Instant::now();
-                let res = store.put(&name, &buf);
-                let mut s = stats.lock().unwrap();
-                s.write_secs += t0.elapsed().as_secs_f64();
-                match res {
-                    Ok(()) => {
-                        s.writes += 1;
-                        s.bytes_written += buf.len() as u64;
-                    }
-                    Err(e) => {
-                        log::error!("checkpoint write {name} failed: {e:#}");
-                        s.errors += 1;
-                    }
-                }
-            }
-            Writer::Engine { eng, inflight, cap } => {
-                let len = buf.len() as u64;
-                let handle = eng.put_async(&name, buf);
-                inflight.push(Inflight { name, bytes: len, handle });
-                {
-                    let mut s = stats.lock().unwrap();
-                    s.inflight_peak = s.inflight_peak.max(inflight.len());
-                }
-                Self::reap(inflight, stats);
-                // backpressure: don't let encoded-but-unwritten checkpoints
-                // pile up without bound when the device is slower than the
-                // trainer — block on the oldest write past the cap, which
-                // propagates through the reusing queue as a visible stall
-                while inflight.len() > *cap {
-                    let w = inflight.remove(0);
-                    let t0 = Instant::now();
-                    let res = w.handle.wait();
-                    let mut dt_stats = stats.lock().unwrap();
-                    dt_stats.write_secs += t0.elapsed().as_secs_f64();
-                    drop(dt_stats);
-                    Self::account(&w.name, w.bytes, res, stats);
-                }
-            }
-        }
-    }
-
-    /// Harvest completed handles without blocking.
-    fn reap(inflight: &mut Vec<Inflight>, stats: &Mutex<CkptStats>) {
-        inflight.retain(|w| match w.handle.try_result() {
-            None => true,
-            Some(res) => {
-                Self::account(&w.name, w.bytes, res, stats);
-                false
-            }
+impl WritePath {
+    fn new(store: &Arc<dyn StorageBackend>, cfg: &CkptConfig) -> WritePath {
+        // one encode buffer per possible in-flight write, plus slack for
+        // the one being filled: steady state checks out recycled buffers
+        let enc = Encoder::new(cfg.model_sig, cfg.codec, cfg.inflight_cap() + 2);
+        let sink = Sink::new(Arc::clone(store), cfg.n_shards, cfg.writers, cfg.inflight_cap());
+        let compactor = (cfg.compact_every >= 2).then(|| {
+            // the compactor reads/writes LOGICAL objects on its own thread;
+            // in engine mode it gets its own 1-shard view of the store
+            let logical: Arc<dyn StorageBackend> = if cfg.uses_engine() {
+                Arc::new(Sharded::new(Arc::clone(store), 1, 1))
+            } else {
+                Arc::clone(store)
+            };
+            Compactor::spawn(
+                logical,
+                CompactorConfig {
+                    model_sig: cfg.model_sig,
+                    codec: cfg.codec,
+                    merge_factor: cfg.compact_every,
+                    // engine mode commits writes out of order: the newest
+                    // `inflight_cap` objects may sit beyond an invisible
+                    // in-flight write, so live passes must not touch them
+                    // (the shutdown pass, post-barrier, settles everything)
+                    settle_tail: if cfg.uses_engine() { cfg.inflight_cap() } else { 0 },
+                },
+            )
         });
+        WritePath { enc, sink, compactor }
     }
 
-    /// Block until every in-flight write committed (pre-GC / shutdown
-    /// barrier). No-op in direct mode.
-    fn barrier(&mut self, stats: &Mutex<CkptStats>) {
-        if let Writer::Engine { inflight, .. } = self {
-            let t0 = Instant::now();
-            for w in inflight.drain(..) {
-                let res = w.handle.wait();
-                Self::account(&w.name, w.bytes, res, stats);
-            }
-            stats.lock().unwrap().write_secs += t0.elapsed().as_secs_f64();
+    /// Persist one diff-chain object and wake the compactor.
+    fn submit_chain_object(&mut self, obj: Encoded, stats: &Mutex<CkptStats>) {
+        self.sink.submit(obj, stats);
+        if let Some(c) = &self.compactor {
+            c.notify();
         }
-    }
-
-    fn account(name: &str, bytes: u64, res: Result<(), String>, stats: &Mutex<CkptStats>) {
-        let mut s = stats.lock().unwrap();
-        match res {
-            Ok(()) => {
-                s.writes += 1;
-                s.bytes_written += bytes;
-            }
-            Err(e) => {
-                log::error!("checkpoint write {name} failed: {e}");
-                s.errors += 1;
-            }
-        }
-    }
-
-    /// Fold backend-level counters (shard fan-out, tier spill) into the
-    /// final stats snapshot.
-    fn finish(self, stats: &Mutex<CkptStats>) {
-        let sst = self.view().storage_stats();
-        let mut s = stats.lock().unwrap();
-        s.shard_writes = sst.physical_writes;
-        s.spill_bytes = sst.spill_bytes;
-        s.spill_errors = sst.spill_errors;
     }
 }
 
@@ -339,10 +209,7 @@ fn run_loop(
     stats: Arc<Mutex<CkptStats>>,
 ) {
     let mut batch = BatchBuffer::new(cfg.batch_mode, cfg.batch_size);
-    let mut writer = Writer::new(store, &cfg);
-    // one encode buffer per possible in-flight write, plus slack for the
-    // one being filled: steady state checks out only recycled buffers
-    let pool = BufPool::new(cfg.inflight_cap() + 2);
+    let mut wp = WritePath::new(&store, &cfg);
 
     while let Some(entry) = queue.get() {
         let step = entry.step;
@@ -356,29 +223,25 @@ fn run_loop(
         match item {
             CkptItem::DiffDense(dense) => {
                 let t0 = Instant::now();
-                let sparse = SparseGrad::from_dense(&dense); // offload/compact
+                let sparse = wp.enc.compact(&dense); // offload stage
                 drop(dense);
                 {
                     let mut s = stats.lock().unwrap();
                     s.offload_secs += t0.elapsed().as_secs_f64();
                     s.diff_ckpts += 1;
                 }
-                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut writer, &pool);
+                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut wp);
             }
             CkptItem::DiffSparse(payload) => {
                 stats.lock().unwrap().diff_ckpts += 1;
                 match payload {
                     DiffPayload::Gradient(g) => {
-                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut writer, &pool)
+                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut wp)
                     }
                     delta @ DiffPayload::StateDelta(_) => {
                         // Naive DC writes every delta unbatched (its cost)
-                        let mut buf = pool.checkout();
-                        match write_diff_into(&delta, cfg.model_sig, step, cfg.codec, &mut buf) {
-                            Ok(copied) => {
-                                stats.lock().unwrap().bytes_copied += copied as u64;
-                                writer.submit(buf, Manifest::diff_name(step), &stats)
-                            }
+                        match wp.enc.encode_diff(step, &delta) {
+                            Ok(obj) => wp.submit_chain_object(obj, &stats),
                             Err(e) => log::error!("encode diff {step}: {e:#}"),
                         }
                     }
@@ -386,19 +249,17 @@ fn run_loop(
             }
             CkptItem::Full(state) => {
                 // flush the pre-full chain first (order matters for GC)
-                flush_batch(&mut batch, &cfg, &stats, &mut writer, &pool);
-                let mut buf = pool.checkout();
-                match write_full_into(&state, cfg.model_sig, cfg.codec, &mut buf) {
-                    Ok(copied) => {
-                        stats.lock().unwrap().bytes_copied += copied as u64;
-                        writer.submit(buf, Manifest::full_name(state.step), &stats);
+                flush_batch(&mut batch, &stats, &mut wp);
+                match wp.enc.encode_full(&state) {
+                    Ok(obj) => {
+                        wp.sink.submit(obj, &stats);
                         stats.lock().unwrap().full_ckpts += 1;
                         if cfg.gc {
                             // GC keys on the newest durable full: drain the
                             // pool so it never deletes the chain a not-yet-
                             // committed full is supposed to supersede
-                            writer.barrier(&stats);
-                            if let Err(e) = Manifest::gc(writer.view()) {
+                            wp.sink.barrier(&stats);
+                            if let Err(e) = Manifest::gc(wp.sink.view()) {
                                 log::warn!("gc failed: {e:#}");
                             }
                         }
@@ -409,62 +270,47 @@ fn run_loop(
         }
     }
     // drain the final partial batch on close
-    flush_batch(&mut batch, &cfg, &stats, &mut writer, &pool);
+    flush_batch(&mut batch, &stats, &mut wp);
     // shutdown barrier: every enqueued write must commit (or report) before
     // `finish()` returns to the caller
-    writer.barrier(&stats);
+    wp.sink.barrier(&stats);
     {
         let mut s = stats.lock().unwrap();
-        s.pool_hits = pool.hits();
-        s.pool_misses = pool.misses();
+        s.pool_hits = wp.enc.pool_hits();
+        s.pool_misses = wp.enc.pool_misses();
     }
-    writer.finish(&stats);
+    // the compactor's shutdown pass runs after the barrier, so it sees
+    // every durable object and leaves the chain fully compacted
+    if let Some(c) = wp.compactor.take() {
+        let cst = c.finish();
+        let mut s = stats.lock().unwrap();
+        s.merged_written += cst.merged_written;
+        s.raw_compacted += cst.raw_compacted;
+    }
+    wp.sink.finish(&stats);
 }
 
 /// Drain the batch buffer into a pooled buffer in one encoding pass and
 /// submit it. No-op when the batch is empty.
-fn flush_batch(
-    batch: &mut BatchBuffer,
-    cfg: &CkptConfig,
-    stats: &Arc<Mutex<CkptStats>>,
-    writer: &mut Writer,
-    pool: &BufPool,
-) {
-    if batch.is_empty() {
-        return;
-    }
-    let mut buf = pool.checkout();
-    match batch.flush_into(cfg.model_sig, cfg.codec, &mut buf) {
-        Ok(Some((lo, hi, copied))) => {
-            {
-                let mut s = stats.lock().unwrap();
-                s.bytes_copied += copied as u64 + batch.take_copied();
-            }
-            writer.submit(buf, Manifest::batch_name(lo, hi), stats);
-        }
+fn flush_batch(batch: &mut BatchBuffer, stats: &Arc<Mutex<CkptStats>>, wp: &mut WritePath) {
+    match wp.enc.encode_batch(batch) {
+        Ok(Some(obj)) => wp.submit_chain_object(obj, stats),
         Ok(None) => {}
         Err(e) => log::error!("encode batch: {e:#}"),
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn handle_sparse(
     step: u64,
     sparse: SparseGrad,
     batch: &mut BatchBuffer,
     cfg: &CkptConfig,
     stats: &Arc<Mutex<CkptStats>>,
-    writer: &mut Writer,
-    pool: &BufPool,
+    wp: &mut WritePath,
 ) {
     if cfg.batch_size <= 1 {
-        let mut buf = pool.checkout();
-        let payload = DiffPayload::Gradient(sparse);
-        match write_diff_into(&payload, cfg.model_sig, step, cfg.codec, &mut buf) {
-            Ok(copied) => {
-                stats.lock().unwrap().bytes_copied += copied as u64;
-                writer.submit(buf, Manifest::diff_name(step), stats)
-            }
+        match wp.enc.encode_diff(step, &DiffPayload::Gradient(sparse)) {
+            Ok(obj) => wp.submit_chain_object(obj, stats),
             Err(e) => log::error!("encode diff {step}: {e:#}"),
         }
         return;
@@ -475,7 +321,7 @@ fn handle_sparse(
         s.peak_buffered_bytes = s.peak_buffered_bytes.max(batch.buffered_bytes());
     }
     if full {
-        flush_batch(batch, cfg, stats, writer, pool);
+        flush_batch(batch, stats, wp);
     }
 }
 
@@ -695,6 +541,41 @@ mod tests {
         // Concat batching copies each payload exactly once on its way to
         // storage, so copied bytes == logical bytes written
         assert_eq!(stats.bytes_copied, stats.bytes_written);
+    }
+
+    #[test]
+    fn compaction_bounds_replay_objects_and_recovers_identically() {
+        let n = 150;
+        let run = |compact_every: usize| {
+            let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+            let mut c = cfg(n, 1);
+            c.compact_every = compact_every;
+            let ck = Checkpointer::spawn(Arc::clone(&store), c);
+            let mut rng = Rng::new(77);
+            ck.queue
+                .put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.5; n])))));
+            for step in 1..=9u64 {
+                ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+            }
+            (store, ck.finish())
+        };
+        let (plain_store, plain_stats) = run(0);
+        let (cmp_store, cmp_stats) = run(3);
+        assert_eq!(plain_stats.merged_written, 0);
+        assert_eq!(cmp_stats.merged_written, 3, "9 diffs at mf=3 -> 3 merged spans");
+        assert_eq!(cmp_stats.raw_compacted, 9);
+
+        let adam = Adam::default();
+        let sig = model_signature("t", n);
+        let (a, astats) =
+            recover(plain_store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+        let (b, bstats) =
+            recover(cmp_store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(a, b, "compacted replay must be bit-identical");
+        assert_eq!(astats.n_diff_objects, 9);
+        assert_eq!(bstats.n_diff_objects, 3, "replay fetches merged spans, not raw diffs");
+        assert_eq!(bstats.n_diff_steps, 9, "every step still replays");
+        assert_eq!(bstats.recovered_step, 9);
     }
 
     #[test]

@@ -81,12 +81,22 @@ pub struct AdaptiveTuner {
     pub iter_time: f64,
     pub fcf_interval: u64,
     pub batch_size: usize,
+    /// uncompacted per-diff replay cost (R_D as configured);
+    /// [`observe_compaction`](AdaptiveTuner::observe_compaction) scales
+    /// `params.r_diff` below this as merged spans shorten the chain
+    r_diff_base: f64,
 }
 
 impl AdaptiveTuner {
     pub fn new(params: SystemParams, iter_time: f64) -> AdaptiveTuner {
         let (fcf, bs) = optimal_config_integer(&params, iter_time);
-        AdaptiveTuner { params, iter_time, fcf_interval: fcf, batch_size: bs }
+        AdaptiveTuner {
+            r_diff_base: params.r_diff,
+            params,
+            iter_time,
+            fcf_interval: fcf,
+            batch_size: bs,
+        }
     }
 
     /// Feed fresh runtime observations; config moves one step per call
@@ -97,6 +107,24 @@ impl AdaptiveTuner {
         let (want_fcf, want_bs) = optimal_config_integer(&self.params, self.iter_time);
         self.fcf_interval = step_toward(self.fcf_interval as i64, want_fcf as i64).max(1) as u64;
         self.batch_size = step_toward(self.batch_size as i64, want_bs as i64).max(1) as usize;
+    }
+
+    /// Feedback from the background chain compactor: replaying `raw_steps`
+    /// differential steps touched only `objects_replayed` storage objects
+    /// (merged spans batch per-object fetch/decode overhead, which is what
+    /// R_D models), so the effective per-step merge cost shrinks by that
+    /// ratio. Eq. (8)'s `R_D/2·(1/(f·b)−1)` recovery term — the one that
+    /// dominates at high checkpoint frequency — shrinks with it, and the
+    /// Eq. (10) optimum moves toward *less* frequent full checkpoints
+    /// (f* ∝ ∛R_D): compaction lets the same wasted-time budget buy a
+    /// longer, cheaper-to-replay chain.
+    pub fn observe_compaction(&mut self, raw_steps: u64, objects_replayed: u64) {
+        if raw_steps == 0 {
+            return;
+        }
+        let floor = 1.0 / raw_steps.max(1) as f64;
+        let ratio = (objects_replayed as f64 / raw_steps as f64).clamp(floor, 1.0);
+        self.params.r_diff = self.r_diff_base * ratio;
     }
 }
 
@@ -112,6 +140,9 @@ fn step_toward(cur: i64, want: i64) -> i64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
 
     fn params() -> SystemParams {
         // GPT2-L-flavored numbers: S = 8.7 GB, W = 2.5 GB/s,
@@ -203,6 +234,107 @@ mod tests {
         let (fcf, bs) = optimal_config_integer(&p, 1.9);
         assert!(fcf >= 1 && fcf < 100_000);
         assert!((1..=64).contains(&bs));
+    }
+
+    /// Plausible random system parameters for the property tests.
+    fn arb_params(rng: &mut Rng) -> SystemParams {
+        let write_bw = 1e8 + rng.next_f64() * 1e10;
+        let full_size = 1e8 + rng.next_f64() * 2e10;
+        SystemParams {
+            n_gpus: 1.0 + (rng.range(0, 128) as f64),
+            mtbf: 60.0 + rng.next_f64() * 36_000.0,
+            write_bw,
+            full_size,
+            total_time: 1e4 + rng.next_f64() * 1e6,
+            r_full: full_size / write_bw,
+            r_diff: 0.01 + rng.next_f64() * 2.0,
+        }
+    }
+
+    #[test]
+    fn wasted_time_monotone_in_r_diff_property() {
+        // The compaction feedback hook is sound only if lowering the
+        // effective R_D can never RAISE modeled wasted time. That holds
+        // whenever the chain is longer than one diff per recovery
+        // (f·b < 1), which is the entire frequent-checkpointing regime
+        // Eq. (8) models.
+        prop_check("wasted_time_monotone_r_diff", 64, |rng| {
+            let mut p = arb_params(rng);
+            let b = 1.0 + (rng.range(0, 8) as f64);
+            // f·b < 1 by construction
+            let f = (rng.next_f64() * 0.99 / b).max(1e-9);
+            let r_lo = 0.01 + rng.next_f64();
+            let r_hi = r_lo + 0.01 + rng.next_f64();
+            p.r_diff = r_lo;
+            let w_lo = wasted_time(&p, f, b);
+            p.r_diff = r_hi;
+            let w_hi = wasted_time(&p, f, b);
+            prop_assert!(
+                w_hi >= w_lo,
+                "wasted_time must not decrease in r_diff: {w_lo} -> {w_hi} (f={f}, b={b})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stepwise_tuner_converges_to_closed_form_property() {
+        // from any perturbed start, repeated observations of fixed runtime
+        // metrics walk (FCF, BS) to within one step of the Eq. (10)
+        // integer optimum
+        prop_check("tuner_converges_closed_form", 24, |rng| {
+            let p = arb_params(rng);
+            let iter_time = 0.1 + rng.next_f64() * 5.0;
+            let mut t = AdaptiveTuner::new(p, iter_time);
+            let (want_fcf, want_bs) = optimal_config_integer(&p, iter_time);
+            t.fcf_interval = (want_fcf * (1 + rng.range(0, 64) as u64)).max(1);
+            t.batch_size = rng.range(1, 512);
+            for _ in 0..600 {
+                t.observe(p.mtbf, p.write_bw);
+            }
+            prop_assert!(
+                (t.fcf_interval as i64 - want_fcf as i64).abs() <= 1,
+                "fcf {} !~ {want_fcf}",
+                t.fcf_interval
+            );
+            prop_assert!(
+                (t.batch_size as i64 - want_bs as i64).abs() <= 1,
+                "bs {} !~ {want_bs}",
+                t.batch_size
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compaction_feedback_lowers_r_diff_and_full_frequency() {
+        let p = params();
+        let mut t = AdaptiveTuner::new(p, 1.9);
+        let (f_before, _) = optimal_config(&t.params);
+        let w_before = {
+            let (f, b) = optimal_config(&t.params);
+            wasted_time(&t.params, f, b)
+        };
+        // the compactor reports: 8 raw steps replayed as 2 merged objects
+        t.observe_compaction(8, 2);
+        assert!((t.params.r_diff - p.r_diff * 0.25).abs() < 1e-12);
+        let (f_after, _) = optimal_config(&t.params);
+        assert!(
+            f_after < f_before,
+            "cheaper replay must lower the optimal full-checkpoint frequency"
+        );
+        let w_after = {
+            let (f, b) = optimal_config(&t.params);
+            wasted_time(&t.params, f, b)
+        };
+        assert!(w_after < w_before, "compaction must lower modeled wasted time at the optimum");
+        // uncompacted report restores the base cost; ratios clamp to (0, 1]
+        t.observe_compaction(8, 8);
+        assert_eq!(t.params.r_diff, p.r_diff);
+        t.observe_compaction(8, 20);
+        assert_eq!(t.params.r_diff, p.r_diff, "ratio clamps at 1");
+        t.observe_compaction(0, 0);
+        assert_eq!(t.params.r_diff, p.r_diff, "empty report is a no-op");
     }
 
     #[test]

@@ -125,6 +125,10 @@ pub struct TrainConfig {
     /// + two-phase global commit) instead of the single checkpointer —
     /// LowDiff strategy only
     pub ranks: usize,
+    /// background chain compaction: merge every run of this many persisted
+    /// raw diff objects into one `MergedDiff` span (bounds recovery replay
+    /// at ⌈n/compact_every⌉ objects per chain); < 2 disables
+    pub compact_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -148,6 +152,7 @@ impl Default for TrainConfig {
             n_shards: 1,
             writers: 1,
             ranks: 1,
+            compact_every: 0,
         }
     }
 }
@@ -512,6 +517,7 @@ fn spawn_procs(
         gc: true,
         n_shards: cfg.n_shards,
         writers: cfg.writers,
+        compact_every: cfg.compact_every,
     };
     match cfg.strategy {
         StrategyKind::None => Procs::NoneAtAll,
@@ -532,6 +538,7 @@ fn spawn_procs(
                         writers: cfg.writers,
                         gc: true,
                         queue_capacity: cfg.queue_capacity,
+                        compact_every: cfg.compact_every,
                     },
                 ),
             }
@@ -546,11 +553,18 @@ fn spawn_procs(
             ),
         },
         StrategyKind::Gemini => Procs::Gemini {
-            // the memory tier stays single-object: software-failure
-            // recovery reads it raw, and sharding a memcpy buys nothing
+            // the memory tier stays single-object and uncompacted:
+            // software-failure recovery reads it raw, and sharding or
+            // compacting a memcpy buys nothing
             mem: Checkpointer::spawn(
                 Arc::clone(mem_tier),
-                CkptConfig { batch_size: 1, n_shards: 1, writers: 1, ..base.clone() },
+                CkptConfig {
+                    batch_size: 1,
+                    n_shards: 1,
+                    writers: 1,
+                    compact_every: 0,
+                    ..base.clone()
+                },
             ),
             disk: Checkpointer::spawn(Arc::clone(store), base),
         },
@@ -608,16 +622,21 @@ fn handle_failure(
         }
         (Procs::Cluster { cluster }, _) => {
             // any failure kills the rank processes and the coordinator;
-            // recovery is the consistent cut over the per-rank chains
+            // recovery is the consistent cut over the per-rank chains,
+            // with the reshard safety net as the crash-window fallback
             drop(cluster);
-            match cluster::recover_cluster(store, sig, adam) {
+            match cluster::recover_cluster_or_net(store, sig, adam) {
                 Ok((s, stats)) => {
-                    log::debug!(
-                        "cluster recovery: cut step {} across {} ranks ({} diff steps)",
-                        stats.cut_step,
-                        stats.ranks,
-                        stats.diff_steps_applied
-                    );
+                    if let Some(stats) = stats {
+                        log::debug!(
+                            "cluster recovery: cut step {} across {} ranks ({} diff steps)",
+                            stats.cut_step,
+                            stats.ranks,
+                            stats.diff_steps_applied
+                        );
+                    } else {
+                        log::debug!("cluster recovery: reshard safety net at step {}", s.step);
+                    }
                     // drop torn-commit stragglers from the lost timeline
                     let _ = cluster::truncate_stragglers(store, s.step);
                     Ok((s, false))
@@ -685,6 +704,10 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             report.bytes_written += cs.record_bytes;
             report.global_commits += cs.global_commits;
             report.torn_commits += cs.torn_commits;
+            // coordinator-run compaction counters live on the cluster, not
+            // any one rank's CkptStats
+            report.merged_written += cs.merged_written;
+            report.raw_compacted += cs.raw_compacted;
         }
         Procs::Plus { plus } => {
             let s = plus.finish();

@@ -19,11 +19,11 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::checkpoint::format::PayloadCodec;
-use crate::checkpoint::full::write_full;
 use crate::checkpoint::manifest::Manifest;
 use crate::coordinator::reusing_queue::ReusingQueue;
 use crate::model::Layout;
 use crate::optim::{Adam, ModelState};
+use crate::pipeline::{CkptStats, Encoder, Sink};
 use crate::storage::StorageBackend;
 use crate::tensor::Flat;
 
@@ -134,6 +134,12 @@ impl LowDiffPlus {
         let assembler = std::thread::Builder::new()
             .name("lowdiff+".into())
             .spawn(move || {
+                // shared pipeline stages for replica persistence: pooled
+                // single-pass full encoding + a direct sink (the replica is
+                // one object; sharding a memcpy-sized write buys nothing)
+                let enc = Encoder::new(cfg.model_sig, cfg.codec, 2);
+                let mut sink = Sink::new(store, 1, 1, 2);
+                let mut wstats = CkptStats::default();
                 let mut pending = 0usize;
                 let mut cur_step = 0u64;
                 while let Some(entry) = q.get() {
@@ -180,19 +186,23 @@ impl LowDiffPlus {
                         }
                         applied.store(cur_step, Ordering::Release);
                         // asynchronous persistence of the replica (the
-                        // paper's fused full+diff batching, Fig. 8)
+                        // paper's fused full+diff batching, Fig. 8),
+                        // through the shared encode→persist stages
                         if let Some(state) = snapshot_state {
                             let t0 = Instant::now();
-                            match write_full(&state, cfg.model_sig, cfg.codec) {
-                                Ok(bytes) => {
-                                    let name = Manifest::full_name(state.step);
-                                    if store.put(&name, &bytes).is_ok() {
+                            match enc.encode_full(&state) {
+                                Ok(obj) => {
+                                    let bytes = obj.buf.len() as u64;
+                                    if sink.persist_durable(obj, &mut wstats).is_ok() {
                                         let mut s = st.lock().unwrap();
                                         s.persisted += 1;
-                                        s.bytes_written += bytes.len() as u64;
+                                        s.bytes_written += bytes;
                                         s.write_secs += t0.elapsed().as_secs_f64();
                                     }
-                                    let _ = Manifest::gc(store.as_ref());
+                                    // outside the stats lock (GC does
+                                    // storage I/O), and even after a failed
+                                    // put — obsolete fulls must not pile up
+                                    let _ = Manifest::gc(sink.view());
                                 }
                                 Err(e) => log::error!("persist replica: {e:#}"),
                             }

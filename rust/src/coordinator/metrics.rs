@@ -42,6 +42,10 @@ pub struct RunReport {
     /// encode-buffer pool counters (recycled vs fresh checkouts)
     pub pool_hits: u64,
     pub pool_misses: u64,
+    /// merged differential spans written by the background chain compactor
+    pub merged_written: u64,
+    /// raw diff objects superseded (and collected) by merged spans
+    pub raw_compacted: u64,
     /// fast→durable tier spill traffic (Tiered backend)
     pub spill_bytes: u64,
     /// peak logical checkpoint writes in flight on the writer pool
@@ -86,6 +90,8 @@ impl RunReport {
         self.pool_misses += s.pool_misses;
         self.spill_bytes += s.spill_bytes;
         self.inflight_peak = self.inflight_peak.max(s.inflight_peak);
+        self.merged_written += s.merged_written;
+        self.raw_compacted += s.raw_compacted;
     }
 
     /// Checkpointing overhead relative to pure compute+sync (the paper's

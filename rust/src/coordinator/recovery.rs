@@ -14,12 +14,12 @@
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::checkpoint::batched::read_batched;
-use crate::checkpoint::diff::{read_diff, DiffPayload};
-use crate::checkpoint::format::{CkptKind, ContainerView};
+use crate::checkpoint::diff::DiffPayload;
+use crate::checkpoint::format::CkptKind;
 use crate::checkpoint::full::read_full;
+use crate::checkpoint::read_chain_object;
 use crate::checkpoint::manifest::Manifest;
 use crate::optim::{Adam, ModelState};
 use crate::sparse::SparseGrad;
@@ -45,6 +45,11 @@ pub struct RecoveryStats {
     pub damaged_objects: usize,
     /// diff steps dropped by chain truncation (damage or a step gap)
     pub dropped_diff_steps: usize,
+    /// chain objects that were compacted `MergedDiff` spans — with the
+    /// background compactor at merge factor m, `n_diff_objects` is bounded
+    /// by ⌈steps/m⌉ plus a raw tail while `n_diff_steps` stays the full
+    /// replay count
+    pub merged_objects: usize,
 }
 
 /// Parallel object fetch: shard-aware backends ([`Sharded`]
@@ -99,19 +104,7 @@ fn load_diffs(
     if chain.diffs.is_empty() {
         return Ok(Vec::new());
     }
-    // smallest adjacent spacing = the chain's stride; falls back to the
-    // base→first hop for single-object chains
-    let first_lo = chain.diffs[0].0;
-    let mut stride = first_lo.saturating_sub(base_step).max(1);
-    if chain.diffs.len() >= 2 {
-        let mut adj = u64::MAX;
-        for w in chain.diffs.windows(2) {
-            let prev_hi = w[0].1;
-            let lo = w[1].0;
-            adj = adj.min(lo.saturating_sub(prev_hi));
-        }
-        stride = adj.max(1);
-    }
+    let stride = chain.stride(base_step);
 
     let names: Vec<&str> = chain.diffs.iter().map(|(_, _, n)| n.as_str()).collect();
     let fetched = fetch_objects(store, &names);
@@ -132,26 +125,19 @@ fn load_diffs(
             truncate_from = Some(i);
             break;
         }
-        let parsed = bytes.map_err(anyhow::Error::msg).and_then(|b| {
-            // borrowing parse: kind dispatch must not duplicate the payload
-            // (read_diff/read_batched re-parse, but also borrow)
-            let kind = ContainerView::parse(&b)?.kind;
-            // batched containers hold several steps; plain diffs one
-            match kind {
-                CkptKind::Diff => {
-                    let (step, payload) = read_diff(&b, model_sig)?;
-                    Ok(vec![(step, payload)])
-                }
-                CkptKind::BatchedDiff => Ok(read_batched(&b, model_sig)?
-                    .into_iter()
-                    .map(|(step, grad)| (step, DiffPayload::Gradient(grad)))
-                    .collect()),
-                CkptKind::Full => bail!("full checkpoint {name} in diff chain"),
-            }
-        });
+        // the shared kind dispatch: batched/merged containers hold several
+        // steps, plain diffs one; Full in a diff chain is an error
+        let parsed = bytes
+            .map_err(anyhow::Error::msg)
+            .and_then(|b| read_chain_object(&b, model_sig));
         match parsed {
-            Ok(items) => {
-                out.extend(items);
+            Ok((kind, items)) => {
+                if kind == CkptKind::MergedDiff {
+                    stats.merged_objects += 1;
+                }
+                // a span may straddle the base full (compacted before the
+                // full became visible): replay only the steps after it
+                out.extend(items.into_iter().filter(|(s, _)| *s > base_step));
                 prev_hi = *hi;
             }
             Err(e) => {
@@ -288,7 +274,7 @@ pub fn pairwise_merge(mut items: Vec<SparseGrad>) -> (SparseGrad, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::checkpoint::diff::write_diff;
+    use crate::checkpoint::diff::{read_diff, write_diff};
     use crate::checkpoint::format::{model_signature, PayloadCodec};
     use crate::checkpoint::full::write_full;
     use crate::compress::topk_mask;
@@ -452,6 +438,80 @@ mod tests {
         assert_eq!(got.step, 2, "stop before the damaged object");
         assert_eq!(stats.damaged_objects, 1);
         assert_eq!(stats.dropped_diff_steps, 3, "steps 3,4,5 dropped");
+    }
+
+    /// Hand-compact diffs `lo..=hi` of a built chain into one merged span.
+    fn compact_by_hand(store: &MemStore, sig: u64, lo: u64, hi: u64) {
+        use crate::checkpoint::merged::write_merged;
+        let items: Vec<(u64, DiffPayload)> = (lo..=hi)
+            .map(|s| read_diff(&store.get(&Manifest::diff_name(s)).unwrap(), sig).unwrap())
+            .collect();
+        store
+            .put(
+                &Manifest::merged_name(lo, hi),
+                &write_merged(&items, sig, lo, hi, PayloadCodec::Raw).unwrap(),
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn merged_spans_replay_bit_identically_even_with_leftover_raws() {
+        let (store, sig, want) = build_gradient_chain(150, 6);
+        // compact diffs 1..=4; a "crash" left raw diff 2 undeleted
+        compact_by_hand(&store, sig, 1, 4);
+        for s in [1u64, 3, 4] {
+            store.delete(&Manifest::diff_name(s)).unwrap();
+        }
+        let (got, stats) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(got, want, "merged replay must be bit-identical");
+        assert_eq!(stats.n_diff_objects, 3, "merged(1,4) + diffs 5,6");
+        assert_eq!(stats.merged_objects, 1);
+        assert_eq!(stats.n_diff_steps, 6);
+        assert_eq!(stats.recovered_step, 6);
+    }
+
+    #[test]
+    fn merged_span_straddling_the_base_full_replays_only_later_steps() {
+        // the async-engine race: diffs 3..6 were compacted before the full
+        // at step 4 became visible. Discovery keeps the straddling span
+        // (hi > base); replay must apply only steps 5,6 — bit-identically.
+        let (store, sig, want) = build_gradient_chain(150, 6);
+        compact_by_hand(&store, sig, 3, 6);
+        for s in 3..=6u64 {
+            store.delete(&Manifest::diff_name(s)).unwrap();
+        }
+        // same seed ⇒ identical prefix: the state after 4 steps is the
+        // exact mid-chain full that lands late
+        let (_, _, mid) = build_gradient_chain(150, 4);
+        store
+            .put(&Manifest::full_name(4), &write_full(&mid, sig, PayloadCodec::Raw).unwrap())
+            .unwrap();
+        let (got, stats) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(got, want, "steps 5,6 replay from inside the straddling span");
+        assert_eq!(stats.recovered_step, 6);
+        assert_eq!(stats.n_diff_steps, 2, "steps <= base are skipped, not re-applied");
+        assert_eq!(stats.merged_objects, 1);
+    }
+
+    #[test]
+    fn damaged_merged_span_truncates_to_the_base() {
+        let (store, sig, _) = build_gradient_chain(120, 4);
+        compact_by_hand(&store, sig, 1, 4);
+        for s in 1..=4u64 {
+            store.delete(&Manifest::diff_name(s)).unwrap();
+        }
+        let name = Manifest::merged_name(1, 4);
+        let mut bytes = store.get(&name).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        store.put(&name, &bytes).unwrap();
+        let (got, stats) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(got.step, 0, "truncate at the base, never replay a damaged span");
+        assert_eq!(stats.damaged_objects, 1);
+        assert_eq!(stats.dropped_diff_steps, 4);
     }
 
     #[test]

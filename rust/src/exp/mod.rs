@@ -546,6 +546,85 @@ pub fn exp_cluster() -> Table {
     t
 }
 
+/// Chain-compaction scan (real path, not simulated): one fixed training
+/// timeline (anchor full + 24 diffs) persisted through the checkpointer
+/// at several compaction merge factors, then recovered. Columns report
+/// the incremental-merging payoff: chain objects on the store, objects a
+/// replay fetches, merged spans written — and that the recovered state
+/// stays bit-identical to the uncompacted chain.
+pub fn exp_compaction() -> Table {
+    use crate::checkpoint::batched::BatchMode;
+    use crate::checkpoint::format::{model_signature, PayloadCodec};
+    use crate::compress::topk_mask;
+    use crate::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
+    use crate::coordinator::recovery::{recover, RecoveryMode};
+    use crate::optim::{Adam, ModelState};
+    use crate::storage::{MemStore, StorageBackend};
+    use crate::tensor::Flat;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    let n: usize = 8 * 1024;
+    let steps: u64 = 24;
+    let sig = model_signature("compaction-exp", n);
+    let run = |compact_every: usize| {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let cfg = CkptConfig {
+            model_sig: sig,
+            batch_mode: BatchMode::Concat,
+            codec: PayloadCodec::Raw,
+            gc: false,
+            compact_every,
+            ..CkptConfig::default()
+        };
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg);
+        let mut rng = Rng::new(31);
+        ck.queue
+            .put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.2; n])))));
+        for step in 1..=steps {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            ck.queue
+                .put(step, Arc::new(CkptItem::DiffDense(topk_mask(&Flat(g), n / 100 + 1))));
+        }
+        let stats = ck.finish();
+        let (state, rstats) =
+            recover(store.as_ref(), sig, &Adam::default(), RecoveryMode::SerialReplay)
+                .expect("compaction-exp recovery");
+        (store, stats, state, rstats)
+    };
+
+    let mut t = Table::new(
+        "Chain compaction — replay objects touched vs merge factor (24 diffs)",
+        &["merge factor", "chain objects", "replay objects", "merged spans", "bit-identical"],
+    );
+    // the mf=0 row doubles as the bit-identity baseline (one run, not two)
+    let mut baseline: Option<ModelState> = None;
+    for mf in [0usize, 2, 4, 8] {
+        let (store, stats, state, rstats) = run(mf);
+        let baseline = baseline.get_or_insert_with(|| state.clone());
+        let chain_objects = store
+            .list()
+            .unwrap()
+            .iter()
+            .filter(|name| {
+                matches!(
+                    crate::checkpoint::manifest::Manifest::step_range(name),
+                    Some(("diff", _, _)) | Some(("batch", _, _)) | Some(("merged", _, _))
+                )
+            })
+            .count();
+        t.row(vec![
+            if mf < 2 { "off".into() } else { mf.to_string() },
+            chain_objects.to_string(),
+            rstats.n_diff_objects.to_string(),
+            stats.merged_written.to_string(),
+            if state == *baseline { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t
+}
+
 /// All simulated experiments, in paper order.
 pub fn all_simulated() -> Vec<Table> {
     vec![fig1(), fig4(), table1(), exp1(), exp2(), exp3(), exp4(), exp7(), exp8(), exp9(), exp10()]
@@ -566,6 +645,7 @@ pub fn by_name(name: &str) -> Option<Table> {
         "exp10" => exp10(),
         "sharded" => exp_sharded(),
         "cluster" => exp_cluster(),
+        "compaction" => exp_compaction(),
         _ => return None,
     })
 }
@@ -636,10 +716,35 @@ mod tests {
 
     #[test]
     fn by_name_covers_all() {
-        for n in ["fig1", "fig4", "table1", "exp1", "exp2", "exp3", "exp4", "exp7", "exp8", "exp9", "exp10", "sharded", "cluster"] {
+        let names = [
+            "fig1", "fig4", "table1", "exp1", "exp2", "exp3", "exp4", "exp7", "exp8", "exp9",
+            "exp10", "sharded", "cluster", "compaction",
+        ];
+        for n in names {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn compaction_table_bounds_replay_and_stays_bit_identical() {
+        let t = exp_compaction();
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            assert_eq!(row[4], "yes", "compacted recovery diverged: {row:?}");
+            let replay: u64 = row[2].parse().unwrap();
+            if row[0] == "off" {
+                assert_eq!(replay, 24, "uncompacted replay touches every diff");
+            } else {
+                let mf: u64 = row[0].parse().unwrap();
+                assert!(
+                    replay <= 24_u64.div_ceil(mf) + 1,
+                    "mf={mf}: replay objects {replay} above the compaction bound"
+                );
+                let merged: u64 = row[3].parse().unwrap();
+                assert_eq!(merged, 24 / mf, "every complete run must merge");
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod exp;
 pub mod model;
 pub mod optim;
+pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod simnet;

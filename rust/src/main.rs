@@ -32,10 +32,13 @@ commands:
            [--writers W]  storage writer-pool threads for the sharded engine
            [--ranks R]    cluster ranks (>1 = per-rank chains + two-phase
                           global commit; lowdiff strategy only)
+           [--compact-every M]  background chain compaction: merge every M
+                          persisted raw diffs into one MergedDiff span
+                          (bounds recovery replay; M < 2 disables)
            [--fsync]      fsync files AND parent dir on every put (durable)
   recover  --model <name> --ckpt-dir DIR [--parallel]
-           (reads sharded and single-object layouts transparently)
-  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|all>
+           (reads sharded, single-object and compacted layouts transparently)
+  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|compaction|all>
   info     --model <name>
 ";
 
@@ -84,6 +87,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         n_shards: args.parse_or("shards", 1usize)?,
         writers: args.parse_or("writers", 1usize)?,
         ranks: args.parse_or("ranks", 1usize)?,
+        compact_every: args.parse_or("compact-every", 0usize)?,
         ..TrainConfig::default()
     };
     if cfg.ranks > 1 && !cfg.uses_cluster() {

@@ -1,0 +1,517 @@
+//! Background chain compaction — the incremental-merging persistence
+//! strategy (paper §VI-B; Check-N-Run arXiv:2010.08679 and "On Efficient
+//! Constructions of Checkpoints" arXiv:2009.13003 both consolidate
+//! incrementals in the background to keep per-iteration differentials
+//! sustainable).
+//!
+//! Without compaction, the differential chain grows linearly with
+//! checkpoint frequency until the next full epoch, and so does recovery
+//! replay and GC pressure — the `R_D/2·(1/(f·b)−1)` term that dominates
+//! Eq. (8). The compactor merges runs of `merge_factor` adjacent raw
+//! diff/batch objects into one
+//! [`MergedDiff`](crate::checkpoint::format::CkptKind) container
+//! ([`crate::checkpoint::merged`]), bounding replay at
+//! `⌈n/merge_factor⌉ (+ a partial tail)` objects while keeping the
+//! reconstructed state **bit-identical** (every per-step payload is
+//! preserved).
+//!
+//! ## Collectibility invariant
+//!
+//! A raw object is deleted ONLY after the covering merged object is
+//! durable **and read back verified**. Every failure mode degrades to the
+//! uncompacted chain, never to a holed one:
+//! - merged put fails → no deletes, raw chain intact;
+//! - merged put is torn (reports success, truncated bytes) → read-back
+//!   verification fails, the merged object is removed, raw chain intact;
+//! - crash after the merged write, before (some) deletes → merged span
+//!   and raws coexist; chain discovery's cover selection
+//!   ([`Manifest::select_cover`]) prefers the merged span and the
+//!   leftover raws are redundant garbage the next pass/GC sweeps.
+
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::checkpoint::diff::DiffPayload;
+use crate::checkpoint::format::{CkptKind, PayloadCodec};
+use crate::checkpoint::manifest::{Chain, Manifest};
+use crate::checkpoint::merged::write_merged;
+use crate::checkpoint::read_chain_object;
+use crate::storage::StorageBackend;
+
+/// Configuration of a compaction pass / background compactor.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactorConfig {
+    /// model (or rank) signature the chain's containers carry
+    pub model_sig: u64,
+    pub codec: PayloadCodec,
+    /// merge this many adjacent raw chain objects into one merged span;
+    /// < 2 disables compaction
+    pub merge_factor: usize,
+    /// exclude the newest `settle_tail` chain objects from merging. With
+    /// an async multi-writer engine a write can still be in flight
+    /// (invisible) while up to `inflight_cap - 1` *later* writes already
+    /// committed, so the newest objects may sit beyond a hole that is not
+    /// yet a hole — merging across it would permanently drop the late
+    /// step. Set to the engine's in-flight cap for live passes; 0 when
+    /// every object at the pass horizon is known durable (direct mode,
+    /// the post-barrier shutdown pass, cluster post-commit passes).
+    pub settle_tail: usize,
+}
+
+/// Compaction counters.
+#[derive(Clone, Debug, Default)]
+pub struct CompactStats {
+    pub passes: u64,
+    /// merged containers written (and verified)
+    pub merged_written: u64,
+    /// raw objects superseded and deleted
+    pub raw_compacted: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// merged writes that failed read-back verification (raw chain kept)
+    pub aborted_merges: u64,
+}
+
+/// One compaction pass over an already-discovered chain on a *logical*
+/// store view (shard-aware when the write path shards). Each maximal run
+/// of adjacent raw (non-merged) objects not in `protect` is merged in
+/// chunks of `merge_factor`; with `merge_tail` a trailing partial chunk of
+/// ≥ 2 objects is merged too (the shutdown/commit-gated passes use this so
+/// replay lands within the `⌈n/merge_factor⌉ + 1` bound), otherwise the
+/// tail stays raw awaiting more diffs. Returns merged objects written.
+pub fn compact_chain(
+    store: &dyn StorageBackend,
+    chain: &Chain,
+    cfg: &CompactorConfig,
+    protect: &HashSet<String>,
+    merge_tail: bool,
+    stats: &mut CompactStats,
+) -> Result<usize> {
+    if cfg.merge_factor < 2 {
+        return Ok(0);
+    }
+    stats.passes += 1;
+    let diffs = &chain.diffs;
+    // the shared stride heuristic ([`Chain::stride`]): a jump larger than
+    // the stride is a hole — an in-flight write or real damage — and a
+    // run must NEVER merge across it: the merged span would shadow the
+    // late-landing raw via cover selection and silently drop its step
+    let base = chain.full.as_ref().map(|(s, _)| *s).unwrap_or(0);
+    let stride = chain.stride(base);
+    let eligible = diffs.len().saturating_sub(cfg.settle_tail);
+    let mut written = 0usize;
+    let mut run: Vec<(u64, u64, String)> = Vec::new();
+    for d in diffs.iter().take(eligible) {
+        let raw = !protect.contains(d.2.as_str())
+            && matches!(
+                Manifest::step_range(&d.2),
+                Some(("diff", _, _)) | Some(("batch", _, _))
+            );
+        if raw {
+            let contiguous = match run.last() {
+                Some(prev) => d.0 == prev.1 + stride,
+                None => true,
+            };
+            if !contiguous {
+                // a step gap: flush what we have, start a fresh run after
+                written += flush_run(store, &mut run, cfg, merge_tail, stats)?;
+            }
+            run.push(d.clone());
+        } else {
+            // a merged span or protected tip ends the run
+            written += flush_run(store, &mut run, cfg, merge_tail, stats)?;
+        }
+    }
+    written += flush_run(store, &mut run, cfg, merge_tail, stats)?;
+    Ok(written)
+}
+
+/// Merge one maximal raw run in `merge_factor`-sized chunks (plus the ≥2
+/// tail when `merge_tail`); clears the run.
+fn flush_run(
+    store: &dyn StorageBackend,
+    run: &mut Vec<(u64, u64, String)>,
+    cfg: &CompactorConfig,
+    merge_tail: bool,
+    stats: &mut CompactStats,
+) -> Result<usize> {
+    let mut written = 0usize;
+    for chunk in run.chunks(cfg.merge_factor) {
+        if chunk.len() == cfg.merge_factor || (merge_tail && chunk.len() >= 2) {
+            written += merge_run(store, chunk, cfg, stats)?;
+        }
+    }
+    run.clear();
+    Ok(written)
+}
+
+/// Merge one run of raw objects; returns 1 if a merged span replaced it.
+fn merge_run(
+    store: &dyn StorageBackend,
+    run: &[(u64, u64, String)],
+    cfg: &CompactorConfig,
+    stats: &mut CompactStats,
+) -> Result<usize> {
+    let lo = run[0].0;
+    let hi = run[run.len() - 1].1;
+    let mut items: Vec<(u64, DiffPayload)> = Vec::new();
+    for (_, _, name) in run {
+        // an object can vanish under us (GC swept the chain mid-pass):
+        // abort this run quietly — it was superseded anyway
+        let Ok(bytes) = store.get(name) else { return Ok(0) };
+        stats.bytes_read += bytes.len() as u64;
+        let (kind, decoded) = read_chain_object(&bytes, cfg.model_sig)
+            .with_context(|| format!("compacting {name}"))?;
+        // the name filter already excluded merged spans; re-merging one
+        // would nest spans, so reject defensively
+        ensure!(kind != CkptKind::MergedDiff, "merged span {name} in a raw diff run");
+        items.extend(decoded);
+    }
+    // the merged span lives in the same namespace as the raws it covers
+    // (rank-namespaced for cluster chains, top-level for flat chains)
+    let prefix = Manifest::parse_rank(&run[0].2)
+        .map(|(r, _)| Manifest::rank_prefix(r))
+        .unwrap_or_default();
+    let name = format!("{prefix}{}", Manifest::merged_name(lo, hi));
+    let bytes = write_merged(&items, cfg.model_sig, lo, hi, cfg.codec)?;
+    store
+        .put(&name, &bytes)
+        .with_context(|| format!("writing merged span {name}"))?;
+    // verify-before-delete: a torn merged write must never orphan the span
+    let verified = store.get(&name).map(|b| b == bytes).unwrap_or(false);
+    if !verified {
+        log::warn!("merged span {name} failed read-back verification; keeping the raw chain");
+        stats.aborted_merges += 1;
+        let _ = store.delete(&name);
+        return Ok(0);
+    }
+    stats.bytes_written += bytes.len() as u64;
+    stats.merged_written += 1;
+    for (_, _, raw) in run {
+        // best-effort: a leftover raw is redundant (cover selection
+        // prefers the merged span); the next pass or GC sweeps it
+        if store.delete(raw).is_ok() {
+            stats.raw_compacted += 1;
+        }
+    }
+    Ok(1)
+}
+
+/// The background compaction thread the flat checkpointer runs: it wakes
+/// on notifications ("one more raw diff object is durable"), re-discovers
+/// the newest chain on its logical store view, and compacts complete
+/// runs. A final pass runs at shutdown so a drained checkpointer leaves
+/// the chain fully compacted.
+pub struct Compactor {
+    tx: Option<Sender<()>>,
+    handle: Option<JoinHandle<CompactStats>>,
+}
+
+impl Compactor {
+    /// `store` must be a LOGICAL object view (wrap the inner store in a
+    /// 1-shard [`Sharded`](crate::storage::Sharded) when the write path
+    /// shards).
+    pub fn spawn(store: Arc<dyn StorageBackend>, cfg: CompactorConfig) -> Compactor {
+        let (tx, rx) = channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("ckpt-compact".into())
+            .spawn(move || run_loop(store, cfg, rx))
+            .expect("spawning compactor");
+        Compactor { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Notify the compactor that one more raw diff object became durable.
+    pub fn notify(&self) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(());
+        }
+    }
+
+    /// Stop after a final pass; returns the accumulated counters.
+    pub fn finish(mut self) -> CompactStats {
+        self.tx = None;
+        match self.handle.take().map(|h| h.join()) {
+            Some(Ok(stats)) => stats,
+            Some(Err(_)) => {
+                log::error!("compactor thread panicked; compaction counters lost");
+                CompactStats::default()
+            }
+            None => CompactStats::default(),
+        }
+    }
+}
+
+impl Drop for Compactor {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_loop(store: Arc<dyn StorageBackend>, cfg: CompactorConfig, rx: Receiver<()>) -> CompactStats {
+    let mut stats = CompactStats::default();
+    let protect = HashSet::new();
+    let mut pending = 0usize;
+    loop {
+        match rx.recv() {
+            Ok(()) => {
+                pending += 1;
+                if pending >= cfg.merge_factor {
+                    pending = 0;
+                    // live pass: complete chunks only — the tail is still
+                    // growing and merging it now would strand small spans
+                    pass(store.as_ref(), &cfg, &protect, false, &mut stats);
+                }
+            }
+            Err(_) => {
+                // channel closed after the writer's shutdown barrier: one
+                // final pass (tail included, everything settled) leaves
+                // the chain fully compacted — replay is bounded by
+                // ⌈n/merge_factor⌉ + 1
+                let settled = CompactorConfig { settle_tail: 0, ..cfg };
+                pass(store.as_ref(), &settled, &protect, true, &mut stats);
+                return stats;
+            }
+        }
+    }
+}
+
+fn pass(
+    store: &dyn StorageBackend,
+    cfg: &CompactorConfig,
+    protect: &HashSet<String>,
+    merge_tail: bool,
+    stats: &mut CompactStats,
+) {
+    match Manifest::latest_chain(store) {
+        Ok(chain) => {
+            if let Err(e) = compact_chain(store, &chain, cfg, protect, merge_tail, stats) {
+                log::warn!("compaction pass failed: {e:#}");
+            }
+        }
+        Err(e) => log::warn!("compaction discovery failed: {e:#}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::diff::write_diff;
+    use crate::checkpoint::format::model_signature;
+    use crate::checkpoint::merged::read_merged;
+    use crate::sparse::SparseGrad;
+    use crate::storage::{FaultConfig, FaultyStore, MemStore};
+    use crate::tensor::Flat;
+    use crate::util::rng::Rng;
+
+    fn seed_chain(store: &dyn StorageBackend, sig: u64, steps: u64) -> Vec<(u64, DiffPayload)> {
+        let mut rng = Rng::new(11);
+        store.put(&Manifest::full_name(0), b"not-read-by-compaction").unwrap();
+        let mut items = Vec::new();
+        for step in 1..=steps {
+            let mut d = Flat::zeros(64);
+            for x in d.0.iter_mut() {
+                if rng.next_f64() < 0.2 {
+                    *x = rng.normal() as f32;
+                }
+            }
+            let p = DiffPayload::Gradient(SparseGrad::from_dense(&d));
+            store
+                .put(
+                    &Manifest::diff_name(step),
+                    &write_diff(&p, sig, step, PayloadCodec::Raw).unwrap(),
+                )
+                .unwrap();
+            items.push((step, p));
+        }
+        items
+    }
+
+    fn cfg(sig: u64, mf: usize) -> CompactorConfig {
+        CompactorConfig {
+            model_sig: sig,
+            codec: PayloadCodec::Raw,
+            merge_factor: mf,
+            settle_tail: 0,
+        }
+    }
+
+    #[test]
+    fn pass_merges_complete_runs_and_keeps_the_tail() {
+        let sig = model_signature("c", 64);
+        let store = MemStore::new();
+        let items = seed_chain(&store, sig, 10);
+        let chain = Manifest::latest_chain(&store).unwrap();
+        let mut stats = CompactStats::default();
+        let written =
+            compact_chain(&store, &chain, &cfg(sig, 4), &HashSet::new(), false, &mut stats).unwrap();
+        assert_eq!(written, 2, "10 diffs at mf=4 -> merged(1,4), merged(5,8)");
+        assert_eq!(stats.raw_compacted, 8);
+        let names = store.list().unwrap();
+        assert!(names.contains(&Manifest::merged_name(1, 4)));
+        assert!(names.contains(&Manifest::merged_name(5, 8)));
+        assert!(names.contains(&Manifest::diff_name(9)) && names.contains(&Manifest::diff_name(10)));
+        for step in 1..=8u64 {
+            assert!(!names.contains(&Manifest::diff_name(step)), "raw {step} superseded");
+        }
+        // the merged spans decode to exactly the original per-step payloads
+        let m = read_merged(&store.get(&Manifest::merged_name(1, 4)).unwrap(), sig).unwrap();
+        assert_eq!(m, items[..4].to_vec());
+        // a second pass over the compacted chain is a no-op (runs of merged
+        // spans are not raw)
+        let chain2 = Manifest::latest_chain(&store).unwrap();
+        let again =
+            compact_chain(&store, &chain2, &cfg(sig, 4), &HashSet::new(), false, &mut stats).unwrap();
+        assert_eq!(again, 0);
+    }
+
+    #[test]
+    fn protected_tips_break_runs() {
+        let sig = model_signature("c", 64);
+        let store = MemStore::new();
+        seed_chain(&store, sig, 4);
+        let chain = Manifest::latest_chain(&store).unwrap();
+        let protect: HashSet<String> = [Manifest::diff_name(4)].into_iter().collect();
+        let mut stats = CompactStats::default();
+        let written =
+            compact_chain(&store, &chain, &cfg(sig, 4), &protect, false, &mut stats).unwrap();
+        assert_eq!(written, 0, "the protected tip leaves only a 3-object run");
+        assert!(store.exists(&Manifest::diff_name(4)));
+    }
+
+    #[test]
+    fn failed_merged_put_keeps_the_raw_chain() {
+        let sig = model_signature("c", 64);
+        let store = FaultyStore::new(
+            MemStore::new(),
+            FaultConfig { put_fail: 1.0, grace_ops: 5, ..FaultConfig::default() },
+        );
+        seed_chain(&store, sig, 4); // 5 puts, all inside the grace window
+        let chain = Manifest::latest_chain(&store).unwrap();
+        let mut stats = CompactStats::default();
+        let res = compact_chain(&store, &chain, &cfg(sig, 4), &HashSet::new(), false, &mut stats);
+        assert!(res.is_err(), "merged put failure surfaces");
+        for step in 1..=4u64 {
+            assert!(store.exists(&Manifest::diff_name(step)), "raw chain intact");
+        }
+        assert!(!store.exists(&Manifest::merged_name(1, 4)));
+        assert_eq!(stats.merged_written, 0);
+        assert_eq!(stats.raw_compacted, 0);
+    }
+
+    #[test]
+    fn torn_merged_write_is_detected_and_rolled_back() {
+        let sig = model_signature("c", 64);
+        let store = FaultyStore::new(
+            MemStore::new(),
+            FaultConfig { torn_write: 1.0, grace_ops: 5, ..FaultConfig::default() },
+        );
+        seed_chain(&store, sig, 4);
+        let chain = Manifest::latest_chain(&store).unwrap();
+        let mut stats = CompactStats::default();
+        let written =
+            compact_chain(&store, &chain, &cfg(sig, 4), &HashSet::new(), false, &mut stats).unwrap();
+        assert_eq!(written, 0, "torn merged write must not count");
+        assert_eq!(stats.aborted_merges, 1);
+        for step in 1..=4u64 {
+            assert!(store.exists(&Manifest::diff_name(step)), "raw chain intact");
+        }
+        assert!(!store.exists(&Manifest::merged_name(1, 4)), "torn span rolled back");
+    }
+
+    #[test]
+    fn merge_tail_compacts_partial_runs() {
+        let sig = model_signature("c", 64);
+        let store = MemStore::new();
+        seed_chain(&store, sig, 7);
+        let chain = Manifest::latest_chain(&store).unwrap();
+        let mut stats = CompactStats::default();
+        let written =
+            compact_chain(&store, &chain, &cfg(sig, 4), &HashSet::new(), true, &mut stats)
+                .unwrap();
+        assert_eq!(written, 2, "chunk (1..4) + tail (5..7)");
+        let names = store.list().unwrap();
+        assert!(names.contains(&Manifest::merged_name(1, 4)));
+        assert!(names.contains(&Manifest::merged_name(5, 7)));
+        // a single-object tail never merges (nothing to amortize)
+        let store2 = MemStore::new();
+        seed_chain(&store2, sig, 5);
+        let chain2 = Manifest::latest_chain(&store2).unwrap();
+        let w2 = compact_chain(&store2, &chain2, &cfg(sig, 4), &HashSet::new(), true, &mut stats)
+            .unwrap();
+        assert_eq!(w2, 1);
+        assert!(store2.exists(&Manifest::diff_name(5)), "lone tail stays raw");
+    }
+
+    #[test]
+    fn holes_and_unsettled_tails_are_never_merged_across() {
+        let sig = model_signature("c", 64);
+        // a hole (in-flight write under a multi-writer engine, or damage)
+        // must break the run: merging across it would shadow the
+        // late-landing raw via cover selection and drop its step
+        let store = MemStore::new();
+        seed_chain(&store, sig, 6);
+        store.delete(&Manifest::diff_name(4)).unwrap();
+        let chain = Manifest::latest_chain(&store).unwrap();
+        let mut stats = CompactStats::default();
+        let mut c = cfg(sig, 3);
+        let written =
+            compact_chain(&store, &chain, &c, &HashSet::new(), false, &mut stats).unwrap();
+        assert_eq!(written, 1, "only the contiguous (1..3) run merges");
+        assert!(store.exists(&Manifest::merged_name(1, 3)));
+        assert!(store.exists(&Manifest::diff_name(5)) && store.exists(&Manifest::diff_name(6)));
+        assert!(!store.exists(&Manifest::merged_name(1, 5)), "never merge across the hole");
+
+        // settle tail: the newest objects stay raw even in complete runs
+        // (they may sit beyond a not-yet-visible in-flight write)
+        let store2 = MemStore::new();
+        seed_chain(&store2, sig, 6);
+        let chain2 = Manifest::latest_chain(&store2).unwrap();
+        c.settle_tail = 3;
+        let w2 = compact_chain(&store2, &chain2, &c, &HashSet::new(), true, &mut stats).unwrap();
+        assert_eq!(w2, 1, "only the settled prefix (1..3) merges");
+        for step in 4..=6u64 {
+            assert!(store2.exists(&Manifest::diff_name(step)), "unsettled {step} stays raw");
+        }
+    }
+
+    #[test]
+    fn merge_factor_below_two_disables() {
+        let sig = model_signature("c", 64);
+        let store = MemStore::new();
+        seed_chain(&store, sig, 6);
+        let chain = Manifest::latest_chain(&store).unwrap();
+        let mut stats = CompactStats::default();
+        for mf in [0, 1] {
+            assert_eq!(
+                compact_chain(&store, &chain, &cfg(sig, mf), &HashSet::new(), true, &mut stats)
+                    .unwrap(),
+                0
+            );
+        }
+        assert_eq!(stats.passes, 0);
+    }
+
+    #[test]
+    fn background_compactor_compacts_on_shutdown() {
+        let sig = model_signature("c", 64);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        seed_chain(store.as_ref(), sig, 8);
+        let c = Compactor::spawn(Arc::clone(&store), cfg(sig, 4));
+        for _ in 0..8 {
+            c.notify();
+        }
+        let stats = c.finish();
+        assert_eq!(stats.merged_written, 2);
+        assert_eq!(stats.raw_compacted, 8);
+        let chain = Manifest::latest_chain(store.as_ref()).unwrap();
+        assert_eq!(chain.diffs.len(), 2, "replay touches 2 objects instead of 8");
+        assert_eq!(chain.latest_step(), 8);
+    }
+}

@@ -1,0 +1,144 @@
+//! Encode stage: pooled single-pass container encoding shared by every
+//! checkpointing runtime.
+//!
+//! An [`Encoder`] owns the encode-buffer pool
+//! ([`BufPool`](crate::util::bufpool::BufPool)) and the wire parameters
+//! (model/rank signature + payload codec); each `encode_*` call checks out
+//! a recycled buffer, serializes the payload into it in one forward pass
+//! (sparse payloads go straight from their in-memory form to container
+//! bytes — see `checkpoint::format::encode_container_into`), and hands
+//! back an [`Encoded`] object carrying the manifest name and the
+//! copy-accounting the stats layer records. The buffer recycles into the
+//! pool when the persist stage drops its last reference.
+
+use anyhow::Result;
+
+use crate::checkpoint::batched::BatchBuffer;
+use crate::checkpoint::diff::{write_diff_into, DiffPayload};
+use crate::checkpoint::format::PayloadCodec;
+use crate::checkpoint::full::write_full_into;
+use crate::checkpoint::manifest::Manifest;
+use crate::optim::ModelState;
+use crate::sparse::SparseGrad;
+use crate::tensor::Flat;
+use crate::util::bufpool::{BufPool, PooledBuf};
+
+/// One encoded checkpoint object, ready for the persist stage.
+pub struct Encoded {
+    /// manifest object name (`diff-…`, `full-…`, `batch-…`)
+    pub name: String,
+    pub buf: PooledBuf,
+    /// bytes moved heap-to-heap by this encode (feeds
+    /// [`CkptStats::bytes_copied`](crate::pipeline::CkptStats))
+    pub copied: u64,
+}
+
+/// The snapshot/offload + encode stages.
+pub struct Encoder {
+    pool: BufPool,
+    model_sig: u64,
+    codec: PayloadCodec,
+}
+
+impl Encoder {
+    /// `pool_cap` buffers are retained for recycling; size it to the
+    /// persist stage's in-flight cap plus slack for the one being filled.
+    pub fn new(model_sig: u64, codec: PayloadCodec, pool_cap: usize) -> Encoder {
+        Encoder { pool: BufPool::new(pool_cap), model_sig, codec }
+    }
+
+    /// Offload/compact stage: dense masked gradient → k-sparse wire form
+    /// (the GPU→CPU offload of paper Fig. 6 step ①).
+    pub fn compact(&self, dense: &Flat) -> SparseGrad {
+        SparseGrad::from_dense(dense)
+    }
+
+    /// Encode one differential checkpoint for `step`.
+    pub fn encode_diff(&self, step: u64, payload: &DiffPayload) -> Result<Encoded> {
+        let mut buf = self.pool.checkout();
+        let copied = write_diff_into(payload, self.model_sig, step, self.codec, &mut buf)?;
+        Ok(Encoded { name: Manifest::diff_name(step), buf, copied: copied as u64 })
+    }
+
+    /// Encode a full model-state checkpoint (named by `state.step`).
+    pub fn encode_full(&self, state: &ModelState) -> Result<Encoded> {
+        let mut buf = self.pool.checkout();
+        let copied = write_full_into(state, self.model_sig, self.codec, &mut buf)?;
+        Ok(Encoded { name: Manifest::full_name(state.step), buf, copied: copied as u64 })
+    }
+
+    /// Drain a batch buffer into one batched-diff object in a single
+    /// encoding pass; `None` when the batch is empty. The accounted copy
+    /// traffic includes the batch's in-buffer accumulation
+    /// ([`BatchBuffer::take_copied`]).
+    pub fn encode_batch(&self, batch: &mut BatchBuffer) -> Result<Option<Encoded>> {
+        if batch.is_empty() {
+            return Ok(None);
+        }
+        let mut buf = self.pool.checkout();
+        match batch.flush_into(self.model_sig, self.codec, &mut buf)? {
+            Some((lo, hi, copied)) => Ok(Some(Encoded {
+                name: Manifest::batch_name(lo, hi),
+                buf,
+                copied: copied as u64 + batch.take_copied(),
+            })),
+            None => Ok(None),
+        }
+    }
+
+    pub fn pool_hits(&self) -> u64 {
+        self.pool.hits()
+    }
+
+    pub fn pool_misses(&self) -> u64 {
+        self.pool.misses()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::batched::BatchMode;
+    use crate::checkpoint::diff::write_diff;
+    use crate::checkpoint::full::write_full;
+
+    fn sparse() -> SparseGrad {
+        SparseGrad::from_dense(&Flat(vec![0.0, 1.0, 0.0, -2.0, 3.0]))
+    }
+
+    #[test]
+    fn encode_diff_matches_direct_writer() {
+        let enc = Encoder::new(7, PayloadCodec::Raw, 2);
+        let payload = DiffPayload::Gradient(sparse());
+        let obj = enc.encode_diff(5, &payload).unwrap();
+        assert_eq!(obj.name, Manifest::diff_name(5));
+        assert_eq!(&obj.buf[..], &write_diff(&payload, 7, 5, PayloadCodec::Raw).unwrap()[..]);
+        assert_eq!(obj.copied as usize, obj.buf.len());
+    }
+
+    #[test]
+    fn encode_full_matches_direct_writer() {
+        let enc = Encoder::new(9, PayloadCodec::Zstd, 2);
+        let mut state = ModelState::new(Flat(vec![0.5; 20]));
+        state.step = 3;
+        let obj = enc.encode_full(&state).unwrap();
+        assert_eq!(obj.name, Manifest::full_name(3));
+        assert_eq!(&obj.buf[..], &write_full(&state, 9, PayloadCodec::Zstd).unwrap()[..]);
+    }
+
+    #[test]
+    fn encode_batch_drains_and_recycles() {
+        let enc = Encoder::new(1, PayloadCodec::Raw, 4);
+        let mut batch = BatchBuffer::new(BatchMode::Concat, 8);
+        assert!(enc.encode_batch(&mut batch).unwrap().is_none(), "empty batch");
+        batch.offer(1, sparse());
+        batch.offer(2, sparse());
+        let obj = enc.encode_batch(&mut batch).unwrap().expect("non-empty");
+        assert_eq!(obj.name, Manifest::batch_name(1, 2));
+        assert!(batch.is_empty());
+        drop(obj);
+        let obj2 = enc.encode_diff(3, &DiffPayload::Gradient(sparse())).unwrap();
+        drop(obj2);
+        assert!(enc.pool_hits() >= 1, "second checkout must reuse the recycled buffer");
+    }
+}

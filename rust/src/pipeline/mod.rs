@@ -1,0 +1,139 @@
+//! Unified checkpoint pipeline: the stages every checkpointing runtime in
+//! this crate is composed of, plus the background chain compactor built on
+//! top of them.
+//!
+//! Before this layer existed, three sibling runtimes each reimplemented
+//! snapshot → encode → persist → commit:
+//! [`Checkpointer`](crate::coordinator::checkpointer::Checkpointer) (the
+//! single-chain process), the cluster rank threads
+//! ([`crate::cluster::rank`]), and
+//! [`LowDiffPlus`](crate::coordinator::lowdiff_plus::LowDiffPlus) (the
+//! CPU-replica runtime). They are now thin compositions over:
+//!
+//! - [`Encoder`] — the snapshot/offload + encode stages: dense→sparse
+//!   compaction and pooled single-pass container encoding
+//!   ([`BufPool`](crate::util::bufpool::BufPool) inside), producing
+//!   [`Encoded`] objects. One `Encoder` per writer thread; the model (or
+//!   rank) signature and codec are fixed at construction.
+//! - [`Sink`] — the persist stage: synchronous single-object puts or the
+//!   sharded async engine ([`Sharded`](crate::storage::Sharded)) with
+//!   completion reaping, bounded in-flight backpressure, pre-GC/shutdown
+//!   barriers ([`Sink::barrier`]), and a blocking durable variant
+//!   ([`Sink::persist_durable`]) for phase-1 cluster commits that must
+//!   mean "on disk" before they ack.
+//! - the commit stage stays runtime-specific (flat GC keyed on the newest
+//!   full, or the cluster's two-phase global record) but always runs
+//!   against [`Sink::view`] behind a [`Sink::barrier`].
+//!
+//! [`compact`] adds the **incremental-merging persistence** strategy
+//! (paper §VI-B; Check-N-Run / "On Efficient Constructions of
+//! Checkpoints" lineage): a background pass that merges runs of raw
+//! differential objects into [`MergedDiff`](crate::checkpoint::format::CkptKind)
+//! containers so recovery replay touches `O(n/merge_factor)` objects
+//! instead of `O(n)` while reconstructing **bit-identical** state (the
+//! merged container preserves every per-step payload). Invariants and the
+//! collectibility rule for superseded raw diffs are documented in
+//! `docs/PIPELINE.md`.
+
+pub mod compact;
+pub mod encode;
+pub mod persist;
+
+pub use compact::{compact_chain, CompactStats, Compactor, CompactorConfig};
+pub use encode::{Encoded, Encoder};
+pub use persist::Sink;
+
+/// Write-path counters shared by every pipeline composition (historically
+/// defined by the checkpointer; re-exported from there for compatibility).
+#[derive(Clone, Debug, Default)]
+pub struct CkptStats {
+    pub full_ckpts: u64,
+    pub diff_ckpts: u64,
+    pub writes: u64,
+    pub bytes_written: u64,
+    /// Direct mode: wall time inside synchronous puts. Engine mode: wall
+    /// time the writer spent *blocked* on the writer pool (barriers
+    /// before GC / shutdown) — the overlap-visible cost, not device time.
+    pub write_secs: f64,
+    pub offload_secs: f64,
+    pub peak_buffered_bytes: usize,
+    pub errors: u64,
+    /// peak logical writes simultaneously in flight on the writer pool
+    pub inflight_peak: usize,
+    /// physical objects written by the sharded engine (shards + commit
+    /// records); 0 in direct mode
+    pub shard_writes: u64,
+    /// fast→durable tier traffic reported by the backend (Tiered), as of
+    /// shutdown — late spills keep draining afterwards
+    pub spill_bytes: u64,
+    pub spill_errors: u64,
+    /// bytes moved between heap buffers on the write path after the sparse
+    /// compaction: encode output + Sum-mode accumulation traffic. The
+    /// pooled single-pass pipeline moves each payload once; the pre-change
+    /// pipeline moved it 3-4x (see docs/STORAGE.md, "Write-path anatomy").
+    pub bytes_copied: u64,
+    /// encode-buffer pool counters, as of shutdown: hits are recycled
+    /// checkouts (steady state should be all hits)
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    /// merged differential containers written by the chain compactor
+    pub merged_written: u64,
+    /// raw diff/batch objects superseded (and deleted) by merged spans
+    pub raw_compacted: u64,
+}
+
+impl CkptStats {
+    /// Component-wise aggregation: sums for counters, max for peaks. Used
+    /// to fold per-rank cluster stats into cluster-wide totals (and by
+    /// [`RunReport`](crate::coordinator::metrics::RunReport) absorption).
+    pub fn merge(&mut self, o: &CkptStats) {
+        self.full_ckpts += o.full_ckpts;
+        self.diff_ckpts += o.diff_ckpts;
+        self.writes += o.writes;
+        self.bytes_written += o.bytes_written;
+        self.write_secs += o.write_secs;
+        self.offload_secs += o.offload_secs;
+        self.peak_buffered_bytes = self.peak_buffered_bytes.max(o.peak_buffered_bytes);
+        self.errors += o.errors;
+        self.inflight_peak = self.inflight_peak.max(o.inflight_peak);
+        self.shard_writes += o.shard_writes;
+        self.spill_bytes += o.spill_bytes;
+        self.spill_errors += o.spill_errors;
+        self.bytes_copied += o.bytes_copied;
+        self.pool_hits += o.pool_hits;
+        self.pool_misses += o.pool_misses;
+        self.merged_written += o.merged_written;
+        self.raw_compacted += o.raw_compacted;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_counters_and_maxes_peaks() {
+        let mut a = CkptStats {
+            writes: 2,
+            bytes_written: 10,
+            inflight_peak: 3,
+            merged_written: 1,
+            raw_compacted: 4,
+            ..CkptStats::default()
+        };
+        let b = CkptStats {
+            writes: 1,
+            bytes_written: 5,
+            inflight_peak: 5,
+            merged_written: 2,
+            raw_compacted: 8,
+            ..CkptStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.writes, 3);
+        assert_eq!(a.bytes_written, 15);
+        assert_eq!(a.inflight_peak, 5);
+        assert_eq!(a.merged_written, 3);
+        assert_eq!(a.raw_compacted, 12);
+    }
+}

@@ -1,0 +1,248 @@
+//! Persist stage: the storage sink shared by the checkpointer and the
+//! cluster rank threads — synchronous single-object puts, or the sharded
+//! async engine with completion reaping, bounded in-flight backpressure,
+//! and pre-GC / shutdown barriers.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::pipeline::encode::Encoded;
+use crate::pipeline::CkptStats;
+use crate::storage::{Sharded, StorageBackend, WriteHandle};
+
+/// One logical write still in flight on the sharded engine.
+struct Inflight {
+    name: String,
+    bytes: u64,
+    handle: WriteHandle,
+}
+
+/// The persist stage: where encoded objects meet storage.
+pub enum Sink {
+    Direct(Arc<dyn StorageBackend>),
+    Engine { eng: Sharded, inflight: Vec<Inflight>, cap: usize },
+}
+
+impl Sink {
+    /// `n_shards` or `writers` > 1 routes writes through the sharded async
+    /// engine; `cap` bounds logical writes in flight (backpressure — the
+    /// oldest write is awaited past it, which propagates to the producer
+    /// as a visible stall).
+    pub fn new(store: Arc<dyn StorageBackend>, n_shards: usize, writers: usize, cap: usize) -> Sink {
+        if n_shards > 1 || writers > 1 {
+            Sink::Engine { eng: Sharded::new(store, n_shards, writers), inflight: Vec::new(), cap }
+        } else {
+            Sink::Direct(store)
+        }
+    }
+
+    /// The logical object view (GC, recovery interop must see through the
+    /// shard layout).
+    pub fn view(&self) -> &dyn StorageBackend {
+        match self {
+            Sink::Direct(s) => s.as_ref(),
+            Sink::Engine { eng, .. } => eng,
+        }
+    }
+
+    /// Hand one encoded (pooled) object to storage. Direct mode writes
+    /// synchronously and the buffer recycles on drop right here; engine
+    /// mode shares it with the writer pool zero-copy — it recycles when
+    /// the commit finalizer releases the last reference.
+    pub fn submit(&mut self, obj: Encoded, stats: &Mutex<CkptStats>) {
+        let Encoded { name, buf, copied } = obj;
+        stats.lock().unwrap().bytes_copied += copied;
+        match self {
+            Sink::Direct(store) => {
+                let t0 = Instant::now();
+                let res = store.put(&name, &buf);
+                let mut s = stats.lock().unwrap();
+                s.write_secs += t0.elapsed().as_secs_f64();
+                match res {
+                    Ok(()) => {
+                        s.writes += 1;
+                        s.bytes_written += buf.len() as u64;
+                    }
+                    Err(e) => {
+                        log::error!("checkpoint write {name} failed: {e:#}");
+                        s.errors += 1;
+                    }
+                }
+            }
+            Sink::Engine { eng, inflight, cap } => {
+                let len = buf.len() as u64;
+                let handle = eng.put_async(&name, buf);
+                inflight.push(Inflight { name, bytes: len, handle });
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.inflight_peak = s.inflight_peak.max(inflight.len());
+                }
+                Self::reap(inflight, stats);
+                // backpressure: don't let encoded-but-unwritten checkpoints
+                // pile up without bound when the device is slower than the
+                // producer — block on the oldest write past the cap
+                while inflight.len() > *cap {
+                    let w = inflight.remove(0);
+                    let t0 = Instant::now();
+                    let res = w.handle.wait();
+                    stats.lock().unwrap().write_secs += t0.elapsed().as_secs_f64();
+                    Self::account(&w.name, w.bytes, res, stats);
+                }
+            }
+        }
+    }
+
+    /// Blocking phase-1 persist: the object is durable (or the error
+    /// reported) before this returns — the guarantee a cluster rank's ack
+    /// must carry before the commit record may reference the object.
+    /// Returns the logical `(len, crc32)` the record pins.
+    pub fn persist_durable(
+        &mut self,
+        obj: Encoded,
+        stats: &mut CkptStats,
+    ) -> Result<(u64, u32), String> {
+        let Encoded { name, buf, copied } = obj;
+        stats.bytes_copied += copied;
+        let len = buf.len() as u64;
+        let crc = crc32fast::hash(&buf);
+        let t0 = Instant::now();
+        let res = match self {
+            Sink::Engine { eng, .. } => {
+                stats.inflight_peak = stats.inflight_peak.max(1);
+                eng.put_async(&name, buf).wait()
+            }
+            Sink::Direct(store) => store.put(&name, &buf).map_err(|e| format!("{e:#}")),
+        };
+        stats.write_secs += t0.elapsed().as_secs_f64();
+        match res {
+            Ok(()) => {
+                stats.writes += 1;
+                stats.bytes_written += len;
+                Ok((len, crc))
+            }
+            Err(e) => {
+                log::error!("checkpoint write {name} failed: {e}");
+                stats.errors += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Harvest completed handles without blocking.
+    fn reap(inflight: &mut Vec<Inflight>, stats: &Mutex<CkptStats>) {
+        inflight.retain(|w| match w.handle.try_result() {
+            None => true,
+            Some(res) => {
+                Self::account(&w.name, w.bytes, res, stats);
+                false
+            }
+        });
+    }
+
+    /// Block until every in-flight write committed (pre-GC / shutdown
+    /// barrier). No-op in direct mode.
+    pub fn barrier(&mut self, stats: &Mutex<CkptStats>) {
+        if let Sink::Engine { inflight, .. } = self {
+            let t0 = Instant::now();
+            for w in inflight.drain(..) {
+                let res = w.handle.wait();
+                Self::account(&w.name, w.bytes, res, stats);
+            }
+            stats.lock().unwrap().write_secs += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    fn account(name: &str, bytes: u64, res: Result<(), String>, stats: &Mutex<CkptStats>) {
+        let mut s = stats.lock().unwrap();
+        match res {
+            Ok(()) => {
+                s.writes += 1;
+                s.bytes_written += bytes;
+            }
+            Err(e) => {
+                log::error!("checkpoint write {name} failed: {e}");
+                s.errors += 1;
+            }
+        }
+    }
+
+    /// Fold backend-level counters (shard fan-out, tier spill) into a
+    /// plain stats struct (the single-threaded rank path).
+    pub fn finish_local(self, stats: &mut CkptStats) {
+        let sst = self.view().storage_stats();
+        stats.shard_writes = sst.physical_writes;
+        stats.spill_bytes = sst.spill_bytes;
+        stats.spill_errors = sst.spill_errors;
+    }
+
+    /// Fold backend-level counters into the shared stats snapshot.
+    pub fn finish(self, stats: &Mutex<CkptStats>) {
+        let sst = self.view().storage_stats();
+        let mut s = stats.lock().unwrap();
+        s.shard_writes = sst.physical_writes;
+        s.spill_bytes = sst.spill_bytes;
+        s.spill_errors = sst.spill_errors;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::diff::DiffPayload;
+    use crate::checkpoint::format::PayloadCodec;
+    use crate::checkpoint::manifest::Manifest;
+    use crate::pipeline::Encoder;
+    use crate::sparse::SparseGrad;
+    use crate::storage::MemStore;
+    use crate::tensor::Flat;
+
+    fn obj(enc: &Encoder, step: u64) -> Encoded {
+        let g = SparseGrad::from_dense(&Flat(vec![0.0, 1.0, -2.0]));
+        enc.encode_diff(step, &DiffPayload::Gradient(g)).unwrap()
+    }
+
+    #[test]
+    fn direct_submit_writes_and_accounts() {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let enc = Encoder::new(1, PayloadCodec::Raw, 2);
+        let mut sink = Sink::new(Arc::clone(&store), 1, 1, 8);
+        let stats = Mutex::new(CkptStats::default());
+        sink.submit(obj(&enc, 1), &stats);
+        let s = stats.lock().unwrap();
+        assert_eq!(s.writes, 1);
+        assert!(s.bytes_written > 0 && s.bytes_copied == s.bytes_written);
+        assert!(store.exists(&Manifest::diff_name(1)));
+    }
+
+    #[test]
+    fn engine_submit_barrier_then_finish_counts_shards() {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let enc = Encoder::new(1, PayloadCodec::Raw, 4);
+        let mut sink = Sink::new(Arc::clone(&store), 2, 2, 8);
+        let stats = Mutex::new(CkptStats::default());
+        for step in 1..=3 {
+            sink.submit(obj(&enc, step), &stats);
+        }
+        sink.barrier(&stats);
+        sink.finish(&stats);
+        let s = stats.lock().unwrap();
+        assert_eq!(s.writes, 3);
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.shard_writes, 3 * 3, "2 shards + index per object");
+    }
+
+    #[test]
+    fn persist_durable_returns_len_and_crc() {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let enc = Encoder::new(1, PayloadCodec::Raw, 2);
+        let mut sink = Sink::new(Arc::clone(&store), 1, 1, 8);
+        let mut stats = CkptStats::default();
+        let o = obj(&enc, 7);
+        let want = (o.buf.len() as u64, crc32fast::hash(&o.buf));
+        let got = sink.persist_durable(o, &mut stats).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.writes, 1);
+        let bytes = store.get(&Manifest::diff_name(7)).unwrap();
+        assert_eq!(crc32fast::hash(&bytes), want.1);
+    }
+}

@@ -18,8 +18,8 @@ use lowdiff::checkpoint::format::model_signature;
 use lowdiff::checkpoint::manifest::Manifest;
 use lowdiff::cluster::commit::find_consistent_cut;
 use lowdiff::cluster::{
-    elastic_restart, gc_cluster, partition_even, recover_cluster, truncate_stragglers, Cluster,
-    ClusterConfig,
+    elastic_restart, gc_cluster, partition_even, recover_cluster, recover_cluster_or_net,
+    truncate_stragglers, Cluster, ClusterConfig,
 };
 use lowdiff::compress::topk_mask;
 use lowdiff::optim::{Adam, ModelState};
@@ -227,6 +227,141 @@ fn gc_never_deletes_the_chain_you_would_recover_from() {
         prop_assert!(after == before, "recovery changed after gc");
         Ok(())
     });
+}
+
+#[test]
+fn coordinator_compaction_bounds_replay_and_recovers_bit_identically() {
+    // the tentpole acceptance for the cluster runtime: with background
+    // compaction at merge factor 4, each rank's replayable chain shrinks
+    // to <= ceil(n/4) + 1 objects while the recovered state stays
+    // bit-identical to the uncompacted timeline
+    let n = 128;
+    let steps = 8u64;
+    let sig = model_signature("cluster-cmp", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let cfg = ClusterConfig {
+        model_sig: sig,
+        gc: false,
+        compact_every: 4,
+        ..ClusterConfig::default()
+    };
+    let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 2), cfg);
+    let timeline = drive(&cluster, n, steps, None, 51);
+    let stats = cluster.finish();
+    assert_eq!(stats.torn_commits, 0);
+    assert_eq!(stats.global_commits, steps + 1);
+    // pass at diff commit 4 merges each rank's (1..2) — diff-3 is the
+    // previous record's protected tip — and the pass at commit 8 merges
+    // the complete (3..6) run, diff-7 being the protected previous tip:
+    // 2 spans per rank
+    assert_eq!(stats.merged_written, 4);
+    assert_eq!(stats.raw_compacted, 12, "6 raw diffs per rank superseded");
+
+    let names = store.list().unwrap();
+    for r in 0..2usize {
+        let chain = Manifest::rank_chain(&names, r, steps);
+        // + 2: the newest AND the previous record's tips stay raw so a
+        // one-deep record fallback keeps its CRC-pinned tip objects
+        assert!(
+            chain.diffs.len() <= (steps as usize).div_ceil(4) + 2,
+            "rank {r} replay set too large: {:?}",
+            chain.diffs
+        );
+        assert_eq!(
+            chain.diffs.iter().filter(|(_, _, n)| n.contains("merged-")).count(),
+            2,
+            "rank {r} chain must be merged spans + the raw tips"
+        );
+    }
+
+    let (got, cut) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!(cut.cut_step, steps);
+    assert_eq!(
+        got, timeline[steps as usize],
+        "compacted cluster chains must recover bit-identically"
+    );
+
+    // GC after compaction keeps exactly the reachable (merged) chain
+    gc_cluster(&store, sig).unwrap();
+    let (after, _) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!(after, timeline[steps as usize]);
+}
+
+/// Fails `global-*` record puts while armed — the crash window between
+/// the re-anchor's rank-namespace overwrites and the new record.
+struct FailGlobals<B: StorageBackend> {
+    inner: B,
+    armed: std::sync::atomic::AtomicBool,
+}
+
+impl<B: StorageBackend> StorageBackend for FailGlobals<B> {
+    fn put(&self, name: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !(self.armed.load(std::sync::atomic::Ordering::SeqCst) && name.starts_with("global-")),
+            "injected record-write failure for {name}"
+        );
+        self.inner.put(name, bytes)
+    }
+    fn get(&self, name: &str) -> anyhow::Result<Vec<u8>> {
+        self.inner.get(name)
+    }
+    fn delete(&self, name: &str) -> anyhow::Result<()> {
+        self.inner.delete(name)
+    }
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        self.inner.list()
+    }
+}
+
+#[test]
+fn reshard_crash_window_is_fail_safed_by_the_flat_net() {
+    // PR-3's documented residual window: when the cut epoch is a FULL at
+    // step S, the re-anchor overwrites `rank-*/full-{S}` in place; a crash
+    // before the new record lands invalidates the old record's tips and
+    // recovery regresses behind the cut. The safety-net full written by
+    // elastic_restart (before any overwrite) fail-safes it.
+    let n = 96;
+    let sig = model_signature("cluster-w", n);
+    let gate = Arc::new(FailGlobals { inner: MemStore::new(), armed: Default::default() });
+    let store: Arc<dyn StorageBackend> = gate.clone();
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let adam = Adam::default();
+
+    // phase 1: a healthy 2-rank run whose cut epoch is a FULL at step 3
+    let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 2), cfg.clone());
+    let mut rng = Rng::new(7);
+    let mut state = ModelState::new(Flat(vec![0.5; n]));
+    let mut timeline = vec![state.clone()];
+    cluster.put_full(0, &state);
+    for step in 1..=3u64 {
+        let g = grad(&mut rng, n);
+        cluster.put_diff_dense(step, &g);
+        adam.apply_sparse(&mut state, &SparseGrad::from_dense(&g));
+        timeline.push(state.clone());
+    }
+    cluster.put_full(3, &state);
+    let stats = cluster.finish();
+    assert_eq!(stats.torn_commits, 0);
+
+    // phase 2: the re-anchor overwrites rank-0000/full-3 under the NEW
+    // 1-rank partitioning, then the record write is killed — exactly the
+    // racing-crash schedule inside the window
+    gate.armed.store(true, std::sync::atomic::Ordering::SeqCst);
+    let res = elastic_restart(&store, &adam, partition_even(n, 1), cfg);
+    assert!(res.is_err(), "the torn re-anchor must surface");
+    drop(res);
+
+    // the pure cluster walk demonstrates the regression the window causes…
+    let (_, old_cut) = recover_cluster(&store, sig, &adam).unwrap();
+    assert_eq!(old_cut.cut_step, 2, "cluster-only recovery regresses behind the cut");
+    // …and the fail-safe recovers the full cut, bit-identically. A stale
+    // flat chain on the reused store must NOT be trusted — only the
+    // dedicated net object is
+    store.put(&Manifest::full_name(100), b"stale-flat-timeline-garbage").unwrap();
+    let (got, cut) = recover_cluster_or_net(&store, sig, &adam).unwrap();
+    assert!(cut.is_none(), "the reshard safety net must win");
+    assert_eq!(got.step, 3, "the net, not the stale flat chain, decides");
+    assert_eq!(got, timeline[3], "the cut survives the crash window");
 }
 
 #[test]

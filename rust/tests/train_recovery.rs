@@ -212,6 +212,7 @@ fn sharded_tiered_recovery_matches_single_object_property() {
                 gc: false,
                 n_shards: shards,
                 writers,
+                compact_every: 0,
             };
             let ck = Checkpointer::spawn(store, cfg);
             ck.queue.put(0, Arc::new(CkptItem::Full(state0.clone())));
@@ -258,6 +259,156 @@ fn sharded_tiered_recovery_matches_single_object_property() {
         prop_assert!(a == c, "durable tier alone must reconstruct the same state");
         Ok(())
     });
+}
+
+/// Property (tentpole acceptance): recovery from a background-compacted
+/// chain of n raw diffs replays at most ⌈n/merge_factor⌉ + 1 objects yet
+/// reconstructs **bit-identical** state to the uncompacted chain. Runs
+/// without PJRT artifacts (drives the checkpointer directly).
+#[test]
+fn compacted_chain_recovery_matches_uncompacted_property() {
+    prop_check("compacted_chain_recovery", 12, |rng| {
+        let n = rng.range(40, 160);
+        let steps = rng.range(4, 20) as u64;
+        let mf = rng.range(2, 6);
+        let sig = model_signature("cprop", n);
+        let grads: Vec<Flat> = (0..steps)
+            .map(|_| {
+                let mut g = vec![0f32; n];
+                rng.fill_normal_f32(&mut g);
+                topk_mask(&Flat(g), n / 10 + 1)
+            })
+            .collect();
+        let state0 = ModelState::new(Flat(vec![0.3; n]));
+
+        let drive = |compact_every: usize| {
+            let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+            let cfg = CkptConfig {
+                model_sig: sig,
+                gc: false,
+                compact_every,
+                ..CkptConfig::default()
+            };
+            let ck = Checkpointer::spawn(Arc::clone(&store), cfg);
+            ck.queue.put(0, Arc::new(CkptItem::Full(state0.clone())));
+            for (i, g) in grads.iter().enumerate() {
+                ck.queue
+                    .put(i as u64 + 1, Arc::new(CkptItem::DiffDense(g.clone())));
+            }
+            (store, ck.finish())
+        };
+        let (plain, pstats) = drive(0);
+        let (compacted, cstats) = drive(mf);
+        prop_assert!(pstats.merged_written == 0);
+        // chunk-aligned merging makes the final shape deterministic:
+        // floor(n/mf) full spans plus one merged tail when the tail has
+        // >= 2 objects to amortize
+        let want_merged = steps / mf as u64 + u64::from(steps % mf as u64 >= 2);
+        prop_assert!(
+            cstats.merged_written == want_merged,
+            "merged {} != expected {want_merged} (steps {steps}, mf {mf})",
+            cstats.merged_written
+        );
+
+        let adam = Adam::default();
+        let (a, astats) = recover(plain.as_ref(), sig, &adam, RecoveryMode::SerialReplay)
+            .map_err(|e| format!("plain recovery: {e:#}"))?;
+        let (b, bstats) = recover(compacted.as_ref(), sig, &adam, RecoveryMode::SerialReplay)
+            .map_err(|e| format!("compacted recovery: {e:#}"))?;
+        prop_assert!(a == b, "compacted replay diverged from the raw chain");
+        prop_assert!(astats.n_diff_objects == steps as usize);
+        prop_assert!(bstats.n_diff_steps == steps as usize, "every step must replay");
+        let bound = (steps as usize).div_ceil(mf) + 1;
+        prop_assert!(
+            bstats.n_diff_objects <= bound,
+            "replay touched {} objects, bound is {bound}",
+            bstats.n_diff_objects
+        );
+        prop_assert!(bstats.merged_objects as u64 == want_merged);
+        Ok(())
+    });
+}
+
+/// Crash-during-compaction (tentpole acceptance): a compactor that dies or
+/// tears its merged write must leave a chain that recovers bit-identically
+/// to the untouched one — exercised via [`FaultyStore`] fault injection
+/// around a direct `compact_chain` pass.
+#[test]
+fn crash_during_compaction_never_loses_recoverable_state() {
+    use lowdiff::checkpoint::manifest::Manifest;
+    use lowdiff::pipeline::{compact_chain, CompactStats, CompactorConfig};
+    use lowdiff::storage::{FaultConfig, FaultyStore};
+    use std::collections::HashSet;
+
+    let n = 120;
+    let steps = 6u64;
+    let sig = model_signature("ccrash", n);
+    let build = || {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let ck = Checkpointer::spawn(
+            Arc::clone(&store),
+            CkptConfig { model_sig: sig, gc: false, ..CkptConfig::default() },
+        );
+        let mut rng = lowdiff::util::rng::Rng::new(91);
+        ck.queue
+            .put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.4; n])))));
+        for step in 1..=steps {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            ck.queue
+                .put(step, Arc::new(CkptItem::DiffDense(topk_mask(&Flat(g), n / 10 + 1))));
+        }
+        ck.finish();
+        store
+    };
+    let adam = Adam::default();
+    let reference = build();
+    let (want, _) = recover(reference.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+
+    let ccfg = CompactorConfig {
+        model_sig: sig,
+        codec: PayloadCodec::Raw,
+        merge_factor: 3,
+        settle_tail: 0,
+    };
+    // (a) the merged put fails outright: raws intact, recovery unchanged
+    // (b) the merged put is torn (reports success, truncated bytes): the
+    //     read-back verification rolls it back, recovery unchanged
+    let faults = [
+        FaultConfig { put_fail: 1.0, ..FaultConfig::default() },
+        FaultConfig { torn_write: 1.0, ..FaultConfig::default() },
+    ];
+    for fc in faults {
+        let store = build();
+        let chain = Manifest::latest_chain(store.as_ref()).unwrap();
+        let faulty = FaultyStore::new(Arc::clone(&store), fc);
+        let mut stats = CompactStats::default();
+        let _ = compact_chain(&faulty, &chain, &ccfg, &HashSet::new(), true, &mut stats);
+        assert_eq!(stats.merged_written, 0, "no merged span may count as written");
+        let (got, rstats) =
+            recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(got, want, "crashed compaction must not change recovered state");
+        assert_eq!(rstats.n_diff_steps, steps as usize);
+        assert_eq!(rstats.damaged_objects, 0);
+    }
+
+    // (c) crash after the merged write, before the raw deletes: both
+    //     coexist; the cover prefers the merged span, state unchanged
+    let store = build();
+    let chain = Manifest::latest_chain(store.as_ref()).unwrap();
+    {
+        // run a clean pass, then resurrect the raw diffs as leftovers
+        let mut stats = CompactStats::default();
+        compact_chain(store.as_ref(), &chain, &ccfg, &HashSet::new(), true, &mut stats).unwrap();
+        assert_eq!(stats.merged_written, 2);
+        for (_, _, name) in &chain.diffs {
+            store.put(name, &reference.get(name).unwrap()).unwrap();
+        }
+    }
+    let (got, rstats) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(rstats.n_diff_objects, 2, "merged spans win over leftover raws");
+    assert_eq!(rstats.merged_objects, 2);
 }
 
 #[test]
