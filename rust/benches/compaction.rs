@@ -9,7 +9,10 @@
 //! Bit-identity of the recovered state is asserted on every run.
 //!
 //! Run: `cargo bench --bench compaction`; baseline in
-//! `BENCH_compaction.json`.
+//! `BENCH_compaction.json`. Compaction-vs-checkpoint-write *interference*
+//! (ungated vs the control plane's idle-triggered token-bucket gate) is
+//! measured by the companion `control_loop` bench, baseline in
+//! `BENCH_control.json`.
 
 mod common;
 

@@ -1,0 +1,163 @@
+//! Control-plane bench: (1) closed-loop §V-C convergence — ticks for the
+//! actuator to land within 20% of the Eq. (10) closed form from a
+//! deliberately bad config — and (2) checkpoint-write interference with
+//! background compaction I/O, ungated vs shaped through the [`IoGate`]'s
+//! idle-triggered token bucket.
+//!
+//! The interference experiment models one bandwidth-bound device
+//! ([`Throttled`]) shared by a foreground persist loop and a background
+//! compaction-like read/write loop. Ungated, background bytes queue ahead
+//! of foreground persists on the device's token bucket; gated, the
+//! background side defers to in-flight persists and pays a byte budget,
+//! so foreground persist latency drops. Run:
+//! `cargo bench --bench control_loop`; baseline in `BENCH_control.json`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lowdiff::control::{converge_synthetic, GatedStore, IoGate, IoGateConfig, Retune};
+use lowdiff::coordinator::config_opt::{optimal_config_integer, SystemParams};
+use lowdiff::storage::{MemStore, StorageBackend, Throttled};
+
+const DEVICE_BW: f64 = 200e6; // 200 MB/s device
+const OBJ: usize = 1 << 20; // 1 MiB foreground persists
+const BG_OBJ: usize = 1 << 20; // 1 MiB background compaction ops
+const PERSISTS: usize = 24;
+
+fn convergence() -> (u64, u64, f64, u64) {
+    let full_size = 1.5e9;
+    let p = SystemParams {
+        n_gpus: 8.0,
+        mtbf: 900.0,
+        write_bw: 2.5e9,
+        full_size,
+        total_time: 24.0 * 3600.0,
+        r_full: full_size / 2.5e9,
+        r_diff: 0.2,
+    };
+    let iter_time = 1.9;
+    let (want_f, _) = optimal_config_integer(&p, iter_time);
+    let bad = Retune { full_every: want_f * 50, batch_size: 64, compact_every: 0 };
+    // find the first tick budget that lands within 20%
+    let mut ticks_to_converge = 0u64;
+    for ticks in (10usize..=600).step_by(10) {
+        let got = converge_synthetic(p, iter_time, bad, ticks).applied();
+        let err = (got.full_every as f64 - want_f as f64).abs() / want_f as f64;
+        if err <= 0.2 {
+            ticks_to_converge = ticks as u64;
+            break;
+        }
+    }
+    let a = converge_synthetic(p, iter_time, bad, 600);
+    let got = a.applied();
+    let final_err = (got.full_every as f64 - want_f as f64).abs() / want_f as f64;
+    (want_f, ticks_to_converge, final_err, a.retunes)
+}
+
+/// Foreground persist latency (mean ms) while a background thread hammers
+/// the same throttled device; `gate` shapes the background side when set.
+fn interference(gate: Option<Arc<IoGate>>) -> (f64, f64, u64) {
+    let device: Arc<dyn StorageBackend> = Arc::new(Throttled::new(
+        MemStore::new(),
+        DEVICE_BW,
+        Duration::from_millis(1),
+    ));
+    let bg_store: Arc<dyn StorageBackend> = match &gate {
+        Some(g) => Arc::new(GatedStore::new(Arc::clone(&device), Arc::clone(g))),
+        None => Arc::clone(&device),
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let bg = {
+        let stop = Arc::clone(&stop);
+        let payload = vec![0x5Au8; BG_OBJ];
+        std::thread::spawn(move || {
+            let mut i = 0usize;
+            let mut bytes = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                bg_store.put(&format!("bg-{i:06}"), &payload).unwrap();
+                bytes += BG_OBJ as u64;
+                i += 1;
+            }
+            bytes
+        })
+    };
+    let payload = vec![0xA5u8; OBJ];
+    let mut lat = Vec::with_capacity(PERSISTS);
+    for i in 0..PERSISTS {
+        let t0 = Instant::now();
+        let _guard = gate.as_ref().map(|g| g.persist_guard());
+        device.put(&format!("ckpt-{i:06}"), &payload).unwrap();
+        drop(_guard);
+        lat.push(t0.elapsed().as_secs_f64());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::SeqCst);
+    let bg_bytes = bg.join().unwrap();
+    let mean = lat.iter().sum::<f64>() / lat.len() as f64 * 1e3;
+    let mut sorted = lat.clone();
+    sorted.sort_by(f64::total_cmp);
+    let p90 = sorted[(sorted.len() * 9) / 10 - 1] * 1e3;
+    (mean, p90, bg_bytes)
+}
+
+fn main() {
+    println!("== §V-C closed-loop convergence ==");
+    let (want_f, ticks, final_err, retunes) = convergence();
+    println!(
+        "closed-form FCF* = {want_f}; within 20% after {ticks} ticks; \
+         final err {:.1}% after 600 ticks ({retunes} retunes)",
+        final_err * 100.0
+    );
+    assert!(ticks > 0, "never converged within 600 ticks");
+    assert!(final_err <= 0.2, "final error {final_err} above the 20% acceptance");
+
+    println!("\n== checkpoint-write interference (200 MB/s device) ==");
+    let (u_mean, u_p90, u_bytes) = interference(None);
+    println!(
+        "ungated : persist mean {u_mean:>7.1} ms  p90 {u_p90:>7.1} ms  bg {:.0} MB",
+        u_bytes as f64 / 1e6
+    );
+    let gate = Arc::new(IoGate::new(IoGateConfig {
+        bytes_per_sec: 50e6, // background budget: 25% of the device
+        max_defer: Duration::from_millis(50),
+        ..IoGateConfig::default()
+    }));
+    let (g_mean, g_p90, g_bytes) = interference(Some(Arc::clone(&gate)));
+    let gs = gate.stats();
+    println!(
+        "gated   : persist mean {g_mean:>7.1} ms  p90 {g_p90:>7.1} ms  bg {:.0} MB \
+         (deferred {} ops / {:.1} ms, contended {:.1} MB)",
+        g_bytes as f64 / 1e6,
+        gs.deferred_ops,
+        gs.deferred_secs * 1e3,
+        gs.contended_bytes as f64 / 1e6,
+    );
+
+    // machine-readable block for BENCH_control.json
+    println!("\n{{");
+    println!("  \"bench\": \"control_loop\",");
+    println!(
+        "  \"convergence\": {{ \"closed_form_fcf\": {want_f}, \"ticks_to_20pct\": {ticks}, \
+         \"final_err_pct\": {:.2}, \"retunes\": {retunes} }},",
+        final_err * 100.0
+    );
+    println!(
+        "  \"interference\": {{ \"ungated_persist_ms\": {u_mean:.1}, \
+         \"gated_persist_ms\": {g_mean:.1}, \"ungated_p90_ms\": {u_p90:.1}, \
+         \"gated_p90_ms\": {g_p90:.1}, \"deferred_ops\": {}, \"contended_mb\": {:.1} }}",
+        gs.deferred_ops,
+        gs.contended_bytes as f64 / 1e6
+    );
+    println!("}}");
+
+    // acceptance: the gate must cut foreground persist latency — the
+    // background side is rate-capped AND yields to in-flight persists
+    assert!(
+        g_mean < u_mean,
+        "gated persists must be faster: {g_mean:.1} ms vs {u_mean:.1} ms ungated"
+    );
+    println!(
+        "\nacceptance: persist mean {u_mean:.1} -> {g_mean:.1} ms under the gate (PASS)"
+    );
+}

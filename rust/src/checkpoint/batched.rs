@@ -74,6 +74,20 @@ impl BatchBuffer {
         }
     }
 
+    /// Retune the batching size (§V-C actuation). Callers must flush the
+    /// pending batch first — resizing mid-batch would change the steps a
+    /// half-built container covers.
+    pub fn set_batch_size(&mut self, batch_size: usize) {
+        assert!(batch_size >= 1);
+        debug_assert!(self.is_empty(), "retune must flush the pending batch first");
+        self.batch_size = batch_size;
+    }
+
+    /// Current batching size.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
     /// Gradients absorbed since the last flush.
     pub fn len(&self) -> usize {
         match self.mode {

@@ -527,6 +527,10 @@ pub(crate) fn gc_with_record(store: &Arc<dyn StorageBackend>, rec: &GlobalRecord
 
 /// Delete everything except `keep` and in-flight objects beyond `cut`,
 /// over an already-listed logical view (one view + one listing per pass).
+/// Deletes are best-effort per object: the background compaction
+/// scheduler legitimately races this sweep (it deletes raws it just
+/// superseded with a merged span), so an already-gone object is skipped,
+/// never a sweep abort.
 fn sweep(logical: &Sharded, names: &[String], cut: u64, keep: &HashSet<String>) -> Result<usize> {
     let mut removed = 0;
     for name in names {
@@ -544,8 +548,10 @@ fn sweep(logical: &Sharded, names: &[String], cut: u64, keep: &HashSet<String>) 
             false // top-level (non-cluster) objects are not ours to collect
         };
         if doomed {
-            logical.delete(name)?;
-            removed += 1;
+            match logical.delete(name) {
+                Ok(()) => removed += 1,
+                Err(e) => log::debug!("gc sweep: {name} already gone? ({e:#})"),
+            }
         }
     }
     Ok(removed)

@@ -187,9 +187,20 @@ pub struct ClusterConfig {
     /// per-rank command-queue depth (training-thread backpressure)
     pub queue_capacity: usize,
     /// background chain compaction: every this many committed diff epochs
-    /// the coordinator merges runs of that many raw per-rank diff objects
-    /// (strictly below the cut) into `MergedDiff` spans; < 2 disables
+    /// the scheduler merges runs of that many raw per-rank diff objects
+    /// (strictly below the cut) into `MergedDiff` spans; < 2 disables.
+    /// Retunable at runtime via [`Cluster::set_compact_every`] — applied
+    /// by the coordinator at the next committed epoch boundary so every
+    /// rank switches at the same committed epoch
     pub compact_every: usize,
+    /// background-I/O byte budget for the compaction scheduler's
+    /// token-bucket gate (`--io-budget`); <= 0 leaves the bucket open
+    pub io_budget: f64,
+    /// control-plane telemetry bus: rank persists, the commit thread and
+    /// the compaction scheduler feed it; its presence spawns the
+    /// scheduler thread even at `compact_every < 2` so actuation can
+    /// enable compaction live
+    pub telemetry: Option<std::sync::Arc<crate::control::telemetry::TelemetryBus>>,
 }
 
 impl Default for ClusterConfig {
@@ -202,7 +213,16 @@ impl Default for ClusterConfig {
             gc: true,
             queue_capacity: 8,
             compact_every: 0,
+            io_budget: 0.0,
+            telemetry: None,
         }
+    }
+}
+
+impl ClusterConfig {
+    /// True when the runtime control plane is attached.
+    pub fn uses_control(&self) -> bool {
+        self.telemetry.is_some() || self.io_budget > 0.0
     }
 }
 

@@ -18,7 +18,7 @@
 //! rank threads, exactly like the single-rank checkpointer — but R-wide.
 
 use std::collections::{BTreeMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -30,6 +30,7 @@ use crate::cluster::commit::{gc_with_record, CommitKind, GlobalRecord, RankObjec
 use crate::cluster::{
     rank_sig, slice_state, split_dense, validate_partitions, ClusterConfig, Partition,
 };
+use crate::control::iosched::{GatedStore, IoGate, IoGateConfig};
 use crate::coordinator::checkpointer::CkptStats;
 use crate::optim::ModelState;
 use crate::pipeline::{compact_chain, CompactStats, CompactorConfig, Encoder, Sink};
@@ -66,15 +67,26 @@ pub struct ClusterStats {
     pub torn_commits: u64,
     /// bytes of global commit records written
     pub record_bytes: u64,
-    /// coordinator wall time in phase 2 (record writes + cluster GC +
-    /// background compaction passes)
+    /// coordinator wall time in phase 2 (record writes + cluster GC).
+    /// Compaction passes run on the dedicated scheduler thread and are
+    /// accounted in [`compact_secs`](ClusterStats::compact_secs), NOT
+    /// here — commit latency no longer pays for background maintenance
     pub commit_secs: f64,
     /// objects removed by coordinator-run cluster GC
     pub gc_removed: u64,
-    /// merged spans written by coordinator-run chain compaction
+    /// merged spans written by scheduler-run chain compaction
     pub merged_written: u64,
     /// raw per-rank diff objects superseded by merged spans
     pub raw_compacted: u64,
+    /// wall seconds the background scheduler spent in compaction passes
+    /// (off the commit thread, shaped by the I/O gate)
+    pub compact_secs: f64,
+    /// protected record tips demoted out of a tiered store's fast tier
+    /// after compaction (write-cold, kept durable for fallback recovery)
+    pub tips_demoted: u64,
+    /// §V-C actuation: merge-factor retunes applied at committed epoch
+    /// boundaries
+    pub retunes: u64,
 }
 
 impl ClusterStats {
@@ -96,7 +108,16 @@ struct CoordStats {
     record_bytes: u64,
     commit_secs: f64,
     gc_removed: u64,
+    retunes: u64,
+    sched: SchedStats,
+}
+
+/// Counters owned by the background compaction scheduler thread.
+#[derive(Clone, Debug, Default)]
+struct SchedStats {
     compact: CompactStats,
+    busy_secs: f64,
+    tips_demoted: u64,
 }
 
 /// Handle to a running rank cluster.
@@ -113,6 +134,10 @@ pub struct Cluster {
     /// epochs fully processed by the coordinator (committed + torn)
     processed: Arc<AtomicU64>,
     committed: Arc<AtomicU64>,
+    /// live compaction merge factor (§V-C actuation): read by the
+    /// coordinator after each committed record, so a retune takes effect
+    /// at a committed epoch boundary for every rank at once
+    compact_every: Arc<AtomicUsize>,
 }
 
 impl Cluster {
@@ -156,6 +181,15 @@ impl Cluster {
         // at recovery time, when nothing can be re-written
         let total: usize = partitions.iter().map(|p| p.len).sum();
         validate_partitions(&partitions, total).expect("cluster partition table");
+        // the control plane: ONE gate shared by every rank's persist path
+        // (guards) and the compaction scheduler (shaped I/O) — background
+        // passes yield to any rank's in-flight phase-1 write
+        let gate: Option<Arc<IoGate>> = (cfg.compact_every >= 2 || cfg.uses_control()).then(|| {
+            Arc::new(IoGate::with_bus(
+                IoGateConfig { bytes_per_sec: cfg.io_budget, ..IoGateConfig::default() },
+                cfg.telemetry.clone(),
+            ))
+        });
         let (ack_tx, ack_rx) = channel::<RankAck>();
         let mut txs = Vec::with_capacity(partitions.len());
         let mut rank_handles = Vec::with_capacity(partitions.len());
@@ -164,9 +198,10 @@ impl Cluster {
             let rstore = rank_store(part.rank);
             let acks = ack_tx.clone();
             let rcfg = cfg.clone();
+            let rgate = gate.clone();
             let h = std::thread::Builder::new()
                 .name(format!("rank-{:04}", part.rank))
-                .spawn(move || rank_loop(part, rstore, rcfg, rx, acks))
+                .spawn(move || rank_loop(part, rstore, rcfg, rx, acks, rgate))
                 .expect("spawning rank thread");
             txs.push(tx);
             rank_handles.push(h);
@@ -175,13 +210,15 @@ impl Cluster {
         drop(ack_tx); // coordinator exits once rank + cluster senders are gone
         let processed = Arc::new(AtomicU64::new(0));
         let committed = Arc::new(AtomicU64::new(0));
+        let compact_every = Arc::new(AtomicUsize::new(cfg.compact_every));
         let coord = {
             let parts = partitions.clone();
             let pr = Arc::clone(&processed);
             let cm = Arc::clone(&committed);
+            let mf = Arc::clone(&compact_every);
             std::thread::Builder::new()
                 .name("cluster-commit".into())
-                .spawn(move || coordinator_loop(store, cfg, parts, ack_rx, pr, cm))
+                .spawn(move || coordinator_loop(store, cfg, parts, ack_rx, pr, cm, mf, gate))
                 .expect("spawning commit coordinator")
         };
         Cluster {
@@ -193,7 +230,18 @@ impl Cluster {
             next_seq: AtomicU64::new(0),
             processed,
             committed,
+            compact_every,
         }
+    }
+
+    /// §V-C actuation: retune the compaction merge factor (`< 2`
+    /// disables). The coordinator reads the knob after each committed
+    /// phase-2 record, so the switch is piggybacked on the global commit
+    /// stream — every rank's chain sees the new factor from the same
+    /// committed epoch; nothing below an already-committed cut is
+    /// re-interpreted.
+    pub fn set_compact_every(&self, mf: usize) {
+        self.compact_every.store(mf, Ordering::SeqCst);
     }
 
     pub fn n_ranks(&self) -> usize {
@@ -296,8 +344,11 @@ impl Cluster {
             record_bytes: c.record_bytes,
             commit_secs: c.commit_secs,
             gc_removed: c.gc_removed,
-            merged_written: c.compact.merged_written,
-            raw_compacted: c.compact.raw_compacted,
+            merged_written: c.sched.compact.merged_written,
+            raw_compacted: c.sched.compact.raw_compacted,
+            compact_secs: c.sched.busy_secs,
+            tips_demoted: c.sched.tips_demoted,
+            retunes: c.retunes,
         }
     }
 }
@@ -326,11 +377,13 @@ fn rank_loop(
     cfg: ClusterConfig,
     rx: Receiver<RankCmd>,
     acks: Sender<RankAck>,
+    gate: Option<Arc<IoGate>>,
 ) -> CkptStats {
     let sig = rank_sig(cfg.model_sig, &part);
     let prefix = Manifest::rank_prefix(part.rank);
     let enc = Encoder::new(sig, cfg.codec, 4);
-    let mut sink = Sink::new(Arc::clone(&store), cfg.n_shards, cfg.writers, 4);
+    let mut sink = Sink::new(Arc::clone(&store), cfg.n_shards, cfg.writers, 4)
+        .with_control(gate, cfg.telemetry.clone());
     let mut stats = CkptStats::default();
 
     while let Ok(cmd) = rx.recv() {
@@ -386,6 +439,14 @@ struct Pending {
     failed: bool,
 }
 
+/// One unit of background maintenance handed from the commit thread to
+/// the scheduler: compact every rank's chain strictly below `rec`'s cut.
+struct SchedJob {
+    rec: GlobalRecord,
+    prev_tips: HashSet<String>,
+    merge_factor: usize,
+}
+
 /// Phase 2: assemble acks per epoch and write records strictly in epoch
 /// order — a record for epoch k is written only after epochs `..k` were
 /// each either committed or declared torn, so commit order is always a
@@ -399,6 +460,16 @@ struct Pending {
 /// poisoned; the next phase-1-complete **full** epoch re-bases every
 /// rank's chain and clears the poison. A torn full epoch loses only its
 /// own record — it holes no chain.
+///
+/// **Compaction is NOT run here.** The commit thread only *enqueues*
+/// [`SchedJob`]s to the dedicated `cluster-iosched` thread (mirroring the
+/// flat runtime's [`Compactor`](crate::pipeline::Compactor)), so
+/// `commit_secs` measures the commit protocol alone and compaction reads
+/// never serialize behind record writes. Jobs execute FIFO with the
+/// (record, protected-tips) snapshot captured at commit time, so the
+/// merged spans produced are the same objects the old inline passes
+/// produced — only off-thread and shaped by the I/O gate.
+#[allow(clippy::too_many_arguments)]
 fn coordinator_loop(
     store: Arc<dyn StorageBackend>,
     cfg: ClusterConfig,
@@ -406,6 +477,8 @@ fn coordinator_loop(
     ack_rx: Receiver<RankAck>,
     processed: Arc<AtomicU64>,
     committed: Arc<AtomicU64>,
+    mf_knob: Arc<AtomicUsize>,
+    gate: Option<Arc<IoGate>>,
 ) -> CoordStats {
     let n = partitions.len();
     let mut pending: BTreeMap<u64, Pending> = BTreeMap::new();
@@ -416,19 +489,19 @@ fn coordinator_loop(
     // consume them either, or the newest record's one-deep fallback (a
     // later torn/damaged record) would lose its CRC-pinned tip objects
     let mut prev_tips: HashSet<String> = HashSet::new();
-    // one logical view shared by every compaction pass. Mirror the rank
-    // write path: wrap in a shard-aware view ONLY when ranks shard —
-    // `Sharded::put` always writes shard + index objects, which would turn
-    // plain-layout merged spans into shard artifacts invisible to raw
-    // store listings (and each Sharded carries a writer thread; never
-    // build one per pass)
-    let compact_view: Option<Arc<dyn StorageBackend>> = (cfg.compact_every >= 2).then(|| {
-        if cfg.n_shards > 1 || cfg.writers > 1 {
-            Arc::new(Sharded::new(Arc::clone(&store), 1, 1)) as Arc<dyn StorageBackend>
-        } else {
-            Arc::clone(&store)
-        }
+    // the dedicated background scheduler (exists whenever compaction is
+    // configured or the control plane could enable it live)
+    let sched: Option<(Sender<SchedJob>, JoinHandle<SchedStats>)> = gate.map(|g| {
+        let (tx, rx) = channel::<SchedJob>();
+        let sstore = Arc::clone(&store);
+        let scfg = cfg.clone();
+        let h = std::thread::Builder::new()
+            .name("cluster-iosched".into())
+            .spawn(move || scheduler_loop(sstore, scfg, g, rx))
+            .expect("spawning cluster I/O scheduler");
+        (tx, h)
     });
+    let mut active_mf = cfg.compact_every;
     let mut out = CoordStats::default();
     while let Ok(ack) = ack_rx.recv() {
         let e = pending.entry(ack.seq).or_insert_with(|| Pending {
@@ -461,17 +534,38 @@ fn coordinator_loop(
         while pending.get(&next_seq).is_some_and(|p| p.received == n) {
             let p = pending.remove(&next_seq).unwrap();
             let kind = p.kind;
+            let commit_secs_before = out.commit_secs;
             let rec = commit_epoch(&store, &cfg, next_seq, p, &committed, &mut poisoned, &mut out);
+            if let Some(bus) = &cfg.telemetry {
+                bus.record_commit(out.commit_secs - commit_secs_before);
+            }
             if let Some(rec) = rec {
+                // §V-C actuation safe point: the knob is sampled right
+                // after a committed record, so every rank's chain switches
+                // merge factor from the same committed epoch
+                let mf = mf_knob.load(Ordering::SeqCst);
+                if mf != active_mf {
+                    log::debug!(
+                        "cluster retune at committed step {}: compact_every {active_mf} -> {mf}",
+                        rec.step
+                    );
+                    active_mf = mf;
+                    diffs_since_compact = 0;
+                    out.retunes += 1;
+                }
                 // background incremental merging: every `compact_every`
-                // committed diff epochs, compact each rank's chain below
-                // the newly-committed cut (docs/PIPELINE.md)
-                if let Some(view) = &compact_view {
-                    if kind == CommitKind::Diff {
+                // committed diff epochs, enqueue a pass compacting each
+                // rank's chain below the newly-committed cut
+                if let Some((tx, _)) = &sched {
+                    if kind == CommitKind::Diff && active_mf >= 2 {
                         diffs_since_compact += 1;
-                        if diffs_since_compact >= cfg.compact_every {
+                        if diffs_since_compact >= active_mf {
                             diffs_since_compact = 0;
-                            compact_cluster_chains(view.as_ref(), &cfg, &rec, &prev_tips, &mut out);
+                            let _ = tx.send(SchedJob {
+                                rec: rec.clone(),
+                                prev_tips: prev_tips.clone(),
+                                merge_factor: active_mf,
+                            });
                         }
                     }
                 }
@@ -486,6 +580,59 @@ fn coordinator_loop(
         log::warn!("{} epochs never completed phase 1 (torn)", pending.len());
         out.torn += pending.len() as u64;
         processed.fetch_add(pending.len() as u64, Ordering::SeqCst);
+    }
+    // drain the scheduler: every enqueued pass completes before finish()
+    if let Some((tx, h)) = sched {
+        drop(tx);
+        if let Ok(stats) = h.join() {
+            out.sched = stats;
+        }
+    }
+    out
+}
+
+/// The dedicated background-maintenance thread (`cluster-iosched`): runs
+/// compaction passes FIFO off the commit thread, every read/write shaped
+/// through the I/O gate so it yields to in-flight rank persists and pays
+/// the `--io-budget` token bucket.
+fn scheduler_loop(
+    store: Arc<dyn StorageBackend>,
+    cfg: ClusterConfig,
+    gate: Arc<IoGate>,
+    rx: Receiver<SchedJob>,
+) -> SchedStats {
+    // one logical view shared by every pass. Mirror the rank write path:
+    // wrap in a shard-aware view ONLY when ranks shard — `Sharded::put`
+    // always writes shard + index objects, which would turn plain-layout
+    // merged spans into shard artifacts invisible to raw store listings
+    // (and each Sharded carries a writer thread; never build one per pass)
+    let logical_inner: Arc<dyn StorageBackend> = if cfg.n_shards > 1 || cfg.writers > 1 {
+        Arc::new(Sharded::new(Arc::clone(&store), 1, 1))
+    } else {
+        Arc::clone(&store)
+    };
+    let logical: Arc<dyn StorageBackend> = Arc::new(GatedStore::new(logical_inner, gate));
+    let mut out = SchedStats::default();
+    while let Ok(job) = rx.recv() {
+        let t0 = Instant::now();
+        let before = out.compact.clone();
+        compact_cluster_chains(
+            logical.as_ref(),
+            &cfg,
+            job.merge_factor,
+            &job.rec,
+            &job.prev_tips,
+            &mut out,
+        );
+        out.busy_secs += t0.elapsed().as_secs_f64();
+        if let Some(bus) = &cfg.telemetry {
+            bus.record_compaction(
+                out.compact.merged_written - before.merged_written,
+                out.compact.raw_compacted - before.raw_compacted,
+                (out.compact.bytes_read - before.bytes_read)
+                    + (out.compact.bytes_written - before.bytes_written),
+            );
+        }
     }
     out
 }
@@ -557,22 +704,25 @@ fn commit_epoch(
     committed_rec
 }
 
-/// Coordinator-run background compaction (incremental-merging
-/// persistence): for every rank in the just-committed record, merge runs
-/// of raw diff objects **strictly below the cut** into `MergedDiff`
-/// spans. Protected from consumption: the new record's tip objects AND
-/// the previous record's (both have CRC-pinned tips a fallback may need
-/// to re-verify), so recovery keeps at least one-deep record fallback.
-/// Raw diffs become collectible only through `compact_chain`'s
-/// durable-and-verified-before-delete rule (docs/PIPELINE.md).
+/// Scheduler-run background compaction (incremental-merging
+/// persistence): for every rank in a committed record, merge runs of raw
+/// diff objects **strictly below the cut** into `MergedDiff` spans.
+/// Protected from consumption: the record's tip objects AND the previous
+/// record's (both have CRC-pinned tips a fallback may need to
+/// re-verify), so recovery keeps at least one-deep record fallback. Raw
+/// diffs become collectible only through `compact_chain`'s
+/// durable-and-verified-before-delete rule (docs/PIPELINE.md). The
+/// protected previous tips are write-cold from here on: on a tiered
+/// store they are demoted out of the fast tier (kept durable — fallback
+/// recovery still reads them, just slower).
 fn compact_cluster_chains(
     logical: &dyn StorageBackend,
     cfg: &ClusterConfig,
+    merge_factor: usize,
     rec: &GlobalRecord,
     prev_tips: &HashSet<String>,
-    out: &mut CoordStats,
+    out: &mut SchedStats,
 ) {
-    let t0 = Instant::now();
     let names = match logical.list() {
         Ok(n) => n,
         Err(e) => {
@@ -587,7 +737,7 @@ fn compact_cluster_chains(
         let ccfg = CompactorConfig {
             model_sig: rank_sig(cfg.model_sig, &part),
             codec: cfg.codec,
-            merge_factor: cfg.compact_every,
+            merge_factor,
             // phase-1 acks are blocking-durable and the record committed,
             // so everything at or below the cut is settled
             settle_tail: 0,
@@ -600,7 +750,13 @@ fn compact_cluster_chains(
             log::warn!("rank {} compaction failed: {e:#}", ro.rank);
         }
     }
-    out.commit_secs += t0.elapsed().as_secs_f64();
+    // tiered placement: the previous record's tips were kept only for
+    // one-deep fallback — write-cold, demote their fast-tier copies
+    for tip in prev_tips {
+        if logical.demote(tip).unwrap_or(false) {
+            out.tips_demoted += 1;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,375 @@
+//! Interference-aware I/O scheduling for background checkpoint
+//! maintenance.
+//!
+//! Chain compaction reads raw diff objects and writes merged spans on the
+//! **same backend** the checkpoint persist path writes — on a bandwidth-
+//! bound device every background byte is a foreground byte delayed
+//! (TierCheck's lesson: checkpoint I/O and foreground traffic must be
+//! actively scheduled, not just tolerated). The [`IoGate`] shapes the
+//! background side with two mechanisms:
+//!
+//! 1. **Idle triggering**: every persist on the write path holds a
+//!    [`PersistGuard`] while it occupies the device; background ops
+//!    ([`IoGate::throttle`]) yield while any persist is in flight, up to
+//!    a bounded defer (so compaction can never be starved forever — past
+//!    the bound it proceeds and the contended bytes are *counted*, not
+//!    hidden).
+//! 2. **Token bucket**: an optional byte-rate budget
+//!    ([`IoGateConfig::bytes_per_sec`], the `--io-budget` CLI knob)
+//!    serializes background bytes at a fixed rate, exactly like the
+//!    device model in [`Throttled`](crate::storage::Throttled).
+//!
+//! [`GatedStore`] routes a whole [`StorageBackend`] through the gate —
+//! the compactor's logical store view is wrapped in one, so every
+//! compaction read and merged write is shaped without the compaction code
+//! knowing. Interference actually observed (deferred seconds, bytes that
+//! proceeded under contention) flows to the
+//! [`TelemetryBus`](crate::control::telemetry::TelemetryBus) and the
+//! `control_loop` bench.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::control::telemetry::TelemetryBus;
+use crate::storage::{StorageBackend, StorageStats};
+
+/// Gate policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct IoGateConfig {
+    /// background byte budget; <= 0 disables the token bucket (idle
+    /// triggering still applies)
+    pub bytes_per_sec: f64,
+    /// longest a background op defers to in-flight persists before
+    /// proceeding anyway (starvation bound)
+    pub max_defer: Duration,
+    /// defer-poll interval
+    pub poll: Duration,
+}
+
+impl Default for IoGateConfig {
+    fn default() -> Self {
+        IoGateConfig {
+            bytes_per_sec: 0.0,
+            max_defer: Duration::from_millis(20),
+            poll: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Observed gate activity.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct IoGateStats {
+    /// background ops that yielded to at least one in-flight persist
+    pub deferred_ops: u64,
+    pub deferred_secs: f64,
+    /// background bytes that proceeded while a persist was in flight
+    /// (the residual interference after the defer bound)
+    pub contended_bytes: u64,
+    /// total background bytes admitted through the gate
+    pub throttled_bytes: u64,
+}
+
+/// The shared gate: persist side marks occupancy, background side asks
+/// for admission.
+#[derive(Debug)]
+pub struct IoGate {
+    cfg: IoGateConfig,
+    persists: AtomicU64,
+    /// token-bucket state: time before which the background budget is
+    /// spoken for (same busy-until scheme as [`Throttled`])
+    busy_until: Mutex<Instant>,
+    deferred_ops: AtomicU64,
+    deferred_nanos: AtomicU64,
+    contended_bytes: AtomicU64,
+    throttled_bytes: AtomicU64,
+    bus: Option<Arc<TelemetryBus>>,
+}
+
+impl IoGate {
+    pub fn new(cfg: IoGateConfig) -> IoGate {
+        IoGate::with_bus(cfg, None)
+    }
+
+    pub fn with_bus(cfg: IoGateConfig, bus: Option<Arc<TelemetryBus>>) -> IoGate {
+        IoGate {
+            cfg,
+            persists: AtomicU64::new(0),
+            busy_until: Mutex::new(Instant::now()),
+            deferred_ops: AtomicU64::new(0),
+            deferred_nanos: AtomicU64::new(0),
+            contended_bytes: AtomicU64::new(0),
+            throttled_bytes: AtomicU64::new(0),
+            bus,
+        }
+    }
+
+    /// Mark one foreground persist in flight for the guard's lifetime.
+    pub fn persist_guard(self: &Arc<Self>) -> PersistGuard {
+        self.persists.fetch_add(1, Ordering::SeqCst);
+        PersistGuard { gate: Arc::clone(self) }
+    }
+
+    /// Foreground persists currently holding the device.
+    pub fn persists_inflight(&self) -> u64 {
+        self.persists.load(Ordering::SeqCst)
+    }
+
+    /// Admit `bytes` of background I/O: first yield to in-flight persists
+    /// (bounded), then pay the token bucket. For ops whose size is only
+    /// known afterwards (reads), call [`yield_to_persists`]
+    /// (IoGate::yield_to_persists) BEFORE the op and [`charge`]
+    /// (IoGate::charge) after — yielding after the device was already
+    /// touched would protect nothing.
+    pub fn throttle(&self, bytes: u64) {
+        self.yield_to_persists();
+        self.charge(bytes);
+    }
+
+    /// The idle trigger: block while any persist is in flight, up to the
+    /// bounded defer. Must run BEFORE the background op touches the
+    /// device.
+    pub fn yield_to_persists(&self) {
+        let t0 = Instant::now();
+        let mut deferred = false;
+        while self.persists_inflight() > 0 && t0.elapsed() < self.cfg.max_defer {
+            deferred = true;
+            std::thread::sleep(self.cfg.poll);
+        }
+        if deferred {
+            let waited = t0.elapsed();
+            self.deferred_ops.fetch_add(1, Ordering::Relaxed);
+            self.deferred_nanos
+                .fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+            if let Some(bus) = &self.bus {
+                bus.record_defer(waited.as_secs_f64());
+            }
+        }
+    }
+
+    /// Account + rate-limit `bytes` of background I/O that is happening
+    /// (or just happened) anyway; bytes moved while a persist was in
+    /// flight are counted as residual interference.
+    pub fn charge(&self, bytes: u64) {
+        if self.persists_inflight() > 0 {
+            // defer bound hit (or the persist arrived mid-op): the bytes
+            // moved under contention — make the interference observable
+            self.contended_bytes.fetch_add(bytes, Ordering::Relaxed);
+            if let Some(bus) = &self.bus {
+                bus.record_contention(bytes);
+            }
+        }
+        if self.cfg.bytes_per_sec > 0.0 {
+            let cost = Duration::from_secs_f64(bytes as f64 / self.cfg.bytes_per_sec);
+            let wake = {
+                let mut busy = self.busy_until.lock().unwrap();
+                let start = (*busy).max(Instant::now());
+                *busy = start + cost;
+                *busy
+            };
+            let now = Instant::now();
+            if wake > now {
+                std::thread::sleep(wake - now);
+            }
+        }
+        self.throttled_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> IoGateStats {
+        IoGateStats {
+            deferred_ops: self.deferred_ops.load(Ordering::Relaxed),
+            deferred_secs: self.deferred_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            contended_bytes: self.contended_bytes.load(Ordering::Relaxed),
+            throttled_bytes: self.throttled_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII persist marker; see [`IoGate::persist_guard`].
+#[derive(Debug)]
+pub struct PersistGuard {
+    gate: Arc<IoGate>,
+}
+
+impl Drop for PersistGuard {
+    fn drop(&mut self) {
+        self.gate.persists.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A [`StorageBackend`] whose puts and gets pay the gate — background
+/// maintenance (compaction) reads/writes through one of these while the
+/// foreground write path uses the raw store plus persist guards.
+pub struct GatedStore {
+    inner: Arc<dyn StorageBackend>,
+    gate: Arc<IoGate>,
+}
+
+impl GatedStore {
+    pub fn new(inner: Arc<dyn StorageBackend>, gate: Arc<IoGate>) -> GatedStore {
+        GatedStore { inner, gate }
+    }
+}
+
+impl StorageBackend for GatedStore {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        self.gate.throttle(bytes.len() as u64);
+        self.inner.put(name, bytes)
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        // yield BEFORE touching the device (the size is only known after,
+        // so the token bucket is charged after the fact)
+        self.gate.yield_to_persists();
+        let b = self.inner.get(name)?;
+        self.gate.charge(b.len() as u64);
+        Ok(b)
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        self.inner.delete(name)
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.inner.exists(name)
+    }
+
+    fn put_vectored(&self, name: &str, parts: &[&[u8]]) -> Result<()> {
+        self.gate
+            .throttle(parts.iter().map(|p| p.len() as u64).sum());
+        self.inner.put_vectored(name, parts)
+    }
+
+    fn demote(&self, name: &str) -> Result<bool> {
+        self.inner.demote(name)
+    }
+
+    fn storage_stats(&self) -> StorageStats {
+        self.inner.storage_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    #[test]
+    fn token_bucket_enforces_background_budget() {
+        let gate = IoGate::new(IoGateConfig { bytes_per_sec: 1e6, ..Default::default() });
+        let t0 = Instant::now();
+        gate.throttle(100_000); // 0.1 s at 1 MB/s
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.09, "budget not enforced: {dt}");
+        assert_eq!(gate.stats().throttled_bytes, 100_000);
+        assert_eq!(gate.stats().deferred_ops, 0, "no persists in flight");
+    }
+
+    #[test]
+    fn background_yields_to_inflight_persists() {
+        let gate = Arc::new(IoGate::new(IoGateConfig {
+            bytes_per_sec: 0.0,
+            max_defer: Duration::from_millis(30),
+            poll: Duration::from_micros(200),
+        }));
+        let g = gate.persist_guard();
+        assert_eq!(gate.persists_inflight(), 1);
+        let t0 = Instant::now();
+        gate.throttle(1000);
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(25), "did not defer: {dt:?}");
+        let st = gate.stats();
+        assert_eq!(st.deferred_ops, 1);
+        assert!(st.deferred_secs > 0.0);
+        assert_eq!(st.contended_bytes, 1000, "defer bound hit => contended");
+        drop(g);
+        assert_eq!(gate.persists_inflight(), 0);
+        let t0 = Instant::now();
+        gate.throttle(1000);
+        assert!(t0.elapsed() < Duration::from_millis(10), "idle device admits immediately");
+        assert_eq!(gate.stats().contended_bytes, 1000, "no new contention when idle");
+    }
+
+    #[test]
+    fn guard_released_mid_defer_unblocks_early() {
+        let gate = Arc::new(IoGate::new(IoGateConfig {
+            bytes_per_sec: 0.0,
+            max_defer: Duration::from_millis(500),
+            poll: Duration::from_micros(200),
+        }));
+        let g = gate.persist_guard();
+        let g2 = Arc::clone(&gate);
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            g2.throttle(10);
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(g);
+        let waited = h.join().unwrap();
+        assert!(waited < Duration::from_millis(400), "defer should end with the persist");
+        assert_eq!(gate.stats().contended_bytes, 0, "yielding avoided the contention");
+    }
+
+    #[test]
+    fn gated_store_charges_puts_and_gets() {
+        let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let gate = Arc::new(IoGate::new(IoGateConfig::default()));
+        let s = GatedStore::new(inner, Arc::clone(&gate));
+        s.put("a", &[0u8; 64]).unwrap();
+        assert_eq!(s.get("a").unwrap().len(), 64);
+        let parts: [&[u8]; 2] = [b"xy", b"z"];
+        s.put_vectored("b", &parts).unwrap();
+        assert_eq!(gate.stats().throttled_bytes, 64 + 64 + 3);
+        assert!(s.exists("a"));
+        s.delete("a").unwrap();
+        assert!(!s.exists("a"));
+        assert_eq!(s.list().unwrap(), vec!["b"]);
+    }
+
+    #[test]
+    fn gated_reads_yield_before_touching_the_device() {
+        // the defer must happen BEFORE the inner get: a read issued while
+        // a persist is in flight waits first (up to the bound), instead
+        // of contending immediately and "yielding" after the damage
+        let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        inner.put("span", &[1u8; 256]).unwrap();
+        let gate = Arc::new(IoGate::new(IoGateConfig {
+            bytes_per_sec: 0.0,
+            max_defer: Duration::from_millis(30),
+            poll: Duration::from_micros(200),
+        }));
+        let s = GatedStore::new(Arc::clone(&inner), Arc::clone(&gate));
+        let _g = gate.persist_guard();
+        let t0 = Instant::now();
+        assert_eq!(s.get("span").unwrap().len(), 256);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "read did not defer");
+        let st = gate.stats();
+        assert_eq!(st.deferred_ops, 1);
+        assert_eq!(st.contended_bytes, 256, "defer bound hit => counted as contended");
+    }
+
+    #[test]
+    fn telemetry_bus_sees_interference() {
+        let bus = Arc::new(TelemetryBus::new());
+        let gate = Arc::new(IoGate::with_bus(
+            IoGateConfig {
+                bytes_per_sec: 0.0,
+                max_defer: Duration::from_millis(5),
+                poll: Duration::from_micros(200),
+            },
+            Some(Arc::clone(&bus)),
+        ));
+        let _g = gate.persist_guard();
+        gate.throttle(512);
+        let s = bus.snapshot();
+        assert!(s.deferred_secs > 0.0);
+        assert_eq!(s.contended_bytes, 512);
+    }
+}

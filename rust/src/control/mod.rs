@@ -1,0 +1,36 @@
+//! Runtime control plane: closed-loop §V-C tuning + interference-aware
+//! I/O scheduling, shared by the flat, cluster, and LowDiff+ runtimes.
+//!
+//! Before this layer, the §V-C configuration model
+//! ([`AdaptiveTuner`](crate::coordinator::config_opt::AdaptiveTuner))
+//! was built and property-tested but the training driver ran static
+//! `full_every`/`batch_size`/`compact_every`, and cluster compaction
+//! executed inline on the commit thread where its reads contended with
+//! checkpoint writes. The control plane turns those four static knobs
+//! into the paper's *self-tuning* system ("dynamically tunes both the
+//! checkpoint frequency and the batching size to maximize performance",
+//! §V-C), in three parts:
+//!
+//! - [`telemetry`] — a lock-light [`TelemetryBus`] fed by the persist
+//!   stage, the compactor, the cluster commit thread, the failure path
+//!   and the I/O gate, plus the **windowed estimators** that smooth raw
+//!   windows into usable MTBF/bandwidth estimates;
+//! - [`actuate`] — the closed-loop [`Actuator`]: estimates →
+//!   `AdaptiveTuner` → clamped, hysteresis-guarded [`Retune`]s applied
+//!   at safe epoch boundaries (driver full epochs, checkpointer queue
+//!   order, cluster committed records);
+//! - [`iosched`] — the [`IoGate`]/[`GatedStore`] pair that shapes all
+//!   background compaction I/O with idle triggering + a token-bucket
+//!   byte budget (`--io-budget`), yielding to in-flight checkpoint
+//!   persists.
+//!
+//! Wiring, safety points and the scheduler policy are documented in
+//! `docs/CONTROL.md`.
+
+pub mod actuate;
+pub mod iosched;
+pub mod telemetry;
+
+pub use actuate::{converge_synthetic, Actuator, ActuatorConfig, Retune, Window};
+pub use iosched::{GatedStore, IoGate, IoGateConfig, IoGateStats, PersistGuard};
+pub use telemetry::{BwEstimator, MtbfEstimator, Snapshot, TelemetryBus};

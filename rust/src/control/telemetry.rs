@@ -1,0 +1,333 @@
+//! Telemetry bus: lock-light runtime counters feeding the §V-C control
+//! loop.
+//!
+//! One [`TelemetryBus`] is shared (via `Arc`) by every component that
+//! observes a quantity Eq. (8) models or the I/O scheduler shapes:
+//!
+//! - the **persist stage** ([`Sink`](crate::pipeline::Sink)) records
+//!   durable bytes and device seconds → effective write bandwidth `W`;
+//! - the **failure path** ([`FailureInjector`]
+//!   (crate::coordinator::failure::FailureInjector) via the driver)
+//!   records failure events → measured MTBF `M`;
+//! - the **chain compactor** ([`Compactor`](crate::pipeline::Compactor),
+//!   cluster scheduler passes) records merged spans vs raws superseded →
+//!   the replay-ratio feedback behind `observe_compaction`;
+//! - the **cluster commit thread** records phase-2 wall seconds;
+//! - the **I/O gate** ([`IoGate`](crate::control::iosched::IoGate))
+//!   records deferred background seconds and contended bytes →
+//!   read/write interference;
+//! - the **driver** records per-step checkpoint stall seconds.
+//!
+//! Every counter is a monotonic atomic: producers pay one `fetch_add`, no
+//! locks, no allocation. Consumers take [`TelemetryBus::snapshot`]s and
+//! difference them into windows; the **windowed estimators** below turn
+//! windows into smoothed MTBF / bandwidth estimates — the fix for the
+//! raw-sample pitfall where one lucky failure-free window (or one quick
+//! failure) would let `AdaptiveTuner::observe` overwrite `params.mtbf`
+//! with a wild sample and collapse or explode `full_every`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+const NANOS_PER_SEC: f64 = 1e9;
+
+/// Lock-light runtime counters (see module docs for the producers).
+#[derive(Debug)]
+pub struct TelemetryBus {
+    start: Instant,
+    failures: AtomicU64,
+    steps: AtomicU64,
+    stall_nanos: AtomicU64,
+    bytes_written: AtomicU64,
+    write_nanos: AtomicU64,
+    merged_written: AtomicU64,
+    raw_compacted: AtomicU64,
+    compact_bytes: AtomicU64,
+    commit_nanos: AtomicU64,
+    deferred_nanos: AtomicU64,
+    contended_bytes: AtomicU64,
+}
+
+/// One point-in-time reading of every bus counter. Difference two
+/// snapshots to get a window.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub elapsed_secs: f64,
+    pub failures: u64,
+    pub steps: u64,
+    pub stall_secs: f64,
+    pub bytes_written: u64,
+    pub write_secs: f64,
+    pub merged_written: u64,
+    pub raw_compacted: u64,
+    pub compact_bytes: u64,
+    pub commit_secs: f64,
+    pub deferred_secs: f64,
+    pub contended_bytes: u64,
+}
+
+impl Default for TelemetryBus {
+    fn default() -> Self {
+        TelemetryBus::new()
+    }
+}
+
+impl TelemetryBus {
+    pub fn new() -> TelemetryBus {
+        TelemetryBus {
+            start: Instant::now(),
+            failures: AtomicU64::new(0),
+            steps: AtomicU64::new(0),
+            stall_nanos: AtomicU64::new(0),
+            bytes_written: AtomicU64::new(0),
+            write_nanos: AtomicU64::new(0),
+            merged_written: AtomicU64::new(0),
+            raw_compacted: AtomicU64::new(0),
+            compact_bytes: AtomicU64::new(0),
+            commit_nanos: AtomicU64::new(0),
+            deferred_nanos: AtomicU64::new(0),
+            contended_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// One failure event (hardware or software) was observed.
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One productive iteration completed, stalling the training thread
+    /// for `stall_secs` on checkpoint work.
+    pub fn record_step(&self, stall_secs: f64) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.stall_nanos
+            .fetch_add(secs_to_nanos(stall_secs), Ordering::Relaxed);
+    }
+
+    /// One checkpoint object became durable. `device_secs` is observed
+    /// device time (0 for async engine writes, where the writer only sees
+    /// completion, not occupancy) — the bandwidth estimator skips windows
+    /// without device time.
+    pub fn record_write(&self, bytes: u64, device_secs: f64) {
+        self.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        self.write_nanos
+            .fetch_add(secs_to_nanos(device_secs), Ordering::Relaxed);
+    }
+
+    /// One compaction pass consolidated `raws` raw chain objects into
+    /// `merged` spans, moving `bytes` of storage I/O.
+    pub fn record_compaction(&self, merged: u64, raws: u64, bytes: u64) {
+        self.merged_written.fetch_add(merged, Ordering::Relaxed);
+        self.raw_compacted.fetch_add(raws, Ordering::Relaxed);
+        self.compact_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// The cluster commit thread spent `secs` in phase 2.
+    pub fn record_commit(&self, secs: f64) {
+        self.commit_nanos
+            .fetch_add(secs_to_nanos(secs), Ordering::Relaxed);
+    }
+
+    /// A background I/O op yielded to in-flight persists for `secs`.
+    pub fn record_defer(&self, secs: f64) {
+        self.deferred_nanos
+            .fetch_add(secs_to_nanos(secs), Ordering::Relaxed);
+    }
+
+    /// `bytes` of background I/O proceeded while a persist was in flight
+    /// (residual interference the gate could not avoid).
+    pub fn record_contention(&self, bytes: u64) {
+        self.contended_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            elapsed_secs: self.start.elapsed().as_secs_f64(),
+            failures: self.failures.load(Ordering::Relaxed),
+            steps: self.steps.load(Ordering::Relaxed),
+            stall_secs: nanos_to_secs(self.stall_nanos.load(Ordering::Relaxed)),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            write_secs: nanos_to_secs(self.write_nanos.load(Ordering::Relaxed)),
+            merged_written: self.merged_written.load(Ordering::Relaxed),
+            raw_compacted: self.raw_compacted.load(Ordering::Relaxed),
+            compact_bytes: self.compact_bytes.load(Ordering::Relaxed),
+            commit_secs: nanos_to_secs(self.commit_nanos.load(Ordering::Relaxed)),
+            deferred_secs: nanos_to_secs(self.deferred_nanos.load(Ordering::Relaxed)),
+            contended_bytes: self.contended_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn secs_to_nanos(secs: f64) -> u64 {
+    (secs.max(0.0) * NANOS_PER_SEC) as u64
+}
+
+fn nanos_to_secs(nanos: u64) -> f64 {
+    nanos as f64 / NANOS_PER_SEC
+}
+
+/// Windowed MTBF estimator: exponentially-decayed failure-free time over
+/// exponentially-decayed failure count, regularized by a prior
+/// pseudo-observation. Telemetry-fed tuning MUST go through this (or an
+/// equivalent smoother), never raw inter-failure samples: a raw sample of
+/// one lucky failure-free window reads as "MTBF = ∞" and a single quick
+/// failure as "MTBF ≈ 0", either of which would let the stepwise tuner
+/// walk `full_every` somewhere unrecoverable before reality reasserts
+/// itself. Here the estimate is bounded by construction:
+/// `(T_w/(1−d) + w·M₀) / w` with no failures, and it moves smoothly as
+/// decayed failures accumulate.
+#[derive(Clone, Debug)]
+pub struct MtbfEstimator {
+    decay: f64,
+    prior_mtbf: f64,
+    prior_weight: f64,
+    acc_secs: f64,
+    acc_failures: f64,
+}
+
+impl MtbfEstimator {
+    pub fn new(prior_mtbf: f64, prior_weight: f64, decay: f64) -> MtbfEstimator {
+        assert!(prior_mtbf > 0.0 && prior_weight > 0.0);
+        assert!((0.0..1.0).contains(&decay));
+        MtbfEstimator {
+            decay,
+            prior_mtbf,
+            prior_weight,
+            acc_secs: 0.0,
+            acc_failures: 0.0,
+        }
+    }
+
+    /// Fold one observation window (`secs` of wall time, `failures`
+    /// events) into the decayed accumulators.
+    pub fn observe_window(&mut self, secs: f64, failures: u64) {
+        if secs <= 0.0 {
+            return;
+        }
+        self.acc_secs = self.acc_secs * self.decay + secs;
+        self.acc_failures = self.acc_failures * self.decay + failures as f64;
+    }
+
+    /// Current smoothed MTBF estimate (always finite and positive).
+    pub fn estimate(&self) -> f64 {
+        (self.acc_secs + self.prior_weight * self.prior_mtbf)
+            / (self.acc_failures + self.prior_weight)
+    }
+}
+
+/// EWMA write-bandwidth estimator; windows without observed device time
+/// (async engine completions) are skipped rather than read as zero.
+#[derive(Clone, Debug)]
+pub struct BwEstimator {
+    decay: f64,
+    est: f64,
+}
+
+impl BwEstimator {
+    pub fn new(prior_bw: f64, decay: f64) -> BwEstimator {
+        assert!(prior_bw > 0.0);
+        assert!((0.0..1.0).contains(&decay));
+        BwEstimator { decay, est: prior_bw }
+    }
+
+    pub fn observe_window(&mut self, bytes: u64, device_secs: f64) {
+        if bytes == 0 || device_secs <= 1e-9 {
+            return;
+        }
+        let w = bytes as f64 / device_secs;
+        self.est = self.decay * self.est + (1.0 - self.decay) * w;
+    }
+
+    pub fn estimate(&self) -> f64 {
+        self.est
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_recorded_counters() {
+        let bus = TelemetryBus::new();
+        bus.record_failure();
+        bus.record_step(0.5);
+        bus.record_step(0.25);
+        bus.record_write(1000, 0.1);
+        bus.record_compaction(2, 8, 4096);
+        bus.record_commit(0.02);
+        bus.record_defer(0.01);
+        bus.record_contention(77);
+        let s = bus.snapshot();
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.steps, 2);
+        assert!((s.stall_secs - 0.75).abs() < 1e-6);
+        assert_eq!(s.bytes_written, 1000);
+        assert!((s.write_secs - 0.1).abs() < 1e-6);
+        assert_eq!((s.merged_written, s.raw_compacted, s.compact_bytes), (2, 8, 4096));
+        assert!((s.commit_secs - 0.02).abs() < 1e-6);
+        assert!((s.deferred_secs - 0.01).abs() < 1e-6);
+        assert_eq!(s.contended_bytes, 77);
+        assert!(s.elapsed_secs >= 0.0);
+    }
+
+    #[test]
+    fn mtbf_estimator_starts_at_prior_and_tracks_failures() {
+        let mut e = MtbfEstimator::new(1000.0, 0.25, 0.98);
+        assert_eq!(e.estimate(), 1000.0);
+        // failures every 100 s pull the estimate toward 100
+        for _ in 0..200 {
+            e.observe_window(100.0, 1);
+        }
+        let m = e.estimate();
+        assert!((90.0..200.0).contains(&m), "estimate {m} should approach 100");
+    }
+
+    #[test]
+    fn single_failure_free_window_cannot_explode_the_estimate() {
+        // the raw-sample pitfall: a quiet window would read as MTBF = ∞;
+        // the smoothed estimate moves boundedly
+        let mut e = MtbfEstimator::new(100.0, 1.0, 0.8);
+        for _ in 0..50 {
+            e.observe_window(100.0, 1); // converged near 100
+        }
+        let before = e.estimate();
+        e.observe_window(100.0, 0); // one lucky window
+        let after = e.estimate();
+        assert!(after > before, "quiet window should raise the estimate");
+        assert!(
+            after < before * 2.0,
+            "one window must not explode the estimate: {before} -> {after}"
+        );
+        // and a single quick failure can't collapse it either
+        e.observe_window(1.0, 1);
+        assert!(e.estimate() > before / 2.0);
+    }
+
+    #[test]
+    fn mtbf_estimate_monotone_in_observed_quiet_time() {
+        let mut a = MtbfEstimator::new(500.0, 1.0, 0.9);
+        let mut b = a.clone();
+        a.observe_window(10.0, 0);
+        b.observe_window(100.0, 0);
+        assert!(b.estimate() > a.estimate());
+        // more failures in the same window => lower estimate
+        let mut c = MtbfEstimator::new(500.0, 1.0, 0.9);
+        let mut d = c.clone();
+        c.observe_window(100.0, 1);
+        d.observe_window(100.0, 4);
+        assert!(d.estimate() < c.estimate());
+    }
+
+    #[test]
+    fn bw_estimator_skips_empty_windows_and_converges() {
+        let mut e = BwEstimator::new(1e9, 0.5);
+        e.observe_window(0, 1.0);
+        e.observe_window(100, 0.0);
+        assert_eq!(e.estimate(), 1e9, "empty windows are skipped");
+        for _ in 0..40 {
+            e.observe_window(250_000_000, 1.0);
+        }
+        let w = e.estimate();
+        assert!((2.4e8..2.6e8).contains(&w), "estimate {w} should approach 250 MB/s");
+    }
+}

@@ -39,6 +39,8 @@ use crate::checkpoint::batched::{BatchBuffer, BatchMode};
 use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::format::PayloadCodec;
 use crate::checkpoint::manifest::Manifest;
+use crate::control::iosched::{IoGate, IoGateConfig};
+use crate::control::telemetry::TelemetryBus;
 use crate::coordinator::reusing_queue::ReusingQueue;
 use crate::optim::ModelState;
 use crate::pipeline::{Compactor, CompactorConfig, Encoded, Encoder, Sink};
@@ -56,6 +58,12 @@ pub enum CkptItem {
     DiffSparse(DiffPayload),
     /// full model-state snapshot
     Full(ModelState),
+    /// §V-C actuation (control plane): apply a new batching size and
+    /// compaction merge factor. Travels through the queue so it lands at
+    /// a deterministic point in the checkpoint stream — after every
+    /// preceding diff, with the pending batch flushed first — and can
+    /// never tear a half-built batch container.
+    Retune { batch_size: usize, compact_every: usize },
 }
 
 /// Handle to the running checkpointing process.
@@ -83,6 +91,14 @@ pub struct CkptConfig {
     /// background chain compaction: merge every run of this many persisted
     /// raw diff objects into one `MergedDiff` span; < 2 disables
     pub compact_every: usize,
+    /// background-I/O byte budget for the compactor's token-bucket gate
+    /// (`--io-budget`); <= 0 leaves the bucket open (idle triggering
+    /// still applies whenever the control plane is active)
+    pub io_budget: f64,
+    /// control-plane telemetry bus: persists and compaction passes feed
+    /// it, and its presence keeps a (possibly idle) compactor thread
+    /// alive so `CkptItem::Retune` can enable compaction later
+    pub telemetry: Option<Arc<TelemetryBus>>,
 }
 
 impl Default for CkptConfig {
@@ -97,6 +113,8 @@ impl Default for CkptConfig {
             n_shards: 1,
             writers: 1,
             compact_every: 0,
+            io_budget: 0.0,
+            telemetry: None,
         }
     }
 }
@@ -106,6 +124,13 @@ impl CkptConfig {
     /// synchronous single-object puts.
     pub fn uses_engine(&self) -> bool {
         self.n_shards > 1 || self.writers > 1
+    }
+
+    /// True when the runtime control plane is attached (telemetry and the
+    /// I/O gate come alive; the compactor thread spawns even at
+    /// `compact_every < 2`, idle, so actuation can enable it live).
+    pub fn uses_control(&self) -> bool {
+        self.telemetry.is_some() || self.io_budget > 0.0
     }
 
     /// Max logical writes allowed in flight before the checkpointer blocks
@@ -167,8 +192,19 @@ impl WritePath {
         // one encode buffer per possible in-flight write, plus slack for
         // the one being filled: steady state checks out recycled buffers
         let enc = Encoder::new(cfg.model_sig, cfg.codec, cfg.inflight_cap() + 2);
-        let sink = Sink::new(Arc::clone(store), cfg.n_shards, cfg.writers, cfg.inflight_cap());
-        let compactor = (cfg.compact_every >= 2).then(|| {
+        // the control plane: one gate shared by the persist path (guards)
+        // and the compactor (shaped reads/writes). Built whenever a
+        // compactor will exist — shaping is free when nothing contends.
+        let with_compactor = cfg.compact_every >= 2 || cfg.uses_control();
+        let gate = with_compactor.then(|| {
+            Arc::new(IoGate::with_bus(
+                IoGateConfig { bytes_per_sec: cfg.io_budget, ..IoGateConfig::default() },
+                cfg.telemetry.clone(),
+            ))
+        });
+        let sink = Sink::new(Arc::clone(store), cfg.n_shards, cfg.writers, cfg.inflight_cap())
+            .with_control(gate.clone(), cfg.telemetry.clone());
+        let compactor = with_compactor.then(|| {
             // the compactor reads/writes LOGICAL objects on its own thread;
             // in engine mode it gets its own 1-shard view of the store
             let logical: Arc<dyn StorageBackend> = if cfg.uses_engine() {
@@ -176,7 +212,7 @@ impl WritePath {
             } else {
                 Arc::clone(store)
             };
-            Compactor::spawn(
+            Compactor::spawn_with(
                 logical,
                 CompactorConfig {
                     model_sig: cfg.model_sig,
@@ -188,6 +224,8 @@ impl WritePath {
                     // (the shutdown pass, post-barrier, settles everything)
                     settle_tail: if cfg.uses_engine() { cfg.inflight_cap() } else { 0 },
                 },
+                gate,
+                cfg.telemetry.clone(),
             )
         });
         WritePath { enc, sink, compactor }
@@ -230,13 +268,13 @@ fn run_loop(
                     s.offload_secs += t0.elapsed().as_secs_f64();
                     s.diff_ckpts += 1;
                 }
-                handle_sparse(step, sparse, &mut batch, &cfg, &stats, &mut wp);
+                handle_sparse(step, sparse, &mut batch, &stats, &mut wp);
             }
             CkptItem::DiffSparse(payload) => {
                 stats.lock().unwrap().diff_ckpts += 1;
                 match payload {
                     DiffPayload::Gradient(g) => {
-                        handle_sparse(step, g, &mut batch, &cfg, &stats, &mut wp)
+                        handle_sparse(step, g, &mut batch, &stats, &mut wp)
                     }
                     delta @ DiffPayload::StateDelta(_) => {
                         // Naive DC writes every delta unbatched (its cost)
@@ -246,6 +284,19 @@ fn run_loop(
                         }
                     }
                 }
+            }
+            CkptItem::Retune { batch_size, compact_every } => {
+                // §V-C actuation safe point: the pending batch flushes
+                // under the OLD size (its steps were offered under it),
+                // then the new config applies to everything after
+                flush_batch(&mut batch, &stats, &mut wp);
+                batch.set_batch_size(batch_size);
+                if let Some(c) = &wp.compactor {
+                    c.set_merge_factor(compact_every);
+                }
+                log::debug!(
+                    "retune applied: batch_size={batch_size} compact_every={compact_every}"
+                );
             }
             CkptItem::Full(state) => {
                 // flush the pre-full chain first (order matters for GC)
@@ -304,11 +355,12 @@ fn handle_sparse(
     step: u64,
     sparse: SparseGrad,
     batch: &mut BatchBuffer,
-    cfg: &CkptConfig,
     stats: &Arc<Mutex<CkptStats>>,
     wp: &mut WritePath,
 ) {
-    if cfg.batch_size <= 1 {
+    // the LIVE batching size (a `Retune` may have moved it off the
+    // configured value), not the spawn-time config
+    if batch.batch_size() <= 1 {
         match wp.enc.encode_diff(step, &DiffPayload::Gradient(sparse)) {
             Ok(obj) => wp.submit_chain_object(obj, stats),
             Err(e) => log::error!("encode diff {step}: {e:#}"),
@@ -576,6 +628,48 @@ mod tests {
         assert_eq!(bstats.n_diff_objects, 3, "replay fetches merged spans, not raw diffs");
         assert_eq!(bstats.n_diff_steps, 9, "every step still replays");
         assert_eq!(bstats.recovered_step, 9);
+    }
+
+    #[test]
+    fn mid_run_retune_flushes_then_resizes_and_recovers_identically() {
+        let n = 150;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg(n, 4));
+        let adam = Adam::default();
+        let mut rng = Rng::new(19);
+        let mut want = ModelState::new(Flat(vec![0.5; n]));
+        ck.queue.put(0, Arc::new(CkptItem::Full(want.clone())));
+        for step in 1..=3u64 {
+            let g = grad(&mut rng, n);
+            adam.apply_sparse(&mut want, &SparseGrad::from_dense(&g));
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+        }
+        // actuation at the epoch boundary: the 3 pending diffs flush as
+        // one partial batch under the OLD size, then BS=2 takes effect
+        ck.queue
+            .put(3, Arc::new(CkptItem::Retune { batch_size: 2, compact_every: 0 }));
+        for step in 4..=7u64 {
+            let g = grad(&mut rng, n);
+            adam.apply_sparse(&mut want, &SparseGrad::from_dense(&g));
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+        }
+        let stats = ck.finish();
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.writes, 4, "full + batch(1-3) + batch(4-5) + batch(6-7)");
+        let names = store.list().unwrap();
+        assert!(names.contains(&Manifest::batch_name(1, 3)), "{names:?}");
+        assert!(names.contains(&Manifest::batch_name(4, 5)), "{names:?}");
+        assert!(names.contains(&Manifest::batch_name(6, 7)), "{names:?}");
+
+        let (rec, rstats) = recover(
+            store.as_ref(),
+            model_signature("t", n),
+            &adam,
+            RecoveryMode::SerialReplay,
+        )
+        .unwrap();
+        assert_eq!(rec, want, "recovery across a retune must stay bit-identical");
+        assert_eq!(rstats.recovered_step, 7);
     }
 
     #[test]

@@ -101,6 +101,20 @@ impl AdaptiveTuner {
 
     /// Feed fresh runtime observations; config moves one step per call
     /// (stepwise adjustment, never a jump — §VII-A).
+    ///
+    /// `measured_mtbf`/`measured_bw` become the model parameters
+    /// *verbatim*, so the telemetry-fed runtime path MUST pass smoothed
+    /// **windowed/EWMA estimates**
+    /// ([`MtbfEstimator`](crate::control::telemetry::MtbfEstimator) /
+    /// [`BwEstimator`](crate::control::telemetry::BwEstimator)), never
+    /// raw window samples: one lucky failure-free window reads as
+    /// "MTBF = ∞" and would collapse the full-checkpoint frequency (the
+    /// interval explodes), while one quick failure reads as "MTBF ≈ 0"
+    /// and would collapse the interval to 1. The
+    /// [`Actuator`](crate::control::actuate::Actuator) is the only
+    /// runtime caller and owns the estimators; monotonicity of the
+    /// resulting actuation in the estimated MTBF is property-tested in
+    /// `control/actuate.rs`.
     pub fn observe(&mut self, measured_mtbf: f64, measured_bw: f64) {
         self.params.mtbf = measured_mtbf;
         self.params.write_bw = measured_bw;

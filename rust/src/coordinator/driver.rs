@@ -28,7 +28,10 @@ use crate::checkpoint::manifest::Manifest;
 use crate::cluster::{self, Cluster, ClusterConfig};
 use crate::collective::sparse_allgather_sum;
 use crate::compress::topk_mask_with_scratch;
+use crate::control::actuate::{Actuator, ActuatorConfig, Retune};
+use crate::control::telemetry::TelemetryBus;
 use crate::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
+use crate::coordinator::config_opt::SystemParams;
 use crate::coordinator::failure::{FailureInjector, FailureKind};
 use crate::coordinator::lowdiff_plus::{LowDiffPlus, PlusConfig};
 use crate::coordinator::metrics::RunReport;
@@ -129,6 +132,14 @@ pub struct TrainConfig {
     /// raw diff objects into one `MergedDiff` span (bounds recovery replay
     /// at ⌈n/compact_every⌉ objects per chain); < 2 disables
     pub compact_every: usize,
+    /// closed-loop §V-C control plane (`--adaptive`): measure MTBF /
+    /// write bandwidth / replay ratio at runtime and retune
+    /// `full_every`, `batch_size` and `compact_every` live at epoch
+    /// boundaries (LowDiff strategy, flat and cluster runtimes)
+    pub adaptive: bool,
+    /// background-I/O byte budget for compaction's token-bucket gate
+    /// (`--io-budget`, bytes/sec); <= 0 leaves the bucket open
+    pub io_budget: f64,
 }
 
 impl Default for TrainConfig {
@@ -153,6 +164,8 @@ impl Default for TrainConfig {
             writers: 1,
             ranks: 1,
             compact_every: 0,
+            adaptive: false,
+            io_budget: 0.0,
         }
     }
 }
@@ -228,6 +241,17 @@ pub fn train(
 
     report.ranks = if cfg.uses_cluster() { cfg.ranks } else { 1 };
 
+    // the runtime control plane (docs/CONTROL.md): a telemetry bus shared
+    // with the checkpointing processes, and the closed-loop actuator that
+    // retunes the EFFECTIVE config below — `eff` starts as the configured
+    // values and is what the loop consults, so a retune applies from the
+    // next epoch without mutating the caller's config
+    let mut eff = cfg.clone();
+    let bus: Option<Arc<TelemetryBus>> = (cfg.adaptive
+        && cfg.strategy == StrategyKind::LowDiff)
+        .then(|| Arc::new(TelemetryBus::new()));
+    let mut actuator: Option<Actuator> = None;
+
     // per-strategy checkpointing processes
     let mem_tier: Arc<dyn StorageBackend> = Arc::new(crate::storage::MemStore::new());
     // recovery/GC interop must see logical objects even when the
@@ -239,7 +263,7 @@ pub fn train(
         } else {
             Arc::clone(&store)
         };
-    let mut procs = spawn_procs(cfg, sig, layout, &state, &store, &mem_tier);
+    let mut procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &bus);
     // anchor the differential chain: a recovery needs a base full
     // checkpoint (Eq. (6) starts from C^F)
     anchor_chain(&mut procs, &state, &mut report);
@@ -260,6 +284,7 @@ pub fn train(
         attempts += 1;
         anyhow::ensure!(attempts < max_attempts, "failure storm: run cannot make progress");
         let target = step + 1;
+        let stall_before = report.stall_secs + report.queue_blocked_secs;
 
         // ---- 1. fwd/bwd per worker --------------------------------------
         let t0 = Instant::now();
@@ -307,7 +332,7 @@ pub fn train(
         let tstall = Instant::now();
         match (&mut procs, cfg.strategy) {
             (Procs::LowDiff { ckpt }, StrategyKind::LowDiff) => {
-                if target % cfg.diff_every == 0 {
+                if target % eff.diff_every == 0 {
                     // the reuse: the synced compressed gradient IS the
                     // differential checkpoint — zero extra computation
                     report.queue_blocked_secs += ckpt
@@ -318,7 +343,7 @@ pub fn train(
                 }
             }
             (Procs::Cluster { cluster }, StrategyKind::LowDiff) => {
-                if target % cfg.diff_every == 0 {
+                if target % eff.diff_every == 0 {
                     // the rank fan-out: one Ψ-sized slice copy on the
                     // training path; compaction/encode/IO on rank threads
                     report.queue_blocked_secs +=
@@ -347,14 +372,14 @@ pub fn train(
         let tstall = Instant::now();
         match (&mut procs, cfg.strategy) {
             (Procs::LowDiff { ckpt }, StrategyKind::LowDiff) => {
-                if target % cfg.full_every == 0 {
+                if target % eff.full_every == 0 {
                     let snap = state.clone(); // snapshot stall
                     ckpt.queue.put(target, Arc::new(CkptItem::Full(snap)));
                     report.full_ckpts += 1;
                 }
             }
             (Procs::Cluster { cluster }, StrategyKind::LowDiff) => {
-                if target % cfg.full_every == 0 {
+                if target % eff.full_every == 0 {
                     // slice fan-out is the snapshot copy, one rank at a time
                     report.queue_blocked_secs +=
                         cluster.put_full(target, &state).as_secs_f64();
@@ -364,7 +389,7 @@ pub fn train(
             (Procs::NaiveDc { ckpt }, StrategyKind::NaiveDc) => {
                 // Challenge 1 made concrete: compress the 3Ψ state delta on
                 // the training path, every diff interval
-                if target % cfg.diff_every == 0 {
+                if target % eff.diff_every == 0 {
                     let prev = prev_state_for_dc.as_ref().unwrap();
                     let mut delta = Vec::with_capacity(3 * n);
                     delta.extend(Flat::diff(&state.params, &prev.params).0);
@@ -383,7 +408,7 @@ pub fn train(
                         .as_secs_f64();
                     report.diff_ckpts += 1;
                 }
-                if target % cfg.full_every == 0 {
+                if target % eff.full_every == 0 {
                     ckpt.queue.put(target, Arc::new(CkptItem::Full(state.clone())));
                     report.full_ckpts += 1;
                 }
@@ -393,7 +418,7 @@ pub fn train(
                 // CheckFreq: snapshot (copy) on the training path every
                 // interval; persist decoupled on the checkpointer thread.
                 // A busy persist pipeline back-pressures through the queue.
-                if target % cfg.full_every == 0 {
+                if target % eff.full_every == 0 {
                     let snap = state.clone();
                     report.queue_blocked_secs += ckpt
                         .queue
@@ -410,14 +435,14 @@ pub fn train(
                     .put(target, Arc::new(CkptItem::Full(snap)))
                     .as_secs_f64();
                 report.full_ckpts += 1;
-                if target % cfg.full_every == 0 {
+                if target % eff.full_every == 0 {
                     disk.queue.put(target, Arc::new(CkptItem::Full(state.clone())));
                 }
             }
             (Procs::Sync, StrategyKind::TorchSave) => {
                 // fully synchronous torch.save: encode + write on the
                 // training path (the Exp. 1 worst case)
-                if target % cfg.full_every == 0 {
+                if target % eff.full_every == 0 {
                     let bytes = write_full(&state, sig, cfg.codec)?;
                     report.bytes_written += bytes.len() as u64;
                     report.writes += 1;
@@ -430,6 +455,57 @@ pub fn train(
         }
         report.stall_secs += tstall.elapsed().as_secs_f64();
 
+        // ---- 4c. control plane: telemetry + epoch-boundary actuation ----
+        if let Some(bus) = &bus {
+            bus.record_step(
+                (report.stall_secs + report.queue_blocked_secs - stall_before).max(0.0),
+            );
+            // safe point: a full-checkpoint epoch boundary — the chain
+            // re-bases here, so a new (FCF, BS, mf) can't tear a batch or
+            // a committed epoch mid-flight
+            if target % eff.full_every == 0 {
+                let iter_time = (wall0.elapsed().as_secs_f64() / target as f64).max(1e-6);
+                let act = actuator
+                    .get_or_insert_with(|| make_actuator(cfg, layout, n, &eff, iter_time));
+                if let Some(r) = act.tick(bus) {
+                    log::info!(
+                        "§V-C retune at step {target}: full_every {} -> {}, batch {} -> {}, \
+                         compact {} -> {}",
+                        eff.full_every,
+                        r.full_every,
+                        eff.batch_size,
+                        r.batch_size,
+                        eff.compact_every,
+                        r.compact_every
+                    );
+                    eff.full_every = r.full_every;
+                    eff.batch_size = r.batch_size;
+                    eff.compact_every = r.compact_every;
+                    report.retunes += 1;
+                    match &procs {
+                        Procs::LowDiff { ckpt } => {
+                            // queue order makes this land after every
+                            // enqueued diff, with the pending batch flushed
+                            ckpt.queue.put(
+                                target,
+                                Arc::new(CkptItem::Retune {
+                                    batch_size: r.batch_size,
+                                    compact_every: r.compact_every,
+                                }),
+                            );
+                        }
+                        Procs::Cluster { cluster } => {
+                            // applied by the coordinator at the next
+                            // committed record: all ranks switch at the
+                            // same committed epoch
+                            cluster.set_compact_every(r.compact_every);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+
         step = target;
         if step % cfg.eval_every == 0 || step == cfg.iters {
             report.losses.push((step, loss));
@@ -437,7 +513,9 @@ pub fn train(
         report.iter_times.push(wall0.elapsed().as_secs_f64());
 
         // ---- 6. failure injection ---------------------------------------
-        if let Some(kind) = injector.poll(wall0.elapsed().as_secs_f64()) {
+        if let Some(kind) =
+            injector.poll_telemetry(wall0.elapsed().as_secs_f64(), bus.as_deref())
+        {
             report.recoveries += 1;
             let t0 = Instant::now();
             let (recovered, from_memory) =
@@ -458,8 +536,9 @@ pub fn train(
             prev_state_for_dc = (cfg.strategy == StrategyKind::NaiveDc).then(|| state.clone());
             // drop differentials from the lost timeline (steps > recovered)
             let _ = Manifest::truncate_after(logical.as_ref(), state.step);
-            // restart the checkpointing process (new process after crash)
-            procs = spawn_procs(cfg, sig, layout, &state, &store, &mem_tier);
+            // restart the checkpointing process (new process after crash),
+            // carrying the retuned effective config forward
+            procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &bus);
             anchor_chain(&mut procs, &state, &mut report);
             report.recovery_secs += t0.elapsed().as_secs_f64();
         }
@@ -469,7 +548,50 @@ pub fn train(
     finish_procs(procs, &mut report);
     report.iters = step;
     report.wall_secs = wall0.elapsed().as_secs_f64();
+    report.final_full_every = eff.full_every;
+    report.final_batch_size = eff.batch_size;
+    report.final_compact_every = eff.compact_every;
     Ok(report)
+}
+
+/// Seed the closed-loop actuator from the run configuration: the
+/// configured MTBF (or a day, when no failures are injected) and a
+/// generic device bandwidth become the estimator PRIORS — measured
+/// telemetry replaces them within a few windows — and the model's sizes
+/// come from the actual state (3Ψ f32 words) and compression ratio.
+fn make_actuator(
+    cfg: &TrainConfig,
+    layout: &crate::model::Layout,
+    n: usize,
+    eff: &TrainConfig,
+    iter_time: f64,
+) -> Actuator {
+    let full_size = (3 * n * 4) as f64;
+    let write_bw = 1e9;
+    let params = SystemParams {
+        n_gpus: cfg.workers.max(1) as f64,
+        mtbf: cfg.mtbf_secs.unwrap_or(24.0 * 3600.0),
+        write_bw,
+        full_size,
+        total_time: (cfg.iters as f64 * iter_time).max(1.0),
+        r_full: full_size / write_bw,
+        r_diff: (layout.rho * full_size / write_bw).max(1e-6),
+    };
+    Actuator::new(
+        params,
+        iter_time,
+        Retune {
+            full_every: eff.full_every,
+            batch_size: eff.batch_size,
+            compact_every: eff.compact_every,
+        },
+        ActuatorConfig {
+            // the compaction policy sizes merge factors from the REAL
+            // chain-object cadence, not raw iterations
+            diff_every: cfg.diff_every.max(1),
+            ..ActuatorConfig::default()
+        },
+    )
 }
 
 /// Write a base full checkpoint so the diff chain is always recoverable
@@ -507,6 +629,7 @@ fn spawn_procs(
     state: &ModelState,
     store: &Arc<dyn StorageBackend>,
     mem_tier: &Arc<dyn StorageBackend>,
+    bus: &Option<Arc<TelemetryBus>>,
 ) -> Procs {
     let base = CkptConfig {
         model_sig: sig,
@@ -518,6 +641,8 @@ fn spawn_procs(
         n_shards: cfg.n_shards,
         writers: cfg.writers,
         compact_every: cfg.compact_every,
+        io_budget: cfg.io_budget,
+        telemetry: bus.clone(),
     };
     match cfg.strategy {
         StrategyKind::None => Procs::NoneAtAll,
@@ -539,6 +664,8 @@ fn spawn_procs(
                         gc: true,
                         queue_capacity: cfg.queue_capacity,
                         compact_every: cfg.compact_every,
+                        io_budget: cfg.io_budget,
+                        telemetry: bus.clone(),
                     },
                 ),
             }
@@ -563,6 +690,8 @@ fn spawn_procs(
                     n_shards: 1,
                     writers: 1,
                     compact_every: 0,
+                    io_budget: 0.0,
+                    telemetry: None,
                     ..base.clone()
                 },
             ),
@@ -704,10 +833,11 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             report.bytes_written += cs.record_bytes;
             report.global_commits += cs.global_commits;
             report.torn_commits += cs.torn_commits;
-            // coordinator-run compaction counters live on the cluster, not
+            // scheduler-run compaction counters live on the cluster, not
             // any one rank's CkptStats
             report.merged_written += cs.merged_written;
             report.raw_compacted += cs.raw_compacted;
+            report.compact_secs += cs.compact_secs;
         }
         Procs::Plus { plus } => {
             let s = plus.finish();

@@ -63,6 +63,22 @@ impl FailureInjector {
             FailureKind::Hardware
         })
     }
+
+    /// [`poll`](FailureInjector::poll) that also records the event on the
+    /// control plane's telemetry bus — the measured-MTBF source of the
+    /// §V-C closed loop (`docs/CONTROL.md`). The bus only ever sees
+    /// *events*; the windowed estimator turns them into an MTBF estimate.
+    pub fn poll_telemetry(
+        &mut self,
+        now: f64,
+        bus: Option<&crate::control::telemetry::TelemetryBus>,
+    ) -> Option<FailureKind> {
+        let kind = self.poll(now);
+        if let (Some(_), Some(bus)) = (&kind, bus) {
+            bus.record_failure();
+        }
+        kind
+    }
 }
 
 /// Wasted-time ledger (§II-B): recovery time + steady-state checkpoint
@@ -128,6 +144,23 @@ mod tests {
     fn never_never_fires() {
         let mut inj = FailureInjector::never();
         assert!(inj.poll(1e12).is_none());
+    }
+
+    #[test]
+    fn poll_telemetry_records_each_failure_event() {
+        use crate::control::telemetry::TelemetryBus;
+        let bus = TelemetryBus::new();
+        let mut inj = FailureInjector::new(10.0, 0.5, 4);
+        let mut fired = 0u64;
+        let mut t = 0.0;
+        for _ in 0..2000 {
+            t += 1.0;
+            if inj.poll_telemetry(t, Some(&bus)).is_some() {
+                fired += 1;
+            }
+        }
+        assert!(fired > 0);
+        assert_eq!(bus.snapshot().failures, fired, "every event reaches the bus");
     }
 
     #[test]

@@ -63,6 +63,17 @@ pub struct RunReport {
     pub lost_iters: u64,
     /// per-iteration wall time distribution
     pub iter_times: Welford,
+    /// control plane (`--adaptive`): configurations applied by the
+    /// closed-loop actuator during the run
+    pub retunes: u64,
+    /// control plane: the (FCF, BS, merge factor) in force at run end —
+    /// equals the configured values when the actuator never fired
+    pub final_full_every: u64,
+    pub final_batch_size: usize,
+    pub final_compact_every: usize,
+    /// cluster runtime: background-scheduler wall seconds (compaction
+    /// passes moved OFF the commit thread — `commit_secs` excludes them)
+    pub compact_secs: f64,
 }
 
 impl RunReport {

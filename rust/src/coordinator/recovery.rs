@@ -11,6 +11,11 @@
 //!   gradient diffs the combine sums gradients, collapsing several Adam
 //!   steps into one — the paper's batched/parallel approximation; the
 //!   drift bound is measured in rust/tests/recovery_equivalence.rs.
+//!   Compacted all-gradient `MergedDiff` spans contribute one partial per
+//!   span: the writer's precomputed union-`sum` section when present
+//!   (skipping a whole merge round per span), else the identical
+//!   left-fold recomputed from the per-step payloads — bit-identical
+//!   either way, pinned by `parallel_recovery_consumes_merged_sums…`.
 
 use std::time::Instant;
 
@@ -19,6 +24,7 @@ use anyhow::{Context, Result};
 use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::format::CkptKind;
 use crate::checkpoint::full::read_full;
+use crate::checkpoint::merged::read_merged_sum;
 use crate::checkpoint::read_chain_object;
 use crate::checkpoint::manifest::Manifest;
 use crate::optim::{Adam, ModelState};
@@ -50,6 +56,10 @@ pub struct RecoveryStats {
     /// by ⌈steps/m⌉ plus a raw tail while `n_diff_steps` stays the full
     /// replay count
     pub merged_objects: usize,
+    /// merged spans whose precomputed union-`sum` section was consumed by
+    /// parallel recovery instead of re-merging the per-step payloads
+    /// (ParallelMerge only; serial replay always replays per step)
+    pub merged_sums_used: usize,
 }
 
 /// Parallel object fetch: shard-aware backends ([`Sharded`]
@@ -77,8 +87,23 @@ fn fetch_objects(
     out
 }
 
-/// All (step, payload) diffs after `base_step`, in step order, with
-/// torn-chain protection.
+/// One loaded chain object: its replayable per-step payloads and — for
+/// all-gradient `MergedDiff` spans — the writer's precomputed union-sum
+/// section, when it is usable as a drop-in for re-merging the per-step
+/// payloads (parallel recovery, Fig. 10).
+struct LoadedObject {
+    kind: CkptKind,
+    /// (step, payload) for steps strictly after the base, ascending
+    items: Vec<(u64, DiffPayload)>,
+    /// usable only when no step of the span was filtered at the base
+    /// boundary (the sum covers the WHOLE span) and every payload is a
+    /// gradient — then it bit-equals the left-fold of `items`
+    /// (`merged.rs::sum_section_equals_left_fold_merge`)
+    sum: Option<SparseGrad>,
+}
+
+/// All chain objects after `base_step`, in step order, with torn-chain
+/// protection.
 ///
 /// A crash can leave the chain with a *damaged* object (torn shard, CRC
 /// mismatch) or a *hole* (a write that never committed while later writes
@@ -100,7 +125,7 @@ fn load_diffs(
     chain: &crate::checkpoint::manifest::Chain,
     base_step: u64,
     stats: &mut RecoveryStats,
-) -> Result<Vec<(u64, DiffPayload)>> {
+) -> Result<Vec<LoadedObject>> {
     if chain.diffs.is_empty() {
         return Ok(Vec::new());
     }
@@ -109,7 +134,7 @@ fn load_diffs(
     let names: Vec<&str> = chain.diffs.iter().map(|(_, _, n)| n.as_str()).collect();
     let fetched = fetch_objects(store, &names);
 
-    let mut out = Vec::new();
+    let mut out: Vec<LoadedObject> = Vec::new();
     let mut prev_hi = base_step;
     let mut truncate_from: Option<usize> = None;
     for (i, ((lo, hi, name), bytes)) in chain.diffs.iter().zip(fetched).enumerate() {
@@ -125,19 +150,37 @@ fn load_diffs(
             truncate_from = Some(i);
             break;
         }
+        let bytes = match bytes {
+            Ok(b) => b,
+            Err(e) => {
+                log::warn!(
+                    "damaged checkpoint object {name} ({e}); truncating chain at step {prev_hi}"
+                );
+                stats.damaged_objects += 1;
+                truncate_from = Some(i);
+                break;
+            }
+        };
         // the shared kind dispatch: batched/merged containers hold several
         // steps, plain diffs one; Full in a diff chain is an error
-        let parsed = bytes
-            .map_err(anyhow::Error::msg)
-            .and_then(|b| read_chain_object(&b, model_sig));
-        match parsed {
+        match read_chain_object(&bytes, model_sig) {
             Ok((kind, items)) => {
-                if kind == CkptKind::MergedDiff {
-                    stats.merged_objects += 1;
-                }
+                let total = items.len();
                 // a span may straddle the base full (compacted before the
                 // full became visible): replay only the steps after it
-                out.extend(items.into_iter().filter(|(s, _)| *s > base_step));
+                let mut items: Vec<(u64, DiffPayload)> =
+                    items.into_iter().filter(|(s, _)| *s > base_step).collect();
+                items.sort_by_key(|(s, _)| *s);
+                let mut sum = None;
+                if kind == CkptKind::MergedDiff {
+                    stats.merged_objects += 1;
+                    // the precomputed union-sum stands in for re-merging
+                    // ONLY when it covers exactly the replayed steps
+                    if items.len() == total && items.len() >= 2 {
+                        sum = read_merged_sum(&bytes, model_sig).unwrap_or(None);
+                    }
+                }
+                out.push(LoadedObject { kind, items, sum });
                 prev_hi = *hi;
             }
             Err(e) => {
@@ -156,7 +199,6 @@ fn load_diffs(
             .map(|(lo, hi, _)| (hi - lo + 1) as usize)
             .sum();
     }
-    out.sort_by_key(|(s, _)| *s);
     Ok(out)
 }
 
@@ -180,27 +222,51 @@ pub fn recover(
         n_diff_objects: chain.diffs.len(),
         ..Default::default()
     };
-    let diffs = load_diffs(store, model_sig, &chain, base_step, &mut stats)?;
-    stats.n_diff_steps = diffs.len();
+    let objects = load_diffs(store, model_sig, &chain, base_step, &mut stats)?;
+    stats.n_diff_steps = objects.iter().map(|o| o.items.len()).sum();
 
     match mode {
         RecoveryMode::SerialReplay => {
-            for (step, payload) in &diffs {
-                apply_one(adam, &mut state, payload);
-                debug_assert_eq!(state.step, *step);
-                stats.full_merge_rounds += 1;
+            for obj in &objects {
+                for (step, payload) in &obj.items {
+                    apply_one(adam, &mut state, payload);
+                    debug_assert_eq!(state.step, *step);
+                    stats.full_merge_rounds += 1;
+                }
             }
         }
         RecoveryMode::ParallelMerge => {
-            // split by payload kind (chains are homogeneous in practice)
+            // Fig. 10: per-object partials, then the pairwise tournament.
+            // Raw diff/batch objects contribute one gradient per step; a
+            // compacted all-gradient span contributes ONE partial — its
+            // precomputed `sum` section when usable (bit-identical to the
+            // left-fold by construction), else the same left-fold
+            // recomputed from the per-step payloads.
             let mut grads: Vec<SparseGrad> = Vec::new();
             let mut deltas: Vec<SparseGrad> = Vec::new();
             let mut last_step = state.step;
-            for (step, payload) in &diffs {
-                last_step = *step;
-                match payload {
-                    DiffPayload::Gradient(g) => grads.push(g.clone()),
-                    DiffPayload::StateDelta(d) => deltas.push(d.clone()),
+            for obj in &objects {
+                if let Some((s, _)) = obj.items.last() {
+                    last_step = *s;
+                }
+                let all_gradient = obj
+                    .items
+                    .iter()
+                    .all(|(_, p)| matches!(p, DiffPayload::Gradient(_)));
+                if obj.kind == CkptKind::MergedDiff && all_gradient && obj.items.len() >= 2 {
+                    if let Some(sum) = &obj.sum {
+                        stats.merged_sums_used += 1;
+                        grads.push(sum.clone());
+                    } else {
+                        grads.push(left_fold_sum(&obj.items));
+                    }
+                    continue;
+                }
+                for (_, payload) in &obj.items {
+                    match payload {
+                        DiffPayload::Gradient(g) => grads.push(g.clone()),
+                        DiffPayload::StateDelta(d) => deltas.push(d.clone()),
+                    }
                 }
             }
             if !grads.is_empty() {
@@ -223,6 +289,19 @@ pub fn recover(
     stats.recovered_step = state.step;
     stats.wall_secs = start.elapsed().as_secs_f64();
     Ok((state, stats))
+}
+
+/// Left-to-right union-sum of an all-gradient span — the exact fold order
+/// [`write_merged`](crate::checkpoint::merged::write_merged) uses for the
+/// `sum` section, so the recomputed partial is bit-identical to a stored
+/// one.
+fn left_fold_sum(items: &[(u64, DiffPayload)]) -> SparseGrad {
+    let mut acc = items[0].1.sparse().clone();
+    let mut scratch = SparseGrad { dense_len: 0, indices: Vec::new(), values: Vec::new() };
+    for (_, p) in &items[1..] {
+        acc.merge_sum_into(p.sparse(), &mut scratch);
+    }
+    acc
 }
 
 fn apply_one(adam: &Adam, state: &mut ModelState, payload: &DiffPayload) {
@@ -493,6 +572,91 @@ mod tests {
         assert_eq!(stats.recovered_step, 6);
         assert_eq!(stats.n_diff_steps, 2, "steps <= base are skipped, not re-applied");
         assert_eq!(stats.merged_objects, 1);
+    }
+
+    /// A merged span encoded WITHOUT a `sum` section (an older writer, or
+    /// a mixed span) — only `g-{step}` sections.
+    fn write_merged_no_sum(
+        items: &[(u64, DiffPayload)],
+        sig: u64,
+        lo: u64,
+        hi: u64,
+    ) -> Vec<u8> {
+        use crate::checkpoint::format::{encode_container_into, SectionSrc};
+        let names: Vec<String> = items.iter().map(|(s, _)| format!("g-{s}")).collect();
+        let secs: Vec<SectionSrc<'_>> = names
+            .iter()
+            .zip(items)
+            .map(|(n, (_, p))| SectionSrc::sparse(n, p.sparse()))
+            .collect();
+        let mut out = Vec::new();
+        encode_container_into(CkptKind::MergedDiff, PayloadCodec::Raw, sig, lo, hi, &secs, &mut out)
+            .unwrap();
+        out
+    }
+
+    #[test]
+    fn parallel_recovery_consumes_merged_sum_sections_bit_identically() {
+        // Store A: compacted spans carry the writer's union-sum sections;
+        // store B: identical spans, sum sections stripped. Parallel
+        // recovery must consume A's sums (no re-merge round per span) and
+        // produce EXACTLY the bytes B's re-merge fallback produces — the
+        // sum section is the left-fold the fallback recomputes.
+        let (store_a, sig, want_serial) = build_gradient_chain(150, 8);
+        compact_by_hand(&store_a, sig, 1, 4);
+        compact_by_hand(&store_a, sig, 5, 8);
+        let (store_b, _, _) = build_gradient_chain(150, 8); // same seed, same chain
+        for (lo, hi) in [(1u64, 4u64), (5, 8)] {
+            let items: Vec<(u64, DiffPayload)> = (lo..=hi)
+                .map(|s| read_diff(&store_b.get(&Manifest::diff_name(s)).unwrap(), sig).unwrap())
+                .collect();
+            store_b
+                .put(&Manifest::merged_name(lo, hi), &write_merged_no_sum(&items, sig, lo, hi))
+                .unwrap();
+        }
+        for s in 1..=8u64 {
+            store_a.delete(&Manifest::diff_name(s)).unwrap();
+            store_b.delete(&Manifest::diff_name(s)).unwrap();
+        }
+
+        let (a, astats) =
+            recover(&store_a, sig, &Adam::default(), RecoveryMode::ParallelMerge).unwrap();
+        let (b, bstats) =
+            recover(&store_b, sig, &Adam::default(), RecoveryMode::ParallelMerge).unwrap();
+        assert_eq!(astats.merged_objects, 2);
+        assert_eq!(astats.merged_sums_used, 2, "both sums consumed");
+        assert_eq!(bstats.merged_sums_used, 0, "nothing to consume: re-merge fallback");
+        assert_eq!(a, b, "sum consumption must be bit-identical to the re-merge path");
+        // 2 span partials -> 1 pairwise round + 1 full merge: one whole
+        // merge round per span is skipped vs 8 leaves (3 rounds + 1)
+        assert_eq!(astats.full_merge_rounds, 2);
+        assert_eq!(bstats.full_merge_rounds, 2);
+        // and the serial path on the same compacted store is still exact
+        let (s, _) =
+            recover(&store_a, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(s, want_serial);
+    }
+
+    #[test]
+    fn straddling_span_never_uses_its_sum() {
+        // the sum covers the WHOLE span; when replay skips steps <= base,
+        // consuming it would re-apply the skipped gradients
+        let (store, sig, want) = build_gradient_chain(150, 6);
+        compact_by_hand(&store, sig, 3, 6);
+        for s in 3..=6u64 {
+            store.delete(&Manifest::diff_name(s)).unwrap();
+        }
+        let (_, _, mid) = build_gradient_chain(150, 4);
+        store
+            .put(&Manifest::full_name(4), &write_full(&mid, sig, PayloadCodec::Raw).unwrap())
+            .unwrap();
+        let (got, stats) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::ParallelMerge).unwrap();
+        assert_eq!(stats.merged_sums_used, 0, "straddling span must re-merge live steps");
+        assert_eq!(stats.n_diff_steps, 2);
+        assert_eq!(got.step, want.step);
+        // parallel collapse of 2 steps: small drift, never the 2 skipped steps
+        assert!(got.params.max_abs_diff(&want.params) < 0.05);
     }
 
     #[test]

@@ -625,6 +625,65 @@ pub fn exp_compaction() -> Table {
     t
 }
 
+/// Control-plane scan (real actuator, synthetic telemetry): the closed
+/// §V-C loop from a deliberately bad initial config under a stressed
+/// failure rate, against the Eq. (10) closed form for the TRUE system
+/// parameters. The `static` row never ticks the actuator (what every run
+/// before the control plane did); the `adaptive` rows tick it once per
+/// simulated full epoch. Acceptance: the converged FCF/BS land within
+/// 20% of the closed form.
+pub fn exp_control() -> Table {
+    use crate::control::{converge_synthetic, Retune};
+    use crate::coordinator::config_opt::optimal_config_integer;
+
+    let iter_time = 1.9;
+    let full_size = calib::full_bytes(&zoo::GPT2_S) as f64;
+    let p = SystemParams {
+        n_gpus: 8.0,
+        mtbf: 900.0, // stressed failures: the regime where tuning matters
+        write_bw: A100.ssd_bw,
+        full_size,
+        total_time: 24.0 * 3600.0,
+        r_full: full_size / A100.ssd_bw,
+        r_diff: 0.2,
+    };
+    let (want_f, want_b) = optimal_config_integer(&p, iter_time);
+    let bad = Retune {
+        full_every: want_f * 50,
+        batch_size: (want_b * 16).min(512),
+        compact_every: 0,
+    };
+    let mut t = Table::new(
+        "Control plane — closed-loop §V-C tuning vs Eq. (10) closed form (GPT2-S)",
+        &["mode", "ticks", "FCF", "BS", "mf", "FCF*", "BS*", "FCF err %", "retunes"],
+    );
+    let mut row = |mode: &str, ticks: usize| {
+        let (got, retunes) = if ticks == 0 {
+            (bad, 0u64)
+        } else {
+            let a = converge_synthetic(p, iter_time, bad, ticks);
+            (a.applied(), a.retunes)
+        };
+        let err = (got.full_every as f64 - want_f as f64).abs() / want_f as f64 * 100.0;
+        t.row(vec![
+            mode.into(),
+            ticks.to_string(),
+            got.full_every.to_string(),
+            got.batch_size.to_string(),
+            got.compact_every.to_string(),
+            want_f.to_string(),
+            want_b.to_string(),
+            format!("{err:.1}"),
+            retunes.to_string(),
+        ]);
+    };
+    row("static", 0);
+    row("adaptive", 50);
+    row("adaptive", 200);
+    row("adaptive", 600);
+    t
+}
+
 /// All simulated experiments, in paper order.
 pub fn all_simulated() -> Vec<Table> {
     vec![fig1(), fig4(), table1(), exp1(), exp2(), exp3(), exp4(), exp7(), exp8(), exp9(), exp10()]
@@ -646,6 +705,7 @@ pub fn by_name(name: &str) -> Option<Table> {
         "sharded" => exp_sharded(),
         "cluster" => exp_cluster(),
         "compaction" => exp_compaction(),
+        "control" => exp_control(),
         _ => return None,
     })
 }
@@ -718,7 +778,7 @@ mod tests {
     fn by_name_covers_all() {
         let names = [
             "fig1", "fig4", "table1", "exp1", "exp2", "exp3", "exp4", "exp7", "exp8", "exp9",
-            "exp10", "sharded", "cluster", "compaction",
+            "exp10", "sharded", "cluster", "compaction", "control",
         ];
         for n in names {
             assert!(by_name(n).is_some(), "{n}");
@@ -745,6 +805,25 @@ mod tests {
                 assert_eq!(merged, 24 / mf, "every complete run must merge");
             }
         }
+    }
+
+    #[test]
+    fn control_table_adaptive_converges_within_20pct() {
+        let t = exp_control();
+        assert_eq!(t.rows.len(), 4);
+        let static_err: f64 = t.rows[0][7].parse().unwrap();
+        assert!(static_err > 100.0, "the bad initial config must be far off");
+        let final_err: f64 = t.rows[3][7].parse().unwrap();
+        assert!(
+            final_err <= 20.0,
+            "adaptive must land within 20% of Eq. (10): {final_err}%\n{}",
+            t.render()
+        );
+        let retunes: u64 = t.rows[3][8].parse().unwrap();
+        assert!(retunes > 0);
+        // convergence is monotone across the tick budgets (50 -> 600)
+        let err_50: f64 = t.rows[1][7].parse().unwrap();
+        assert!(final_err <= err_50 + 1.0, "more ticks must not diverge");
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod checkpoint;
 pub mod cluster;
 pub mod collective;
 pub mod compress;
+pub mod control;
 pub mod coordinator;
 pub mod exp;
 pub mod model;

@@ -35,10 +35,17 @@ commands:
            [--compact-every M]  background chain compaction: merge every M
                           persisted raw diffs into one MergedDiff span
                           (bounds recovery replay; M < 2 disables)
+           [--adaptive]   closed-loop §V-C control plane: measure MTBF /
+                          write bandwidth / replay ratio at runtime and
+                          retune full-every, batch-size and compact-every
+                          live at epoch boundaries (lowdiff strategy)
+           [--io-budget B] background-I/O byte budget (bytes/sec) for the
+                          compaction scheduler's token-bucket gate; the
+                          gate always yields to in-flight persists
            [--fsync]      fsync files AND parent dir on every put (durable)
   recover  --model <name> --ckpt-dir DIR [--parallel]
            (reads sharded, single-object and compacted layouts transparently)
-  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|compaction|all>
+  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|compaction|control|all>
   info     --model <name>
 ";
 
@@ -52,7 +59,7 @@ fn main() {
 }
 
 fn run(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["zstd", "parallel", "verbose", "fsync"])?;
+    let args = Args::parse(raw, &["zstd", "parallel", "verbose", "fsync", "adaptive"])?;
     match args.subcommand(USAGE)? {
         "train" => cmd_train(&args),
         "recover" => cmd_recover(&args),
@@ -88,10 +95,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         writers: args.parse_or("writers", 1usize)?,
         ranks: args.parse_or("ranks", 1usize)?,
         compact_every: args.parse_or("compact-every", 0usize)?,
+        adaptive: args.flag("adaptive"),
+        io_budget: args.parse_or("io-budget", 0.0f64)?,
         ..TrainConfig::default()
     };
     if cfg.ranks > 1 && !cfg.uses_cluster() {
         bail!("--ranks > 1 requires --strategy lowdiff (the cluster runtime)");
+    }
+    if cfg.adaptive && strategy != StrategyKind::LowDiff {
+        bail!("--adaptive requires --strategy lowdiff (the §V-C control plane)");
     }
 
     let mrt = ModelRuntime::load(&artifacts_dir(), &model)

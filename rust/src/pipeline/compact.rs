@@ -29,8 +29,9 @@
 //!   leftover raws are redundant garbage the next pass/GC sweeps.
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{ensure, Context, Result};
@@ -40,6 +41,8 @@ use crate::checkpoint::format::{CkptKind, PayloadCodec};
 use crate::checkpoint::manifest::{Chain, Manifest};
 use crate::checkpoint::merged::write_merged;
 use crate::checkpoint::read_chain_object;
+use crate::control::iosched::{GatedStore, IoGate};
+use crate::control::telemetry::TelemetryBus;
 use crate::storage::StorageBackend;
 
 /// Configuration of a compaction pass / background compactor.
@@ -74,6 +77,9 @@ pub struct CompactStats {
     pub bytes_written: u64,
     /// merged writes that failed read-back verification (raw chain kept)
     pub aborted_merges: u64,
+    /// superseded raws whose delete failed but whose fast-tier copy was
+    /// dropped ([`StorageBackend::demote`] — tiered placement)
+    pub raw_demoted: u64,
 }
 
 /// One compaction pass over an already-discovered chain on a *logical*
@@ -193,9 +199,13 @@ fn merge_run(
     stats.merged_written += 1;
     for (_, _, raw) in run {
         // best-effort: a leftover raw is redundant (cover selection
-        // prefers the merged span); the next pass or GC sweeps it
+        // prefers the merged span); the next pass or GC sweeps it. A raw
+        // that cannot be deleted is at least demoted out of the fast tier
+        // (write-cold from here on — tiered placement, docs/STORAGE.md).
         if store.delete(raw).is_ok() {
             stats.raw_compacted += 1;
+        } else if store.demote(raw).unwrap_or(false) {
+            stats.raw_demoted += 1;
         }
     }
     Ok(1)
@@ -206,9 +216,19 @@ fn merge_run(
 /// the newest chain on its logical store view, and compacts complete
 /// runs. A final pass runs at shutdown so a drained checkpointer leaves
 /// the chain fully compacted.
+///
+/// Control-plane hooks ([`Compactor::spawn_with`]): an [`IoGate`] wraps
+/// the store so every compaction read and merged write yields to
+/// in-flight checkpoint persists and pays the background byte budget; a
+/// [`TelemetryBus`] receives the replay-ratio counters the §V-C tuner's
+/// `observe_compaction` feedback consumes; and the merge factor is a
+/// live knob ([`Compactor::set_merge_factor`]) the actuator retunes at
+/// safe points (`< 2` idles the thread without stopping it).
 pub struct Compactor {
     tx: Option<Sender<()>>,
     handle: Option<JoinHandle<CompactStats>>,
+    merge_factor: Arc<AtomicUsize>,
+    live: Arc<Mutex<CompactStats>>,
 }
 
 impl Compactor {
@@ -216,12 +236,30 @@ impl Compactor {
     /// 1-shard [`Sharded`](crate::storage::Sharded) when the write path
     /// shards).
     pub fn spawn(store: Arc<dyn StorageBackend>, cfg: CompactorConfig) -> Compactor {
+        Compactor::spawn_with(store, cfg, None, None)
+    }
+
+    /// Spawn with control-plane hooks (see type docs).
+    pub fn spawn_with(
+        store: Arc<dyn StorageBackend>,
+        cfg: CompactorConfig,
+        gate: Option<Arc<IoGate>>,
+        bus: Option<Arc<TelemetryBus>>,
+    ) -> Compactor {
+        let store: Arc<dyn StorageBackend> = match gate {
+            Some(g) => Arc::new(GatedStore::new(store, g)),
+            None => store,
+        };
+        let merge_factor = Arc::new(AtomicUsize::new(cfg.merge_factor));
+        let live = Arc::new(Mutex::new(CompactStats::default()));
         let (tx, rx) = channel::<()>();
+        let mf = Arc::clone(&merge_factor);
+        let lv = Arc::clone(&live);
         let handle = std::thread::Builder::new()
             .name("ckpt-compact".into())
-            .spawn(move || run_loop(store, cfg, rx))
+            .spawn(move || run_loop(store, cfg, rx, mf, lv, bus))
             .expect("spawning compactor");
-        Compactor { tx: Some(tx), handle: Some(handle) }
+        Compactor { tx: Some(tx), handle: Some(handle), merge_factor, live }
     }
 
     /// Notify the compactor that one more raw diff object became durable.
@@ -229,6 +267,18 @@ impl Compactor {
         if let Some(tx) = &self.tx {
             let _ = tx.send(());
         }
+    }
+
+    /// Retune the merge factor; takes effect from the next pass (`< 2`
+    /// idles compaction without tearing anything already merged).
+    pub fn set_merge_factor(&self, mf: usize) {
+        self.merge_factor.store(mf, Ordering::SeqCst);
+    }
+
+    /// Live counters (updated after every pass) — mid-run observability
+    /// for the control plane and tests.
+    pub fn stats(&self) -> CompactStats {
+        self.live.lock().unwrap().clone()
     }
 
     /// Stop after a final pass; returns the accumulated counters.
@@ -254,7 +304,14 @@ impl Drop for Compactor {
     }
 }
 
-fn run_loop(store: Arc<dyn StorageBackend>, cfg: CompactorConfig, rx: Receiver<()>) -> CompactStats {
+fn run_loop(
+    store: Arc<dyn StorageBackend>,
+    cfg: CompactorConfig,
+    rx: Receiver<()>,
+    merge_factor: Arc<AtomicUsize>,
+    live: Arc<Mutex<CompactStats>>,
+    bus: Option<Arc<TelemetryBus>>,
+) -> CompactStats {
     let mut stats = CompactStats::default();
     let protect = HashSet::new();
     let mut pending = 0usize;
@@ -262,11 +319,13 @@ fn run_loop(store: Arc<dyn StorageBackend>, cfg: CompactorConfig, rx: Receiver<(
         match rx.recv() {
             Ok(()) => {
                 pending += 1;
-                if pending >= cfg.merge_factor {
+                let mf = merge_factor.load(Ordering::SeqCst);
+                if mf >= 2 && pending >= mf {
                     pending = 0;
                     // live pass: complete chunks only — the tail is still
                     // growing and merging it now would strand small spans
-                    pass(store.as_ref(), &cfg, &protect, false, &mut stats);
+                    let c = CompactorConfig { merge_factor: mf, ..cfg };
+                    pass(store.as_ref(), &c, &protect, false, &mut stats, &live, &bus);
                 }
             }
             Err(_) => {
@@ -274,21 +333,28 @@ fn run_loop(store: Arc<dyn StorageBackend>, cfg: CompactorConfig, rx: Receiver<(
                 // final pass (tail included, everything settled) leaves
                 // the chain fully compacted — replay is bounded by
                 // ⌈n/merge_factor⌉ + 1
-                let settled = CompactorConfig { settle_tail: 0, ..cfg };
-                pass(store.as_ref(), &settled, &protect, true, &mut stats);
+                let mf = merge_factor.load(Ordering::SeqCst);
+                if mf >= 2 {
+                    let settled = CompactorConfig { settle_tail: 0, merge_factor: mf, ..cfg };
+                    pass(store.as_ref(), &settled, &protect, true, &mut stats, &live, &bus);
+                }
                 return stats;
             }
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn pass(
     store: &dyn StorageBackend,
     cfg: &CompactorConfig,
     protect: &HashSet<String>,
     merge_tail: bool,
     stats: &mut CompactStats,
+    live: &Mutex<CompactStats>,
+    bus: &Option<Arc<TelemetryBus>>,
 ) {
+    let before = stats.clone();
     match Manifest::latest_chain(store) {
         Ok(chain) => {
             if let Err(e) = compact_chain(store, &chain, cfg, protect, merge_tail, stats) {
@@ -296,6 +362,14 @@ fn pass(
             }
         }
         Err(e) => log::warn!("compaction discovery failed: {e:#}"),
+    }
+    *live.lock().unwrap() = stats.clone();
+    if let Some(bus) = bus {
+        bus.record_compaction(
+            stats.merged_written - before.merged_written,
+            stats.raw_compacted - before.raw_compacted,
+            (stats.bytes_read - before.bytes_read) + (stats.bytes_written - before.bytes_written),
+        );
     }
 }
 
@@ -496,6 +570,65 @@ mod tests {
             );
         }
         assert_eq!(stats.passes, 0);
+    }
+
+    #[test]
+    fn merge_factor_is_a_live_knob_with_observable_stats() {
+        let sig = model_signature("c", 64);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        seed_chain(store.as_ref(), sig, 8);
+        // spawned disabled (mf=0): nothing merges until the knob moves
+        let c = Compactor::spawn(Arc::clone(&store), cfg(sig, 0));
+        c.set_merge_factor(4);
+        for _ in 0..8 {
+            c.notify();
+        }
+        // live pass triggers once 4 notifications accumulate; poll the
+        // live stats view until it lands (bounded)
+        let t0 = std::time::Instant::now();
+        while c.stats().merged_written < 2 && t0.elapsed().as_secs() < 5 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(c.stats().merged_written, 2, "live stats observable mid-run");
+        let stats = c.finish();
+        assert_eq!(stats.merged_written, 2, "8 seeded diffs at retuned mf=4");
+        assert_eq!(stats.raw_compacted, 8);
+        assert!(store.exists(&Manifest::merged_name(1, 4)));
+        assert!(store.exists(&Manifest::merged_name(5, 8)));
+    }
+
+    #[test]
+    fn gated_compactor_is_shaped_but_bit_identical() {
+        use crate::control::iosched::{IoGate, IoGateConfig};
+        use crate::control::telemetry::TelemetryBus;
+        let sig = model_signature("c", 64);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        seed_chain(store.as_ref(), sig, 8);
+        let gate = Arc::new(IoGate::new(IoGateConfig {
+            bytes_per_sec: 64e6, // generous: shaping must not change results
+            ..IoGateConfig::default()
+        }));
+        let bus = Arc::new(TelemetryBus::new());
+        let c = Compactor::spawn_with(
+            Arc::clone(&store),
+            cfg(sig, 4),
+            Some(Arc::clone(&gate)),
+            Some(Arc::clone(&bus)),
+        );
+        for _ in 0..8 {
+            c.notify();
+        }
+        let stats = c.finish();
+        assert_eq!(stats.merged_written, 2);
+        assert_eq!(stats.raw_compacted, 8);
+        assert!(gate.stats().throttled_bytes > 0, "compaction I/O paid the gate");
+        let snap = bus.snapshot();
+        assert_eq!(snap.merged_written, 2, "replay-ratio feedback reached the bus");
+        assert_eq!(snap.raw_compacted, 8);
+        assert!(snap.compact_bytes > 0);
+        let chain = Manifest::latest_chain(store.as_ref()).unwrap();
+        assert_eq!(chain.diffs.len(), 2);
+        assert_eq!(chain.latest_step(), 8);
     }
 
     #[test]

@@ -2,10 +2,20 @@
 //! cluster rank threads — synchronous single-object puts, or the sharded
 //! async engine with completion reaping, bounded in-flight backpressure,
 //! and pre-GC / shutdown barriers.
+//!
+//! Control-plane hooks ([`Sink::with_control`]): every persist holds an
+//! [`IoGate`] guard while it occupies the device, so background
+//! compaction I/O routed through the same gate yields to it
+//! (interference-aware scheduling, docs/CONTROL.md); durable bytes and
+//! observed device seconds flow to the [`TelemetryBus`] as the effective
+//! write bandwidth the §V-C tuner consumes. Both hooks are optional and
+//! free when absent.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::control::iosched::{IoGate, PersistGuard};
+use crate::control::telemetry::TelemetryBus;
 use crate::pipeline::encode::Encoded;
 use crate::pipeline::CkptStats;
 use crate::storage::{Sharded, StorageBackend, WriteHandle};
@@ -15,12 +25,26 @@ struct Inflight {
     name: String,
     bytes: u64,
     handle: WriteHandle,
+    /// submit time: blocking completions report `started.elapsed()` as
+    /// the observed device occupancy (an upper bound — queue time
+    /// included — which is exactly the effective per-object latency the
+    /// Eq. (8) bandwidth term models)
+    started: Instant,
+    /// keeps the persist marked on the gate until completion is observed
+    _guard: Option<PersistGuard>,
+}
+
+/// Where encoded objects meet storage.
+enum Mode {
+    Direct(Arc<dyn StorageBackend>),
+    Engine { eng: Sharded, inflight: Vec<Inflight>, cap: usize },
 }
 
 /// The persist stage: where encoded objects meet storage.
-pub enum Sink {
-    Direct(Arc<dyn StorageBackend>),
-    Engine { eng: Sharded, inflight: Vec<Inflight>, cap: usize },
+pub struct Sink {
+    mode: Mode,
+    gate: Option<Arc<IoGate>>,
+    bus: Option<Arc<TelemetryBus>>,
 }
 
 impl Sink {
@@ -29,19 +53,32 @@ impl Sink {
     /// oldest write is awaited past it, which propagates to the producer
     /// as a visible stall).
     pub fn new(store: Arc<dyn StorageBackend>, n_shards: usize, writers: usize, cap: usize) -> Sink {
-        if n_shards > 1 || writers > 1 {
-            Sink::Engine { eng: Sharded::new(store, n_shards, writers), inflight: Vec::new(), cap }
+        let mode = if n_shards > 1 || writers > 1 {
+            Mode::Engine { eng: Sharded::new(store, n_shards, writers), inflight: Vec::new(), cap }
         } else {
-            Sink::Direct(store)
-        }
+            Mode::Direct(store)
+        };
+        Sink { mode, gate: None, bus: None }
+    }
+
+    /// Attach the control plane: persists mark the gate while in flight,
+    /// and durable bytes/device seconds feed the telemetry bus.
+    pub fn with_control(
+        mut self,
+        gate: Option<Arc<IoGate>>,
+        bus: Option<Arc<TelemetryBus>>,
+    ) -> Sink {
+        self.gate = gate;
+        self.bus = bus;
+        self
     }
 
     /// The logical object view (GC, recovery interop must see through the
     /// shard layout).
     pub fn view(&self) -> &dyn StorageBackend {
-        match self {
-            Sink::Direct(s) => s.as_ref(),
-            Sink::Engine { eng, .. } => eng,
+        match &self.mode {
+            Mode::Direct(s) => s.as_ref(),
+            Mode::Engine { eng, .. } => eng,
         }
     }
 
@@ -52,32 +89,45 @@ impl Sink {
     pub fn submit(&mut self, obj: Encoded, stats: &Mutex<CkptStats>) {
         let Encoded { name, buf, copied } = obj;
         stats.lock().unwrap().bytes_copied += copied;
-        match self {
-            Sink::Direct(store) => {
+        let guard = self.gate.as_ref().map(|g| g.persist_guard());
+        let bus = self.bus.clone();
+        match &mut self.mode {
+            Mode::Direct(store) => {
                 let t0 = Instant::now();
                 let res = store.put(&name, &buf);
+                let secs = t0.elapsed().as_secs_f64();
                 let mut s = stats.lock().unwrap();
-                s.write_secs += t0.elapsed().as_secs_f64();
+                s.write_secs += secs;
                 match res {
                     Ok(()) => {
                         s.writes += 1;
                         s.bytes_written += buf.len() as u64;
+                        if let Some(bus) = &bus {
+                            bus.record_write(buf.len() as u64, secs);
+                        }
                     }
                     Err(e) => {
                         log::error!("checkpoint write {name} failed: {e:#}");
                         s.errors += 1;
                     }
                 }
+                drop(guard);
             }
-            Sink::Engine { eng, inflight, cap } => {
+            Mode::Engine { eng, inflight, cap } => {
                 let len = buf.len() as u64;
                 let handle = eng.put_async(&name, buf);
-                inflight.push(Inflight { name, bytes: len, handle });
+                inflight.push(Inflight {
+                    name,
+                    bytes: len,
+                    handle,
+                    started: Instant::now(),
+                    _guard: guard,
+                });
                 {
                     let mut s = stats.lock().unwrap();
                     s.inflight_peak = s.inflight_peak.max(inflight.len());
                 }
-                Self::reap(inflight, stats);
+                Self::reap(inflight, stats, &bus);
                 // backpressure: don't let encoded-but-unwritten checkpoints
                 // pile up without bound when the device is slower than the
                 // producer — block on the oldest write past the cap
@@ -86,7 +136,12 @@ impl Sink {
                     let t0 = Instant::now();
                     let res = w.handle.wait();
                     stats.lock().unwrap().write_secs += t0.elapsed().as_secs_f64();
-                    Self::account(&w.name, w.bytes, res, stats);
+                    // completion observed synchronously: the submit→done
+                    // span is a live effective-latency sample for the
+                    // bandwidth estimator (the device-bound regime, which
+                    // is when tuning on W matters)
+                    let span = w.started.elapsed().as_secs_f64();
+                    Self::account_timed(&w.name, w.bytes, span, res, stats, &bus);
                 }
             }
         }
@@ -105,19 +160,26 @@ impl Sink {
         stats.bytes_copied += copied;
         let len = buf.len() as u64;
         let crc = crc32fast::hash(&buf);
+        let guard = self.gate.as_ref().map(|g| g.persist_guard());
         let t0 = Instant::now();
-        let res = match self {
-            Sink::Engine { eng, .. } => {
+        let res = match &mut self.mode {
+            Mode::Engine { eng, .. } => {
                 stats.inflight_peak = stats.inflight_peak.max(1);
                 eng.put_async(&name, buf).wait()
             }
-            Sink::Direct(store) => store.put(&name, &buf).map_err(|e| format!("{e:#}")),
+            Mode::Direct(store) => store.put(&name, &buf).map_err(|e| format!("{e:#}")),
         };
-        stats.write_secs += t0.elapsed().as_secs_f64();
+        let secs = t0.elapsed().as_secs_f64();
+        drop(guard);
+        stats.write_secs += secs;
         match res {
             Ok(()) => {
                 stats.writes += 1;
                 stats.bytes_written += len;
+                if let Some(bus) = &self.bus {
+                    // blocking persist: the observed wall time IS device time
+                    bus.record_write(len, secs);
+                }
                 Ok((len, crc))
             }
             Err(e) => {
@@ -129,11 +191,15 @@ impl Sink {
     }
 
     /// Harvest completed handles without blocking.
-    fn reap(inflight: &mut Vec<Inflight>, stats: &Mutex<CkptStats>) {
+    fn reap(
+        inflight: &mut Vec<Inflight>,
+        stats: &Mutex<CkptStats>,
+        bus: &Option<Arc<TelemetryBus>>,
+    ) {
         inflight.retain(|w| match w.handle.try_result() {
             None => true,
             Some(res) => {
-                Self::account(&w.name, w.bytes, res, stats);
+                Self::account(&w.name, w.bytes, res, stats, bus);
                 false
             }
         });
@@ -142,22 +208,46 @@ impl Sink {
     /// Block until every in-flight write committed (pre-GC / shutdown
     /// barrier). No-op in direct mode.
     pub fn barrier(&mut self, stats: &Mutex<CkptStats>) {
-        if let Sink::Engine { inflight, .. } = self {
+        let bus = self.bus.clone();
+        if let Mode::Engine { inflight, .. } = &mut self.mode {
             let t0 = Instant::now();
             for w in inflight.drain(..) {
                 let res = w.handle.wait();
-                Self::account(&w.name, w.bytes, res, stats);
+                let span = w.started.elapsed().as_secs_f64();
+                Self::account_timed(&w.name, w.bytes, span, res, stats, &bus);
             }
             stats.lock().unwrap().write_secs += t0.elapsed().as_secs_f64();
         }
     }
 
-    fn account(name: &str, bytes: u64, res: Result<(), String>, stats: &Mutex<CkptStats>) {
+    fn account(
+        name: &str,
+        bytes: u64,
+        res: Result<(), String>,
+        stats: &Mutex<CkptStats>,
+        bus: &Option<Arc<TelemetryBus>>,
+    ) {
+        // lazy reap: the write finished some unknown time ago, so no
+        // occupancy sample — bytes only (the estimator skips the window)
+        Self::account_timed(name, bytes, 0.0, res, stats, bus);
+    }
+
+    fn account_timed(
+        name: &str,
+        bytes: u64,
+        device_secs: f64,
+        res: Result<(), String>,
+        stats: &Mutex<CkptStats>,
+        bus: &Option<Arc<TelemetryBus>>,
+    ) {
         let mut s = stats.lock().unwrap();
         match res {
             Ok(()) => {
                 s.writes += 1;
                 s.bytes_written += bytes;
+                if let Some(bus) = bus {
+                    bus.record_write(bytes, device_secs);
+                }
             }
             Err(e) => {
                 log::error!("checkpoint write {name} failed: {e}");
@@ -191,6 +281,7 @@ mod tests {
     use crate::checkpoint::diff::DiffPayload;
     use crate::checkpoint::format::PayloadCodec;
     use crate::checkpoint::manifest::Manifest;
+    use crate::control::iosched::IoGateConfig;
     use crate::pipeline::Encoder;
     use crate::sparse::SparseGrad;
     use crate::storage::MemStore;
@@ -244,5 +335,41 @@ mod tests {
         assert_eq!(stats.writes, 1);
         let bytes = store.get(&Manifest::diff_name(7)).unwrap();
         assert_eq!(crc32fast::hash(&bytes), want.1);
+    }
+
+    #[test]
+    fn control_hooks_mark_the_gate_and_feed_the_bus() {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let enc = Encoder::new(1, PayloadCodec::Raw, 2);
+        let bus = Arc::new(TelemetryBus::new());
+        let gate = Arc::new(IoGate::new(IoGateConfig::default()));
+        let mut sink = Sink::new(Arc::clone(&store), 1, 1, 8)
+            .with_control(Some(Arc::clone(&gate)), Some(Arc::clone(&bus)));
+        let stats = Mutex::new(CkptStats::default());
+        sink.submit(obj(&enc, 1), &stats);
+        let mut raw = CkptStats::default();
+        sink.persist_durable(obj(&enc, 2), &mut raw).unwrap();
+        assert_eq!(gate.persists_inflight(), 0, "guards released after the puts");
+        let snap = bus.snapshot();
+        assert_eq!(snap.bytes_written, stats.lock().unwrap().bytes_written + raw.bytes_written);
+        assert!(snap.write_secs > 0.0, "direct persists report device time");
+    }
+
+    #[test]
+    fn engine_mode_feeds_bytes_through_async_completions() {
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let enc = Encoder::new(1, PayloadCodec::Raw, 4);
+        let bus = Arc::new(TelemetryBus::new());
+        let gate = Arc::new(IoGate::new(IoGateConfig::default()));
+        let mut sink = Sink::new(Arc::clone(&store), 2, 2, 8)
+            .with_control(Some(Arc::clone(&gate)), Some(Arc::clone(&bus)));
+        let stats = Mutex::new(CkptStats::default());
+        for step in 1..=3 {
+            sink.submit(obj(&enc, step), &stats);
+        }
+        sink.barrier(&stats);
+        assert_eq!(gate.persists_inflight(), 0, "all guards released at the barrier");
+        let snap = bus.snapshot();
+        assert_eq!(snap.bytes_written, stats.lock().unwrap().bytes_written);
     }
 }

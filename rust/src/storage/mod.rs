@@ -133,6 +133,15 @@ pub trait StorageBackend: Send + Sync {
         }
         self.put(name, &buf)
     }
+    /// Tier-placement hint: drop any fast-tier copy of `name` while
+    /// keeping the durable copy readable (the object is expected to stay
+    /// write-cold — e.g. a raw diff superseded by a merged span, or a
+    /// protected record tip kept only for fallback recovery). Returns
+    /// whether a demotion actually happened. Backends without tiers
+    /// no-op; [`Tiered`] implements it, wrappers forward.
+    fn demote(&self, _name: &str) -> Result<bool> {
+        Ok(false)
+    }
     /// Engine-level counters (spill traffic, in-flight writes). Composite
     /// backends override/forward; plain stores report zeros.
     fn storage_stats(&self) -> StorageStats {
@@ -183,6 +192,9 @@ impl<B: StorageBackend + ?Sized> StorageBackend for std::sync::Arc<B> {
     }
     fn put_vectored(&self, name: &str, parts: &[&[u8]]) -> Result<()> {
         (**self).put_vectored(name, parts)
+    }
+    fn demote(&self, name: &str) -> Result<bool> {
+        (**self).demote(name)
     }
     fn storage_stats(&self) -> StorageStats {
         (**self).storage_stats()

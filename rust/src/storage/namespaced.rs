@@ -71,6 +71,10 @@ impl StorageBackend for Namespaced {
         self.inner.put_vectored(&self.full(name), parts)
     }
 
+    fn demote(&self, name: &str) -> Result<bool> {
+        self.inner.demote(&self.full(name))
+    }
+
     fn storage_stats(&self) -> StorageStats {
         StorageStats::default()
     }

@@ -314,6 +314,29 @@ impl StorageBackend for Sharded {
         self.lanes[0].exists(&Manifest::shard_index_name(name)) || self.lanes[0].exists(name)
     }
 
+    fn demote(&self, name: &str) -> Result<bool> {
+        // tiered placement passthrough: a logical object's fast-tier
+        // presence is that of its physical pieces — demote the plain
+        // object, the shard index and every shard, on every lane (the
+        // compactor / cluster scheduler demote through their 1-shard
+        // logical views, so this must reach a Tiered base store)
+        let mut any = false;
+        for lane in &self.lanes {
+            for obj in lane.list()? {
+                let ours = obj == name
+                    || Manifest::shard_index_base(&obj) == Some(name)
+                    || (Manifest::is_shard_artifact(&obj)
+                        && obj.len() > name.len()
+                        && obj.starts_with(name)
+                        && obj.as_bytes()[name.len()] == b'.');
+                if ours && lane.demote(&obj)? {
+                    any = true;
+                }
+            }
+        }
+        Ok(any)
+    }
+
     fn storage_stats(&self) -> StorageStats {
         let mut st = StorageStats {
             inflight: self.inflight(),
@@ -336,6 +359,35 @@ mod tests {
         let inner = Arc::new(MemStore::new());
         let eng = Sharded::new(inner.clone() as Arc<dyn StorageBackend>, n_shards, writers);
         (inner, eng)
+    }
+
+    #[test]
+    fn demote_reaches_every_physical_piece_on_a_tiered_base() {
+        use crate::storage::Tiered;
+        let fast = Arc::new(MemStore::new());
+        let durable = Arc::new(MemStore::new());
+        let tiered = Arc::new(Tiered::new(
+            Arc::clone(&fast) as Arc<dyn StorageBackend>,
+            Arc::clone(&durable) as Arc<dyn StorageBackend>,
+        ));
+        let eng = Sharded::new(Arc::clone(&tiered) as Arc<dyn StorageBackend>, 3, 2);
+        let data = payload(300);
+        eng.put("diff-000000000007.ldck", &data).unwrap();
+        eng.put("diff-000000000070.ldck", &data).unwrap(); // prefix-adjacent name
+        tiered.wait_idle();
+        assert!(eng.demote("diff-000000000007.ldck").unwrap());
+        // every physical piece (3 shards + index) left the fast tier;
+        // the neighbor object's pieces are untouched
+        let left: Vec<String> = fast.list().unwrap();
+        assert!(
+            left.iter().all(|n| n.starts_with("diff-000000000070.ldck")),
+            "demote hit the wrong pieces: {left:?}"
+        );
+        assert_eq!(tiered.demoted(), 4, "3 shards + index");
+        // still readable through the engine (durable fallback)
+        assert_eq!(eng.get("diff-000000000007.ldck").unwrap(), data);
+        // unknown name: no-op
+        assert!(!eng.demote("nope").unwrap());
     }
 
     fn payload(n: usize) -> Vec<u8> {

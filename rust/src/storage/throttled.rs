@@ -70,6 +70,10 @@ impl<B: StorageBackend> StorageBackend for Throttled<B> {
         self.inner.exists(name)
     }
 
+    fn demote(&self, name: &str) -> Result<bool> {
+        self.inner.demote(name)
+    }
+
     fn storage_stats(&self) -> StorageStats {
         self.inner.storage_stats()
     }

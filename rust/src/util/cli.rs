@@ -10,6 +10,14 @@
 //! multi-rank cluster runtime (per-rank differential chains + two-phase
 //! global commit), and the `--fsync` flag makes `LocalDir` fsync both the
 //! object file and its parent directory on every put.
+//!
+//! Control-plane knobs (docs/CONTROL.md): `--adaptive` turns on the
+//! closed-loop §V-C tuner — measured MTBF / write bandwidth / compaction
+//! replay ratio retune `--full-every`, `--batch-size` and
+//! `--compact-every` live at epoch boundaries (lowdiff strategy only);
+//! `--io-budget B` caps background compaction I/O at B bytes/sec through
+//! a token-bucket gate that additionally yields to in-flight checkpoint
+//! persists.
 
 use std::collections::BTreeMap;
 

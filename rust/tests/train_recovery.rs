@@ -212,7 +212,7 @@ fn sharded_tiered_recovery_matches_single_object_property() {
                 gc: false,
                 n_shards: shards,
                 writers,
-                compact_every: 0,
+                ..CkptConfig::default()
             };
             let ck = Checkpointer::spawn(store, cfg);
             ck.queue.put(0, Arc::new(CkptItem::Full(state0.clone())));
