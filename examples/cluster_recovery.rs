@@ -57,7 +57,7 @@ fn main() -> Result<()> {
             ..ClusterConfig::default()
         },
         move |r| {
-            let ns = Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r));
+            let ns = Namespaced::new(Arc::clone(&shared), Manifest::gen_rank_prefix(0, r));
             if r == victim {
                 // sharded mode: every object is 2 shard puts + 1 commit
                 // record, so `grace` epochs are 3*grace passing ops
@@ -100,8 +100,8 @@ fn main() -> Result<()> {
     // recover the consistent cut
     let (recovered, cut) = recover_cluster(&store, sig, &adam)?;
     println!(
-        "consistent cut: step {} across {} ranks ({} records seen, {} skipped)",
-        cut.cut_step, cut.ranks, cut.records_seen, cut.records_skipped
+        "consistent cut: step {} gen {} across {} ranks ({} records seen, {} skipped)",
+        cut.cut_step, cut.cut_gen, cut.ranks, cut.records_seen, cut.records_skipped
     );
     assert_eq!(recovered, timeline[cut.cut_step as usize], "cut must be bit-identical");
     println!("|params| = {:.4} — a state the run really visited", recovered.params.l2_norm());

@@ -42,7 +42,7 @@ fn drive(
         let shared = Arc::clone(&store);
         Cluster::spawn_with(Arc::clone(&store), parts, cfg, move |r| {
             Arc::new(Throttled::new(
-                Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r)),
+                Namespaced::new(Arc::clone(&shared), Manifest::gen_rank_prefix(0, r)),
                 256e6,
                 Duration::from_millis(1),
             )) as Arc<dyn StorageBackend>

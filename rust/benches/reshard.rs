@@ -1,0 +1,196 @@
+//! Elastic-reshard bench: bytes moved and wall time for 8→12 and 8→4.
+//!
+//! Seeds an 8-rank run (anchor full + diff epochs over consistent-hash
+//! partitions), then fires one elastic event per scenario and classifies
+//! every byte the reshard writes by name family: carry bases (the moved
+//! state — the cost that scales with |ΔR|), re-cut merged spans (diff
+//! history carried across the event), and the global record (the commit
+//! point). The headline number is the carry traffic as a fraction of
+//! total optimizer state (params + m + v), asserted against the
+//! consistent-hash bound |ΔR|/max(R, R′) + ε — versus 1.00 for the full
+//! re-anchor burst this replaced.
+//!
+//! Run: `cargo bench --bench reshard`; baseline in `BENCH_reshard.json`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::cluster::{
+    elastic_restart, partition_hash, recover_cluster, Cluster, ClusterConfig,
+};
+use lowdiff::compress::topk_mask;
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{MemStore, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+const N_PARAMS: usize = 256 * 1024;
+const STEPS: u64 = 8;
+const RHO: f64 = 0.01;
+const OLD_RANKS: usize = 8;
+
+/// Bytes written so far, keyed by checkpoint name family.
+#[derive(Default)]
+struct PutBytes {
+    carry: AtomicU64,
+    span: AtomicU64,
+    record: AtomicU64,
+    full: AtomicU64,
+    diff: AtomicU64,
+}
+
+impl PutBytes {
+    fn snapshot(&self) -> [u64; 5] {
+        [
+            self.carry.load(Ordering::Relaxed),
+            self.span.load(Ordering::Relaxed),
+            self.record.load(Ordering::Relaxed),
+            self.full.load(Ordering::Relaxed),
+            self.diff.load(Ordering::Relaxed),
+        ]
+    }
+}
+
+/// MemStore wrapper that meters every put by name family.
+struct Classified {
+    inner: MemStore,
+    counts: Arc<PutBytes>,
+}
+
+impl StorageBackend for Classified {
+    fn put(&self, name: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        let slot = if name.contains("/carry-") {
+            &self.counts.carry
+        } else if name.contains("/merged-") {
+            &self.counts.span
+        } else if name.starts_with("global-") {
+            &self.counts.record
+        } else if name.contains("/full-") {
+            &self.counts.full
+        } else {
+            &self.counts.diff
+        };
+        slot.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.inner.put(name, bytes)
+    }
+    fn get(&self, name: &str) -> anyhow::Result<Vec<u8>> {
+        self.inner.get(name)
+    }
+    fn delete(&self, name: &str) -> anyhow::Result<()> {
+        self.inner.delete(name)
+    }
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        self.inner.list()
+    }
+}
+
+/// Seed the 8-rank timeline and return the oracle state at the cut.
+fn seed(store: &Arc<dyn StorageBackend>, cfg: &ClusterConfig) -> ModelState {
+    let cluster =
+        Cluster::spawn(Arc::clone(store), partition_hash(N_PARAMS, OLD_RANKS), cfg.clone());
+    let adam = Adam::default();
+    let mut rng = Rng::new(29);
+    let mut state = ModelState::new(Flat(vec![0.1; N_PARAMS]));
+    let k = ((N_PARAMS as f64 * RHO) as usize).max(1);
+    cluster.put_full(0, &state);
+    for step in 1..=STEPS {
+        let mut g = vec![0f32; N_PARAMS];
+        rng.fill_normal_f32(&mut g);
+        let g = topk_mask(&Flat(g), k);
+        cluster.put_diff_dense(step, &g);
+        adam.apply_sparse(&mut state, &SparseGrad::from_dense(&g));
+    }
+    let stats = cluster.finish();
+    assert_eq!(stats.global_commits, STEPS + 1, "every seed epoch must commit");
+    assert_eq!(stats.torn_commits, 0);
+    state
+}
+
+struct EventRow {
+    label: &'static str,
+    new_ranks: usize,
+    wall: f64,
+    carry: u64,
+    span: u64,
+    record: u64,
+    state_frac: f64,
+    bound: f64,
+}
+
+fn event(label: &'static str, new_ranks: usize) -> EventRow {
+    let counts = Arc::new(PutBytes::default());
+    let store: Arc<dyn StorageBackend> =
+        Arc::new(Classified { inner: MemStore::new(), counts: Arc::clone(&counts) });
+    let sig = model_signature("reshard-bench", N_PARAMS);
+    // Raw codec so carry bytes track moved state one-for-one (12 B per
+    // moved parameter: value + Adam m + v)
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let oracle = seed(&store, &cfg);
+
+    let pre = counts.snapshot();
+    let t0 = Instant::now();
+    let (c2, st, cut) =
+        elastic_restart(&store, &Adam::default(), partition_hash(N_PARAMS, new_ranks), cfg)
+            .expect("elastic restart");
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!((cut.cut_gen, cut.cut_step), (0, STEPS), "cut must land on the seed tip");
+    assert_eq!(st, oracle, "resharded state must be bit-identical to the cut");
+    c2.finish();
+    let post = counts.snapshot();
+    let [carry, span, record, full, diff] =
+        [post[0] - pre[0], post[1] - pre[1], post[2] - pre[2], post[3] - pre[3], post[4] - pre[4]];
+    assert_eq!(full, 0, "{label}: incremental reshard must not write a full re-anchor burst");
+    assert_eq!(diff, 0, "{label}: reshard writes only carries, spans, and the record");
+
+    // the recovered cluster must read back bit-identically on gen 1
+    let (got, rcut) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!((rcut.cut_gen, rcut.cut_step), (1, STEPS));
+    assert_eq!(got, oracle, "{label}: post-reshard recovery diverged");
+
+    // params + m + v, 4 bytes each — what a full re-anchor would move
+    let state_bytes = (3 * N_PARAMS * 4) as f64;
+    let state_frac = carry as f64 / state_bytes;
+    let bound =
+        (OLD_RANKS as f64 - new_ranks as f64).abs() / (OLD_RANKS as f64).max(new_ranks as f64);
+    assert!(
+        state_frac <= bound + 0.10,
+        "{label}: carried {state_frac:.3} of state, consistent-hash bound is {bound:.3}+0.10"
+    );
+    EventRow { label, new_ranks, wall, carry, span, record, state_frac, bound }
+}
+
+fn main() {
+    println!(
+        "== reshard: {N_PARAMS} params, rho {RHO}, {STEPS} diff epochs on {OLD_RANKS} ranks, \
+         then one elastic event ==\n"
+    );
+    let mut json_rows = Vec::new();
+    for (label, new_ranks) in [("grow 8->12", 12usize), ("shrink 8->4", 4)] {
+        let r = event(label, new_ranks);
+        println!(
+            "{:<12} wall {:>7.1} ms  carry {:>9} B ({:.3} of state, bound {:.3}, full \
+             re-anchor 1.000)  spans {:>8} B  record {:>5} B",
+            r.label,
+            r.wall * 1e3,
+            r.carry,
+            r.state_frac,
+            r.bound,
+            r.span,
+            r.record,
+        );
+        json_rows.push(format!(
+            "    {{\"event\": \"{}\", \"old_ranks\": {OLD_RANKS}, \"new_ranks\": {}, \
+             \"wall_ms\": {:.2}, \"carry_bytes\": {}, \"span_bytes\": {}, \"record_bytes\": {}, \
+             \"state_frac\": {:.4}, \"bound\": {:.4}}}",
+            r.label, r.new_ranks, r.wall * 1e3, r.carry, r.span, r.record, r.state_frac, r.bound
+        ));
+    }
+    println!(
+        "\nJSON (paste into BENCH_reshard.json \"measurements\"):\n[\n{}\n]",
+        json_rows.join(",\n")
+    );
+    println!("\nreshard bench done");
+}

@@ -1,0 +1,445 @@
+//! Reshard carry bases: the chain base a fresh namespace generation
+//! starts from after an elastic R→R′ event.
+//!
+//! A naive reshard re-anchors every new rank with a full checkpoint —
+//! a 3Ψ write burst that repays the full-checkpoint cost the paper's
+//! differential scheme exists to avoid. A carry base instead records, per
+//! new rank, the partition's split into:
+//!
+//! - **moved-in intervals**: parameters this rank did not own under the
+//!   old partitioning — their 3·len state words are stored *inline*
+//!   (someone must move those bytes; under consistent hashing they are
+//!   ~|ΔR|/max(R, R′) of the model);
+//! - **reference intervals**: parameters the rank retains — stored as
+//!   `(offset, len)` pairs pointing into the rank's *own* base object of
+//!   the previous generation (consistent hashing keeps retained slices on
+//!   the same rank id, so the reference target is always
+//!   `gen-{g:04}/rank-{r:04}/(full|carry)-{F:012}.ldck` for the same `r`).
+//!
+//! Recovery materializes a carry by reading the referenced old-generation
+//! base (recursively, if that base is itself a carry) and splicing the
+//! inline data over it. The carry is sealed with the *new* partition's
+//! rank signature and step `F` — the uniform base step of the old chains
+//! — so the re-cut merged span `(F, S]` replays on top of it exactly like
+//! a diff chain on a full base.
+
+use anyhow::{bail, ensure, Context, Result};
+use byteorder::{ByteOrder, LittleEndian as LE};
+
+use crate::checkpoint::format::{
+    encode_container_into, CkptKind, ContainerView, PayloadCodec, SectionSrc,
+};
+use crate::cluster::{Partition, Slice};
+use crate::optim::ModelState;
+use crate::tensor::Flat;
+
+/// A decoded carry base (inline data still in concatenated form; see
+/// [`materialize`](Carry::materialize)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Carry {
+    /// base step `F` this carry anchors at
+    pub step: u64,
+    /// generation of the committed record the reshard recovered from
+    pub src_gen: u64,
+    /// step of that committed record (the consistent cut `S`)
+    pub src_step: u64,
+    /// store-level name of the previous generation's base object the
+    /// reference intervals resolve against
+    pub src_base: String,
+    /// global intervals stored inline, sorted by offset
+    pub moved: Vec<Slice>,
+    /// global intervals referencing `src_base`, sorted by offset
+    pub refs: Vec<Slice>,
+    /// inline state: the moved intervals' params/m/v concatenated in
+    /// offset order
+    pub inline: ModelState,
+}
+
+fn encode_intervals(out: &mut Vec<u8>, intervals: &[Slice]) {
+    out.extend_from_slice(&(intervals.len() as u32).to_le_bytes());
+    for s in intervals {
+        out.extend_from_slice(&(s.offset as u64).to_le_bytes());
+        out.extend_from_slice(&(s.len as u64).to_le_bytes());
+    }
+}
+
+fn decode_intervals(bytes: &[u8], pos: &mut usize) -> Result<Vec<Slice>> {
+    ensure!(*pos + 4 <= bytes.len(), "carry meta truncated");
+    let n = LE::read_u32(&bytes[*pos..*pos + 4]) as usize;
+    *pos += 4;
+    ensure!(n <= 1 << 20, "implausible carry interval count");
+    let mut out = Vec::with_capacity(n);
+    let mut prev_end = 0usize;
+    for i in 0..n {
+        ensure!(*pos + 16 <= bytes.len(), "carry meta truncated");
+        let offset = LE::read_u64(&bytes[*pos..*pos + 8]) as usize;
+        let len = LE::read_u64(&bytes[*pos + 8..*pos + 16]) as usize;
+        *pos += 16;
+        ensure!(len > 0, "carry interval {i} is empty");
+        ensure!(i == 0 || offset >= prev_end, "carry intervals unsorted or overlapping");
+        prev_end = offset + len;
+        out.push(Slice { offset, len });
+    }
+    Ok(out)
+}
+
+/// Encode a carry base for one new rank. `global` is the cluster state at
+/// the uniform base step `F` — only the `moved` intervals are read from
+/// it (the whole point: the `refs` intervals never travel).
+pub fn write_carry(
+    global: &ModelState,
+    moved: &[Slice],
+    refs: &[Slice],
+    src_gen: u64,
+    src_step: u64,
+    src_base: &str,
+    rank_sig: u64,
+    codec: PayloadCodec,
+) -> Result<Vec<u8>> {
+    ensure!(!moved.is_empty() || !refs.is_empty(), "carry with no intervals");
+    let inline_len: usize = moved.iter().map(|s| s.len).sum();
+    let mut params = Vec::with_capacity(inline_len);
+    let mut m = Vec::with_capacity(inline_len);
+    let mut v = Vec::with_capacity(inline_len);
+    for s in moved {
+        ensure!(s.end() <= global.params.len(), "moved interval beyond the model");
+        params.extend_from_slice(&global.params.0[s.offset..s.end()]);
+        m.extend_from_slice(&global.m.0[s.offset..s.end()]);
+        v.extend_from_slice(&global.v.0[s.offset..s.end()]);
+    }
+    let params = Flat(params);
+    let m = Flat(m);
+    let v = Flat(v);
+
+    let mut meta = Vec::new();
+    meta.extend_from_slice(&src_gen.to_le_bytes());
+    meta.extend_from_slice(&src_step.to_le_bytes());
+    ensure!(src_base.len() <= u16::MAX as usize, "src base name too long");
+    meta.extend_from_slice(&(src_base.len() as u16).to_le_bytes());
+    meta.extend_from_slice(src_base.as_bytes());
+    encode_intervals(&mut meta, moved);
+    encode_intervals(&mut meta, refs);
+
+    let mut out = Vec::new();
+    encode_container_into(
+        CkptKind::CarryFull,
+        codec,
+        rank_sig,
+        global.step,
+        global.step,
+        &[
+            SectionSrc::bytes("meta", &meta),
+            SectionSrc::flat("params", &params),
+            SectionSrc::flat("adam_m", &m),
+            SectionSrc::flat("adam_v", &v),
+        ],
+        &mut out,
+    )?;
+    Ok(out)
+}
+
+/// Decode a carry base, verifying the (new-partition) rank signature.
+pub fn read_carry(bytes: &[u8], rank_sig: u64) -> Result<Carry> {
+    let c = ContainerView::parse(bytes)?;
+    ensure!(c.kind == CkptKind::CarryFull, "not a carry base: {:?}", c.kind);
+    ensure!(
+        c.model_sig == rank_sig,
+        "carry belongs to a different partitioning (sig {:#x} != {:#x})",
+        c.model_sig,
+        rank_sig
+    );
+    let meta = c.section("meta")?;
+    ensure!(meta.len() >= 18, "carry meta too short");
+    let src_gen = LE::read_u64(&meta[0..8]);
+    let src_step = LE::read_u64(&meta[8..16]);
+    let name_len = LE::read_u16(&meta[16..18]) as usize;
+    ensure!(18 + name_len <= meta.len(), "carry meta truncated");
+    let src_base = std::str::from_utf8(&meta[18..18 + name_len])
+        .context("carry src base name")?
+        .to_string();
+    let mut pos = 18 + name_len;
+    let moved = decode_intervals(meta, &mut pos)?;
+    let refs = decode_intervals(meta, &mut pos)?;
+    ensure!(pos == meta.len(), "carry meta has trailing bytes");
+
+    let params = Flat::from_le_bytes(c.section("params")?);
+    let m = Flat::from_le_bytes(c.section("adam_m")?);
+    let v = Flat::from_le_bytes(c.section("adam_v")?);
+    let inline_len: usize = moved.iter().map(|s| s.len).sum();
+    ensure!(
+        params.len() == inline_len && m.len() == inline_len && v.len() == inline_len,
+        "carry inline sections don't match the moved intervals"
+    );
+    Ok(Carry {
+        step: c.step_lo,
+        src_gen,
+        src_step,
+        src_base,
+        moved,
+        refs,
+        inline: ModelState { params, m, v, step: c.step_lo },
+    })
+}
+
+impl Carry {
+    /// Materialize the new rank's local base state at step `F`:
+    /// moved intervals come from the inline payload, reference intervals
+    /// from `old_state` — the *same rank's* previous-generation base
+    /// (local to `old_part`). `new_part` defines the output index space;
+    /// its slices must be tiled exactly by `moved ∪ refs`.
+    pub fn materialize(
+        &self,
+        new_part: &Partition,
+        old_part: &Partition,
+        old_state: &ModelState,
+    ) -> Result<ModelState> {
+        ensure!(
+            old_state.params.len() == old_part.len(),
+            "old base state has {} params, partition owns {}",
+            old_state.params.len(),
+            old_part.len()
+        );
+        // moved ∪ refs must tile the new partition exactly
+        let mut union: Vec<(Slice, bool)> = self
+            .moved
+            .iter()
+            .map(|s| (*s, true))
+            .chain(self.refs.iter().map(|s| (*s, false)))
+            .collect();
+        union.sort_by_key(|(s, _)| s.offset);
+        {
+            let mut covered = 0usize;
+            let mut ranges = new_part.ranges();
+            let mut cur = ranges.next();
+            for (s, _) in &union {
+                let r = cur.clone().context("carry intervals overrun the partition")?;
+                ensure!(
+                    s.offset == r.start + covered && s.end() <= r.end,
+                    "carry interval [{}, {}) does not tile partition range [{}, {})",
+                    s.offset,
+                    s.end(),
+                    r.start,
+                    r.end
+                );
+                covered += s.len;
+                if r.start + covered == r.end {
+                    covered = 0;
+                    cur = ranges.next();
+                }
+            }
+            ensure!(
+                cur.is_none() && covered == 0,
+                "carry intervals leave part of the partition uncovered"
+            );
+        }
+
+        let n = new_part.len();
+        let mut out = ModelState {
+            params: Flat(vec![0.0; n]),
+            m: Flat(vec![0.0; n]),
+            v: Flat(vec![0.0; n]),
+            step: self.step,
+        };
+        let mut inline_pos = 0usize;
+        for (s, is_moved) in &union {
+            let dst = new_part
+                .local_of_global(s.offset)
+                .context("carry interval outside the new partition")?;
+            if *is_moved {
+                let src = inline_pos..inline_pos + s.len;
+                out.params.0[dst..dst + s.len].copy_from_slice(&self.inline.params.0[src.clone()]);
+                out.m.0[dst..dst + s.len].copy_from_slice(&self.inline.m.0[src.clone()]);
+                out.v.0[dst..dst + s.len].copy_from_slice(&self.inline.v.0[src]);
+                inline_pos += s.len;
+            } else {
+                // a globally-contiguous ref interval may map to
+                // discontiguous old-local runs; copy run by run
+                let mut g = s.offset;
+                let mut d = dst;
+                while g < s.end() {
+                    let ol = old_part
+                        .local_of_global(g)
+                        .with_context(|| format!("ref interval at {g} not in the old partition"))?;
+                    // length of the contiguous old-local run from g
+                    let old_slice = old_part
+                        .slices
+                        .iter()
+                        .find(|sl| sl.offset <= g && g < sl.end())
+                        .expect("local_of_global succeeded");
+                    let run = (old_slice.end() - g).min(s.end() - g);
+                    out.params.0[d..d + run]
+                        .copy_from_slice(&old_state.params.0[ol..ol + run]);
+                    out.m.0[d..d + run].copy_from_slice(&old_state.m.0[ol..ol + run]);
+                    out.v.0[d..d + run].copy_from_slice(&old_state.v.0[ol..ol + run]);
+                    g += run;
+                    d += run;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{partition_even, slice_state};
+
+    fn global(n: usize, step: u64) -> ModelState {
+        ModelState {
+            params: Flat((0..n).map(|i| i as f32).collect()),
+            m: Flat((0..n).map(|i| 100.0 + i as f32).collect()),
+            v: Flat((0..n).map(|i| 200.0 + i as f32).collect()),
+            step,
+        }
+    }
+
+    #[test]
+    fn carry_roundtrip_and_materialize() {
+        let n = 12;
+        let g = global(n, 7);
+        // old: rank 0 owned [0, 6); new: rank 0 owns [0, 6) ∪ [9, 12)
+        let old_part = Partition::contiguous(0, 0, 6);
+        let new_part = Partition {
+            rank: 0,
+            slices: vec![Slice { offset: 0, len: 6 }, Slice { offset: 9, len: 3 }],
+        };
+        let moved = vec![Slice { offset: 9, len: 3 }];
+        let refs = vec![Slice { offset: 0, len: 6 }];
+        let bytes = write_carry(
+            &g,
+            &moved,
+            &refs,
+            0,
+            9,
+            "gen-0000/rank-0000/full-000000000007.ldck",
+            42,
+            PayloadCodec::Raw,
+        )
+        .unwrap();
+        let carry = read_carry(&bytes, 42).unwrap();
+        assert_eq!(carry.step, 7);
+        assert_eq!(carry.src_gen, 0);
+        assert_eq!(carry.src_step, 9);
+        assert_eq!(carry.moved, moved);
+        assert_eq!(carry.refs, refs);
+        assert!(read_carry(&bytes, 43).is_err(), "wrong sig rejected");
+
+        let old_state = slice_state(&g, &old_part);
+        let out = carry.materialize(&new_part, &old_part, &old_state).unwrap();
+        assert_eq!(out, slice_state(&g, &new_part), "bit-identical to direct slicing");
+    }
+
+    #[test]
+    fn carry_with_discontiguous_refs() {
+        // old rank owned two scattered slices; new partition retains both
+        // plus a moved-in middle
+        let n = 20;
+        let g = global(n, 3);
+        let old_part = Partition {
+            rank: 1,
+            slices: vec![Slice { offset: 2, len: 3 }, Slice { offset: 12, len: 4 }],
+        };
+        let new_part = Partition {
+            rank: 1,
+            slices: vec![
+                Slice { offset: 2, len: 3 },
+                Slice { offset: 8, len: 2 },
+                Slice { offset: 12, len: 4 },
+            ],
+        };
+        let moved = vec![Slice { offset: 8, len: 2 }];
+        let refs = vec![Slice { offset: 2, len: 3 }, Slice { offset: 12, len: 4 }];
+        let bytes =
+            write_carry(&g, &moved, &refs, 2, 5, "gen-0002/rank-0001/carry-000000000003.ldck", 7, PayloadCodec::Zstd)
+                .unwrap();
+        let carry = read_carry(&bytes, 7).unwrap();
+        let out = carry
+            .materialize(&new_part, &old_part, &slice_state(&g, &old_part))
+            .unwrap();
+        assert_eq!(out, slice_state(&g, &new_part));
+    }
+
+    #[test]
+    fn carry_inline_is_only_the_moved_bytes() {
+        // the size claim behind the whole design: a carry's payload is
+        // ~3·moved, not 3·len(partition)
+        let n = 1000;
+        let g = global(n, 1);
+        let moved = vec![Slice { offset: 990, len: 10 }];
+        let refs = vec![Slice { offset: 0, len: 990 }];
+        let bytes =
+            write_carry(&g, &moved, &refs, 0, 1, "x", 1, PayloadCodec::Raw).unwrap();
+        let inline = 3 * 10 * 4;
+        assert!(bytes.len() < inline + 300, "carry is {} bytes for {inline} inline", bytes.len());
+    }
+
+    #[test]
+    fn materialize_rejects_incomplete_tiling() {
+        let n = 10;
+        let g = global(n, 1);
+        let old_part = Partition::contiguous(0, 0, 5);
+        let new_part = Partition::contiguous(0, 0, 10);
+        // refs + moved cover only [0, 8)
+        let bytes = write_carry(
+            &g,
+            &[Slice { offset: 5, len: 3 }],
+            &[Slice { offset: 0, len: 5 }],
+            0,
+            1,
+            "x",
+            1,
+            PayloadCodec::Raw,
+        )
+        .unwrap();
+        let carry = read_carry(&bytes, 1).unwrap();
+        let old_state = slice_state(&g, &old_part);
+        assert!(carry.materialize(&new_part, &old_part, &old_state).is_err());
+    }
+
+    #[test]
+    fn full_container_rejected_as_carry() {
+        let g = global(4, 1);
+        let bytes = crate::checkpoint::full::write_full(&g, 9, PayloadCodec::Raw).unwrap();
+        assert!(read_carry(&bytes, 9).is_err());
+    }
+
+    #[test]
+    fn carry_detects_corruption() {
+        let g = global(16, 2);
+        let bytes = write_carry(
+            &g,
+            &[Slice { offset: 0, len: 8 }],
+            &[Slice { offset: 8, len: 8 }],
+            0,
+            2,
+            "base",
+            5,
+            PayloadCodec::Raw,
+        )
+        .unwrap();
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        assert!(read_carry(&bad, 5).is_err());
+        assert!(read_carry(&bytes[..bytes.len() - 3], 5).is_err());
+    }
+
+    #[test]
+    fn partition_even_reshard_materializes_via_carry() {
+        // 4→2 over even partitions: new rank 0 = old ranks 0+1 merged
+        let n = 16;
+        let g = global(n, 5);
+        let old = partition_even(n, 4);
+        let new = partition_even(n, 2);
+        // new rank 0 retains old rank 0's [0,4), moves in old rank 1's [4,8)
+        let moved = vec![Slice { offset: 4, len: 4 }];
+        let refs = vec![Slice { offset: 0, len: 4 }];
+        let bytes = write_carry(&g, &moved, &refs, 0, 5, "b", 3, PayloadCodec::Raw).unwrap();
+        let carry = read_carry(&bytes, 3).unwrap();
+        let out = carry
+            .materialize(&new[0], &old[0], &slice_state(&g, &old[0]))
+            .unwrap();
+        assert_eq!(out, slice_state(&g, &new[0]));
+    }
+}

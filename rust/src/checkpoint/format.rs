@@ -39,6 +39,12 @@ pub enum CkptKind {
     /// diff/batch objects into one container that preserves every
     /// per-step payload (see `checkpoint::merged`).
     MergedDiff = 3,
+    /// Reshard carry base (see `checkpoint::carry`): a new generation's
+    /// chain base holding the rank's *moved-in* slices inline and its
+    /// *retained* slices as by-interval references into the previous
+    /// generation's base — what lets an elastic restart move ~1/R of the
+    /// state instead of rewriting all of it.
+    CarryFull = 4,
 }
 
 impl CkptKind {
@@ -48,6 +54,7 @@ impl CkptKind {
             1 => CkptKind::Diff,
             2 => CkptKind::BatchedDiff,
             3 => CkptKind::MergedDiff,
+            4 => CkptKind::CarryFull,
             _ => bail!("unknown checkpoint kind {v}"),
         })
     }

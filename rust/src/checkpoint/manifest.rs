@@ -21,19 +21,29 @@
 //! previous chain until the new full is durable (never delete the chain
 //! you would recover from).
 //!
-//! The multi-rank cluster runtime ([`crate::cluster`]) adds two more
-//! name families on the same store:
+//! The multi-rank cluster runtime ([`crate::cluster`]) adds more name
+//! families on the same store:
 //! ```text
-//! rank-{r:04}/<object>          rank r's private chain (namespaced)
-//! global-{step:012}.gck         two-phase global commit record
+//! gen-{g:04}/rank-{r:04}/<object>   rank r's private chain in generation g
+//! gen-{g:04}/rank-{r:04}/carry-{step:012}.ldck
+//!                                   reshard carry base: inline moved-in
+//!                                   slices + by-interval references into
+//!                                   the previous generation's bases
+//! global-{g:04}-{step:012}.gck      two-phase global commit record
 //! ```
+//! A *generation* is one immutable namespace epoch: every elastic reshard
+//! (or re-anchor after failure) bumps the generation and writes only into
+//! the fresh `gen-{g+1:04}/` prefix, so committed names are never
+//! overwritten in place and a crash mid-reshard trivially falls back to
+//! the last committed record of the old generation.
+//!
 //! Flat discovery/GC ([`latest_chain`](Manifest::latest_chain),
 //! [`gc`](Manifest::gc), [`truncate_after`](Manifest::truncate_after)) is
-//! blind to both: namespaced names don't parse as checkpoint objects and
-//! `.gck` is not `.ldck`. Cluster-aware discovery uses
-//! [`rank_chain`](Manifest::rank_chain); cluster GC (which must never
-//! delete anything reachable from the newest *complete* global record)
-//! lives in [`crate::cluster::commit`].
+//! blind to all of them: namespaced names don't parse as checkpoint
+//! objects and `.gck` is not `.ldck`. Cluster-aware discovery uses
+//! [`gen_rank_chain`](Manifest::gen_rank_chain); cluster GC (which must
+//! never delete anything reachable from the newest *complete* global
+//! record) lives in [`crate::cluster::commit`].
 
 use anyhow::{Context, Result};
 
@@ -140,26 +150,67 @@ impl Manifest {
         format!("merged-{lo:012}-{hi:012}.ldck")
     }
 
-    /// Name of the two-phase global commit record for `step` (cluster
-    /// runtime; its presence is the commit point of a cross-rank epoch).
-    pub fn global_name(step: u64) -> String {
-        format!("global-{step:012}.gck")
+    /// Name of a reshard carry base at `step`: the chain base a new
+    /// generation starts from. Carries the moved-in slices inline and the
+    /// retained slices as by-interval references into the previous
+    /// generation's bases (see `checkpoint::carry`).
+    pub fn carry_name(step: u64) -> String {
+        format!("carry-{step:012}.ldck")
     }
 
-    /// Name of the elastic-reshard safety-net full: a top-level full
-    /// checkpoint of the recovered cut, written by `elastic_restart`
-    /// *before* the re-anchor can overwrite any step-keyed
-    /// `rank-*/full-{S}` name, and deleted once the anchor record
-    /// commits. Deliberately NOT a chain object (flat discovery ignores
-    /// it): only `recover_cluster_or_net` reads it, so a stale flat chain
-    /// on a reused store can never hijack cluster recovery.
-    pub fn reshard_net_name() -> &'static str {
-        "reshard-net.ldck"
+    /// Name of the two-phase global commit record for `step` of namespace
+    /// generation `gen` (cluster runtime; its presence is the commit
+    /// point of a cross-rank epoch). Generation-qualified so a reshard's
+    /// anchor record can never overwrite the committed record it falls
+    /// back to.
+    pub fn global_name(gen: u64, step: u64) -> String {
+        debug_assert!(gen < 10_000, "generation {gen} overflows the 4-digit namespace");
+        format!("global-{gen:04}-{step:012}.gck")
     }
 
-    /// Step of a global commit record, `None` for any other name.
-    pub fn parse_global(name: &str) -> Option<u64> {
-        name.strip_prefix("global-")?.strip_suffix(".gck")?.parse().ok()
+    /// `(generation, step)` of a global commit record, `None` for any
+    /// other name.
+    pub fn parse_global(name: &str) -> Option<(u64, u64)> {
+        let stem = name.strip_prefix("global-")?.strip_suffix(".gck")?;
+        let (gen, step) = stem.split_once('-')?;
+        if gen.len() != 4 || !gen.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        if step.len() != 12 || !step.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        Some((gen.parse().ok()?, step.parse().ok()?))
+    }
+
+    /// Namespace prefix of generation `g`. Fixed-width 4 digits, same
+    /// discipline as [`rank_prefix`](Manifest::rank_prefix).
+    pub fn gen_prefix(gen: u64) -> String {
+        debug_assert!(gen < 10_000, "generation {gen} overflows the 4-digit namespace");
+        format!("gen-{gen:04}/")
+    }
+
+    /// Object-namespace prefix of rank `r` inside generation `g` — where
+    /// the cluster runtime writes every per-rank chain object.
+    pub fn gen_rank_prefix(gen: u64, rank: usize) -> String {
+        format!("{}{}", Self::gen_prefix(gen), Self::rank_prefix(rank))
+    }
+
+    /// Split a generation-namespaced name into `(gen, inner name)`;
+    /// `None` for anything else.
+    pub fn parse_gen(name: &str) -> Option<(u64, &str)> {
+        let rest = name.strip_prefix("gen-")?;
+        let (digits, inner) = rest.split_once('/')?;
+        if digits.len() != 4 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        Some((digits.parse().ok()?, inner))
+    }
+
+    /// Split a `gen-{g:04}/rank-{r:04}/` name into `(gen, rank, inner)`.
+    pub fn parse_gen_rank(name: &str) -> Option<(u64, usize, &str)> {
+        let (gen, rest) = Self::parse_gen(name)?;
+        let (rank, inner) = Self::parse_rank(rest)?;
+        Some((gen, rank, inner))
     }
 
     /// Object-namespace prefix of cluster rank `r`. The namespace is
@@ -183,10 +234,11 @@ impl Manifest {
     }
 
     /// Step range `(kind, lo, hi)` of a checkpoint object name, looking
-    /// through a rank-namespace prefix if present. `None` for shard
-    /// artifacts, global records, and foreign names.
+    /// through generation- and rank-namespace prefixes if present. `None`
+    /// for shard artifacts, global records, and foreign names.
     pub fn step_range(name: &str) -> Option<(&'static str, u64, u64)> {
-        let inner = Self::parse_rank(name).map(|(_, n)| n).unwrap_or(name);
+        let inner = Self::parse_gen(name).map(|(_, n)| n).unwrap_or(name);
+        let inner = Self::parse_rank(inner).map(|(_, n)| n).unwrap_or(inner);
         Self::parse(inner)
     }
 
@@ -197,15 +249,40 @@ impl Manifest {
     /// produced the listing. Diffs strictly after `cut` — stragglers of a
     /// torn global commit — are excluded.
     pub fn rank_chain(names: &[String], rank: usize, cut: u64) -> Chain {
+        Self::chain_from(
+            names.iter().filter_map(|name| {
+                let (r, inner) = Self::parse_rank(name)?;
+                (r == rank).then_some((inner, name))
+            }),
+            cut,
+        )
+    }
+
+    /// Generation-namespaced discovery: rank `r`'s newest recovery chain
+    /// at or before `cut` *within generation `gen`* — chains never span
+    /// generations through name discovery; a carry base references the
+    /// previous generation explicitly (see `checkpoint::carry`).
+    pub fn gen_rank_chain(names: &[String], gen: u64, rank: usize, cut: u64) -> Chain {
+        Self::chain_from(
+            names.iter().filter_map(|name| {
+                let (g, r, inner) = Self::parse_gen_rank(name)?;
+                (g == gen && r == rank).then_some((inner, name))
+            }),
+            cut,
+        )
+    }
+
+    /// Shared chain assembly over `(inner name, full name)` pairs: newest
+    /// base (full *or* carry) at or before `cut`, plus a non-overlapping
+    /// cover of diff/batch/merged objects after it.
+    fn chain_from<'a>(names: impl Iterator<Item = (&'a str, &'a String)>, cut: u64) -> Chain {
         let mut fulls: Vec<(u64, String)> = Vec::new();
         let mut diffs: Vec<(u64, u64, String)> = Vec::new();
-        for name in names {
-            let Some((r, inner)) = Self::parse_rank(name) else { continue };
-            if r != rank {
-                continue;
-            }
+        for (inner, name) in names {
             match Self::parse(inner) {
-                Some(("full", step, _)) if step <= cut => fulls.push((step, name.clone())),
+                Some(("full", step, _)) | Some(("carry", step, _)) if step <= cut => {
+                    fulls.push((step, name.clone()))
+                }
                 Some(("diff", lo, hi)) | Some(("batch", lo, hi)) | Some(("merged", lo, hi))
                     if hi <= cut =>
                 {
@@ -230,6 +307,9 @@ impl Manifest {
         if let Some(s) = stem.strip_prefix("full-") {
             let step = s.parse().ok()?;
             Some(("full", step, step))
+        } else if let Some(s) = stem.strip_prefix("carry-") {
+            let step = s.parse().ok()?;
+            Some(("carry", step, step))
         } else if let Some(s) = stem.strip_prefix("diff-") {
             let step = s.parse().ok()?;
             Some(("diff", step, step))
@@ -286,14 +366,16 @@ impl Manifest {
     }
 
     /// True for names the flat manifest must NEVER touch: anything under a
-    /// cluster rank namespace and global commit records. Flat GC and
-    /// truncation are *blind* to the cluster runtime's objects — deleting
-    /// them would hole a per-rank chain a committed global record still
-    /// references. `parse()` already fails on these names today; this
-    /// guard makes the invariant explicit (and future-proof against new
-    /// name families parsing accidentally).
+    /// generation or cluster rank namespace and global commit records.
+    /// Flat GC and truncation are *blind* to the cluster runtime's
+    /// objects — deleting them would hole a per-rank chain a committed
+    /// global record still references. `parse()` already fails on these
+    /// names today; this guard makes the invariant explicit (and
+    /// future-proof against new name families parsing accidentally).
     fn is_cluster_name(name: &str) -> bool {
-        Self::parse_rank(name).is_some() || Self::parse_global(name).is_some()
+        Self::parse_gen(name).is_some()
+            || Self::parse_rank(name).is_some()
+            || Self::parse_global(name).is_some()
     }
 
     /// Delete every diff/batch/merged object covering steps strictly after
@@ -453,9 +535,10 @@ mod tests {
 
     #[test]
     fn global_and_rank_names_parse() {
-        assert_eq!(Manifest::global_name(7), "global-000000000007.gck");
-        assert_eq!(Manifest::parse_global(&Manifest::global_name(7)), Some(7));
+        assert_eq!(Manifest::global_name(2, 7), "global-0002-000000000007.gck");
+        assert_eq!(Manifest::parse_global(&Manifest::global_name(2, 7)), Some((2, 7)));
         assert_eq!(Manifest::parse_global("global-xx.gck"), None);
+        assert_eq!(Manifest::parse_global("global-000000000007.gck"), None, "legacy un-gen'd");
         assert_eq!(Manifest::parse_global(&Manifest::full_name(7)), None);
         assert_eq!(Manifest::rank_prefix(3), "rank-0003/");
         let name = format!("{}{}", Manifest::rank_prefix(12), Manifest::diff_name(5));
@@ -464,21 +547,86 @@ mod tests {
         assert_eq!(Manifest::parse_rank("full-000000000001.ldck"), None);
         assert_eq!(Manifest::step_range(&name), Some(("diff", 5, 5)));
         assert_eq!(Manifest::step_range(&Manifest::batch_name(2, 4)), Some(("batch", 2, 4)));
-        assert_eq!(Manifest::step_range(&Manifest::global_name(1)), None);
+        assert_eq!(Manifest::step_range(&Manifest::global_name(0, 1)), None);
+    }
+
+    #[test]
+    fn generation_names_parse() {
+        assert_eq!(Manifest::gen_prefix(3), "gen-0003/");
+        assert_eq!(Manifest::gen_rank_prefix(3, 12), "gen-0003/rank-0012/");
+        let name = format!("{}{}", Manifest::gen_rank_prefix(3, 12), Manifest::carry_name(5));
+        assert_eq!(Manifest::parse_gen(&name), Some((3, "rank-0012/carry-000000000005.ldck")));
+        assert_eq!(
+            Manifest::parse_gen_rank(&name),
+            Some((3, 12, Manifest::carry_name(5).as_str()))
+        );
+        assert_eq!(Manifest::step_range(&name), Some(("carry", 5, 5)));
+        assert_eq!(Manifest::parse_rank(&name), None, "gen names are not rank names");
+        assert_eq!(Manifest::parse_gen("gen-12/x"), None, "width must be 4");
+        assert_eq!(Manifest::parse_gen("gen-0001x"), None, "missing separator");
+        assert_eq!(Manifest::parse_gen_rank("gen-0001/full-000000000001.ldck"), None);
+    }
+
+    #[test]
+    fn name_families_are_mutually_exclusive_property() {
+        // satellite: flat GC can never see a generation name, generation
+        // discovery can never see a flat one — each generated name parses
+        // under exactly one family classifier.
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+        prop_check("manifest_name_family_exclusive", 128, |rng| {
+            let step = rng.next_u64() % 1_000_000;
+            let hi = step + rng.next_u64() % 100;
+            let gen = rng.next_u64() % 10_000;
+            let rank = (rng.next_u64() % 10_000) as usize;
+            let obj = match rng.range(0, 5) {
+                0 => Manifest::full_name(step),
+                1 => Manifest::diff_name(step),
+                2 => Manifest::batch_name(step, hi),
+                3 => Manifest::merged_name(step, hi),
+                _ => Manifest::carry_name(step),
+            };
+            let name = match rng.range(0, 4) {
+                0 => obj.clone(),
+                1 => format!("{}{obj}", Manifest::rank_prefix(rank)),
+                2 => format!("{}{obj}", Manifest::gen_rank_prefix(gen, rank)),
+                _ => Manifest::global_name(gen, step),
+            };
+            let classes = [
+                Manifest::parse(&name).is_some(),
+                Manifest::parse_rank(&name).is_some(),
+                Manifest::parse_gen(&name).is_some(),
+                Manifest::parse_global(&name).is_some(),
+            ];
+            let hits = classes.iter().filter(|c| **c).count();
+            prop_assert!(hits == 1);
+            // and the namespaced classifiers agree on their payloads
+            if let Some((g, rest)) = Manifest::parse_gen(&name) {
+                prop_assert!(g == gen);
+                prop_assert!(Manifest::parse_rank(rest).is_some());
+                prop_assert!(Manifest::parse_gen_rank(&name).is_some());
+            }
+            if let Some((g, s)) = Manifest::parse_global(&name) {
+                prop_assert!(g == gen && s == step);
+            }
+            Ok(())
+        });
     }
 
     #[test]
     fn flat_discovery_and_gc_ignore_cluster_objects() {
         let s = MemStore::new();
         s.put(&Manifest::full_name(4), b"f").unwrap();
-        s.put(&Manifest::global_name(9), b"g").unwrap();
+        s.put(&Manifest::global_name(0, 9), b"g").unwrap();
         let ns_full = format!("{}{}", Manifest::rank_prefix(0), Manifest::full_name(9));
         s.put(&ns_full, b"nf").unwrap();
+        let gen_full = format!("{}{}", Manifest::gen_rank_prefix(1, 0), Manifest::full_name(9));
+        s.put(&gen_full, b"gf").unwrap();
         let chain = Manifest::latest_chain(&s).unwrap();
         assert_eq!(chain.full.as_ref().unwrap().0, 4, "cluster names are invisible");
         assert_eq!(Manifest::gc(&s).unwrap(), 0);
         assert_eq!(Manifest::truncate_after(&s, 0).unwrap(), 0);
-        assert!(s.exists(&ns_full) && s.exists(&Manifest::global_name(9)));
+        assert!(s.exists(&ns_full) && s.exists(&gen_full) && s.exists(&Manifest::global_name(0, 9)));
     }
 
     #[test]
@@ -492,7 +640,7 @@ mod tests {
             ns(1, Manifest::diff_name(6)),
             ns(1, Manifest::diff_name(7)), // beyond the cut: straggler
             ns(2, Manifest::diff_name(5)), // other rank
-            Manifest::global_name(6),      // top level
+            Manifest::global_name(0, 6),   // top level
         ];
         let chain = Manifest::rank_chain(&names, 1, 6);
         assert_eq!(chain.full.as_ref().unwrap().0, 4);
@@ -510,6 +658,33 @@ mod tests {
         assert_eq!(older.diffs, vec![(3, 3, ns(1, Manifest::diff_name(3)))]);
         // unknown rank: empty chain
         assert_eq!(Manifest::rank_chain(&names, 7, 6), Chain::default());
+    }
+
+    #[test]
+    fn gen_rank_chain_scopes_generation_and_accepts_carry_bases() {
+        let gns = |g: u64, r: usize, n: String| format!("{}{n}", Manifest::gen_rank_prefix(g, r));
+        let names = vec![
+            gns(1, 0, Manifest::carry_name(4)), // generation 1's base
+            gns(1, 0, Manifest::merged_name(5, 8)),
+            gns(1, 0, Manifest::diff_name(9)), // beyond the cut
+            gns(0, 0, Manifest::full_name(4)), // previous generation
+            gns(0, 0, Manifest::diff_name(5)),
+            gns(1, 1, Manifest::carry_name(4)), // other rank
+            format!("{}{}", Manifest::rank_prefix(0), Manifest::full_name(4)), // legacy flat rank
+        ];
+        let chain = Manifest::gen_rank_chain(&names, 1, 0, 8);
+        assert_eq!(chain.full, Some((4, gns(1, 0, Manifest::carry_name(4)))));
+        assert_eq!(chain.diffs, vec![(5, 8, gns(1, 0, Manifest::merged_name(5, 8)))]);
+        assert_eq!(chain.latest_step(), 8);
+        // a full at the same step outranks the carry (it is self-contained)
+        let mut with_full = names.clone();
+        with_full.push(gns(1, 0, Manifest::full_name(4)));
+        let chain = Manifest::gen_rank_chain(&with_full, 1, 0, 8);
+        assert_eq!(chain.full, Some((4, gns(1, 0, Manifest::full_name(4)))));
+        // other generations are invisible
+        let old = Manifest::gen_rank_chain(&names, 0, 0, 8);
+        assert_eq!(old.full, Some((4, gns(0, 0, Manifest::full_name(4)))));
+        assert_eq!(old.diffs, vec![(5, 5, gns(0, 0, Manifest::diff_name(5)))]);
     }
 
     #[test]
@@ -609,7 +784,9 @@ mod tests {
             ns(0, Manifest::diff_name(2)),       // "obsolete" step
             ns(3, Manifest::batch_name(2, 6)),   // spans the flat full step
             ns(3, Manifest::merged_name(7, 9)),  // beyond the flat timeline
-            Manifest::global_name(9),            // commit record
+            Manifest::global_name(0, 9),         // commit record
+            format!("{}{}", Manifest::gen_rank_prefix(2, 0), Manifest::carry_name(4)),
+            format!("{}{}", Manifest::gen_rank_prefix(2, 0), Manifest::diff_name(2)),
         ];
         for name in &cluster_objects {
             s.put(name, b"cluster").unwrap();

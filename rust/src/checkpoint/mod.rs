@@ -8,9 +8,12 @@
 //! - [`batched`]: the §V-B batched gradient write buffer.
 //! - [`merged`]: compacted differential spans C^M — the background chain
 //!   compactor's output (incremental-merging persistence).
+//! - [`carry`]: reshard carry bases — a new generation's chain base with
+//!   moved-in slices inline and retained slices by reference.
 //! - [`manifest`]: object naming, discovery of the recovery chain, GC.
 
 pub mod batched;
+pub mod carry;
 pub mod diff;
 pub mod format;
 pub mod full;
@@ -18,6 +21,7 @@ pub mod manifest;
 pub mod merged;
 
 pub use batched::{BatchBuffer, BatchMode};
+pub use carry::{read_carry, write_carry, Carry};
 pub use diff::{read_diff, write_diff, write_diff_into, DiffPayload};
 pub use format::{
     encode_container_into, CkptKind, Container, ContainerView, PayloadCodec, PayloadSrc, Section,
@@ -52,6 +56,7 @@ pub fn read_chain_object(
             .collect(),
         CkptKind::MergedDiff => read_merged(bytes, model_sig)?,
         CkptKind::Full => bail!("full checkpoint container in a diff chain"),
+        CkptKind::CarryFull => bail!("carry base container in a diff chain"),
     };
     Ok((kind, items))
 }

@@ -1,35 +1,44 @@
 //! Two-phase global commit and consistent-cut recovery.
 //!
 //! **Phase 1** — every rank persists its own object for the epoch (diff or
-//! full, through its namespace and — if configured — its sharded engine)
-//! and acks with the object's name, length and CRC. **Phase 2** — the
-//! coordinator, having collected all R acks for the epoch *and committed
-//! every earlier epoch first*, writes one [`GlobalRecord`] as
-//! `global-{step:012}.gck`. The record's presence is the commit point
-//! (Check-N-Run's decoupled-shards-need-an-atomic-commit-record lesson);
-//! an epoch with any failed rank write is *torn*: no record is written and
-//! the per-rank stragglers are garbage awaiting truncation. A torn *diff*
-//! epoch also **poisons** later diff epochs (no records for them either)
-//! until a full epoch re-bases every rank's chain — so a committed record
-//! always references hole-free chains by construction (see
+//! full, through its generation namespace and — if configured — its
+//! sharded engine) and acks with the object's name, length and CRC.
+//! **Phase 2** — the coordinator, having collected all R acks for the
+//! epoch *and committed every earlier epoch first*, writes one
+//! [`GlobalRecord`] as `global-{g:04}-{step:012}.gck`. The record's
+//! presence is the commit point (Check-N-Run's
+//! decoupled-shards-need-an-atomic-commit-record lesson); an epoch with
+//! any failed rank write is *torn*: no record is written and the per-rank
+//! stragglers are garbage awaiting truncation. A torn *diff* epoch also
+//! **poisons** later diff epochs (no records for them either) until a
+//! full epoch re-bases every rank's chain — so a committed record always
+//! references hole-free chains by construction (see
 //! `rank.rs::coordinator_loop`); recovery's chain verification is defense
 //! in depth against external damage.
 //!
 //! **Consistent cut**: the newest step whose global record parses, whose
 //! referenced per-rank objects all read back with the recorded CRC, and
-//! whose per-rank chains (newest full ≤ cut, diffs up to the cut) are
-//! complete — [`find_consistent_cut`] walks records newest→oldest and
-//! returns the first that verifies; torn or damaged newer records are
-//! skipped, never partially applied. [`recover_cluster`] then replays each
-//! rank's diffs through Adam and flattens the slices — bit-identical to
-//! single-state recovery because Adam is element-wise.
+//! whose per-rank chains (newest base ≤ cut, diffs up to the cut) are
+//! complete — [`find_consistent_cut`] walks records newest→oldest
+//! (ties between generations at the same step go to the newer
+//! generation) and returns the first that verifies; torn or damaged
+//! newer records are skipped, never partially applied. A chain base may
+//! be a plain full *or* a reshard carry
+//! ([`CkptKind::CarryFull`](crate::checkpoint::format::CkptKind)) whose
+//! reference intervals resolve into the previous generation's bases.
+//! [`recover_cluster`] then replays each rank's diffs through Adam and
+//! flattens the slices — bit-identical to single-state recovery because
+//! Adam is element-wise.
 //!
 //! [`gc_cluster`] deletes only what is *unreachable* from the newest
-//! complete record (older records, superseded per-rank objects, defunct
-//! rank namespaces after an elastic reshard), and never touches objects
-//! beyond the cut — they are phase 1 of an epoch still being committed.
-//! The "never delete the chain you would recover from" invariant is
-//! property-tested in `rust/tests/cluster_recovery.rs`.
+//! complete record (older records, superseded per-rank objects, whole
+//! defunct generations after an elastic reshard), and never touches
+//! objects beyond the cut — they are phase 1 of an epoch still being
+//! committed. While the live chain's base is a carry, every foreign
+//! generation is frozen (the carry's references reach into it); the
+//! first committed full epoch after a reshard drops the old generation
+//! wholesale. The "never delete the chain you would recover from"
+//! invariant is property-tested in `rust/tests/cluster_recovery.rs`.
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -37,23 +46,32 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 use byteorder::{ByteOrder, LittleEndian as LE};
 
+use crate::checkpoint::carry::read_carry;
 use crate::checkpoint::diff::DiffPayload;
+use crate::checkpoint::format::{CkptKind, ContainerView};
 use crate::checkpoint::full::read_full;
 use crate::checkpoint::manifest::{Chain, Manifest};
 use crate::checkpoint::read_chain_object;
-use crate::cluster::{rank_sig, validate_partitions, Partition};
+use crate::cluster::{rank_sig, validate_partitions, Partition, Slice};
 use crate::optim::{Adam, ModelState};
 use crate::sparse::SparseGrad;
 use crate::storage::{Sharded, StorageBackend};
 
 pub const GLOBAL_MAGIC: &[u8; 4] = b"LDGC";
-pub const GLOBAL_VERSION: u32 = 1;
+pub const GLOBAL_VERSION: u32 = 2;
+
+/// Maximum carry-base indirection depth: each reshard without an
+/// intervening full epoch adds one level; deeper than this and recovery
+/// refuses rather than loop on a corrupt reference cycle.
+const MAX_CARRY_DEPTH: usize = 16;
 
 /// What a rank persisted for one committed epoch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommitKind {
     Full = 0,
     Diff = 1,
+    /// reshard carry base (first record of a fresh generation)
+    Carry = 2,
 }
 
 impl CommitKind {
@@ -61,21 +79,22 @@ impl CommitKind {
         Ok(match v {
             0 => CommitKind::Full,
             1 => CommitKind::Diff,
+            2 => CommitKind::Carry,
             _ => bail!("unknown commit kind {v}"),
         })
     }
 }
 
-/// One rank's entry in a [`GlobalRecord`]: its partition and the durable
-/// object it contributed to this epoch.
+/// One rank's entry in a [`GlobalRecord`]: its partition slices and the
+/// durable object it contributed to this epoch.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RankObject {
     pub rank: u32,
-    /// partition range over the flat parameter vector
-    pub offset: u64,
-    pub len: u64,
+    /// partition slices `(offset, len)` over the flat parameter vector,
+    /// sorted by offset
+    pub slices: Vec<(u64, u64)>,
     pub kind: CommitKind,
-    /// namespaced logical object name (`rank-{r:04}/diff-…`)
+    /// namespaced logical object name (`gen-{g:04}/rank-{r:04}/diff-…`)
     pub name: String,
     /// length and CRC32 of the logical object bytes — re-verified at
     /// recovery so an overwritten or torn object can't impersonate the
@@ -86,25 +105,41 @@ pub struct RankObject {
 
 impl RankObject {
     pub fn partition(&self) -> Partition {
-        Partition { rank: self.rank as usize, offset: self.offset as usize, len: self.len as usize }
+        Partition {
+            rank: self.rank as usize,
+            slices: self
+                .slices
+                .iter()
+                .map(|&(o, l)| Slice { offset: o as usize, len: l as usize })
+                .collect(),
+        }
+    }
+
+    /// Total parameters this rank owns.
+    pub fn n_params(&self) -> usize {
+        self.slices.iter().map(|&(_, l)| l as usize).sum()
     }
 }
 
 /// The phase-2 epoch record: every rank's object + CRC, plus the partition
 /// table that produced them (which is what makes elastic resharded
 /// recovery possible — a restart with different rank count reads R from
-/// the record, not from its own config).
+/// the record, not from its own config) and the namespace generation the
+/// epoch was written into.
 ///
 /// Wire layout (little-endian):
 /// ```text
-/// magic "LDGC" | version u32 | model_sig u64 | step u64 | seq u64 | n_ranks u32
-/// per rank: rank u32 | offset u64 | len u64 | kind u8 | name_len u16
-///           | name bytes | obj_len u64 | obj_crc u32
+/// magic "LDGC" | version u32 | model_sig u64 | generation u64
+/// step u64 | seq u64 | n_ranks u32
+/// per rank: rank u32 | n_slices u32 | (offset u64 | len u64)* | kind u8
+///           | name_len u16 | name bytes | obj_len u64 | obj_crc u32
 /// crc32 u32 (of all preceding bytes)
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct GlobalRecord {
     pub model_sig: u64,
+    /// namespace generation this epoch's objects live in
+    pub generation: u64,
     /// training step this epoch captured
     pub step: u64,
     /// commit sequence number (strictly increasing; records are written in
@@ -116,26 +151,39 @@ pub struct GlobalRecord {
 impl GlobalRecord {
     /// Total parameters covered by the partition table.
     pub fn n_params(&self) -> usize {
-        self.ranks.iter().map(|r| r.len as usize).sum()
+        self.ranks.iter().map(|r| r.n_params()).sum()
     }
 
     pub fn partitions(&self) -> Vec<Partition> {
         self.ranks.iter().map(|r| r.partition()).collect()
     }
 
+    /// The record's own object name on the store.
+    pub fn name(&self) -> String {
+        Manifest::global_name(self.generation, self.step)
+    }
+
     pub fn to_bytes(&self) -> Vec<u8> {
-        let meta: usize = self.ranks.iter().map(|r| 4 + 8 + 8 + 1 + 2 + r.name.len() + 8 + 4).sum();
-        let mut out = Vec::with_capacity(36 + meta + 4);
+        let meta: usize = self
+            .ranks
+            .iter()
+            .map(|r| 4 + 4 + 16 * r.slices.len() + 1 + 2 + r.name.len() + 8 + 4)
+            .sum();
+        let mut out = Vec::with_capacity(44 + meta + 4);
         out.extend_from_slice(GLOBAL_MAGIC);
         out.extend_from_slice(&GLOBAL_VERSION.to_le_bytes());
         out.extend_from_slice(&self.model_sig.to_le_bytes());
+        out.extend_from_slice(&self.generation.to_le_bytes());
         out.extend_from_slice(&self.step.to_le_bytes());
         out.extend_from_slice(&self.seq.to_le_bytes());
         out.extend_from_slice(&(self.ranks.len() as u32).to_le_bytes());
         for r in &self.ranks {
             out.extend_from_slice(&r.rank.to_le_bytes());
-            out.extend_from_slice(&r.offset.to_le_bytes());
-            out.extend_from_slice(&r.len.to_le_bytes());
+            out.extend_from_slice(&(r.slices.len() as u32).to_le_bytes());
+            for &(o, l) in &r.slices {
+                out.extend_from_slice(&o.to_le_bytes());
+                out.extend_from_slice(&l.to_le_bytes());
+            }
             out.push(r.kind as u8);
             debug_assert!(r.name.len() <= u16::MAX as usize);
             out.extend_from_slice(&(r.name.len() as u16).to_le_bytes());
@@ -149,7 +197,7 @@ impl GlobalRecord {
     }
 
     pub fn from_bytes(bytes: &[u8]) -> Result<GlobalRecord> {
-        ensure!(bytes.len() >= 40, "global record too short ({} bytes)", bytes.len());
+        ensure!(bytes.len() >= 48, "global record too short ({} bytes)", bytes.len());
         ensure!(&bytes[0..4] == GLOBAL_MAGIC, "bad global record magic");
         let version = LE::read_u32(&bytes[4..8]);
         ensure!(version == GLOBAL_VERSION, "unsupported global record version {version}");
@@ -157,31 +205,41 @@ impl GlobalRecord {
         let crc = crc32fast::hash(&bytes[..bytes.len() - 4]);
         ensure!(crc == crc_stored, "global record CRC mismatch (torn commit write?)");
         let model_sig = LE::read_u64(&bytes[8..16]);
-        let step = LE::read_u64(&bytes[16..24]);
-        let seq = LE::read_u64(&bytes[24..32]);
-        let n = LE::read_u32(&bytes[32..36]) as usize;
+        let generation = LE::read_u64(&bytes[16..24]);
+        let step = LE::read_u64(&bytes[24..32]);
+        let seq = LE::read_u64(&bytes[32..40]);
+        let n = LE::read_u32(&bytes[40..44]) as usize;
         ensure!(n >= 1 && n <= 1 << 16, "implausible rank count {n}");
         let end = bytes.len() - 4;
-        let mut pos = 36usize;
+        let mut pos = 44usize;
         let mut ranks = Vec::with_capacity(n);
         for _ in 0..n {
-            ensure!(pos + 23 <= end, "truncated rank entry");
+            ensure!(pos + 8 <= end, "truncated rank entry");
             let rank = LE::read_u32(&bytes[pos..pos + 4]);
-            let offset = LE::read_u64(&bytes[pos + 4..pos + 12]);
-            let len = LE::read_u64(&bytes[pos + 12..pos + 20]);
-            let kind = CommitKind::from_u8(bytes[pos + 20])?;
-            let name_len = LE::read_u16(&bytes[pos + 21..pos + 23]) as usize;
-            pos += 23;
+            let n_slices = LE::read_u32(&bytes[pos + 4..pos + 8]) as usize;
+            pos += 8;
+            ensure!(n_slices >= 1 && n_slices <= 1 << 20, "implausible slice count {n_slices}");
+            ensure!(pos + 16 * n_slices + 3 <= end, "truncated rank slices");
+            let mut slices = Vec::with_capacity(n_slices);
+            for _ in 0..n_slices {
+                let o = LE::read_u64(&bytes[pos..pos + 8]);
+                let l = LE::read_u64(&bytes[pos + 8..pos + 16]);
+                slices.push((o, l));
+                pos += 16;
+            }
+            let kind = CommitKind::from_u8(bytes[pos])?;
+            let name_len = LE::read_u16(&bytes[pos + 1..pos + 3]) as usize;
+            pos += 3;
             ensure!(pos + name_len + 12 <= end, "truncated rank entry name");
             let name = std::str::from_utf8(&bytes[pos..pos + name_len])?.to_string();
             pos += name_len;
             let obj_len = LE::read_u64(&bytes[pos..pos + 8]);
             let obj_crc = LE::read_u32(&bytes[pos + 8..pos + 12]);
             pos += 12;
-            ranks.push(RankObject { rank, offset, len, kind, name, obj_len, obj_crc });
+            ranks.push(RankObject { rank, slices, kind, name, obj_len, obj_crc });
         }
         ensure!(pos == end, "global record trailing bytes");
-        let rec = GlobalRecord { model_sig, step, seq, ranks };
+        let rec = GlobalRecord { model_sig, generation, step, seq, ranks };
         validate_partitions(&rec.partitions(), rec.n_params())
             .context("global record partition table")?;
         Ok(rec)
@@ -191,13 +249,19 @@ impl GlobalRecord {
 /// One rank's verified, loaded recovery chain at the cut.
 pub struct RankChain {
     pub part: Partition,
-    /// the rank's newest full checkpoint at or before the cut
+    /// the rank's newest base (full or materialized carry) at or before
+    /// the cut
     pub base: ModelState,
     /// gradient diffs in `(base, cut]`, step order
     pub diffs: Vec<(u64, SparseGrad)>,
-    /// every namespaced logical object this chain depends on (the GC
-    /// reachability set): base full + diff objects
+    /// every namespaced logical object this chain depends on within its
+    /// own generation (the GC reachability set): base + diff objects.
+    /// Cross-generation dependencies of a carry base are protected by
+    /// freezing the foreign generations, not by this list.
     pub objects: Vec<String>,
+    /// true when the base is a reshard carry (its references pin the
+    /// previous generation)
+    pub base_is_carry: bool,
 }
 
 /// How the consistent cut was found.
@@ -205,6 +269,8 @@ pub struct RankChain {
 pub struct ClusterCutStats {
     pub cut_step: u64,
     pub cut_seq: u64,
+    /// namespace generation of the committed record
+    pub cut_gen: u64,
     /// ranks in the committed epoch (R at commit time, not restart time)
     pub ranks: usize,
     /// global records on the store
@@ -215,6 +281,15 @@ pub struct ClusterCutStats {
     pub diff_steps_applied: usize,
 }
 
+/// Outcome of one GC sweep: objects deleted, plus objects that *should*
+/// have been deleted but could not be (a real I/O failure, not
+/// already-gone) — surfaced instead of silently leaking garbage forever.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcSweepStats {
+    pub removed: usize,
+    pub leaked: usize,
+}
+
 /// Shard-aware logical view over the shared store (reads both sharded and
 /// plain per-rank objects). Each view carries a 1-thread writer pool, so
 /// callers build one per pass and share it, never one per operation.
@@ -223,33 +298,40 @@ fn logical_view(store: &Arc<dyn StorageBackend>) -> Sharded {
 }
 
 /// Walk global records newest→oldest; return the first whose referenced
-/// objects and per-rank chains fully verify, with the chains loaded.
+/// objects and per-rank chains fully verify, with the chains loaded. At
+/// equal step the newer generation wins (a reshard anchors its first
+/// record at the old generation's cut step).
 pub fn find_consistent_cut(
     store: &Arc<dyn StorageBackend>,
     model_sig: u64,
 ) -> Result<Option<(GlobalRecord, Vec<RankChain>, ClusterCutStats)>> {
     let logical = logical_view(store);
     let names = logical.list().context("listing cluster store")?;
-    let mut steps: Vec<u64> = names.iter().filter_map(|n| Manifest::parse_global(n)).collect();
-    steps.sort_unstable();
-    let mut stats = ClusterCutStats { records_seen: steps.len(), ..Default::default() };
-    for &step in steps.iter().rev() {
+    let mut records: Vec<(u64, u64)> = names
+        .iter()
+        .filter_map(|n| Manifest::parse_global(n))
+        .map(|(gen, step)| (step, gen))
+        .collect();
+    records.sort_unstable();
+    let mut stats = ClusterCutStats { records_seen: records.len(), ..Default::default() };
+    for &(step, gen) in records.iter().rev() {
         let rec = logical
-            .get(&Manifest::global_name(step))
+            .get(&Manifest::global_name(gen, step))
             .map_err(|e| format!("{e:#}"))
             .and_then(|b| GlobalRecord::from_bytes(&b).map_err(|e| format!("{e:#}")));
         let rec = match rec {
-            Ok(r) if r.model_sig == model_sig => r,
+            Ok(r) if r.model_sig == model_sig && r.generation == gen => r,
             Ok(r) => {
                 log::warn!(
-                    "global record {step}: foreign model sig {:#x}, skipping",
-                    r.model_sig
+                    "global record {gen}/{step}: foreign sig {:#x} or generation {}, skipping",
+                    r.model_sig,
+                    r.generation
                 );
                 stats.records_skipped += 1;
                 continue;
             }
             Err(e) => {
-                log::warn!("global record {step} unreadable ({e}); skipping");
+                log::warn!("global record {gen}/{step} unreadable ({e}); skipping");
                 stats.records_skipped += 1;
                 continue;
             }
@@ -258,12 +340,13 @@ pub fn find_consistent_cut(
             Ok(chains) => {
                 stats.cut_step = rec.step;
                 stats.cut_seq = rec.seq;
+                stats.cut_gen = rec.generation;
                 stats.ranks = rec.ranks.len();
                 stats.diff_steps_applied = chains.iter().map(|c| c.diffs.len()).sum();
                 return Ok(Some((rec, chains, stats)));
             }
             Err(e) => {
-                log::warn!("global record {step} not recoverable ({e:#}); falling back");
+                log::warn!("global record {gen}/{step} not recoverable ({e:#}); falling back");
                 stats.records_skipped += 1;
             }
         }
@@ -271,12 +354,79 @@ pub fn find_consistent_cut(
     Ok(None)
 }
 
+/// Read a chain base object — a plain full, or a carry whose reference
+/// intervals are resolved against the previous generation (recursively,
+/// bounded by [`MAX_CARRY_DEPTH`]). Returns the rank's local state and
+/// whether the outermost object was a carry.
+fn resolve_base(
+    logical: &Sharded,
+    bytes: &[u8],
+    part: &Partition,
+    rsig: u64,
+    model_sig: u64,
+    depth: usize,
+) -> Result<(ModelState, bool)> {
+    match ContainerView::parse(bytes)?.kind {
+        CkptKind::Full => {
+            let st = read_full(bytes, rsig)?;
+            ensure!(
+                st.n_params() == part.len(),
+                "base holds {} params, partition owns {}",
+                st.n_params(),
+                part.len()
+            );
+            Ok((st, false))
+        }
+        CkptKind::CarryFull => {
+            ensure!(depth < MAX_CARRY_DEPTH, "carry base nested deeper than {MAX_CARRY_DEPTH}");
+            let carry = read_carry(bytes, rsig)?;
+            let st = if carry.refs.is_empty() {
+                // a fully moved-in rank (new under the reshard): nothing
+                // to resolve, the inline payload is the whole base
+                let empty_part = Partition { rank: part.rank, slices: Vec::new() };
+                let empty = ModelState {
+                    params: crate::tensor::Flat(Vec::new()),
+                    m: crate::tensor::Flat(Vec::new()),
+                    v: crate::tensor::Flat(Vec::new()),
+                    step: carry.step,
+                };
+                carry.materialize(part, &empty_part, &empty)?
+            } else {
+                let rec_name = Manifest::global_name(carry.src_gen, carry.src_step);
+                let old_rec = GlobalRecord::from_bytes(
+                    &logical.get(&rec_name).with_context(|| format!("carry src {rec_name}"))?,
+                )?;
+                ensure!(old_rec.model_sig == model_sig, "carry src record foreign model");
+                let old_ro = old_rec
+                    .ranks
+                    .get(part.rank)
+                    .with_context(|| format!("carry src record has no rank {}", part.rank))?;
+                let old_part = old_ro.partition();
+                let old_sig = rank_sig(model_sig, &old_part);
+                let old_bytes = logical
+                    .get(&carry.src_base)
+                    .with_context(|| format!("carry src base {}", carry.src_base))?;
+                let (old_state, _) =
+                    resolve_base(logical, &old_bytes, &old_part, old_sig, model_sig, depth + 1)?;
+                ensure!(
+                    old_state.step == carry.step,
+                    "carry at step {} references a base at step {}",
+                    carry.step,
+                    old_state.step
+                );
+                carry.materialize(part, &old_part, &old_state)?
+            };
+            Ok((st, true))
+        }
+        kind => bail!("unexpected base container kind {kind:?}"),
+    }
+}
+
 /// Verify and load every rank chain referenced by `rec`. Any damaged,
 /// missing, torn, or discontinuous piece fails the whole record. Bases
-/// are resilient: a full checkpoint written by a *different* partitioning
-/// (an elastic re-anchor racing this record) carries a foreign rank
-/// signature and is skipped in favor of an older base of this chain's own
-/// generation, instead of failing the record.
+/// are resilient: a base written by a *different* partitioning carries a
+/// foreign rank signature and is skipped in favor of an older base of
+/// this chain's own generation, instead of failing the record.
 fn load_chains(
     logical: &Sharded,
     names: &[String],
@@ -284,6 +434,7 @@ fn load_chains(
     model_sig: u64,
 ) -> Result<Vec<RankChain>> {
     let cut = rec.step;
+    let gen = rec.generation;
     let mut out = Vec::with_capacity(rec.ranks.len());
     for ro in &rec.ranks {
         let part = ro.partition();
@@ -298,8 +449,8 @@ fn load_chains(
             "rank {rank} tip {} does not match the committed CRC",
             ro.name
         );
-        // every chain object is fetched exactly once: the tip (base full
-        // or last diff) was just read, so hand its bytes back when the
+        // every chain object is fetched exactly once: the tip (base or
+        // last diff) was just read, so hand its bytes back when the
         // chain walk reaches it instead of re-reading through storage
         let mut tip_bytes = Some(tip);
         let mut fetch = |name: &str| -> Result<Vec<u8>> {
@@ -311,33 +462,40 @@ fn load_chains(
             logical.get(name)
         };
 
-        // candidate bases, tried newest→oldest
-        let mut fulls: Vec<(u64, String)> = names
+        // candidate bases (fulls and carries), tried newest→oldest; a
+        // full at the same step outranks a carry (it is self-contained)
+        let mut bases: Vec<(u64, String)> = names
             .iter()
-            .filter(|n| Manifest::parse_rank(n).map(|(r, _)| r) == Some(rank))
+            .filter(|n| {
+                Manifest::parse_gen_rank(n).map(|(g, r, _)| (g, r)) == Some((gen, rank))
+            })
             .filter_map(|n| match Manifest::step_range(n) {
-                Some(("full", s, _)) if s <= cut => Some((s, n.clone())),
+                Some(("full", s, _)) | Some(("carry", s, _)) if s <= cut => Some((s, n.clone())),
                 _ => None,
             })
             .collect();
-        fulls.sort();
-        let mut found: Option<(u64, String, ModelState)> = None;
-        for (s, name) in fulls.iter().rev() {
-            match fetch(name).and_then(|b| read_full(&b, rsig)) {
-                Ok(st) if st.n_params() == part.len => {
-                    found = Some((*s, name.clone(), st));
+        bases.sort();
+        let mut found: Option<(u64, String, ModelState, bool)> = None;
+        for (s, name) in bases.iter().rev() {
+            match fetch(name)
+                .and_then(|b| resolve_base(logical, &b, &part, rsig, model_sig, 0))
+            {
+                Ok((st, is_carry)) if st.n_params() == part.len() => {
+                    found = Some((*s, name.clone(), st, is_carry));
                     break;
                 }
                 _ => log::debug!("rank {rank}: base {name} foreign/unusable; trying older"),
             }
         }
-        let (base_step, base_name, base) = found.with_context(|| {
-            format!("rank {rank}: no readable full checkpoint at or before {cut}")
+        let (base_step, base_name, base, base_is_carry) = found.with_context(|| {
+            format!("rank {rank}: no readable base checkpoint at or before {cut}")
         })?;
 
         let chain_diffs: Vec<(u64, u64, String)> = names
             .iter()
-            .filter(|n| Manifest::parse_rank(n).map(|(r, _)| r) == Some(rank))
+            .filter(|n| {
+                Manifest::parse_gen_rank(n).map(|(g, r, _)| (g, r)) == Some((gen, rank))
+            })
             .filter_map(|n| match Manifest::step_range(n) {
                 // hi-based like flat discovery: a compacted span may
                 // straddle the base full; its steps <= base are skipped
@@ -385,14 +543,14 @@ fn load_chains(
         }
         ensure!(prev_hi == cut, "rank {rank} chain ends at {prev_hi}, cut is {cut}");
         diffs.sort_by_key(|(s, _)| *s);
-        out.push(RankChain { part, base, diffs, objects });
+        out.push(RankChain { part, base, diffs, objects, base_is_carry });
     }
     Ok(out)
 }
 
 /// Recover the newest consistent cluster cut as one flattened global
 /// state: per-rank serial replay (exact — Adam is element-wise, so slice
-/// recovery concatenates bit-identically), then flatten in rank order.
+/// recovery scatters bit-identically), then flatten in rank order.
 pub fn recover_cluster(
     store: &Arc<dyn StorageBackend>,
     model_sig: u64,
@@ -413,47 +571,24 @@ pub fn recover_cluster(
     Ok((state, stats))
 }
 
-/// Cluster recovery with the **reshard safety-net fail-safe**: also read
-/// the dedicated net object
-/// ([`Manifest::reshard_net_name`] — written by
-/// [`elastic_restart`](crate::cluster::reshard::elastic_restart) before
-/// its re-anchor can overwrite any step-keyed `rank-*/full-{S}` name,
-/// deleted once the anchor record commits) and return whichever
-/// reconstructs the newer step. Only that one object is consulted —
-/// never the general flat chain — so a stale flat timeline left on a
-/// reused store can never hijack cluster recovery. Returns `None` cut
-/// stats when the net won.
-pub fn recover_cluster_or_net(
-    store: &Arc<dyn StorageBackend>,
-    model_sig: u64,
-    adam: &Adam,
-) -> Result<(ModelState, Option<ClusterCutStats>)> {
-    let cluster = recover_cluster(store, model_sig, adam);
-    let net = logical_view(store)
-        .get(Manifest::reshard_net_name())
-        .ok()
-        .and_then(|b| read_full(&b, model_sig).ok());
-    match (cluster, net) {
-        (Ok((cs, stats)), Some(ns)) => {
-            if ns.step > cs.step {
-                log::warn!(
-                    "reshard safety net (step {}) is newer than the cluster cut (step {}); \
-                     a re-anchor crashed mid-window — recovering from the net",
-                    ns.step,
-                    cs.step
-                );
-                Ok((ns, None))
-            } else {
-                Ok((cs, Some(stats)))
-            }
+/// Smallest unused namespace generation on the store: one past the
+/// newest generation referenced by any global record **or** any
+/// gen-namespaced object (a crashed reshard may have left namespace
+/// `g+1` half-written with no record). A fresh spawn that intends to
+/// re-anchor writes here, so it can never overwrite a committed — or
+/// even partially-written — name.
+pub fn next_generation(store: &Arc<dyn StorageBackend>) -> Result<u64> {
+    let logical = logical_view(store);
+    let mut max: Option<u64> = None;
+    for name in logical.list()? {
+        let g = Manifest::parse_global(&name)
+            .map(|(g, _)| g)
+            .or_else(|| Manifest::parse_gen(&name).map(|(g, _)| g));
+        if let Some(g) = g {
+            max = Some(max.map_or(g, |m| m.max(g)));
         }
-        (Ok((cs, stats)), None) => Ok((cs, Some(stats))),
-        (Err(e), Some(ns)) => {
-            log::warn!("no consistent cluster cut ({e:#}); recovering from the reshard net");
-            Ok((ns, None))
-        }
-        (Err(e), None) => Err(e),
     }
+    Ok(max.map_or(0, |g| g + 1))
 }
 
 /// Delete per-rank objects and global records from timelines beyond the
@@ -464,9 +599,9 @@ pub fn truncate_stragglers(store: &Arc<dyn StorageBackend>, cut: u64) -> Result<
     let mut removed = 0;
     for name in logical.list()? {
         let doomed = match Manifest::parse_global(&name) {
-            Some(step) => step > cut,
+            Some((_, step)) => step > cut,
             None => {
-                Manifest::parse_rank(&name).is_some()
+                (Manifest::parse_gen_rank(&name).is_some() || Manifest::parse_rank(&name).is_some())
                     && matches!(Manifest::step_range(&name), Some((_, lo, _)) if lo > cut)
             }
         };
@@ -479,25 +614,28 @@ pub fn truncate_stragglers(store: &Arc<dyn StorageBackend>, cut: u64) -> Result<
 }
 
 /// Cluster GC: keep exactly the newest complete global record and every
-/// object reachable from it (each rank's base full + diffs up to the
-/// cut), plus any per-rank object *beyond* the cut (phase 1 of an epoch
-/// still committing). Everything else — older records, torn newer
-/// records, superseded per-rank objects, defunct namespaces left behind
-/// by an elastic reshard — is deleted. Returns objects removed; no-op
-/// when no complete record exists (never delete the chain you might still
-/// recover from).
-pub fn gc_cluster(store: &Arc<dyn StorageBackend>, model_sig: u64) -> Result<usize> {
+/// object reachable from it (each rank's base + diffs up to the cut),
+/// plus any per-rank object *beyond* the cut (phase 1 of an epoch still
+/// committing). Everything else — older records, torn newer records,
+/// superseded per-rank objects, whole foreign generations — is deleted.
+/// While the live chain's base is a carry its reference targets live in
+/// older generations, so foreign generations (and all older records,
+/// which the resolver walks through) are frozen until a full epoch
+/// re-bases the chain. No-op when no complete record exists (never
+/// delete the chain you might still recover from).
+pub fn gc_cluster(store: &Arc<dyn StorageBackend>, model_sig: u64) -> Result<GcSweepStats> {
     let Some((rec, chains, _)) = find_consistent_cut(store, model_sig)? else {
-        return Ok(0);
+        return Ok(GcSweepStats::default());
     };
+    let has_carry = chains.iter().any(|c| c.base_is_carry);
     let keep: HashSet<String> = chains
         .into_iter()
         .flat_map(|c| c.objects)
-        .chain(std::iter::once(Manifest::global_name(rec.step)))
+        .chain(std::iter::once(rec.name()))
         .collect();
     let logical = logical_view(store);
     let names = logical.list()?;
-    sweep(&logical, &names, rec.step, &keep)
+    sweep(&logical, &names, rec.step, rec.generation, has_carry, &keep)
 }
 
 /// Commit-path GC: same sweep as [`gc_cluster`], but the keep set is
@@ -507,54 +645,116 @@ pub fn gc_cluster(store: &Arc<dyn StorageBackend>, model_sig: u64) -> Result<usi
 /// untrusted store) would double storage traffic per full epoch for
 /// nothing. Crate-private: only sound when `rec` is the newest record on
 /// the store, which the coordinator's in-order commits guarantee.
-pub(crate) fn gc_with_record(store: &Arc<dyn StorageBackend>, rec: &GlobalRecord) -> Result<usize> {
+pub(crate) fn gc_with_record(
+    store: &Arc<dyn StorageBackend>,
+    rec: &GlobalRecord,
+) -> Result<GcSweepStats> {
     let logical = logical_view(store);
     let names = logical.list()?;
     let mut keep: HashSet<String> = HashSet::new();
-    keep.insert(Manifest::global_name(rec.step));
+    let mut has_carry = false;
+    keep.insert(rec.name());
     for ro in &rec.ranks {
         keep.insert(ro.name.clone());
-        let chain = Manifest::rank_chain(&names, ro.rank as usize, rec.step);
-        if let Some((_, full)) = chain.full {
-            keep.insert(full);
+        has_carry |= ro.kind == CommitKind::Carry;
+        let chain = Manifest::gen_rank_chain(&names, rec.generation, ro.rank as usize, rec.step);
+        if let Some((_, base)) = chain.full {
+            has_carry |= matches!(Manifest::step_range(&base), Some(("carry", _, _)));
+            keep.insert(base);
         }
         for (_, _, diff) in chain.diffs {
             keep.insert(diff);
         }
     }
-    sweep(&logical, &names, rec.step, &keep)
+    sweep(&logical, &names, rec.step, rec.generation, has_carry, &keep)
 }
 
 /// Delete everything except `keep` and in-flight objects beyond `cut`,
 /// over an already-listed logical view (one view + one listing per pass).
-/// Deletes are best-effort per object: the background compaction
-/// scheduler legitimately races this sweep (it deletes raws it just
-/// superseded with a merged span), so an already-gone object is skipped,
-/// never a sweep abort.
-fn sweep(logical: &Sharded, names: &[String], cut: u64, keep: &HashSet<String>) -> Result<usize> {
-    let mut removed = 0;
+/// Generation scoping: names in generations other than `current_gen`
+/// (and global records other than the kept one) are dropped **wholesale**
+/// once the live chain is self-contained, but frozen entirely while
+/// `frozen_foreign` is set (a carry base still references them).
+///
+/// Deletes are per object: the background compaction scheduler
+/// legitimately races this sweep (it deletes raws it just superseded
+/// with a merged span), so an object that is *gone* after a failed
+/// delete is counted as already collected — but a delete failure with
+/// the object still present is a real leak, retried once and then
+/// surfaced in [`GcSweepStats::leaked`] instead of being silently
+/// swallowed.
+fn sweep(
+    logical: &Sharded,
+    names: &[String],
+    cut: u64,
+    current_gen: u64,
+    frozen_foreign: bool,
+    keep: &HashSet<String>,
+) -> Result<GcSweepStats> {
+    let mut stats = GcSweepStats::default();
     for name in names {
         if keep.contains(name) {
             continue;
         }
         let doomed = if Manifest::parse_global(name).is_some() {
             // the kept record is the only live one: older records are
-            // superseded, newer ones failed verification (torn)
-            true
-        } else if Manifest::parse_rank(name).is_some() {
-            // keep in-flight phase-1 objects beyond the cut
-            matches!(Manifest::step_range(name), Some((_, _, hi)) if hi <= cut)
+            // superseded, newer ones failed verification (torn) — but
+            // all of them stay while a carry still resolves through them
+            !frozen_foreign
+        } else if let Some((g, _, _)) = Manifest::parse_gen_rank(name) {
+            if g == current_gen {
+                // keep in-flight phase-1 objects beyond the cut
+                matches!(Manifest::step_range(name), Some((_, _, hi)) if hi <= cut)
+            } else {
+                // foreign generation: frozen under a carry, dropped
+                // wholesale once the live chain is self-contained
+                !frozen_foreign
+            }
+        } else if Manifest::parse_rank(name).is_some() || Manifest::parse_gen(name).is_some() {
+            // legacy flat-rank names and malformed generation leftovers
+            // belong to no live chain
+            !frozen_foreign
         } else {
             false // top-level (non-cluster) objects are not ours to collect
         };
         if doomed {
-            match logical.delete(name) {
-                Ok(()) => removed += 1,
-                Err(e) => log::debug!("gc sweep: {name} already gone? ({e:#})"),
+            match delete_checked(logical, name) {
+                DeleteOutcome::Removed => stats.removed += 1,
+                DeleteOutcome::AlreadyGone => {}
+                DeleteOutcome::Leaked(e) => {
+                    log::warn!("gc sweep: failed to delete {name}, leaking it ({e:#})");
+                    stats.leaked += 1;
+                }
             }
         }
     }
-    Ok(removed)
+    Ok(stats)
+}
+
+enum DeleteOutcome {
+    Removed,
+    AlreadyGone,
+    Leaked(anyhow::Error),
+}
+
+/// Delete with not-found/IO-failure discrimination: retry a failed
+/// delete once, then check whether the object is actually gone (a racing
+/// compactor legitimately deletes superseded raws) before declaring a
+/// leak.
+fn delete_checked(logical: &Sharded, name: &str) -> DeleteOutcome {
+    match logical.delete(name) {
+        Ok(()) => DeleteOutcome::Removed,
+        Err(first) => {
+            if !logical.exists(name) {
+                return DeleteOutcome::AlreadyGone;
+            }
+            match logical.delete(name) {
+                Ok(()) => DeleteOutcome::Removed,
+                Err(_) if !logical.exists(name) => DeleteOutcome::AlreadyGone,
+                Err(_) => DeleteOutcome::Leaked(first),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -568,10 +768,13 @@ mod tests {
                 let len = 10 + r as u64;
                 let ro = RankObject {
                     rank: r as u32,
-                    offset: pos,
-                    len,
+                    slices: vec![(pos, len)],
                     kind: if r % 2 == 0 { CommitKind::Diff } else { CommitKind::Full },
-                    name: format!("{}{}", Manifest::rank_prefix(r), Manifest::diff_name(7)),
+                    name: format!(
+                        "{}{}",
+                        Manifest::gen_rank_prefix(1, r),
+                        Manifest::diff_name(7)
+                    ),
                     obj_len: 100 + r as u64,
                     obj_crc: 0xABCD + r as u32,
                 };
@@ -579,7 +782,7 @@ mod tests {
                 ro
             })
             .collect();
-        GlobalRecord { model_sig: 0xFEED, step: 7, seq: 9, ranks: objs }
+        GlobalRecord { model_sig: 0xFEED, generation: 1, step: 7, seq: 9, ranks: objs }
     }
 
     #[test]
@@ -589,7 +792,49 @@ mod tests {
             let back = GlobalRecord::from_bytes(&rec.to_bytes()).unwrap();
             assert_eq!(back, rec);
             assert_eq!(back.partitions().len(), ranks);
+            assert_eq!(back.generation, 1);
         }
+    }
+
+    #[test]
+    fn record_roundtrip_with_multi_slice_partitions() {
+        let rec = GlobalRecord {
+            model_sig: 5,
+            generation: 3,
+            step: 4,
+            seq: 2,
+            ranks: vec![
+                RankObject {
+                    rank: 0,
+                    slices: vec![(0, 5), (10, 5)],
+                    kind: CommitKind::Carry,
+                    name: format!(
+                        "{}{}",
+                        Manifest::gen_rank_prefix(3, 0),
+                        Manifest::carry_name(4)
+                    ),
+                    obj_len: 64,
+                    obj_crc: 1,
+                },
+                RankObject {
+                    rank: 1,
+                    slices: vec![(5, 5)],
+                    kind: CommitKind::Full,
+                    name: format!(
+                        "{}{}",
+                        Manifest::gen_rank_prefix(3, 1),
+                        Manifest::full_name(4)
+                    ),
+                    obj_len: 65,
+                    obj_crc: 2,
+                },
+            ],
+        };
+        let back = GlobalRecord::from_bytes(&rec.to_bytes()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.n_params(), 15);
+        assert_eq!(back.partitions()[0].slices.len(), 2);
+        assert_eq!(back.ranks[0].kind, CommitKind::Carry);
     }
 
     #[test]
@@ -608,15 +853,16 @@ mod tests {
     #[test]
     fn record_rejects_non_contiguous_partitions() {
         let mut rec = record(2);
-        rec.ranks[1].offset += 1;
+        rec.ranks[1].slices[0].0 += 1;
         let err = GlobalRecord::from_bytes(&rec.to_bytes()).unwrap_err().to_string();
-        assert!(err.contains("partition"), "{err}");
+        assert!(err.contains("partition") || err.contains("gap"), "{err}");
     }
 
     #[test]
     fn commit_kind_decodes() {
         assert_eq!(CommitKind::from_u8(0).unwrap(), CommitKind::Full);
         assert_eq!(CommitKind::from_u8(1).unwrap(), CommitKind::Diff);
+        assert_eq!(CommitKind::from_u8(2).unwrap(), CommitKind::Carry);
         assert!(CommitKind::from_u8(9).is_err());
     }
 }

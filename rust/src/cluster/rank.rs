@@ -2,15 +2,18 @@
 //!
 //! [`Cluster::spawn`] starts one thread per rank plus one commit
 //! coordinator. Each rank owns a [`Partition`] of the flat state and a
-//! private `rank-{r:04}/` namespace on the shared store
-//! ([`Namespaced`]); it compacts its slice of each masked gradient off
-//! the training path, encodes into its own pooled buffer
-//! ([`BufPool`]), persists through its own [`Sharded`] engine when
-//! `n_shards`/`writers` ask for one, and acks the durable object (name,
-//! length, CRC) to the coordinator — phase 1 of the two-phase commit.
-//! The coordinator assembles acks per epoch, **strictly in epoch order**,
-//! and writes the `global-{step:012}.gck` record once every rank is
-//! durable — phase 2 (see [`crate::cluster::commit`]).
+//! private `gen-{g:04}/rank-{r:04}/` namespace on the shared store
+//! ([`Namespaced`], generation from [`ClusterConfig::generation`]); it
+//! compacts its slice of each masked gradient off the training path,
+//! encodes into its own pooled buffer ([`BufPool`]), persists through
+//! its own [`Sharded`] engine when `n_shards`/`writers` ask for one, and
+//! acks the durable object (name, length, CRC) to the coordinator —
+//! phase 1 of the two-phase commit. The coordinator assembles acks per
+//! epoch, **strictly in epoch order**, and writes the
+//! `global-{g:04}-{step:012}.gck` record once every rank is durable —
+//! phase 2 (see [`crate::cluster::commit`]). Committed names are never
+//! rewritten: a restart that re-anchors, and every elastic reshard,
+//! bumps the generation and writes into a fresh namespace.
 //!
 //! The training thread's cost per checkpoint is one Ψ-sized slice fan-out
 //! ([`Cluster::put_diff_dense`]) or one state snapshot slice
@@ -74,6 +77,10 @@ pub struct ClusterStats {
     pub commit_secs: f64,
     /// objects removed by coordinator-run cluster GC
     pub gc_removed: u64,
+    /// GC deletes that failed with the object still present (leaked
+    /// garbage surfaced instead of silently swallowed; see
+    /// [`GcSweepStats`](crate::cluster::commit::GcSweepStats))
+    pub gc_leaked: u64,
     /// merged spans written by scheduler-run chain compaction
     pub merged_written: u64,
     /// raw per-rank diff objects superseded by merged spans
@@ -108,6 +115,7 @@ struct CoordStats {
     record_bytes: u64,
     commit_secs: f64,
     gc_removed: u64,
+    gc_leaked: u64,
     retunes: u64,
     sched: SchedStats,
 }
@@ -141,16 +149,18 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Spawn ranks over `store` with the conventional `rank-{r:04}/`
-    /// namespaces.
+    /// Spawn ranks over `store` with the conventional
+    /// `gen-{g:04}/rank-{r:04}/` namespaces (generation from
+    /// `cfg.generation`).
     pub fn spawn(
         store: Arc<dyn StorageBackend>,
         partitions: Vec<Partition>,
         cfg: ClusterConfig,
     ) -> Cluster {
         let shared = Arc::clone(&store);
+        let gen = cfg.generation;
         Cluster::spawn_with(store, partitions, cfg, move |r| {
-            Arc::new(Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r)))
+            Arc::new(Namespaced::new(Arc::clone(&shared), Manifest::gen_rank_prefix(gen, r)))
                 as Arc<dyn StorageBackend>
         })
     }
@@ -158,9 +168,9 @@ impl Cluster {
     /// Spawn with a caller-provided per-rank store factory — the hook the
     /// fault-injection tests use to wrap a single rank's namespace in a
     /// [`FaultyStore`](crate::storage::FaultyStore). The returned store
-    /// MUST still map names into `rank-{r:04}/` on the shared store (wrap
-    /// a [`Namespaced`], don't replace it): the global record addresses
-    /// objects by their namespaced names.
+    /// MUST still map names into `gen-{g:04}/rank-{r:04}/` on the shared
+    /// store (wrap a [`Namespaced`], don't replace it): the global record
+    /// addresses objects by their namespaced names.
     pub fn spawn_with<F>(
         store: Arc<dyn StorageBackend>,
         partitions: Vec<Partition>,
@@ -176,10 +186,15 @@ impl Cluster {
             "rank namespaces are 4-digit (`rank-{{r:04}}/`): at most 10000 ranks, got {}",
             partitions.len()
         );
+        assert!(
+            cfg.generation < 10_000,
+            "generation namespaces are 4-digit (`gen-{{g:04}}/`): got {}",
+            cfg.generation
+        );
         // fail fast on malformed tables: the coordinator trusts rank
         // labels and the record's reader would reject gaps/overlaps only
         // at recovery time, when nothing can be re-written
-        let total: usize = partitions.iter().map(|p| p.len).sum();
+        let total: usize = partitions.iter().map(|p| p.len()).sum();
         validate_partitions(&partitions, total).expect("cluster partition table");
         // the control plane: ONE gate shared by every rank's persist path
         // (guards) and the compaction scheduler (shaped I/O) — background
@@ -193,15 +208,16 @@ impl Cluster {
         let (ack_tx, ack_rx) = channel::<RankAck>();
         let mut txs = Vec::with_capacity(partitions.len());
         let mut rank_handles = Vec::with_capacity(partitions.len());
-        for &part in &partitions {
+        for part in &partitions {
             let (tx, rx) = sync_channel::<RankCmd>(cfg.queue_capacity.max(1));
             let rstore = rank_store(part.rank);
             let acks = ack_tx.clone();
             let rcfg = cfg.clone();
             let rgate = gate.clone();
+            let rpart = part.clone();
             let h = std::thread::Builder::new()
                 .name(format!("rank-{:04}", part.rank))
-                .spawn(move || rank_loop(part, rstore, rcfg, rx, acks, rgate))
+                .spawn(move || rank_loop(rpart, rstore, rcfg, rx, acks, rgate))
                 .expect("spawning rank thread");
             txs.push(tx);
             rank_handles.push(h);
@@ -344,6 +360,7 @@ impl Cluster {
             record_bytes: c.record_bytes,
             commit_secs: c.commit_secs,
             gc_removed: c.gc_removed,
+            gc_leaked: c.gc_leaked,
             merged_written: c.sched.compact.merged_written,
             raw_compacted: c.sched.compact.raw_compacted,
             compact_secs: c.sched.busy_secs,
@@ -380,7 +397,7 @@ fn rank_loop(
     gate: Option<Arc<IoGate>>,
 ) -> CkptStats {
     let sig = rank_sig(cfg.model_sig, &part);
-    let prefix = Manifest::rank_prefix(part.rank);
+    let prefix = Manifest::gen_rank_prefix(cfg.generation, part.rank);
     let enc = Encoder::new(sig, cfg.codec, 4);
     let mut sink = Sink::new(Arc::clone(&store), cfg.n_shards, cfg.writers, 4)
         .with_control(gate, cfg.telemetry.clone());
@@ -514,11 +531,10 @@ fn coordinator_loop(
         e.received += 1;
         match ack.result {
             Ok((name, obj_len, obj_crc)) => {
-                let part = partitions[ack.rank];
+                let part = &partitions[ack.rank];
                 e.objects[ack.rank] = Some(RankObject {
                     rank: ack.rank as u32,
-                    offset: part.offset as u64,
-                    len: part.len as u64,
+                    slices: part.slices.iter().map(|s| (s.offset as u64, s.len as u64)).collect(),
                     kind: ack.kind,
                     name,
                     obj_len,
@@ -674,19 +690,23 @@ fn commit_epoch(
     }
     let rec = GlobalRecord {
         model_sig: cfg.model_sig,
+        generation: cfg.generation,
         step: p.step,
         seq,
         ranks: p.objects.into_iter().map(Option::unwrap).collect(),
     };
     let bytes = rec.to_bytes();
-    let committed_rec = match store.put(&Manifest::global_name(rec.step), &bytes) {
+    let committed_rec = match store.put(&rec.name(), &bytes) {
         Ok(()) => {
             out.commits += 1;
             out.record_bytes += bytes.len() as u64;
             committed.fetch_add(1, Ordering::SeqCst);
             if cfg.gc && p.kind == CommitKind::Full {
                 match gc_with_record(store, &rec) {
-                    Ok(removed) => out.gc_removed += removed as u64,
+                    Ok(gc) => {
+                        out.gc_removed += gc.removed as u64;
+                        out.gc_leaked += gc.leaked as u64;
+                    }
                     Err(e) => log::warn!("cluster gc failed: {e:#}"),
                 }
             }
@@ -743,7 +763,12 @@ fn compact_cluster_chains(
             settle_tail: 0,
         };
         // the chain strictly below the cut: tips at the cut stay raw
-        let chain = Manifest::rank_chain(&names, ro.rank as usize, rec.step.saturating_sub(1));
+        let chain = Manifest::gen_rank_chain(
+            &names,
+            rec.generation,
+            ro.rank as usize,
+            rec.step.saturating_sub(1),
+        );
         // tail merging keeps the replayable set within ⌈n/mf⌉ + 2 (the
         // two protected record tips stay raw alongside the merged spans)
         if let Err(e) = compact_chain(logical, &chain, &ccfg, &protect, true, &mut out.compact) {
@@ -831,14 +856,14 @@ mod tests {
         cluster.wait_epochs(5);
         assert_eq!(cluster.epochs_committed(), 5);
         drop(cluster);
-        let mut steps: Vec<u64> = store
+        let mut steps: Vec<(u64, u64)> = store
             .list()
             .unwrap()
             .iter()
             .filter_map(|s| Manifest::parse_global(s))
             .collect();
         steps.sort_unstable();
-        assert_eq!(steps, vec![0, 1, 2, 3, 4]);
+        assert_eq!(steps, vec![(0, 0), (0, 1), (0, 2), (0, 3), (0, 4)]);
     }
 
     #[test]
@@ -854,7 +879,7 @@ mod tests {
             partition_even(n, 2),
             cfg,
             move |r| {
-                let ns = Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r));
+                let ns = Namespaced::new(Arc::clone(&shared), Manifest::gen_rank_prefix(0, r));
                 if r == 1 {
                     Arc::new(FaultyStore::new(
                         ns,
@@ -958,7 +983,7 @@ mod tests {
             partition_even(n, 2),
             cfg,
             move |r| {
-                let ns = Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r));
+                let ns = Namespaced::new(Arc::clone(&shared), Manifest::gen_rank_prefix(0, r));
                 if r == 1 {
                     Arc::new(FailName { inner: ns, needle: Manifest::diff_name(1) })
                         as Arc<dyn StorageBackend>
@@ -980,7 +1005,7 @@ mod tests {
         let stats = cluster.finish();
         assert_eq!(stats.global_commits, 2, "anchor + the re-basing full only");
         assert_eq!(stats.torn_commits, 3, "torn epoch 1 + poisoned diffs 2,3");
-        assert!(!inner.exists(&Manifest::global_name(2)), "poisoned diff must not commit");
+        assert!(!inner.exists(&Manifest::global_name(0, 2)), "poisoned diff must not commit");
 
         let (got, cut) = recover_cluster(&inner, sig, &Adam::default()).unwrap();
         assert_eq!(cut.cut_step, 3);

@@ -3,51 +3,82 @@
 //! A cluster checkpoint is R per-rank chains plus a global record carrying
 //! the partition table that produced them. An elastic restart therefore
 //! does not need the old rank count configured anywhere: it reads all R
-//! chains at the consistent cut (merging each rank's diffs into its base —
-//! [`recover_cluster`](crate::cluster::commit::recover_cluster)), flattens
-//! the slices into one global state, and [`repartition`]s that state
-//! across the new R′ partitions. [`elastic_restart`] wraps the whole
-//! sequence and re-anchors the new cluster: each new rank writes a full
-//! checkpoint of its (re-cut) slice at the cut step and the coordinator
-//! commits a fresh global record with the **new** partition table — from
-//! that point the old namespaces are garbage that the next cluster GC
-//! sweep reclaims.
+//! chains at the consistent cut
+//! ([`find_consistent_cut`](crate::cluster::commit::find_consistent_cut)),
+//! replays them to the cut state, and restarts the cluster over the new
+//! R′ partitions — **in a fresh namespace generation** (`generation + 1`),
+//! so not a single committed old-generation byte is overwritten. A crash
+//! anywhere inside [`elastic_restart`] trivially falls back to the old
+//! generation's record: the new generation either has a complete record
+//! of its own (commit point) or is dead weight the next restart's
+//! truncation sweeps away.
+//!
+//! The reshard is **incremental**, not a full-write burst:
+//!
+//! - each new rank's chain base is a [`Carry`](crate::checkpoint::carry)
+//!   at the old chains' uniform base step `F`: moved-in intervals inline
+//!   (~|ΔR|/max(R, R′) of the model under the consistent-hash
+//!   partitioner, [`partition_hash`](crate::cluster::partition_hash)),
+//!   retained intervals as references into the rank's own old-generation
+//!   base;
+//! - the committed diff history `(F, S]` is carried across by *re-cutting*
+//!   the old ranks' sparse gradients into the new partitions (pure index
+//!   mapping — every per-element value-update sequence is preserved, so
+//!   replay stays bit-identical) and writing one merged span per new
+//!   rank;
+//! - one new global record at the cut step `S`, generation `g+1`, commits
+//!   the whole event atomically.
+//!
+//! When the old bases are *not* at a uniform step (a rank's newest base
+//! was damaged and chain loading fell back to an older one), the carry
+//! fast path is unsound — the fallback re-anchors each new rank with a
+//! plain full of its slice at `S`, still into the fresh generation.
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::checkpoint::carry::write_carry;
+use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::full::write_full;
 use crate::checkpoint::manifest::Manifest;
-use crate::cluster::commit::{recover_cluster, truncate_stragglers, ClusterCutStats};
+use crate::checkpoint::merged::write_merged;
+use crate::cluster::commit::{
+    find_consistent_cut, truncate_stragglers, ClusterCutStats, CommitKind, GlobalRecord,
+    RankObject,
+};
 use crate::cluster::rank::Cluster;
-use crate::cluster::{slice_state, validate_partitions, ClusterConfig, Partition};
+use crate::cluster::{rank_sig, slice_state, validate_partitions, ClusterConfig, Partition, Slice};
 use crate::optim::{Adam, ModelState};
+use crate::sparse::SparseGrad;
 use crate::storage::StorageBackend;
 use crate::tensor::Flat;
 
-/// Concatenate per-rank state slices (in partition order) back into one
-/// global state. The slices must tile the parameter vector contiguously
-/// and agree on the step.
+/// Scatter per-rank state slices back into one global state. The
+/// partitions (any order, possibly multi-slice) must tile the parameter
+/// vector exactly and the slices must agree on the step.
 pub fn flatten(slices: &[(Partition, ModelState)]) -> Result<ModelState> {
     ensure!(!slices.is_empty(), "nothing to flatten");
-    let mut order: Vec<usize> = (0..slices.len()).collect();
-    order.sort_by_key(|&i| slices[i].0.offset);
-    let n: usize = slices.iter().map(|(p, _)| p.len).sum();
+    let mut parts: Vec<Partition> = slices.iter().map(|(p, _)| p.clone()).collect();
+    parts.sort_by_key(|p| p.rank);
+    let n: usize = parts.iter().map(|p| p.len()).sum();
+    validate_partitions(&parts, n).context("flatten partition table")?;
     let step = slices[0].1.step;
-    let mut params = Vec::with_capacity(n);
-    let mut m = Vec::with_capacity(n);
-    let mut v = Vec::with_capacity(n);
-    let mut pos = 0usize;
-    for &i in &order {
-        let (p, s) = &slices[i];
-        ensure!(p.offset == pos, "slice at {} leaves a gap at {pos}", p.offset);
-        ensure!(s.n_params() == p.len, "slice state {} != partition {}", s.n_params(), p.len);
+    let mut params = vec![0f32; n];
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    for (p, s) in slices {
+        ensure!(s.n_params() == p.len(), "slice state {} != partition {}", s.n_params(), p.len());
         ensure!(s.step == step, "slice steps disagree: {} != {step}", s.step);
-        params.extend_from_slice(&s.params.0);
-        m.extend_from_slice(&s.m.0);
-        v.extend_from_slice(&s.v.0);
-        pos = p.end();
+        let mut local = 0usize;
+        for r in p.ranges() {
+            let run = r.end - r.start;
+            params[r.clone()].copy_from_slice(&s.params.0[local..local + run]);
+            m[r.clone()].copy_from_slice(&s.m.0[local..local + run]);
+            v[r.clone()].copy_from_slice(&s.v.0[local..local + run]);
+            local += run;
+        }
     }
     Ok(ModelState { params: Flat(params), m: Flat(m), v: Flat(v), step })
 }
@@ -58,69 +89,289 @@ pub fn repartition(state: &ModelState, parts: &[Partition]) -> Result<Vec<ModelS
     Ok(parts.iter().map(|p| slice_state(state, p)).collect())
 }
 
+/// Intersection of two sorted disjoint interval lists.
+pub(crate) fn intersect_slices(a: &[Slice], b: &[Slice]) -> Vec<Slice> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].offset.max(b[j].offset);
+        let hi = a[i].end().min(b[j].end());
+        if lo < hi {
+            out.push(Slice { offset: lo, len: hi - lo });
+        }
+        if a[i].end() <= b[j].end() {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out
+}
+
+/// `a` minus `b`, both sorted disjoint interval lists.
+pub(crate) fn subtract_slices(a: &[Slice], b: &[Slice]) -> Vec<Slice> {
+    let mut out = Vec::new();
+    let mut j = 0usize;
+    for s in a {
+        let mut lo = s.offset;
+        while j < b.len() && b[j].end() <= lo {
+            j += 1;
+        }
+        let mut k = j;
+        while k < b.len() && b[k].offset < s.end() {
+            if b[k].offset > lo {
+                out.push(Slice { offset: lo, len: b[k].offset - lo });
+            }
+            lo = lo.max(b[k].end());
+            k += 1;
+        }
+        if lo < s.end() {
+            out.push(Slice { offset: lo, len: s.end() - lo });
+        }
+    }
+    out
+}
+
+/// Global-index → (rank, local-index) lookup over a partition table,
+/// built once per reshard (binary search per gradient entry).
+struct SliceMap {
+    /// (offset, end, rank, local index of `offset`), sorted by offset
+    entries: Vec<(usize, usize, usize, usize)>,
+}
+
+impl SliceMap {
+    fn new(parts: &[Partition]) -> SliceMap {
+        let mut entries = Vec::new();
+        for p in parts {
+            let mut local = 0usize;
+            for s in &p.slices {
+                entries.push((s.offset, s.end(), p.rank, local));
+                local += s.len;
+            }
+        }
+        entries.sort_unstable();
+        SliceMap { entries }
+    }
+
+    fn locate(&self, g: usize) -> Option<(usize, usize)> {
+        let i = self.entries.partition_point(|e| e.1 <= g);
+        let &(off, end, rank, local) = self.entries.get(i)?;
+        (off <= g && g < end).then_some((rank, local + (g - off)))
+    }
+}
+
 /// Recover the consistent cut written by R ranks and restart the cluster
 /// with the given R′ partitions (R′ may differ from R — the record, not
-/// the caller, knows R). Stragglers beyond the cut are truncated, the new
-/// cluster is spawned, and the cut state is re-anchored as a full epoch
-/// under the new partitioning; the call **blocks until that anchor epoch
-/// commits** and errors if it tears, so the caller never trains on top of
-/// an unanchored reshard. Returns the running cluster, the recovered
+/// the caller, knows R). The restart writes **only into generation
+/// `g+1`** (the caller's `cfg.generation` is overridden): a carry base
+/// plus one re-cut merged span per new rank, then a new global record at
+/// the cut step — the single commit point of the whole event. A crash
+/// before the record leaves the old generation's record fully intact
+/// (nothing of it was touched); a crash after it recovers onto the new
+/// generation. Stragglers beyond the cut are truncated first. Returns
+/// the running cluster (spawned over the new generation), the recovered
 /// global state, and cut statistics.
-///
-/// Crash-window fail-safe: when the cut epoch was itself a *full* at step
-/// S, the re-anchor overwrites `rank-*/full-{S}` in place (names are
-/// step-keyed), so a crash inside this call — after the first overwrite,
-/// before the new record lands — invalidates the old record's tip CRCs.
-/// The recovered cut is therefore persisted as a dedicated top-level
-/// **safety-net full** ([`Manifest::reshard_net_name`], not a chain
-/// object) *before* the new cluster touches any rank-namespaced name;
-/// [`recover_cluster_or_net`](crate::cluster::commit::recover_cluster_or_net)
-/// falls back to it whenever the cluster walk lands on an older step. The
-/// net is deleted once the re-anchor record is durable. Diff-kind cuts
-/// never had the window (the anchor writes new names, and chain loading
-/// skips foreign-generation bases), but the net is written
-/// unconditionally — one full write per restart removes the case
-/// analysis. See docs/CLUSTER.md.
 pub fn elastic_restart(
     store: &Arc<dyn StorageBackend>,
     adam: &Adam,
     new_parts: Vec<Partition>,
     cfg: ClusterConfig,
 ) -> Result<(Cluster, ModelState, ClusterCutStats)> {
-    let (state, cut) = recover_cluster(store, cfg.model_sig, adam)
-        .context("elastic restart: recovering the consistent cut")?;
-    validate_partitions(&new_parts, state.n_params())
+    let mut cfg = cfg;
+    let (rec, chains, cut) = find_consistent_cut(store, cfg.model_sig)
+        .context("elastic restart: searching for a consistent cut")?
+        .context("elastic restart: no complete global commit record found")?;
+    validate_partitions(&new_parts, rec.n_params())
         .context("elastic restart: new partition table")?;
-    truncate_stragglers(store, cut.cut_step)
+    let new_gen = rec.generation + 1;
+    ensure!(new_gen < 10_000, "generation namespace exhausted ({new_gen})");
+    cfg.generation = new_gen;
+    truncate_stragglers(store, rec.step)
         .context("elastic restart: truncating torn-commit stragglers")?;
-    // fail-safe net: the cut survives as a dedicated top-level full until
-    // the re-anchor commits, closing the step-keyed overwrite window
-    // (recover_cluster_or_net reads exactly this object and nothing else)
-    let net_name = Manifest::reshard_net_name();
-    let net = write_full(&state, cfg.model_sig, cfg.codec)
-        .context("elastic restart: encoding the safety-net full")?;
+
+    // the cut state S (needed for the fallback path and returned to the
+    // caller for training to resume from)
+    let replayed: Vec<(Partition, ModelState)> = chains
+        .iter()
+        .map(|ch| {
+            let mut st = ch.base.clone();
+            for (_, g) in &ch.diffs {
+                adam.apply_sparse(&mut st, g);
+            }
+            st.step = rec.step;
+            (ch.part.clone(), st)
+        })
+        .collect();
+    let state = flatten(&replayed).context("elastic restart: flattening the cut state")?;
+
+    let uniform_f = chains
+        .windows(2)
+        .all(|w| w[0].base.step == w[1].base.step)
+        .then(|| chains[0].base.step);
+    let tips: Vec<RankObject> = match uniform_f {
+        Some(f) => write_incremental_reshard(store, &cfg, &rec, &chains, &new_parts, f)
+            .context("elastic restart: incremental carry + re-cut")?,
+        None => {
+            // divergent base steps (a damaged base forced an older one):
+            // the carry construction has no single F to anchor at — pay
+            // the full re-anchor, still into the fresh generation
+            log::warn!("elastic restart: old base steps diverge; re-anchoring with fulls");
+            write_full_reshard(store, &cfg, &rec, &state, &new_parts)
+                .context("elastic restart: full re-anchor")?
+        }
+    };
+    // THE commit point: the new generation's record at the cut step
+    let rec2 = GlobalRecord {
+        model_sig: cfg.model_sig,
+        generation: new_gen,
+        step: rec.step,
+        seq: rec.seq + 1,
+        ranks: tips,
+    };
     store
-        .put(net_name, &net)
-        .context("elastic restart: writing the safety-net full")?;
+        .put(&rec2.name(), &rec2.to_bytes())
+        .context("elastic restart: committing the reshard record")?;
     let cluster = Cluster::spawn(Arc::clone(store), new_parts, cfg);
-    // re-anchor: every new rank needs a base full under ITS partitioning
-    // before it can extend the chain (old chains use the old rank sigs)
-    cluster.put_full(state.step, &state);
-    cluster.wait_epochs(1);
-    ensure!(
-        cluster.epochs_committed() >= 1,
-        "elastic restart: the re-anchor epoch tore (a rank write failed); \
-         recover_cluster_or_net still restores the cut via the safety-net full"
-    );
-    // the anchor record is durable: the net is redundant now
-    let _ = store.delete(net_name);
     Ok((cluster, state, cut))
+}
+
+/// The incremental fast path: per new rank, a carry base at the uniform
+/// old base step `F` (moved intervals inline, retained by reference) and
+/// one merged span of the old diff history `(F, S]` re-cut into the new
+/// partition. Returns the per-rank record entries (tip = the span, or
+/// the carry when `F == S`).
+fn write_incremental_reshard(
+    store: &Arc<dyn StorageBackend>,
+    cfg: &ClusterConfig,
+    rec: &GlobalRecord,
+    chains: &[crate::cluster::commit::RankChain],
+    new_parts: &[Partition],
+    f: u64,
+) -> Result<Vec<RankObject>> {
+    // global base state at F — only its moved intervals are serialized
+    let base_pairs: Vec<(Partition, ModelState)> =
+        chains.iter().map(|c| (c.part.clone(), c.base.clone())).collect();
+    let global_f = flatten(&base_pairs).context("flattening the old bases at F")?;
+
+    // re-cut the diff history: old-local → global → new-local, preserving
+    // every (element, step, value) triple exactly
+    let steps: BTreeSet<u64> = chains.iter().flat_map(|c| c.diffs.iter().map(|(s, _)| *s)).collect();
+    let map = SliceMap::new(new_parts);
+    let mut recut: Vec<std::collections::BTreeMap<u64, Vec<(u32, f32)>>> =
+        new_parts.iter().map(|_| Default::default()).collect();
+    for ch in chains {
+        for (step, g) in &ch.diffs {
+            for (&idx, &val) in g.indices.iter().zip(&g.values) {
+                let gidx = ch.part.global_of_local(idx as usize);
+                let (r, l) = map
+                    .locate(gidx)
+                    .with_context(|| format!("gradient index {gidx} outside the new partitions"))?;
+                recut[r].entry(*step).or_default().push((l as u32, val));
+            }
+        }
+    }
+
+    let mut tips = Vec::with_capacity(new_parts.len());
+    for (part, mut per_step) in new_parts.iter().zip(recut) {
+        let rsig = rank_sig(cfg.model_sig, part);
+        let prefix = Manifest::gen_rank_prefix(cfg.generation, part.rank);
+        // retained = still owned by the same rank id under the old table
+        // (consistent hashing keeps these large); moved = everything else
+        let old_slices: &[Slice] =
+            chains.get(part.rank).map(|c| c.part.slices.as_slice()).unwrap_or(&[]);
+        let refs = intersect_slices(&part.slices, old_slices);
+        let moved = subtract_slices(&part.slices, &refs);
+        let src_base =
+            if refs.is_empty() { String::new() } else { chains[part.rank].objects[0].clone() };
+        let carry_bytes = write_carry(
+            &global_f,
+            &moved,
+            &refs,
+            rec.generation,
+            rec.step,
+            &src_base,
+            rsig,
+            cfg.codec,
+        )
+        .with_context(|| format!("encoding rank {} carry", part.rank))?;
+        let carry_name = format!("{prefix}{}", Manifest::carry_name(f));
+        store.put(&carry_name, &carry_bytes)?;
+
+        let (tip_name, tip_bytes, kind) = if f < rec.step {
+            // one span covering (F, S]: every committed step appears
+            // (empty where this rank's slice got no gradient mass), so
+            // the span validates and replays like any compacted chain
+            let items: Vec<(u64, DiffPayload)> = steps
+                .iter()
+                .map(|&s| {
+                    let mut pairs = per_step.remove(&s).unwrap_or_default();
+                    pairs.sort_unstable_by_key(|&(i, _)| i);
+                    let g = SparseGrad {
+                        dense_len: part.len() as u32,
+                        indices: pairs.iter().map(|&(i, _)| i).collect(),
+                        values: pairs.iter().map(|&(_, v)| v).collect(),
+                    };
+                    (s, DiffPayload::Gradient(g))
+                })
+                .collect();
+            let span_bytes = write_merged(&items, rsig, f + 1, rec.step, cfg.codec)
+                .with_context(|| format!("encoding rank {} re-cut span", part.rank))?;
+            let span_name = format!("{prefix}{}", Manifest::merged_name(f + 1, rec.step));
+            store.put(&span_name, &span_bytes)?;
+            (span_name, span_bytes, CommitKind::Diff)
+        } else {
+            // the cut was a full epoch: the carry IS the tip
+            (carry_name, carry_bytes, CommitKind::Carry)
+        };
+        tips.push(RankObject {
+            rank: part.rank as u32,
+            slices: part.slices.iter().map(|s| (s.offset as u64, s.len as u64)).collect(),
+            kind,
+            name: tip_name,
+            obj_len: tip_bytes.len() as u64,
+            obj_crc: crc32fast::hash(&tip_bytes),
+        });
+    }
+    Ok(tips)
+}
+
+/// The fallback: re-anchor each new rank with a plain full of its slice
+/// at the cut step, into the fresh generation.
+fn write_full_reshard(
+    store: &Arc<dyn StorageBackend>,
+    cfg: &ClusterConfig,
+    rec: &GlobalRecord,
+    state: &ModelState,
+    new_parts: &[Partition],
+) -> Result<Vec<RankObject>> {
+    let mut tips = Vec::with_capacity(new_parts.len());
+    for part in new_parts {
+        let rsig = rank_sig(cfg.model_sig, part);
+        let slice = slice_state(state, part);
+        let bytes = write_full(&slice, rsig, cfg.codec)
+            .with_context(|| format!("encoding rank {} re-anchor full", part.rank))?;
+        let name = format!(
+            "{}{}",
+            Manifest::gen_rank_prefix(cfg.generation, part.rank),
+            Manifest::full_name(rec.step)
+        );
+        store.put(&name, &bytes)?;
+        tips.push(RankObject {
+            rank: part.rank as u32,
+            slices: part.slices.iter().map(|s| (s.offset as u64, s.len as u64)).collect(),
+            kind: CommitKind::Full,
+            name,
+            obj_len: bytes.len() as u64,
+            obj_crc: crc32fast::hash(&bytes),
+        });
+    }
+    Ok(tips)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::partition_even;
+    use crate::cluster::{partition_even, partition_hash};
     use crate::util::rng::Rng;
 
     fn state(n: usize, seed: u64) -> ModelState {
@@ -141,11 +392,12 @@ mod tests {
         let n = 103;
         let want = state(n, 5);
         for r in [1usize, 2, 3, 7] {
-            let parts = partition_even(n, r);
-            let slices = repartition(&want, &parts).unwrap();
-            let pairs: Vec<(Partition, ModelState)> =
-                parts.iter().copied().zip(slices).collect();
-            assert_eq!(flatten(&pairs).unwrap(), want, "r={r}");
+            for parts in [partition_even(n, r), partition_hash(n, r)] {
+                let slices = repartition(&want, &parts).unwrap();
+                let pairs: Vec<(Partition, ModelState)> =
+                    parts.iter().cloned().zip(slices).collect();
+                assert_eq!(flatten(&pairs).unwrap(), want, "r={r}");
+            }
         }
     }
 
@@ -153,10 +405,9 @@ mod tests {
     fn flatten_accepts_any_slice_order() {
         let n = 30;
         let want = state(n, 8);
-        let parts = partition_even(n, 3);
+        let parts = partition_hash(n, 3);
         let slices = repartition(&want, &parts).unwrap();
-        let mut pairs: Vec<(Partition, ModelState)> =
-            parts.iter().copied().zip(slices).collect();
+        let mut pairs: Vec<(Partition, ModelState)> = parts.iter().cloned().zip(slices).collect();
         pairs.reverse();
         assert_eq!(flatten(&pairs).unwrap(), want);
     }
@@ -168,25 +419,106 @@ mod tests {
         let parts = partition_even(n, 2);
         let slices = repartition(&s, &parts).unwrap();
         // gap: drop one slice
-        let gap = vec![(parts[1], slices[1].clone())];
+        let gap = vec![(parts[1].clone(), slices[1].clone())];
         assert!(flatten(&gap).is_err());
         // step skew
         let mut skew = slices[1].clone();
         skew.step += 1;
-        assert!(flatten(&[(parts[0], slices[0].clone()), (parts[1], skew)]).is_err());
+        assert!(
+            flatten(&[(parts[0].clone(), slices[0].clone()), (parts[1].clone(), skew)]).is_err()
+        );
     }
 
     #[test]
     fn reshard_4_to_2_preserves_every_coordinate() {
         let n = 64;
         let want = state(n, 4);
-        let four = repartition(&want, &partition_even(n, 4)).unwrap();
+        let four = repartition(&want, &partition_hash(n, 4)).unwrap();
         let pairs: Vec<(Partition, ModelState)> =
-            partition_even(n, 4).into_iter().zip(four).collect();
+            partition_hash(n, 4).into_iter().zip(four).collect();
         let flat = flatten(&pairs).unwrap();
-        let two = repartition(&flat, &partition_even(n, 2)).unwrap();
+        let two = repartition(&flat, &partition_hash(n, 2)).unwrap();
         let pairs2: Vec<(Partition, ModelState)> =
-            partition_even(n, 2).into_iter().zip(two).collect();
+            partition_hash(n, 2).into_iter().zip(two).collect();
         assert_eq!(flatten(&pairs2).unwrap(), want);
+    }
+
+    #[test]
+    fn interval_intersect_and_subtract_partition_the_input() {
+        let a = vec![Slice { offset: 0, len: 10 }, Slice { offset: 20, len: 10 }];
+        let b = vec![
+            Slice { offset: 5, len: 3 },
+            Slice { offset: 15, len: 7 }, // overlaps [20, 22)
+            Slice { offset: 28, len: 10 },
+        ];
+        let inter = intersect_slices(&a, &b);
+        assert_eq!(
+            inter,
+            vec![
+                Slice { offset: 5, len: 3 },
+                Slice { offset: 20, len: 2 },
+                Slice { offset: 28, len: 2 },
+            ]
+        );
+        let diff = subtract_slices(&a, &inter);
+        assert_eq!(
+            diff,
+            vec![
+                Slice { offset: 0, len: 5 },
+                Slice { offset: 8, len: 2 },
+                Slice { offset: 22, len: 6 },
+            ]
+        );
+        // inter ∪ diff tiles a exactly
+        let mut union: Vec<Slice> = inter.iter().chain(&diff).cloned().collect();
+        union.sort();
+        let total: usize = union.iter().map(|s| s.len).sum();
+        assert_eq!(total, a.iter().map(|s| s.len).sum::<usize>());
+    }
+
+    #[test]
+    fn interval_ops_property() {
+        crate::util::prop::prop_check("reshard_interval_ops", 64, |rng| {
+            // random sorted disjoint interval lists over [0, 200)
+            let mk = |rng: &mut Rng| {
+                let mut out: Vec<Slice> = Vec::new();
+                let mut pos = 0usize;
+                while pos + 2 < 200 {
+                    pos += rng.range(0, 10);
+                    let len = rng.range(1, 12);
+                    if pos + len > 200 {
+                        break;
+                    }
+                    out.push(Slice { offset: pos, len });
+                    pos += len;
+                }
+                out
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let inter = intersect_slices(&a, &b);
+            let sub = subtract_slices(&a, &inter);
+            // element-wise oracle
+            let in_set = |set: &[Slice], x: usize| set.iter().any(|s| s.offset <= x && x < s.end());
+            for x in 0..200 {
+                let want_inter = in_set(&a, x) && in_set(&b, x);
+                let want_sub = in_set(&a, x) && !in_set(&b, x);
+                crate::prop_assert!(in_set(&inter, x) == want_inter);
+                crate::prop_assert!(in_set(&sub, x) == want_sub);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slice_map_locates_every_element() {
+        let n = 500;
+        let parts = partition_hash(n, 5);
+        let map = SliceMap::new(&parts);
+        for g in 0..n {
+            let (r, l) = map.locate(g).expect("every element is owned");
+            assert_eq!(parts[r].global_of_local(l), g);
+        }
+        assert!(map.locate(n).is_none());
     }
 }

@@ -648,9 +648,15 @@ fn spawn_procs(
         StrategyKind::None => Procs::NoneAtAll,
         StrategyKind::TorchSave => Procs::Sync,
         StrategyKind::LowDiff if cfg.uses_cluster() => {
-            let parts = cluster::partition_layout(layout, cfg.ranks).unwrap_or_else(|e| {
-                log::warn!("tensor-boundary partitioning failed ({e:#}); splitting evenly");
-                cluster::partition_even(layout.n_params, cfg.ranks)
+            // consistent-hash slices: an R→R′ elastic event later remaps
+            // only ~|ΔR|/max(R, R′) of the parameters
+            let parts = cluster::partition_hash(layout.n_params, cfg.ranks);
+            // every spawn that re-anchors gets a fresh namespace
+            // generation — committed names of earlier incarnations (and
+            // half-written leftovers of crashed reshards) are immutable
+            let generation = cluster::next_generation(store).unwrap_or_else(|e| {
+                log::warn!("generation scan failed ({e:#}); starting at 0");
+                0
             });
             Procs::Cluster {
                 cluster: Cluster::spawn(
@@ -666,6 +672,7 @@ fn spawn_procs(
                         compact_every: cfg.compact_every,
                         io_budget: cfg.io_budget,
                         telemetry: bus.clone(),
+                        generation,
                     },
                 ),
             }
@@ -751,21 +758,20 @@ fn handle_failure(
         }
         (Procs::Cluster { cluster }, _) => {
             // any failure kills the rank processes and the coordinator;
-            // recovery is the consistent cut over the per-rank chains,
-            // with the reshard safety net as the crash-window fallback
+            // recovery is the consistent cut over the per-rank chains —
+            // generation-tagged namespaces mean a crashed reshard or
+            // re-anchor never touched the committed record's objects, so
+            // the plain cut walk always lands on a verified record
             drop(cluster);
-            match cluster::recover_cluster_or_net(store, sig, adam) {
+            match cluster::recover_cluster(store, sig, adam) {
                 Ok((s, stats)) => {
-                    if let Some(stats) = stats {
-                        log::debug!(
-                            "cluster recovery: cut step {} across {} ranks ({} diff steps)",
-                            stats.cut_step,
-                            stats.ranks,
-                            stats.diff_steps_applied
-                        );
-                    } else {
-                        log::debug!("cluster recovery: reshard safety net at step {}", s.step);
-                    }
+                    log::debug!(
+                        "cluster recovery: cut step {} (gen {}) across {} ranks ({} diff steps)",
+                        stats.cut_step,
+                        stats.cut_gen,
+                        stats.ranks,
+                        stats.diff_steps_applied
+                    );
                     // drop torn-commit stragglers from the lost timeline
                     let _ = cluster::truncate_stragglers(store, s.step);
                     Ok((s, false))
@@ -833,6 +839,7 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             report.bytes_written += cs.record_bytes;
             report.global_commits += cs.global_commits;
             report.torn_commits += cs.torn_commits;
+            report.gc_leaks += cs.gc_leaked;
             // scheduler-run compaction counters live on the cluster, not
             // any one rank's CkptStats
             report.merged_written += cs.merged_written;

@@ -57,6 +57,10 @@ pub struct RunReport {
     pub global_commits: u64,
     /// cluster runtime: epochs abandoned mid-commit (a rank write failed)
     pub torn_commits: u64,
+    /// cluster GC: objects it failed to delete with the object still
+    /// present afterwards (real I/O failures, not benign races — garbage
+    /// the operator should know is accumulating)
+    pub gc_leaks: u64,
     pub recoveries: u64,
     pub recovery_secs: f64,
     /// iterations lost to failures and re-run

@@ -178,10 +178,10 @@ fn merge_run(
         items.extend(decoded);
     }
     // the merged span lives in the same namespace as the raws it covers
-    // (rank-namespaced for cluster chains, top-level for flat chains)
-    let prefix = Manifest::parse_rank(&run[0].2)
-        .map(|(r, _)| Manifest::rank_prefix(r))
-        .unwrap_or_default();
+    // (generation/rank-namespaced for cluster chains, top-level for flat
+    // chains) — take the directory prefix of the run's first object so
+    // any namespace depth works
+    let prefix = run[0].2.rfind('/').map(|i| &run[0].2[..i + 1]).unwrap_or("");
     let name = format!("{prefix}{}", Manifest::merged_name(lo, hi));
     let bytes = write_merged(&items, cfg.model_sig, lo, hi, cfg.codec)?;
     store

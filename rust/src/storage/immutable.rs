@@ -1,0 +1,99 @@
+//! [`ImmutableStore`]: a test wrapper enforcing the generation-namespace
+//! immutability contract — once an object exists, a second `put` to the
+//! same name is an error, never a silent overwrite.
+//!
+//! The cluster commit protocol relies on committed names being immutable:
+//! a `GlobalRecord` pins its per-rank tips by CRC, and a re-anchor or
+//! reshard must write into a *fresh* generation rather than rewrite a
+//! committed object in place (the historical `reshard-net` overwrite
+//! window). Wrapping a test cluster's shared store in `ImmutableStore`
+//! turns any regression of that contract into an immediate failure at
+//! the offending `put`, instead of a CRC mismatch (or worse, silent
+//! corruption) discovered at recovery time.
+//!
+//! This is a *happy-path* harness: crash-retry flows legitimately
+//! re-write partially-written uncommitted objects after injected faults,
+//! so fault-injection suites should wrap only the regions they expect to
+//! be write-once — or not use this wrapper at all.
+
+use anyhow::{ensure, Result};
+
+use crate::storage::{StorageBackend, StorageStats};
+
+/// Rejects any `put`/`put_vectored` to a name that already exists on the
+/// inner store. All other operations forward unchanged.
+pub struct ImmutableStore<B: StorageBackend> {
+    inner: B,
+}
+
+impl<B: StorageBackend> ImmutableStore<B> {
+    pub fn new(inner: B) -> ImmutableStore<B> {
+        ImmutableStore { inner }
+    }
+}
+
+impl<B: StorageBackend> StorageBackend for ImmutableStore<B> {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        ensure!(
+            !self.inner.exists(name),
+            "immutability violation: put to existing object {name}"
+        );
+        self.inner.put(name, bytes)
+    }
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        self.inner.get(name)
+    }
+    fn delete(&self, name: &str) -> Result<()> {
+        self.inner.delete(name)
+    }
+    fn list(&self) -> Result<Vec<String>> {
+        self.inner.list()
+    }
+    fn exists(&self, name: &str) -> bool {
+        self.inner.exists(name)
+    }
+    fn put_vectored(&self, name: &str, parts: &[&[u8]]) -> Result<()> {
+        ensure!(
+            !self.inner.exists(name),
+            "immutability violation: put_vectored to existing object {name}"
+        );
+        self.inner.put_vectored(name, parts)
+    }
+    fn demote(&self, name: &str) -> Result<bool> {
+        self.inner.demote(name)
+    }
+    fn storage_stats(&self) -> StorageStats {
+        self.inner.storage_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    #[test]
+    fn second_put_to_same_name_errors() {
+        let s = ImmutableStore::new(MemStore::new());
+        s.put("gen-0000/rank-0000/full-000000000000.ldck", b"a").unwrap();
+        let err = s
+            .put("gen-0000/rank-0000/full-000000000000.ldck", b"b")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("immutability violation"), "{err}");
+        // the committed bytes are untouched
+        assert_eq!(s.get("gen-0000/rank-0000/full-000000000000.ldck").unwrap(), b"a");
+        // vectored path enforces the same contract
+        assert!(s.put_vectored("gen-0000/rank-0000/full-000000000000.ldck", &[b"c"]).is_err());
+    }
+
+    #[test]
+    fn delete_then_put_is_allowed() {
+        // GC legitimately frees a name; immutability is per live object
+        let s = ImmutableStore::new(MemStore::new());
+        s.put("x", b"1").unwrap();
+        s.delete("x").unwrap();
+        s.put("x", b"2").unwrap();
+        assert_eq!(s.get("x").unwrap(), b"2");
+    }
+}

@@ -35,10 +35,13 @@
 //! - [`Tiered`]: a fast tier (e.g. [`MemStore`]) over a durable tier with
 //!   asynchronous spill and read-through on recovery.
 //! - [`Namespaced`]: a prefix-scoped view of a shared backend — each
-//!   cluster rank writes its private `rank-{r:04}/` chain through one of
-//!   these (see [`crate::cluster`]).
+//!   cluster rank writes its private `gen-{g:04}/rank-{r:04}/` chain
+//!   through one of these (see [`crate::cluster`]).
 //! - [`FaultyStore`]: deterministic fault injection (put/get errors,
 //!   truncated "torn" writes) for the crash-consistency test suite.
+//! - [`ImmutableStore`]: test harness rejecting any `put` to an existing
+//!   name — enforces the committed-names-are-immutable contract the
+//!   cluster's generation namespaces rely on.
 //!
 //! # Failure model
 //!
@@ -58,6 +61,7 @@
 //! See `docs/STORAGE.md` for the full design discussion.
 
 mod faulty;
+mod immutable;
 mod local;
 mod mem;
 mod namespaced;
@@ -67,6 +71,7 @@ mod throttled;
 mod tiered;
 
 pub use faulty::{FaultConfig, FaultCounts, FaultyStore};
+pub use immutable::ImmutableStore;
 pub use local::LocalDir;
 pub use mem::MemStore;
 pub use namespaced::Namespaced;

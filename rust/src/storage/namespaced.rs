@@ -2,9 +2,10 @@
 //! namespace over a shared store.
 //!
 //! The cluster runtime gives every rank its own chain under
-//! `rank-{r:04}/` (see [`Manifest::rank_prefix`]
-//! (crate::checkpoint::manifest::Manifest::rank_prefix)): rank `r` writes
-//! through `Namespaced::new(store, Manifest::rank_prefix(r))` and sees a
+//! `gen-{g:04}/rank-{r:04}/` (see [`Manifest::gen_rank_prefix`]
+//! (crate::checkpoint::manifest::Manifest::gen_rank_prefix)): rank `r` of
+//! generation `g` writes through
+//! `Namespaced::new(store, Manifest::gen_rank_prefix(g, r))` and sees a
 //! plain flat store, while the underlying backend holds every rank's
 //! objects side by side plus the top-level global commit records. `list`
 //! returns only (and strips) the prefix, so per-namespace chain discovery

@@ -5,27 +5,37 @@
 //! 1. with a rank's writes killed mid-commit, recovery returns a
 //!    **bit-identical** global state at the last fully-committed epoch
 //!    (the consistent cut);
-//! 2. elastic restart R=4 → R′=2 yields a flattened model/optimizer state
-//!    identical to the R=4 consistent cut, and the resharded chain
-//!    extends it bit-identically;
+//! 2. elastic restart (shrink R=4 → R′=2, grow R=4 → R′=6) writes only
+//!    into a fresh generation namespace — carries + re-cut spans, no full
+//!    re-anchor burst — and the resharded chain extends the cut
+//!    bit-identically; a crash before the reshard's record leaves the old
+//!    generation's record fully recoverable (the overwrite window is
+//!    gone, no flat safety-net object exists);
 //! 3. cluster GC **never deletes any object reachable from the newest
-//!    complete global record** — across rank namespaces, under random
-//!    junk (torn records, stragglers, defunct namespaces). Property test.
+//!    complete global record** — across generation namespaces, under
+//!    random junk (torn records, stragglers, defunct generations, legacy
+//!    flat-rank leftovers). While a live base is a carry, its source
+//!    generations are frozen; the first full epoch drops them wholesale.
+//!
+//! Happy-path suites run over [`ImmutableStore`], which errors on any put
+//! to an existing name: the whole commit/compact/reshard flow must never
+//! rewrite a committed object.
 
 use std::sync::Arc;
 
 use lowdiff::checkpoint::format::model_signature;
 use lowdiff::checkpoint::manifest::Manifest;
-use lowdiff::cluster::commit::find_consistent_cut;
 use lowdiff::cluster::{
-    elastic_restart, gc_cluster, partition_even, recover_cluster, recover_cluster_or_net,
-    truncate_stragglers, Cluster, ClusterConfig,
+    elastic_restart, find_consistent_cut, gc_cluster, partition_even, partition_hash,
+    recover_cluster, truncate_stragglers, Cluster, ClusterConfig,
 };
 use lowdiff::compress::topk_mask;
 use lowdiff::optim::{Adam, ModelState};
 use lowdiff::prop_assert;
 use lowdiff::sparse::SparseGrad;
-use lowdiff::storage::{FaultConfig, FaultyStore, MemStore, Namespaced, StorageBackend};
+use lowdiff::storage::{
+    FaultConfig, FaultyStore, ImmutableStore, MemStore, Namespaced, StorageBackend,
+};
 use lowdiff::tensor::Flat;
 use lowdiff::util::prop::prop_check;
 use lowdiff::util::rng::Rng;
@@ -67,13 +77,13 @@ fn drive(
 fn consistent_cut_is_bit_identical_when_a_rank_dies_mid_commit() {
     let n = 192;
     let sig = model_signature("cluster-t", n);
-    let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let inner: Arc<dyn StorageBackend> = Arc::new(ImmutableStore::new(MemStore::new()));
     let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
     let shared = Arc::clone(&inner);
     // rank 2's namespace dies after 6 writes (anchor + diffs 1..=5); the
     // other three ranks keep writing — exactly a rank death mid-commit
     let cluster = Cluster::spawn_with(Arc::clone(&inner), partition_even(n, 4), cfg, move |r| {
-        let ns = Namespaced::new(Arc::clone(&shared), Manifest::rank_prefix(r));
+        let ns = Namespaced::new(Arc::clone(&shared), Manifest::gen_rank_prefix(0, r));
         if r == 2 {
             Arc::new(FaultyStore::new(
                 ns,
@@ -90,6 +100,7 @@ fn consistent_cut_is_bit_identical_when_a_rank_dies_mid_commit() {
 
     let (got, cut) = recover_cluster(&inner, sig, &Adam::default()).unwrap();
     assert_eq!(cut.cut_step, 5, "consistent cut = last fully-committed epoch");
+    assert_eq!(cut.cut_gen, 0);
     assert_eq!(cut.ranks, 4);
     assert_eq!(got, timeline[5], "bit-identical state at the cut");
 
@@ -103,10 +114,10 @@ fn consistent_cut_is_bit_identical_when_a_rank_dies_mid_commit() {
 }
 
 #[test]
-fn elastic_restart_4_to_2_preserves_the_consistent_cut() {
+fn elastic_restart_4_to_2_carries_state_into_a_fresh_generation() {
     let n = 160;
     let sig = model_signature("cluster-e", n);
-    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let store: Arc<dyn StorageBackend> = Arc::new(ImmutableStore::new(MemStore::new()));
     let cfg = ClusterConfig { model_sig: sig, ..ClusterConfig::default() };
     let c4 = Cluster::spawn(Arc::clone(&store), partition_even(n, 4), cfg.clone());
     let timeline = drive(&c4, n, 6, None, 9);
@@ -116,18 +127,30 @@ fn elastic_restart_4_to_2_preserves_the_consistent_cut() {
 
     // reference: recover the R=4 cut directly
     let (ref4, cut4) = recover_cluster(&store, sig, &Adam::default()).unwrap();
-    assert_eq!(cut4.cut_step, 6);
-    assert_eq!(cut4.ranks, 4);
+    assert_eq!((cut4.cut_gen, cut4.cut_step, cut4.ranks), (0, 6, 4));
     assert_eq!(ref4, timeline[6]);
 
     // elastic restart with R' = 2: the record, not the caller, knows R
     let (c2, state, cut) =
-        elastic_restart(&store, &Adam::default(), partition_even(n, 2), cfg).unwrap();
+        elastic_restart(&store, &Adam::default(), partition_even(n, 2), cfg.clone()).unwrap();
     assert_eq!(cut.ranks, 4, "cut was written by 4 ranks");
     assert_eq!(cut.cut_step, 6);
     assert_eq!(state, ref4, "flattened R=4 cut == resharded start state");
 
-    // continue training on 2 ranks from the re-anchored cut
+    // the reshard wrote carries + re-cut spans into generation 1 only —
+    // no full re-anchor burst
+    let names = store.list().unwrap();
+    for r in 0..2usize {
+        let p = Manifest::gen_rank_prefix(1, r);
+        assert!(names.contains(&format!("{p}{}", Manifest::carry_name(0))), "rank {r} carry");
+        assert!(names.contains(&format!("{p}{}", Manifest::merged_name(1, 6))), "rank {r} span");
+        assert!(
+            !names.contains(&format!("{p}{}", Manifest::full_name(6))),
+            "rank {r} wrote a full re-anchor burst"
+        );
+    }
+
+    // continue training on 2 ranks from the carried cut
     let adam = Adam::default();
     let mut rng = Rng::new(77);
     let mut expect = state.clone();
@@ -141,19 +164,81 @@ fn elastic_restart_4_to_2_preserves_the_consistent_cut() {
     assert_eq!(s2.per_rank.len(), 2);
 
     let (got, cut2) = recover_cluster(&store, sig, &Adam::default()).unwrap();
-    assert_eq!(cut2.cut_step, 8);
+    assert_eq!((cut2.cut_gen, cut2.cut_step), (1, 8));
     assert_eq!(cut2.ranks, 2, "newest record carries the new partition table");
     assert_eq!(got, expect, "post-reshard chain extends the cut bit-identically");
 
-    // defunct namespaces (ranks 2,3 of the old run) are reclaimable garbage
-    gc_cluster(&store, sig).unwrap();
-    for name in store.list().unwrap() {
-        if let Some((r, _)) = Manifest::parse_rank(&name) {
-            assert!(r < 2, "defunct namespace object survived gc: {name}");
-        }
-    }
+    // while the live base is a carry, its source generation is FROZEN:
+    // gc must leave generation 0 alone (the carry resolves through it)
+    let gc = gc_cluster(&store, sig).unwrap();
+    assert_eq!(gc.leaked, 0);
+    assert!(
+        store.exists(&format!("{}{}", Manifest::gen_rank_prefix(0, 0), Manifest::full_name(0))),
+        "carry-referenced generation must stay frozen"
+    );
     let (after_gc, _) = recover_cluster(&store, sig, &Adam::default()).unwrap();
     assert_eq!(after_gc, expect);
+
+    // the first full epoch in a fresh generation re-bases the chain and
+    // releases the freeze: both old generations drop WHOLESALE
+    let c3 = Cluster::spawn(
+        Arc::clone(&store),
+        partition_even(n, 2),
+        ClusterConfig { generation: 2, ..cfg },
+    );
+    c3.put_full(8, &expect);
+    let s3 = c3.finish();
+    assert_eq!((s3.global_commits, s3.torn_commits), (1, 0));
+    assert!(s3.gc_removed > 0, "the full-epoch commit swept the old generations");
+    assert_eq!(s3.gc_leaked, 0);
+    for name in store.list().unwrap() {
+        if let Some((g, _)) = Manifest::parse_gen(&name) {
+            assert_eq!(g, 2, "stale generation object survived the drop: {name}");
+        }
+        if let Some((g, _)) = Manifest::parse_global(&name) {
+            assert_eq!(g, 2, "stale global record survived the drop: {name}");
+        }
+    }
+    let (fin, cut3) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!((cut3.cut_gen, cut3.cut_step), (2, 8));
+    assert_eq!(fin, expect);
+}
+
+#[test]
+fn elastic_grow_with_hash_partitions_adds_ranks_via_moved_in_carries() {
+    // R=4 → R′=6 over consistent-hash tables: the two brand-new ranks
+    // start from carries whose whole slice moved in (no back-reference),
+    // retained ranks carry mostly by reference — and the grow event
+    // recovers bit-identically
+    let n = 2048;
+    let sig = model_signature("cluster-g", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(ImmutableStore::new(MemStore::new()));
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let c4 = Cluster::spawn(Arc::clone(&store), partition_hash(n, 4), cfg.clone());
+    let timeline = drive(&c4, n, 5, None, 13);
+    let s4 = c4.finish();
+    assert_eq!(s4.torn_commits, 0);
+
+    let (c6, state, cut) =
+        elastic_restart(&store, &Adam::default(), partition_hash(n, 6), cfg).unwrap();
+    assert_eq!((cut.cut_gen, cut.cut_step, cut.ranks), (0, 5, 4));
+    assert_eq!(state, timeline[5]);
+
+    let adam = Adam::default();
+    let mut rng = Rng::new(31);
+    let mut expect = state.clone();
+    for step in 6..=7u64 {
+        let g = grad(&mut rng, n);
+        c6.put_diff_dense(step, &g);
+        adam.apply_sparse(&mut expect, &SparseGrad::from_dense(&g));
+    }
+    let s6 = c6.finish();
+    assert_eq!(s6.torn_commits, 0);
+    assert_eq!(s6.per_rank.len(), 6);
+
+    let (got, cut2) = recover_cluster(&store, sig, &Adam::default()).unwrap();
+    assert_eq!((cut2.cut_gen, cut2.cut_step, cut2.ranks), (1, 7, 6));
+    assert_eq!(got, expect, "grow event recovers bit-identically");
 }
 
 #[test]
@@ -168,6 +253,7 @@ fn sharded_rank_engines_with_gc_keep_only_the_live_chain() {
     assert_eq!(stats.torn_commits, 0);
     assert_eq!(stats.global_commits, 8, "anchor + 6 diffs + mid-run full");
     assert!(stats.gc_removed > 0, "the mid-run full's commit swept the old chain");
+    assert_eq!(stats.gc_leaked, 0, "every sweep delete must actually land");
     assert!(stats.total().shard_writes > 0, "per-rank sharded engines exercised");
 
     let (got, cut) = recover_cluster(&store, sig, &Adam::default()).unwrap();
@@ -177,8 +263,8 @@ fn sharded_rank_engines_with_gc_keep_only_the_live_chain() {
 
 #[test]
 fn gc_never_deletes_the_chain_you_would_recover_from() {
-    // The satellite invariant, across rank namespaces: whatever junk the
-    // store holds, gc preserves every object reachable from the newest
+    // The satellite invariant, across generation namespaces: whatever junk
+    // the store holds, gc preserves every object reachable from the newest
     // complete global record, and recovery is unchanged afterwards.
     prop_check("cluster_gc_reachability", 10, |rng| {
         let ranks = rng.range(1, 4);
@@ -194,13 +280,16 @@ fn gc_never_deletes_the_chain_you_would_recover_from() {
         prop_assert!(stats.torn_commits == 0);
 
         // junk: a torn newer record, a straggler diff beyond the cut (an
-        // epoch still committing), and a defunct namespace from an older
-        // timeline
-        let straggler = format!("{}{}", Manifest::rank_prefix(0), Manifest::diff_name(steps + 1));
-        let defunct = format!("{}{}", Manifest::rank_prefix(9), Manifest::full_name(0));
-        store.put(&Manifest::global_name(steps + 1), b"garbage-not-a-record").unwrap();
+        // epoch still committing), a defunct foreign generation from an
+        // older timeline, and a legacy flat-rank leftover
+        let straggler =
+            format!("{}{}", Manifest::gen_rank_prefix(0, 0), Manifest::diff_name(steps + 1));
+        let defunct = format!("{}{}", Manifest::gen_rank_prefix(7, 9), Manifest::full_name(0));
+        let legacy = format!("{}{}", Manifest::rank_prefix(9), Manifest::full_name(0));
+        store.put(&Manifest::global_name(0, steps + 1), b"garbage-not-a-record").unwrap();
         store.put(&straggler, b"phase-1-of-next-epoch").unwrap();
         store.put(&defunct, b"old-timeline").unwrap();
+        store.put(&legacy, b"pre-generation-layout").unwrap();
 
         let (before, cut_b) =
             recover_cluster(&store, sig, &Adam::default()).map_err(|e| format!("{e:#}"))?;
@@ -211,15 +300,17 @@ fn gc_never_deletes_the_chain_you_would_recover_from() {
         let reachable: Vec<String> = chains.iter().flat_map(|c| c.objects.clone()).collect();
         prop_assert!(!reachable.is_empty());
 
-        gc_cluster(&store, sig).map_err(|e| format!("{e:#}"))?;
+        let gc = gc_cluster(&store, sig).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(gc.leaked == 0, "a MemStore delete can never leak");
 
         for name in &reachable {
             prop_assert!(store.exists(name), "gc deleted reachable object {name}");
         }
-        prop_assert!(store.exists(&Manifest::global_name(cut_b.cut_step)));
+        prop_assert!(store.exists(&Manifest::global_name(0, cut_b.cut_step)));
         prop_assert!(store.exists(&straggler), "beyond-cut objects are in-flight, not garbage");
-        prop_assert!(!store.exists(&Manifest::global_name(steps + 1)), "torn record swept");
-        prop_assert!(!store.exists(&defunct), "defunct namespace swept");
+        prop_assert!(!store.exists(&Manifest::global_name(0, steps + 1)), "torn record swept");
+        prop_assert!(!store.exists(&defunct), "defunct foreign generation swept");
+        prop_assert!(!store.exists(&legacy), "legacy flat-rank namespace swept");
 
         let (after, cut_a) =
             recover_cluster(&store, sig, &Adam::default()).map_err(|e| format!("{e:#}"))?;
@@ -238,7 +329,7 @@ fn coordinator_compaction_bounds_replay_and_recovers_bit_identically() {
     let n = 128;
     let steps = 8u64;
     let sig = model_signature("cluster-cmp", n);
-    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let store: Arc<dyn StorageBackend> = Arc::new(ImmutableStore::new(MemStore::new()));
     let cfg = ClusterConfig {
         model_sig: sig,
         gc: false,
@@ -263,7 +354,7 @@ fn coordinator_compaction_bounds_replay_and_recovers_bit_identically() {
 
     let names = store.list().unwrap();
     for r in 0..2usize {
-        let chain = Manifest::rank_chain(&names, r, steps);
+        let chain = Manifest::gen_rank_chain(&names, 0, r, steps);
         // + 2: the newest AND the previous record's tips stay raw so a
         // one-deep record fallback keeps its CRC-pinned tip objects
         assert!(
@@ -292,7 +383,7 @@ fn coordinator_compaction_bounds_replay_and_recovers_bit_identically() {
 }
 
 /// Fails `global-*` record puts while armed — the crash window between
-/// the re-anchor's rank-namespace overwrites and the new record.
+/// the reshard's generation-namespace writes and its commit record.
 struct FailGlobals<B: StorageBackend> {
     inner: B,
     armed: std::sync::atomic::AtomicBool,
@@ -318,12 +409,14 @@ impl<B: StorageBackend> StorageBackend for FailGlobals<B> {
 }
 
 #[test]
-fn reshard_crash_window_is_fail_safed_by_the_flat_net() {
-    // PR-3's documented residual window: when the cut epoch is a FULL at
-    // step S, the re-anchor overwrites `rank-*/full-{S}` in place; a crash
-    // before the new record lands invalidates the old record's tips and
-    // recovery regresses behind the cut. The safety-net full written by
-    // elastic_restart (before any overwrite) fail-safes it.
+fn reshard_crash_before_the_record_leaves_the_old_generation_intact() {
+    // THE overwrite window this PR closes: under the flat layout a
+    // re-anchor overwrote `rank-*/full-{S}` in place, so a crash before
+    // the new record regressed recovery behind the cut (a dedicated
+    // safety-net object papered over it). Generation namespaces make the
+    // reshard write-only into gen g+1: killing its record write must
+    // leave the OLD generation's record fully recoverable, and the retry
+    // must commit gen g+1 — never torn, no net object anywhere.
     let n = 96;
     let sig = model_signature("cluster-w", n);
     let gate = Arc::new(FailGlobals { inner: MemStore::new(), armed: Default::default() });
@@ -331,7 +424,8 @@ fn reshard_crash_window_is_fail_safed_by_the_flat_net() {
     let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
     let adam = Adam::default();
 
-    // phase 1: a healthy 2-rank run whose cut epoch is a FULL at step 3
+    // phase 1: a healthy 2-rank run whose cut epoch is a FULL at step 3 —
+    // exactly the schedule the old layout re-anchored in place
     let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 2), cfg.clone());
     let mut rng = Rng::new(7);
     let mut state = ModelState::new(Flat(vec![0.5; n]));
@@ -346,26 +440,45 @@ fn reshard_crash_window_is_fail_safed_by_the_flat_net() {
     cluster.put_full(3, &state);
     let stats = cluster.finish();
     assert_eq!(stats.torn_commits, 0);
+    let before: std::collections::HashSet<String> = store.list().unwrap().into_iter().collect();
 
-    // phase 2: the re-anchor overwrites rank-0000/full-3 under the NEW
-    // 1-rank partitioning, then the record write is killed — exactly the
-    // racing-crash schedule inside the window
+    // phase 2: the reshard's single commit point (the gen-1 record) is
+    // killed
     gate.armed.store(true, std::sync::atomic::Ordering::SeqCst);
-    let res = elastic_restart(&store, &adam, partition_even(n, 1), cfg);
-    assert!(res.is_err(), "the torn re-anchor must surface");
+    let res = elastic_restart(&store, &adam, partition_even(n, 1), cfg.clone());
+    assert!(res.is_err(), "the torn reshard must surface");
     drop(res);
 
-    // the pure cluster walk demonstrates the regression the window causes…
-    let (_, old_cut) = recover_cluster(&store, sig, &adam).unwrap();
-    assert_eq!(old_cut.cut_step, 2, "cluster-only recovery regresses behind the cut");
-    // …and the fail-safe recovers the full cut, bit-identically. A stale
-    // flat chain on the reused store must NOT be trusted — only the
-    // dedicated net object is
+    // nothing of the old generation was touched: every pre-crash object
+    // is intact, and every new object lives under gen 1
+    for name in store.list().unwrap() {
+        if !before.contains(&name) {
+            assert!(
+                name.starts_with("gen-0001/"),
+                "reshard wrote outside its fresh generation: {name}"
+            );
+        }
+    }
+    for name in &before {
+        assert!(store.exists(name), "reshard touched committed object {name}");
+    }
+
+    // recovery lands on the OLD generation's cut, bit-identically — no
+    // regression, even with stale flat garbage on the reused store
     store.put(&Manifest::full_name(100), b"stale-flat-timeline-garbage").unwrap();
-    let (got, cut) = recover_cluster_or_net(&store, sig, &adam).unwrap();
-    assert!(cut.is_none(), "the reshard safety net must win");
-    assert_eq!(got.step, 3, "the net, not the stale flat chain, decides");
-    assert_eq!(got, timeline[3], "the cut survives the crash window");
+    let (got, cut) = recover_cluster(&store, sig, &adam).unwrap();
+    assert_eq!((cut.cut_gen, cut.cut_step), (0, 3), "the old generation's record still wins");
+    assert_eq!(got, timeline[3], "the cut survives the crash window bit-identically");
+
+    // retry once record writes flow again: generation 1 is rebuilt
+    // deterministically and committed; recovery flips over to it
+    gate.armed.store(false, std::sync::atomic::Ordering::SeqCst);
+    let (c1, resharded, _) = elastic_restart(&store, &adam, partition_even(n, 1), cfg).unwrap();
+    assert_eq!(resharded, timeline[3]);
+    c1.finish();
+    let (again, cut2) = recover_cluster(&store, sig, &adam).unwrap();
+    assert_eq!((cut2.cut_gen, cut2.cut_step), (1, 3), "the retry commits generation 1");
+    assert_eq!(again, timeline[3]);
 }
 
 #[test]
@@ -381,10 +494,10 @@ fn recovery_skips_a_torn_global_record_and_falls_back() {
     let stats = cluster.finish();
     assert_eq!(stats.global_commits, 5);
 
-    let mut bytes = store.get(&Manifest::global_name(4)).unwrap();
+    let mut bytes = store.get(&Manifest::global_name(0, 4)).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0xFF;
-    store.put(&Manifest::global_name(4), &bytes).unwrap();
+    store.put(&Manifest::global_name(0, 4), &bytes).unwrap();
 
     let (got, cut) = recover_cluster(&store, sig, &Adam::default()).unwrap();
     assert_eq!(cut.cut_step, 3, "torn record skipped, previous epoch wins");

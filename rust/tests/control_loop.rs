@@ -281,13 +281,13 @@ fn demote_forwards_through_rank_namespaces() {
     ));
     let ns = Namespaced::new(
         Arc::clone(&tiered) as Arc<dyn StorageBackend>,
-        Manifest::rank_prefix(3),
+        Manifest::gen_rank_prefix(0, 3),
     );
     let name = Manifest::diff_name(7);
     ns.put(&name, b"tip").unwrap();
     tiered.wait_idle();
     assert!(ns.demote(&name).unwrap(), "demote must forward through the namespace");
-    let full_name = format!("{}{name}", Manifest::rank_prefix(3));
+    let full_name = format!("{}{name}", Manifest::gen_rank_prefix(0, 3));
     assert!(!fast.exists(&full_name), "fast copy dropped");
     assert!(durable.exists(&full_name), "durable copy kept");
     assert_eq!(ns.get(&name).unwrap(), b"tip", "still readable through the namespace");
@@ -337,7 +337,7 @@ fn cluster_over_tiered_store_demotes_protected_tips() {
     assert_eq!(stats.tips_demoted, tiered.demoted());
     // fresh merged spans stay pinned in the fast tier
     for r in 0..2usize {
-        let prefix = Manifest::rank_prefix(r);
+        let prefix = Manifest::gen_rank_prefix(0, r);
         let spans: Vec<String> = fast
             .list()
             .unwrap()

@@ -1,0 +1,177 @@
+//! Elastic-reshard crash sweep: the reshard must be atomic at its single
+//! commit point (the new generation's global record).
+//!
+//! The sweep freezes a crash at **every put boundary** inside
+//! [`elastic_restart`] — after 0, 1, …, all of its writes — and proves
+//! that recovery from the crashed store always lands bit-identically on
+//! the consistent cut, on a *complete* generation: the old one while the
+//! record hasn't landed, the new one after it. Never torn, never
+//! regressed, and always retryable.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::cluster::{
+    elastic_restart, partition_hash, recover_cluster, Cluster, ClusterConfig,
+};
+use lowdiff::compress::topk_mask;
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{FaultConfig, FaultyStore, MemStore, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+/// Allows exactly `limit` puts, then fails every later one — a crash
+/// frozen at a precise *write* boundary. Unlike [`FaultyStore`], whose
+/// grace window counts every operation, reads and deletes pass through
+/// uncounted, so boundary `k` always means "the reshard's k-th write".
+struct FailAfterPuts<B: StorageBackend> {
+    inner: B,
+    limit: usize,
+    puts: AtomicUsize,
+}
+
+impl<B: StorageBackend> StorageBackend for FailAfterPuts<B> {
+    fn put(&self, name: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.puts.fetch_add(1, Ordering::SeqCst) < self.limit,
+            "injected crash at put boundary {} ({name})",
+            self.limit
+        );
+        self.inner.put(name, bytes)
+    }
+    fn get(&self, name: &str) -> anyhow::Result<Vec<u8>> {
+        self.inner.get(name)
+    }
+    fn delete(&self, name: &str) -> anyhow::Result<()> {
+        self.inner.delete(name)
+    }
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        self.inner.list()
+    }
+}
+
+fn grad(rng: &mut Rng, n: usize) -> Flat {
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g);
+    topk_mask(&Flat(g), n / 8 + 1)
+}
+
+/// Anchor full + `steps` diff epochs on a fresh cluster over `store`.
+fn seed_run(store: &Arc<dyn StorageBackend>, cfg: &ClusterConfig, n: usize, ranks: usize, steps: u64) {
+    let cluster = Cluster::spawn(Arc::clone(store), partition_hash(n, ranks), cfg.clone());
+    let adam = Adam::default();
+    let mut rng = Rng::new(41);
+    let mut state = ModelState::new(Flat(vec![0.5; n]));
+    cluster.put_full(0, &state);
+    for step in 1..=steps {
+        let g = grad(&mut rng, n);
+        cluster.put_diff_dense(step, &g);
+        adam.apply_sparse(&mut state, &SparseGrad::from_dense(&g));
+    }
+    cluster.finish();
+}
+
+fn clone_store(src: &Arc<dyn StorageBackend>) -> MemStore {
+    let dst = MemStore::new();
+    for name in src.list().unwrap() {
+        dst.put(&name, &src.get(&name).unwrap()).unwrap();
+    }
+    dst
+}
+
+#[test]
+fn crash_at_every_put_boundary_recovers_untorn_on_old_or_new_generation() {
+    let n = 2048;
+    let new_ranks = 2usize;
+    let sig = model_signature("reshard-crash", n);
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let base: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    seed_run(&base, &cfg, n, 3, 4);
+    let (cut_state, cut) = recover_cluster(&base, sig, &Adam::default()).unwrap();
+    assert_eq!((cut.cut_gen, cut.cut_step), (0, 4));
+
+    // the incremental fast path writes exactly one carry + one re-cut
+    // span per new rank, then the record — the single commit point
+    let total_puts = 2 * new_ranks + 1;
+    for k in 0..=total_puts {
+        let inner = Arc::new(clone_store(&base));
+        let faulty: Arc<dyn StorageBackend> = Arc::new(FailAfterPuts {
+            inner: Arc::clone(&inner),
+            limit: k,
+            puts: AtomicUsize::new(0),
+        });
+        let res =
+            elastic_restart(&faulty, &Adam::default(), partition_hash(n, new_ranks), cfg.clone());
+        let plain: Arc<dyn StorageBackend> = inner;
+        if k < total_puts {
+            assert!(res.is_err(), "crash at put {k} must surface");
+        } else {
+            let (c2, st, _) = res.expect("all writes allowed: the reshard must commit");
+            assert_eq!(st, cut_state, "committed reshard state diverged");
+            c2.finish();
+        }
+
+        // the invariant: wherever the crash froze the reshard, recovery
+        // is bit-identical to the cut on a COMPLETE generation — the old
+        // one before the record landed, the new one after
+        let (got, c) = recover_cluster(&plain, sig, &Adam::default()).unwrap();
+        assert_eq!(c.cut_step, 4, "crash at put {k}: recovery regressed behind the cut");
+        let expect_gen = if k < total_puts { 0 } else { 1 };
+        assert_eq!(c.cut_gen, expect_gen, "crash at put {k}: wrong surviving generation");
+        assert_eq!(got, cut_state, "crash at put {k}: recovery not bit-identical");
+
+        // …and the interrupted reshard retries to completion on the
+        // crashed store, flipping recovery onto the new generation
+        if k < total_puts {
+            let (c2, st, _) =
+                elastic_restart(&plain, &Adam::default(), partition_hash(n, new_ranks), cfg.clone())
+                    .unwrap();
+            assert_eq!(st, cut_state, "crash at put {k}: retry state diverged");
+            c2.finish();
+            let (again, rcut) = recover_cluster(&plain, sig, &Adam::default()).unwrap();
+            assert_eq!((rcut.cut_gen, rcut.cut_step), (1, 4), "crash at put {k}: retry");
+            assert_eq!(again, cut_state, "crash at put {k}: retry recovery diverged");
+        }
+    }
+}
+
+#[test]
+fn graced_fault_injection_sweep_never_tears_the_reshard() {
+    // FaultyStore's grace window counts every operation (reads included),
+    // so sweeping it lands the crash at arbitrary points around the put
+    // boundaries the test above pins exactly — including inside the cut
+    // search. Soundness must hold wherever it lands: either the reshard
+    // never started writing (old generation recovers) or its record
+    // committed (new generation recovers); nothing in between is visible.
+    let n = 1024;
+    let sig = model_signature("reshard-grace", n);
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let base: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    seed_run(&base, &cfg, n, 2, 3);
+    let (cut_state, cut) = recover_cluster(&base, sig, &Adam::default()).unwrap();
+    assert_eq!((cut.cut_gen, cut.cut_step), (0, 3));
+
+    let mut committed = 0usize;
+    for grace in (0..=60u64).chain([100_000]) {
+        let inner = Arc::new(clone_store(&base));
+        let faulty: Arc<dyn StorageBackend> = Arc::new(FaultyStore::new(
+            Arc::clone(&inner),
+            FaultConfig { put_fail: 1.0, grace_ops: grace, ..FaultConfig::default() },
+        ));
+        let res = elastic_restart(&faulty, &Adam::default(), partition_hash(n, 3), cfg.clone());
+        let ok = res.is_ok();
+        if let Ok((c3, st, _)) = res {
+            assert_eq!(st, cut_state, "grace {grace}: committed state diverged");
+            c3.finish();
+            committed += 1;
+        }
+        let plain: Arc<dyn StorageBackend> = inner;
+        let (got, c) = recover_cluster(&plain, sig, &Adam::default()).unwrap();
+        assert_eq!(c.cut_step, 3, "grace {grace}: recovery regressed behind the cut");
+        assert_eq!(c.cut_gen, if ok { 1 } else { 0 }, "grace {grace}: torn generation visible");
+        assert_eq!(got, cut_state, "grace {grace}: recovery not bit-identical");
+    }
+    assert!(committed >= 1, "the unbounded-grace run must commit the reshard");
+}
