@@ -1,12 +1,15 @@
-//! Chain-compaction bench: recovery replay cost over a 64-diff chain,
-//! uncompacted vs background-compacted at merge factors 4 and 8, plus the
-//! compactor's own pass cost.
+//! Hierarchical chain-compaction bench: recovery replay cost over
+//! full-free diff chains (one anchor full, `full_every = ∞`), uncompacted
+//! vs background-compacted at merge factors 4 and 8, plus a 512-diff
+//! full-free section measuring the `mf·⌈log_mf n⌉+1` replay bound and the
+//! steady-state write bytes against a periodic-full baseline.
 //!
-//! The headline metric is **replay objects touched** (deterministic:
-//! `⌈n/mf⌉` after a full compaction of a divisible chain, vs `n` raw) —
-//! the `R_D`-side quantity the §V-C tuner's `observe_compaction` feedback
-//! models. Wall times are machine-dependent and reported for context.
-//! Bit-identity of the recovered state is asserted on every run.
+//! The headline metric is **replay objects touched** (deterministic: the
+//! level-k hierarchy leaves at most `mf−1` spans per level, so a replay
+//! fetches O(log_mf n) objects on an unbounded chain) — the `R_D`-side
+//! quantity the §V-C tuner's hierarchical merge-factor policy targets.
+//! Wall times are machine-dependent and reported for context. Bit-identity
+//! of the recovered state is asserted on every run.
 //!
 //! Run: `cargo bench --bench compaction`; baseline in
 //! `BENCH_compaction.json`. Compaction-vs-checkpoint-write *interference*
@@ -18,23 +21,32 @@ mod common;
 
 use std::sync::Arc;
 
-use lowdiff::checkpoint::format::model_signature;
+use lowdiff::checkpoint::format::{model_signature, PayloadCodec};
 use lowdiff::checkpoint::manifest::Manifest;
 use lowdiff::compress::topk_mask;
+use lowdiff::control::replay_bound;
 use lowdiff::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
 use lowdiff::coordinator::recovery::{recover, RecoveryMode, RecoveryStats};
 use lowdiff::optim::{Adam, ModelState};
+use lowdiff::pipeline::{compact_hierarchy, CompactStats, CompactorConfig, DEFAULT_MAX_LEVEL};
 use lowdiff::storage::{MemStore, StorageBackend};
 use lowdiff::tensor::Flat;
 use lowdiff::util::rng::Rng;
 
 const N_PARAMS: usize = 64 * 1024;
 const STEPS: u64 = 64;
+const STEPS_LONG: u64 = 512;
 const RHO: f64 = 0.01;
 
-/// Persist the fixed timeline through the checkpointer at the given merge
-/// factor; returns the store and the compactor's counters.
-fn build(compact_every: usize) -> (Arc<dyn StorageBackend>, u64, u64) {
+/// Persist a fixed timeline through the checkpointer: one anchor full,
+/// `steps` diffs, a periodic full every `full_every` steps (0 = full-free),
+/// hierarchical compaction at `compact_every`. Returns the store, write-path
+/// bytes, merged spans written, and the deepest level.
+fn build(
+    compact_every: usize,
+    steps: u64,
+    full_every: u64,
+) -> (Arc<dyn StorageBackend>, u64, u64, u16) {
     let sig = model_signature("compaction-bench", N_PARAMS);
     let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
     let ck = Checkpointer::spawn(
@@ -45,15 +57,20 @@ fn build(compact_every: usize) -> (Arc<dyn StorageBackend>, u64, u64) {
     let k = ((N_PARAMS as f64 * RHO) as usize).max(1);
     ck.queue
         .put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.1; N_PARAMS])))));
-    for step in 1..=STEPS {
+    for step in 1..=steps {
         let mut g = vec![0f32; N_PARAMS];
         rng.fill_normal_f32(&mut g);
         ck.queue
             .put(step, Arc::new(CkptItem::DiffDense(topk_mask(&Flat(g), k))));
+        if full_every != 0 && step % full_every == 0 {
+            let mut s = ModelState::new(Flat(vec![0.1; N_PARAMS]));
+            s.step = step;
+            ck.queue.put(step, Arc::new(CkptItem::Full(s)));
+        }
     }
     let stats = ck.finish();
     assert_eq!(stats.errors, 0);
-    (store, stats.merged_written, stats.raw_compacted)
+    (store, stats.bytes_written, stats.merged_written, stats.max_level)
 }
 
 fn recover_once(store: &Arc<dyn StorageBackend>, sig: u64) -> (ModelState, RecoveryStats) {
@@ -64,25 +81,26 @@ fn main() {
     let sig = model_signature("compaction-bench", N_PARAMS);
     println!("chain: 1 anchor full + {STEPS} diffs, {N_PARAMS} params, rho {RHO}\n");
 
-    let (baseline_store, _, _) = build(0);
+    let (baseline_store, _, _, _) = build(0, STEPS, 0);
     let (want, base_stats) = recover_once(&baseline_store, sig);
     assert_eq!(base_stats.n_diff_objects, STEPS as usize);
 
     let mut rows = Vec::new();
     for mf in [0usize, 4, 8] {
         let t0 = std::time::Instant::now();
-        let (store, merged, raw_compacted) = build(mf);
+        let (store, _, merged, max_level) = build(mf, STEPS, 0);
         let build_secs = t0.elapsed().as_secs_f64();
 
         let (state, rstats) = recover_once(&store, sig);
         assert_eq!(state, want, "mf={mf}: compacted replay must be bit-identical");
         if mf >= 2 {
             assert!(
-                rstats.n_diff_objects <= (STEPS as usize).div_ceil(mf) + 1,
-                "mf={mf}: replay objects {} above the compaction bound",
-                rstats.n_diff_objects
+                rstats.n_diff_objects as u64 <= replay_bound(STEPS, mf),
+                "mf={mf}: replay objects {} above the hierarchical bound {}",
+                rstats.n_diff_objects,
+                replay_bound(STEPS, mf)
             );
-            assert_eq!(merged as usize, STEPS as usize / mf);
+            assert!(max_level >= 1, "the hierarchy must engage at mf={mf}");
         }
         let chain_objects = store
             .list()
@@ -97,27 +115,115 @@ fn main() {
         b.report();
         println!(
             "  mf={mf:<3} chain objects {chain_objects:>3}  replay objects {:>3}  \
-             merged spans {merged:>2}  raws compacted {raw_compacted:>2}",
+             merged spans {merged:>2}  max level {max_level}",
             rstats.n_diff_objects
         );
-        rows.push((mf, chain_objects, rstats.n_diff_objects, merged, b.median(), build_secs));
+        rows.push((
+            mf,
+            chain_objects,
+            rstats.n_diff_objects,
+            merged,
+            max_level,
+            b.median(),
+            build_secs,
+        ));
     }
+
+    // ---- full-free section: 512 diffs, no periodic fulls ever ----------
+    // periodic-full baseline for the write-bytes comparison (full every 64)
+    let (_, periodic_bytes, _, _) = build(0, STEPS_LONG, 64);
+    // full-free raw chain: anchor + 512 diffs, nothing else
+    let (ff_store, ff_write_bytes, _, _) = build(0, STEPS_LONG, 0);
+    let (ff_want, _) = recover_once(&ff_store, sig);
+    let diff_bytes: u64 = ff_store
+        .list()
+        .unwrap()
+        .iter()
+        .filter(|n| Manifest::step_range(n).is_some_and(|(k, _, _)| k != "full"))
+        .map(|n| ff_store.get(n).unwrap().len() as u64)
+        .sum();
+    // hierarchical compaction run directly, so merge amplification is
+    // observable (the checkpointer folds only counters, not bytes)
+    let ccfg = CompactorConfig {
+        model_sig: sig,
+        merge_factor: 4,
+        settle_tail: 0,
+        codec: PayloadCodec::Raw,
+        max_level: DEFAULT_MAX_LEVEL,
+    };
+    let mut cst = CompactStats::default();
+    let t0 = std::time::Instant::now();
+    compact_hierarchy(
+        ff_store.as_ref(),
+        &ccfg,
+        &std::collections::HashSet::new(),
+        true,
+        &mut cst,
+        &Manifest::latest_chain,
+        &mut || true,
+    )
+    .expect("hierarchy");
+    let compact_secs = t0.elapsed().as_secs_f64();
+    let (ff_state, ff_rstats) = recover_once(&ff_store, sig);
+    assert_eq!(ff_state, ff_want, "full-free replay must be bit-identical");
+    let bound = replay_bound(STEPS_LONG, 4);
+    assert!(
+        ff_rstats.n_diff_objects as u64 <= bound,
+        "full-free: replay objects {} above mf*ceil(log_mf n)+1 = {bound}",
+        ff_rstats.n_diff_objects
+    );
+    // merge amplification: every level rewrites each payload once, plus a
+    // union-sum section never larger than the payloads it summarizes
+    let amp_bound = 2 * cst.max_level as u64 * diff_bytes;
+    assert!(
+        cst.bytes_written <= amp_bound,
+        "merge amplification {} above {} (2 * {} levels * {diff_bytes} diff bytes)",
+        cst.bytes_written,
+        amp_bound,
+        cst.max_level
+    );
+    let ff_total = ff_write_bytes + cst.bytes_written;
+    assert!(
+        ff_total < periodic_bytes,
+        "full-free steady-state bytes {ff_total} must undercut the \
+         periodic-full baseline {periodic_bytes}"
+    );
+    println!(
+        "\nfull-free (n={STEPS_LONG}, mf=4): replay objects {} (bound {bound})  \
+         max level {}  merged spans {}  compact {:.1}ms",
+        ff_rstats.n_diff_objects,
+        cst.max_level,
+        cst.merged_written,
+        compact_secs * 1e3
+    );
+    println!(
+        "write bytes: full-free {ff_total} (chain {ff_write_bytes} + merge {}) \
+         vs periodic-full {periodic_bytes}",
+        cst.bytes_written
+    );
 
     // machine-readable block for BENCH_compaction.json
     println!("\n{{");
     println!("  \"bench\": \"compaction\",");
-    for (mf, chain, replay, merged, recover_s, build_s) in &rows {
+    for (mf, chain, replay, merged, max_level, recover_s, build_s) in &rows {
         println!(
             "  \"mf_{mf}\": {{ \"chain_objects\": {chain}, \"replay_objects\": {replay}, \
-             \"merged_spans\": {merged}, \"recover_ms\": {:.3}, \"build_ms\": {:.1} }},",
+             \"merged_spans\": {merged}, \"max_level\": {max_level}, \
+             \"recover_ms\": {:.3}, \"build_ms\": {:.1} }},",
             recover_s * 1e3,
             build_s * 1e3
         );
     }
+    println!(
+        "  \"full_free_512\": {{ \"replay_objects\": {}, \"bound\": {bound}, \
+         \"max_level\": {}, \"merged_spans\": {}, \"write_bytes\": {ff_total}, \
+         \"periodic_full_bytes\": {periodic_bytes} }},",
+        ff_rstats.n_diff_objects, cst.max_level, cst.merged_written
+    );
     println!("  \"bit_identical\": true");
     println!("}}");
 
-    // acceptance: compaction must cut replay objects by ~mf
+    // acceptance: the hierarchy must bound replay logarithmically
     let replay_raw = rows[0].2;
     let replay_mf8 = rows[2].2;
     assert!(
@@ -125,4 +231,9 @@ fn main() {
         "mf=8 must cut replay objects by >4x ({replay_raw} -> {replay_mf8})"
     );
     println!("\nacceptance: replay objects {replay_raw} -> {replay_mf8} at mf=8 (PASS)");
+    println!(
+        "acceptance: full-free 512-diff replay {} <= {bound} and write bytes \
+         {ff_total} < {periodic_bytes} (PASS)",
+        ff_rstats.n_diff_objects
+    );
 }

@@ -342,6 +342,21 @@ pub fn encode_container_into(
     Ok(out.len() - start)
 }
 
+/// Byte offset of the span-level field inside the container header (the
+/// u16 that was reserved padding before hierarchical compaction).
+const LEVEL_OFFSET: usize = 10;
+
+/// Stamp a compaction level into an already-encoded container starting at
+/// `container[start..]`. The level lives in the header, which the payload
+/// CRC does not cover, so patching after [`encode_container_into`] keeps
+/// the object verifiable — and every non-merged encoder keeps writing the
+/// zero it always wrote, preserving bit-identity with the reference
+/// encoder.
+pub fn set_container_level(container: &mut [u8], start: usize, level: u16) {
+    container[start + LEVEL_OFFSET..start + LEVEL_OFFSET + 2]
+        .copy_from_slice(&level.to_le_bytes());
+}
+
 /// A parsed container whose sections *borrow* the input buffer (Raw codec;
 /// Zstd payloads are decompressed into one owned buffer, still without the
 /// per-section `to_vec` of the owning decode). Section names borrow the
@@ -350,6 +365,11 @@ pub fn encode_container_into(
 pub struct ContainerView<'a> {
     pub kind: CkptKind,
     pub codec: PayloadCodec,
+    /// Compaction level of a [`CkptKind::MergedDiff`] span (stored in the
+    /// header bytes that were reserved before hierarchical compaction):
+    /// 0 for every non-merged container and for spans written by pre-level
+    /// encoders, k ≥ 1 for a level-k span. See [`span_level_from_header`].
+    pub level: u16,
     pub model_sig: u64,
     pub step_lo: u64,
     pub step_hi: u64,
@@ -369,6 +389,7 @@ impl<'a> ContainerView<'a> {
         ensure!(version == VERSION, "unsupported version {version}");
         let kind = CkptKind::from_u8(bytes[8])?;
         let codec = PayloadCodec::from_u8(bytes[9])?;
+        let level = LE::read_u16(&bytes[10..12]);
         let model_sig = LE::read_u64(&bytes[12..20]);
         let step_lo = LE::read_u64(&bytes[20..28]);
         let step_hi = LE::read_u64(&bytes[28..36]);
@@ -408,7 +429,17 @@ impl<'a> ContainerView<'a> {
             ranges.push((off, off + blen));
             off += blen;
         }
-        Ok(ContainerView { kind, codec, model_sig, step_lo, step_hi, names, ranges, payload: raw })
+        Ok(ContainerView {
+            kind,
+            codec,
+            level,
+            model_sig,
+            step_lo,
+            step_hi,
+            names,
+            ranges,
+            payload: raw,
+        })
     }
 
     pub fn n_sections(&self) -> usize {

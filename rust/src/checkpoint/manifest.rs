@@ -5,9 +5,16 @@
 //! full-{step:012}.ldck            full checkpoint at Adam step `step`
 //! diff-{step:012}.ldck            one differential for step `step`
 //! batch-{lo:012}-{hi:012}.ldck    batched differentials for steps lo..=hi
-//! merged-{lo:012}-{hi:012}.ldck   compacted span: the background chain
-//!                                 compactor's rewrite of raw diff/batch
-//!                                 objects covering steps lo..=hi
+//! merged-{lo:012}-{hi:012}.ldck   level-1 compacted span: the background
+//!                                 chain compactor's rewrite of raw
+//!                                 diff/batch objects covering steps lo..=hi
+//! merged-{lo:012}-{hi:012}.l{k:02}.ldck
+//!                                 level-k super-span (k ≥ 2): the
+//!                                 hierarchical compactor's rewrite of
+//!                                 `merge_factor` level-(k-1) spans —
+//!                                 level 1 keeps the suffix-free name, so
+//!                                 spans written before the hierarchy
+//!                                 existed parse unchanged
 //! ```
 //! The recovery chain for the latest state is: the newest full checkpoint,
 //! plus a **non-overlapping cover** of diff/batch/merged objects carrying
@@ -145,9 +152,43 @@ impl Manifest {
         format!("batch-{lo:012}-{hi:012}.ldck")
     }
 
-    /// Name of a compacted differential span covering steps `lo..=hi`.
+    /// Name of a level-1 compacted differential span covering steps
+    /// `lo..=hi`.
     pub fn merged_name(lo: u64, hi: u64) -> String {
         format!("merged-{lo:012}-{hi:012}.ldck")
+    }
+
+    /// Name of a compacted span at an explicit hierarchy level. Level 1
+    /// keeps the historical suffix-free name ([`merged_name`]
+    /// (Manifest::merged_name)); levels ≥ 2 carry an `.l{k:02}` suffix so
+    /// the replay cover can rank same-range spans without reading them.
+    pub fn merged_level_name(lo: u64, hi: u64, level: u16) -> String {
+        debug_assert!(level < 100, "level {level} overflows the 2-digit name suffix");
+        if level <= 1 {
+            Self::merged_name(lo, hi)
+        } else {
+            format!("merged-{lo:012}-{hi:012}.l{level:02}.ldck")
+        }
+    }
+
+    /// Compaction level of a span name, looking through namespace
+    /// prefixes: k for a level-k merged span (1 when the suffix is
+    /// absent), 0 for raw diff/batch objects and anything else. Purely
+    /// name-based — the authoritative copy lives in the span header
+    /// ([`read_merged_level`](crate::checkpoint::merged::read_merged_level)),
+    /// but discovery and the cover ranking must not read every object.
+    pub fn span_level(name: &str) -> u16 {
+        let inner = Self::parse_gen(name).map(|(_, n)| n).unwrap_or(name);
+        let inner = Self::parse_rank(inner).map(|(_, n)| n).unwrap_or(inner);
+        match Self::parse(inner) {
+            Some(("merged", _, _)) => {}
+            _ => return 0,
+        }
+        let stem = inner.strip_suffix(".ldck").unwrap_or(inner);
+        match stem.rsplit_once(".l") {
+            Some((_, lvl)) => lvl.parse().unwrap_or(1),
+            None => 1,
+        }
     }
 
     /// Name of a reshard carry base at `step`: the chain base a new
@@ -317,7 +358,18 @@ impl Manifest {
             let (lo, hi) = s.split_once('-')?;
             Some(("batch", lo.parse().ok()?, hi.parse().ok()?))
         } else if let Some(s) = stem.strip_prefix("merged-") {
-            let (lo, hi) = s.split_once('-')?;
+            // optional hierarchy suffix: `{lo}-{hi}` (level 1) or
+            // `{lo}-{hi}.l{k:02}` (level k ≥ 2)
+            let range = match s.rsplit_once(".l") {
+                Some((range, lvl)) => {
+                    if lvl.len() != 2 || !lvl.bytes().all(|b| b.is_ascii_digit()) {
+                        return None;
+                    }
+                    range
+                }
+                None => s,
+            };
+            let (lo, hi) = range.split_once('-')?;
             Some(("merged", lo.parse().ok()?, hi.parse().ok()?))
         } else {
             None
@@ -329,10 +381,19 @@ impl Manifest {
     /// and its raw deletes leaves both the merged span and (some of) the
     /// raw objects it supersedes on the store; the cover prefers the
     /// longest span starting earliest and drops anything whose range is
-    /// already covered. Plain chains (strictly increasing, disjoint
-    /// objects) pass through unchanged.
+    /// already covered. With the compaction hierarchy the same crash
+    /// window exists at every level — a level-(k+1) super-span can coexist
+    /// with the level-k spans (and raws) it supersedes — so at equal range
+    /// the higher level wins (it is the newer rewrite; both replay
+    /// bit-identically, but GC retires the lower one). Plain chains
+    /// (strictly increasing, disjoint objects) pass through unchanged.
     pub fn select_cover(mut diffs: Vec<(u64, u64, String)>) -> Vec<(u64, u64, String)> {
-        diffs.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)).then(a.2.cmp(&b.2)));
+        diffs.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(b.1.cmp(&a.1))
+                .then(Self::span_level(&b.2).cmp(&Self::span_level(&a.2)))
+                .then(a.2.cmp(&b.2))
+        });
         let mut out: Vec<(u64, u64, String)> = Vec::with_capacity(diffs.len());
         for d in diffs {
             match out.last() {
@@ -579,11 +640,12 @@ mod tests {
             let hi = step + rng.next_u64() % 100;
             let gen = rng.next_u64() % 10_000;
             let rank = (rng.next_u64() % 10_000) as usize;
-            let obj = match rng.range(0, 5) {
+            let obj = match rng.range(0, 6) {
                 0 => Manifest::full_name(step),
                 1 => Manifest::diff_name(step),
                 2 => Manifest::batch_name(step, hi),
                 3 => Manifest::merged_name(step, hi),
+                4 => Manifest::merged_level_name(step, hi, 2 + (rng.next_u64() % 8) as u16),
                 _ => Manifest::carry_name(step),
             };
             let name = match rng.range(0, 4) {
@@ -739,6 +801,119 @@ mod tests {
                 (2, 2, Manifest::diff_name(2)),
             ]
         );
+    }
+
+    #[test]
+    fn leveled_merged_names_parse_and_rank() {
+        assert_eq!(Manifest::merged_level_name(2, 5, 1), Manifest::merged_name(2, 5));
+        let l3 = Manifest::merged_level_name(2, 17, 3);
+        assert_eq!(l3, "merged-000000000002-000000000017.l03.ldck");
+        assert_eq!(Manifest::step_range(&l3), Some(("merged", 2, 17)));
+        assert_eq!(Manifest::span_level(&l3), 3);
+        assert_eq!(Manifest::span_level(&Manifest::merged_name(2, 5)), 1);
+        assert_eq!(Manifest::span_level(&Manifest::diff_name(5)), 0);
+        assert_eq!(Manifest::span_level(&Manifest::batch_name(2, 5)), 0);
+        assert_eq!(Manifest::span_level("random.bin"), 0);
+        assert!(!Manifest::is_shard_artifact(&l3));
+        // namespaced spans rank the same
+        let ns = format!("{}{l3}", Manifest::gen_rank_prefix(1, 2));
+        assert_eq!(Manifest::step_range(&ns), Some(("merged", 2, 17)));
+        assert_eq!(Manifest::span_level(&ns), 3);
+        // malformed level suffixes are not merged spans at all
+        assert_eq!(Manifest::step_range("merged-000000000002-000000000005.l3.ldck"), None);
+        assert_eq!(Manifest::step_range("merged-000000000002-000000000005.lxx.ldck"), None);
+    }
+
+    #[test]
+    fn select_cover_prefers_higher_levels_and_stays_disjoint() {
+        // crash mid-hierarchy: the level-2 super-span coexists with the
+        // level-1 spans and raw diffs it supersedes; one cover, no overlap
+        let diffs = vec![
+            (1, 4, Manifest::merged_name(1, 4)),
+            (1, 8, Manifest::merged_level_name(1, 8, 2)),
+            (5, 8, Manifest::merged_name(5, 8)),
+            (3, 3, Manifest::diff_name(3)),
+            (9, 9, Manifest::diff_name(9)),
+        ];
+        let cover = Manifest::select_cover(diffs);
+        assert_eq!(
+            cover,
+            vec![
+                (1, 8, Manifest::merged_level_name(1, 8, 2)),
+                (9, 9, Manifest::diff_name(9)),
+            ]
+        );
+        // at an IDENTICAL range the higher level wins (newer rewrite)
+        let tied = vec![
+            (1, 4, Manifest::merged_name(1, 4)),
+            (1, 4, Manifest::merged_level_name(1, 4, 2)),
+        ];
+        assert_eq!(
+            Manifest::select_cover(tied),
+            vec![(1, 4, Manifest::merged_level_name(1, 4, 2))]
+        );
+    }
+
+    #[test]
+    fn select_cover_adversarial_property() {
+        // satellite: overlapping spans at mixed levels, crash leftovers,
+        // and junk cut points — the chosen cover must always be
+        // non-overlapping, cover every step some candidate covers (no step
+        // silently lost), and be minimal (no object whose range the rest
+        // of the cover already provides).
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+        prop_check("select_cover_adversarial", 256, |rng| {
+            let mf = rng.range(2, 5) as u64;
+            let n_steps = rng.range(1, 60) as u64;
+            let mut cands: Vec<(u64, u64, String)> = Vec::new();
+            // raw diffs, some missing (compacted away)
+            for s in 1..=n_steps {
+                if rng.next_f64() < 0.7 {
+                    cands.push((s, s, Manifest::diff_name(s)));
+                }
+            }
+            // the hierarchy's aligned spans: level k covers mf^k steps.
+            // Crash leftovers = any subset may coexist with any other —
+            // exactly the nested/disjoint shapes raced compaction leaves
+            let mut span = mf;
+            for level in 1..=3u16 {
+                let mut lo = 1;
+                while lo + span - 1 <= n_steps {
+                    if rng.next_f64() < 0.5 {
+                        let hi = lo + span - 1;
+                        cands.push((hi - span + 1, hi, Manifest::merged_level_name(lo, hi, level)));
+                    }
+                    lo += span;
+                }
+                span *= mf;
+            }
+            let cover = Manifest::select_cover(cands.clone());
+            // non-overlapping and ordered
+            for w in cover.windows(2) {
+                prop_assert!(w[0].1 < w[1].0);
+            }
+            // every step covered by SOME candidate that extends past the
+            // cover's frontier is reachable through the cover: the cover's
+            // high watermark must reach the candidates' maximum hi
+            let max_hi = cands.iter().map(|c| c.1).max().unwrap_or(0);
+            if let Some(last) = cover.last() {
+                prop_assert!(last.1 == max_hi);
+            } else {
+                prop_assert!(cands.is_empty());
+            }
+            // minimal: dropping any element must lose at least one covered
+            // step (no element is fully contained in the union of others)
+            for i in 0..cover.len() {
+                let covered_elsewhere = cover
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != i)
+                    .any(|(_, c)| c.0 <= cover[i].0 && cover[i].1 <= c.1);
+                prop_assert!(!covered_elsewhere);
+            }
+            Ok(())
+        });
     }
 
     #[test]

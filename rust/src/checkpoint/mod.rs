@@ -29,7 +29,10 @@ pub use format::{
 };
 pub use full::{read_full, write_full, write_full_into};
 pub use manifest::Manifest;
-pub use merged::{read_merged, read_merged_sum, write_merged, write_merged_into};
+pub use merged::{
+    read_merged, read_merged_level, read_merged_sum, write_merged, write_merged_into,
+    write_merged_level, write_merged_level_into,
+};
 
 use anyhow::{bail, Result};
 

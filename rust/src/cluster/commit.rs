@@ -279,6 +279,12 @@ pub struct ClusterCutStats {
     pub records_skipped: usize,
     /// diff steps replayed across all ranks
     pub diff_steps_applied: usize,
+    /// chain objects replayed across all ranks (bases + diff/span
+    /// objects) — with hierarchical compaction this is bounded by
+    /// `R·(mf·⌈log_mf n⌉ + 3)` even with fulls disabled
+    pub replay_objects: usize,
+    /// deepest hierarchical span level among the replayed chain objects
+    pub max_level: u16,
 }
 
 /// Outcome of one GC sweep: objects deleted, plus objects that *should*
@@ -343,6 +349,12 @@ pub fn find_consistent_cut(
                 stats.cut_gen = rec.generation;
                 stats.ranks = rec.ranks.len();
                 stats.diff_steps_applied = chains.iter().map(|c| c.diffs.len()).sum();
+                stats.replay_objects = chains.iter().map(|c| c.objects.len()).sum();
+                stats.max_level = chains
+                    .iter()
+                    .flat_map(|c| c.objects.iter().map(|n| Manifest::span_level(n)))
+                    .max()
+                    .unwrap_or(0);
                 return Ok(Some((rec, chains, stats)));
             }
             Err(e) => {

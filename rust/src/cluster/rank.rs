@@ -36,7 +36,9 @@ use crate::cluster::{
 use crate::control::iosched::{GatedStore, IoGate, IoGateConfig};
 use crate::coordinator::checkpointer::CkptStats;
 use crate::optim::ModelState;
-use crate::pipeline::{compact_chain, CompactStats, CompactorConfig, Encoder, Sink};
+use crate::pipeline::{
+    compact_hierarchy, CompactStats, CompactorConfig, Encoder, Sink, DEFAULT_MAX_LEVEL,
+};
 use crate::storage::{Namespaced, Sharded, StorageBackend};
 use crate::tensor::Flat;
 
@@ -81,10 +83,14 @@ pub struct ClusterStats {
     /// garbage surfaced instead of silently swallowed; see
     /// [`GcSweepStats`](crate::cluster::commit::GcSweepStats))
     pub gc_leaked: u64,
-    /// merged spans written by scheduler-run chain compaction
+    /// merged spans written by scheduler-run chain compaction (all levels)
     pub merged_written: u64,
     /// raw per-rank diff objects superseded by merged spans
     pub raw_compacted: u64,
+    /// level-k spans absorbed into level-(k+1) super-spans
+    pub spans_compacted: u64,
+    /// deepest span level the scheduler's hierarchical compaction wrote
+    pub max_level: u16,
     /// wall seconds the background scheduler spent in compaction passes
     /// (off the commit thread, shaped by the I/O gate)
     pub compact_secs: f64,
@@ -363,6 +369,8 @@ impl Cluster {
             gc_leaked: c.gc_leaked,
             merged_written: c.sched.compact.merged_written,
             raw_compacted: c.sched.compact.raw_compacted,
+            spans_compacted: c.sched.compact.spans_compacted,
+            max_level: c.sched.compact.max_level,
             compact_secs: c.sched.busy_secs,
             tips_demoted: c.sched.tips_demoted,
             retunes: c.retunes,
@@ -508,13 +516,18 @@ fn coordinator_loop(
     let mut prev_tips: HashSet<String> = HashSet::new();
     // the dedicated background scheduler (exists whenever compaction is
     // configured or the control plane could enable it live)
+    // queued level-0 jobs, shared with the scheduler: while a job waits
+    // here, the scheduler's hierarchical (level ≥ 1) passes yield so raw
+    // compaction under the IoGate budget is never starved
+    let queued = Arc::new(AtomicUsize::new(0));
     let sched: Option<(Sender<SchedJob>, JoinHandle<SchedStats>)> = gate.map(|g| {
         let (tx, rx) = channel::<SchedJob>();
         let sstore = Arc::clone(&store);
         let scfg = cfg.clone();
+        let q = Arc::clone(&queued);
         let h = std::thread::Builder::new()
             .name("cluster-iosched".into())
-            .spawn(move || scheduler_loop(sstore, scfg, g, rx))
+            .spawn(move || scheduler_loop(sstore, scfg, g, rx, q))
             .expect("spawning cluster I/O scheduler");
         (tx, h)
     });
@@ -577,6 +590,7 @@ fn coordinator_loop(
                         diffs_since_compact += 1;
                         if diffs_since_compact >= active_mf {
                             diffs_since_compact = 0;
+                            queued.fetch_add(1, Ordering::SeqCst);
                             let _ = tx.send(SchedJob {
                                 rec: rec.clone(),
                                 prev_tips: prev_tips.clone(),
@@ -616,6 +630,7 @@ fn scheduler_loop(
     cfg: ClusterConfig,
     gate: Arc<IoGate>,
     rx: Receiver<SchedJob>,
+    queued: Arc<AtomicUsize>,
 ) -> SchedStats {
     // one logical view shared by every pass. Mirror the rank write path:
     // wrap in a shard-aware view ONLY when ranks shard — `Sharded::put`
@@ -630,14 +645,20 @@ fn scheduler_loop(
     let logical: Arc<dyn StorageBackend> = Arc::new(GatedStore::new(logical_inner, gate));
     let mut out = SchedStats::default();
     while let Ok(job) = rx.recv() {
+        queued.fetch_sub(1, Ordering::SeqCst);
         let t0 = Instant::now();
         let before = out.compact.clone();
+        // hierarchical passes run only while no newer level-0 job waits —
+        // raw compaction keeps strict priority under the IoGate budget;
+        // the span ladder resumes from the cover on the next idle job
+        let mut keep_going = || queued.load(Ordering::SeqCst) == 0;
         compact_cluster_chains(
             logical.as_ref(),
             &cfg,
             job.merge_factor,
             &job.rec,
             &job.prev_tips,
+            &mut keep_going,
             &mut out,
         );
         out.busy_secs += t0.elapsed().as_secs_f64();
@@ -726,30 +747,27 @@ fn commit_epoch(
 
 /// Scheduler-run background compaction (incremental-merging
 /// persistence): for every rank in a committed record, merge runs of raw
-/// diff objects **strictly below the cut** into `MergedDiff` spans.
-/// Protected from consumption: the record's tip objects AND the previous
-/// record's (both have CRC-pinned tips a fallback may need to
-/// re-verify), so recovery keeps at least one-deep record fallback. Raw
-/// diffs become collectible only through `compact_chain`'s
+/// diff objects **strictly below the cut** into `MergedDiff` spans, then
+/// climb the span hierarchy ([`compact_hierarchy`]) — level-k spans into
+/// level-(k+1) super-spans — while `keep_going` allows (no newer level-0
+/// job queued). Protected from consumption: the record's tip objects AND
+/// the previous record's (both have CRC-pinned tips a fallback may need
+/// to re-verify), so recovery keeps at least one-deep record fallback.
+/// An object becomes collectible at every level only through the
 /// durable-and-verified-before-delete rule (docs/PIPELINE.md). The
 /// protected previous tips are write-cold from here on: on a tiered
 /// store they are demoted out of the fast tier (kept durable — fallback
 /// recovery still reads them, just slower).
+#[allow(clippy::too_many_arguments)]
 fn compact_cluster_chains(
     logical: &dyn StorageBackend,
     cfg: &ClusterConfig,
     merge_factor: usize,
     rec: &GlobalRecord,
     prev_tips: &HashSet<String>,
+    keep_going: &mut dyn FnMut() -> bool,
     out: &mut SchedStats,
 ) {
-    let names = match logical.list() {
-        Ok(n) => n,
-        Err(e) => {
-            log::warn!("compaction listing failed: {e:#}");
-            return;
-        }
-    };
     let mut protect: HashSet<String> = rec.ranks.iter().map(|r| r.name.clone()).collect();
     protect.extend(prev_tips.iter().cloned());
     for ro in &rec.ranks {
@@ -761,17 +779,19 @@ fn compact_cluster_chains(
             // phase-1 acks are blocking-durable and the record committed,
             // so everything at or below the cut is settled
             settle_tail: 0,
+            max_level: DEFAULT_MAX_LEVEL,
         };
-        // the chain strictly below the cut: tips at the cut stay raw
-        let chain = Manifest::gen_rank_chain(
-            &names,
-            rec.generation,
-            ro.rank as usize,
-            rec.step.saturating_sub(1),
-        );
-        // tail merging keeps the replayable set within ⌈n/mf⌉ + 2 (the
-        // two protected record tips stay raw alongside the merged spans)
-        if let Err(e) = compact_chain(logical, &chain, &ccfg, &protect, true, &mut out.compact) {
+        // the chain strictly below the cut: tips at the cut stay raw.
+        // Re-listed per level — each level rewrites the cover
+        let (gen, rank, cut) = (rec.generation, ro.rank as usize, rec.step.saturating_sub(1));
+        let discover = move |s: &dyn StorageBackend| {
+            Ok(Manifest::gen_rank_chain(&s.list()?, gen, rank, cut))
+        };
+        // tail merging keeps the replayable set within mf·⌈log_mf n⌉ + 2
+        // (the two protected record tips stay raw alongside the spans)
+        if let Err(e) =
+            compact_hierarchy(logical, &ccfg, &protect, true, &mut out.compact, &discover, keep_going)
+        {
             log::warn!("rank {} compaction failed: {e:#}", ro.rank);
         }
     }

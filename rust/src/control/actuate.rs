@@ -35,7 +35,9 @@ use crate::coordinator::config_opt::{AdaptiveTuner, SystemParams};
 /// One applied (or to-apply) runtime configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Retune {
-    /// full-checkpoint interval (FCF), iterations
+    /// full-checkpoint interval (FCF), iterations; 0 = fulls disabled
+    /// (the `full_every = ∞` full-free mode: one base full, then diffs +
+    /// hierarchical merge forever)
     pub full_every: u64,
     /// differential batching size (BS)
     pub batch_size: usize,
@@ -69,6 +71,10 @@ pub struct ActuatorConfig {
     pub hysteresis: f64,
     /// minimum ticks between retunes
     pub cooldown_ticks: u32,
+    /// `(0, 0)` selects the full-free mode: `full_every` is pinned to 0
+    /// (no periodic fulls) and the merge-factor policy switches from the
+    /// per-epoch chain-length heuristic to the hierarchical replay bound
+    /// (see [`Actuator::note_chain_objects`])
     pub full_every_bounds: (u64, u64),
     pub batch_bounds: (usize, usize),
     /// compaction policy: keep the replayable chain near this many
@@ -119,8 +125,31 @@ pub struct Actuator {
     last: Snapshot,
     applied: Retune,
     ticks_since_retune: u32,
+    /// total diff-chain objects since the base full, as last reported by
+    /// the driver ([`Actuator::note_chain_objects`]; full-free mode only)
+    chain_objects: u64,
     /// retunes emitted so far
     pub retunes: u64,
+}
+
+/// The hierarchical replay bound: recovering an `n`-object differential
+/// chain compacted at fan-out `mf` (≥ 2) touches at most
+/// `mf·⌈log_mf n⌉ + 1` objects — ≤ `mf − 1` surviving spans per level
+/// plus the raw tail, plus the base full.
+pub fn replay_bound(n: u64, mf: usize) -> u64 {
+    let mf = mf.max(2) as u64;
+    if n <= 1 {
+        return n + 1;
+    }
+    // ⌈log_mf n⌉ by repeated multiplication — no float drift at the
+    // boundaries (exact powers must not count an extra level)
+    let mut levels = 0u64;
+    let mut cap = 1u64;
+    while cap < n {
+        cap = cap.saturating_mul(mf);
+        levels += 1;
+    }
+    mf * levels + 1
 }
 
 impl Actuator {
@@ -144,6 +173,7 @@ impl Actuator {
             last: Snapshot::default(),
             applied: initial,
             ticks_since_retune: 0,
+            chain_objects: 0,
             retunes: 0,
         }
     }
@@ -151,6 +181,22 @@ impl Actuator {
     /// The configuration currently in force.
     pub fn applied(&self) -> Retune {
         self.applied
+    }
+
+    /// True when the config pins fulls off entirely (`full_every = ∞`).
+    fn full_free(&self) -> bool {
+        self.cfg.full_every_bounds == (0, 0)
+    }
+
+    /// Chain-length feedback for full-free runs: the driver reports the
+    /// diff-chain object count since the base full (steps since base /
+    /// (`diff_every`·`batch_size`)) before each tick, and the merge
+    /// policy picks the fan-out whose hierarchical bound
+    /// ([`replay_bound`]) lands nearest `target_replay_objects` —
+    /// replacing the fixed `mf ≈ n/target` heuristic, which has no answer
+    /// on an unbounded chain.
+    pub fn note_chain_objects(&mut self, n: u64) {
+        self.chain_objects = n;
     }
 
     /// Smoothed estimates `(mtbf, write_bw)` currently driving the tuner.
@@ -203,7 +249,12 @@ impl Actuator {
 
         let significant = rel_change(self.applied.full_every as f64, want_f as f64)
             >= self.cfg.hysteresis
-            || rel_change(self.applied.batch_size as f64, want_b as f64) >= self.cfg.hysteresis;
+            || rel_change(self.applied.batch_size as f64, want_b as f64) >= self.cfg.hysteresis
+            // full-free runs steer through the merge factor alone (the
+            // FCF knob is pinned at 0), so fan-out moves must fire too
+            || (self.full_free()
+                && rel_change(self.applied.compact_every as f64, want_c as f64)
+                    >= self.cfg.hysteresis);
         if significant && self.ticks_since_retune >= self.cfg.cooldown_ticks {
             self.applied = Retune { full_every: want_f, batch_size: want_b, compact_every: want_c };
             self.ticks_since_retune = 0;
@@ -217,7 +268,12 @@ impl Actuator {
     /// about `target_replay_objects` chain objects. With `n = full_every
     /// / (diff_every · batch_size)` objects per chain, `mf = ⌈n/target⌉`;
     /// chains already short enough don't pay for a compactor pass at all.
+    /// Full-free runs have no per-epoch chain length — they use the
+    /// hierarchical bound instead ([`Actuator::hierarchical_policy`]).
     fn compaction_policy(&self, full_every: u64, batch_size: usize) -> usize {
+        if self.full_free() {
+            return self.hierarchical_policy(self.chain_objects);
+        }
         let per_object = self.cfg.diff_every.max(1) * batch_size.max(1) as u64;
         let chain_len = full_every / per_object;
         let target = self.cfg.target_replay_objects.max(1);
@@ -226,6 +282,28 @@ impl Actuator {
         }
         (chain_len.div_ceil(target) as usize)
             .clamp(self.cfg.compact_bounds.0, self.cfg.compact_bounds.1)
+    }
+
+    /// Fan-out for an unbounded chain: scan `compact_bounds` for the
+    /// merge factor whose hierarchical bound ([`replay_bound`]) lands
+    /// nearest `target_replay_objects`. Never 0 — an unbounded chain
+    /// without compaction has unbounded replay — and level count falls
+    /// out implicitly (⌈log_mf n⌉ at the chosen fan-out).
+    fn hierarchical_policy(&self, n: u64) -> usize {
+        let (lo, hi) = self.cfg.compact_bounds;
+        let lo = lo.max(2);
+        let hi = hi.max(lo);
+        let target = self.cfg.target_replay_objects.max(2) as f64;
+        let mut best = lo;
+        let mut best_err = f64::INFINITY;
+        for mf in lo..=hi {
+            let err = (replay_bound(n, mf) as f64 - target).abs();
+            if err < best_err {
+                best_err = err;
+                best = mf;
+            }
+        }
+        best
     }
 }
 
@@ -438,6 +516,43 @@ mod tests {
             "diff_every=4: only 16 chain objects per full epoch"
         );
         assert_eq!(sparse.compaction_policy(640, 1), 20, "160 objects / target 8");
+    }
+
+    #[test]
+    fn replay_bound_matches_the_hierarchy() {
+        assert_eq!(replay_bound(0, 4), 1, "empty chain: base only");
+        assert_eq!(replay_bound(1, 4), 2, "one raw diff + base");
+        assert_eq!(replay_bound(64, 4), 13, "4·⌈log4 64⌉ + 1, exact power");
+        assert_eq!(replay_bound(65, 4), 17, "one past the power adds a level");
+        assert_eq!(replay_bound(512, 2), 19, "2·9 + 1");
+        assert_eq!(replay_bound(512, 8), 25, "8·3 + 1");
+    }
+
+    #[test]
+    fn full_free_mode_pins_fulls_off_and_steers_the_fan_out() {
+        let mut a = Actuator::new(
+            params(900.0, 2.5e9),
+            1.9,
+            Retune { full_every: 0, batch_size: 1, compact_every: 0 },
+            ActuatorConfig {
+                full_every_bounds: (0, 0),
+                cooldown_ticks: 0,
+                ..Default::default()
+            },
+        );
+        a.note_chain_objects(512);
+        let mut last = None;
+        for _ in 0..20 {
+            if let Some(r) = a.tick_window(&Window { dt_secs: 100.0, ..Default::default() }) {
+                last = Some(r);
+            }
+        }
+        let r = last.expect("enabling compaction on an unbounded chain must fire");
+        assert_eq!(r.full_every, 0, "full-free: the FCF knob stays pinned at 0");
+        assert!(r.compact_every >= 2, "an unbounded chain must compact: {r:?}");
+        // target 8 is below any achievable bound at n=512; the policy
+        // lands on the fan-out minimizing mf·⌈log_mf n⌉ + 1 (= 19 here)
+        assert_eq!(replay_bound(512, r.compact_every), 19, "{r:?}");
     }
 
     #[test]

@@ -31,6 +31,6 @@ pub mod actuate;
 pub mod iosched;
 pub mod telemetry;
 
-pub use actuate::{converge_synthetic, Actuator, ActuatorConfig, Retune, Window};
+pub use actuate::{converge_synthetic, replay_bound, Actuator, ActuatorConfig, Retune, Window};
 pub use iosched::{GatedStore, IoGate, IoGateConfig, IoGateStats, PersistGuard};
 pub use telemetry::{BwEstimator, MtbfEstimator, Snapshot, TelemetryBus};

@@ -43,7 +43,7 @@ use crate::control::iosched::{IoGate, IoGateConfig};
 use crate::control::telemetry::TelemetryBus;
 use crate::coordinator::reusing_queue::ReusingQueue;
 use crate::optim::ModelState;
-use crate::pipeline::{Compactor, CompactorConfig, Encoded, Encoder, Sink};
+use crate::pipeline::{Compactor, CompactorConfig, Encoded, Encoder, Sink, DEFAULT_MAX_LEVEL};
 use crate::sparse::SparseGrad;
 use crate::storage::{Sharded, StorageBackend};
 use crate::tensor::Flat;
@@ -223,6 +223,7 @@ impl WritePath {
                     // in-flight write, so live passes must not touch them
                     // (the shutdown pass, post-barrier, settles everything)
                     settle_tail: if cfg.uses_engine() { cfg.inflight_cap() } else { 0 },
+                    max_level: DEFAULT_MAX_LEVEL,
                 },
                 gate,
                 cfg.telemetry.clone(),
@@ -337,6 +338,8 @@ fn run_loop(
         let mut s = stats.lock().unwrap();
         s.merged_written += cst.merged_written;
         s.raw_compacted += cst.raw_compacted;
+        s.spans_compacted += cst.spans_compacted;
+        s.max_level = s.max_level.max(cst.max_level);
     }
     wp.sink.finish(&stats);
 }
@@ -614,8 +617,13 @@ mod tests {
         let (plain_store, plain_stats) = run(0);
         let (cmp_store, cmp_stats) = run(3);
         assert_eq!(plain_stats.merged_written, 0);
-        assert_eq!(cmp_stats.merged_written, 3, "9 diffs at mf=3 -> 3 merged spans");
+        assert_eq!(
+            cmp_stats.merged_written, 4,
+            "9 diffs at mf=3 -> 3 level-1 spans -> 1 level-2 super-span"
+        );
         assert_eq!(cmp_stats.raw_compacted, 9);
+        assert_eq!(cmp_stats.spans_compacted, 3, "the level-1 spans were absorbed");
+        assert_eq!(cmp_stats.max_level, 2);
 
         let adam = Adam::default();
         let sig = model_signature("t", n);
@@ -625,7 +633,8 @@ mod tests {
             recover(cmp_store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
         assert_eq!(a, b, "compacted replay must be bit-identical");
         assert_eq!(astats.n_diff_objects, 9);
-        assert_eq!(bstats.n_diff_objects, 3, "replay fetches merged spans, not raw diffs");
+        assert_eq!(bstats.n_diff_objects, 1, "the whole chain replays from one super-span");
+        assert_eq!(bstats.max_level, 2);
         assert_eq!(bstats.n_diff_steps, 9, "every step still replays");
         assert_eq!(bstats.recovered_step, 9);
     }

@@ -177,6 +177,21 @@ impl TrainConfig {
     }
 }
 
+/// Is a periodic-full action due at `target`? `every = 0` is the
+/// `full_every = ∞` full-free mode — the base full written at anchor
+/// time is the only one; every later persist is a diff plus hierarchical
+/// background merging. Shared by every `full_every`-cadenced site so no
+/// strategy arm ever computes `target % 0`.
+pub fn full_due(target: u64, every: u64) -> bool {
+    every != 0 && target % every == 0
+}
+
+/// Control ticks need a cadence even with the full-epoch boundary gone
+/// (`full_every = 0`): tick every this many iterations in full-free runs
+/// (retunes still apply at safe points — checkpointer queue order /
+/// committed cluster records — so an off-epoch tick cannot tear a chain).
+const FULL_FREE_TICK_EVERY: u64 = 64;
+
 /// Deterministic synthetic corpus: a fixed bank of zipf-token "sentences"
 /// the model can actually learn (loss falls well below ln(vocab)).
 pub struct Corpus {
@@ -247,9 +262,15 @@ pub fn train(
     // values and is what the loop consults, so a retune applies from the
     // next epoch without mutating the caller's config
     let mut eff = cfg.clone();
-    let bus: Option<Arc<TelemetryBus>> = (cfg.adaptive
-        && cfg.strategy == StrategyKind::LowDiff)
-        .then(|| Arc::new(TelemetryBus::new()));
+    let adaptive_strategy = matches!(
+        cfg.strategy,
+        StrategyKind::LowDiff
+            | StrategyKind::LowDiffPlus
+            | StrategyKind::CheckFreq
+            | StrategyKind::Gemini
+    );
+    let bus: Option<Arc<TelemetryBus>> =
+        (cfg.adaptive && adaptive_strategy).then(|| Arc::new(TelemetryBus::new()));
     let mut actuator: Option<Actuator> = None;
 
     // per-strategy checkpointing processes
@@ -265,8 +286,12 @@ pub fn train(
         };
     let mut procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &bus);
     // anchor the differential chain: a recovery needs a base full
-    // checkpoint (Eq. (6) starts from C^F)
+    // checkpoint (Eq. (6) starts from C^F) — in the full-free mode this is
+    // the ONLY full the run ever writes
     anchor_chain(&mut procs, &state, &mut report);
+    // step the current chain re-based at, for the full-free actuator's
+    // chain-object estimate
+    let mut anchor_step: u64 = state.step;
 
     let mut step: u64 = state.step; // completed productive steps
     let mut prev_state_for_dc: Option<ModelState> = if cfg.strategy == StrategyKind::NaiveDc {
@@ -372,18 +397,20 @@ pub fn train(
         let tstall = Instant::now();
         match (&mut procs, cfg.strategy) {
             (Procs::LowDiff { ckpt }, StrategyKind::LowDiff) => {
-                if target % eff.full_every == 0 {
+                if full_due(target, eff.full_every) {
                     let snap = state.clone(); // snapshot stall
                     ckpt.queue.put(target, Arc::new(CkptItem::Full(snap)));
                     report.full_ckpts += 1;
+                    anchor_step = target;
                 }
             }
             (Procs::Cluster { cluster }, StrategyKind::LowDiff) => {
-                if target % eff.full_every == 0 {
+                if full_due(target, eff.full_every) {
                     // slice fan-out is the snapshot copy, one rank at a time
                     report.queue_blocked_secs +=
                         cluster.put_full(target, &state).as_secs_f64();
                     report.full_ckpts += 1;
+                    anchor_step = target;
                 }
             }
             (Procs::NaiveDc { ckpt }, StrategyKind::NaiveDc) => {
@@ -408,7 +435,7 @@ pub fn train(
                         .as_secs_f64();
                     report.diff_ckpts += 1;
                 }
-                if target % eff.full_every == 0 {
+                if full_due(target, eff.full_every) {
                     ckpt.queue.put(target, Arc::new(CkptItem::Full(state.clone())));
                     report.full_ckpts += 1;
                 }
@@ -418,7 +445,7 @@ pub fn train(
                 // CheckFreq: snapshot (copy) on the training path every
                 // interval; persist decoupled on the checkpointer thread.
                 // A busy persist pipeline back-pressures through the queue.
-                if target % eff.full_every == 0 {
+                if full_due(target, eff.full_every) {
                     let snap = state.clone();
                     report.queue_blocked_secs += ckpt
                         .queue
@@ -435,14 +462,14 @@ pub fn train(
                     .put(target, Arc::new(CkptItem::Full(snap)))
                     .as_secs_f64();
                 report.full_ckpts += 1;
-                if target % eff.full_every == 0 {
+                if full_due(target, eff.full_every) {
                     disk.queue.put(target, Arc::new(CkptItem::Full(state.clone())));
                 }
             }
             (Procs::Sync, StrategyKind::TorchSave) => {
                 // fully synchronous torch.save: encode + write on the
                 // training path (the Exp. 1 worst case)
-                if target % eff.full_every == 0 {
+                if full_due(target, eff.full_every) {
                     let bytes = write_full(&state, sig, cfg.codec)?;
                     report.bytes_written += bytes.len() as u64;
                     report.writes += 1;
@@ -462,11 +489,24 @@ pub fn train(
             );
             // safe point: a full-checkpoint epoch boundary — the chain
             // re-bases here, so a new (FCF, BS, mf) can't tear a batch or
-            // a committed epoch mid-flight
-            if target % eff.full_every == 0 {
+            // a committed epoch mid-flight. Full-free runs have no epoch
+            // boundary, so they tick on a fixed cadence instead; the knobs
+            // still apply at safe points (checkpointer queue order /
+            // committed cluster records)
+            let tick_due = if eff.full_every == 0 {
+                target % FULL_FREE_TICK_EVERY == 0
+            } else {
+                target % eff.full_every == 0
+            };
+            if tick_due {
                 let iter_time = (wall0.elapsed().as_secs_f64() / target as f64).max(1e-6);
                 let act = actuator
                     .get_or_insert_with(|| make_actuator(cfg, layout, n, &eff, iter_time));
+                // the hierarchical merge-factor policy steers off the live
+                // chain length: one chain object lands per batch flush of
+                // `batch_size` diffs, each `diff_every` steps apart
+                let per_object = eff.diff_every.max(1) * eff.batch_size.max(1) as u64;
+                act.note_chain_objects(target.saturating_sub(anchor_step) / per_object);
                 if let Some(r) = act.tick(bus) {
                     log::info!(
                         "§V-C retune at step {target}: full_every {} -> {}, batch {} -> {}, \
@@ -500,6 +540,12 @@ pub fn train(
                             // same committed epoch
                             cluster.set_compact_every(r.compact_every);
                         }
+                        Procs::Plus { plus } => {
+                            // the persist boundary is LowDiff+'s safe
+                            // point: the assembler reads the knob between
+                            // applied steps, never mid-persist
+                            plus.set_persist_every(r.full_every);
+                        }
                         _ => {}
                     }
                 }
@@ -518,8 +564,9 @@ pub fn train(
         {
             report.recoveries += 1;
             let t0 = Instant::now();
-            let (recovered, from_memory) =
-                handle_failure(kind, cfg, procs, &logical, &mem_tier, sig, &adam, &params0)?;
+            let (recovered, from_memory) = handle_failure(
+                kind, cfg, procs, &logical, &mem_tier, sig, &adam, &params0, &mut report,
+            )?;
             let lost = step.saturating_sub(recovered.step);
             report.lost_iters += lost;
             log::info!(
@@ -540,12 +587,52 @@ pub fn train(
             // carrying the retuned effective config forward
             procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &bus);
             anchor_chain(&mut procs, &state, &mut report);
+            anchor_step = state.step;
             report.recovery_secs += t0.elapsed().as_secs_f64();
         }
     }
 
     // graceful shutdown: drain checkpointers, merge their stats
+    let was_cluster = matches!(procs, Procs::Cluster { .. });
     finish_procs(procs, &mut report);
+    // satellite: the recovery bound must be observable in EVERY run, not
+    // just ones that hit a failure — probe the settled chain's cover
+    if !was_cluster && cfg.strategy == StrategyKind::LowDiff {
+        if let Ok(chain) = Manifest::latest_chain(logical.as_ref()) {
+            let objects = chain.full.is_some() as usize + chain.diffs.len();
+            let deepest = chain
+                .diffs
+                .iter()
+                .map(|d| Manifest::span_level(&d.2))
+                .max()
+                .unwrap_or(0);
+            report.replay_objects = report.replay_objects.max(objects);
+            report.max_level = report.max_level.max(deepest);
+        }
+    } else if was_cluster {
+        // names-only probe of the newest generation's per-rank covers
+        let view = crate::storage::Sharded::new(Arc::clone(&store), 1, 1);
+        if let (Ok(g), Ok(names)) = (cluster::next_generation(&store), view.list()) {
+            if g > 0 {
+                let mut objects = 0usize;
+                let mut deepest = 0u16;
+                for rank in 0..cfg.ranks {
+                    let chain = Manifest::gen_rank_chain(&names, g - 1, rank, u64::MAX);
+                    objects += chain.full.is_some() as usize + chain.diffs.len();
+                    deepest = deepest.max(
+                        chain
+                            .diffs
+                            .iter()
+                            .map(|d| Manifest::span_level(&d.2))
+                            .max()
+                            .unwrap_or(0),
+                    );
+                }
+                report.replay_objects = report.replay_objects.max(objects);
+                report.max_level = report.max_level.max(deepest);
+            }
+        }
+    }
     report.iters = step;
     report.wall_secs = wall0.elapsed().as_secs_f64();
     report.final_full_every = eff.full_every;
@@ -589,6 +676,14 @@ fn make_actuator(
             // the compaction policy sizes merge factors from the REAL
             // chain-object cadence, not raw iterations
             diff_every: cfg.diff_every.max(1),
+            // `--full-every 0` opts the whole run into the full-free mode:
+            // (0, 0) bounds pin fulls off and switch the compaction policy
+            // to the replay-bound-targeting hierarchical fan-out
+            full_every_bounds: if cfg.full_every == 0 {
+                (0, 0)
+            } else {
+                ActuatorConfig::default().full_every_bounds
+            },
             ..ActuatorConfig::default()
         },
     )
@@ -733,6 +828,7 @@ fn handle_failure(
     sig: u64,
     adam: &Adam,
     params0: &Flat,
+    report: &mut RunReport,
 ) -> Result<(ModelState, bool)> {
     // software failure: the checkpointing process survives; LowDiff+
     // recovers from its CPU replica, Gemini from the memory tier
@@ -749,12 +845,12 @@ fn handle_failure(
             mem.finish();
             match recover(mem_tier.as_ref(), sig, adam, cfg.recovery_mode) {
                 Ok((s, _)) => Ok((s, true)),
-                Err(_) => recover_from_disk(store, sig, adam, cfg, params0),
+                Err(_) => recover_from_disk(store, sig, adam, cfg, params0, report),
             }
         }
         (Procs::Plus { plus }, FailureKind::Hardware) => {
             plus.abort();
-            recover_from_disk(store, sig, adam, cfg, params0)
+            recover_from_disk(store, sig, adam, cfg, params0, report)
         }
         (Procs::Cluster { cluster }, _) => {
             // any failure kills the rank processes and the coordinator;
@@ -765,6 +861,8 @@ fn handle_failure(
             drop(cluster);
             match cluster::recover_cluster(store, sig, adam) {
                 Ok((s, stats)) => {
+                    report.replay_objects = report.replay_objects.max(stats.replay_objects);
+                    report.max_level = report.max_level.max(stats.max_level);
                     log::debug!(
                         "cluster recovery: cut step {} (gen {}) across {} ranks ({} diff steps)",
                         stats.cut_step,
@@ -793,7 +891,7 @@ fn handle_failure(
                 }
                 _ => {}
             }
-            recover_from_disk(store, sig, adam, cfg, params0)
+            recover_from_disk(store, sig, adam, cfg, params0, report)
         }
     }
 }
@@ -804,6 +902,7 @@ fn recover_from_disk(
     adam: &Adam,
     cfg: &TrainConfig,
     params0: &Flat,
+    report: &mut RunReport,
 ) -> Result<(ModelState, bool)> {
     match recover(store.as_ref(), sig, adam, cfg.recovery_mode) {
         Ok((s, stats)) => {
@@ -812,6 +911,9 @@ fn recover_from_disk(
                 stats.n_diff_steps,
                 stats.full_merge_rounds
             );
+            // cover objects = the base full + every chain object replayed
+            report.replay_objects = report.replay_objects.max(1 + stats.n_diff_objects);
+            report.max_level = report.max_level.max(stats.max_level);
             Ok((s, false))
         }
         Err(e) => {
@@ -844,7 +946,9 @@ fn finish_procs(procs: Procs, report: &mut RunReport) {
             // any one rank's CkptStats
             report.merged_written += cs.merged_written;
             report.raw_compacted += cs.raw_compacted;
+            report.spans_compacted += cs.spans_compacted;
             report.compact_secs += cs.compact_secs;
+            report.max_level = report.max_level.max(cs.max_level);
         }
         Procs::Plus { plus } => {
             let s = plus.finish();

@@ -51,6 +51,8 @@ pub struct LowDiffPlus {
     stats: Arc<Mutex<PlusStats>>,
     /// last step fully applied to the replica
     applied_step: Arc<AtomicU64>,
+    /// live persistence cadence (control-plane knob; 0 = never persist)
+    persist_every: Arc<AtomicU64>,
     discard: Arc<AtomicBool>,
     assembler: Option<JoinHandle<()>>,
     snapshot_pool: Vec<JoinHandle<()>>,
@@ -58,6 +60,8 @@ pub struct LowDiffPlus {
 
 pub struct PlusConfig {
     pub model_sig: u64,
+    /// replica persistence cadence in applied steps; 0 = never persist
+    /// (the replica stays memory-only)
     pub persist_every: u64,
     pub codec: PayloadCodec,
     pub queue_capacity: usize,
@@ -81,6 +85,7 @@ impl LowDiffPlus {
         let replica = Arc::new(Mutex::new(initial));
         let stats = Arc::new(Mutex::new(PlusStats::default()));
         let applied_step = Arc::new(AtomicU64::new(0));
+        let persist_every = Arc::new(AtomicU64::new(cfg.persist_every));
         let discard = Arc::new(AtomicBool::new(false));
 
         // staging buffer: one slot per tensor, written by the snapshot
@@ -128,6 +133,7 @@ impl LowDiffPlus {
         let rep = Arc::clone(&replica);
         let st = Arc::clone(&stats);
         let applied = Arc::clone(&applied_step);
+        let pev = Arc::clone(&persist_every);
         let disc = Arc::clone(&discard);
         let tensors2 = Arc::clone(&tensors);
         let staging2 = Arc::clone(&staging);
@@ -173,7 +179,11 @@ impl LowDiffPlus {
                             let buf = staging2[idx].lock().unwrap();
                             cfg.adam.apply_range(&mut r, &buf, off, step_now);
                         }
-                        let snapshot_state = if cur_step % cfg.persist_every == 0 {
+                        // live knob read at the persist boundary — the
+                        // §V-C actuator retunes the cadence between
+                        // applied steps, never mid-persist; 0 disables
+                        let every = pev.load(Ordering::Relaxed);
+                        let snapshot_state = if every != 0 && cur_step % every == 0 {
                             Some(r.clone())
                         } else {
                             None
@@ -217,10 +227,19 @@ impl LowDiffPlus {
             replica,
             stats,
             applied_step,
+            persist_every,
             discard,
             assembler: Some(assembler),
             snapshot_pool,
         }
+    }
+
+    /// Retune the replica-persistence cadence live (§V-C actuation for the
+    /// LowDiff+ runtime). Takes effect at the next applied step — the
+    /// assembler reads the knob only at its persist boundary, so a retune
+    /// can never tear a persist in progress. `0` disables persistence.
+    pub fn set_persist_every(&self, every: u64) {
+        self.persist_every.store(every, Ordering::Relaxed);
     }
 
     /// Enqueue every layer of a step's gradient, zero-copy (Alg. 2 line 16).
@@ -392,6 +411,42 @@ mod tests {
         let disk = read_full(&store.get(&names[0]).unwrap(), sig).unwrap();
         assert_eq!(disk.step, 4);
         assert_eq!(replica.step, 5);
+    }
+
+    #[test]
+    fn persist_cadence_retunes_live_and_zero_disables() {
+        let layout = tiny_layout(3, 20);
+        let n = layout.n_params;
+        let sig = model_signature("t", n);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        // spawn with persistence DISABLED (0 = never): the full-free
+        // spawn path must not divide by the cadence
+        let plus = LowDiffPlus::spawn(
+            &layout,
+            ModelState::new(Flat(vec![0.1; n])),
+            Arc::clone(&store),
+            cfg(sig, 0),
+        );
+        let mut rng = Rng::new(7);
+        let mut put = |plus: &LowDiffPlus, step: u64| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            plus.put_step(step, Arc::new(Flat(g)), &layout);
+        };
+        for step in 1..=3u64 {
+            put(&plus, step);
+        }
+        plus.wait_applied(3);
+        assert_eq!(plus.stats().persisted, 0, "cadence 0 never persists");
+        // §V-C actuation: the knob lands at the next persist boundary
+        plus.set_persist_every(1);
+        for step in 4..=5u64 {
+            put(&plus, step);
+        }
+        plus.wait_applied(5);
+        let stats = plus.finish();
+        assert_eq!(stats.persisted, 2, "steps 4 and 5 under the retuned cadence");
+        assert_eq!(store.list().unwrap(), vec![Manifest::full_name(5)]);
     }
 
     #[test]

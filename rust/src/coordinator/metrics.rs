@@ -43,9 +43,19 @@ pub struct RunReport {
     pub pool_hits: u64,
     pub pool_misses: u64,
     /// merged differential spans written by the background chain compactor
+    /// (all levels of the hierarchy)
     pub merged_written: u64,
     /// raw diff objects superseded (and collected) by merged spans
     pub raw_compacted: u64,
+    /// level-k (k ≥ 1) spans superseded by level-(k+1) super-spans
+    pub spans_compacted: u64,
+    /// chain objects a recovery replays (base full included) — observed at
+    /// each actual recovery and probed from the settled chain at run end;
+    /// with the hierarchy it is bounded by `mf·⌈log_mf n⌉ + 1` per chain
+    /// even with fulls disabled (`full_every = ∞`)
+    pub replay_objects: usize,
+    /// deepest hierarchical-compaction span level reached (0 = all raw)
+    pub max_level: u16,
     /// fast→durable tier spill traffic (Tiered backend)
     pub spill_bytes: u64,
     /// peak logical checkpoint writes in flight on the writer pool
@@ -107,6 +117,8 @@ impl RunReport {
         self.inflight_peak = self.inflight_peak.max(s.inflight_peak);
         self.merged_written += s.merged_written;
         self.raw_compacted += s.raw_compacted;
+        self.spans_compacted += s.spans_compacted;
+        self.max_level = self.max_level.max(s.max_level);
     }
 
     /// Checkpointing overhead relative to pure compute+sync (the paper's
@@ -136,7 +148,8 @@ impl RunReport {
     pub fn row(&self) -> String {
         format!(
             "{:<12} iters={:<5} wall={:>8.2}s compute={:>7.2}s stall={:>6.2}s qblk={:>6.2}s \
-             overhead={:>5.1}% full={} diff={} writes={} bytes={} rec={} loss={}",
+             overhead={:>5.1}% full={} diff={} writes={} bytes={} rec={} replay={} lvl={} \
+             loss={}",
             self.strategy,
             self.iters,
             self.wall_secs,
@@ -149,6 +162,8 @@ impl RunReport {
             self.writes,
             crate::util::human_bytes(self.bytes_written),
             self.recoveries,
+            self.replay_objects,
+            self.max_level,
             self.final_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
         )
     }

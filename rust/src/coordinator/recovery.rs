@@ -60,6 +60,10 @@ pub struct RecoveryStats {
     /// parallel recovery instead of re-merging the per-step payloads
     /// (ParallelMerge only; serial replay always replays per step)
     pub merged_sums_used: usize,
+    /// deepest hierarchical-compaction span level in the replayed cover
+    /// (0 = all raw): with the hierarchy, `n_diff_objects` is bounded by
+    /// `mf·⌈log_mf steps⌉ + 1` even with fulls disabled (`full_every = ∞`)
+    pub max_level: u16,
 }
 
 /// Parallel object fetch: shard-aware backends ([`Sharded`]
@@ -174,6 +178,7 @@ fn load_diffs(
                 let mut sum = None;
                 if kind == CkptKind::MergedDiff {
                     stats.merged_objects += 1;
+                    stats.max_level = stats.max_level.max(Manifest::span_level(name));
                     // the precomputed union-sum stands in for re-merging
                     // ONLY when it covers exactly the replayed steps
                     if items.len() == total && items.len() >= 2 {

@@ -546,28 +546,31 @@ pub fn exp_cluster() -> Table {
     t
 }
 
-/// Chain-compaction scan (real path, not simulated): one fixed training
-/// timeline (anchor full + 24 diffs) persisted through the checkpointer
-/// at several compaction merge factors, then recovered. Columns report
-/// the incremental-merging payoff: chain objects on the store, objects a
-/// replay fetches, merged spans written — and that the recovered state
-/// stays bit-identical to the uncompacted chain.
+/// Chain-compaction scan (real path, not simulated): full-free training
+/// timelines (one anchor full, then only diffs — `full_every = ∞`)
+/// persisted through the checkpointer at several hierarchical merge
+/// factors, then recovered. Columns report the log-structured payoff:
+/// chain objects on the store, objects a replay fetches, the
+/// `mf·⌈log_mf n⌉+1` bound, the deepest span level, merged spans written
+/// across all levels — and that the recovered state stays bit-identical
+/// to the uncompacted chain.
 pub fn exp_compaction() -> Table {
     use crate::checkpoint::batched::BatchMode;
     use crate::checkpoint::format::{model_signature, PayloadCodec};
     use crate::compress::topk_mask;
+    use crate::control::replay_bound;
     use crate::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
     use crate::coordinator::recovery::{recover, RecoveryMode};
     use crate::optim::{Adam, ModelState};
     use crate::storage::{MemStore, StorageBackend};
     use crate::tensor::Flat;
     use crate::util::rng::Rng;
+    use std::collections::HashMap;
     use std::sync::Arc;
 
     let n: usize = 8 * 1024;
-    let steps: u64 = 24;
     let sig = model_signature("compaction-exp", n);
-    let run = |compact_every: usize| {
+    let run = |compact_every: usize, steps: u64| {
         let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
         let cfg = CkptConfig {
             model_sig: sig,
@@ -595,14 +598,29 @@ pub fn exp_compaction() -> Table {
     };
 
     let mut t = Table::new(
-        "Chain compaction — replay objects touched vs merge factor (24 diffs)",
-        &["merge factor", "chain objects", "replay objects", "merged spans", "bit-identical"],
+        "Hierarchical compaction — replay objects vs merge factor (full-free chains)",
+        &[
+            "merge factor",
+            "diffs",
+            "chain objects",
+            "replay objects",
+            "bound",
+            "max level",
+            "merged spans",
+            "bit-identical",
+        ],
     );
-    // the mf=0 row doubles as the bit-identity baseline (one run, not two)
-    let mut baseline: Option<ModelState> = None;
-    for mf in [0usize, 2, 4, 8] {
-        let (store, stats, state, rstats) = run(mf);
-        let baseline = baseline.get_or_insert_with(|| state.clone());
+    // uncompacted runs of the same timeline are the bit-identity oracle
+    let mut baselines: HashMap<u64, ModelState> = HashMap::new();
+    for (mf, steps) in [(0usize, 24u64), (2, 24), (4, 24), (8, 24), (4, 96)] {
+        let (store, stats, state, rstats) = run(mf, steps);
+        let baseline = baselines.entry(steps).or_insert_with(|| {
+            if mf == 0 {
+                state.clone()
+            } else {
+                run(0, steps).2
+            }
+        });
         let chain_objects = store
             .list()
             .unwrap()
@@ -616,8 +634,11 @@ pub fn exp_compaction() -> Table {
             .count();
         t.row(vec![
             if mf < 2 { "off".into() } else { mf.to_string() },
+            steps.to_string(),
             chain_objects.to_string(),
             rstats.n_diff_objects.to_string(),
+            if mf < 2 { steps.to_string() } else { replay_bound(steps, mf).to_string() },
+            rstats.max_level.to_string(),
             stats.merged_written.to_string(),
             if state == *baseline { "yes".into() } else { "NO".into() },
         ]);
@@ -788,23 +809,35 @@ mod tests {
 
     #[test]
     fn compaction_table_bounds_replay_and_stays_bit_identical() {
+        use crate::control::replay_bound;
         let t = exp_compaction();
-        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows.len(), 5);
         for row in &t.rows {
-            assert_eq!(row[4], "yes", "compacted recovery diverged: {row:?}");
-            let replay: u64 = row[2].parse().unwrap();
+            assert_eq!(row[7], "yes", "compacted recovery diverged: {row:?}");
+            let steps: u64 = row[1].parse().unwrap();
+            let replay: u64 = row[3].parse().unwrap();
             if row[0] == "off" {
                 assert_eq!(replay, 24, "uncompacted replay touches every diff");
-            } else {
-                let mf: u64 = row[0].parse().unwrap();
-                assert!(
-                    replay <= 24_u64.div_ceil(mf) + 1,
-                    "mf={mf}: replay objects {replay} above the compaction bound"
-                );
-                let merged: u64 = row[3].parse().unwrap();
-                assert_eq!(merged, 24 / mf, "every complete run must merge");
+                continue;
             }
+            let mf: usize = row[0].parse().unwrap();
+            assert!(
+                replay <= replay_bound(steps, mf),
+                "mf={mf}, n={steps}: replay objects {replay} above the \
+                 hierarchical bound {}",
+                replay_bound(steps, mf)
+            );
+            let max_level: u16 = row[5].parse().unwrap();
+            assert!(max_level >= 1, "the hierarchy must engage: {row:?}");
+            // the settled chain IS the replay cover — nothing extra on disk
+            assert_eq!(row[2], row[3], "chain objects == replay objects: {row:?}");
         }
+        // the log-structured payoff: quadrupling the chain (24 -> 96 diffs
+        // at mf=4) must NOT grow the replay cover — deeper levels absorb it
+        let replay_24: u64 = t.rows[2][3].parse().unwrap();
+        let replay_96: u64 = t.rows[4][3].parse().unwrap();
+        assert_eq!(replay_24, 3, "24 diffs at mf=4 -> L2(1-16) + two L1 tails");
+        assert_eq!(replay_96, 3, "96 diffs at mf=4 -> L3(1-64) + two L2 tails");
     }
 
     #[test]

@@ -28,6 +28,10 @@ commands:
            [--iters N] [--workers W] [--full-every F] [--batch-size B]
            [--diff-every D] [--ckpt-dir DIR] [--mtbf SECS] [--zstd]
            [--batch-mode sum|concat] [--seed S]
+                          --full-every 0 = full-free mode (lowdiff): the
+                          anchor full is the only one ever written; the
+                          hierarchical compactor bounds recovery replay
+                          at mf*ceil(log_mf n)+1 objects
            [--shards N]   checkpoint shards per object (>1 = sharded async engine)
            [--writers W]  storage writer-pool threads for the sharded engine
            [--ranks R]    cluster ranks (>1 = per-rank chains + two-phase
@@ -38,7 +42,8 @@ commands:
            [--adaptive]   closed-loop §V-C control plane: measure MTBF /
                           write bandwidth / replay ratio at runtime and
                           retune full-every, batch-size and compact-every
-                          live at epoch boundaries (lowdiff strategy)
+                          live at safe points (lowdiff, lowdiff+,
+                          checkfreq, gemini)
            [--io-budget B] background-I/O byte budget (bytes/sec) for the
                           compaction scheduler's token-bucket gate; the
                           gate always yields to in-flight persists
@@ -102,8 +107,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.ranks > 1 && !cfg.uses_cluster() {
         bail!("--ranks > 1 requires --strategy lowdiff (the cluster runtime)");
     }
-    if cfg.adaptive && strategy != StrategyKind::LowDiff {
-        bail!("--adaptive requires --strategy lowdiff (the §V-C control plane)");
+    let adaptive_ok = matches!(
+        strategy,
+        StrategyKind::LowDiff
+            | StrategyKind::LowDiffPlus
+            | StrategyKind::CheckFreq
+            | StrategyKind::Gemini
+    );
+    if cfg.adaptive && !adaptive_ok {
+        bail!(
+            "--adaptive requires a checkpointing strategy with a retunable \
+             interval (lowdiff, lowdiff+, checkfreq, gemini)"
+        );
+    }
+    if cfg.full_every == 0 && !matches!(strategy, StrategyKind::LowDiff | StrategyKind::LowDiffPlus)
+    {
+        bail!(
+            "--full-every 0 (full-free mode) needs a differential or replica \
+             runtime (lowdiff, lowdiff+); periodic-full strategies would \
+             never checkpoint"
+        );
     }
 
     let mrt = ModelRuntime::load(&artifacts_dir(), &model)

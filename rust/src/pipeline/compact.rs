@@ -15,18 +15,31 @@
 //! reconstructed state **bit-identical** (every per-step payload is
 //! preserved).
 //!
-//! ## Collectibility invariant
+//! ## Hierarchical (LSM-style) levels
 //!
-//! A raw object is deleted ONLY after the covering merged object is
-//! durable **and read back verified**. Every failure mode degrades to the
-//! uncompacted chain, never to a holed one:
-//! - merged put fails → no deletes, raw chain intact;
+//! One merge level still leaves replay linear in chain length: ⌈n/mf⌉
+//! level-1 spans. [`compact_hierarchy`] recursively merges runs of
+//! `merge_factor` *level-k* spans into one level-(k+1) super-span —
+//! complete chunks only above level 0, so at most `mf − 1` spans survive
+//! at each level — bounding replay at `mf·⌈log_mf n⌉ + 1` objects on an
+//! **unbounded** differential chain. That is what makes `full_every = ∞`
+//! a viable operating mode: the base full is written once and every later
+//! persist is a diff plus background log-structured merging (docs/
+//! PIPELINE.md §levels).
+//!
+//! ## Collectibility invariant (per level)
+//!
+//! A level-k object (raw diff/batch at k = 0) is deleted ONLY after the
+//! covering level-(k+1) object is durable **and read back verified**.
+//! Every failure mode degrades to the less-compacted chain, never to a
+//! holed one:
+//! - merged put fails → no deletes, input chain intact;
 //! - merged put is torn (reports success, truncated bytes) → read-back
-//!   verification fails, the merged object is removed, raw chain intact;
-//! - crash after the merged write, before (some) deletes → merged span
-//!   and raws coexist; chain discovery's cover selection
-//!   ([`Manifest::select_cover`]) prefers the merged span and the
-//!   leftover raws are redundant garbage the next pass/GC sweeps.
+//!   verification fails, the merged object is removed, inputs intact;
+//! - crash after the merged write, before (some) deletes → the span and
+//!   its inputs coexist; chain discovery's cover selection
+//!   ([`Manifest::select_cover`]) prefers the widest/deepest span and the
+//!   leftover inputs are redundant garbage the next pass/GC sweeps.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -39,11 +52,15 @@ use anyhow::{ensure, Context, Result};
 use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::format::{CkptKind, PayloadCodec};
 use crate::checkpoint::manifest::{Chain, Manifest};
-use crate::checkpoint::merged::write_merged;
+use crate::checkpoint::merged::write_merged_level;
 use crate::checkpoint::read_chain_object;
 use crate::control::iosched::{GatedStore, IoGate};
 use crate::control::telemetry::TelemetryBus;
 use crate::storage::StorageBackend;
+
+/// Default hierarchy cap: with `merge_factor ≥ 2`, 16 levels cover 2^16
+/// chain objects — effectively unbounded for any real run.
+pub const DEFAULT_MAX_LEVEL: usize = 16;
 
 /// Configuration of a compaction pass / background compactor.
 #[derive(Clone, Copy, Debug)]
@@ -63,6 +80,11 @@ pub struct CompactorConfig {
     /// every object at the pass horizon is known durable (direct mode,
     /// the post-barrier shutdown pass, cluster post-commit passes).
     pub settle_tail: usize,
+    /// cap on the span hierarchy: level-k runs merge into level-(k+1)
+    /// super-spans only while `k < max_level` ([`compact_hierarchy`]).
+    /// 1 confines compaction to the single historical level;
+    /// [`DEFAULT_MAX_LEVEL`] is effectively unbounded.
+    pub max_level: usize,
 }
 
 /// Compaction counters.
@@ -80,6 +102,11 @@ pub struct CompactStats {
     /// superseded raws whose delete failed but whose fast-tier copy was
     /// dropped ([`StorageBackend::demote`] — tiered placement)
     pub raw_demoted: u64,
+    /// level-k merged spans superseded by a level-(k+1) super-span and
+    /// deleted (hierarchical compaction)
+    pub spans_compacted: u64,
+    /// deepest span level written so far (0 = nothing merged yet)
+    pub max_level: u16,
 }
 
 /// One compaction pass over an already-discovered chain on a *logical*
@@ -148,18 +175,21 @@ fn flush_run(
     let mut written = 0usize;
     for chunk in run.chunks(cfg.merge_factor) {
         if chunk.len() == cfg.merge_factor || (merge_tail && chunk.len() >= 2) {
-            written += merge_run(store, chunk, cfg, stats)?;
+            written += merge_run(store, chunk, cfg, 1, stats)?;
         }
     }
     run.clear();
     Ok(written)
 }
 
-/// Merge one run of raw objects; returns 1 if a merged span replaced it.
+/// Merge one run of same-level chain objects into a span at `out_level`
+/// (raw diff/batch inputs at `out_level == 1`, level-(`out_level`−1)
+/// spans above); returns 1 if the super-span replaced the run.
 fn merge_run(
     store: &dyn StorageBackend,
     run: &[(u64, u64, String)],
     cfg: &CompactorConfig,
+    out_level: u16,
     stats: &mut CompactStats,
 ) -> Result<usize> {
     let lo = run[0].0;
@@ -172,43 +202,141 @@ fn merge_run(
         stats.bytes_read += bytes.len() as u64;
         let (kind, decoded) = read_chain_object(&bytes, cfg.model_sig)
             .with_context(|| format!("compacting {name}"))?;
-        // the name filter already excluded merged spans; re-merging one
-        // would nest spans, so reject defensively
-        ensure!(kind != CkptKind::MergedDiff, "merged span {name} in a raw diff run");
+        // the name filter already fixed each run's level; a mismatching
+        // container kind means the store lied — reject defensively
+        if out_level == 1 {
+            ensure!(kind != CkptKind::MergedDiff, "merged span {name} in a raw diff run");
+        } else {
+            ensure!(kind == CkptKind::MergedDiff, "raw object {name} in a span-level run");
+        }
         items.extend(decoded);
     }
-    // the merged span lives in the same namespace as the raws it covers
+    // the merged span lives in the same namespace as the inputs it covers
     // (generation/rank-namespaced for cluster chains, top-level for flat
     // chains) — take the directory prefix of the run's first object so
     // any namespace depth works
     let prefix = run[0].2.rfind('/').map(|i| &run[0].2[..i + 1]).unwrap_or("");
-    let name = format!("{prefix}{}", Manifest::merged_name(lo, hi));
-    let bytes = write_merged(&items, cfg.model_sig, lo, hi, cfg.codec)?;
+    let name = format!("{prefix}{}", Manifest::merged_level_name(lo, hi, out_level));
+    let bytes = write_merged_level(&items, cfg.model_sig, lo, hi, out_level, cfg.codec)?;
     store
         .put(&name, &bytes)
         .with_context(|| format!("writing merged span {name}"))?;
     // verify-before-delete: a torn merged write must never orphan the span
     let verified = store.get(&name).map(|b| b == bytes).unwrap_or(false);
     if !verified {
-        log::warn!("merged span {name} failed read-back verification; keeping the raw chain");
+        log::warn!("merged span {name} failed read-back verification; keeping the input chain");
         stats.aborted_merges += 1;
         let _ = store.delete(&name);
         return Ok(0);
     }
     stats.bytes_written += bytes.len() as u64;
     stats.merged_written += 1;
-    for (_, _, raw) in run {
-        // best-effort: a leftover raw is redundant (cover selection
-        // prefers the merged span); the next pass or GC sweeps it. A raw
-        // that cannot be deleted is at least demoted out of the fast tier
-        // (write-cold from here on — tiered placement, docs/STORAGE.md).
-        if store.delete(raw).is_ok() {
-            stats.raw_compacted += 1;
-        } else if store.demote(raw).unwrap_or(false) {
+    stats.max_level = stats.max_level.max(out_level);
+    for (_, _, input) in run {
+        // best-effort: a leftover input is redundant (cover selection
+        // prefers the super-span); the next pass or GC sweeps it. An
+        // input that cannot be deleted is at least demoted out of the
+        // fast tier (write-cold from here on — docs/STORAGE.md).
+        if store.delete(input).is_ok() {
+            if out_level == 1 {
+                stats.raw_compacted += 1;
+            } else {
+                stats.spans_compacted += 1;
+            }
+        } else if store.demote(input).unwrap_or(false) {
             stats.raw_demoted += 1;
         }
     }
     Ok(1)
+}
+
+/// One pass over the level-`level` spans in a discovered cover:
+/// contiguous runs merge into level-(`level`+1) super-spans in complete
+/// `merge_factor` chunks ONLY — a partial chunk stays put. At most
+/// `merge_factor − 1` survivors per level is exactly what keeps replay
+/// within `mf·⌈log_mf n⌉ + 1` with zero tail-merging churn.
+fn compact_level(
+    store: &dyn StorageBackend,
+    chain: &Chain,
+    cfg: &CompactorConfig,
+    level: u16,
+    stats: &mut CompactStats,
+) -> Result<usize> {
+    let base = chain.full.as_ref().map(|(s, _)| *s).unwrap_or(0);
+    let stride = chain.stride(base);
+    let mut written = 0usize;
+    let mut run: Vec<(u64, u64, String)> = Vec::new();
+    for d in &chain.diffs {
+        if Manifest::span_level(&d.2) == level {
+            let contiguous = match run.last() {
+                Some(prev) => d.0 == prev.1 + stride,
+                None => true,
+            };
+            if !contiguous {
+                // same hole rule as level 0: never merge across a gap
+                written += flush_level_run(store, &mut run, cfg, level + 1, stats)?;
+            }
+            run.push(d.clone());
+        } else {
+            written += flush_level_run(store, &mut run, cfg, level + 1, stats)?;
+        }
+    }
+    written += flush_level_run(store, &mut run, cfg, level + 1, stats)?;
+    Ok(written)
+}
+
+/// Merge one maximal same-level run in complete `merge_factor` chunks
+/// (no tail); clears the run.
+fn flush_level_run(
+    store: &dyn StorageBackend,
+    run: &mut Vec<(u64, u64, String)>,
+    cfg: &CompactorConfig,
+    out_level: u16,
+    stats: &mut CompactStats,
+) -> Result<usize> {
+    let mut written = 0usize;
+    for chunk in run.chunks_exact(cfg.merge_factor) {
+        written += merge_run(store, chunk, cfg, out_level, stats)?;
+    }
+    run.clear();
+    Ok(written)
+}
+
+/// The full hierarchical pass on one logical chain: the level-0 raw pass
+/// ([`compact_chain`]) first, then level-k span runs into level-(k+1)
+/// super-spans until no deeper span exists or `cfg.max_level` is hit.
+/// The cover is re-discovered via `discover` between levels (each level
+/// rewrites it). `keep_going` is polled before every level ≥ 1 pass so
+/// foreground work — the cluster scheduler's level-0 job queue — is
+/// never starved by deep hierarchies; the ladder resumes from whatever
+/// the cover holds on the next pass.
+#[allow(clippy::too_many_arguments)]
+pub fn compact_hierarchy(
+    store: &dyn StorageBackend,
+    cfg: &CompactorConfig,
+    protect: &HashSet<String>,
+    merge_tail: bool,
+    stats: &mut CompactStats,
+    discover: &dyn Fn(&dyn StorageBackend) -> Result<Chain>,
+    keep_going: &mut dyn FnMut() -> bool,
+) -> Result<usize> {
+    if cfg.merge_factor < 2 {
+        return Ok(0);
+    }
+    let chain = discover(store)?;
+    let mut written = compact_chain(store, &chain, cfg, protect, merge_tail, stats)?;
+    let mut level: u16 = 1;
+    while (level as usize) < cfg.max_level && keep_going() {
+        let chain = discover(store)?;
+        let deepest =
+            chain.diffs.iter().map(|d| Manifest::span_level(&d.2)).max().unwrap_or(0);
+        if level > deepest {
+            break;
+        }
+        written += compact_level(store, &chain, cfg, level, stats)?;
+        level += 1;
+    }
+    Ok(written)
 }
 
 /// The background compaction thread the flat checkpointer runs: it wakes
@@ -323,8 +451,14 @@ fn run_loop(
                 if mf >= 2 && pending >= mf {
                     pending = 0;
                     // live pass: complete chunks only — the tail is still
-                    // growing and merging it now would strand small spans
-                    let c = CompactorConfig { merge_factor: mf, ..cfg };
+                    // growing and merging it now would strand small spans.
+                    // The settle tail is recomputed from the CURRENT merge
+                    // factor: a spawn-time snapshot sized for the old mf
+                    // can trail the visible horizon once the actuator
+                    // retunes mf above the engine's in-flight cap, letting
+                    // a pass merge into the in-flight window
+                    let settle = if cfg.settle_tail > 0 { cfg.settle_tail.max(mf) } else { 0 };
+                    let c = CompactorConfig { merge_factor: mf, settle_tail: settle, ..cfg };
                     pass(store.as_ref(), &c, &protect, false, &mut stats, &live, &bus);
                 }
             }
@@ -332,7 +466,7 @@ fn run_loop(
                 // channel closed after the writer's shutdown barrier: one
                 // final pass (tail included, everything settled) leaves
                 // the chain fully compacted — replay is bounded by
-                // ⌈n/merge_factor⌉ + 1
+                // mf·⌈log_mf n⌉ + 1 across the span hierarchy
                 let mf = merge_factor.load(Ordering::SeqCst);
                 if mf >= 2 {
                     let settled = CompactorConfig { settle_tail: 0, merge_factor: mf, ..cfg };
@@ -355,13 +489,12 @@ fn pass(
     bus: &Option<Arc<TelemetryBus>>,
 ) {
     let before = stats.clone();
-    match Manifest::latest_chain(store) {
-        Ok(chain) => {
-            if let Err(e) = compact_chain(store, &chain, cfg, protect, merge_tail, stats) {
-                log::warn!("compaction pass failed: {e:#}");
-            }
-        }
-        Err(e) => log::warn!("compaction discovery failed: {e:#}"),
+    if let Err(e) =
+        compact_hierarchy(store, cfg, protect, merge_tail, stats, &Manifest::latest_chain, &mut || {
+            true
+        })
+    {
+        log::warn!("compaction pass failed: {e:#}");
     }
     *live.lock().unwrap() = stats.clone();
     if let Some(bus) = bus {
@@ -413,6 +546,7 @@ mod tests {
             codec: PayloadCodec::Raw,
             merge_factor: mf,
             settle_tail: 0,
+            max_level: DEFAULT_MAX_LEVEL,
         }
     }
 
@@ -553,6 +687,149 @@ mod tests {
         for step in 4..=6u64 {
             assert!(store2.exists(&Manifest::diff_name(step)), "unsettled {step} stays raw");
         }
+    }
+
+    #[test]
+    fn hierarchy_merges_spans_into_logarithmic_cover() {
+        let sig = model_signature("c", 64);
+        let store = MemStore::new();
+        let items = seed_chain(&store, sig, 64);
+        let mut stats = CompactStats::default();
+        let written = compact_hierarchy(
+            &store,
+            &cfg(sig, 4),
+            &HashSet::new(),
+            true,
+            &mut stats,
+            &Manifest::latest_chain,
+            &mut || true,
+        )
+        .unwrap();
+        // 64 raws -> 16 level-1 -> 4 level-2 -> 1 level-3 super-span
+        assert_eq!(written, 21);
+        assert_eq!(stats.merged_written, 21);
+        assert_eq!(stats.raw_compacted, 64);
+        assert_eq!(stats.spans_compacted, 20, "16 L1 + 4 L2 absorbed upward");
+        assert_eq!(stats.max_level, 3);
+        let chain = Manifest::latest_chain(&store).unwrap();
+        assert_eq!(
+            chain.diffs,
+            vec![(1, 64, Manifest::merged_level_name(1, 64, 3))],
+            "replay is ONE object for a 64-diff chain"
+        );
+        let m = read_merged(&store.get(&chain.diffs[0].2).unwrap(), sig).unwrap();
+        assert_eq!(m, items, "every per-step payload preserved bit-identically");
+    }
+
+    #[test]
+    fn hierarchy_leaves_partial_chunks_at_every_level() {
+        let sig = model_signature("c", 64);
+        let store = MemStore::new();
+        seed_chain(&store, sig, 20);
+        let mut stats = CompactStats::default();
+        // live-style pass (no tail merge): 5 complete L1 chunks, then a
+        // complete L2 chunk of 4 — the 5th L1 span stays, a partial chunk
+        // never merges above level 0
+        compact_hierarchy(
+            &store,
+            &cfg(sig, 4),
+            &HashSet::new(),
+            false,
+            &mut stats,
+            &Manifest::latest_chain,
+            &mut || true,
+        )
+        .unwrap();
+        let chain = Manifest::latest_chain(&store).unwrap();
+        assert_eq!(
+            chain.diffs,
+            vec![
+                (1, 16, Manifest::merged_level_name(1, 16, 2)),
+                (17, 20, Manifest::merged_name(17, 20)),
+            ]
+        );
+        assert_eq!(stats.max_level, 2);
+    }
+
+    #[test]
+    fn hierarchy_respects_max_level_and_keep_going() {
+        let sig = model_signature("c", 64);
+        let store = MemStore::new();
+        seed_chain(&store, sig, 16);
+        let mut stats = CompactStats::default();
+        let mut c = cfg(sig, 4);
+        c.max_level = 1;
+        compact_hierarchy(
+            &store,
+            &c,
+            &HashSet::new(),
+            true,
+            &mut stats,
+            &Manifest::latest_chain,
+            &mut || true,
+        )
+        .unwrap();
+        assert_eq!(stats.max_level, 1, "max_level = 1 pins the historical behavior");
+        assert_eq!(Manifest::latest_chain(&store).unwrap().diffs.len(), 4);
+
+        // a false keep_going vetoes the hierarchy but never level 0
+        let store2 = MemStore::new();
+        seed_chain(&store2, sig, 16);
+        let mut stats2 = CompactStats::default();
+        compact_hierarchy(
+            &store2,
+            &cfg(sig, 4),
+            &HashSet::new(),
+            true,
+            &mut stats2,
+            &Manifest::latest_chain,
+            &mut || false,
+        )
+        .unwrap();
+        assert_eq!(stats2.max_level, 1);
+        assert_eq!(stats2.raw_compacted, 16, "level 0 still ran");
+        // and the ladder resumes on a later unvetoed pass
+        compact_hierarchy(
+            &store2,
+            &cfg(sig, 4),
+            &HashSet::new(),
+            true,
+            &mut stats2,
+            &Manifest::latest_chain,
+            &mut || true,
+        )
+        .unwrap();
+        assert_eq!(stats2.max_level, 2);
+        assert_eq!(Manifest::latest_chain(&store2).unwrap().diffs.len(), 1);
+    }
+
+    #[test]
+    fn live_settle_tail_tracks_retuned_merge_factor() {
+        // satellite regression: the compactor is spawned while the engine
+        // in-flight cap is 2, then the actuator retunes mf to 4 — a live
+        // pass must settle max(spawn tail, CURRENT mf) objects, not the
+        // stale spawn snapshot (which would merge into the in-flight
+        // window: eligible 8 instead of 6, merging (5..8))
+        let sig = model_signature("c", 64);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        seed_chain(store.as_ref(), sig, 10);
+        let mut c = cfg(sig, 0);
+        c.settle_tail = 2;
+        let comp = Compactor::spawn(Arc::clone(&store), c);
+        comp.set_merge_factor(4);
+        for _ in 0..4 {
+            comp.notify();
+        }
+        let t0 = std::time::Instant::now();
+        while comp.stats().merged_written < 1 && t0.elapsed().as_secs() < 5 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(comp.stats().merged_written, 1, "only the settled prefix (1..4) merges");
+        assert!(store.exists(&Manifest::merged_name(1, 4)));
+        for step in 5..=10u64 {
+            assert!(store.exists(&Manifest::diff_name(step)), "unsettled {step} stays raw");
+        }
+        assert!(!store.exists(&Manifest::merged_name(5, 8)), "in-flight window untouched");
     }
 
     #[test]

@@ -39,7 +39,9 @@ pub mod compact;
 pub mod encode;
 pub mod persist;
 
-pub use compact::{compact_chain, CompactStats, Compactor, CompactorConfig};
+pub use compact::{
+    compact_chain, compact_hierarchy, CompactStats, Compactor, CompactorConfig, DEFAULT_MAX_LEVEL,
+};
 pub use encode::{Encoded, Encoder};
 pub use persist::Sink;
 
@@ -77,9 +79,14 @@ pub struct CkptStats {
     pub pool_hits: u64,
     pub pool_misses: u64,
     /// merged differential containers written by the chain compactor
+    /// (all levels of the hierarchy)
     pub merged_written: u64,
     /// raw diff/batch objects superseded (and deleted) by merged spans
     pub raw_compacted: u64,
+    /// level-k (k ≥ 1) spans superseded by level-(k+1) super-spans
+    pub spans_compacted: u64,
+    /// deepest hierarchical span level this process wrote (0 = none)
+    pub max_level: u16,
 }
 
 impl CkptStats {
@@ -104,6 +111,8 @@ impl CkptStats {
         self.pool_misses += o.pool_misses;
         self.merged_written += o.merged_written;
         self.raw_compacted += o.raw_compacted;
+        self.spans_compacted += o.spans_compacted;
+        self.max_level = self.max_level.max(o.max_level);
     }
 }
 

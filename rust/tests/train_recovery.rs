@@ -370,6 +370,7 @@ fn crash_during_compaction_never_loses_recoverable_state() {
         codec: PayloadCodec::Raw,
         merge_factor: 3,
         settle_tail: 0,
+        max_level: lowdiff::pipeline::DEFAULT_MAX_LEVEL,
     };
     // (a) the merged put fails outright: raws intact, recovery unchanged
     // (b) the merged put is torn (reports success, truncated bytes): the
