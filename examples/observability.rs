@@ -1,0 +1,167 @@
+//! Observability-plane demo — no PJRT artifacts needed.
+//!
+//! A two-rank cluster run with the full PR 8 observability surface
+//! attached: every pipeline stage traced into a ring buffer, per-rank
+//! heartbeats feeding a failure detector, and the std-only HTTP plane
+//! serving `GET /stats`, `GET /metrics` (Prometheus), `GET /trace` and
+//! `GET /chain` live while epochs commit. Three quarters of the way in,
+//! one rank's heart stops: its epochs tear, the detector declares it
+//! dead, and recovery returns the consistent cut — bit-for-bit. The
+//! chrome://tracing journal is persisted beside the chain at the end.
+//!
+//!   cargo run --release --example observability -- \
+//!       [--ranks 2] [--steps 40] [--serve 127.0.0.1:0] [--hold-secs 0]
+//!
+//! `--hold-secs N` keeps the HTTP server up after the run so an external
+//! client (curl, a browser, the CI smoke test) can scrape the endpoints.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::cluster::{
+    partition_even, recover_cluster, Cluster, ClusterConfig, Detector, HeartbeatTable,
+};
+use lowdiff::compress::topk_mask;
+use lowdiff::control::{
+    ControlView, ObsServer, ObsState, Retune, TelemetryBus, Tracer, TRACE_OBJECT,
+};
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{LocalDir, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::cli::Args;
+use lowdiff::util::rng::Rng;
+
+fn main() -> Result<()> {
+    lowdiff::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let ranks: usize = args.parse_or("ranks", 2usize)?;
+    let steps: u64 = args.parse_or("steps", 40u64)?;
+    let hold_secs: f64 = args.parse_or("hold-secs", 0.0f64)?;
+    let n: usize = 4096;
+    let sig = model_signature("obs-demo", n);
+    let adam = Adam::default();
+
+    let dir = std::env::temp_dir().join("lowdiff-obs-demo");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store: Arc<dyn StorageBackend> = Arc::new(LocalDir::new(&dir)?);
+
+    // the observability plane: telemetry bus + trace ring + heartbeat
+    // table, all shared with the runtime, served over plain HTTP
+    let bus = Arc::new(TelemetryBus::new());
+    let tracer = Arc::new(Tracer::default());
+    let table = Arc::new(HeartbeatTable::new(ranks));
+    let obs = Arc::new(ObsState::new(
+        Arc::clone(&bus),
+        Some(Arc::clone(&tracer)),
+        Some(Arc::clone(&table)),
+        Some(Arc::clone(&store)),
+    ));
+    obs.set_control(ControlView {
+        strategy: "lowdiff".into(),
+        applied: Some(Retune { full_every: 0, batch_size: 1, compact_every: 4 }),
+        ..ControlView::default()
+    });
+    let mut server = ObsServer::serve(Arc::clone(&obs), args.get_or("serve", "127.0.0.1:0"))?;
+    println!("observability plane: http://{}/stats /metrics /trace /chain", server.local_addr());
+
+    let cluster = Cluster::spawn(
+        Arc::clone(&store),
+        partition_even(n, ranks),
+        ClusterConfig {
+            model_sig: sig,
+            gc: false,
+            compact_every: 4,
+            telemetry: Some(Arc::clone(&bus)),
+            trace: Some(Arc::clone(&tracer)),
+            heartbeats: Some(Arc::clone(&table)),
+            ..ClusterConfig::default()
+        },
+    );
+    let det = Detector::spawn(
+        Arc::clone(&table),
+        Duration::from_millis(80),
+        Duration::from_millis(10),
+    );
+
+    // drive a training timeline; at 3/4 distance one rank's heart stops
+    let victim = ranks - 1;
+    let silence_at = steps * 3 / 4;
+    let mut rng = Rng::new(7);
+    let mut state = ModelState::new(Flat(vec![0.5; n]));
+    let mut timeline = vec![state.clone()];
+    cluster.put_full(0, &state);
+    let mut detection = None;
+    for step in 1..=steps {
+        if step == silence_at {
+            println!("step {step}: rank {victim}'s heart stops (beats and acks cease)");
+            table.silence(victim, true);
+        }
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        let masked = topk_mask(&Flat(g), n / 100 + 1);
+        cluster.put_diff_dense(step, &masked);
+        adam.apply_sparse(&mut state, &SparseGrad::from_dense(&masked));
+        timeline.push(state.clone());
+        if detection.is_none() {
+            detection = det.take();
+            if let Some(d) = detection {
+                println!(
+                    "step {step}: detector declared rank {} dead (last beat at step {})",
+                    d.rank, d.step
+                );
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // detection is activity-relative: the live ranks must keep making
+    // progress for the victim's silence to age out, so keep training
+    // (every epoch tears) until the detector fires
+    let t0 = Instant::now();
+    let mut extra = steps;
+    while detection.is_none() && t0.elapsed() < Duration::from_secs(10) {
+        extra += 1;
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        cluster.put_diff_dense(extra, &topk_mask(&Flat(g), n / 100 + 1));
+        std::thread::sleep(Duration::from_millis(10));
+        detection = det.take();
+    }
+    let d = detection.expect("the silent rank must be detected");
+    assert_eq!(d.rank, victim);
+    let stats = cluster.finish();
+    println!(
+        "run over: {} epochs committed, {} torn after the silence, {} written",
+        stats.global_commits,
+        stats.torn_commits,
+        lowdiff::util::human_bytes(stats.total().bytes_written),
+    );
+
+    // recovery returns the consistent cut — the same one the detector's
+    // death notice would have triggered in the driver
+    let (recovered, cut) = recover_cluster(&store, sig, &adam)?;
+    assert_eq!(recovered, timeline[cut.cut_step as usize], "cut must be bit-identical");
+    println!(
+        "recovered consistent cut: step {} (|params| = {:.4})",
+        cut.cut_step,
+        recovered.params.l2_norm()
+    );
+
+    // persist the trace journal beside the chain and publish the final
+    // control view for late scrapes
+    store.put(TRACE_OBJECT, tracer.to_chrome_jsonl().as_bytes())?;
+    let (recorded, dropped) = tracer.counts();
+    println!("trace journal: {recorded} events ({dropped} dropped) -> {TRACE_OBJECT}");
+    let mut view = obs.control();
+    view.detected_failures = 1;
+    obs.set_control(view);
+
+    if hold_secs > 0.0 {
+        println!("holding the HTTP plane up for {hold_secs}s — scrape away");
+        std::thread::sleep(Duration::from_secs_f64(hold_secs));
+    }
+    server.shutdown();
+    Ok(())
+}

@@ -161,6 +161,7 @@ fn main() {
         &mut cst,
         &Manifest::latest_chain,
         &mut || true,
+        None,
     )
     .expect("hierarchy");
     let compact_secs = t0.elapsed().as_secs_f64();

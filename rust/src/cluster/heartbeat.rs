@@ -1,0 +1,371 @@
+//! Heartbeat-based failure detection for the cluster runtime.
+//!
+//! Every rank thread publishes a monotonic heartbeat — its current step
+//! and last durably-acked step — into a shared [`HeartbeatTable`] at the
+//! top of its command loop and after every durable ack. A background
+//! [`Detector`] thread polls the table and declares a rank dead once its
+//! newest beat lags the newest beat *anywhere in the table* by more than
+//! a tunable silence threshold.
+//!
+//! The staleness rule is **activity-relative**, not wall-clock-relative:
+//! a rank is dead iff `newest_beat_across_ranks − rank_beat > timeout`.
+//! A cluster that is merely idle (nobody beating — paused training, a
+//! long synchronous phase) declares nobody dead; detection needs at
+//! least one live peer still making progress. That is exactly the regime
+//! the consistent-cut recovery path can act in: if *every* rank is
+//! silent the job itself is gone and there is no coordinator left to
+//! recover it.
+//!
+//! Detections are deduplicated per table *epoch*: [`HeartbeatTable::reset`]
+//! (called after a recovery rewires the cluster) bumps the epoch, clears
+//! all beats and un-silences every rank, so the same rank can be detected
+//! again in a later incarnation but only once per incarnation.
+//!
+//! [`HeartbeatTable::silence`] is the test/fault-injection hook: a
+//! silenced rank's beats become no-ops, so it goes stale exactly like a
+//! crashed process whose heart stopped — the detector cannot tell the
+//! difference, which is what the detection-vs-injection equivalence test
+//! pins.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Per-rank health slot: all-atomic so rank threads beat without locks.
+#[derive(Debug, Default)]
+struct RankHealth {
+    /// nanoseconds since table start of the newest beat; 0 = never beat
+    last_nanos: AtomicU64,
+    /// training step the rank reported in its newest beat
+    step: AtomicU64,
+    /// last durably-acked step the rank reported
+    acked: AtomicU64,
+    /// total beats recorded (monotone; survives nothing — reset zeroes it)
+    beats: AtomicU64,
+    /// fault-injection: beats from a silenced rank are dropped
+    silenced: AtomicBool,
+}
+
+/// One rank's row in a [`HeartbeatTable::snapshot`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankBeat {
+    pub rank: usize,
+    pub beats: u64,
+    pub step: u64,
+    pub acked: u64,
+    /// seconds since this rank's newest beat (`f64::INFINITY` if never)
+    pub age_secs: f64,
+    pub silenced: bool,
+}
+
+/// Lock-free table of per-rank heartbeats, shared between rank threads
+/// (writers), the [`Detector`] (reader) and the HTTP observability plane
+/// (reader).
+#[derive(Debug)]
+pub struct HeartbeatTable {
+    start: Instant,
+    ranks: Vec<RankHealth>,
+    epoch: AtomicU64,
+}
+
+impl HeartbeatTable {
+    pub fn new(n_ranks: usize) -> HeartbeatTable {
+        HeartbeatTable {
+            start: Instant::now(),
+            ranks: (0..n_ranks).map(|_| RankHealth::default()).collect(),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Current table epoch; bumped by every [`reset`](Self::reset).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Record a beat for `rank`. No-op for out-of-range ranks and for
+    /// silenced ranks (the fault-injection hook — a stopped heart).
+    pub fn beat(&self, rank: usize, step: u64, acked: u64) {
+        let Some(h) = self.ranks.get(rank) else { return };
+        if h.silenced.load(Ordering::Acquire) {
+            return;
+        }
+        h.step.store(step, Ordering::Relaxed);
+        h.acked.store(acked, Ordering::Relaxed);
+        h.beats.fetch_add(1, Ordering::Relaxed);
+        // .max(1) keeps a beat in the first nanosecond distinguishable
+        // from "never beat"
+        let nanos = (self.start.elapsed().as_nanos() as u64).max(1);
+        h.last_nanos.store(nanos, Ordering::Release);
+    }
+
+    /// Silence (`on = true`) or revive a rank. Silencing does not clear
+    /// the rank's previous beats — it just stops new ones, so the rank
+    /// ages out exactly like a crash.
+    pub fn silence(&self, rank: usize, on: bool) {
+        if let Some(h) = self.ranks.get(rank) {
+            h.silenced.store(on, Ordering::Release);
+        }
+    }
+
+    pub fn is_silenced(&self, rank: usize) -> bool {
+        self.ranks
+            .get(rank)
+            .map(|h| h.silenced.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
+    /// Clear every slot, un-silence every rank and bump the epoch. Called
+    /// after a recovery rewires the cluster so stale pre-failure beats
+    /// (and per-epoch detection dedupe) start fresh.
+    pub fn reset(&self) {
+        for h in &self.ranks {
+            h.last_nanos.store(0, Ordering::Relaxed);
+            h.step.store(0, Ordering::Relaxed);
+            h.acked.store(0, Ordering::Relaxed);
+            h.beats.store(0, Ordering::Relaxed);
+            h.silenced.store(false, Ordering::Relaxed);
+        }
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Read-only view of every rank's newest beat.
+    pub fn snapshot(&self) -> Vec<RankBeat> {
+        let now = (self.start.elapsed().as_nanos() as u64).max(1);
+        self.ranks
+            .iter()
+            .enumerate()
+            .map(|(rank, h)| {
+                let last = h.last_nanos.load(Ordering::Acquire);
+                RankBeat {
+                    rank,
+                    beats: h.beats.load(Ordering::Relaxed),
+                    step: h.step.load(Ordering::Relaxed),
+                    acked: h.acked.load(Ordering::Relaxed),
+                    age_secs: if last == 0 {
+                        f64::INFINITY
+                    } else {
+                        Duration::from_nanos(now.saturating_sub(last)).as_secs_f64()
+                    },
+                    silenced: h.silenced.load(Ordering::Acquire),
+                }
+            })
+            .collect()
+    }
+
+    /// Ranks whose newest beat lags the newest beat across the whole
+    /// table by more than `timeout` (activity-relative staleness; see
+    /// module docs). An all-silent table declares nobody dead.
+    pub fn dead_ranks(&self, timeout: Duration) -> Vec<usize> {
+        let lasts: Vec<u64> = self
+            .ranks
+            .iter()
+            .map(|h| h.last_nanos.load(Ordering::Acquire))
+            .collect();
+        let newest = lasts.iter().copied().max().unwrap_or(0);
+        if newest == 0 {
+            return Vec::new();
+        }
+        let timeout_nanos = timeout.as_nanos().min(u128::from(u64::MAX)) as u64;
+        lasts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &last)| newest.saturating_sub(last) > timeout_nanos)
+            .map(|(rank, _)| rank)
+            .collect()
+    }
+}
+
+/// One rank declared dead by the [`Detector`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Detection {
+    pub rank: usize,
+    /// seconds since detector start when the rank was declared dead
+    pub at_secs: f64,
+    /// last step the rank reported before going silent
+    pub step: u64,
+    /// last durably-acked step the rank reported before going silent
+    pub acked: u64,
+}
+
+/// Background failure detector: polls a [`HeartbeatTable`] and queues one
+/// [`Detection`] per `(epoch, rank)`. The driver drains detections with
+/// [`take`](Detector::take) beside its `FailureInjector` poll and routes
+/// both through the same consistent-cut recovery path.
+#[derive(Debug)]
+pub struct Detector {
+    stop: Arc<AtomicBool>,
+    found: Arc<Mutex<VecDeque<Detection>>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Detector {
+    /// Spawn the detector thread. `poll` bounds detection latency from
+    /// below; the driver uses `timeout / 4` clamped to `[1ms, 100ms]`.
+    pub fn spawn(table: Arc<HeartbeatTable>, timeout: Duration, poll: Duration) -> Detector {
+        let stop = Arc::new(AtomicBool::new(false));
+        let found: Arc<Mutex<VecDeque<Detection>>> = Arc::new(Mutex::new(VecDeque::new()));
+        let t0 = Instant::now();
+        let handle = {
+            let (stop, found) = (Arc::clone(&stop), Arc::clone(&found));
+            thread::Builder::new()
+                .name("ckpt-detect".into())
+                .spawn(move || {
+                    let mut seen: HashSet<usize> = HashSet::new();
+                    let mut seen_epoch = table.epoch();
+                    while !stop.load(Ordering::Acquire) {
+                        let epoch = table.epoch();
+                        if epoch != seen_epoch {
+                            seen.clear();
+                            seen_epoch = epoch;
+                        }
+                        let beats = table.snapshot();
+                        for rank in table.dead_ranks(timeout) {
+                            // re-check the epoch so a reset racing the
+                            // scan can't leak a stale-table detection in
+                            if table.epoch() != epoch {
+                                break;
+                            }
+                            if seen.insert(rank) {
+                                let b = &beats[rank];
+                                found.lock().expect("detector queue").push_back(Detection {
+                                    rank,
+                                    at_secs: t0.elapsed().as_secs_f64(),
+                                    step: b.step,
+                                    acked: b.acked,
+                                });
+                            }
+                        }
+                        thread::sleep(poll);
+                    }
+                })
+                .expect("spawn detector thread")
+        };
+        Detector { stop, found, handle: Some(handle) }
+    }
+
+    /// Pop the oldest undelivered detection, if any.
+    pub fn take(&self) -> Option<Detection> {
+        self.found.lock().expect("detector queue").pop_front()
+    }
+
+    /// Stop and join the detector thread (idempotent).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Detector {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beats_update_the_snapshot() {
+        let t = HeartbeatTable::new(3);
+        assert_eq!(t.n_ranks(), 3);
+        t.beat(1, 42, 40);
+        t.beat(1, 43, 40);
+        t.beat(99, 1, 1); // out of range: ignored
+        let snap = t.snapshot();
+        assert_eq!(snap[1].beats, 2);
+        assert_eq!(snap[1].step, 43);
+        assert_eq!(snap[1].acked, 40);
+        assert!(snap[1].age_secs.is_finite());
+        assert_eq!(snap[0].beats, 0);
+        assert!(snap[0].age_secs.is_infinite(), "never beat");
+    }
+
+    #[test]
+    fn staleness_is_activity_relative() {
+        let t = HeartbeatTable::new(2);
+        // nobody has beaten: an idle table declares nobody dead
+        assert!(t.dead_ranks(Duration::from_millis(1)).is_empty());
+        t.beat(0, 1, 0);
+        t.beat(1, 1, 0);
+        std::thread::sleep(Duration::from_millis(20));
+        // both silent: still nobody dead — staleness is peer-relative
+        assert!(t.dead_ranks(Duration::from_millis(5)).is_empty());
+        // rank 0 advances; rank 1 now lags the newest beat
+        t.beat(0, 2, 1);
+        assert_eq!(t.dead_ranks(Duration::from_millis(5)), vec![1]);
+        // a huge timeout tolerates the same lag
+        assert!(t.dead_ranks(Duration::from_secs(60)).is_empty());
+        // rank 1 revives
+        t.beat(1, 2, 1);
+        assert!(t.dead_ranks(Duration::from_millis(5)).is_empty());
+    }
+
+    #[test]
+    fn silence_drops_beats_and_reset_revives() {
+        let t = HeartbeatTable::new(2);
+        t.beat(0, 1, 0);
+        t.silence(0, true);
+        assert!(t.is_silenced(0));
+        t.beat(0, 2, 1);
+        let snap = t.snapshot();
+        assert_eq!(snap[0].beats, 1, "silenced beat dropped");
+        assert_eq!(snap[0].step, 1);
+        let e0 = t.epoch();
+        t.reset();
+        assert_eq!(t.epoch(), e0 + 1);
+        assert!(!t.is_silenced(0));
+        let snap = t.snapshot();
+        assert_eq!(snap[0].beats, 0);
+        assert!(snap[0].age_secs.is_infinite());
+        t.beat(0, 5, 5);
+        assert_eq!(t.snapshot()[0].beats, 1, "revived after reset");
+    }
+
+    #[test]
+    fn detector_fires_once_per_epoch() {
+        let table = Arc::new(HeartbeatTable::new(2));
+        let det = Detector::spawn(
+            Arc::clone(&table),
+            Duration::from_millis(15),
+            Duration::from_millis(2),
+        );
+        // rank 0 beats steadily; rank 1 beat once, then went silent
+        table.beat(1, 7, 6);
+        let t0 = Instant::now();
+        let mut first = None;
+        while first.is_none() && t0.elapsed() < Duration::from_secs(5) {
+            table.beat(0, 1, 1);
+            std::thread::sleep(Duration::from_millis(2));
+            first = det.take();
+        }
+        let d = first.expect("silent rank detected");
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.step, 7);
+        assert_eq!(d.acked, 6);
+        // deduped: no second detection for the same incarnation
+        for _ in 0..10 {
+            table.beat(0, 2, 2);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(det.take().is_none(), "one detection per (epoch, rank)");
+        // a reset starts a new incarnation: the same rank can die again
+        table.reset();
+        let t0 = Instant::now();
+        let mut second = None;
+        while second.is_none() && t0.elapsed() < Duration::from_secs(5) {
+            table.beat(0, 3, 3);
+            std::thread::sleep(Duration::from_millis(2));
+            second = det.take();
+        }
+        assert_eq!(second.expect("re-detected after reset").rank, 1);
+    }
+}

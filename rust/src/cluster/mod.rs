@@ -35,6 +35,7 @@
 //! `docs/CLUSTER.md`.
 
 pub mod commit;
+pub mod heartbeat;
 pub mod rank;
 pub mod reshard;
 
@@ -42,6 +43,7 @@ pub use commit::{
     find_consistent_cut, gc_cluster, next_generation, recover_cluster, truncate_stragglers,
     ClusterCutStats, CommitKind, GcSweepStats, GlobalRecord, RankObject,
 };
+pub use heartbeat::{Detection, Detector, HeartbeatTable, RankBeat};
 pub use rank::{Cluster, ClusterStats};
 pub use reshard::{elastic_restart, flatten, repartition};
 
@@ -370,6 +372,18 @@ pub struct ClusterConfig {
     /// scheduler thread even at `compact_every < 2` so actuation can
     /// enable compaction live
     pub telemetry: Option<std::sync::Arc<crate::control::telemetry::TelemetryBus>>,
+    /// shared I/O gate for the compaction scheduler; when set it is used
+    /// instead of building a private gate from `io_budget`, so live
+    /// budget retunes ([`IoGate::set_rate`](crate::control::IoGate)) made
+    /// by the driver reach cluster compaction too
+    pub gate: Option<std::sync::Arc<crate::control::IoGate>>,
+    /// event tracer: rank encode/persist spans, commit phase-1/phase-2
+    /// events and scheduler compaction passes are recorded when set
+    pub trace: Option<std::sync::Arc<crate::control::Tracer>>,
+    /// heartbeat table: each rank thread beats at loop start and after
+    /// every durable ack; a silenced rank also stops acking (full death
+    /// simulation for the failure detector)
+    pub heartbeats: Option<std::sync::Arc<heartbeat::HeartbeatTable>>,
 }
 
 impl Default for ClusterConfig {
@@ -385,6 +399,9 @@ impl Default for ClusterConfig {
             compact_every: 0,
             io_budget: 0.0,
             telemetry: None,
+            gate: None,
+            trace: None,
+            heartbeats: None,
         }
     }
 }

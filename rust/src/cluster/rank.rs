@@ -34,6 +34,7 @@ use crate::cluster::{
     rank_sig, slice_state, split_dense, validate_partitions, ClusterConfig, Partition,
 };
 use crate::control::iosched::{GatedStore, IoGate, IoGateConfig};
+use crate::control::Tracer;
 use crate::coordinator::checkpointer::CkptStats;
 use crate::optim::ModelState;
 use crate::pipeline::{
@@ -204,12 +205,17 @@ impl Cluster {
         validate_partitions(&partitions, total).expect("cluster partition table");
         // the control plane: ONE gate shared by every rank's persist path
         // (guards) and the compaction scheduler (shaped I/O) — background
-        // passes yield to any rank's in-flight phase-1 write
-        let gate: Option<Arc<IoGate>> = (cfg.compact_every >= 2 || cfg.uses_control()).then(|| {
-            Arc::new(IoGate::with_bus(
-                IoGateConfig { bytes_per_sec: cfg.io_budget, ..IoGateConfig::default() },
-                cfg.telemetry.clone(),
-            ))
+        // passes yield to any rank's in-flight phase-1 write. A driver-
+        // provided gate (cfg.gate) wins so live `set_rate` retunes reach
+        // the cluster's scheduler through the same token bucket.
+        let gate: Option<Arc<IoGate>> = cfg.gate.clone().or_else(|| {
+            (cfg.compact_every >= 2 || cfg.uses_control()).then(|| {
+                Arc::new(IoGate::with_obs(
+                    IoGateConfig { bytes_per_sec: cfg.io_budget, ..IoGateConfig::default() },
+                    cfg.telemetry.clone(),
+                    cfg.trace.clone(),
+                ))
+            })
         });
         let (ack_tx, ack_rx) = channel::<RankAck>();
         let mut txs = Vec::with_capacity(partitions.len());
@@ -408,10 +414,22 @@ fn rank_loop(
     let prefix = Manifest::gen_rank_prefix(cfg.generation, part.rank);
     let enc = Encoder::new(sig, cfg.codec, 4);
     let mut sink = Sink::new(Arc::clone(&store), cfg.n_shards, cfg.writers, 4)
-        .with_control(gate, cfg.telemetry.clone());
+        .with_control(gate, cfg.telemetry.clone())
+        .with_trace(cfg.trace.clone());
     let mut stats = CkptStats::default();
+    let tid = part.rank as u64;
+    let mut acked = 0u64;
 
     while let Ok(cmd) = rx.recv() {
+        if let Some(hb) = &cfg.heartbeats {
+            // a silenced rank models a hung process: it stops beating AND
+            // stops acking, so its epochs tear exactly like a real death
+            // and the detector sees the same silence recovery will see
+            if hb.is_silenced(part.rank) {
+                continue;
+            }
+        }
+        let mut sp = Tracer::maybe_span(&cfg.trace, "encode").map(|s| s.tid(tid));
         let (seq, step, kind, encoded) = match cmd {
             RankCmd::Diff { seq, step, dense } => {
                 let t0 = Instant::now();
@@ -432,6 +450,13 @@ fn rank_loop(
                 (seq, step, CommitKind::Full, res)
             }
         };
+        if let Some(s) = sp.as_mut() {
+            s.set_step(step);
+            if let Ok(obj) = &encoded {
+                s.set_bytes(obj.buf.len() as u64);
+            }
+        }
+        drop(sp); // the encode span ends before the persist stage begins
         let result = match encoded {
             Err(e) => {
                 log::error!("rank {}: {e}", part.rank);
@@ -444,6 +469,14 @@ fn rank_loop(
                     .map(|(len, crc)| (format!("{prefix}{name}"), len, crc))
             }
         };
+        if result.is_ok() {
+            acked += 1;
+        }
+        if let Some(hb) = &cfg.heartbeats {
+            // liveness = "made durable progress recently"; beat() is a
+            // no-op while silenced, so a mid-epoch silence stays silent
+            hb.beat(part.rank, step, acked);
+        }
         if acks.send(RankAck { rank: part.rank, seq, step, kind, result }).is_err() {
             log::warn!("rank {}: coordinator gone; stopping", part.rank);
             break;
@@ -534,6 +567,11 @@ fn coordinator_loop(
     let mut active_mf = cfg.compact_every;
     let mut out = CoordStats::default();
     while let Ok(ack) = ack_rx.recv() {
+        if let Some(t) = &cfg.trace {
+            // phase-1 completion: one instant per (rank, epoch); extra
+            // carries the epoch seq so tears are visible in the journal
+            t.instant("commit.ack", ack.rank as u64, ack.step, ack.seq);
+        }
         let e = pending.entry(ack.seq).or_insert_with(|| Pending {
             step: ack.step,
             kind: ack.kind,
@@ -647,6 +685,7 @@ fn scheduler_loop(
     while let Ok(job) = rx.recv() {
         queued.fetch_sub(1, Ordering::SeqCst);
         let t0 = Instant::now();
+        let _sp = Tracer::maybe_span(&cfg.trace, "sched.pass").map(|s| s.step(job.rec.step));
         let before = out.compact.clone();
         // hierarchical passes run only while no newer level-0 job waits —
         // raw compaction keeps strict priority under the IoGate budget;
@@ -741,6 +780,12 @@ fn commit_epoch(
             None
         }
     };
+    if let Some(rec) = &committed_rec {
+        if let Some(t) = &cfg.trace {
+            let secs = t0.elapsed().as_secs_f64();
+            t.complete("commit.phase2", secs, 0, rec.step, bytes.len() as u64, seq);
+        }
+    }
     out.commit_secs += t0.elapsed().as_secs_f64();
     committed_rec
 }
@@ -789,9 +834,16 @@ fn compact_cluster_chains(
         };
         // tail merging keeps the replayable set within mf·⌈log_mf n⌉ + 2
         // (the two protected record tips stay raw alongside the spans)
-        if let Err(e) =
-            compact_hierarchy(logical, &ccfg, &protect, true, &mut out.compact, &discover, keep_going)
-        {
+        if let Err(e) = compact_hierarchy(
+            logical,
+            &ccfg,
+            &protect,
+            true,
+            &mut out.compact,
+            &discover,
+            keep_going,
+            cfg.trace.as_deref(),
+        ) {
             log::warn!("rank {} compaction failed: {e:#}", ro.rank);
         }
     }

@@ -31,6 +31,12 @@
 
 use crate::control::telemetry::{BwEstimator, MtbfEstimator, Snapshot, TelemetryBus};
 use crate::coordinator::config_opt::{AdaptiveTuner, SystemParams};
+use crate::storage::StorageBackend;
+
+/// Storage object name of the persisted control-plane state sidecar.
+/// Deliberately outside every `Manifest` name family, so chain GC,
+/// `truncate_after` and the cluster sweep all leave it alone.
+pub const CONTROL_STATE_OBJECT: &str = "control-state.v1.txt";
 
 /// One applied (or to-apply) runtime configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -204,6 +210,32 @@ impl Actuator {
         (self.mtbf.estimate(), self.bw.estimate())
     }
 
+    /// Everything worth carrying across a process restart: the decayed
+    /// estimator accumulators plus the knobs in force.
+    pub fn export_state(&self) -> ControlState {
+        let (mtbf_acc_secs, mtbf_acc_failures) = self.mtbf.export();
+        ControlState {
+            mtbf_acc_secs,
+            mtbf_acc_failures,
+            bw_est: self.bw.export(),
+            applied: self.applied,
+            retunes: self.retunes,
+        }
+    }
+
+    /// Warm-start the estimators from a persisted [`ControlState`] —
+    /// called right after construction on restart, so the cold-start
+    /// priors only ever steer the *first* run against a chain. The
+    /// applied knobs are NOT overwritten (the runtime was just spawned
+    /// with its own config); with warm estimators the tuner re-derives
+    /// the right operating point within a tick or two instead of
+    /// re-learning MTBF/bandwidth from scratch.
+    pub fn warm_start(&mut self, st: &ControlState) {
+        self.mtbf.restore(st.mtbf_acc_secs, st.mtbf_acc_failures);
+        self.bw.restore(st.bw_est);
+        self.tuner.observe(self.mtbf.estimate(), self.bw.estimate());
+    }
+
     /// One control tick against the live bus: difference the snapshot
     /// since the previous tick into a [`Window`] and act on it.
     pub fn tick(&mut self, bus: &TelemetryBus) -> Option<Retune> {
@@ -309,6 +341,91 @@ impl Actuator {
 
 fn rel_change(applied: f64, want: f64) -> f64 {
     (want - applied).abs() / applied.max(1.0)
+}
+
+/// Persistable control-plane state: written beside the chain as
+/// [`CONTROL_STATE_OBJECT`] at every actuator tick and at run end, read
+/// back on restart to warm-start the estimators
+/// ([`Actuator::warm_start`]). Plain `key value` text — hand-parsed like
+/// every other sidecar format in this offline crate, and forward-tolerant
+/// (unknown keys are skipped; missing keys fail the parse).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlState {
+    /// decayed failure-free seconds ([`MtbfEstimator::export`])
+    pub mtbf_acc_secs: f64,
+    /// decayed failure count
+    pub mtbf_acc_failures: f64,
+    /// smoothed write bandwidth ([`BwEstimator::export`])
+    pub bw_est: f64,
+    /// knobs in force when the state was written
+    pub applied: Retune,
+    /// retunes emitted so far (cumulative, informational)
+    pub retunes: u64,
+}
+
+const CONTROL_STATE_HEADER: &str = "lowdiff-control-state v1";
+
+impl ControlState {
+    pub fn to_text(&self) -> String {
+        format!(
+            "{CONTROL_STATE_HEADER}\n\
+             mtbf_acc_secs {}\n\
+             mtbf_acc_failures {}\n\
+             bw_est {}\n\
+             full_every {}\n\
+             batch_size {}\n\
+             compact_every {}\n\
+             retunes {}\n",
+            self.mtbf_acc_secs,
+            self.mtbf_acc_failures,
+            self.bw_est,
+            self.applied.full_every,
+            self.applied.batch_size,
+            self.applied.compact_every,
+            self.retunes,
+        )
+    }
+
+    /// Parse the sidecar text; `None` on any damage (the caller falls
+    /// back to cold-start priors — a bad sidecar must never wedge a run).
+    pub fn parse(text: &str) -> Option<ControlState> {
+        let mut lines = text.lines();
+        if lines.next()?.trim() != CONTROL_STATE_HEADER {
+            return None;
+        }
+        let mut f64s: std::collections::BTreeMap<&str, f64> = Default::default();
+        for line in lines {
+            let mut it = line.split_whitespace();
+            if let (Some(k), Some(v)) = (it.next(), it.next()) {
+                f64s.insert(k, v.parse().ok()?);
+            }
+        }
+        Some(ControlState {
+            mtbf_acc_secs: *f64s.get("mtbf_acc_secs")?,
+            mtbf_acc_failures: *f64s.get("mtbf_acc_failures")?,
+            bw_est: *f64s.get("bw_est")?,
+            applied: Retune {
+                full_every: *f64s.get("full_every")? as u64,
+                batch_size: *f64s.get("batch_size")? as usize,
+                compact_every: *f64s.get("compact_every")? as usize,
+            },
+            retunes: *f64s.get("retunes")? as u64,
+        })
+    }
+
+    /// Best-effort persist beside the chain.
+    pub fn save(&self, store: &dyn StorageBackend) -> anyhow::Result<()> {
+        store.put(CONTROL_STATE_OBJECT, self.to_text().as_bytes())
+    }
+
+    /// Load the sidecar if present and parseable.
+    pub fn load(store: &dyn StorageBackend) -> Option<ControlState> {
+        if !store.exists(CONTROL_STATE_OBJECT) {
+            return None;
+        }
+        let bytes = store.get(CONTROL_STATE_OBJECT).ok()?;
+        ControlState::parse(std::str::from_utf8(&bytes).ok()?)
+    }
 }
 
 /// Drive a fresh actuator with synthetic telemetry implying a true
@@ -553,6 +670,45 @@ mod tests {
         // target 8 is below any achievable bound at n=512; the policy
         // lands on the fan-out minimizing mf·⌈log_mf n⌉ + 1 (= 19 here)
         assert_eq!(replay_bound(512, r.compact_every), 19, "{r:?}");
+    }
+
+    #[test]
+    fn control_state_roundtrips_and_warm_starts() {
+        use crate::storage::{MemStore, StorageBackend};
+        let p = params(900.0, 2.5e9);
+        let initial = Retune { full_every: 40, batch_size: 2, compact_every: 4 };
+        let cfg = ActuatorConfig { cooldown_ticks: 0, ..Default::default() };
+        let mut a = Actuator::new(p, 1.9, initial, cfg);
+        for _ in 0..30 {
+            let _ = a.tick_window(&Window {
+                dt_secs: 300.0,
+                failures: 1,
+                bytes_written: 1_000_000_000,
+                write_secs: 1.0,
+                ..Default::default()
+            });
+        }
+        let st = a.export_state();
+        let text = st.to_text();
+        assert_eq!(ControlState::parse(&text), Some(st), "text roundtrip");
+        assert_eq!(ControlState::parse("garbage"), None);
+        assert_eq!(ControlState::parse(""), None);
+
+        let store = MemStore::new();
+        st.save(&store).unwrap();
+        assert!(store.exists(CONTROL_STATE_OBJECT));
+        let loaded = ControlState::load(&store).unwrap();
+        assert_eq!(loaded, st);
+        assert_eq!(ControlState::load(&MemStore::new()), None, "first run: no sidecar");
+
+        // a fresh actuator warm-started from the sidecar reproduces the
+        // trained estimates instead of the cold priors
+        let mut b = Actuator::new(p, 1.9, initial, ActuatorConfig::default());
+        let cold = b.estimates();
+        b.warm_start(&loaded);
+        let warm = b.estimates();
+        assert_eq!(warm, a.estimates(), "warm start reproduces trained estimates");
+        assert!((warm.0 - cold.0).abs() > 1.0, "and they differ from the cold prior");
     }
 
     #[test]

@@ -1,0 +1,690 @@
+//! Std-only HTTP observability/control plane.
+//!
+//! A tiny threaded HTTP/1.1 server (no tokio, no hyper — one accept
+//! thread plus one short-lived thread per connection) exposing the
+//! runtime control plane while a training run is live:
+//!
+//! - `GET /stats` — [`TelemetryBus`] snapshot + control view (estimator
+//!   state, applied knobs) + per-rank heartbeats + trace counters, JSON;
+//! - `GET /metrics` — the same counters in Prometheus text exposition
+//!   format (`lowdiff_*`);
+//! - `GET /trace?n=256` — the newest `n` trace spans as
+//!   chrome://tracing event objects, JSON array;
+//! - `GET /chain` — live manifest cover computed by name parsing only
+//!   (objects, flat chain, per-rank cluster chains, replay bounds);
+//! - `POST /retune?full-every=..&batch-size=..&compact-every=..` — queue
+//!   a [`Retune`] request; missing knobs default to the currently
+//!   applied values;
+//! - `POST /compact?every=N` — queue a cluster merge-factor change.
+//!
+//! The POST endpoints **never** mutate the runtime directly: they park
+//! the request in [`ObsState`] and the driver drains it with
+//! [`ObsState::take_retune`]/[`ObsState::take_compact`] at the *same
+//! safe epoch boundaries* the actuator uses (flat: `CkptItem::Retune`
+//! queue order; cluster: committed-record boundaries). An HTTP client
+//! therefore gets exactly the crash-consistency guarantees the control
+//! loop has — a knob can never change mid-epoch.
+//!
+//! Reads are lock-light: the bus and heartbeat table are atomics, the
+//! control view is one small mutex the driver refreshes at tick
+//! boundaries. Endpoint shapes are documented in
+//! `docs/OBSERVABILITY.md`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Manifest;
+use crate::cluster::heartbeat::HeartbeatTable;
+use crate::control::actuate::Retune;
+use crate::control::telemetry::TelemetryBus;
+use crate::control::trace::Tracer;
+use crate::storage::StorageBackend;
+use crate::util::json::{JsonArray, JsonObject};
+
+/// What the driver publishes about the control loop for `/stats` and
+/// `/metrics` — refreshed at actuator tick boundaries.
+#[derive(Clone, Debug, Default)]
+pub struct ControlView {
+    pub strategy: String,
+    pub adaptive: bool,
+    /// smoothed MTBF estimate, seconds (0 when no actuator is attached)
+    pub mtbf_estimate: f64,
+    /// smoothed write-bandwidth estimate, bytes/sec
+    pub bw_estimate: f64,
+    /// live background-I/O budget, bytes/sec (0 = open bucket)
+    pub io_budget: f64,
+    /// currently applied knobs, `None` before the first application
+    pub applied: Option<Retune>,
+    pub retunes: u64,
+    pub detected_failures: u64,
+}
+
+/// Shared state behind the HTTP plane: read-side handles on the
+/// telemetry/trace/heartbeat planes plus the parked control requests the
+/// driver drains at safe points.
+pub struct ObsState {
+    bus: Arc<TelemetryBus>,
+    trace: Option<Arc<Tracer>>,
+    heartbeats: Option<Arc<HeartbeatTable>>,
+    store: Option<Arc<dyn StorageBackend>>,
+    control: Mutex<ControlView>,
+    retune_req: Mutex<Option<Retune>>,
+    compact_req: Mutex<Option<usize>>,
+}
+
+impl std::fmt::Debug for ObsState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsState")
+            .field("trace", &self.trace.is_some())
+            .field("heartbeats", &self.heartbeats.is_some())
+            .field("store", &self.store.is_some())
+            .finish()
+    }
+}
+
+impl ObsState {
+    pub fn new(
+        bus: Arc<TelemetryBus>,
+        trace: Option<Arc<Tracer>>,
+        heartbeats: Option<Arc<HeartbeatTable>>,
+        store: Option<Arc<dyn StorageBackend>>,
+    ) -> ObsState {
+        ObsState {
+            bus,
+            trace,
+            heartbeats,
+            store,
+            control: Mutex::new(ControlView::default()),
+            retune_req: Mutex::new(None),
+            compact_req: Mutex::new(None),
+        }
+    }
+
+    /// Refresh the published control view (driver, at tick boundaries).
+    pub fn set_control(&self, view: ControlView) {
+        *self.control.lock().expect("control view") = view;
+    }
+
+    pub fn control(&self) -> ControlView {
+        self.control.lock().expect("control view").clone()
+    }
+
+    /// Park a retune request for the driver's next safe point. A newer
+    /// request overwrites an undrained older one (last writer wins).
+    pub fn request_retune(&self, r: Retune) {
+        *self.retune_req.lock().expect("retune request") = Some(r);
+    }
+
+    /// Drain the parked retune request, if any (driver, at safe points).
+    pub fn take_retune(&self) -> Option<Retune> {
+        self.retune_req.lock().expect("retune request").take()
+    }
+
+    /// Park a cluster merge-factor request (`POST /compact`).
+    pub fn request_compact(&self, every: usize) {
+        *self.compact_req.lock().expect("compact request") = Some(every);
+    }
+
+    pub fn take_compact(&self) -> Option<usize> {
+        self.compact_req.lock().expect("compact request").take()
+    }
+}
+
+/// The server handle: bind with [`serve`](ObsServer::serve), stop with
+/// [`shutdown`](ObsServer::shutdown) (also runs on drop).
+#[derive(Debug)]
+pub struct ObsServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9090`; port 0 picks a free port —
+    /// read it back with [`local_addr`](Self::local_addr)) and serve
+    /// until shutdown.
+    pub fn serve(state: Arc<ObsState>, addr: &str) -> Result<ObsServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("observability local addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let handle = thread::Builder::new()
+            .name("obs-http".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(mut stream) = conn else { continue };
+                    let state = Arc::clone(&state);
+                    let _ = thread::Builder::new().name("obs-conn".into()).spawn(move || {
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                        handle_conn(&state, &mut stream);
+                    });
+                }
+            })
+            .context("spawn obs-http thread")?;
+        Ok(ObsServer { local, stop, handle: Some(handle) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting and join the accept thread (idempotent). In-flight
+    /// connection threads finish their single response on their own.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // self-connect to unblock the blocking accept
+        let _ = TcpStream::connect(self.local);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read the request head (start line + headers). GET/POST control
+/// requests carry no body, so the head is the whole request.
+fn read_head(stream: &mut TcpStream) -> Option<String> {
+    let mut head: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 16 * 1024 {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    String::from_utf8(head).ok()
+}
+
+fn respond(stream: &mut TcpStream, status: &str, content_type: &str, body: &str) {
+    let mut r = String::new();
+    r.push_str(&format!("HTTP/1.1 {status}\r\n"));
+    r.push_str(&format!("Content-Type: {content_type}\r\n"));
+    r.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    r.push_str("Connection: close\r\n\r\n");
+    r.push_str(body);
+    let _ = stream.write_all(r.as_bytes());
+    let _ = stream.flush();
+}
+
+fn respond_json(stream: &mut TcpStream, status: &str, body: &str) {
+    respond(stream, status, "application/json", body);
+}
+
+fn error_json(msg: &str) -> String {
+    let mut o = JsonObject::new();
+    o.str("error", msg);
+    o.finish()
+}
+
+/// First `key=value` match in a query string (no URL decoding — every
+/// control parameter is numeric).
+fn query_get(query: &str, key: &str) -> Option<String> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then(|| v.to_string())
+    })
+}
+
+fn handle_conn(state: &ObsState, stream: &mut TcpStream) {
+    let Some(head) = read_head(stream) else { return };
+    let Some(line) = head.lines().next() else { return };
+    let mut it = line.split_whitespace();
+    let (Some(method), Some(target)) = (it.next(), it.next()) else {
+        respond_json(stream, "400 Bad Request", &error_json("malformed request line"));
+        return;
+    };
+    let (path, query) = target.split_once('?').unwrap_or((target, ""));
+    match (method, path) {
+        ("GET", "/stats") => respond_json(stream, "200 OK", &stats_json(state)),
+        ("GET", "/metrics") => {
+            respond(stream, "200 OK", "text/plain; version=0.0.4", &metrics_text(state));
+        }
+        ("GET", "/trace") => match &state.trace {
+            Some(t) => {
+                let n = query_get(query, "n")
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .unwrap_or(256);
+                respond_json(stream, "200 OK", &trace_json(t, n));
+            }
+            None => {
+                respond_json(stream, "404 Not Found", &error_json("tracing disabled (--trace)"));
+            }
+        },
+        ("GET", "/chain") => match &state.store {
+            Some(store) => match chain_json(store.as_ref()) {
+                Ok(body) => respond_json(stream, "200 OK", &body),
+                Err(e) => {
+                    respond_json(stream, "500 Internal Server Error", &error_json(&e.to_string()));
+                }
+            },
+            None => respond_json(stream, "404 Not Found", &error_json("no store attached")),
+        },
+        ("POST", "/retune") => post_retune(state, query, stream),
+        ("POST", "/compact") => post_compact(state, query, stream),
+        _ => respond_json(stream, "404 Not Found", &error_json("unknown endpoint")),
+    }
+}
+
+fn post_retune(state: &ObsState, query: &str, stream: &mut TcpStream) {
+    let fe = query_get(query, "full-every");
+    let bs = query_get(query, "batch-size");
+    let ce = query_get(query, "compact-every");
+    let base = state.control().applied;
+    if base.is_none() && (fe.is_none() || bs.is_none() || ce.is_none()) {
+        let msg = "no applied retune to inherit from; \
+                   supply all of full-every, batch-size, compact-every";
+        respond_json(stream, "409 Conflict", &error_json(msg));
+        return;
+    }
+    let base = base.unwrap_or(Retune { full_every: 0, batch_size: 1, compact_every: 0 });
+    let parsed = (|| -> std::result::Result<Retune, String> {
+        Ok(Retune {
+            full_every: parse_knob(&fe, base.full_every)?,
+            batch_size: parse_knob(&bs, base.batch_size)?,
+            compact_every: parse_knob(&ce, base.compact_every)?,
+        })
+    })();
+    match parsed {
+        Ok(r) => {
+            state.request_retune(r);
+            let mut o = JsonObject::new();
+            o.raw("accepted", &retune_json(r)).str("applies", "next safe epoch boundary");
+            respond_json(stream, "200 OK", &o.finish());
+        }
+        Err(msg) => respond_json(stream, "400 Bad Request", &error_json(&msg)),
+    }
+}
+
+fn post_compact(state: &ObsState, query: &str, stream: &mut TcpStream) {
+    match query_get(query, "every").map(|s| s.parse::<usize>()) {
+        Some(Ok(every)) => {
+            state.request_compact(every);
+            let mut o = JsonObject::new();
+            o.u64("compact_every", every as u64).str("applies", "next committed epoch");
+            respond_json(stream, "200 OK", &o.finish());
+        }
+        Some(Err(_)) => {
+            respond_json(stream, "400 Bad Request", &error_json("every must be an integer"));
+        }
+        None => respond_json(stream, "400 Bad Request", &error_json("missing query param: every")),
+    }
+}
+
+fn parse_knob<T: std::str::FromStr>(
+    v: &Option<String>,
+    current: T,
+) -> std::result::Result<T, String> {
+    match v {
+        Some(s) => s.parse::<T>().map_err(|_| format!("bad knob value {s:?}")),
+        None => Ok(current),
+    }
+}
+
+fn retune_json(r: Retune) -> String {
+    let mut o = JsonObject::new();
+    o.u64("full_every", r.full_every)
+        .u64("batch_size", r.batch_size as u64)
+        .u64("compact_every", r.compact_every as u64);
+    o.finish()
+}
+
+fn stats_json(state: &ObsState) -> String {
+    let s = state.bus.snapshot();
+    let mut o = JsonObject::new();
+    o.f64("uptime_secs", s.elapsed_secs)
+        .u64("steps", s.steps)
+        .u64("failures", s.failures)
+        .f64("stall_secs", s.stall_secs)
+        .u64("bytes_written", s.bytes_written)
+        .f64("write_secs", s.write_secs)
+        .u64("merged_written", s.merged_written)
+        .u64("raw_compacted", s.raw_compacted)
+        .u64("compact_bytes", s.compact_bytes)
+        .f64("commit_secs", s.commit_secs)
+        .f64("deferred_secs", s.deferred_secs)
+        .u64("contended_bytes", s.contended_bytes);
+    let v = state.control();
+    let mut c = JsonObject::new();
+    c.str("strategy", &v.strategy)
+        .bool("adaptive", v.adaptive)
+        .f64("mtbf_estimate_secs", v.mtbf_estimate)
+        .f64("bw_estimate_bytes_per_sec", v.bw_estimate)
+        .f64("io_budget_bytes_per_sec", v.io_budget)
+        .u64("retunes", v.retunes)
+        .u64("detected_failures", v.detected_failures);
+    match v.applied {
+        Some(r) => c.raw("applied", &retune_json(r)),
+        None => c.raw("applied", "null"),
+    };
+    o.raw("control", &c.finish());
+    match &state.heartbeats {
+        Some(hb) => {
+            let mut arr = JsonArray::new();
+            for b in hb.snapshot() {
+                let mut r = JsonObject::new();
+                r.u64("rank", b.rank as u64)
+                    .u64("beats", b.beats)
+                    .u64("step", b.step)
+                    .u64("acked", b.acked)
+                    .f64("age_secs", b.age_secs)
+                    .bool("silenced", b.silenced);
+                arr.push_raw(&r.finish());
+            }
+            o.raw("heartbeats", &arr.finish());
+        }
+        None => {
+            o.raw("heartbeats", "null");
+        }
+    }
+    match &state.trace {
+        Some(t) => {
+            let (recorded, dropped) = t.counts();
+            let mut tr = JsonObject::new();
+            tr.u64("recorded", recorded).u64("dropped", dropped);
+            let mut arr = JsonArray::new();
+            for st in t.summary() {
+                let mut e = JsonObject::new();
+                e.str("name", st.name)
+                    .u64("count", st.count)
+                    .u64("total_micros", st.total_micros)
+                    .u64("bytes", st.bytes);
+                arr.push_raw(&e.finish());
+            }
+            tr.raw("summary", &arr.finish());
+            o.raw("trace", &tr.finish());
+        }
+        None => {
+            o.raw("trace", "null");
+        }
+    }
+    o.finish()
+}
+
+fn metrics_text(state: &ObsState) -> String {
+    let s = state.bus.snapshot();
+    let v = state.control();
+    let mut out = String::new();
+    {
+        let mut c = |name: &str, kind: &str, help: &str, value: String| {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            out.push_str(&format!("{name} {value}\n"));
+        };
+        c("lowdiff_uptime_seconds", "gauge", "bus uptime", fmt(s.elapsed_secs));
+        c("lowdiff_steps_total", "counter", "productive iterations", fi(s.steps));
+        c("lowdiff_failures_total", "counter", "failure events", fi(s.failures));
+        c("lowdiff_stall_seconds_total", "counter", "checkpoint stall", fmt(s.stall_secs));
+        c("lowdiff_bytes_written_total", "counter", "durable bytes", fi(s.bytes_written));
+        c("lowdiff_write_seconds_total", "counter", "device write time", fmt(s.write_secs));
+        c("lowdiff_merged_written_total", "counter", "merged spans written", fi(s.merged_written));
+        c("lowdiff_raw_compacted_total", "counter", "raw objects superseded", fi(s.raw_compacted));
+        c("lowdiff_compact_bytes_total", "counter", "compaction I/O bytes", fi(s.compact_bytes));
+        c("lowdiff_commit_seconds_total", "counter", "phase-2 commit time", fmt(s.commit_secs));
+        c("lowdiff_io_deferred_seconds_total", "counter", "deferred bg I/O", fmt(s.deferred_secs));
+        c("lowdiff_io_contended_bytes_total", "counter", "contended", fi(s.contended_bytes));
+        c("lowdiff_mtbf_estimate_seconds", "gauge", "MTBF estimate", fmt(v.mtbf_estimate));
+        c("lowdiff_bw_estimate_bytes_per_second", "gauge", "bw estimate", fmt(v.bw_estimate));
+        c("lowdiff_io_budget_bytes_per_second", "gauge", "live bg I/O budget", fmt(v.io_budget));
+        c("lowdiff_retunes_total", "counter", "retunes applied", fi(v.retunes));
+        c("lowdiff_detected_failures_total", "counter", "detected deaths", fi(v.detected_failures));
+        if let Some(r) = v.applied {
+            c("lowdiff_full_every", "gauge", "applied full interval", fi(r.full_every));
+            c("lowdiff_batch_size", "gauge", "applied batch size", fi(r.batch_size as u64));
+            c("lowdiff_compact_every", "gauge", "applied merge factor", fi(r.compact_every as u64));
+        }
+        if let Some(t) = &state.trace {
+            let (recorded, dropped) = t.counts();
+            c("lowdiff_trace_events_total", "counter", "trace events recorded", fi(recorded));
+            c("lowdiff_trace_dropped_total", "counter", "trace events dropped", fi(dropped));
+        }
+    }
+    if let Some(hb) = &state.heartbeats {
+        out.push_str("# HELP lowdiff_heartbeat_age_seconds seconds since each rank's newest beat\n");
+        out.push_str("# TYPE lowdiff_heartbeat_age_seconds gauge\n");
+        let beats = hb.snapshot();
+        for b in &beats {
+            if b.age_secs.is_finite() {
+                out.push_str(&format!(
+                    "lowdiff_heartbeat_age_seconds{{rank=\"{}\"}} {}\n",
+                    b.rank,
+                    fmt(b.age_secs)
+                ));
+            }
+        }
+        out.push_str("# HELP lowdiff_heartbeat_beats_total beats recorded per rank\n");
+        out.push_str("# TYPE lowdiff_heartbeat_beats_total counter\n");
+        for b in &beats {
+            out.push_str(&format!(
+                "lowdiff_heartbeat_beats_total{{rank=\"{}\"}} {}\n",
+                b.rank, b.beats
+            ));
+        }
+    }
+    out
+}
+
+/// Prometheus sample formatting for finite f64 values.
+fn fmt(x: f64) -> String {
+    format!("{x}")
+}
+
+fn fi(x: u64) -> String {
+    x.to_string()
+}
+
+fn trace_json(tracer: &Tracer, n: usize) -> String {
+    let mut arr = JsonArray::new();
+    for ev in tracer.recent(n) {
+        arr.push_raw(&ev.to_chrome_json());
+    }
+    arr.finish()
+}
+
+fn chain_json(store: &dyn StorageBackend) -> Result<String> {
+    let names = store.list()?;
+    let mut o = JsonObject::new();
+    o.u64("objects", names.len() as u64);
+    let chain = Manifest::latest_chain(store)?;
+    if chain.full.is_some() || !chain.diffs.is_empty() {
+        let mut f = JsonObject::new();
+        match &chain.full {
+            Some((step, name)) => f.u64("full_step", *step).str("full", name),
+            None => f.raw("full_step", "null"),
+        };
+        let max_level = chain
+            .diffs
+            .iter()
+            .map(|(_, _, n)| Manifest::span_level(n))
+            .max()
+            .unwrap_or(0);
+        let replay = usize::from(chain.full.is_some()) + chain.diffs.len();
+        f.u64("diffs", chain.diffs.len() as u64)
+            .u64("replay_objects", replay as u64)
+            .u64("max_level", max_level as u64)
+            .u64("latest_step", chain.latest_step());
+        o.raw("flat", &f.finish());
+    } else {
+        o.raw("flat", "null");
+    }
+    let latest = names.iter().filter_map(|n| Manifest::parse_global(n)).max();
+    if let Some((gen, step)) = latest {
+        let mut c = JsonObject::new();
+        c.u64("generation", gen).u64("committed_step", step);
+        let mut ranks: Vec<usize> = names
+            .iter()
+            .filter_map(|n| Manifest::parse_gen_rank(n))
+            .filter(|&(g, _, _)| g == gen)
+            .map(|(_, r, _)| r)
+            .collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        let mut arr = JsonArray::new();
+        for r in ranks {
+            let ch = Manifest::gen_rank_chain(&names, gen, r, u64::MAX);
+            let lvl = ch
+                .diffs
+                .iter()
+                .map(|(_, _, n)| Manifest::span_level(n))
+                .max()
+                .unwrap_or(0);
+            let replay = usize::from(ch.full.is_some()) + ch.diffs.len();
+            let mut ro = JsonObject::new();
+            ro.u64("rank", r as u64)
+                .u64("replay_objects", replay as u64)
+                .u64("max_level", lvl as u64);
+            arr.push_raw(&ro.finish());
+        }
+        c.raw("ranks", &arr.finish());
+        o.raw("cluster", &c.finish());
+    } else {
+        o.raw("cluster", "null");
+    }
+    Ok(o.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn http(addr: SocketAddr, method: &str, target: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        let req = format!("{method} {target} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        s.write_all(req.as_bytes()).expect("send");
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).expect("read");
+        let (head, body) = buf.split_once("\r\n\r\n").expect("http response");
+        (head.to_string(), body.to_string())
+    }
+
+    fn test_state() -> Arc<ObsState> {
+        let bus = Arc::new(TelemetryBus::new());
+        bus.record_step(0.1);
+        bus.record_step(0.2);
+        bus.record_write(1000, 0.01);
+        let trace = Arc::new(Tracer::default());
+        trace.complete("persist.submit", 0.001, 0, 7, 128, 0);
+        let hb = Arc::new(HeartbeatTable::new(2));
+        hb.beat(0, 5, 4);
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        store.put(&Manifest::full_name(10), b"x").unwrap();
+        store.put(&Manifest::diff_name(11), b"y").unwrap();
+        Arc::new(ObsState::new(bus, Some(trace), Some(hb), Some(store)))
+    }
+
+    #[test]
+    fn stats_metrics_trace_and_chain_respond() {
+        let state = test_state();
+        state.set_control(ControlView {
+            strategy: "lowdiff+".into(),
+            adaptive: true,
+            mtbf_estimate: 900.0,
+            bw_estimate: 1e9,
+            io_budget: 5e8,
+            applied: Some(Retune { full_every: 64, batch_size: 4, compact_every: 8 }),
+            retunes: 3,
+            detected_failures: 1,
+        });
+        let mut srv = ObsServer::serve(Arc::clone(&state), "127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+
+        let (head, body) = http(addr, "GET", "/stats");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("Content-Length:"));
+        assert!(body.contains("\"steps\":2"), "{body}");
+        assert!(body.contains("\"strategy\":\"lowdiff+\""));
+        assert!(body.contains("\"full_every\":64"));
+        assert!(body.contains("\"heartbeats\":["));
+        assert!(body.contains("\"recorded\":1"));
+
+        let (head, body) = http(addr, "GET", "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(body.contains("lowdiff_steps_total 2"), "{body}");
+        assert!(body.contains("# TYPE lowdiff_steps_total counter"));
+        assert!(body.contains("lowdiff_bytes_written_total 1000"));
+        assert!(body.contains("lowdiff_full_every 64"));
+        assert!(body.contains("lowdiff_heartbeat_beats_total{rank=\"0\"} 1"));
+
+        let (head, body) = http(addr, "GET", "/trace?n=10");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(body.contains("\"name\":\"persist.submit\""), "{body}");
+
+        let (head, body) = http(addr, "GET", "/chain");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(body.contains("\"objects\":2"), "{body}");
+        assert!(body.contains("\"full_step\":10"));
+
+        let (head, _) = http(addr, "GET", "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"));
+
+        srv.shutdown();
+        // shutdown is idempotent
+        srv.shutdown();
+    }
+
+    #[test]
+    fn retune_and_compact_round_trip_through_parked_requests() {
+        let bus = Arc::new(TelemetryBus::new());
+        let state = Arc::new(ObsState::new(bus, None, None, None));
+        let srv = ObsServer::serve(Arc::clone(&state), "127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+
+        // nothing applied yet: partial retunes have no base to inherit
+        let (head, _) = http(addr, "POST", "/retune?full-every=32");
+        assert!(head.starts_with("HTTP/1.1 409"), "{head}");
+        assert!(state.take_retune().is_none());
+
+        // fully-specified retune works even without a base
+        let (head, body) = http(addr, "POST", "/retune?full-every=32&batch-size=2&compact-every=4");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head} {body}");
+        assert_eq!(
+            state.take_retune(),
+            Some(Retune { full_every: 32, batch_size: 2, compact_every: 4 })
+        );
+
+        // with an applied base, missing knobs inherit
+        state.set_control(ControlView {
+            applied: Some(Retune { full_every: 100, batch_size: 8, compact_every: 6 }),
+            ..Default::default()
+        });
+        let (head, _) = http(addr, "POST", "/retune?batch-size=16");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert_eq!(
+            state.take_retune(),
+            Some(Retune { full_every: 100, batch_size: 16, compact_every: 6 })
+        );
+
+        let (head, _) = http(addr, "POST", "/retune?batch-size=banana");
+        assert!(head.starts_with("HTTP/1.1 400"));
+        assert!(state.take_retune().is_none());
+
+        let (head, _) = http(addr, "POST", "/compact?every=12");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert_eq!(state.take_compact(), Some(12));
+        assert!(state.take_compact().is_none(), "drained");
+
+        let (head, _) = http(addr, "POST", "/compact");
+        assert!(head.starts_with("HTTP/1.1 400"));
+
+        // trace/chain absent: honest 404s
+        let (head, _) = http(addr, "GET", "/trace");
+        assert!(head.starts_with("HTTP/1.1 404"));
+        let (head, _) = http(addr, "GET", "/chain");
+        assert!(head.starts_with("HTTP/1.1 404"));
+    }
+}

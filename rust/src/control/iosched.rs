@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::control::telemetry::TelemetryBus;
+use crate::control::trace::Tracer;
 use crate::storage::{StorageBackend, StorageStats};
 
 /// Gate policy knobs.
@@ -77,6 +78,10 @@ pub struct IoGateStats {
 #[derive(Debug)]
 pub struct IoGate {
     cfg: IoGateConfig,
+    /// live byte budget (f64 bits): [`IoGateConfig::bytes_per_sec`] seeds
+    /// it, [`IoGate::set_rate`] retunes it at runtime (the `--adaptive`
+    /// autoscaler, see [`autoscale_budget`])
+    rate_bits: AtomicU64,
     persists: AtomicU64,
     /// token-bucket state: time before which the background budget is
     /// spoken for (same busy-until scheme as [`Throttled`])
@@ -86,6 +91,7 @@ pub struct IoGate {
     contended_bytes: AtomicU64,
     throttled_bytes: AtomicU64,
     bus: Option<Arc<TelemetryBus>>,
+    trace: Option<Arc<Tracer>>,
 }
 
 impl IoGate {
@@ -94,7 +100,17 @@ impl IoGate {
     }
 
     pub fn with_bus(cfg: IoGateConfig, bus: Option<Arc<TelemetryBus>>) -> IoGate {
+        IoGate::with_obs(cfg, bus, None)
+    }
+
+    /// Full observability hookup: telemetry bus + event tracer.
+    pub fn with_obs(
+        cfg: IoGateConfig,
+        bus: Option<Arc<TelemetryBus>>,
+        trace: Option<Arc<Tracer>>,
+    ) -> IoGate {
         IoGate {
+            rate_bits: AtomicU64::new(cfg.bytes_per_sec.max(0.0).to_bits()),
             cfg,
             persists: AtomicU64::new(0),
             busy_until: Mutex::new(Instant::now()),
@@ -103,7 +119,20 @@ impl IoGate {
             contended_bytes: AtomicU64::new(0),
             throttled_bytes: AtomicU64::new(0),
             bus,
+            trace,
         }
+    }
+
+    /// The live background byte budget (bytes/sec; <= 0 = unlimited).
+    pub fn rate(&self) -> f64 {
+        f64::from_bits(self.rate_bits.load(Ordering::Relaxed))
+    }
+
+    /// Retune the byte budget live; in-flight `charge`s finish at the old
+    /// rate, subsequent ones pay the new one.
+    pub fn set_rate(&self, bytes_per_sec: f64) {
+        let r = if bytes_per_sec.is_finite() { bytes_per_sec.max(0.0) } else { 0.0 };
+        self.rate_bits.store(r.to_bits(), Ordering::Relaxed);
     }
 
     /// Mark one foreground persist in flight for the guard's lifetime.
@@ -146,6 +175,9 @@ impl IoGate {
             if let Some(bus) = &self.bus {
                 bus.record_defer(waited.as_secs_f64());
             }
+            if let Some(t) = &self.trace {
+                t.complete("iogate.defer", waited.as_secs_f64(), 0, 0, 0, 0);
+            }
         }
     }
 
@@ -161,8 +193,9 @@ impl IoGate {
                 bus.record_contention(bytes);
             }
         }
-        if self.cfg.bytes_per_sec > 0.0 {
-            let cost = Duration::from_secs_f64(bytes as f64 / self.cfg.bytes_per_sec);
+        let rate = self.rate();
+        if rate > 0.0 {
+            let cost = Duration::from_secs_f64(bytes as f64 / rate);
             let wake = {
                 let mut busy = self.busy_until.lock().unwrap();
                 let start = (*busy).max(Instant::now());
@@ -184,6 +217,50 @@ impl IoGate {
             contended_bytes: self.contended_bytes.load(Ordering::Relaxed),
             throttled_bytes: self.throttled_bytes.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// Interference band the autoscaler steers the gate into: background I/O
+/// should cost the foreground between 1% and 5% of wall time.
+pub const AUTOSCALE_LO: f64 = 0.01;
+pub const AUTOSCALE_HI: f64 = 0.05;
+/// Autoscaler rate floor — compaction must never be starved outright.
+pub const AUTOSCALE_MIN_RATE: f64 = 1e6;
+
+/// Closed-loop `--io-budget` policy: map one interference window (the
+/// gate's OWN deferred-seconds / contended-bytes telemetry, differenced
+/// by the driver) to the next token-bucket rate. Pure and deterministic
+/// so the policy is unit-testable without a device.
+///
+/// The interference fraction combines time the gate spent deferring with
+/// the foreground time the contended bytes displaced (at the estimated
+/// device bandwidth `bw_est`). Multiplicative decrease (×0.7) above
+/// [`AUTOSCALE_HI`], multiplicative increase (×1.3) below
+/// [`AUTOSCALE_LO`] — the classic stable search. A `current` of 0 means
+/// "unlimited": the first over-band window replaces it with a real
+/// budget derived from `bw_est`; an under-band window leaves unlimited
+/// alone (there is nothing to widen). The result is clamped to
+/// `[AUTOSCALE_MIN_RATE, 2·bw_est]`.
+pub fn autoscale_budget(
+    current: f64,
+    deferred_secs: f64,
+    contended_bytes: u64,
+    dt_secs: f64,
+    bw_est: f64,
+) -> f64 {
+    if dt_secs <= 0.0 || !bw_est.is_finite() {
+        return current;
+    }
+    let max_rate = (bw_est * 2.0).max(AUTOSCALE_MIN_RATE);
+    let interference =
+        deferred_secs / dt_secs + contended_bytes as f64 / (bw_est.max(1.0) * dt_secs);
+    if interference > AUTOSCALE_HI {
+        let base = if current > 0.0 { current } else { bw_est.max(AUTOSCALE_MIN_RATE) };
+        (base * 0.7).clamp(AUTOSCALE_MIN_RATE, max_rate)
+    } else if interference < AUTOSCALE_LO && current > 0.0 {
+        (current * 1.3).clamp(AUTOSCALE_MIN_RATE, max_rate)
+    } else {
+        current
     }
 }
 
@@ -353,6 +430,49 @@ mod tests {
         let st = gate.stats();
         assert_eq!(st.deferred_ops, 1);
         assert_eq!(st.contended_bytes, 256, "defer bound hit => counted as contended");
+    }
+
+    #[test]
+    fn live_rate_retunes_the_token_bucket() {
+        let gate = IoGate::new(IoGateConfig { bytes_per_sec: 1e6, ..Default::default() });
+        assert_eq!(gate.rate(), 1e6);
+        gate.set_rate(64e6);
+        let t0 = Instant::now();
+        gate.throttle(100_000); // 1.5 ms at the retuned 64 MB/s
+        assert!(t0.elapsed().as_secs_f64() < 0.05, "old 1 MB/s rate still enforced");
+        gate.set_rate(f64::NAN);
+        assert_eq!(gate.rate(), 0.0, "garbage rates disable the bucket");
+        gate.set_rate(-3.0);
+        assert_eq!(gate.rate(), 0.0);
+    }
+
+    #[test]
+    fn autoscale_backs_off_under_interference_and_recovers() {
+        let bw = 1e9;
+        // heavy interference: 20% of the window spent deferring
+        let down = autoscale_budget(1e8, 2.0, 0, 10.0, bw);
+        assert!(down < 1e8, "must back off: {down}");
+        assert!((down - 7e7).abs() < 1.0);
+        // quiet window: budget widens again
+        let up = autoscale_budget(down, 0.0, 0, 10.0, bw);
+        assert!(up > down, "must recover: {up}");
+        // contended bytes alone also count as interference
+        let by_bytes = autoscale_budget(1e8, 0.0, (bw as u64) * 2, 10.0, bw);
+        assert!(by_bytes < 1e8, "contended bytes are interference: {by_bytes}");
+        // unlimited (0) gets a real budget on the first bad window...
+        let capped = autoscale_budget(0.0, 2.0, 0, 10.0, bw);
+        assert!(capped > 0.0 && capped <= bw);
+        // ...and stays unlimited while quiet
+        assert_eq!(autoscale_budget(0.0, 0.0, 0, 10.0, bw), 0.0);
+        // clamps: never below the floor, never above 2x bandwidth
+        assert!(autoscale_budget(1.5e6, 5.0, 0, 10.0, bw) >= AUTOSCALE_MIN_RATE);
+        let mut r = 1e8;
+        for _ in 0..100 {
+            r = autoscale_budget(r, 0.0, 0, 10.0, bw);
+        }
+        assert!(r <= 2.0 * bw);
+        // degenerate windows change nothing
+        assert_eq!(autoscale_budget(1e8, 1.0, 0, 0.0, bw), 1e8);
     }
 
     #[test]

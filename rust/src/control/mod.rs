@@ -24,13 +24,32 @@
 //!   byte budget (`--io-budget`), yielding to in-flight checkpoint
 //!   persists.
 //!
+//! PR 8 adds the *observability* half of the control plane:
+//!
+//! - [`trace`] — a lock-light ring-buffered [`Tracer`] whose spans cover
+//!   every pipeline stage (encode, flush, persist, defer, compaction
+//!   level, commit phases, replay) and serialize to a
+//!   chrome://tracing-compatible trace journal beside the chain;
+//! - [`http`] — a std-only threaded mini-HTTP server ([`ObsServer`])
+//!   exposing `GET /stats|/metrics|/trace|/chain` and `POST
+//!   /retune|/compact`, the latter routed through the same safe-point
+//!   paths the actuator uses.
+//!
 //! Wiring, safety points and the scheduler policy are documented in
-//! `docs/CONTROL.md`.
+//! `docs/CONTROL.md`; the observability surface in
+//! `docs/OBSERVABILITY.md`.
 
 pub mod actuate;
+pub mod http;
 pub mod iosched;
 pub mod telemetry;
+pub mod trace;
 
-pub use actuate::{converge_synthetic, replay_bound, Actuator, ActuatorConfig, Retune, Window};
-pub use iosched::{GatedStore, IoGate, IoGateConfig, IoGateStats, PersistGuard};
+pub use actuate::{
+    converge_synthetic, replay_bound, Actuator, ActuatorConfig, ControlState, Retune, Window,
+    CONTROL_STATE_OBJECT,
+};
+pub use http::{ControlView, ObsServer, ObsState};
+pub use iosched::{autoscale_budget, GatedStore, IoGate, IoGateConfig, IoGateStats, PersistGuard};
 pub use telemetry::{BwEstimator, MtbfEstimator, Snapshot, TelemetryBus};
+pub use trace::{Span, StageSummary, TraceEvent, Tracer, TRACE_OBJECT};

@@ -212,6 +212,27 @@ impl MtbfEstimator {
         (self.acc_secs + self.prior_weight * self.prior_mtbf)
             / (self.acc_failures + self.prior_weight)
     }
+
+    /// The decayed accumulators `(acc_secs, acc_failures)` — everything a
+    /// restart needs to warm-start the estimator (the prior/decay knobs
+    /// come from config). See `control/actuate.rs::ControlState`.
+    pub fn export(&self) -> (f64, f64) {
+        (self.acc_secs, self.acc_failures)
+    }
+
+    /// Warm-start from persisted accumulators. Non-finite or negative
+    /// values are ignored (a damaged sidecar must never poison the
+    /// estimate — cold-start priors stay in force instead).
+    pub fn restore(&mut self, acc_secs: f64, acc_failures: f64) {
+        if acc_secs.is_finite()
+            && acc_secs >= 0.0
+            && acc_failures.is_finite()
+            && acc_failures >= 0.0
+        {
+            self.acc_secs = acc_secs;
+            self.acc_failures = acc_failures;
+        }
+    }
 }
 
 /// EWMA write-bandwidth estimator; windows without observed device time
@@ -239,6 +260,19 @@ impl BwEstimator {
 
     pub fn estimate(&self) -> f64 {
         self.est
+    }
+
+    /// The smoothed estimate, for cross-run persistence.
+    pub fn export(&self) -> f64 {
+        self.est
+    }
+
+    /// Warm-start from a persisted estimate; non-finite or non-positive
+    /// values are ignored (the configured prior stays).
+    pub fn restore(&mut self, est: f64) {
+        if est.is_finite() && est > 0.0 {
+            self.est = est;
+        }
     }
 }
 
@@ -316,6 +350,29 @@ mod tests {
         c.observe_window(100.0, 1);
         d.observe_window(100.0, 4);
         assert!(d.estimate() < c.estimate());
+    }
+
+    #[test]
+    fn estimator_state_roundtrips_and_rejects_garbage() {
+        let mut e = MtbfEstimator::new(1000.0, 0.25, 0.98);
+        for _ in 0..20 {
+            e.observe_window(100.0, 1);
+        }
+        let (s, f) = e.export();
+        let mut fresh = MtbfEstimator::new(1000.0, 0.25, 0.98);
+        fresh.restore(s, f);
+        assert_eq!(fresh.estimate(), e.estimate(), "warm start reproduces the estimate");
+        fresh.restore(f64::NAN, 1.0);
+        fresh.restore(-1.0, 0.0);
+        assert_eq!(fresh.estimate(), e.estimate(), "garbage state is ignored");
+        let mut b = BwEstimator::new(1e9, 0.5);
+        b.observe_window(250_000_000, 1.0);
+        let mut b2 = BwEstimator::new(1e9, 0.5);
+        b2.restore(b.export());
+        assert_eq!(b2.estimate(), b.estimate());
+        b2.restore(-5.0);
+        b2.restore(f64::INFINITY);
+        assert_eq!(b2.estimate(), b.estimate(), "garbage estimate is ignored");
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! Lock-light pipeline event tracing.
+//!
+//! Every pipeline stage — encode, batch flush, persist submit/complete,
+//! I/O-gate defer, compaction pass per level, phase-1 ack, phase-2
+//! commit, recovery replay, heartbeat detection — records spans/events
+//! into a bounded ring buffer owned by one [`Tracer`] per run. Producers
+//! pay one short `Mutex` critical section per *checkpoint-scale*
+//! operation (never per tensor element), so tracing is safe to leave on
+//! in production runs.
+//!
+//! Three consumers read the ring:
+//! - `GET /trace` ([`crate::control::http`]) serves the recent events
+//!   live;
+//! - the driver persists the ring as a chrome://tracing-compatible JSONL
+//!   journal beside the chain ([`TRACE_OBJECT`],
+//!   [`Tracer::to_chrome_jsonl`]) — flat GC, cluster GC and
+//!   `truncate_after` all skip names they cannot parse, so the journal
+//!   survives every collection path;
+//! - [`Tracer::summary`] folds per-stage totals (count, wall, bytes)
+//!   into the end-of-run `RunReport`.
+//!
+//! Span identity: `id` is a process-wide monotone counter, `tid` is the
+//! producer's lane (rank number for cluster stages, 0 for the flat
+//! pipeline), timestamps are microseconds since the tracer was created.
+//! When the ring is full the OLDEST events are dropped (and counted) —
+//! the journal is a tail, the summary is exact.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::JsonObject;
+
+/// Storage object name of the persisted trace journal. Deliberately
+/// outside every `Manifest` name family so no GC/truncate path can
+/// collect it.
+pub const TRACE_OBJECT: &str = "trace-journal.jsonl";
+
+/// Default ring capacity (events retained for `/trace` and the journal).
+pub const DEFAULT_TRACE_CAP: usize = 4096;
+
+/// One recorded span (`dur_micros > 0` or a timed wait) or instant event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// process-wide monotone event id (assigned at record time)
+    pub id: u64,
+    /// stage name (static so recording never allocates for it)
+    pub name: &'static str,
+    /// producer lane: rank number for cluster stages, 0 otherwise
+    pub tid: u64,
+    /// span start, microseconds since the tracer's epoch
+    pub ts_micros: u64,
+    /// span duration in microseconds (0 for instants)
+    pub dur_micros: u64,
+    /// training step the operation belongs to (0 when not applicable)
+    pub step: u64,
+    /// payload bytes moved by the operation (0 when not applicable)
+    pub bytes: u64,
+    /// stage-specific counter: compaction level, commit seq, ...
+    pub extra: u64,
+    /// true for instantaneous events (`ph:"i"` in the chrome format)
+    pub instant: bool,
+}
+
+impl TraceEvent {
+    /// One chrome://tracing "Trace Event Format" JSON object.
+    pub fn to_chrome_json(&self) -> String {
+        let mut args = JsonObject::new();
+        args.u64("id", self.id).u64("step", self.step).u64("bytes", self.bytes).u64(
+            "extra",
+            self.extra,
+        );
+        let mut o = JsonObject::new();
+        o.str("name", self.name)
+            .str("cat", "lowdiff")
+            .str("ph", if self.instant { "i" } else { "X" })
+            .u64("pid", 0)
+            .u64("tid", self.tid)
+            .u64("ts", self.ts_micros);
+        if self.instant {
+            o.str("s", "g");
+        } else {
+            o.u64("dur", self.dur_micros);
+        }
+        o.raw("args", &args.finish());
+        o.finish()
+    }
+}
+
+/// Per-stage aggregate, exact over the whole run (never ring-bounded).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageSummary {
+    pub name: &'static str,
+    pub count: u64,
+    pub total_micros: u64,
+    pub bytes: u64,
+}
+
+/// The ring-buffer span/event recorder. Share one per run via `Arc`.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    cap: usize,
+    ring: Mutex<VecDeque<TraceEvent>>,
+    agg: Mutex<BTreeMap<&'static str, StageSummary>>,
+    next_id: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(DEFAULT_TRACE_CAP)
+    }
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Tracer {
+        let cap = capacity.max(16);
+        Tracer {
+            epoch: Instant::now(),
+            cap,
+            ring: Mutex::new(VecDeque::with_capacity(cap)),
+            agg: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Open a span; it records itself on drop. Decorate with the builder
+    /// setters at creation and the `set_*` setters once values are known.
+    pub fn span(self: &Arc<Self>, name: &'static str) -> Span {
+        Span {
+            tracer: Arc::clone(self),
+            name,
+            t0: Instant::now(),
+            tid: 0,
+            step: 0,
+            bytes: 0,
+            extra: 0,
+        }
+    }
+
+    /// `span` over an optional tracer — the plumbing-friendly form every
+    /// instrumented stage uses (`trace` config fields are `Option`al).
+    pub fn maybe_span(t: &Option<Arc<Tracer>>, name: &'static str) -> Option<Span> {
+        t.as_ref().map(|t| t.span(name))
+    }
+
+    /// Record a completed operation observed externally (no RAII guard —
+    /// the I/O gate's defer waits use this).
+    pub fn complete(
+        &self,
+        name: &'static str,
+        dur_secs: f64,
+        tid: u64,
+        step: u64,
+        bytes: u64,
+        extra: u64,
+    ) {
+        let dur_micros = (dur_secs.max(0.0) * 1e6) as u64;
+        let now = self.epoch.elapsed().as_micros() as u64;
+        self.record(TraceEvent {
+            id: 0,
+            name,
+            tid,
+            ts_micros: now.saturating_sub(dur_micros),
+            dur_micros,
+            step,
+            bytes,
+            extra,
+            instant: false,
+        });
+    }
+
+    /// Record an instantaneous event (phase-1 ack, failure detection...).
+    pub fn instant(&self, name: &'static str, tid: u64, step: u64, extra: u64) {
+        self.record(TraceEvent {
+            id: 0,
+            name,
+            tid,
+            ts_micros: self.epoch.elapsed().as_micros() as u64,
+            dur_micros: 0,
+            step,
+            bytes: 0,
+            extra,
+            instant: true,
+        });
+    }
+
+    fn record(&self, mut ev: TraceEvent) {
+        ev.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut ring = self.ring.lock().unwrap();
+            if ring.len() >= self.cap {
+                ring.pop_front();
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            ring.push_back(ev);
+        }
+        let mut agg = self.agg.lock().unwrap();
+        let e = agg.entry(ev.name).or_insert(StageSummary { name: ev.name, ..Default::default() });
+        e.count += 1;
+        e.total_micros += ev.dur_micros;
+        e.bytes += ev.bytes;
+    }
+
+    /// The newest `n` events, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().unwrap();
+        let skip = ring.len().saturating_sub(n);
+        ring.iter().skip(skip).copied().collect()
+    }
+
+    /// `(recorded, dropped)` totals — `recorded - dropped` events remain
+    /// in the ring (capped at the capacity).
+    pub fn counts(&self) -> (u64, u64) {
+        (self.recorded.load(Ordering::Relaxed), self.dropped.load(Ordering::Relaxed))
+    }
+
+    /// Exact per-stage totals over the whole run, sorted by stage name.
+    pub fn summary(&self) -> Vec<StageSummary> {
+        self.agg.lock().unwrap().values().copied().collect()
+    }
+
+    /// The retained ring as chrome://tracing JSONL (one event per line —
+    /// wrap in `[...]` or load the file directly in a viewer that accepts
+    /// newline-delimited events).
+    pub fn to_chrome_jsonl(&self) -> String {
+        let events = self.recent(usize::MAX);
+        let mut out = String::with_capacity(events.len() * 128);
+        for ev in events {
+            out.push_str(&ev.to_chrome_json());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// RAII span guard; records into its tracer on drop.
+pub struct Span {
+    tracer: Arc<Tracer>,
+    name: &'static str,
+    t0: Instant,
+    tid: u64,
+    step: u64,
+    bytes: u64,
+    extra: u64,
+}
+
+impl Span {
+    pub fn tid(mut self, tid: u64) -> Span {
+        self.tid = tid;
+        self
+    }
+
+    pub fn step(mut self, step: u64) -> Span {
+        self.step = step;
+        self
+    }
+
+    pub fn bytes(mut self, bytes: u64) -> Span {
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn extra(mut self, extra: u64) -> Span {
+        self.extra = extra;
+        self
+    }
+
+    /// Set the payload size once known (encode output, read length...).
+    pub fn set_bytes(&mut self, bytes: u64) {
+        self.bytes = bytes;
+    }
+
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    pub fn set_extra(&mut self, extra: u64) {
+        self.extra = extra;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let dur = self.t0.elapsed();
+        let ts = self
+            .t0
+            .saturating_duration_since(self.tracer.epoch)
+            .as_micros() as u64;
+        self.tracer.record(TraceEvent {
+            id: 0,
+            name: self.name,
+            tid: self.tid,
+            ts_micros: ts,
+            dur_micros: dur.as_micros() as u64,
+            step: self.step,
+            bytes: self.bytes,
+            extra: self.extra,
+            instant: false,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_on_drop_with_payload() {
+        let t = Arc::new(Tracer::new(64));
+        {
+            let mut sp = t.span("encode").tid(3).step(7);
+            sp.set_bytes(512);
+        }
+        t.instant("ack", 1, 7, 42);
+        let evs = t.recent(10);
+        assert_eq!(evs.len(), 2);
+        assert_eq!((evs[0].name, evs[0].tid, evs[0].step, evs[0].bytes), ("encode", 3, 7, 512));
+        assert!(!evs[0].instant);
+        assert_eq!((evs[1].name, evs[1].extra, evs[1].instant), ("ack", 42, true));
+        assert!(evs[1].id > evs[0].id, "ids are monotone");
+        assert_eq!(t.counts(), (2, 0));
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts_drops() {
+        let t = Arc::new(Tracer::new(16));
+        for i in 0..40u64 {
+            t.instant("e", 0, i, 0);
+        }
+        let (recorded, dropped) = t.counts();
+        assert_eq!(recorded, 40);
+        assert_eq!(dropped, 24);
+        let evs = t.recent(100);
+        assert_eq!(evs.len(), 16);
+        assert_eq!(evs.first().unwrap().step, 24, "oldest events dropped first");
+        assert_eq!(evs.last().unwrap().step, 39);
+        // the summary is exact even though the ring is bounded
+        let s = t.summary();
+        assert_eq!(s.len(), 1);
+        assert_eq!((s[0].name, s[0].count), ("e", 40));
+    }
+
+    #[test]
+    fn summary_aggregates_per_stage() {
+        let t = Arc::new(Tracer::new(64));
+        t.complete("persist", 0.001, 0, 1, 100, 0);
+        t.complete("persist", 0.002, 0, 2, 200, 0);
+        t.complete("encode", 0.0, 0, 1, 50, 0);
+        let s = t.summary();
+        assert_eq!(s.len(), 2);
+        let persist = s.iter().find(|x| x.name == "persist").unwrap();
+        assert_eq!(persist.count, 2);
+        assert_eq!(persist.bytes, 300);
+        assert!(persist.total_micros >= 2900, "{}", persist.total_micros);
+    }
+
+    #[test]
+    fn chrome_jsonl_is_one_valid_object_per_line() {
+        let t = Arc::new(Tracer::new(64));
+        t.complete("flush \"q\"", 0.001, 2, 9, 64, 1);
+        t.instant("detect", 1, 0, 3);
+        let out = t.to_chrome_jsonl();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with('{') && lines[0].ends_with('}'));
+        assert!(lines[0].contains("\"ph\":\"X\"") && lines[0].contains("\"dur\":"));
+        assert!(lines[0].contains("flush \\\"q\\\""), "names are escaped: {}", lines[0]);
+        assert!(lines[1].contains("\"ph\":\"i\"") && lines[1].contains("\"s\":\"g\""));
+        assert!(lines[1].contains("\"extra\":3"));
+    }
+
+    #[test]
+    fn maybe_span_is_a_no_op_without_a_tracer() {
+        assert!(Tracer::maybe_span(&None, "x").is_none());
+        let t = Some(Arc::new(Tracer::new(16)));
+        drop(Tracer::maybe_span(&t, "x"));
+        assert_eq!(t.unwrap().counts().0, 1);
+    }
+}

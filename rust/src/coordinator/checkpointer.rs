@@ -41,6 +41,7 @@ use crate::checkpoint::format::PayloadCodec;
 use crate::checkpoint::manifest::Manifest;
 use crate::control::iosched::{IoGate, IoGateConfig};
 use crate::control::telemetry::TelemetryBus;
+use crate::control::Tracer;
 use crate::coordinator::reusing_queue::ReusingQueue;
 use crate::optim::ModelState;
 use crate::pipeline::{Compactor, CompactorConfig, Encoded, Encoder, Sink, DEFAULT_MAX_LEVEL};
@@ -99,6 +100,13 @@ pub struct CkptConfig {
     /// it, and its presence keeps a (possibly idle) compactor thread
     /// alive so `CkptItem::Retune` can enable compaction later
     pub telemetry: Option<Arc<TelemetryBus>>,
+    /// caller-provided I/O gate: when set it is used instead of building
+    /// a private one, so a driver's live `set_rate` retunes (autoscaled
+    /// `--io-budget`) reach this write path's token bucket too
+    pub gate: Option<Arc<IoGate>>,
+    /// event tracer: encode/batch-flush/persist/compaction stages record
+    /// spans into the shared ring buffer when set
+    pub trace: Option<Arc<Tracer>>,
 }
 
 impl Default for CkptConfig {
@@ -115,6 +123,8 @@ impl Default for CkptConfig {
             compact_every: 0,
             io_budget: 0.0,
             telemetry: None,
+            gate: None,
+            trace: None,
         }
     }
 }
@@ -185,6 +195,7 @@ struct WritePath {
     enc: Encoder,
     sink: Sink,
     compactor: Option<Compactor>,
+    trace: Option<Arc<Tracer>>,
 }
 
 impl WritePath {
@@ -196,14 +207,18 @@ impl WritePath {
         // and the compactor (shaped reads/writes). Built whenever a
         // compactor will exist — shaping is free when nothing contends.
         let with_compactor = cfg.compact_every >= 2 || cfg.uses_control();
-        let gate = with_compactor.then(|| {
-            Arc::new(IoGate::with_bus(
-                IoGateConfig { bytes_per_sec: cfg.io_budget, ..IoGateConfig::default() },
-                cfg.telemetry.clone(),
-            ))
+        let gate = cfg.gate.clone().or_else(|| {
+            with_compactor.then(|| {
+                Arc::new(IoGate::with_obs(
+                    IoGateConfig { bytes_per_sec: cfg.io_budget, ..IoGateConfig::default() },
+                    cfg.telemetry.clone(),
+                    cfg.trace.clone(),
+                ))
+            })
         });
         let sink = Sink::new(Arc::clone(store), cfg.n_shards, cfg.writers, cfg.inflight_cap())
-            .with_control(gate.clone(), cfg.telemetry.clone());
+            .with_control(gate.clone(), cfg.telemetry.clone())
+            .with_trace(cfg.trace.clone());
         let compactor = with_compactor.then(|| {
             // the compactor reads/writes LOGICAL objects on its own thread;
             // in engine mode it gets its own 1-shard view of the store
@@ -212,7 +227,7 @@ impl WritePath {
             } else {
                 Arc::clone(store)
             };
-            Compactor::spawn_with(
+            Compactor::spawn_obs(
                 logical,
                 CompactorConfig {
                     model_sig: cfg.model_sig,
@@ -227,9 +242,10 @@ impl WritePath {
                 },
                 gate,
                 cfg.telemetry.clone(),
+                cfg.trace.clone(),
             )
         });
-        WritePath { enc, sink, compactor }
+        WritePath { enc, sink, compactor, trace: cfg.trace.clone() }
     }
 
     /// Persist one diff-chain object and wake the compactor.
@@ -302,8 +318,13 @@ fn run_loop(
             CkptItem::Full(state) => {
                 // flush the pre-full chain first (order matters for GC)
                 flush_batch(&mut batch, &stats, &mut wp);
+                let t0 = Instant::now();
                 match wp.enc.encode_full(&state) {
                     Ok(obj) => {
+                        if let Some(t) = &wp.trace {
+                            let secs = t0.elapsed().as_secs_f64();
+                            t.complete("encode", secs, 0, step, obj.buf.len() as u64, 0);
+                        }
                         wp.sink.submit(obj, &stats);
                         stats.lock().unwrap().full_ckpts += 1;
                         if cfg.gc {
@@ -347,8 +368,15 @@ fn run_loop(
 /// Drain the batch buffer into a pooled buffer in one encoding pass and
 /// submit it. No-op when the batch is empty.
 fn flush_batch(batch: &mut BatchBuffer, stats: &Arc<Mutex<CkptStats>>, wp: &mut WritePath) {
+    let t0 = Instant::now();
     match wp.enc.encode_batch(batch) {
-        Ok(Some(obj)) => wp.submit_chain_object(obj, stats),
+        Ok(Some(obj)) => {
+            if let Some(t) = &wp.trace {
+                let secs = t0.elapsed().as_secs_f64();
+                t.complete("batch.flush", secs, 0, 0, obj.buf.len() as u64, 0);
+            }
+            wp.submit_chain_object(obj, stats);
+        }
         Ok(None) => {}
         Err(e) => log::error!("encode batch: {e:#}"),
     }
@@ -364,8 +392,15 @@ fn handle_sparse(
     // the LIVE batching size (a `Retune` may have moved it off the
     // configured value), not the spawn-time config
     if batch.batch_size() <= 1 {
+        let t0 = Instant::now();
         match wp.enc.encode_diff(step, &DiffPayload::Gradient(sparse)) {
-            Ok(obj) => wp.submit_chain_object(obj, stats),
+            Ok(obj) => {
+                if let Some(t) = &wp.trace {
+                    let secs = t0.elapsed().as_secs_f64();
+                    t.complete("encode", secs, 0, step, obj.buf.len() as u64, 0);
+                }
+                wp.submit_chain_object(obj, stats);
+            }
             Err(e) => log::error!("encode diff {step}: {e:#}"),
         }
         return;

@@ -16,7 +16,7 @@
 //! stalls; everything the checkpointing thread does overlaps with training.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -25,11 +25,14 @@ use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::format::{model_signature, PayloadCodec};
 use crate::checkpoint::full::write_full;
 use crate::checkpoint::manifest::Manifest;
-use crate::cluster::{self, Cluster, ClusterConfig};
+use crate::cluster::{self, Cluster, ClusterConfig, Detector, HeartbeatTable};
 use crate::collective::sparse_allgather_sum;
 use crate::compress::topk_mask_with_scratch;
-use crate::control::actuate::{Actuator, ActuatorConfig, Retune};
+use crate::control::actuate::{Actuator, ActuatorConfig, ControlState, Retune};
+use crate::control::http::{ControlView, ObsServer, ObsState};
+use crate::control::iosched::{autoscale_budget, IoGate, IoGateConfig};
 use crate::control::telemetry::TelemetryBus;
+use crate::control::trace::{Tracer, TRACE_OBJECT};
 use crate::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
 use crate::coordinator::config_opt::SystemParams;
 use crate::coordinator::failure::{FailureInjector, FailureKind};
@@ -140,6 +143,19 @@ pub struct TrainConfig {
     /// background-I/O byte budget for compaction's token-bucket gate
     /// (`--io-budget`, bytes/sec); <= 0 leaves the bucket open
     pub io_budget: f64,
+    /// observability plane (`--serve ADDR`): bind a threaded mini-HTTP
+    /// server exposing `/stats`, `/metrics`, `/trace`, `/chain` and the
+    /// `POST /retune` / `POST /compact` control endpoints
+    pub serve: Option<String>,
+    /// event tracing (`--trace`): record per-stage spans into a ring
+    /// buffer and persist a chrome://tracing JSONL journal beside the
+    /// chain at every control tick and at run end
+    pub trace: bool,
+    /// heartbeat failure detection (`--heartbeat-timeout SECS`, cluster
+    /// runtime): a rank silent for this long past the newest beat is
+    /// declared dead and recovered through the same consistent-cut path
+    /// injected deaths use; <= 0 disables
+    pub heartbeat_timeout: f64,
 }
 
 impl Default for TrainConfig {
@@ -166,6 +182,9 @@ impl Default for TrainConfig {
             compact_every: 0,
             adaptive: false,
             io_budget: 0.0,
+            serve: None,
+            trace: false,
+            heartbeat_timeout: 0.0,
         }
     }
 }
@@ -269,9 +288,35 @@ pub fn train(
             | StrategyKind::CheckFreq
             | StrategyKind::Gemini
     );
+    // the observability plane (docs/OBSERVABILITY.md) rides on the same
+    // telemetry bus the §V-C loop uses, so asking for it brings the bus up
+    // even in non-adaptive runs; the ACTUATOR stays gated on `--adaptive`
+    let wants_obs = cfg.serve.is_some() || cfg.trace || cfg.heartbeat_timeout > 0.0;
     let bus: Option<Arc<TelemetryBus>> =
-        (cfg.adaptive && adaptive_strategy).then(|| Arc::new(TelemetryBus::new()));
+        ((cfg.adaptive && adaptive_strategy) || wants_obs).then(|| Arc::new(TelemetryBus::new()));
     let mut actuator: Option<Actuator> = None;
+    // estimator state persisted by an earlier incarnation beside the chain:
+    // warm-starts the actuator so a restart keeps its measured MTBF/BW
+    // instead of re-learning from priors
+    let saved_control: Option<ControlState> = ControlState::load(store.as_ref());
+    let tracer: Option<Arc<Tracer>> = cfg.trace.then(|| Arc::new(Tracer::default()));
+    // ONE driver-owned I/O gate shared with every spawned write path, so
+    // live `set_rate` retunes (interference autoscaling, POST /retune)
+    // reach the token bucket all persists and compaction passes pay
+    let gate: Option<Arc<IoGate>> = bus.is_some().then(|| {
+        Arc::new(IoGate::with_obs(
+            IoGateConfig { bytes_per_sec: cfg.io_budget, ..IoGateConfig::default() },
+            bus.clone(),
+            tracer.clone(),
+        ))
+    });
+    let with_hb = cfg.heartbeat_timeout > 0.0 && cfg.uses_cluster();
+    let heartbeats: Option<Arc<HeartbeatTable>> =
+        with_hb.then(|| Arc::new(HeartbeatTable::new(cfg.ranks)));
+    let detector: Option<Detector> = heartbeats.as_ref().map(|t| {
+        let poll = Duration::from_secs_f64((cfg.heartbeat_timeout / 4.0).clamp(0.001, 0.1));
+        Detector::spawn(Arc::clone(t), Duration::from_secs_f64(cfg.heartbeat_timeout), poll)
+    });
 
     // per-strategy checkpointing processes
     let mem_tier: Arc<dyn StorageBackend> = Arc::new(crate::storage::MemStore::new());
@@ -284,7 +329,47 @@ pub fn train(
         } else {
             Arc::clone(&store)
         };
-    let mut procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &bus);
+    // the observability/control HTTP plane: reads ride the bus/tracer/
+    // heartbeat handles directly; writes (POST /retune, /compact) park in
+    // the ObsState and the driver drains them at the same safe points the
+    // §V-C actuator uses — the server itself never touches a knob
+    let obs: Option<Arc<ObsState>> = wants_obs.then(|| {
+        let obs_bus = Arc::clone(bus.as_ref().expect("observability implies a telemetry bus"));
+        Arc::new(ObsState::new(
+            obs_bus,
+            tracer.clone(),
+            heartbeats.clone(),
+            Some(Arc::clone(&logical)),
+        ))
+    });
+    if let Some(o) = &obs {
+        o.set_control(ControlView {
+            strategy: cfg.strategy.name().into(),
+            adaptive: cfg.adaptive,
+            io_budget: cfg.io_budget,
+            ..ControlView::default()
+        });
+    }
+    let mut server: Option<ObsServer> = match (&cfg.serve, &obs) {
+        (Some(addr), Some(st)) => {
+            let s = ObsServer::serve(Arc::clone(st), addr)?;
+            log::info!("observability plane listening on http://{}", s.local_addr());
+            Some(s)
+        }
+        _ => None,
+    };
+    let handles = ObsHandles {
+        bus: bus.clone(),
+        gate: gate.clone(),
+        trace: tracer.clone(),
+        heartbeats: heartbeats.clone(),
+    };
+    // interference-autoscaling window trackers (deltas between ticks)
+    let mut last_deferred = 0.0f64;
+    let mut last_contended = 0u64;
+    let mut last_tick_elapsed = 0.0f64;
+
+    let mut procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &handles);
     // anchor the differential chain: a recovery needs a base full
     // checkpoint (Eq. (6) starts from C^F) — in the full-free mode this is
     // the ONLY full the run ever writes
@@ -499,56 +584,98 @@ pub fn train(
                 target % eff.full_every == 0
             };
             if tick_due {
-                let iter_time = (wall0.elapsed().as_secs_f64() / target as f64).max(1e-6);
-                let act = actuator
-                    .get_or_insert_with(|| make_actuator(cfg, layout, n, &eff, iter_time));
-                // the hierarchical merge-factor policy steers off the live
-                // chain length: one chain object lands per batch flush of
-                // `batch_size` diffs, each `diff_every` steps apart
-                let per_object = eff.diff_every.max(1) * eff.batch_size.max(1) as u64;
-                act.note_chain_objects(target.saturating_sub(anchor_step) / per_object);
-                if let Some(r) = act.tick(bus) {
-                    log::info!(
-                        "§V-C retune at step {target}: full_every {} -> {}, batch {} -> {}, \
-                         compact {} -> {}",
-                        eff.full_every,
-                        r.full_every,
-                        eff.batch_size,
-                        r.batch_size,
-                        eff.compact_every,
-                        r.compact_every
-                    );
-                    eff.full_every = r.full_every;
-                    eff.batch_size = r.batch_size;
-                    eff.compact_every = r.compact_every;
-                    report.retunes += 1;
-                    match &procs {
-                        Procs::LowDiff { ckpt } => {
-                            // queue order makes this land after every
-                            // enqueued diff, with the pending batch flushed
-                            ckpt.queue.put(
-                                target,
-                                Arc::new(CkptItem::Retune {
-                                    batch_size: r.batch_size,
-                                    compact_every: r.compact_every,
-                                }),
-                            );
+                if cfg.adaptive && adaptive_strategy {
+                    let iter_time = (wall0.elapsed().as_secs_f64() / target as f64).max(1e-6);
+                    let act = actuator.get_or_insert_with(|| {
+                        let mut a = make_actuator(cfg, layout, n, &eff, iter_time);
+                        if let Some(st) = &saved_control {
+                            // satellite: restored estimator accumulators —
+                            // the tuner starts from the chain's measured
+                            // MTBF/bandwidth, not the cold-start priors
+                            a.warm_start(st);
+                            log::info!("actuator warm-started from persisted control state");
                         }
-                        Procs::Cluster { cluster } => {
-                            // applied by the coordinator at the next
-                            // committed record: all ranks switch at the
-                            // same committed epoch
-                            cluster.set_compact_every(r.compact_every);
-                        }
-                        Procs::Plus { plus } => {
-                            // the persist boundary is LowDiff+'s safe
-                            // point: the assembler reads the knob between
-                            // applied steps, never mid-persist
-                            plus.set_persist_every(r.full_every);
-                        }
-                        _ => {}
+                        a
+                    });
+                    // the hierarchical merge-factor policy steers off the
+                    // live chain length: one chain object lands per batch
+                    // flush of `batch_size` diffs, `diff_every` steps apart
+                    let per_object = eff.diff_every.max(1) * eff.batch_size.max(1) as u64;
+                    act.note_chain_objects(target.saturating_sub(anchor_step) / per_object);
+                    if let Some(r) = act.tick(bus) {
+                        log::info!(
+                            "§V-C retune at step {target}: full_every {} -> {}, batch {} -> \
+                             {}, compact {} -> {}",
+                            eff.full_every,
+                            r.full_every,
+                            eff.batch_size,
+                            r.batch_size,
+                            eff.compact_every,
+                            r.compact_every
+                        );
+                        apply_retune(r, target, &mut eff, &procs, &mut report);
                     }
                 }
+                // POST /retune and /compact: operator requests parked by
+                // the HTTP plane drain HERE, the same safe point — never
+                // mid-batch, never inside an uncommitted cluster epoch
+                if let Some(o) = &obs {
+                    if let Some(r) = o.take_retune() {
+                        log::info!(
+                            "manual retune at step {target}: full_every={} batch={} compact={}",
+                            r.full_every,
+                            r.batch_size,
+                            r.compact_every
+                        );
+                        apply_retune(r, target, &mut eff, &procs, &mut report);
+                    }
+                    if let Some(mf) = o.take_compact() {
+                        let r = Retune {
+                            full_every: eff.full_every,
+                            batch_size: eff.batch_size,
+                            compact_every: mf,
+                        };
+                        log::info!("manual compaction retune at step {target}: factor {mf}");
+                        apply_retune(r, target, &mut eff, &procs, &mut report);
+                    }
+                }
+                // satellite: interference autoscaling — shrink the
+                // background budget when this window deferred persists or
+                // contended for bytes, grow it back when the window ran
+                // clean; all writers share the gate, so set_rate lands
+                // everywhere at once
+                if cfg.adaptive {
+                    if let Some(g) = &gate {
+                        let snap = bus.snapshot();
+                        let dt = (snap.elapsed_secs - last_tick_elapsed).max(1e-6);
+                        let d_def = (snap.deferred_secs - last_deferred).max(0.0);
+                        let d_cont = snap.contended_bytes.saturating_sub(last_contended);
+                        let bw = actuator.as_ref().map(|a| a.estimates().1).unwrap_or(0.0);
+                        let cur = g.rate();
+                        let next = autoscale_budget(cur, d_def, d_cont, dt, bw);
+                        if (next - cur).abs() > f64::EPSILON {
+                            log::debug!("io budget autoscaled: {cur:.3e} -> {next:.3e}");
+                            g.set_rate(next);
+                            eff.io_budget = next;
+                        }
+                        last_tick_elapsed = snap.elapsed_secs;
+                        last_deferred = snap.deferred_secs;
+                        last_contended = snap.contended_bytes;
+                    }
+                }
+                // persist the control state and trace journal beside the
+                // chain, and refresh the published /stats control view
+                if let Some(act) = &actuator {
+                    if let Err(e) = act.export_state().save(store.as_ref()) {
+                        log::warn!("control-state persist failed: {e:#}");
+                    }
+                }
+                if let Some(t) = &tracer {
+                    if let Err(e) = store.put(TRACE_OBJECT, t.to_chrome_jsonl().as_bytes()) {
+                        log::warn!("trace journal persist failed: {e:#}");
+                    }
+                }
+                refresh_obs(&obs, cfg, &eff, &actuator, &gate, &report);
             }
         }
 
@@ -558,15 +685,38 @@ pub fn train(
         }
         report.iter_times.push(wall0.elapsed().as_secs_f64());
 
-        // ---- 6. failure injection ---------------------------------------
-        if let Some(kind) =
-            injector.poll_telemetry(wall0.elapsed().as_secs_f64(), bus.as_deref())
-        {
+        // ---- 6. failure injection + heartbeat detection -----------------
+        let mut failure =
+            injector.poll_telemetry(wall0.elapsed().as_secs_f64(), bus.as_deref());
+        if failure.is_none() {
+            if let Some(d) = detector.as_ref().and_then(|d| d.take()) {
+                // a rank silent past the timeout: declare it dead and run
+                // the SAME consistent-cut recovery an injected hardware
+                // death takes — detection changes when we recover, never
+                // what we recover to
+                log::warn!(
+                    "heartbeat detector: rank {} silent past the timeout (last step {})",
+                    d.rank,
+                    d.step
+                );
+                report.detected_failures += 1;
+                if let Some(b) = &bus {
+                    b.record_failure(); // MTBF estimation sees real deaths
+                }
+                if let Some(t) = &tracer {
+                    t.instant("detect.dead", d.rank as u64, d.step, 0);
+                }
+                failure = Some(FailureKind::Hardware);
+            }
+        }
+        if let Some(kind) = failure {
             report.recoveries += 1;
             let t0 = Instant::now();
+            let sp = Tracer::maybe_span(&tracer, "recover.replay").map(|s| s.step(step));
             let (recovered, from_memory) = handle_failure(
                 kind, cfg, procs, &logical, &mem_tier, sig, &adam, &params0, &mut report,
             )?;
+            drop(sp);
             let lost = step.saturating_sub(recovered.step);
             report.lost_iters += lost;
             log::info!(
@@ -585,9 +735,14 @@ pub fn train(
             let _ = Manifest::truncate_after(logical.as_ref(), state.step);
             // restart the checkpointing process (new process after crash),
             // carrying the retuned effective config forward
-            procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &bus);
+            procs = spawn_procs(&eff, sig, layout, &state, &store, &mem_tier, &handles);
             anchor_chain(&mut procs, &state, &mut report);
             anchor_step = state.step;
+            if let Some(t) = &heartbeats {
+                // fresh rank threads, fresh liveness epoch: stale beats
+                // (and the just-fired detection) must not re-trigger
+                t.reset();
+            }
             report.recovery_secs += t0.elapsed().as_secs_f64();
         }
     }
@@ -638,7 +793,96 @@ pub fn train(
     report.final_full_every = eff.full_every;
     report.final_batch_size = eff.batch_size;
     report.final_compact_every = eff.compact_every;
+    report.final_io_budget = gate.as_ref().map(|g| g.rate()).unwrap_or(eff.io_budget);
+    // final persistence of the run's observability artifacts: the settled
+    // trace journal and the estimator state the next incarnation warm-
+    // starts from — both beside the chain, both GC-immune sidecars
+    if let Some(t) = &tracer {
+        let (recorded, dropped) = t.counts();
+        report.trace_events = recorded;
+        report.trace_dropped = dropped;
+        if let Err(e) = store.put(TRACE_OBJECT, t.to_chrome_jsonl().as_bytes()) {
+            log::warn!("trace journal persist failed: {e:#}");
+        }
+    }
+    if let Some(act) = &actuator {
+        if let Err(e) = act.export_state().save(store.as_ref()) {
+            log::warn!("control-state persist failed: {e:#}");
+        }
+    }
+    refresh_obs(&obs, cfg, &eff, &actuator, &gate, &report);
+    if let Some(s) = server.as_mut() {
+        s.shutdown();
+    }
     Ok(report)
+}
+
+/// Apply a retune — from the §V-C actuator OR a `POST /retune` request —
+/// to the effective config and the live checkpointing process, always
+/// through each runtime's safe-point mechanism (checkpointer queue order,
+/// committed cluster records, LowDiff+ persist boundaries).
+fn apply_retune(
+    r: Retune,
+    target: u64,
+    eff: &mut TrainConfig,
+    procs: &Procs,
+    report: &mut RunReport,
+) {
+    eff.full_every = r.full_every;
+    eff.batch_size = r.batch_size;
+    eff.compact_every = r.compact_every;
+    report.retunes += 1;
+    match procs {
+        Procs::LowDiff { ckpt } => {
+            // queue order makes this land after every enqueued diff,
+            // with the pending batch flushed first
+            ckpt.queue.put(
+                target,
+                Arc::new(CkptItem::Retune {
+                    batch_size: r.batch_size,
+                    compact_every: r.compact_every,
+                }),
+            );
+        }
+        Procs::Cluster { cluster } => {
+            // applied by the coordinator at the next committed record:
+            // all ranks switch at the same committed epoch
+            cluster.set_compact_every(r.compact_every);
+        }
+        Procs::Plus { plus } => {
+            // the persist boundary is LowDiff+'s safe point: the
+            // assembler reads the knob between applied steps
+            plus.set_persist_every(r.full_every);
+        }
+        _ => {}
+    }
+}
+
+/// Refresh the `/stats`–`/metrics` control view from the live loop state.
+fn refresh_obs(
+    obs: &Option<Arc<ObsState>>,
+    cfg: &TrainConfig,
+    eff: &TrainConfig,
+    actuator: &Option<Actuator>,
+    gate: &Option<Arc<IoGate>>,
+    report: &RunReport,
+) {
+    let Some(o) = obs else { return };
+    let (mtbf, bw) = actuator.as_ref().map(|a| a.estimates()).unwrap_or((0.0, 0.0));
+    o.set_control(ControlView {
+        strategy: cfg.strategy.name().into(),
+        adaptive: cfg.adaptive,
+        mtbf_estimate: mtbf,
+        bw_estimate: bw,
+        io_budget: gate.as_ref().map(|g| g.rate()).unwrap_or(eff.io_budget),
+        applied: Some(Retune {
+            full_every: eff.full_every,
+            batch_size: eff.batch_size,
+            compact_every: eff.compact_every,
+        }),
+        retunes: report.retunes,
+        detected_failures: report.detected_failures,
+    });
 }
 
 /// Seed the closed-loop actuator from the run configuration: the
@@ -706,6 +950,16 @@ fn anchor_chain(procs: &mut Procs, state: &ModelState, report: &mut RunReport) {
     }
 }
 
+/// Observability/control handles the driver shares with every spawned
+/// write path (and re-shares on every post-failure respawn).
+#[derive(Clone, Default)]
+struct ObsHandles {
+    bus: Option<Arc<TelemetryBus>>,
+    gate: Option<Arc<IoGate>>,
+    trace: Option<Arc<Tracer>>,
+    heartbeats: Option<Arc<HeartbeatTable>>,
+}
+
 /// The per-strategy background processes.
 enum Procs {
     NoneAtAll,
@@ -724,7 +978,7 @@ fn spawn_procs(
     state: &ModelState,
     store: &Arc<dyn StorageBackend>,
     mem_tier: &Arc<dyn StorageBackend>,
-    bus: &Option<Arc<TelemetryBus>>,
+    obs: &ObsHandles,
 ) -> Procs {
     let base = CkptConfig {
         model_sig: sig,
@@ -737,7 +991,9 @@ fn spawn_procs(
         writers: cfg.writers,
         compact_every: cfg.compact_every,
         io_budget: cfg.io_budget,
-        telemetry: bus.clone(),
+        telemetry: obs.bus.clone(),
+        gate: obs.gate.clone(),
+        trace: obs.trace.clone(),
     };
     match cfg.strategy {
         StrategyKind::None => Procs::NoneAtAll,
@@ -766,8 +1022,11 @@ fn spawn_procs(
                         queue_capacity: cfg.queue_capacity,
                         compact_every: cfg.compact_every,
                         io_budget: cfg.io_budget,
-                        telemetry: bus.clone(),
+                        telemetry: obs.bus.clone(),
                         generation,
+                        gate: obs.gate.clone(),
+                        trace: obs.trace.clone(),
+                        heartbeats: obs.heartbeats.clone(),
                     },
                 ),
             }
@@ -794,6 +1053,8 @@ fn spawn_procs(
                     compact_every: 0,
                     io_budget: 0.0,
                     telemetry: None,
+                    gate: None,
+                    trace: None,
                     ..base.clone()
                 },
             ),

@@ -88,6 +88,17 @@ pub struct RunReport {
     /// cluster runtime: background-scheduler wall seconds (compaction
     /// passes moved OFF the commit thread — `commit_secs` excludes them)
     pub compact_secs: f64,
+    /// failures declared by the heartbeat detector (silence past the
+    /// `--heartbeat-timeout`), as opposed to injected ones; each routes
+    /// through the same consistent-cut recovery path
+    pub detected_failures: u64,
+    /// event tracing (`--trace`): events recorded into the ring buffer
+    /// and events dropped because the buffer wrapped
+    pub trace_events: u64,
+    pub trace_dropped: u64,
+    /// the I/O-gate byte budget in force at run end (equals the configured
+    /// `--io-budget` unless interference autoscaling moved it)
+    pub final_io_budget: f64,
 }
 
 impl RunReport {
@@ -142,6 +153,78 @@ impl RunReport {
 
     pub fn final_loss(&self) -> Option<f32> {
         self.losses.last().map(|(_, l)| *l)
+    }
+
+    /// The full report as one JSON object (`--report-json`): every counter
+    /// machine-readable, losses as `[step, loss]` pairs, iteration times
+    /// summarized as mean/stddev/min/max seconds.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{f64_token, JsonArray, JsonObject};
+        let mut losses = JsonArray::new();
+        for (step, loss) in &self.losses {
+            losses.push_raw(&format!("[{},{}]", step, f64_token(f64::from(*loss))));
+        }
+        let mut iters = JsonObject::new();
+        iters
+            .u64("count", self.iter_times.count())
+            .f64("mean_secs", self.iter_times.mean())
+            .f64("stddev_secs", self.iter_times.stddev())
+            .f64("min_secs", self.iter_times.min())
+            .f64("max_secs", self.iter_times.max());
+        let mut o = JsonObject::new();
+        o.str("strategy", &self.strategy)
+            .str("model", &self.model)
+            .u64("workers", self.workers as u64)
+            .u64("ranks", self.ranks as u64)
+            .u64("iters", self.iters)
+            .f64("wall_secs", self.wall_secs)
+            .f64("compute_secs", self.compute_secs)
+            .f64("sync_secs", self.sync_secs)
+            .f64("stall_secs", self.stall_secs)
+            .f64("queue_blocked_secs", self.queue_blocked_secs)
+            .f64("overhead_ratio", self.overhead_ratio())
+            .f64("effective_ratio", self.effective_ratio())
+            .u64("full_ckpts", self.full_ckpts)
+            .u64("diff_ckpts", self.diff_ckpts)
+            .u64("writes", self.writes)
+            .u64("bytes_written", self.bytes_written)
+            .u64("peak_buffered_bytes", self.peak_buffered_bytes as u64)
+            .u64("shard_writes", self.shard_writes)
+            .u64("bytes_copied", self.bytes_copied)
+            .u64("pool_hits", self.pool_hits)
+            .u64("pool_misses", self.pool_misses)
+            .u64("merged_written", self.merged_written)
+            .u64("raw_compacted", self.raw_compacted)
+            .u64("spans_compacted", self.spans_compacted)
+            .u64("replay_objects", self.replay_objects as u64)
+            .u64("max_level", u64::from(self.max_level))
+            .u64("spill_bytes", self.spill_bytes)
+            .u64("inflight_peak", self.inflight_peak as u64)
+            .u64("global_commits", self.global_commits)
+            .u64("torn_commits", self.torn_commits)
+            .u64("gc_leaks", self.gc_leaks)
+            .u64("recoveries", self.recoveries)
+            .u64("detected_failures", self.detected_failures)
+            .f64("recovery_secs", self.recovery_secs)
+            .u64("lost_iters", self.lost_iters)
+            .u64("retunes", self.retunes)
+            .u64("final_full_every", self.final_full_every)
+            .u64("final_batch_size", self.final_batch_size as u64)
+            .u64("final_compact_every", self.final_compact_every as u64)
+            .f64("final_io_budget", self.final_io_budget)
+            .f64("compact_secs", self.compact_secs)
+            .u64("trace_events", self.trace_events)
+            .u64("trace_dropped", self.trace_dropped)
+            .raw("iter_times", &iters.finish())
+            .raw("losses", &losses.finish())
+            .raw(
+                "final_loss",
+                &self
+                    .final_loss()
+                    .map(|l| f64_token(f64::from(l)))
+                    .unwrap_or_else(|| "null".into()),
+            );
+        o.finish()
     }
 
     /// One-line table row used by examples and the bench harness.
@@ -216,6 +299,27 @@ mod tests {
         assert_eq!((r.pool_hits, r.pool_misses), (1, 2));
         assert_eq!(r.inflight_peak, 3);
         assert_eq!(r.ranks, 1, "default rank count");
+    }
+
+    #[test]
+    fn to_json_carries_counters_and_losses() {
+        let mut r = RunReport::new("lowdiff", "tiny", 2);
+        r.iters = 10;
+        r.detected_failures = 1;
+        r.trace_events = 7;
+        r.final_io_budget = 1.5e6;
+        r.losses.push((10, 1.5));
+        r.iter_times.push(0.25);
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"strategy\":\"lowdiff\""), "{j}");
+        assert!(j.contains("\"iters\":10"), "{j}");
+        assert!(j.contains("\"detected_failures\":1"), "{j}");
+        assert!(j.contains("\"trace_events\":7"), "{j}");
+        assert!(j.contains("\"final_io_budget\":1500000"), "{j}");
+        assert!(j.contains("\"losses\":[[10,1.5]]"), "{j}");
+        assert!(j.contains("\"final_loss\":1.5"), "{j}");
+        assert!(j.contains("\"mean_secs\":0.25"), "{j}");
     }
 
     #[test]

@@ -48,6 +48,15 @@ commands:
                           compaction scheduler's token-bucket gate; the
                           gate always yields to in-flight persists
            [--fsync]      fsync files AND parent dir on every put (durable)
+           [--serve ADDR] observability/control plane: HTTP server on ADDR
+                          (e.g. 127.0.0.1:9090) with GET /stats /metrics
+                          /trace /chain and POST /retune /compact
+           [--trace]      record per-stage spans to a chrome://tracing
+                          JSONL journal persisted beside the chain
+           [--heartbeat-timeout SECS]  declare a silent rank dead after
+                          SECS and recover via the consistent-cut path
+                          (cluster runs; 0 disables)
+           [--report-json] print the final RunReport as JSON
   recover  --model <name> --ckpt-dir DIR [--parallel]
            (reads sharded, single-object and compacted layouts transparently)
   exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|compaction|control|all>
@@ -64,7 +73,10 @@ fn main() {
 }
 
 fn run(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["zstd", "parallel", "verbose", "fsync", "adaptive"])?;
+    let args = Args::parse(
+        raw,
+        &["zstd", "parallel", "verbose", "fsync", "adaptive", "trace", "report-json"],
+    )?;
     match args.subcommand(USAGE)? {
         "train" => cmd_train(&args),
         "recover" => cmd_recover(&args),
@@ -102,6 +114,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         compact_every: args.parse_or("compact-every", 0usize)?,
         adaptive: args.flag("adaptive"),
         io_budget: args.parse_or("io-budget", 0.0f64)?,
+        serve: args.get("serve").map(|s| s.to_string()),
+        trace: args.flag("trace"),
+        heartbeat_timeout: args.parse_or("heartbeat-timeout", 0.0f64)?,
         ..TrainConfig::default()
     };
     if cfg.ranks > 1 && !cfg.uses_cluster() {
@@ -141,9 +156,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let store: Arc<dyn StorageBackend> =
         Arc::new(LocalDir::new(&ckpt_dir)?.with_fsync(args.flag("fsync")));
     let report = train(&mrt, store, &cfg)?;
-    println!("{}", report.row());
-    for (step, loss) in &report.losses {
-        println!("  step {step:>6}  loss {loss:.4}");
+    if args.flag("report-json") {
+        println!("{}", report.to_json());
+    } else {
+        println!("{}", report.row());
+        for (step, loss) in &report.losses {
+            println!("  step {step:>6}  loss {loss:.4}");
+        }
     }
     Ok(())
 }

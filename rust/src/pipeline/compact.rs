@@ -56,6 +56,7 @@ use crate::checkpoint::merged::write_merged_level;
 use crate::checkpoint::read_chain_object;
 use crate::control::iosched::{GatedStore, IoGate};
 use crate::control::telemetry::TelemetryBus;
+use crate::control::trace::Tracer;
 use crate::storage::StorageBackend;
 
 /// Default hierarchy cap: with `merge_factor ≥ 2`, 16 levels cover 2^16
@@ -309,7 +310,9 @@ fn flush_level_run(
 /// rewrites it). `keep_going` is polled before every level ≥ 1 pass so
 /// foreground work — the cluster scheduler's level-0 job queue — is
 /// never starved by deep hierarchies; the ladder resumes from whatever
-/// the cover holds on the next pass.
+/// the cover holds on the next pass. When a [`Tracer`] is attached every
+/// per-level pass that moved bytes becomes one `compact.level` span
+/// (`extra` = output level, `bytes` = compaction I/O moved).
 #[allow(clippy::too_many_arguments)]
 pub fn compact_hierarchy(
     store: &dyn StorageBackend,
@@ -319,12 +322,16 @@ pub fn compact_hierarchy(
     stats: &mut CompactStats,
     discover: &dyn Fn(&dyn StorageBackend) -> Result<Chain>,
     keep_going: &mut dyn FnMut() -> bool,
+    trace: Option<&Tracer>,
 ) -> Result<usize> {
     if cfg.merge_factor < 2 {
         return Ok(0);
     }
     let chain = discover(store)?;
+    let t0 = std::time::Instant::now();
+    let io0 = stats.bytes_read + stats.bytes_written;
     let mut written = compact_chain(store, &chain, cfg, protect, merge_tail, stats)?;
+    trace_level(trace, t0, io0, stats, 1);
     let mut level: u16 = 1;
     while (level as usize) < cfg.max_level && keep_going() {
         let chain = discover(store)?;
@@ -333,10 +340,30 @@ pub fn compact_hierarchy(
         if level > deepest {
             break;
         }
+        let t0 = std::time::Instant::now();
+        let io0 = stats.bytes_read + stats.bytes_written;
         written += compact_level(store, &chain, cfg, level, stats)?;
+        trace_level(trace, t0, io0, stats, u64::from(level) + 1);
         level += 1;
     }
     Ok(written)
+}
+
+/// Record one `compact.level` span if a tracer is attached and the pass
+/// actually moved bytes (idle polls stay out of the journal).
+fn trace_level(
+    trace: Option<&Tracer>,
+    t0: std::time::Instant,
+    io_before: u64,
+    stats: &CompactStats,
+    out_level: u64,
+) {
+    let moved = (stats.bytes_read + stats.bytes_written).saturating_sub(io_before);
+    if let Some(t) = trace {
+        if moved > 0 {
+            t.complete("compact.level", t0.elapsed().as_secs_f64(), 0, 0, moved, out_level);
+        }
+    }
 }
 
 /// The background compaction thread the flat checkpointer runs: it wakes
@@ -374,6 +401,18 @@ impl Compactor {
         gate: Option<Arc<IoGate>>,
         bus: Option<Arc<TelemetryBus>>,
     ) -> Compactor {
+        Compactor::spawn_obs(store, cfg, gate, bus, None)
+    }
+
+    /// Spawn with the full observability plane: control hooks plus an
+    /// event tracer that records a `compact.level` span per level pass.
+    pub fn spawn_obs(
+        store: Arc<dyn StorageBackend>,
+        cfg: CompactorConfig,
+        gate: Option<Arc<IoGate>>,
+        bus: Option<Arc<TelemetryBus>>,
+        trace: Option<Arc<Tracer>>,
+    ) -> Compactor {
         let store: Arc<dyn StorageBackend> = match gate {
             Some(g) => Arc::new(GatedStore::new(store, g)),
             None => store,
@@ -385,7 +424,7 @@ impl Compactor {
         let lv = Arc::clone(&live);
         let handle = std::thread::Builder::new()
             .name("ckpt-compact".into())
-            .spawn(move || run_loop(store, cfg, rx, mf, lv, bus))
+            .spawn(move || run_loop(store, cfg, rx, mf, lv, bus, trace))
             .expect("spawning compactor");
         Compactor { tx: Some(tx), handle: Some(handle), merge_factor, live }
     }
@@ -439,6 +478,7 @@ fn run_loop(
     merge_factor: Arc<AtomicUsize>,
     live: Arc<Mutex<CompactStats>>,
     bus: Option<Arc<TelemetryBus>>,
+    trace: Option<Arc<Tracer>>,
 ) -> CompactStats {
     let mut stats = CompactStats::default();
     let protect = HashSet::new();
@@ -459,7 +499,7 @@ fn run_loop(
                     // a pass merge into the in-flight window
                     let settle = if cfg.settle_tail > 0 { cfg.settle_tail.max(mf) } else { 0 };
                     let c = CompactorConfig { merge_factor: mf, settle_tail: settle, ..cfg };
-                    pass(store.as_ref(), &c, &protect, false, &mut stats, &live, &bus);
+                    pass(store.as_ref(), &c, &protect, false, &mut stats, &live, &bus, &trace);
                 }
             }
             Err(_) => {
@@ -470,7 +510,7 @@ fn run_loop(
                 let mf = merge_factor.load(Ordering::SeqCst);
                 if mf >= 2 {
                     let settled = CompactorConfig { settle_tail: 0, merge_factor: mf, ..cfg };
-                    pass(store.as_ref(), &settled, &protect, true, &mut stats, &live, &bus);
+                    pass(store.as_ref(), &settled, &protect, true, &mut stats, &live, &bus, &trace);
                 }
                 return stats;
             }
@@ -487,13 +527,19 @@ fn pass(
     stats: &mut CompactStats,
     live: &Mutex<CompactStats>,
     bus: &Option<Arc<TelemetryBus>>,
+    trace: &Option<Arc<Tracer>>,
 ) {
     let before = stats.clone();
-    if let Err(e) =
-        compact_hierarchy(store, cfg, protect, merge_tail, stats, &Manifest::latest_chain, &mut || {
-            true
-        })
-    {
+    if let Err(e) = compact_hierarchy(
+        store,
+        cfg,
+        protect,
+        merge_tail,
+        stats,
+        &Manifest::latest_chain,
+        &mut || true,
+        trace.as_deref(),
+    ) {
         log::warn!("compaction pass failed: {e:#}");
     }
     *live.lock().unwrap() = stats.clone();
@@ -703,6 +749,7 @@ mod tests {
             &mut stats,
             &Manifest::latest_chain,
             &mut || true,
+            None,
         )
         .unwrap();
         // 64 raws -> 16 level-1 -> 4 level-2 -> 1 level-3 super-span
@@ -738,6 +785,7 @@ mod tests {
             &mut stats,
             &Manifest::latest_chain,
             &mut || true,
+            None,
         )
         .unwrap();
         let chain = Manifest::latest_chain(&store).unwrap();
@@ -767,6 +815,7 @@ mod tests {
             &mut stats,
             &Manifest::latest_chain,
             &mut || true,
+            None,
         )
         .unwrap();
         assert_eq!(stats.max_level, 1, "max_level = 1 pins the historical behavior");
@@ -784,6 +833,7 @@ mod tests {
             &mut stats2,
             &Manifest::latest_chain,
             &mut || false,
+            None,
         )
         .unwrap();
         assert_eq!(stats2.max_level, 1);
@@ -797,6 +847,7 @@ mod tests {
             &mut stats2,
             &Manifest::latest_chain,
             &mut || true,
+            None,
         )
         .unwrap();
         assert_eq!(stats2.max_level, 2);

@@ -16,6 +16,7 @@ use std::time::Instant;
 
 use crate::control::iosched::{IoGate, PersistGuard};
 use crate::control::telemetry::TelemetryBus;
+use crate::control::trace::Tracer;
 use crate::pipeline::encode::Encoded;
 use crate::pipeline::CkptStats;
 use crate::storage::{Sharded, StorageBackend, WriteHandle};
@@ -45,6 +46,7 @@ pub struct Sink {
     mode: Mode,
     gate: Option<Arc<IoGate>>,
     bus: Option<Arc<TelemetryBus>>,
+    trace: Option<Arc<Tracer>>,
 }
 
 impl Sink {
@@ -58,7 +60,7 @@ impl Sink {
         } else {
             Mode::Direct(store)
         };
-        Sink { mode, gate: None, bus: None }
+        Sink { mode, gate: None, bus: None, trace: None }
     }
 
     /// Attach the control plane: persists mark the gate while in flight,
@@ -70,6 +72,13 @@ impl Sink {
     ) -> Sink {
         self.gate = gate;
         self.bus = bus;
+        self
+    }
+
+    /// Attach the event tracer: submits and completions become
+    /// `persist.submit` / `persist.complete` spans.
+    pub fn with_trace(mut self, trace: Option<Arc<Tracer>>) -> Sink {
+        self.trace = trace;
         self
     }
 
@@ -87,10 +96,15 @@ impl Sink {
     /// mode shares it with the writer pool zero-copy — it recycles when
     /// the commit finalizer releases the last reference.
     pub fn submit(&mut self, obj: Encoded, stats: &Mutex<CkptStats>) {
+        let mut sp = Tracer::maybe_span(&self.trace, "persist.submit");
+        if let Some(s) = sp.as_mut() {
+            s.set_bytes(obj.buf.len() as u64);
+        }
         let Encoded { name, buf, copied } = obj;
         stats.lock().unwrap().bytes_copied += copied;
         let guard = self.gate.as_ref().map(|g| g.persist_guard());
         let bus = self.bus.clone();
+        let trace = self.trace.clone();
         match &mut self.mode {
             Mode::Direct(store) => {
                 let t0 = Instant::now();
@@ -127,7 +141,7 @@ impl Sink {
                     let mut s = stats.lock().unwrap();
                     s.inflight_peak = s.inflight_peak.max(inflight.len());
                 }
-                Self::reap(inflight, stats, &bus);
+                Self::reap(inflight, stats, &bus, &trace);
                 // backpressure: don't let encoded-but-unwritten checkpoints
                 // pile up without bound when the device is slower than the
                 // producer — block on the oldest write past the cap
@@ -141,7 +155,7 @@ impl Sink {
                     // bandwidth estimator (the device-bound regime, which
                     // is when tuning on W matters)
                     let span = w.started.elapsed().as_secs_f64();
-                    Self::account_timed(&w.name, w.bytes, span, res, stats, &bus);
+                    Self::account_timed(&w.name, w.bytes, span, res, stats, &bus, &trace);
                 }
             }
         }
@@ -180,6 +194,9 @@ impl Sink {
                     // blocking persist: the observed wall time IS device time
                     bus.record_write(len, secs);
                 }
+                if let Some(t) = &self.trace {
+                    t.complete("persist.complete", secs, 0, 0, len, 0);
+                }
                 Ok((len, crc))
             }
             Err(e) => {
@@ -195,11 +212,12 @@ impl Sink {
         inflight: &mut Vec<Inflight>,
         stats: &Mutex<CkptStats>,
         bus: &Option<Arc<TelemetryBus>>,
+        trace: &Option<Arc<Tracer>>,
     ) {
         inflight.retain(|w| match w.handle.try_result() {
             None => true,
             Some(res) => {
-                Self::account(&w.name, w.bytes, res, stats, bus);
+                Self::account(&w.name, w.bytes, res, stats, bus, trace);
                 false
             }
         });
@@ -209,12 +227,13 @@ impl Sink {
     /// barrier). No-op in direct mode.
     pub fn barrier(&mut self, stats: &Mutex<CkptStats>) {
         let bus = self.bus.clone();
+        let trace = self.trace.clone();
         if let Mode::Engine { inflight, .. } = &mut self.mode {
             let t0 = Instant::now();
             for w in inflight.drain(..) {
                 let res = w.handle.wait();
                 let span = w.started.elapsed().as_secs_f64();
-                Self::account_timed(&w.name, w.bytes, span, res, stats, &bus);
+                Self::account_timed(&w.name, w.bytes, span, res, stats, &bus, &trace);
             }
             stats.lock().unwrap().write_secs += t0.elapsed().as_secs_f64();
         }
@@ -226,12 +245,14 @@ impl Sink {
         res: Result<(), String>,
         stats: &Mutex<CkptStats>,
         bus: &Option<Arc<TelemetryBus>>,
+        trace: &Option<Arc<Tracer>>,
     ) {
         // lazy reap: the write finished some unknown time ago, so no
         // occupancy sample — bytes only (the estimator skips the window)
-        Self::account_timed(name, bytes, 0.0, res, stats, bus);
+        Self::account_timed(name, bytes, 0.0, res, stats, bus, trace);
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn account_timed(
         name: &str,
         bytes: u64,
@@ -239,6 +260,7 @@ impl Sink {
         res: Result<(), String>,
         stats: &Mutex<CkptStats>,
         bus: &Option<Arc<TelemetryBus>>,
+        trace: &Option<Arc<Tracer>>,
     ) {
         let mut s = stats.lock().unwrap();
         match res {
@@ -247,6 +269,9 @@ impl Sink {
                 s.bytes_written += bytes;
                 if let Some(bus) = bus {
                     bus.record_write(bytes, device_secs);
+                }
+                if let Some(t) = trace {
+                    t.complete("persist.complete", device_secs, 0, 0, bytes, 0);
                 }
             }
             Err(e) => {

@@ -1,0 +1,174 @@
+//! Minimal hand-rolled JSON emission (serde is unavailable offline).
+//!
+//! The observability plane (`control/http.rs`), the trace journal
+//! (`control/trace.rs`) and `RunReport::to_json` all emit JSON; this
+//! module owns the escaping and number-token rules so every producer
+//! agrees: strings are escaped per RFC 8259, non-finite floats become
+//! `null` (JSON has no NaN/Inf), and everything else is written with
+//! Rust's round-tripping `Display`.
+
+/// Escape `s` into `out` as a JSON string *body* (no surrounding quotes).
+pub fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// A quoted, escaped JSON string token.
+pub fn string_token(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    escape_into(&mut out, s);
+    out.push('"');
+    out
+}
+
+/// An `f64` as a JSON value token; non-finite values become `null`.
+pub fn f64_token(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Incremental JSON object writer.
+#[derive(Debug, Default)]
+pub struct JsonObject {
+    buf: String,
+    first: bool,
+}
+
+impl JsonObject {
+    pub fn new() -> JsonObject {
+        JsonObject { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('"');
+        escape_into(&mut self.buf, k);
+        self.buf.push_str("\":");
+    }
+
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('"');
+        escape_into(&mut self.buf, v);
+        self.buf.push('"');
+        self
+    }
+
+    pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn f64(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&f64_token(v));
+        self
+    }
+
+    pub fn bool(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// A pre-rendered JSON value (object, array, `null`, ...).
+    pub fn raw(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Incremental JSON array writer.
+#[derive(Debug, Default)]
+pub struct JsonArray {
+    buf: String,
+    first: bool,
+}
+
+impl JsonArray {
+    pub fn new() -> JsonArray {
+        JsonArray { buf: String::from("["), first: true }
+    }
+
+    /// Append a pre-rendered JSON value.
+    pub fn push_raw(&mut self, v: &str) -> &mut Self {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push(']');
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_control_and_quote_chars() {
+        assert_eq!(string_token("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(string_token("\u{1}"), "\"\\u0001\"");
+        assert_eq!(string_token("plain"), "\"plain\"");
+    }
+
+    #[test]
+    fn non_finite_floats_become_null() {
+        assert_eq!(f64_token(1.5), "1.5");
+        assert_eq!(f64_token(f64::NAN), "null");
+        assert_eq!(f64_token(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn object_and_array_compose() {
+        let mut inner = JsonObject::new();
+        inner.u64("n", 3).bool("ok", true);
+        let mut arr = JsonArray::new();
+        arr.push_raw("1").push_raw("\"two\"");
+        let mut o = JsonObject::new();
+        o.str("name", "x\"y").f64("secs", 0.5).raw("inner", &inner.finish()).raw(
+            "list",
+            &arr.finish(),
+        );
+        assert_eq!(
+            o.finish(),
+            "{\"name\":\"x\\\"y\",\"secs\":0.5,\"inner\":{\"n\":3,\"ok\":true},\"list\":[1,\"two\"]}"
+        );
+    }
+
+    #[test]
+    fn empty_object_and_array() {
+        assert_eq!(JsonObject::new().finish(), "{}");
+        assert_eq!(JsonArray::new().finish(), "[]");
+    }
+}

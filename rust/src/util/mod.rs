@@ -3,6 +3,7 @@
 
 pub mod bufpool;
 pub mod cli;
+pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;

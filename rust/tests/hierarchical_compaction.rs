@@ -77,6 +77,7 @@ fn settled_pass(
         stats,
         &Manifest::latest_chain,
         &mut || true,
+        None,
     )
 }
 
@@ -218,6 +219,7 @@ fn foreign_names_never_enter_the_flat_cover() {
         &mut stats,
         &Manifest::latest_chain,
         &mut || true,
+        None,
     )
     .unwrap();
 
@@ -270,6 +272,7 @@ fn randomized_interrupted_hierarchies_replay_bit_identically() {
                     levels_left -= 1;
                     levels_left >= 0
                 },
+                None,
             )
             .unwrap();
             let (got, rstats) = recover_state(&store, sig);

@@ -1,0 +1,323 @@
+//! Observability-plane integration suite (artifact-free: drives the
+//! cluster runtime, heartbeat detector and HTTP plane directly, no
+//! PJRT).
+//!
+//! Pins the tentpole guarantees of PR 8 (docs/OBSERVABILITY.md):
+//! 1. a heartbeat-**detected** rank death recovers bit-identically to an
+//!    **injected** one — the detector only observes the same silence the
+//!    consistent-cut recovery path acts on, so both land on the same
+//!    committed state;
+//! 2. flaky-but-alive heartbeats never produce a false positive —
+//!    staleness is activity-relative with a tunable threshold;
+//! 3. the `/stats`, `/metrics`, `/trace` and `/chain` endpoints stay
+//!    live during a cluster run and expose internally consistent
+//!    counters once the run quiesces;
+//! 4. the trace journal and control-state sidecars persist beside the
+//!    chain without confusing any chain reader.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lowdiff::checkpoint::format::model_signature;
+use lowdiff::cluster::{
+    partition_even, recover_cluster, Cluster, ClusterConfig, Detector, HeartbeatTable,
+};
+use lowdiff::compress::topk_mask;
+use lowdiff::control::{
+    ControlState, ControlView, ObsServer, ObsState, Retune, TelemetryBus, Tracer, TRACE_OBJECT,
+};
+use lowdiff::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
+use lowdiff::coordinator::recovery::{recover, RecoveryMode};
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{MemStore, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+fn grad(rng: &mut Rng, n: usize) -> Flat {
+    let mut g = vec![0f32; n];
+    rng.fill_normal_f32(&mut g);
+    topk_mask(&Flat(g), n / 8 + 1)
+}
+
+fn http_get(addr: SocketAddr, target: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!("GET {target} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    s.write_all(req.as_bytes()).expect("send");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read");
+    let (head, body) = buf.split_once("\r\n\r\n").expect("http response");
+    (head.to_string(), body.to_string())
+}
+
+/// First integer value of `"key":` in a flat JSON body (hand-rolled like
+/// the serializer it checks).
+fn json_u64(body: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat).unwrap_or_else(|| panic!("missing {key} in {body}"));
+    body[at + pat.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("non-integer value for {key} in {body}"))
+}
+
+/// Value of an unlabelled Prometheus sample line `name value`.
+fn prom_u64(body: &str, name: &str) -> u64 {
+    body.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|r| r.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("missing sample {name} in {body}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("non-integer sample for {name}"))
+}
+
+#[test]
+fn heartbeat_detected_death_recovers_bit_identically_to_injection() {
+    // The equivalence the detection tentpole must pin: silencing a
+    // rank's heart (a hung process) tears exactly the epochs an injected
+    // death would, the detector declares the rank dead, and the
+    // consistent-cut recovery lands on a state bit-identical to the one
+    // an explicitly injected death at the same point produces.
+    let n = 96;
+    let sig = model_signature("obs-detect", n);
+    let adam = Adam::default();
+
+    // one oracle gradient stream shared by both runs; only the first 6
+    // steps commit — the long tail exists so the live rank keeps beating
+    // (and tearing epochs) until the detector fires
+    let grads: Vec<Flat> = {
+        let mut rng = Rng::new(77);
+        (0..60).map(|_| grad(&mut rng, n)).collect()
+    };
+    let mut state = ModelState::new(Flat(vec![0.5; n]));
+    let mut timeline = vec![state.clone()];
+    for g in &grads {
+        adam.apply_sparse(&mut state, &SparseGrad::from_dense(g));
+        timeline.push(state.clone());
+    }
+
+    // run A: heartbeat DETECTION. Rank 1's heart stops after step 6;
+    // training continues obliviously, so epochs 7.. tear while rank 0
+    // keeps beating — and the detector must notice the silence.
+    let store_a: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let table = Arc::new(HeartbeatTable::new(2));
+    let cfg = ClusterConfig {
+        model_sig: sig,
+        gc: false,
+        heartbeats: Some(Arc::clone(&table)),
+        ..ClusterConfig::default()
+    };
+    let cluster = Cluster::spawn(Arc::clone(&store_a), partition_even(n, 2), cfg);
+    cluster.put_full(0, &timeline[0]);
+    for step in 1..=6u64 {
+        cluster.put_diff_dense(step, &grads[step as usize - 1]);
+    }
+    cluster.wait_epochs(7); // anchor + 6 diffs globally committed
+    table.silence(1, true); // stop the heart: beats AND acks cease
+    let det = Detector::spawn(
+        Arc::clone(&table),
+        Duration::from_millis(40),
+        Duration::from_millis(5),
+    );
+    let mut detection = None;
+    let t0 = Instant::now();
+    let mut step = 6u64;
+    while detection.is_none() && t0.elapsed() < Duration::from_secs(10) {
+        if step < 60 {
+            step += 1;
+            cluster.put_diff_dense(step, &grads[step as usize - 1]);
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        detection = det.take();
+    }
+    let d = detection.expect("the silent rank must be declared dead");
+    assert_eq!(d.rank, 1, "only the silenced rank is dead");
+    let stats = cluster.finish();
+    assert!(stats.torn_commits > 0, "epochs past the silence must tear");
+    let (got_a, cut_a) = recover_cluster(&store_a, sig, &adam).unwrap();
+    assert_eq!(cut_a.cut_step, 6, "consistent cut = last fully-acked epoch");
+
+    // run B: INJECTED death at the same point — the run simply stops
+    // after step 6, which is what the driver's injector leaves behind
+    // before rewiring the cluster.
+    let store_b: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let cfg = ClusterConfig { model_sig: sig, gc: false, ..ClusterConfig::default() };
+    let cluster = Cluster::spawn(Arc::clone(&store_b), partition_even(n, 2), cfg);
+    cluster.put_full(0, &timeline[0]);
+    for step in 1..=6u64 {
+        cluster.put_diff_dense(step, &grads[step as usize - 1]);
+    }
+    cluster.finish();
+    let (got_b, cut_b) = recover_cluster(&store_b, sig, &adam).unwrap();
+    assert_eq!(cut_b.cut_step, 6);
+
+    assert_eq!(got_a, got_b, "detected and injected deaths must recover bit-identically");
+    assert_eq!(got_a, timeline[6], "... and exactly to the oracle state at the cut");
+}
+
+#[test]
+fn flaky_heartbeats_do_not_false_positive() {
+    // a rank whose beats jitter wildly — but always inside the silence
+    // threshold — must NEVER be declared dead, no matter how steadily
+    // its peer beats
+    let table = Arc::new(HeartbeatTable::new(2));
+    let det = Detector::spawn(
+        Arc::clone(&table),
+        Duration::from_millis(250),
+        Duration::from_millis(2),
+    );
+    let jitter_ms = [5u64, 40, 10, 35, 20, 30];
+    let t0 = Instant::now();
+    let mut step = 0u64;
+    let mut flaky_beats = 0usize;
+    let mut next_flaky = Duration::from_millis(0);
+    while t0.elapsed() < Duration::from_millis(700) {
+        step += 1;
+        table.beat(0, step, step); // metronome peer
+        if t0.elapsed() >= next_flaky {
+            table.beat(1, step, step);
+            next_flaky =
+                t0.elapsed() + Duration::from_millis(jitter_ms[flaky_beats % jitter_ms.len()]);
+            flaky_beats += 1;
+        }
+        assert!(det.take().is_none(), "flaky-but-alive rank declared dead");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(flaky_beats > 5, "the flaky rank must actually have beaten irregularly");
+    assert!(det.take().is_none(), "zero false positives end to end");
+}
+
+#[test]
+fn http_plane_serves_consistent_views_of_a_live_cluster_run() {
+    // the full observability surface attached to a real cluster run:
+    // endpoints answer while commits are in flight, and once the run
+    // quiesces /stats, /metrics, /trace and /chain agree with each other
+    // and with the runtime's own stats
+    let n = 96;
+    let sig = model_signature("obs-http", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let bus = Arc::new(TelemetryBus::new());
+    let tracer = Arc::new(Tracer::default());
+    let table = Arc::new(HeartbeatTable::new(2));
+    let obs = Arc::new(ObsState::new(
+        Arc::clone(&bus),
+        Some(Arc::clone(&tracer)),
+        Some(Arc::clone(&table)),
+        Some(Arc::clone(&store)),
+    ));
+    obs.set_control(ControlView {
+        strategy: "lowdiff".into(),
+        adaptive: true,
+        applied: Some(Retune { full_every: 0, batch_size: 1, compact_every: 3 }),
+        ..ControlView::default()
+    });
+    let mut srv = ObsServer::serve(Arc::clone(&obs), "127.0.0.1:0").unwrap();
+    let addr = srv.local_addr();
+
+    let cfg = ClusterConfig {
+        model_sig: sig,
+        gc: false,
+        compact_every: 3,
+        telemetry: Some(Arc::clone(&bus)),
+        trace: Some(Arc::clone(&tracer)),
+        heartbeats: Some(Arc::clone(&table)),
+        ..ClusterConfig::default()
+    };
+    let cluster = Cluster::spawn(Arc::clone(&store), partition_even(n, 2), cfg);
+    let adam = Adam::default();
+    let mut rng = Rng::new(31);
+    let mut model = ModelState::new(Flat(vec![0.5; n]));
+    let mut timeline = vec![model.clone()];
+    cluster.put_full(0, &model);
+    for step in 1..=9u64 {
+        let g = grad(&mut rng, n);
+        cluster.put_diff_dense(step, &g);
+        adam.apply_sparse(&mut model, &SparseGrad::from_dense(&g));
+        timeline.push(model.clone());
+    }
+    // liveness mid-run: the plane answers while epochs are resolving
+    let (head, _) = http_get(addr, "/stats");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    let stats = cluster.finish();
+    assert_eq!(stats.torn_commits, 0);
+
+    // quiescent consistency: the two read endpoints and the runtime's
+    // own counters must agree exactly
+    let (_, stats_body) = http_get(addr, "/stats");
+    let (_, metrics_body) = http_get(addr, "/metrics");
+    let bytes = json_u64(&stats_body, "bytes_written");
+    assert!(bytes > 0, "persists must feed the bus: {stats_body}");
+    assert_eq!(bytes, prom_u64(&metrics_body, "lowdiff_bytes_written_total"));
+    let merged = json_u64(&stats_body, "merged_written");
+    assert_eq!(merged, stats.merged_written, "bus and runtime agree on merges");
+    assert_eq!(merged, prom_u64(&metrics_body, "lowdiff_merged_written_total"));
+    assert!(merged > 0, "mf=3 over 9 diffs must merge");
+    // both ranks beat through the same table the plane reads
+    assert!(stats_body.contains("\"heartbeats\":["), "{stats_body}");
+    assert!(metrics_body.contains("lowdiff_heartbeat_beats_total{rank=\"0\"}"));
+    assert!(metrics_body.contains("lowdiff_heartbeat_beats_total{rank=\"1\"}"));
+    // the trace ring saw both commit phases of the very run we just drove
+    let (_, trace_body) = http_get(addr, "/trace?n=4096");
+    assert!(trace_body.contains("\"name\":\"commit.phase2\""), "{trace_body}");
+    assert!(trace_body.contains("\"name\":\"commit.ack\""));
+    let (recorded, _) = tracer.counts();
+    assert!(recorded > 0);
+    assert_eq!(recorded, json_u64(&stats_body, "recorded"));
+    // the chain view reflects the committed cluster timeline
+    let (_, chain_body) = http_get(addr, "/chain");
+    assert_eq!(json_u64(&chain_body, "committed_step"), 9);
+    assert!(chain_body.contains("\"rank\":0") && chain_body.contains("\"rank\":1"));
+
+    srv.shutdown();
+    // and the chain the plane observed recovers exactly
+    let (got, cut) = recover_cluster(&store, sig, &adam).unwrap();
+    assert_eq!(cut.cut_step, 9);
+    assert_eq!(got, timeline[9], "observability must never perturb recovery");
+}
+
+#[test]
+fn sidecars_persist_beside_the_chain_and_recovery_ignores_them() {
+    // the trace journal and control-state sidecars land in the same
+    // store as the chain; every chain reader must skip them
+    let n = 80;
+    let sig = model_signature("obs-sidecar", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let ck = Checkpointer::spawn(
+        Arc::clone(&store),
+        CkptConfig { model_sig: sig, gc: false, ..CkptConfig::default() },
+    );
+    let adam = Adam::default();
+    let mut rng = Rng::new(5);
+    let mut want = ModelState::new(Flat(vec![0.25; n]));
+    ck.queue.put(0, Arc::new(CkptItem::Full(want.clone())));
+    for step in 1..=4u64 {
+        let g = grad(&mut rng, n);
+        adam.apply_sparse(&mut want, &SparseGrad::from_dense(&g));
+        ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+    }
+    ck.finish();
+
+    let tracer = Tracer::default();
+    tracer.complete("persist.submit", 0.002, 0, 3, 256, 0);
+    tracer.instant("detect.dead", 1, 3, 0);
+    store.put(TRACE_OBJECT, tracer.to_chrome_jsonl().as_bytes()).unwrap();
+    let st = ControlState {
+        mtbf_acc_secs: 1800.0,
+        mtbf_acc_failures: 2.0,
+        bw_est: 2e9,
+        applied: Retune { full_every: 32, batch_size: 2, compact_every: 4 },
+        retunes: 5,
+    };
+    st.save(store.as_ref()).unwrap();
+    assert_eq!(ControlState::load(store.as_ref()), Some(st), "control state round-trips");
+    let journal = String::from_utf8(store.get(TRACE_OBJECT).unwrap()).unwrap();
+    assert!(journal.lines().count() >= 2, "one JSONL line per event: {journal}");
+    assert!(journal.contains("\"name\":\"persist.submit\""));
+
+    let (got, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(got, want, "recovery is oblivious to the sidecars");
+}
