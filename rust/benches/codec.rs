@@ -1,0 +1,181 @@
+//! Codec bench: bytes-on-wire and encode throughput for every payload
+//! codec over the two workloads the adaptive policy arbitrates between —
+//! top-k sparse gradient diffs (Raw / Zstd / Quant8) and periodic fulls
+//! (plain Zstd vs XOR delta-vs-previous). The same achieved-ratio signal
+//! drives the §V-C bandit's codec arm at runtime.
+//!
+//! Run: `cargo bench --bench codec`; baseline in `BENCH_codec.json`.
+//! Acceptance (asserted below): Quant8 puts >= 2x fewer bytes on the wire
+//! than Zstd on top-k values, and delta fulls undercut plain Zstd fulls on
+//! slowly-drifting state — both with exact index streams and bounded,
+//! non-compounding value error (see rust/tests/codec_roundtrip.rs).
+
+use std::time::Instant;
+
+use lowdiff::checkpoint::diff::{read_diff, write_diff_into_level, DiffPayload};
+use lowdiff::checkpoint::format::{model_signature, PayloadCodec, DEFAULT_ZSTD_LEVEL};
+use lowdiff::checkpoint::full::{full_raw_payload, write_full_delta_into, write_full_into_level};
+use lowdiff::compress::topk_mask;
+use lowdiff::optim::ModelState;
+use lowdiff::sparse::SparseGrad;
+use lowdiff::tensor::Flat;
+use lowdiff::util::rng::Rng;
+
+const N: usize = 256 * 1024; // params
+const RHO: f64 = 0.01; // top-k density
+const DIFF_STEPS: u64 = 16;
+const FULLS: usize = 8;
+const DRIFT: usize = N / 200; // params nudged between consecutive fulls
+
+fn diff_workload() -> (Vec<(u64, DiffPayload)>, u64) {
+    let mut rng = Rng::new(42);
+    let k = (N as f64 * RHO) as usize;
+    let mut grads = Vec::new();
+    let mut raw_bytes = 0u64;
+    for step in 1..=DIFF_STEPS {
+        let mut g = vec![0f32; N];
+        rng.fill_normal_f32(&mut g);
+        let s = SparseGrad::from_dense(&topk_mask(&Flat(g), k));
+        raw_bytes += s.encoded_size() as u64;
+        grads.push((step, DiffPayload::Gradient(s)));
+    }
+    (grads, raw_bytes)
+}
+
+/// (wire_bytes, encode_ns_per_nnz) for one codec over the diff workload.
+fn run_diff_codec(
+    codec: PayloadCodec,
+    grads: &[(u64, DiffPayload)],
+    sig: u64,
+) -> (u64, f64) {
+    let mut out = Vec::new();
+    let mut wire = 0u64;
+    let mut nnz = 0u64;
+    let t0 = Instant::now();
+    for (step, p) in grads {
+        out.clear();
+        wire +=
+            write_diff_into_level(p, sig, *step, codec, DEFAULT_ZSTD_LEVEL, &mut out).unwrap()
+                as u64;
+        nnz += p.sparse().nnz() as u64;
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / nnz as f64;
+    // decode sanity: the wire stays readable (indices exact for every codec)
+    let (step, back) = read_diff(&out, sig).unwrap();
+    let (last_step, last) = grads.last().unwrap();
+    assert_eq!(step, *last_step);
+    assert_eq!(back.sparse().indices, last.sparse().indices, "{}", codec.name());
+    (wire, ns)
+}
+
+/// Slowly-drifting model states, as between consecutive periodic fulls.
+fn full_workload() -> Vec<ModelState> {
+    let mut rng = Rng::new(7);
+    let mut state = ModelState::new(Flat({
+        let mut p = vec![0f32; N];
+        rng.fill_normal_f32(&mut p);
+        p
+    }));
+    let mut states = Vec::with_capacity(FULLS);
+    for step in 0..FULLS as u64 {
+        state.step = step * 100;
+        states.push(state.clone());
+        for _ in 0..DRIFT {
+            let at = rng.range(0, N);
+            state.params.0[at] += (rng.next_f32() - 0.5) * 2e-3;
+            state.m.0[at] += (rng.next_f32() - 0.5) * 1e-3;
+        }
+    }
+    states
+}
+
+/// (wire_bytes, encode_ns_per_param) for the full chain, plain vs delta.
+fn run_fulls(states: &[ModelState], sig: u64, delta: bool) -> (u64, f64) {
+    let mut out = Vec::new();
+    let mut base_payload = Vec::new();
+    full_raw_payload(&states[0], &mut base_payload);
+    let mut wire = 0u64;
+    let t0 = Instant::now();
+    for (i, s) in states.iter().enumerate() {
+        out.clear();
+        let bytes = if delta && i > 0 {
+            write_full_delta_into(
+                s,
+                sig,
+                states[0].step,
+                &base_payload,
+                DEFAULT_ZSTD_LEVEL,
+                &mut out,
+            )
+            .unwrap()
+        } else {
+            write_full_into_level(s, sig, PayloadCodec::Zstd, DEFAULT_ZSTD_LEVEL, &mut out)
+                .unwrap()
+        };
+        wire += bytes as u64;
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / (states.len() * N) as f64;
+    (wire, ns)
+}
+
+fn main() {
+    let sig = model_signature("codec-bench", N);
+    println!("== top-k diff codecs ({N} params, rho {RHO}, {DIFF_STEPS} steps) ==");
+    let (grads, raw_bytes) = diff_workload();
+    let mut by_codec = Vec::new();
+    for codec in [PayloadCodec::Raw, PayloadCodec::Zstd, PayloadCodec::Quant8] {
+        let (wire, ns) = run_diff_codec(codec, &grads, sig);
+        println!(
+            "{:<10} wire {:>12} B  ratio {:>5.2}x  encode {:>7.2} ns/nnz",
+            codec.name(),
+            wire,
+            raw_bytes as f64 / wire as f64,
+            ns
+        );
+        by_codec.push((codec, wire, ns));
+    }
+    let zstd_wire = by_codec[1].1;
+    let quant_wire = by_codec[2].1;
+
+    println!("\n== periodic fulls ({N} params, {FULLS} fulls, {DRIFT} drifted/step) ==");
+    let states = full_workload();
+    let (plain_wire, plain_ns) = run_fulls(&states, sig, false);
+    let (delta_wire, delta_ns) = run_fulls(&states, sig, true);
+    println!("zstd fulls  wire {plain_wire:>12} B  encode {plain_ns:>6.2} ns/param");
+    println!("delta fulls wire {delta_wire:>12} B  encode {delta_ns:>6.2} ns/param");
+
+    // machine-readable block for BENCH_codec.json
+    println!("\n{{");
+    println!("  \"bench\": \"codec\",");
+    println!("  \"diffs\": {{ \"raw_payload_bytes\": {raw_bytes},");
+    for (codec, wire, ns) in &by_codec {
+        println!(
+            "    \"{}\": {{ \"wire_bytes\": {wire}, \"encode_ns_per_nnz\": {ns:.2} }},",
+            codec.name()
+        );
+    }
+    println!("    \"quant8_vs_zstd\": {:.2} }},", zstd_wire as f64 / quant_wire as f64);
+    println!(
+        "  \"fulls\": {{ \"zstd_wire_bytes\": {plain_wire}, \"delta_wire_bytes\": {delta_wire}, \
+         \"delta_vs_zstd\": {:.2} }}",
+        plain_wire as f64 / delta_wire as f64
+    );
+    println!("}}");
+
+    // acceptance: the lossy arm must earn its place — >= 2x fewer wire
+    // bytes than zstd on top-k values — and delta fulls must undercut
+    // plain zstd fulls when the state drifts slowly
+    assert!(
+        2 * quant_wire <= zstd_wire,
+        "quant8 must halve the zstd wire: {quant_wire} vs {zstd_wire}"
+    );
+    assert!(
+        delta_wire < plain_wire,
+        "delta fulls must beat plain fulls: {delta_wire} vs {plain_wire}"
+    );
+    println!(
+        "\nacceptance: quant8 {:.2}x under zstd, delta fulls {:.2}x under plain (PASS)",
+        zstd_wire as f64 / quant_wire as f64,
+        plain_wire as f64 / delta_wire as f64
+    );
+}

@@ -38,7 +38,12 @@ fn convergence() -> (u64, u64, f64, u64) {
     };
     let iter_time = 1.9;
     let (want_f, _) = optimal_config_integer(&p, iter_time);
-    let bad = Retune { full_every: want_f * 50, batch_size: 64, compact_every: 0 };
+    let bad = Retune {
+        full_every: want_f * 50,
+        batch_size: 64,
+        compact_every: 0,
+        codec: lowdiff::checkpoint::format::PayloadCodec::Raw,
+    };
     // find the first tick budget that lands within 20%
     let mut ticks_to_converge = 0u64;
     for ticks in (10usize..=600).step_by(10) {

@@ -27,7 +27,8 @@
 use anyhow::{ensure, Result};
 
 use crate::checkpoint::format::{
-    encode_container_into, CkptKind, Container, ContainerView, PayloadCodec, SectionSrc,
+    encode_container_level_into, CkptKind, Container, ContainerView, PayloadCodec, SectionSrc,
+    DEFAULT_ZSTD_LEVEL,
 };
 use crate::sparse::SparseGrad;
 
@@ -189,24 +190,59 @@ impl BatchBuffer {
         codec: PayloadCodec,
         out: &mut Vec<u8>,
     ) -> Result<Option<(u64, u64, usize)>> {
+        self.flush_into_level(model_sig, codec, DEFAULT_ZSTD_LEVEL, out)
+    }
+
+    /// [`flush_into`](BatchBuffer::flush_into) with an explicit zstd level.
+    pub fn flush_into_level(
+        &mut self,
+        model_sig: u64,
+        codec: PayloadCodec,
+        zstd_level: i32,
+        out: &mut Vec<u8>,
+    ) -> Result<Option<(u64, u64, usize)>> {
+        let encoded = self.encode_pending_into_level(model_sig, codec, zstd_level, out)?;
+        if encoded.is_some() {
+            match self.mode {
+                BatchMode::Sum => {
+                    self.count = 0;
+                    self.acc.indices.clear(); // capacities survive for the next batch
+                    self.acc.values.clear();
+                }
+                BatchMode::Concat => self.pending.clear(),
+            }
+        }
+        Ok(encoded)
+    }
+
+    /// Encode the pending batch into `out` **without draining it** —
+    /// `flush_into_level` is this plus the drain. The non-draining form is
+    /// what bandit probes use: the encoder measures an alternate codec
+    /// against the very same pending batch, then flushes for real with the
+    /// chosen one.
+    pub fn encode_pending_into_level(
+        &self,
+        model_sig: u64,
+        codec: PayloadCodec,
+        zstd_level: i32,
+        out: &mut Vec<u8>,
+    ) -> Result<Option<(u64, u64, usize)>> {
         if self.is_empty() {
             return Ok(None);
         }
         match self.mode {
             BatchMode::Sum => {
                 let (lo, hi) = (self.step_lo, self.step_hi);
-                let n = encode_container_into(
+                let n = encode_container_level_into(
                     CkptKind::BatchedDiff,
                     codec,
+                    zstd_level,
                     model_sig,
                     lo,
                     hi,
                     &[SectionSrc::sparse("sum", &self.acc)],
                     out,
                 )?;
-                self.count = 0;
-                self.acc.indices.clear(); // capacities survive for the next batch
-                self.acc.values.clear();
                 Ok(Some((lo, hi, n)))
             }
             BatchMode::Concat => {
@@ -219,16 +255,16 @@ impl BatchBuffer {
                     .zip(self.pending.iter())
                     .map(|(name, (_, g))| SectionSrc::sparse(name, g))
                     .collect();
-                let n = encode_container_into(
+                let n = encode_container_level_into(
                     CkptKind::BatchedDiff,
                     codec,
+                    zstd_level,
                     model_sig,
                     lo,
                     hi,
                     &secs,
                     out,
                 )?;
-                self.pending.clear();
                 Ok(Some((lo, hi, n)))
             }
         }
@@ -409,6 +445,25 @@ mod tests {
         assert!(buf.take_copied() > 0, "merge output is accounted");
         assert_eq!(buf.len(), 2);
         assert!(buf.buffered_bytes() > 0);
+    }
+
+    #[test]
+    fn encode_pending_does_not_drain() {
+        let mut rng = Rng::new(11);
+        let mut buf = BatchBuffer::new(BatchMode::Concat, 4);
+        buf.offer(1, grad(&mut rng, 60));
+        buf.offer(2, grad(&mut rng, 60));
+        let mut probe = Vec::new();
+        let (lo, hi, n) = buf
+            .encode_pending_into_level(9, PayloadCodec::Quant8, 1, &mut probe)
+            .unwrap()
+            .expect("non-empty");
+        assert_eq!((lo, hi), (1, 2));
+        assert_eq!(n, probe.len());
+        assert_eq!(buf.len(), 2, "probe encode must not drain");
+        let mut real = Vec::new();
+        buf.flush_into(9, PayloadCodec::Raw, &mut real).unwrap().expect("non-empty");
+        assert!(buf.is_empty());
     }
 
     #[test]

@@ -11,7 +11,8 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::checkpoint::format::{
-    encode_container_into, CkptKind, ContainerView, PayloadCodec, SectionSrc,
+    encode_container_level_into, CkptKind, ContainerView, PayloadCodec, SectionSrc,
+    DEFAULT_ZSTD_LEVEL,
 };
 use crate::sparse::SparseGrad;
 
@@ -61,9 +62,23 @@ pub fn write_diff_into(
     codec: PayloadCodec,
     out: &mut Vec<u8>,
 ) -> Result<usize> {
-    encode_container_into(
+    write_diff_into_level(payload, model_sig, step, codec, DEFAULT_ZSTD_LEVEL, out)
+}
+
+/// [`write_diff_into`] with an explicit zstd level (the `--zstd-level`
+/// knob; only the Zstd codec reads it).
+pub fn write_diff_into_level(
+    payload: &DiffPayload,
+    model_sig: u64,
+    step: u64,
+    codec: PayloadCodec,
+    zstd_level: i32,
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    encode_container_level_into(
         CkptKind::Diff,
         codec,
+        zstd_level,
         model_sig,
         step,
         step,
@@ -120,6 +135,23 @@ mod tests {
         let g = write_diff(&DiffPayload::Gradient(sparse()), 1, 1, PayloadCodec::Raw).unwrap();
         let (_, p) = read_diff(&g, 1).unwrap();
         assert!(matches!(p, DiffPayload::Gradient(_)));
+    }
+
+    #[test]
+    fn quant8_diff_roundtrip_within_contract() {
+        // Quant8 reconstructs the standard sparse wire at parse time, so
+        // read_diff needs no codec-specific path: indices exact, values
+        // dequantized (here scale-exact: integer values, absmax 127)
+        let s = SparseGrad {
+            dense_len: 8,
+            indices: vec![1, 3, 6],
+            values: vec![127.0, -64.0, 32.0],
+        };
+        let p = DiffPayload::Gradient(s.clone());
+        let b = write_diff(&p, 9, 5, PayloadCodec::Quant8).unwrap();
+        let (step, back) = read_diff(&b, 9).unwrap();
+        assert_eq!(step, 5);
+        assert_eq!(back, p);
     }
 
     #[test]

@@ -24,6 +24,15 @@ use crate::tensor::Flat;
 pub const MAGIC: &[u8; 4] = b"LDCK";
 pub const MAGIC_END: &[u8; 4] = b"KCDL";
 pub const VERSION: u32 = 1;
+/// Container version for the codec-extension wire format (Quant8 /
+/// DeltaFull). Readers accept both; writers stamp the lowest version that
+/// can express the codec, so Raw/Zstd containers stay bit-identical to the
+/// v1 encoder and pre-extension readers reject the new codecs twice over
+/// (unknown version AND unknown codec byte).
+pub const VERSION_CODEC_EXT: u32 = 2;
+/// Default zstd compression level (the value the encoder always used; now
+/// a knob — `CkptConfig::zstd_level`, CLI `--zstd-level`).
+pub const DEFAULT_ZSTD_LEVEL: i32 = 1;
 
 /// What the container holds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,19 +70,88 @@ impl CkptKind {
 }
 
 /// Payload-level compression of the container bytes.
+///
+/// `Raw`/`Zstd` are lossless byte-stream codecs (container v1). The
+/// codec-extension codecs (container v2) transform *typed* payloads:
+///
+/// * `Quant8` — per-block scale u8 quantization of sparse top-k *values*
+///   with a lossless delta+varint *index* stream (Check-N-Run style).
+///   Lossy, but with a hard contract: the decode is a pure function of
+///   the stored bytes, so every replay of the same container dequantizes
+///   to exactly the same f32s — the error is fixed at encode time and
+///   never compounds across a chain (see docs/FORMAT.md).
+/// * `DeltaFull` — dense full state XOR'd against the previous persisted
+///   full, then zstd. Lossless, but decoding needs the base payload
+///   (`ContainerView::parse_with_base`); `step_lo` in the header names
+///   the base step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PayloadCodec {
     Raw = 0,
     Zstd = 1,
+    Quant8 = 2,
+    DeltaFull = 3,
 }
 
+/// Number of wire codecs (sizing per-codec counter arrays).
+pub const N_CODECS: usize = 4;
+
 impl PayloadCodec {
-    fn from_u8(v: u8) -> Result<PayloadCodec> {
+    pub const ALL: [PayloadCodec; N_CODECS] = [
+        PayloadCodec::Raw,
+        PayloadCodec::Zstd,
+        PayloadCodec::Quant8,
+        PayloadCodec::DeltaFull,
+    ];
+
+    pub fn from_u8(v: u8) -> Result<PayloadCodec> {
         Ok(match v {
             0 => PayloadCodec::Raw,
             1 => PayloadCodec::Zstd,
+            2 => PayloadCodec::Quant8,
+            3 => PayloadCodec::DeltaFull,
             _ => bail!("unknown payload codec {v}"),
         })
+    }
+
+    /// Dense index into per-codec counter arrays.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lowercase name (metrics labels, CLI, sidecar state).
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadCodec::Raw => "raw",
+            PayloadCodec::Zstd => "zstd",
+            PayloadCodec::Quant8 => "quant8",
+            PayloadCodec::DeltaFull => "delta-full",
+        }
+    }
+
+    /// Inverse of [`name`](PayloadCodec::name), tolerant of common aliases.
+    pub fn parse_name(s: &str) -> Option<PayloadCodec> {
+        match s.to_ascii_lowercase().as_str() {
+            "raw" => Some(PayloadCodec::Raw),
+            "zstd" => Some(PayloadCodec::Zstd),
+            "quant8" | "q8" => Some(PayloadCodec::Quant8),
+            "delta-full" | "deltafull" | "delta" => Some(PayloadCodec::DeltaFull),
+            _ => None,
+        }
+    }
+
+    /// True if decode may differ from the encoder's input (bounded,
+    /// non-compounding quantization error — the codec contract).
+    pub fn is_lossy(self) -> bool {
+        matches!(self, PayloadCodec::Quant8)
+    }
+
+    /// Lowest container version able to express this codec; the encoder
+    /// stamps exactly this, so v1 containers stay bit-identical.
+    pub fn container_version(self) -> u32 {
+        match self {
+            PayloadCodec::Raw | PayloadCodec::Zstd => VERSION,
+            PayloadCodec::Quant8 | PayloadCodec::DeltaFull => VERSION_CODEC_EXT,
+        }
     }
 }
 
@@ -175,6 +253,7 @@ impl Container {
         let payload = match self.codec {
             PayloadCodec::Raw => raw_payload,
             PayloadCodec::Zstd => zstd::encode_all(raw_payload.as_slice(), 1)?,
+            other => bail!("no reference encoder for v2 codec {}", other.name()),
         };
         let crc = crc32fast::hash(&payload);
 
@@ -273,8 +352,13 @@ thread_local! {
 /// the CRC is fused into the payload copy (each section is hashed as it
 /// lands in `out`) and **no intermediate payload buffer exists**; for Zstd
 /// the raw stream is staged once in a reusable thread-local scratch and
-/// compressed straight into `out`. Bit-identical to the pre-change
-/// two-copy encoder (property-tested against it). Returns bytes appended.
+/// compressed straight into `out`; for Quant8 each section is transformed
+/// straight into `out` (tagged blob, see module docs) with the CRC fused
+/// like Raw. Bit-identical to the pre-change two-copy encoder for
+/// Raw/Zstd (property-tested against it). Returns bytes appended.
+///
+/// Encodes at [`DEFAULT_ZSTD_LEVEL`]; the level knob is
+/// [`encode_container_level_into`].
 pub fn encode_container_into(
     kind: CkptKind,
     codec: PayloadCodec,
@@ -284,19 +368,49 @@ pub fn encode_container_into(
     sections: &[SectionSrc<'_>],
     out: &mut Vec<u8>,
 ) -> Result<usize> {
+    encode_container_level_into(
+        kind,
+        codec,
+        DEFAULT_ZSTD_LEVEL,
+        model_sig,
+        step_lo,
+        step_hi,
+        sections,
+        out,
+    )
+}
+
+/// [`encode_container_into`] with an explicit zstd level (`--zstd-level`
+/// knob; ignored by Raw/Quant8). The level is not stored in the header —
+/// the decoder does not need it.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_container_level_into(
+    kind: CkptKind,
+    codec: PayloadCodec,
+    zstd_level: i32,
+    model_sig: u64,
+    step_lo: u64,
+    step_hi: u64,
+    sections: &[SectionSrc<'_>],
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    ensure!(
+        codec != PayloadCodec::DeltaFull,
+        "delta-full containers are written by encode_delta_full_into (need a base payload)"
+    );
     let start = out.len();
     let payload_len: usize = sections.iter().map(|s| s.payload.encoded_len()).sum();
     let meta_len: usize = sections.iter().map(|s| 2 + s.name.len() + 8).sum();
-    // reserve the exact output for Raw; for Zstd only the header — the
-    // compressed size is unknown and reserving raw_len would permanently
-    // inflate recycled pool buffers to uncompressed capacity
+    // reserve the exact output for Raw; for the compressing codecs only the
+    // header — the encoded size is unknown and reserving raw_len would
+    // permanently inflate recycled pool buffers to uncompressed capacity
     let reserve_payload = match codec {
         PayloadCodec::Raw => payload_len,
-        PayloadCodec::Zstd => 0,
+        _ => 0,
     };
     out.reserve(40 + meta_len + reserve_payload + 8);
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&codec.container_version().to_le_bytes());
     out.push(kind as u8);
     out.push(codec as u8);
     out.extend_from_slice(&[0u8; 2]);
@@ -308,6 +422,8 @@ pub fn encode_container_into(
         ensure!(s.name.len() <= u16::MAX as usize, "section name too long");
         out.extend_from_slice(&(s.name.len() as u16).to_le_bytes());
         out.extend_from_slice(s.name.as_bytes());
+        // always the *decoded* (raw) length: what the section yields after
+        // ContainerView::parse, independent of the payload codec
         out.extend_from_slice(&(s.payload.encoded_len() as u64).to_le_bytes());
     }
     let payload_start = out.len();
@@ -331,15 +447,256 @@ pub fn encode_container_into(
                 }
                 // same streaming path `zstd::encode_all` uses internally,
                 // so the compressed bytes are identical to the old encoder
-                zstd::stream::copy_encode(scratch.as_slice(), &mut *out, 1)?;
+                zstd::stream::copy_encode(scratch.as_slice(), &mut *out, zstd_level)?;
                 Ok(())
             })?;
             crc32fast::hash(&out[payload_start..])
         }
+        PayloadCodec::Quant8 => {
+            let mut hasher = crc32fast::Hasher::new();
+            for s in sections {
+                let sec_start = out.len();
+                write_quant_section(&s.payload, out);
+                hasher.update(&out[sec_start..]);
+            }
+            hasher.finalize()
+        }
+        PayloadCodec::DeltaFull => unreachable!("rejected above"),
     };
     out.extend_from_slice(&crc.to_le_bytes());
     out.extend_from_slice(MAGIC_END);
     Ok(out.len() - start)
+}
+
+// ---- Quant8 section transform -------------------------------------------
+//
+// Stored payload = concatenation of self-delimiting per-section blobs:
+//
+// ```text
+// tag u8 = 0 | raw section bytes (exactly the header-table length)
+// tag u8 = 1 | nnz u32 | dense_len u32 | nb u32
+//            | q u8 × nnz | scales f32 × nb           (nb = ⌈nnz/QBLOCK⌉)
+//            | uvarint index deltas × nnz             (d0 = idx0, di = idxi − idxi−1)
+// ```
+//
+// Only typed sparse sources quantize (tag 1); byte/dense sections pass
+// through verbatim (tag 0), so a Quant8 container holding only opaque
+// bytes round-trips losslessly. The section table in the header records
+// the *decoded* raw lengths, so downstream section readers are untouched.
+
+/// LEB128 unsigned varint append.
+fn write_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// LEB128 unsigned varint read; returns (value, next position).
+fn read_uvarint(buf: &[u8], mut pos: usize) -> Result<(u64, usize)> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        ensure!(pos < buf.len(), "varint truncated");
+        let b = buf[pos];
+        pos += 1;
+        ensure!(shift < 64, "varint overflow");
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok((v, pos));
+        }
+        shift += 7;
+    }
+}
+
+/// Append one Quant8 section blob (tag 1 for sparse sources, tag 0
+/// passthrough otherwise).
+fn write_quant_section(p: &PayloadSrc<'_>, out: &mut Vec<u8>) {
+    match p {
+        PayloadSrc::Sparse(s) => {
+            let nnz = s.nnz();
+            let nb = nnz.div_ceil(crate::compress::QBLOCK);
+            out.reserve(13 + nnz + 4 * nb + 2 * nnz);
+            out.push(1u8);
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(&s.dense_len.to_le_bytes());
+            out.extend_from_slice(&(nb as u32).to_le_bytes());
+            // quantized values land straight in `out`; scales are a tiny
+            // per-block side vector appended after
+            let mut scales: Vec<f32> = Vec::with_capacity(nb);
+            crate::compress::quant8_into(&s.values, out, &mut scales);
+            for sc in &scales {
+                out.extend_from_slice(&sc.to_le_bytes());
+            }
+            let mut prev = 0u32;
+            for (i, &idx) in s.indices.iter().enumerate() {
+                let d = if i == 0 { idx } else { idx - prev };
+                write_uvarint(out, d as u64);
+                prev = idx;
+            }
+        }
+        other => {
+            out.push(0u8);
+            other.write_to(out);
+        }
+    }
+}
+
+/// Decode one tag-1 blob starting at `*pos`, appending the reconstructed
+/// standard sparse wire bytes (`[dense_len u32][nnz u32][indices][values]`)
+/// to `out`. Advances `*pos` past the blob.
+fn read_quant_sparse(buf: &[u8], pos: &mut usize, out: &mut Vec<u8>) -> Result<()> {
+    let p = *pos;
+    ensure!(p + 12 <= buf.len(), "quant section header truncated");
+    let nnz = LE::read_u32(&buf[p..p + 4]) as usize;
+    let dense_len = LE::read_u32(&buf[p + 4..p + 8]);
+    let nb = LE::read_u32(&buf[p + 8..p + 12]) as usize;
+    ensure!(nnz as u64 <= dense_len as u64, "quant nnz {nnz} > dense_len {dense_len}");
+    ensure!(
+        nb == nnz.div_ceil(crate::compress::QBLOCK),
+        "quant block count {nb} inconsistent with nnz {nnz}"
+    );
+    let q_at = p + 12;
+    ensure!(q_at + nnz + 4 * nb <= buf.len(), "quant value streams truncated");
+    let qbytes = &buf[q_at..q_at + nnz];
+    let scales = &buf[q_at + nnz..q_at + nnz + 4 * nb];
+
+    out.reserve(8 + 8 * nnz);
+    out.extend_from_slice(&dense_len.to_le_bytes());
+    out.extend_from_slice(&(nnz as u32).to_le_bytes());
+    let mut vpos = q_at + nnz + 4 * nb;
+    let mut prev: u64 = 0;
+    for i in 0..nnz {
+        let (d, np) = read_uvarint(buf, vpos)?;
+        vpos = np;
+        let idx = if i == 0 {
+            d
+        } else {
+            ensure!(d >= 1, "quant index stream not strictly ascending");
+            prev + d
+        };
+        ensure!(idx < dense_len as u64, "quant index {idx} out of range {dense_len}");
+        out.extend_from_slice(&(idx as u32).to_le_bytes());
+        prev = idx;
+    }
+    for (i, &q) in qbytes.iter().enumerate() {
+        let sc = LE::read_f32(&scales[4 * (i / crate::compress::QBLOCK)..]);
+        let v = crate::compress::dequant8_at(q, sc);
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    *pos = vpos;
+    Ok(())
+}
+
+/// Decode a full Quant8 payload into the reconstructed raw payload, given
+/// the per-section decoded lengths from the header table.
+fn decode_quant_payload(payload: &[u8], lens: &[usize]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(lens.iter().sum());
+    let mut pos = 0usize;
+    for &want in lens {
+        ensure!(pos < payload.len(), "quant payload truncated");
+        let tag = payload[pos];
+        pos += 1;
+        let sec_start = out.len();
+        match tag {
+            0 => {
+                ensure!(pos + want <= payload.len(), "quant raw section truncated");
+                out.extend_from_slice(&payload[pos..pos + want]);
+                pos += want;
+            }
+            1 => read_quant_sparse(payload, &mut pos, &mut out)?,
+            t => bail!("unknown quant section tag {t}"),
+        }
+        let got = out.len() - sec_start;
+        ensure!(got == want, "quant section decodes to {got} != header length {want}");
+    }
+    ensure!(pos == payload.len(), "quant payload has {} trailing bytes", payload.len() - pos);
+    Ok(out)
+}
+
+// ---- DeltaFull ----------------------------------------------------------
+
+/// Encode a delta-vs-previous full: the raw payload is staged, XOR'd
+/// byte-wise against `base_payload` (the *raw* payload of the base full,
+/// which must have the identical section layout), then zstd'd. The header
+/// carries `step_lo = base_step` (which full to fetch at decode) and
+/// `step_hi = step`; plain fulls keep `step_lo == step_hi`, so readers key
+/// on `step_hi`. Decode with [`ContainerView::parse_with_base`].
+#[allow(clippy::too_many_arguments)]
+pub fn encode_delta_full_into(
+    kind: CkptKind,
+    zstd_level: i32,
+    model_sig: u64,
+    base_step: u64,
+    step: u64,
+    sections: &[SectionSrc<'_>],
+    base_payload: &[u8],
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    let start = out.len();
+    let payload_len: usize = sections.iter().map(|s| s.payload.encoded_len()).sum();
+    ensure!(
+        payload_len == base_payload.len(),
+        "delta-full layout mismatch: payload {payload_len} != base {}",
+        base_payload.len()
+    );
+    let meta_len: usize = sections.iter().map(|s| 2 + s.name.len() + 8).sum();
+    out.reserve(40 + meta_len + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&PayloadCodec::DeltaFull.container_version().to_le_bytes());
+    out.push(kind as u8);
+    out.push(PayloadCodec::DeltaFull as u8);
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&model_sig.to_le_bytes());
+    out.extend_from_slice(&base_step.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for s in sections {
+        ensure!(s.name.len() <= u16::MAX as usize, "section name too long");
+        out.extend_from_slice(&(s.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(s.name.as_bytes());
+        out.extend_from_slice(&(s.payload.encoded_len() as u64).to_le_bytes());
+    }
+    let payload_start = out.len();
+    ZSTD_SCRATCH.with(|cell| -> Result<()> {
+        let mut scratch = cell.borrow_mut();
+        scratch.clear();
+        scratch.reserve(payload_len);
+        for s in sections {
+            s.payload.write_to(&mut scratch);
+        }
+        for (b, &base) in scratch.iter_mut().zip(base_payload.iter()) {
+            *b ^= base;
+        }
+        zstd::stream::copy_encode(scratch.as_slice(), &mut *out, zstd_level)?;
+        Ok(())
+    })?;
+    let crc = crc32fast::hash(&out[payload_start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(MAGIC_END);
+    Ok(out.len() - start)
+}
+
+/// Cheap header peek: the payload codec byte, validated only by magic and
+/// minimum length (no CRC walk). Lets the manifest GC and the full-reader
+/// decide whether a full needs its base without a full parse.
+pub fn peek_codec(bytes: &[u8]) -> Result<PayloadCodec> {
+    ensure!(bytes.len() >= 48, "container too short ({} bytes)", bytes.len());
+    ensure!(&bytes[0..4] == MAGIC, "bad magic");
+    PayloadCodec::from_u8(bytes[9])
+}
+
+/// Cheap header peek: `(step_lo, step_hi)`. For a DeltaFull container
+/// `step_lo` is the base full's step.
+pub fn peek_steps(bytes: &[u8]) -> Result<(u64, u64)> {
+    ensure!(bytes.len() >= 48, "container too short ({} bytes)", bytes.len());
+    ensure!(&bytes[0..4] == MAGIC, "bad magic");
+    Ok((LE::read_u64(&bytes[20..28]), LE::read_u64(&bytes[28..36])))
 }
 
 /// Byte offset of the span-level field inside the container header (the
@@ -381,14 +738,39 @@ pub struct ContainerView<'a> {
 impl<'a> ContainerView<'a> {
     /// Parse and verify; identical validation (and error wording) to the
     /// owning [`Container::from_bytes`], which now delegates here.
+    ///
+    /// Fails on a [`PayloadCodec::DeltaFull`] container — its payload is
+    /// meaningless without the base full; callers that can fetch the base
+    /// use [`parse_with_base`](ContainerView::parse_with_base).
     pub fn parse(bytes: &'a [u8]) -> Result<ContainerView<'a>> {
+        Self::parse_inner(bytes, None)
+    }
+
+    /// Parse a [`PayloadCodec::DeltaFull`] container, reconstructing the
+    /// raw payload by XOR against `base_payload` (the raw payload of the
+    /// base full named by `step_lo`). Also accepts non-delta containers
+    /// (the base is then ignored).
+    pub fn parse_with_base(bytes: &'a [u8], base_payload: &[u8]) -> Result<ContainerView<'a>> {
+        Self::parse_inner(bytes, Some(base_payload))
+    }
+
+    fn parse_inner(bytes: &'a [u8], base: Option<&[u8]>) -> Result<ContainerView<'a>> {
         ensure!(bytes.len() >= 48, "container too short ({} bytes)", bytes.len());
         ensure!(&bytes[0..4] == MAGIC, "bad magic");
         ensure!(&bytes[bytes.len() - 4..] == MAGIC_END, "bad end magic (truncated?)");
         let version = LE::read_u32(&bytes[4..8]);
-        ensure!(version == VERSION, "unsupported version {version}");
+        ensure!(
+            version == VERSION || version == VERSION_CODEC_EXT,
+            "unsupported version {version}"
+        );
         let kind = CkptKind::from_u8(bytes[8])?;
         let codec = PayloadCodec::from_u8(bytes[9])?;
+        ensure!(
+            version >= codec.container_version(),
+            "codec {} needs container version {}, header says {version}",
+            codec.name(),
+            codec.container_version()
+        );
         let level = LE::read_u16(&bytes[10..12]);
         let model_sig = LE::read_u64(&bytes[12..20]);
         let step_lo = LE::read_u64(&bytes[20..28]);
@@ -419,6 +801,25 @@ impl<'a> ContainerView<'a> {
         let raw: Cow<'a, [u8]> = match codec {
             PayloadCodec::Raw => Cow::Borrowed(payload),
             PayloadCodec::Zstd => Cow::Owned(zstd::decode_all(payload)?),
+            PayloadCodec::Quant8 => Cow::Owned(decode_quant_payload(payload, &lens)?),
+            PayloadCodec::DeltaFull => {
+                let base = base.with_context(|| {
+                    format!(
+                        "delta-full container (base step {step_lo}) requires its base payload"
+                    )
+                })?;
+                let mut decoded = zstd::decode_all(payload)?;
+                ensure!(
+                    decoded.len() == base.len(),
+                    "delta-full payload {} != base payload {}",
+                    decoded.len(),
+                    base.len()
+                );
+                for (b, &base_b) in decoded.iter_mut().zip(base.iter()) {
+                    *b ^= base_b;
+                }
+                Cow::Owned(decoded)
+            }
         };
         let expected: usize = lens.iter().sum();
         ensure!(raw.len() == expected, "payload {} != sections total {expected}", raw.len());
@@ -734,6 +1135,242 @@ mod tests {
                 assert!(p >= base && p + sec.len() <= base + bytes.len());
             }
         }
+    }
+
+    fn arb_sparse_grad(rng: &mut crate::util::rng::Rng, max_len: usize) -> SparseGrad {
+        let n = rng.range(8, max_len);
+        let mut dense = Flat::zeros(n);
+        for i in 0..n {
+            if rng.next_f64() < 0.1 {
+                dense.0[i] = rng.normal() as f32;
+            }
+        }
+        SparseGrad::from_dense(&dense)
+    }
+
+    /// What the Quant8 wire contract promises a sparse section decodes to:
+    /// exact indices, values quantized per QBLOCK then dequantized.
+    fn quant_expected(s: &SparseGrad) -> SparseGrad {
+        let mut q = Vec::new();
+        let mut scales = Vec::new();
+        crate::compress::quant8_into(&s.values, &mut q, &mut scales);
+        let values = q
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| crate::compress::dequant8_at(b, scales[i / crate::compress::QBLOCK]))
+            .collect();
+        SparseGrad { dense_len: s.dense_len, indices: s.indices.clone(), values }
+    }
+
+    #[test]
+    fn quant8_sparse_roundtrip_property() {
+        prop_check("quant8_sparse_roundtrip", 64, |rng| {
+            let sparse = arb_sparse_grad(rng, 2000);
+            let mut out = Vec::new();
+            encode_container_into(
+                CkptKind::Diff,
+                PayloadCodec::Quant8,
+                7,
+                3,
+                3,
+                &[SectionSrc::sparse("grad", &sparse)],
+                &mut out,
+            )
+            .unwrap();
+            let view = ContainerView::parse(&out).map_err(|e| format!("parse: {e:#}"))?;
+            prop_assert!(view.codec == PayloadCodec::Quant8);
+            let back = SparseGrad::from_bytes(view.section("grad").unwrap())
+                .map_err(|e| format!("sparse: {e:#}"))?;
+            let want = quant_expected(&sparse);
+            // index stream is exactly lossless; values match the quantizer
+            // bit-for-bit (the codec contract)
+            prop_assert!(back.indices == want.indices);
+            prop_assert!(back.dense_len == want.dense_len);
+            prop_assert!(back.values == want.values);
+            // decode is idempotent: parsing the same bytes again yields the
+            // same f32s (what makes replay error non-compounding)
+            let view2 = ContainerView::parse(&out).unwrap();
+            prop_assert!(view2.section("grad").unwrap() == view.section("grad").unwrap());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant8_error_within_per_block_bound() {
+        prop_check("quant8_error_bound", 32, |rng| {
+            let sparse = arb_sparse_grad(rng, 1500);
+            let want = quant_expected(&sparse);
+            for blk in (0..sparse.values.len()).step_by(crate::compress::QBLOCK) {
+                let end = (blk + crate::compress::QBLOCK).min(sparse.values.len());
+                let absmax =
+                    sparse.values[blk..end].iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let bound = absmax / 127.0 * 0.5 + 1e-6;
+                for i in blk..end {
+                    prop_assert!((sparse.values[i] - want.values[i]).abs() <= bound);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant8_bytes_sections_are_lossless_passthrough() {
+        // a Quant8 container with only opaque byte sections (e.g. meta)
+        // round-trips bit-identically — tag-0 passthrough
+        let c = sample(PayloadCodec::Quant8);
+        let b = c.to_bytes().unwrap();
+        let d = Container::from_bytes(&b).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(LE::read_u32(&b[4..8]), VERSION_CODEC_EXT);
+    }
+
+    #[test]
+    fn quant8_shrinks_topk_diff_below_zstd() {
+        // the acceptance workload shape: random top-k values, ~1% density
+        let mut rng = crate::util::rng::Rng::new(0x51dec0de);
+        let n = 1 << 16;
+        let mut dense = Flat::zeros(n);
+        for i in 0..n {
+            if rng.next_f64() < 0.01 {
+                dense.0[i] = rng.normal() as f32;
+            }
+        }
+        let sparse = SparseGrad::from_dense(&dense);
+        let mut sizes = [0usize; 2];
+        for (slot, codec) in [PayloadCodec::Zstd, PayloadCodec::Quant8].iter().enumerate() {
+            let mut out = Vec::new();
+            encode_container_into(
+                CkptKind::Diff,
+                *codec,
+                7,
+                3,
+                3,
+                &[SectionSrc::sparse("grad", &sparse)],
+                &mut out,
+            )
+            .unwrap();
+            sizes[slot] = out.len();
+        }
+        assert!(
+            sizes[1] * 2 <= sizes[0],
+            "quant8 {} not ≥2x smaller than zstd {}",
+            sizes[1],
+            sizes[0]
+        );
+    }
+
+    #[test]
+    fn quant8_corruption_and_truncation_rejected() {
+        let mut rng = crate::util::rng::Rng::new(99);
+        let sparse = arb_sparse_grad(&mut rng, 800);
+        let mut out = Vec::new();
+        encode_container_into(
+            CkptKind::Diff,
+            PayloadCodec::Quant8,
+            7,
+            3,
+            3,
+            &[SectionSrc::sparse("grad", &sparse)],
+            &mut out,
+        )
+        .unwrap();
+        for cut in [1, 20, out.len() / 2, out.len() - 1] {
+            assert!(ContainerView::parse(&out[..cut]).is_err(), "cut {cut}");
+        }
+        let mid = out.len() / 2;
+        let mut bad = out.clone();
+        bad[mid] ^= 0xFF;
+        assert!(ContainerView::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn v1_header_with_v2_codec_rejected() {
+        // a corrupted/forged header claiming v1 but carrying a v2 codec
+        // byte must not parse (CRC does not cover the header)
+        let c = sample(PayloadCodec::Quant8);
+        let mut b = c.to_bytes().unwrap();
+        b[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        let err = ContainerView::parse(&b).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn raw_zstd_headers_stay_v1() {
+        for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+            let b = sample(codec).to_bytes().unwrap();
+            assert_eq!(LE::read_u32(&b[4..8]), VERSION);
+        }
+    }
+
+    #[test]
+    fn delta_full_roundtrip_and_requires_base() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let n = 512;
+        let mut base = Flat::zeros(n);
+        let mut next = Flat::zeros(n);
+        for i in 0..n {
+            base.0[i] = rng.normal() as f32;
+            // mostly-unchanged dense state — the delta-full workload
+            next.0[i] = if rng.next_f64() < 0.05 { rng.normal() as f32 } else { base.0[i] };
+        }
+        let mut base_payload = Vec::new();
+        PayloadSrc::FlatF32(&base).write_to(&mut base_payload);
+
+        let mut delta = Vec::new();
+        encode_delta_full_into(
+            CkptKind::Full,
+            1,
+            7,
+            10, // base step
+            20, // this step
+            &[SectionSrc::flat("state", &next)],
+            &base_payload,
+            &mut delta,
+        )
+        .unwrap();
+
+        // header peeks
+        assert_eq!(peek_codec(&delta).unwrap(), PayloadCodec::DeltaFull);
+        assert_eq!(peek_steps(&delta).unwrap(), (10, 20));
+
+        // no base → a named error, not garbage
+        let err = ContainerView::parse(&delta).unwrap_err().to_string();
+        assert!(err.contains("base"), "{err}");
+
+        // with base → bit-exact reconstruction
+        let view = ContainerView::parse_with_base(&delta, &base_payload).unwrap();
+        assert_eq!(view.step_lo, 10);
+        assert_eq!(view.step_hi, 20);
+        let mut want = Vec::new();
+        PayloadSrc::FlatF32(&next).write_to(&mut want);
+        assert_eq!(view.section("state").unwrap(), want.as_slice());
+
+        // a delta against mostly-unchanged state beats a plain zstd full
+        let mut plain = Vec::new();
+        encode_container_into(
+            CkptKind::Full,
+            PayloadCodec::Zstd,
+            7,
+            20,
+            20,
+            &[SectionSrc::flat("state", &next)],
+            &mut plain,
+        )
+        .unwrap();
+        assert!(delta.len() < plain.len(), "delta {} >= plain {}", delta.len(), plain.len());
+
+        // wrong-length base rejected
+        assert!(ContainerView::parse_with_base(&delta, &base_payload[..100]).is_err());
+    }
+
+    #[test]
+    fn codec_name_roundtrip() {
+        for codec in PayloadCodec::ALL {
+            assert_eq!(PayloadCodec::parse_name(codec.name()), Some(codec));
+            assert_eq!(PayloadCodec::from_u8(codec as u8).unwrap(), codec);
+        }
+        assert_eq!(PayloadCodec::parse_name("Q8"), Some(PayloadCodec::Quant8));
+        assert_eq!(PayloadCodec::parse_name("bogus"), None);
     }
 
     #[test]

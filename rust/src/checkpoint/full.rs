@@ -5,7 +5,8 @@
 use anyhow::{ensure, Result};
 
 use crate::checkpoint::format::{
-    encode_container_into, CkptKind, ContainerView, PayloadCodec, SectionSrc,
+    encode_container_level_into, encode_delta_full_into, peek_codec, CkptKind, ContainerView,
+    PayloadCodec, SectionSrc, DEFAULT_ZSTD_LEVEL,
 };
 use crate::optim::ModelState;
 use crate::tensor::Flat;
@@ -26,24 +27,111 @@ pub fn write_full_into(
     codec: PayloadCodec,
     out: &mut Vec<u8>,
 ) -> Result<usize> {
-    encode_container_into(
+    write_full_into_level(state, model_sig, codec, DEFAULT_ZSTD_LEVEL, out)
+}
+
+fn full_sections(state: &ModelState) -> [SectionSrc<'_>; 3] {
+    [
+        SectionSrc::flat("params", &state.params),
+        SectionSrc::flat("adam_m", &state.m),
+        SectionSrc::flat("adam_v", &state.v),
+    ]
+}
+
+/// [`write_full_into`] with an explicit zstd level.
+pub fn write_full_into_level(
+    state: &ModelState,
+    model_sig: u64,
+    codec: PayloadCodec,
+    zstd_level: i32,
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    encode_container_level_into(
         CkptKind::Full,
         codec,
+        zstd_level,
         model_sig,
         state.step,
         state.step,
-        &[
-            SectionSrc::flat("params", &state.params),
-            SectionSrc::flat("adam_m", &state.m),
-            SectionSrc::flat("adam_v", &state.v),
-        ],
+        &full_sections(state),
         out,
     )
 }
 
-/// Decode a full checkpoint, verifying the model signature.
+/// Encode a **delta-vs-previous** full: the 3Ψ state XOR'd against the raw
+/// payload of the base full at `base_step` (held by the encoder in a
+/// pooled buffer), then zstd'd. Wire codec [`PayloadCodec::DeltaFull`];
+/// the header records `step_lo = base_step`, `step_hi = state.step`, so
+/// recovery knows which plain full to fetch. The base must be a *plain*
+/// (non-delta) full — delta chains are depth ≤ 1 by construction.
+pub fn write_full_delta_into(
+    state: &ModelState,
+    model_sig: u64,
+    base_step: u64,
+    base_raw_payload: &[u8],
+    zstd_level: i32,
+    out: &mut Vec<u8>,
+) -> Result<usize> {
+    encode_delta_full_into(
+        CkptKind::Full,
+        zstd_level,
+        model_sig,
+        base_step,
+        state.step,
+        &full_sections(state),
+        base_raw_payload,
+        out,
+    )
+}
+
+/// Serialize just the raw full payload (sections concatenated, no
+/// container framing) — the base the delta encoder XORs against.
+pub fn full_raw_payload(state: &ModelState, out: &mut Vec<u8>) {
+    out.reserve(12 * state.params.len());
+    for f in [&state.params, &state.m, &state.v] {
+        for x in &f.0 {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Decode a full checkpoint, verifying the model signature. Rejects
+/// delta-encoded fulls (use [`read_full_resolving`] when a base fetcher is
+/// available).
 pub fn read_full(bytes: &[u8], model_sig: u64) -> Result<ModelState> {
-    let c = ContainerView::parse(bytes)?;
+    read_full_view(ContainerView::parse(bytes)?, model_sig)
+}
+
+/// Decode a full checkpoint that may be delta-encoded: `fetch_base(step)`
+/// returns the bytes of the plain full named by the delta header's
+/// `step_lo`. Delta chains are depth ≤ 1 (the encoder only deltas against
+/// plain fulls), so at most one fetch happens.
+pub fn read_full_resolving(
+    bytes: &[u8],
+    model_sig: u64,
+    fetch_base: impl FnOnce(u64) -> Result<Vec<u8>>,
+) -> Result<ModelState> {
+    if peek_codec(bytes)? != PayloadCodec::DeltaFull {
+        return read_full(bytes, model_sig);
+    }
+    let (base_step, _) = crate::checkpoint::format::peek_steps(bytes)?;
+    let base_bytes = fetch_base(base_step)?;
+    let base = ContainerView::parse(&base_bytes)?;
+    ensure!(
+        base.kind == CkptKind::Full && base.codec != PayloadCodec::DeltaFull,
+        "delta-full base at step {base_step} is not a plain full"
+    );
+    ensure!(base.model_sig == model_sig, "delta-full base from a different model");
+    // the stored delta is against the base's *raw payload* (all sections
+    // concatenated), which is exactly what the parsed view holds
+    let mut base_payload = Vec::new();
+    for (_, sec) in base.sections() {
+        base_payload.extend_from_slice(sec);
+    }
+    read_full_view(ContainerView::parse_with_base(bytes, &base_payload)?, model_sig)
+}
+
+fn read_full_view(c: ContainerView<'_>, model_sig: u64) -> Result<ModelState> {
     ensure!(c.kind == CkptKind::Full, "not a full checkpoint: {:?}", c.kind);
     ensure!(
         c.model_sig == model_sig,
@@ -55,7 +143,9 @@ pub fn read_full(bytes: &[u8], model_sig: u64) -> Result<ModelState> {
     let m = Flat::from_le_bytes(c.section("adam_m")?);
     let v = Flat::from_le_bytes(c.section("adam_v")?);
     ensure!(params.len() == m.len() && m.len() == v.len(), "section length mismatch");
-    Ok(ModelState { params, m, v, step: c.step_lo })
+    // step_hi: == step_lo for plain fulls; the checkpointed step for
+    // delta fulls (whose step_lo names the base)
+    Ok(ModelState { params, m, v, step: c.step_hi })
 }
 
 #[cfg(test)]
@@ -95,6 +185,48 @@ mod tests {
         let bytes = write_full(&s, 1, PayloadCodec::Raw).unwrap();
         let payload = 3 * 1000 * 4;
         assert!(bytes.len() >= payload && bytes.len() < payload + 200);
+    }
+
+    #[test]
+    fn delta_full_roundtrip_bit_exact() {
+        let sig = model_signature("t", 200);
+        let base = state(200);
+        let mut next = base.clone();
+        next.step = 50;
+        for i in (0..200).step_by(7) {
+            next.params.0[i] += 0.25;
+            next.m.0[i] -= 0.5;
+        }
+        let base_bytes = write_full(&base, sig, PayloadCodec::Zstd).unwrap();
+        let mut base_payload = Vec::new();
+        full_raw_payload(&base, &mut base_payload);
+
+        let mut delta = Vec::new();
+        write_full_delta_into(&next, sig, base.step, &base_payload, 1, &mut delta).unwrap();
+        // delta fulls are smaller than a plain zstd full of the same state
+        let plain = write_full(&next, sig, PayloadCodec::Zstd).unwrap();
+        assert!(delta.len() < plain.len(), "delta {} >= plain {}", delta.len(), plain.len());
+
+        // plain read rejects; resolving read reconstructs bit-exactly
+        assert!(read_full(&delta, sig).is_err());
+        let back = read_full_resolving(&delta, sig, |step| {
+            assert_eq!(step, base.step);
+            Ok(base_bytes.clone())
+        })
+        .unwrap();
+        assert_eq!(back, next);
+        assert_eq!(back.step, 50);
+    }
+
+    #[test]
+    fn read_full_resolving_passes_plain_fulls_through() {
+        let sig = model_signature("t", 64);
+        let s = state(64);
+        let bytes = write_full(&s, sig, PayloadCodec::Raw).unwrap();
+        let back =
+            read_full_resolving(&bytes, sig, |_| panic!("plain full must not fetch a base"))
+                .unwrap();
+        assert_eq!(back, s);
     }
 
     #[test]

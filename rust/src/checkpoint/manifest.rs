@@ -477,12 +477,27 @@ impl Manifest {
             }
         }
         fulls.sort();
-        let Some((newest, _)) = fulls.last().cloned() else {
+        let Some((newest, newest_name)) = fulls.last().cloned() else {
             return Ok(0);
         };
+        // a delta-encoded full (`PayloadCodec::DeltaFull`) replays through
+        // its plain base full: pin that base so GC never strands the chain
+        // it would recover from. One header peek of the newest full; delta
+        // depth is ≤ 1, so one pin always suffices.
+        let pinned_base: Option<u64> = store
+            .get(&newest_name)
+            .ok()
+            .filter(|b| {
+                crate::checkpoint::format::peek_codec(b).ok()
+                    == Some(crate::checkpoint::format::PayloadCodec::DeltaFull)
+            })
+            .and_then(|b| crate::checkpoint::format::peek_steps(&b).ok())
+            .map(|(base, _)| base);
         let mut removed = 0;
         for (step, name) in fulls.iter().take(fulls.len() - 1) {
-            let _ = step;
+            if Some(*step) == pinned_base {
+                continue; // the delta full's base stays live
+            }
             store.delete(name)?;
             removed += 1;
         }
@@ -978,6 +993,39 @@ mod tests {
         for name in &cluster_objects {
             assert!(s.exists(name), "flat GC/truncate deleted cluster object {name}");
         }
+    }
+
+    #[test]
+    fn gc_pins_the_base_of_a_delta_encoded_newest_full() {
+        use crate::checkpoint::format::{model_signature, DEFAULT_ZSTD_LEVEL};
+        use crate::checkpoint::full::{full_raw_payload, write_full, write_full_delta_into};
+        use crate::checkpoint::format::PayloadCodec;
+        use crate::optim::ModelState;
+        use crate::tensor::Flat;
+        let sig = model_signature("t", 16);
+        let base = ModelState::new(Flat(vec![1.0; 16]));
+        let mut mid = base.clone();
+        mid.step = 2;
+        let mut tip = base.clone();
+        tip.step = 4;
+        tip.params.0[3] = 9.0;
+        let s = MemStore::new();
+        s.put(&Manifest::full_name(0), &write_full(&base, sig, PayloadCodec::Raw).unwrap())
+            .unwrap();
+        s.put(&Manifest::full_name(2), &write_full(&mid, sig, PayloadCodec::Raw).unwrap())
+            .unwrap();
+        let mut payload = Vec::new();
+        full_raw_payload(&base, &mut payload);
+        let mut delta = Vec::new();
+        write_full_delta_into(&tip, sig, 0, &payload, DEFAULT_ZSTD_LEVEL, &mut delta).unwrap();
+        s.put(&Manifest::full_name(4), &delta).unwrap();
+        s.put(&Manifest::diff_name(3), b"d").unwrap(); // superseded
+        let removed = Manifest::gc(&s).unwrap();
+        assert_eq!(removed, 2, "mid full + stale diff; the @0 base is pinned");
+        let left = s.list().unwrap();
+        assert!(left.contains(&Manifest::full_name(0)), "{left:?}");
+        assert!(left.contains(&Manifest::full_name(4)), "{left:?}");
+        assert!(!left.contains(&Manifest::full_name(2)), "{left:?}");
     }
 
     #[test]

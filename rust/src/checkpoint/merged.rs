@@ -279,6 +279,25 @@ mod tests {
     }
 
     #[test]
+    fn quant8_merged_span_replays_within_contract() {
+        // exactly-representable values (|v| ≤ 127, integral) round-trip
+        // bit-exactly through Quant8; the index streams are always exact
+        let mk = |step: u64, idx: Vec<u32>, vals: Vec<f32>| {
+            (step, DiffPayload::Gradient(SparseGrad { dense_len: 64, indices: idx, values: vals }))
+        };
+        let items = vec![
+            mk(1, vec![0, 9, 33], vec![127.0, -3.0, 64.0]),
+            mk(2, vec![4, 9], vec![1.0, -127.0]),
+            mk(3, vec![33, 60], vec![2.0, 127.0]),
+        ];
+        let bytes = write_merged(&items, 9, 1, 3, PayloadCodec::Quant8).unwrap();
+        let back = read_merged(&bytes, 9).unwrap();
+        assert_eq!(back, items);
+        // the sum summary section survives the codec too
+        assert!(read_merged_sum(&bytes, 9).unwrap().is_some());
+    }
+
+    #[test]
     fn wrong_sig_and_misordered_rejected() {
         let mut rng = Rng::new(6);
         let items = vec![

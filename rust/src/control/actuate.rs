@@ -29,6 +29,7 @@
 //! has passed, and every emitted value is clamped to configured bounds —
 //! the tuner can drift, the *applied* config cannot thrash.
 
+use crate::checkpoint::format::{PayloadCodec, N_CODECS};
 use crate::control::telemetry::{BwEstimator, MtbfEstimator, Snapshot, TelemetryBus};
 use crate::coordinator::config_opt::{AdaptiveTuner, SystemParams};
 use crate::storage::StorageBackend;
@@ -49,6 +50,10 @@ pub struct Retune {
     pub batch_size: usize,
     /// chain-compaction merge factor; < 2 disables
     pub compact_every: usize,
+    /// diff/batch payload codec in force (the bandit policy moves this
+    /// between the configured lossless codec and `Quant8` on *measured*
+    /// wins — see [`Actuator::codec_policy`])
+    pub codec: PayloadCodec,
 }
 
 /// One observation window — what [`Actuator::tick`] derives from bus
@@ -68,6 +73,11 @@ pub struct Window {
     /// feedback uses run totals, not deltas)
     pub merged_total: u64,
     pub raw_total: u64,
+    /// per-codec raw payload bytes measured inside the window (chosen +
+    /// probe encodes), indexed by [`PayloadCodec::idx`]
+    pub codec_bytes_in: [u64; N_CODECS],
+    /// per-codec achieved wire bytes inside the window
+    pub codec_bytes_out: [u64; N_CODECS],
 }
 
 /// Actuation policy knobs.
@@ -96,6 +106,15 @@ pub struct ActuatorConfig {
     pub decay: f64,
     /// prior pseudo-weight of the configured MTBF
     pub prior_weight: f64,
+    /// adaptive codec selection: move the diff codec between the
+    /// configured lossless codec and `Quant8` when the measured wire
+    /// ratio sustains a win (no-op until codec telemetry flows)
+    pub adapt_codec: bool,
+    /// minimum relative wire-ratio win before the codec switches (the
+    /// codec knob's hysteresis band)
+    pub codec_margin: f64,
+    /// consecutive winning windows required before the switch fires
+    pub codec_streak_ticks: u32,
 }
 
 impl Default for ActuatorConfig {
@@ -117,6 +136,11 @@ impl Default for ActuatorConfig {
             // badly misconfigured prior within a few hundred ticks
             decay: 0.98,
             prior_weight: 0.1,
+            adapt_codec: true,
+            // a switch costs nothing on the wire but moves the error
+            // contract (Quant8 is lossy), so demand a clear, sustained win
+            codec_margin: 0.1,
+            codec_streak_ticks: 2,
         }
     }
 }
@@ -134,6 +158,15 @@ pub struct Actuator {
     /// total diff-chain objects since the base full, as last reported by
     /// the driver ([`Actuator::note_chain_objects`]; full-free mode only)
     chain_objects: u64,
+    /// the configured lossless codec — the non-quantized bandit arm (and
+    /// what fulls always use)
+    lossless: PayloadCodec,
+    /// smoothed achieved wire ratio (out/in) per codec; `None` until that
+    /// codec has been measured at least once
+    codec_ratio: [Option<f64>; N_CODECS],
+    /// consecutive windows the non-applied arm has beaten the applied one
+    /// by more than `codec_margin`
+    codec_win_streak: u32,
     /// retunes emitted so far
     pub retunes: u64,
 }
@@ -171,6 +204,8 @@ impl Actuator {
         let mut tuner = AdaptiveTuner::new(params, iter_time);
         tuner.fcf_interval = initial.full_every.max(1);
         tuner.batch_size = initial.batch_size.max(1);
+        let lossless =
+            if initial.codec.is_lossy() { PayloadCodec::Zstd } else { initial.codec };
         Actuator {
             mtbf: MtbfEstimator::new(params.mtbf, cfg.prior_weight, cfg.decay),
             bw: BwEstimator::new(params.write_bw, cfg.decay),
@@ -180,6 +215,9 @@ impl Actuator {
             applied: initial,
             ticks_since_retune: 0,
             chain_objects: 0,
+            lossless,
+            codec_ratio: [None; N_CODECS],
+            codec_win_streak: 0,
             retunes: 0,
         }
     }
@@ -247,6 +285,12 @@ impl Actuator {
             write_secs: (s.write_secs - self.last.write_secs).max(0.0),
             merged_total: s.merged_written,
             raw_total: s.raw_compacted,
+            codec_bytes_in: std::array::from_fn(|i| {
+                s.codec_bytes_in[i].saturating_sub(self.last.codec_bytes_in[i])
+            }),
+            codec_bytes_out: std::array::from_fn(|i| {
+                s.codec_bytes_out[i].saturating_sub(self.last.codec_bytes_out[i])
+            }),
         };
         self.last = s;
         self.tick_window(&w)
@@ -278,22 +322,80 @@ impl Actuator {
             .batch_size
             .clamp(self.cfg.batch_bounds.0, self.cfg.batch_bounds.1);
         let want_c = self.compaction_policy(want_f, want_b);
+        let want_codec =
+            if self.cfg.adapt_codec { self.codec_policy(w) } else { self.applied.codec };
 
         let significant = rel_change(self.applied.full_every as f64, want_f as f64)
             >= self.cfg.hysteresis
             || rel_change(self.applied.batch_size as f64, want_b as f64) >= self.cfg.hysteresis
+            || want_codec != self.applied.codec
             // full-free runs steer through the merge factor alone (the
             // FCF knob is pinned at 0), so fan-out moves must fire too
             || (self.full_free()
                 && rel_change(self.applied.compact_every as f64, want_c as f64)
                     >= self.cfg.hysteresis);
         if significant && self.ticks_since_retune >= self.cfg.cooldown_ticks {
-            self.applied = Retune { full_every: want_f, batch_size: want_b, compact_every: want_c };
+            if want_codec != self.applied.codec {
+                self.codec_win_streak = 0;
+            }
+            self.applied = Retune {
+                full_every: want_f,
+                batch_size: want_b,
+                compact_every: want_c,
+                codec: want_codec,
+            };
             self.ticks_since_retune = 0;
             self.retunes += 1;
             return Some(self.applied);
         }
         None
+    }
+
+    /// Bandit-style codec selection over **measured** wire ratios. The two
+    /// arms are the configured lossless codec and `Quant8`; the encoder's
+    /// probe traffic keeps the non-chosen arm's measurements fresh. Each
+    /// window updates a smoothed achieved ratio (out/in) per arm; the
+    /// policy switches only when the other arm's ratio beats the applied
+    /// one by more than `codec_margin` for `codec_streak_ticks`
+    /// consecutive measuring windows — and the shared retune cooldown
+    /// still applies on top. No data (or a within-margin race) resets the
+    /// streak, so the knob can never thrash on noise.
+    fn codec_policy(&mut self, w: &Window) -> PayloadCodec {
+        let cur = self.applied.codec;
+        let candidates = [self.lossless, PayloadCodec::Quant8];
+        for c in candidates {
+            let i = c.idx();
+            if w.codec_bytes_in[i] > 0 {
+                let r = w.codec_bytes_out[i] as f64 / w.codec_bytes_in[i] as f64;
+                self.codec_ratio[i] = Some(match self.codec_ratio[i] {
+                    Some(prev) => 0.5 * prev + 0.5 * r,
+                    None => r,
+                });
+            }
+        }
+        let cur_r = match self.codec_ratio[cur.idx()] {
+            Some(r) => r,
+            None => return cur,
+        };
+        let best = candidates
+            .into_iter()
+            .filter(|c| *c != cur)
+            .filter_map(|c| self.codec_ratio[c.idx()].map(|r| (c, r)))
+            .min_by(|a, b| a.1.total_cmp(&b.1));
+        match best {
+            Some((c, r)) if r < cur_r * (1.0 - self.cfg.codec_margin) => {
+                self.codec_win_streak += 1;
+                if self.codec_win_streak >= self.cfg.codec_streak_ticks {
+                    c
+                } else {
+                    cur
+                }
+            }
+            _ => {
+                self.codec_win_streak = 0;
+                cur
+            }
+        }
     }
 
     /// Merge-factor policy: size compaction so a full recovery replays
@@ -375,6 +477,7 @@ impl ControlState {
              full_every {}\n\
              batch_size {}\n\
              compact_every {}\n\
+             codec {}\n\
              retunes {}\n",
             self.mtbf_acc_secs,
             self.mtbf_acc_failures,
@@ -382,22 +485,30 @@ impl ControlState {
             self.applied.full_every,
             self.applied.batch_size,
             self.applied.compact_every,
+            self.applied.codec.name(),
             self.retunes,
         )
     }
 
     /// Parse the sidecar text; `None` on any damage (the caller falls
     /// back to cold-start priors — a bad sidecar must never wedge a run).
+    /// The `codec` key is optional: sidecars written before the codec
+    /// knob existed parse with `Raw`.
     pub fn parse(text: &str) -> Option<ControlState> {
         let mut lines = text.lines();
         if lines.next()?.trim() != CONTROL_STATE_HEADER {
             return None;
         }
         let mut f64s: std::collections::BTreeMap<&str, f64> = Default::default();
+        let mut codec = PayloadCodec::Raw;
         for line in lines {
             let mut it = line.split_whitespace();
             if let (Some(k), Some(v)) = (it.next(), it.next()) {
-                f64s.insert(k, v.parse().ok()?);
+                if k == "codec" {
+                    codec = PayloadCodec::parse_name(v)?;
+                } else {
+                    f64s.insert(k, v.parse().ok()?);
+                }
             }
         }
         Some(ControlState {
@@ -408,6 +519,7 @@ impl ControlState {
                 full_every: *f64s.get("full_every")? as u64,
                 batch_size: *f64s.get("batch_size")? as usize,
                 compact_every: *f64s.get("compact_every")? as usize,
+                codec,
             },
             retunes: *f64s.get("retunes")? as u64,
         })
@@ -461,8 +573,7 @@ pub fn converge_synthetic(
             failures,
             bytes_written: (true_bw * 0.5) as u64,
             write_secs: 0.5,
-            merged_total: 0,
-            raw_total: 0,
+            ..Default::default()
         });
     }
     a
@@ -499,6 +610,7 @@ mod tests {
             full_every: want_f * 50,
             batch_size: (want_b * 16).min(512),
             compact_every: 0,
+            codec: PayloadCodec::Raw,
         };
         let a = converge_synthetic(p, 1.9, bad, 600);
         let got = a.applied();
@@ -527,7 +639,7 @@ mod tests {
         prop_check("actuation_monotone_mtbf", 8, |rng| {
             let mtbf = 200.0 + rng.next_f64() * 2000.0;
             let bw = 5e8 + rng.next_f64() * 4e9;
-            let initial = Retune { full_every: 64, batch_size: 4, compact_every: 0 };
+            let initial = Retune { full_every: 64, batch_size: 4, compact_every: 0, codec: PayloadCodec::Raw };
             let lo = converge_synthetic(params(mtbf, bw), 1.9, initial, 400).applied();
             let hi = converge_synthetic(params(mtbf * 4.0, bw), 1.9, initial, 400).applied();
             prop_assert!(
@@ -547,7 +659,7 @@ mod tests {
         let mut a = Actuator::new(
             p,
             1.9,
-            Retune { full_every: 40, batch_size: 2, compact_every: 0 },
+            Retune { full_every: 40, batch_size: 2, compact_every: 0, codec: PayloadCodec::Raw },
             ActuatorConfig::default(),
         );
         let (m0, w0) = a.estimates();
@@ -569,7 +681,7 @@ mod tests {
     #[test]
     fn hysteresis_and_cooldown_prevent_thrash() {
         let p = params(3600.0, 2.5e9);
-        let initial = Retune { full_every: 40, batch_size: 2, compact_every: 0 };
+        let initial = Retune { full_every: 40, batch_size: 2, compact_every: 0, codec: PayloadCodec::Raw };
         let mut a = Actuator::new(
             p,
             1.9,
@@ -589,7 +701,7 @@ mod tests {
         let mut a = Actuator::new(
             params(1e6, 1e7), // extreme: wants a huge interval
             1.9,
-            Retune { full_every: 10, batch_size: 1, compact_every: 0 },
+            Retune { full_every: 10, batch_size: 1, compact_every: 0, codec: PayloadCodec::Raw },
             ActuatorConfig {
                 full_every_bounds: (5, 50),
                 batch_bounds: (1, 4),
@@ -613,7 +725,7 @@ mod tests {
         let a = Actuator::new(
             params(3600.0, 2.5e9),
             1.9,
-            Retune { full_every: 100, batch_size: 1, compact_every: 0 },
+            Retune { full_every: 100, batch_size: 1, compact_every: 0, codec: PayloadCodec::Raw },
             ActuatorConfig::default(),
         );
         assert_eq!(a.compaction_policy(8, 1), 0, "short chain: no compactor");
@@ -624,7 +736,7 @@ mod tests {
         let sparse = Actuator::new(
             params(3600.0, 2.5e9),
             1.9,
-            Retune { full_every: 64, batch_size: 1, compact_every: 0 },
+            Retune { full_every: 64, batch_size: 1, compact_every: 0, codec: PayloadCodec::Raw },
             ActuatorConfig { diff_every: 4, ..ActuatorConfig::default() },
         );
         assert_eq!(
@@ -650,7 +762,7 @@ mod tests {
         let mut a = Actuator::new(
             params(900.0, 2.5e9),
             1.9,
-            Retune { full_every: 0, batch_size: 1, compact_every: 0 },
+            Retune { full_every: 0, batch_size: 1, compact_every: 0, codec: PayloadCodec::Raw },
             ActuatorConfig {
                 full_every_bounds: (0, 0),
                 cooldown_ticks: 0,
@@ -676,7 +788,7 @@ mod tests {
     fn control_state_roundtrips_and_warm_starts() {
         use crate::storage::{MemStore, StorageBackend};
         let p = params(900.0, 2.5e9);
-        let initial = Retune { full_every: 40, batch_size: 2, compact_every: 4 };
+        let initial = Retune { full_every: 40, batch_size: 2, compact_every: 4, codec: PayloadCodec::Raw };
         let cfg = ActuatorConfig { cooldown_ticks: 0, ..Default::default() };
         let mut a = Actuator::new(p, 1.9, initial, cfg);
         for _ in 0..30 {
@@ -711,13 +823,137 @@ mod tests {
         assert!((warm.0 - cold.0).abs() > 1.0, "and they differ from the cold prior");
     }
 
+    /// A window where both codec arms were measured: `cur` achieved ratio
+    /// `r_cur`, quant8 achieved `r_q8` (out of 1000 raw bytes each).
+    fn codec_window(r_cur: f64, r_q8: f64, cur: PayloadCodec) -> Window {
+        let mut w = Window { dt_secs: 10.0, ..Default::default() };
+        w.codec_bytes_in[cur.idx()] = 1000;
+        w.codec_bytes_out[cur.idx()] = (1000.0 * r_cur) as u64;
+        w.codec_bytes_in[PayloadCodec::Quant8.idx()] = 1000;
+        w.codec_bytes_out[PayloadCodec::Quant8.idx()] = (1000.0 * r_q8) as u64;
+        w
+    }
+
+    #[test]
+    fn codec_policy_switches_on_sustained_measured_win() {
+        let initial =
+            Retune { full_every: 40, batch_size: 2, compact_every: 0, codec: PayloadCodec::Zstd };
+        let mut a = Actuator::new(
+            params(3600.0, 2.5e9),
+            1.9,
+            initial,
+            ActuatorConfig { cooldown_ticks: 0, ..Default::default() },
+        );
+        // quant8 measures ~3x better than zstd, sustained: the policy
+        // needs codec_streak_ticks (2) winning windows before acting
+        let first = a.tick_window(&codec_window(0.6, 0.2, PayloadCodec::Zstd));
+        assert!(
+            first.is_none() || first.unwrap().codec == PayloadCodec::Zstd,
+            "one winning window must not switch yet: {first:?}"
+        );
+        let mut switched = None;
+        for _ in 0..5 {
+            if let Some(r) = a.tick_window(&codec_window(0.6, 0.2, PayloadCodec::Zstd)) {
+                if r.codec != PayloadCodec::Zstd {
+                    switched = Some(r);
+                    break;
+                }
+            }
+        }
+        let r = switched.expect("a sustained 3x measured win must switch the codec");
+        assert_eq!(r.codec, PayloadCodec::Quant8);
+        assert_eq!(a.applied().codec, PayloadCodec::Quant8);
+    }
+
+    #[test]
+    fn codec_policy_holds_inside_margin_and_without_data() {
+        let initial =
+            Retune { full_every: 40, batch_size: 2, compact_every: 0, codec: PayloadCodec::Zstd };
+        let mut a = Actuator::new(
+            params(3600.0, 2.5e9),
+            1.9,
+            initial,
+            ActuatorConfig { cooldown_ticks: 0, ..Default::default() },
+        );
+        // no codec telemetry at all: the knob never moves
+        for _ in 0..10 {
+            let _ = a.tick_window(&Window { dt_secs: 10.0, ..Default::default() });
+        }
+        assert_eq!(a.applied().codec, PayloadCodec::Zstd);
+        // a win inside the 10% margin: still no switch, ever
+        for _ in 0..10 {
+            let _ = a.tick_window(&codec_window(0.50, 0.47, PayloadCodec::Zstd));
+        }
+        assert_eq!(a.applied().codec, PayloadCodec::Zstd, "within-margin win must not switch");
+        // alternating winner resets the streak: no switch either
+        for i in 0..10 {
+            let (rc, rq) = if i % 2 == 0 { (0.6, 0.2) } else { (0.2, 0.9) };
+            let _ = a.tick_window(&codec_window(rc, rq, PayloadCodec::Zstd));
+        }
+        assert_eq!(a.applied().codec, PayloadCodec::Zstd, "noisy measurements must not thrash");
+    }
+
+    #[test]
+    fn codec_policy_can_switch_back_to_lossless() {
+        let initial = Retune {
+            full_every: 40,
+            batch_size: 2,
+            compact_every: 0,
+            codec: PayloadCodec::Quant8,
+        };
+        let mut a = Actuator::new(
+            params(3600.0, 2.5e9),
+            1.9,
+            initial,
+            ActuatorConfig { cooldown_ticks: 0, ..Default::default() },
+        );
+        // dense / incompressible-ish payloads: zstd (the probe arm)
+        // measures far better than the quantized sparse path
+        let mut back = None;
+        for _ in 0..6 {
+            let mut w = Window { dt_secs: 10.0, ..Default::default() };
+            w.codec_bytes_in[PayloadCodec::Quant8.idx()] = 1000;
+            w.codec_bytes_out[PayloadCodec::Quant8.idx()] = 900;
+            w.codec_bytes_in[PayloadCodec::Zstd.idx()] = 1000;
+            w.codec_bytes_out[PayloadCodec::Zstd.idx()] = 300;
+            if let Some(r) = a.tick_window(&w) {
+                if r.codec == PayloadCodec::Zstd {
+                    back = Some(r);
+                    break;
+                }
+            }
+        }
+        assert!(back.is_some(), "the bandit must be able to return to the lossless arm");
+    }
+
+    #[test]
+    fn control_state_codec_key_is_optional_for_old_sidecars() {
+        let old = "lowdiff-control-state v1\n\
+                   mtbf_acc_secs 100\n\
+                   mtbf_acc_failures 2\n\
+                   bw_est 1000000\n\
+                   full_every 40\n\
+                   batch_size 2\n\
+                   compact_every 4\n\
+                   retunes 3\n";
+        let st = ControlState::parse(old).expect("pre-codec sidecars must still parse");
+        assert_eq!(st.applied.codec, PayloadCodec::Raw, "missing key defaults to raw");
+        // and the new key round-trips
+        let mut st2 = st;
+        st2.applied.codec = PayloadCodec::Quant8;
+        assert_eq!(ControlState::parse(&st2.to_text()), Some(st2));
+        // a damaged codec value fails the parse like any other damage
+        let bad = format!("{}codec nonsense\n", old);
+        assert_eq!(ControlState::parse(&bad), None);
+    }
+
     #[test]
     fn compaction_feedback_flows_into_the_tuner() {
         let p = params(900.0, 2.5e9);
         let mut a = Actuator::new(
             p,
             1.9,
-            Retune { full_every: 20, batch_size: 2, compact_every: 4 },
+            Retune { full_every: 20, batch_size: 2, compact_every: 4, codec: PayloadCodec::Raw },
             ActuatorConfig { cooldown_ticks: 0, ..Default::default() },
         );
         let _ = a.tick_window(&Window {

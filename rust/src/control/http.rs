@@ -39,6 +39,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::format::PayloadCodec;
 use crate::checkpoint::Manifest;
 use crate::cluster::heartbeat::HeartbeatTable;
 use crate::control::actuate::Retune;
@@ -284,6 +285,7 @@ fn post_retune(state: &ObsState, query: &str, stream: &mut TcpStream) {
     let fe = query_get(query, "full-every");
     let bs = query_get(query, "batch-size");
     let ce = query_get(query, "compact-every");
+    let cd = query_get(query, "codec");
     let base = state.control().applied;
     if base.is_none() && (fe.is_none() || bs.is_none() || ce.is_none()) {
         let msg = "no applied retune to inherit from; \
@@ -291,12 +293,26 @@ fn post_retune(state: &ObsState, query: &str, stream: &mut TcpStream) {
         respond_json(stream, "409 Conflict", &error_json(msg));
         return;
     }
-    let base = base.unwrap_or(Retune { full_every: 0, batch_size: 1, compact_every: 0 });
+    let base = base.unwrap_or(Retune {
+        full_every: 0,
+        batch_size: 1,
+        compact_every: 0,
+        codec: PayloadCodec::Raw,
+    });
     let parsed = (|| -> std::result::Result<Retune, String> {
+        let codec = match &cd {
+            // DeltaFull is a full-checkpoint wire form, not a diff codec
+            // a client may select
+            Some(s) => PayloadCodec::parse_name(s)
+                .filter(|c| *c != PayloadCodec::DeltaFull)
+                .ok_or_else(|| format!("unknown codec {s:?} (raw|zstd|quant8)"))?,
+            None => base.codec,
+        };
         Ok(Retune {
             full_every: parse_knob(&fe, base.full_every)?,
             batch_size: parse_knob(&bs, base.batch_size)?,
             compact_every: parse_knob(&ce, base.compact_every)?,
+            codec,
         })
     })();
     match parsed {
@@ -339,7 +355,8 @@ fn retune_json(r: Retune) -> String {
     let mut o = JsonObject::new();
     o.u64("full_every", r.full_every)
         .u64("batch_size", r.batch_size as u64)
-        .u64("compact_every", r.compact_every as u64);
+        .u64("compact_every", r.compact_every as u64)
+        .str("codec", r.codec.name());
     o.finish()
 }
 
@@ -358,6 +375,22 @@ fn stats_json(state: &ObsState) -> String {
         .f64("commit_secs", s.commit_secs)
         .f64("deferred_secs", s.deferred_secs)
         .u64("contended_bytes", s.contended_bytes);
+    {
+        // per-codec achieved bytes/time (chosen + probe encodes) — what
+        // the bandit policy reads, exposed for operators too
+        let mut k = JsonObject::new();
+        for codec in PayloadCodec::ALL {
+            let i = codec.idx();
+            let mut e = JsonObject::new();
+            e.u64("bytes_in", s.codec_bytes_in[i])
+                .u64("bytes_out", s.codec_bytes_out[i])
+                .u64("encode_ns", s.codec_encode_ns[i]);
+            k.raw(codec.name(), &e.finish());
+        }
+        o.raw("codec", &k.finish())
+            .u64("codec_probes", s.codec_probes)
+            .u64("codec_switches", s.codec_switches);
+    }
     let v = state.control();
     let mut c = JsonObject::new();
     c.str("strategy", &v.strategy)
@@ -442,15 +475,36 @@ fn metrics_text(state: &ObsState) -> String {
         c("lowdiff_io_budget_bytes_per_second", "gauge", "live bg I/O budget", fmt(v.io_budget));
         c("lowdiff_retunes_total", "counter", "retunes applied", fi(v.retunes));
         c("lowdiff_detected_failures_total", "counter", "detected deaths", fi(v.detected_failures));
+        c("lowdiff_codec_probes_total", "counter", "bandit probe encodes", fi(s.codec_probes));
+        c("lowdiff_codec_switches_total", "counter", "live codec switches", fi(s.codec_switches));
         if let Some(r) = v.applied {
             c("lowdiff_full_every", "gauge", "applied full interval", fi(r.full_every));
             c("lowdiff_batch_size", "gauge", "applied batch size", fi(r.batch_size as u64));
             c("lowdiff_compact_every", "gauge", "applied merge factor", fi(r.compact_every as u64));
+            out.push_str("# HELP lowdiff_codec_applied applied diff codec (1 = in force)\n");
+            out.push_str("# TYPE lowdiff_codec_applied gauge\n");
+            out.push_str(&format!("lowdiff_codec_applied{{codec=\"{}\"}} 1\n", r.codec.name()));
         }
         if let Some(t) = &state.trace {
             let (recorded, dropped) = t.counts();
             c("lowdiff_trace_events_total", "counter", "trace events recorded", fi(recorded));
             c("lowdiff_trace_dropped_total", "counter", "trace events dropped", fi(dropped));
+        }
+    }
+    // per-codec measured counters, labelled by codec name
+    for (name, help, vals) in [
+        ("lowdiff_codec_bytes_in_total", "raw payload bytes offered", &s.codec_bytes_in),
+        ("lowdiff_codec_bytes_out_total", "achieved wire bytes", &s.codec_bytes_out),
+        ("lowdiff_codec_encode_ns_total", "encode wall nanoseconds", &s.codec_encode_ns),
+    ] {
+        out.push_str(&format!("# HELP {name} {help} per codec\n"));
+        out.push_str(&format!("# TYPE {name} counter\n"));
+        for codec in PayloadCodec::ALL {
+            out.push_str(&format!(
+                "{name}{{codec=\"{}\"}} {}\n",
+                codec.name(),
+                vals[codec.idx()]
+            ));
         }
     }
     if let Some(hb) = &state.heartbeats {
@@ -577,6 +631,8 @@ mod tests {
         bus.record_step(0.1);
         bus.record_step(0.2);
         bus.record_write(1000, 0.01);
+        bus.record_codec(PayloadCodec::Quant8.idx(), 100, 40, 5);
+        bus.record_codec_probe();
         let trace = Arc::new(Tracer::default());
         trace.complete("persist.submit", 0.001, 0, 7, 128, 0);
         let hb = Arc::new(HeartbeatTable::new(2));
@@ -596,7 +652,12 @@ mod tests {
             mtbf_estimate: 900.0,
             bw_estimate: 1e9,
             io_budget: 5e8,
-            applied: Some(Retune { full_every: 64, batch_size: 4, compact_every: 8 }),
+            applied: Some(Retune {
+                full_every: 64,
+                batch_size: 4,
+                compact_every: 8,
+                codec: PayloadCodec::Quant8,
+            }),
             retunes: 3,
             detected_failures: 1,
         });
@@ -609,6 +670,9 @@ mod tests {
         assert!(body.contains("\"steps\":2"), "{body}");
         assert!(body.contains("\"strategy\":\"lowdiff+\""));
         assert!(body.contains("\"full_every\":64"));
+        assert!(body.contains("\"codec\":\"quant8\""), "applied codec in /stats: {body}");
+        assert!(body.contains("\"quant8\":{\"bytes_in\":100"), "per-codec table: {body}");
+        assert!(body.contains("\"codec_probes\":1"), "{body}");
         assert!(body.contains("\"heartbeats\":["));
         assert!(body.contains("\"recorded\":1"));
 
@@ -618,6 +682,10 @@ mod tests {
         assert!(body.contains("# TYPE lowdiff_steps_total counter"));
         assert!(body.contains("lowdiff_bytes_written_total 1000"));
         assert!(body.contains("lowdiff_full_every 64"));
+        assert!(body.contains("lowdiff_codec_applied{codec=\"quant8\"} 1"), "{body}");
+        assert!(body.contains("lowdiff_codec_bytes_out_total{codec=\"quant8\"} 40"), "{body}");
+        assert!(body.contains("lowdiff_codec_bytes_in_total{codec=\"raw\"} 0"));
+        assert!(body.contains("lowdiff_codec_probes_total 1"));
         assert!(body.contains("lowdiff_heartbeat_beats_total{rank=\"0\"} 1"));
 
         let (head, body) = http(addr, "GET", "/trace?n=10");
@@ -654,19 +722,34 @@ mod tests {
         assert!(head.starts_with("HTTP/1.1 200"), "{head} {body}");
         assert_eq!(
             state.take_retune(),
-            Some(Retune { full_every: 32, batch_size: 2, compact_every: 4 })
+            Some(Retune {
+                full_every: 32,
+                batch_size: 2,
+                compact_every: 4,
+                codec: PayloadCodec::Raw,
+            })
         );
 
         // with an applied base, missing knobs inherit
         state.set_control(ControlView {
-            applied: Some(Retune { full_every: 100, batch_size: 8, compact_every: 6 }),
+            applied: Some(Retune {
+                full_every: 100,
+                batch_size: 8,
+                compact_every: 6,
+                codec: PayloadCodec::Zstd,
+            }),
             ..Default::default()
         });
         let (head, _) = http(addr, "POST", "/retune?batch-size=16");
         assert!(head.starts_with("HTTP/1.1 200"));
         assert_eq!(
             state.take_retune(),
-            Some(Retune { full_every: 100, batch_size: 16, compact_every: 6 })
+            Some(Retune {
+                full_every: 100,
+                batch_size: 16,
+                compact_every: 6,
+                codec: PayloadCodec::Zstd,
+            })
         );
 
         let (head, _) = http(addr, "POST", "/retune?batch-size=banana");

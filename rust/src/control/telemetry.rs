@@ -29,7 +29,23 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::checkpoint::format::N_CODECS;
+
 const NANOS_PER_SEC: f64 = 1e9;
+
+/// Per-codec achieved-compression counters (indexed by
+/// [`PayloadCodec::idx`](crate::checkpoint::format::PayloadCodec::idx)).
+/// Probe encodes (the bandit's occasional measurement of the non-chosen
+/// codec) are recorded here too — that is the point: the actuator compares
+/// *measured* ratios, never assumed ones.
+#[derive(Debug, Default)]
+struct CodecCounters {
+    bytes_in: [AtomicU64; N_CODECS],
+    bytes_out: [AtomicU64; N_CODECS],
+    encode_nanos: [AtomicU64; N_CODECS],
+    probes: AtomicU64,
+    switches: AtomicU64,
+}
 
 /// Lock-light runtime counters (see module docs for the producers).
 #[derive(Debug)]
@@ -46,6 +62,7 @@ pub struct TelemetryBus {
     commit_nanos: AtomicU64,
     deferred_nanos: AtomicU64,
     contended_bytes: AtomicU64,
+    codec: CodecCounters,
 }
 
 /// One point-in-time reading of every bus counter. Difference two
@@ -64,6 +81,16 @@ pub struct Snapshot {
     pub commit_secs: f64,
     pub deferred_secs: f64,
     pub contended_bytes: u64,
+    /// per-codec raw input bytes offered to the encoder
+    pub codec_bytes_in: [u64; N_CODECS],
+    /// per-codec achieved wire bytes
+    pub codec_bytes_out: [u64; N_CODECS],
+    /// per-codec encode nanoseconds
+    pub codec_encode_ns: [u64; N_CODECS],
+    /// bandit probe encodes of the non-chosen codec
+    pub codec_probes: u64,
+    /// actuator codec switches applied
+    pub codec_switches: u64,
 }
 
 impl Default for TelemetryBus {
@@ -87,7 +114,27 @@ impl TelemetryBus {
             commit_nanos: AtomicU64::new(0),
             deferred_nanos: AtomicU64::new(0),
             contended_bytes: AtomicU64::new(0),
+            codec: CodecCounters::default(),
         }
+    }
+
+    /// One encode (real or probe) ran codec `idx`
+    /// ([`PayloadCodec::idx`](crate::checkpoint::format::PayloadCodec::idx)):
+    /// `bytes_in` raw payload became `bytes_out` wire bytes in `encode_ns`.
+    pub fn record_codec(&self, idx: usize, bytes_in: u64, bytes_out: u64, encode_ns: u64) {
+        self.codec.bytes_in[idx].fetch_add(bytes_in, Ordering::Relaxed);
+        self.codec.bytes_out[idx].fetch_add(bytes_out, Ordering::Relaxed);
+        self.codec.encode_nanos[idx].fetch_add(encode_ns, Ordering::Relaxed);
+    }
+
+    /// One bandit probe (scratch encode of the non-chosen codec) ran.
+    pub fn record_codec_probe(&self) {
+        self.codec.probes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The actuator switched the live diff codec.
+    pub fn record_codec_switch(&self) {
+        self.codec.switches.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One failure event (hardware or software) was observed.
@@ -153,6 +200,17 @@ impl TelemetryBus {
             commit_secs: nanos_to_secs(self.commit_nanos.load(Ordering::Relaxed)),
             deferred_secs: nanos_to_secs(self.deferred_nanos.load(Ordering::Relaxed)),
             contended_bytes: self.contended_bytes.load(Ordering::Relaxed),
+            codec_bytes_in: std::array::from_fn(|i| {
+                self.codec.bytes_in[i].load(Ordering::Relaxed)
+            }),
+            codec_bytes_out: std::array::from_fn(|i| {
+                self.codec.bytes_out[i].load(Ordering::Relaxed)
+            }),
+            codec_encode_ns: std::array::from_fn(|i| {
+                self.codec.encode_nanos[i].load(Ordering::Relaxed)
+            }),
+            codec_probes: self.codec.probes.load(Ordering::Relaxed),
+            codec_switches: self.codec.switches.load(Ordering::Relaxed),
         }
     }
 }
@@ -291,7 +349,15 @@ mod tests {
         bus.record_commit(0.02);
         bus.record_defer(0.01);
         bus.record_contention(77);
+        bus.record_codec(1, 100, 40, 500);
+        bus.record_codec(2, 100, 20, 300);
+        bus.record_codec_probe();
+        bus.record_codec_switch();
         let s = bus.snapshot();
+        assert_eq!(s.codec_bytes_in[1], 100);
+        assert_eq!(s.codec_bytes_out[2], 20);
+        assert_eq!(s.codec_encode_ns[1], 500);
+        assert_eq!((s.codec_probes, s.codec_switches), (1, 1));
         assert_eq!(s.failures, 1);
         assert_eq!(s.steps, 2);
         assert!((s.stall_secs - 0.75).abs() < 1e-6);

@@ -37,7 +37,7 @@ use std::time::Instant;
 
 use crate::checkpoint::batched::{BatchBuffer, BatchMode};
 use crate::checkpoint::diff::DiffPayload;
-use crate::checkpoint::format::PayloadCodec;
+use crate::checkpoint::format::{PayloadCodec, DEFAULT_ZSTD_LEVEL};
 use crate::checkpoint::manifest::Manifest;
 use crate::control::iosched::{IoGate, IoGateConfig};
 use crate::control::telemetry::TelemetryBus;
@@ -59,12 +59,13 @@ pub enum CkptItem {
     DiffSparse(DiffPayload),
     /// full model-state snapshot
     Full(ModelState),
-    /// §V-C actuation (control plane): apply a new batching size and
-    /// compaction merge factor. Travels through the queue so it lands at
-    /// a deterministic point in the checkpoint stream — after every
-    /// preceding diff, with the pending batch flushed first — and can
-    /// never tear a half-built batch container.
-    Retune { batch_size: usize, compact_every: usize },
+    /// §V-C actuation (control plane): apply a new batching size,
+    /// compaction merge factor, and (optionally) diff codec. Travels
+    /// through the queue so it lands at a deterministic point in the
+    /// checkpoint stream — after every preceding diff, with the pending
+    /// batch flushed first — and can never tear a half-built batch
+    /// container (or switch codecs mid-container).
+    Retune { batch_size: usize, compact_every: usize, codec: Option<PayloadCodec> },
 }
 
 /// Handle to the running checkpointing process.
@@ -81,6 +82,14 @@ pub struct CkptConfig {
     pub batch_size: usize,
     pub batch_mode: BatchMode,
     pub codec: PayloadCodec,
+    /// zstd compression level used wherever the Zstd codec encodes
+    /// (`--zstd-level`; default 1 — the paper's latency-first choice)
+    pub zstd_level: i32,
+    /// encode fulls as XOR-deltas against the previous plain full
+    /// (flat LowDiff only; re-anchors every
+    /// [`DELTA_REBASE_EVERY`](crate::pipeline::encode::DELTA_REBASE_EVERY)
+    /// fulls)
+    pub delta_fulls: bool,
     pub queue_capacity: usize,
     /// run GC after each full checkpoint
     pub gc: bool,
@@ -116,6 +125,8 @@ impl Default for CkptConfig {
             batch_size: 1,
             batch_mode: BatchMode::Concat,
             codec: PayloadCodec::Raw,
+            zstd_level: DEFAULT_ZSTD_LEVEL,
+            delta_fulls: false,
             queue_capacity: 8,
             gc: true,
             n_shards: 1,
@@ -201,8 +212,14 @@ struct WritePath {
 impl WritePath {
     fn new(store: &Arc<dyn StorageBackend>, cfg: &CkptConfig) -> WritePath {
         // one encode buffer per possible in-flight write, plus slack for
-        // the one being filled: steady state checks out recycled buffers
-        let enc = Encoder::new(cfg.model_sig, cfg.codec, cfg.inflight_cap() + 2);
+        // the one being filled: steady state checks out recycled buffers.
+        // Codec probing only runs with the control plane attached — the
+        // scratch encodes exist to feed the actuator's bandit policy.
+        let enc = Encoder::new(cfg.model_sig, cfg.codec, cfg.inflight_cap() + 2)
+            .with_zstd_level(cfg.zstd_level)
+            .with_bus(cfg.telemetry.clone())
+            .with_delta_fulls(cfg.delta_fulls)
+            .with_probing(cfg.uses_control());
         // the control plane: one gate shared by the persist path (guards)
         // and the compactor (shaped reads/writes). Built whenever a
         // compactor will exist — shaping is free when nothing contends.
@@ -302,17 +319,22 @@ fn run_loop(
                     }
                 }
             }
-            CkptItem::Retune { batch_size, compact_every } => {
+            CkptItem::Retune { batch_size, compact_every, codec } => {
                 // §V-C actuation safe point: the pending batch flushes
-                // under the OLD size (its steps were offered under it),
-                // then the new config applies to everything after
+                // under the OLD size and codec (its steps were offered
+                // under them), then the new config applies to everything
+                // after
                 flush_batch(&mut batch, &stats, &mut wp);
                 batch.set_batch_size(batch_size);
                 if let Some(c) = &wp.compactor {
                     c.set_merge_factor(compact_every);
                 }
+                if let Some(codec) = codec {
+                    wp.enc.set_codec(codec);
+                }
                 log::debug!(
-                    "retune applied: batch_size={batch_size} compact_every={compact_every}"
+                    "retune applied: batch_size={batch_size} compact_every={compact_every} codec={:?}",
+                    codec
                 );
             }
             CkptItem::Full(state) => {
@@ -351,6 +373,12 @@ fn run_loop(
         let mut s = stats.lock().unwrap();
         s.pool_hits = wp.enc.pool_hits();
         s.pool_misses = wp.enc.pool_misses();
+        let cs = wp.enc.codec_stats();
+        s.codec_bytes_in = cs.bytes_in;
+        s.codec_bytes_out = cs.bytes_out;
+        s.codec_encode_ns = cs.encode_ns;
+        s.codec_probes = cs.probes;
+        s.codec_switches = cs.switches;
     }
     // the compactor's shutdown pass runs after the barrier, so it sees
     // every durable object and leaves the chain fully compacted
@@ -691,7 +719,7 @@ mod tests {
         // actuation at the epoch boundary: the 3 pending diffs flush as
         // one partial batch under the OLD size, then BS=2 takes effect
         ck.queue
-            .put(3, Arc::new(CkptItem::Retune { batch_size: 2, compact_every: 0 }));
+            .put(3, Arc::new(CkptItem::Retune { batch_size: 2, compact_every: 0, codec: None }));
         for step in 4..=7u64 {
             let g = grad(&mut rng, n);
             adam.apply_sparse(&mut want, &SparseGrad::from_dense(&g));
@@ -714,6 +742,53 @@ mod tests {
         .unwrap();
         assert_eq!(rec, want, "recovery across a retune must stay bit-identical");
         assert_eq!(rstats.recovered_step, 7);
+    }
+
+    #[test]
+    fn mid_run_codec_retune_switches_the_wire_format() {
+        let n = 150;
+        let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+        let ck = Checkpointer::spawn(Arc::clone(&store), cfg(n, 1));
+        let mut rng = Rng::new(23);
+        ck.queue
+            .put(0, Arc::new(CkptItem::Full(ModelState::new(Flat(vec![0.5; n])))));
+        for step in 1..=3u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        ck.queue.put(
+            3,
+            Arc::new(CkptItem::Retune {
+                batch_size: 1,
+                compact_every: 0,
+                codec: Some(PayloadCodec::Quant8),
+            }),
+        );
+        for step in 4..=6u64 {
+            ck.queue.put(step, Arc::new(CkptItem::DiffDense(grad(&mut rng, n))));
+        }
+        let stats = ck.finish();
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.codec_switches, 1);
+        assert!(stats.codec_bytes_out[PayloadCodec::Quant8.idx()] > 0);
+        assert!(stats.codec_bytes_out[PayloadCodec::Raw.idx()] > 0);
+        for step in 1..=6u64 {
+            let bytes = store.get(&Manifest::diff_name(step)).unwrap();
+            let want = if step <= 3 { PayloadCodec::Raw } else { PayloadCodec::Quant8 };
+            assert_eq!(
+                crate::checkpoint::format::peek_codec(&bytes).unwrap(),
+                want,
+                "step {step}"
+            );
+        }
+        // quantized diffs still replay (values within the codec contract)
+        let (_, rstats) = recover(
+            store.as_ref(),
+            model_signature("t", n),
+            &Adam::default(),
+            RecoveryMode::SerialReplay,
+        )
+        .unwrap();
+        assert_eq!(rstats.recovered_step, 6);
     }
 
     #[test]

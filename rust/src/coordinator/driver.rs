@@ -110,6 +110,12 @@ pub struct TrainConfig {
     pub batch_size: usize,
     pub batch_mode: BatchMode,
     pub codec: PayloadCodec,
+    /// zstd compression level for zstd-backed payload codecs
+    /// (`--zstd-level`); higher = smaller objects, more encode CPU
+    pub zstd_level: i32,
+    /// encode periodic fulls as XOR-vs-previous-full deltas (depth ≤ 1,
+    /// re-anchored on a fixed cadence) — flat LowDiff runtime only
+    pub delta_fulls: bool,
     pub queue_capacity: usize,
     pub seed: u64,
     /// failure MTBF in wall-seconds (None = no failures)
@@ -169,6 +175,8 @@ impl Default for TrainConfig {
             batch_size: 2,
             batch_mode: BatchMode::Concat,
             codec: PayloadCodec::Raw,
+            zstd_level: crate::checkpoint::format::DEFAULT_ZSTD_LEVEL,
+            delta_fulls: false,
             queue_capacity: 8,
             seed: 42,
             mtbf_secs: None,
@@ -605,13 +613,15 @@ pub fn train(
                     if let Some(r) = act.tick(bus) {
                         log::info!(
                             "§V-C retune at step {target}: full_every {} -> {}, batch {} -> \
-                             {}, compact {} -> {}",
+                             {}, compact {} -> {}, codec {} -> {}",
                             eff.full_every,
                             r.full_every,
                             eff.batch_size,
                             r.batch_size,
                             eff.compact_every,
-                            r.compact_every
+                            r.compact_every,
+                            eff.codec.name(),
+                            r.codec.name()
                         );
                         apply_retune(r, target, &mut eff, &procs, &mut report);
                     }
@@ -634,6 +644,7 @@ pub fn train(
                             full_every: eff.full_every,
                             batch_size: eff.batch_size,
                             compact_every: mf,
+                            codec: eff.codec,
                         };
                         log::info!("manual compaction retune at step {target}: factor {mf}");
                         apply_retune(r, target, &mut eff, &procs, &mut report);
@@ -793,6 +804,8 @@ pub fn train(
     report.final_full_every = eff.full_every;
     report.final_batch_size = eff.batch_size;
     report.final_compact_every = eff.compact_every;
+    report.zstd_level = eff.zstd_level;
+    report.final_codec = eff.codec.name();
     report.final_io_budget = gate.as_ref().map(|g| g.rate()).unwrap_or(eff.io_budget);
     // final persistence of the run's observability artifacts: the settled
     // trace journal and the estimator state the next incarnation warm-
@@ -831,16 +844,21 @@ fn apply_retune(
     eff.full_every = r.full_every;
     eff.batch_size = r.batch_size;
     eff.compact_every = r.compact_every;
+    let codec_changed = r.codec != eff.codec;
+    eff.codec = r.codec;
     report.retunes += 1;
     match procs {
         Procs::LowDiff { ckpt } => {
             // queue order makes this land after every enqueued diff,
-            // with the pending batch flushed first
+            // with the pending batch flushed first — a codec switch rides
+            // the same safe point, so the pending batch persists under
+            // the OLD wire format before the encoder flips
             ckpt.queue.put(
                 target,
                 Arc::new(CkptItem::Retune {
                     batch_size: r.batch_size,
                     compact_every: r.compact_every,
+                    codec: codec_changed.then_some(r.codec),
                 }),
             );
         }
@@ -879,6 +897,7 @@ fn refresh_obs(
             full_every: eff.full_every,
             batch_size: eff.batch_size,
             compact_every: eff.compact_every,
+            codec: eff.codec,
         }),
         retunes: report.retunes,
         detected_failures: report.detected_failures,
@@ -915,6 +934,7 @@ fn make_actuator(
             full_every: eff.full_every,
             batch_size: eff.batch_size,
             compact_every: eff.compact_every,
+            codec: eff.codec,
         },
         ActuatorConfig {
             // the compaction policy sizes merge factors from the REAL
@@ -985,6 +1005,11 @@ fn spawn_procs(
         batch_size: cfg.batch_size,
         batch_mode: cfg.batch_mode,
         codec: cfg.codec,
+        zstd_level: cfg.zstd_level,
+        // delta-encoded fulls stay flat-LowDiff-only: the cluster runtime
+        // keeps plain per-rank fulls and Gemini's memory tier must stay
+        // directly readable for software-failure recovery
+        delta_fulls: cfg.delta_fulls && cfg.strategy == StrategyKind::LowDiff,
         queue_capacity: cfg.queue_capacity,
         gc: true,
         n_shards: cfg.n_shards,

@@ -5,6 +5,7 @@
 //! recovery, and lost work. [`RunReport`] is the common output of the real
 //! engine ([`crate::coordinator::driver`]) and feeds the experiment tables.
 
+use crate::checkpoint::format::{PayloadCodec, N_CODECS};
 use crate::util::stats::Welford;
 
 /// Aggregate report of one training run.
@@ -99,6 +100,21 @@ pub struct RunReport {
     /// the I/O-gate byte budget in force at run end (equals the configured
     /// `--io-budget` unless interference autoscaling moved it)
     pub final_io_budget: f64,
+    /// the zstd level zstd-backed codecs encoded with (`--zstd-level`)
+    pub zstd_level: i32,
+    /// the payload codec in force at run end — equals the configured codec
+    /// unless the bandit codec policy (or `POST /retune`) switched it
+    pub final_codec: &'static str,
+    /// per-codec achieved compression, indexed by [`PayloadCodec::idx`]:
+    /// raw input bytes offered, wire bytes produced, encode nanoseconds —
+    /// probe (scratch) encodes included, so ratios are measured per arm
+    pub codec_bytes_in: [u64; N_CODECS],
+    pub codec_bytes_out: [u64; N_CODECS],
+    pub codec_encode_ns: [u64; N_CODECS],
+    /// bandit probe encodes of the non-chosen codec
+    pub codec_probes: u64,
+    /// live codec switches applied at retune safe points
+    pub codec_switches: u64,
 }
 
 impl RunReport {
@@ -108,6 +124,7 @@ impl RunReport {
             model: model.to_string(),
             workers,
             ranks: 1,
+            final_codec: PayloadCodec::Raw.name(),
             ..Default::default()
         }
     }
@@ -130,6 +147,13 @@ impl RunReport {
         self.raw_compacted += s.raw_compacted;
         self.spans_compacted += s.spans_compacted;
         self.max_level = self.max_level.max(s.max_level);
+        for i in 0..N_CODECS {
+            self.codec_bytes_in[i] += s.codec_bytes_in[i];
+            self.codec_bytes_out[i] += s.codec_bytes_out[i];
+            self.codec_encode_ns[i] += s.codec_encode_ns[i];
+        }
+        self.codec_probes += s.codec_probes;
+        self.codec_switches += s.codec_switches;
     }
 
     /// Checkpointing overhead relative to pure compute+sync (the paper's
@@ -212,9 +236,25 @@ impl RunReport {
             .u64("final_batch_size", self.final_batch_size as u64)
             .u64("final_compact_every", self.final_compact_every as u64)
             .f64("final_io_budget", self.final_io_budget)
+            .u64("zstd_level", self.zstd_level as u64)
+            .str("final_codec", self.final_codec)
+            .u64("codec_probes", self.codec_probes)
+            .u64("codec_switches", self.codec_switches)
             .f64("compact_secs", self.compact_secs)
             .u64("trace_events", self.trace_events)
             .u64("trace_dropped", self.trace_dropped)
+            .raw("codec", &{
+                let mut codecs = JsonObject::new();
+                for c in PayloadCodec::ALL {
+                    let i = c.idx();
+                    let mut k = JsonObject::new();
+                    k.u64("bytes_in", self.codec_bytes_in[i])
+                        .u64("bytes_out", self.codec_bytes_out[i])
+                        .u64("encode_ns", self.codec_encode_ns[i]);
+                    codecs.raw(c.name(), &k.finish());
+                }
+                codecs.finish()
+            })
             .raw("iter_times", &iters.finish())
             .raw("losses", &losses.finish())
             .raw(
@@ -232,7 +272,7 @@ impl RunReport {
         format!(
             "{:<12} iters={:<5} wall={:>8.2}s compute={:>7.2}s stall={:>6.2}s qblk={:>6.2}s \
              overhead={:>5.1}% full={} diff={} writes={} bytes={} rec={} replay={} lvl={} \
-             loss={}",
+             codec={} loss={}",
             self.strategy,
             self.iters,
             self.wall_secs,
@@ -247,6 +287,7 @@ impl RunReport {
             self.recoveries,
             self.replay_objects,
             self.max_level,
+            self.final_codec,
             self.final_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
         )
     }
@@ -308,6 +349,11 @@ mod tests {
         r.detected_failures = 1;
         r.trace_events = 7;
         r.final_io_budget = 1.5e6;
+        r.zstd_level = 3;
+        r.final_codec = PayloadCodec::Quant8.name();
+        r.codec_bytes_in[PayloadCodec::Quant8.idx()] = 100;
+        r.codec_bytes_out[PayloadCodec::Quant8.idx()] = 40;
+        r.codec_probes = 2;
         r.losses.push((10, 1.5));
         r.iter_times.push(0.25);
         let j = r.to_json();
@@ -317,6 +363,10 @@ mod tests {
         assert!(j.contains("\"detected_failures\":1"), "{j}");
         assert!(j.contains("\"trace_events\":7"), "{j}");
         assert!(j.contains("\"final_io_budget\":1500000"), "{j}");
+        assert!(j.contains("\"zstd_level\":3"), "{j}");
+        assert!(j.contains("\"final_codec\":\"quant8\""), "{j}");
+        assert!(j.contains("\"quant8\":{\"bytes_in\":100,\"bytes_out\":40"), "{j}");
+        assert!(j.contains("\"codec_probes\":2"), "{j}");
         assert!(j.contains("\"losses\":[[10,1.5]]"), "{j}");
         assert!(j.contains("\"final_loss\":1.5"), "{j}");
         assert!(j.contains("\"mean_secs\":0.25"), "{j}");

@@ -23,7 +23,7 @@ use anyhow::{Context, Result};
 
 use crate::checkpoint::diff::DiffPayload;
 use crate::checkpoint::format::CkptKind;
-use crate::checkpoint::full::read_full;
+use crate::checkpoint::full::read_full_resolving;
 use crate::checkpoint::merged::read_merged_sum;
 use crate::checkpoint::read_chain_object;
 use crate::checkpoint::manifest::Manifest;
@@ -220,7 +220,13 @@ pub fn recover(
         .full
         .clone()
         .context("no full checkpoint found — nothing to recover from")?;
-    let mut state = read_full(&store.get(&full_name)?, model_sig)?;
+    // delta-encoded fulls (XOR vs the previous full, depth ≤ 1) resolve
+    // through ONE extra fetch of their plain base; plain fulls pass through
+    let mut state = read_full_resolving(&store.get(&full_name)?, model_sig, |base| {
+        store
+            .get(&Manifest::full_name(base))
+            .with_context(|| format!("delta-full base checkpoint at step {base}"))
+    })?;
     debug_assert_eq!(state.step, base_step);
 
     let mut stats = RecoveryStats {
@@ -704,6 +710,36 @@ mod tests {
         assert_eq!(got, want);
         assert_eq!(stats.recovered_step, 5);
         assert_eq!(stats.damaged_objects, 0);
+    }
+
+    #[test]
+    fn delta_encoded_full_recovers_through_its_base() {
+        use crate::checkpoint::format::DEFAULT_ZSTD_LEVEL;
+        use crate::checkpoint::full::{full_raw_payload, read_full, write_full_delta_into};
+        // chain: plain full @0, diffs 1..=4, plus the newest full @4 stored
+        // as an XOR delta against the @0 base — recovery starts from the
+        // delta full and must resolve its base with one extra fetch
+        let (store, sig, want) = build_gradient_chain(150, 4);
+        let base = read_full(&store.get(&Manifest::full_name(0)).unwrap(), sig).unwrap();
+        let mut base_payload = Vec::new();
+        full_raw_payload(&base, &mut base_payload);
+        let mut delta = Vec::new();
+        write_full_delta_into(&want, sig, 0, &base_payload, DEFAULT_ZSTD_LEVEL, &mut delta)
+            .unwrap();
+        store.put(&Manifest::full_name(4), &delta).unwrap();
+        let (got, stats) =
+            recover(&store, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap();
+        assert_eq!(got, want, "delta full must reconstruct bit-exactly");
+        assert_eq!(stats.recovered_step, 4);
+        assert_eq!(stats.n_diff_steps, 0, "the full at 4 covers the chain");
+        // losing the base makes the delta full unreadable — and the error
+        // says which base step recovery needed
+        store.delete(&Manifest::full_name(0)).unwrap();
+        let err = format!(
+            "{:#}",
+            recover(&store, sig, &Adam::default(), RecoveryMode::SerialReplay).unwrap_err()
+        );
+        assert!(err.contains("base"), "{err}");
     }
 
     #[test]

@@ -673,6 +673,7 @@ pub fn exp_control() -> Table {
         full_every: want_f * 50,
         batch_size: (want_b * 16).min(512),
         compact_every: 0,
+        codec: crate::checkpoint::format::PayloadCodec::Raw,
     };
     let mut t = Table::new(
         "Control plane — closed-loop §V-C tuning vs Eq. (10) closed form (GPT2-S)",
@@ -705,6 +706,106 @@ pub fn exp_control() -> Table {
     t
 }
 
+/// Codec diversity (docs/FORMAT.md): measured per-codec wire bytes and
+/// encode cost on the two real write-path workloads — sparse top-k
+/// gradient diffs (every codec) and periodic fulls on a slowly-drifting
+/// state (plain zstd vs XOR delta-full). The same achieved-ratio signal
+/// the §V-C bandit codec policy steers on, printed as a table.
+pub fn exp_codec() -> Table {
+    use crate::checkpoint::diff::{write_diff_into_level, DiffPayload};
+    use crate::checkpoint::format::{model_signature, PayloadCodec, DEFAULT_ZSTD_LEVEL};
+    use crate::checkpoint::full::{full_raw_payload, write_full_delta_into, write_full_into_level};
+    use crate::compress::topk_mask;
+    use crate::optim::ModelState;
+    use crate::sparse::SparseGrad;
+    use crate::tensor::Flat;
+    use crate::util::rng::Rng;
+    use std::time::Instant;
+
+    let n: usize = 16 * 1024;
+    let steps = 8u64;
+    let sig = model_signature("codec-exp", n);
+    let mut rng = Rng::new(77);
+    let grads: Vec<(u64, DiffPayload)> = (1..=steps)
+        .map(|s| {
+            let mut g = vec![0f32; n];
+            rng.fill_normal_f32(&mut g);
+            let sparse = SparseGrad::from_dense(&topk_mask(&Flat(g), n / 100 + 1));
+            (s, DiffPayload::Gradient(sparse))
+        })
+        .collect();
+    let raw_diff: u64 = grads.iter().map(|(_, p)| p.sparse().encoded_size() as u64).sum();
+
+    let mut t = Table::new(
+        "Codec diversity — measured wire bytes per write-path workload",
+        &["codec", "workload", "raw bytes", "wire bytes", "ratio", "ns/elem", "lossless"],
+    );
+    let mut out = Vec::new();
+    for codec in [PayloadCodec::Raw, PayloadCodec::Zstd, PayloadCodec::Quant8] {
+        let mut wire = 0u64;
+        let t0 = Instant::now();
+        for (s, p) in &grads {
+            out.clear();
+            wire += write_diff_into_level(p, sig, *s, codec, DEFAULT_ZSTD_LEVEL, &mut out)
+                .expect("codec-exp diff encode") as u64;
+        }
+        let ns = t0.elapsed().as_nanos() as f64;
+        let elems: u64 = grads.iter().map(|(_, p)| p.sparse().nnz() as u64).sum();
+        t.row(vec![
+            codec.name().into(),
+            "topk diffs".into(),
+            raw_diff.to_string(),
+            wire.to_string(),
+            format!("{:.3}", wire as f64 / raw_diff as f64),
+            format!("{:.0}", ns / elems as f64),
+            if codec.is_lossy() { "no (values)".into() } else { "yes".into() },
+        ]);
+    }
+
+    // periodic fulls on a slowly-drifting state: the delta-full regime
+    let mut params = vec![0f32; n];
+    rng.fill_normal_f32(&mut params);
+    let mut states: Vec<ModelState> = Vec::new();
+    let mut st = ModelState::new(Flat(params));
+    for s in 0..steps {
+        st.step = s;
+        states.push(st.clone());
+        for _ in 0..n / 200 + 1 {
+            let i = rng.range(0, n);
+            st.params.0[i] += rng.normal() as f32 * 1e-3;
+        }
+    }
+    let raw_full = (12 * n) as u64 * steps;
+    for delta in [false, true] {
+        let mut wire = 0u64;
+        let mut base = Vec::new();
+        full_raw_payload(&states[0], &mut base);
+        let t0 = Instant::now();
+        for (i, s) in states.iter().enumerate() {
+            out.clear();
+            let bytes = if delta && i > 0 {
+                write_full_delta_into(s, sig, states[0].step, &base, DEFAULT_ZSTD_LEVEL, &mut out)
+                    .expect("codec-exp delta full")
+            } else {
+                write_full_into_level(s, sig, PayloadCodec::Zstd, DEFAULT_ZSTD_LEVEL, &mut out)
+                    .expect("codec-exp plain full")
+            };
+            wire += bytes as u64;
+        }
+        let ns = t0.elapsed().as_nanos() as f64;
+        t.row(vec![
+            if delta { PayloadCodec::DeltaFull.name().into() } else { "zstd".to_string() },
+            "periodic fulls".into(),
+            raw_full.to_string(),
+            wire.to_string(),
+            format!("{:.3}", wire as f64 / raw_full as f64),
+            format!("{:.0}", ns / (3 * n) as f64 / steps as f64),
+            "yes".into(),
+        ]);
+    }
+    t
+}
+
 /// All simulated experiments, in paper order.
 pub fn all_simulated() -> Vec<Table> {
     vec![fig1(), fig4(), table1(), exp1(), exp2(), exp3(), exp4(), exp7(), exp8(), exp9(), exp10()]
@@ -727,6 +828,7 @@ pub fn by_name(name: &str) -> Option<Table> {
         "cluster" => exp_cluster(),
         "compaction" => exp_compaction(),
         "control" => exp_control(),
+        "codec" => exp_codec(),
         _ => return None,
     })
 }
@@ -741,6 +843,17 @@ mod tests {
             let s = t.render();
             assert!(s.lines().count() >= 4, "{s}");
         }
+    }
+
+    #[test]
+    fn codec_table_measures_every_arm() {
+        let t = exp_codec();
+        assert_eq!(t.rows.len(), 5, "3 diff codecs + 2 full modes");
+        let s = t.render();
+        assert!(s.contains("quant8") && s.contains("delta-full"), "{s}");
+        // quant8 must beat raw on the top-k workload it was built for
+        let wire: Vec<u64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(wire[2] < wire[0], "quant8 {} !< raw {}", wire[2], wire[0]);
     }
 
     #[test]

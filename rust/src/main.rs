@@ -28,6 +28,14 @@ commands:
            [--iters N] [--workers W] [--full-every F] [--batch-size B]
            [--diff-every D] [--ckpt-dir DIR] [--mtbf SECS] [--zstd]
            [--batch-mode sum|concat] [--seed S]
+           [--codec raw|zstd|quant8]  differential payload codec (quant8 =
+                          per-block u8-quantized values, lossless indices;
+                          overrides --zstd; docs/FORMAT.md)
+           [--zstd-level L]  zstd compression level for zstd-backed
+                          codecs (default 1; higher = smaller, slower)
+           [--delta-fulls]  encode periodic fulls as XOR deltas vs the
+                          previous full (depth <= 1, re-anchored every
+                          4th full; flat lowdiff runtime only)
                           --full-every 0 = full-free mode (lowdiff): the
                           anchor full is the only one ever written; the
                           hierarchical compactor bounds recovery replay
@@ -59,7 +67,7 @@ commands:
            [--report-json] print the final RunReport as JSON
   recover  --model <name> --ckpt-dir DIR [--parallel]
            (reads sharded, single-object and compacted layouts transparently)
-  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|compaction|control|all>
+  exp      <fig1|fig4|table1|exp1|exp2|exp3|exp4|exp7|exp8|exp9|exp10|sharded|cluster|compaction|control|codec|all>
   info     --model <name>
 ";
 
@@ -75,7 +83,16 @@ fn main() {
 fn run(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(
         raw,
-        &["zstd", "parallel", "verbose", "fsync", "adaptive", "trace", "report-json"],
+        &[
+            "zstd",
+            "parallel",
+            "verbose",
+            "fsync",
+            "adaptive",
+            "trace",
+            "report-json",
+            "delta-fulls",
+        ],
     )?;
     match args.subcommand(USAGE)? {
         "train" => cmd_train(&args),
@@ -104,7 +121,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             "sum" => BatchMode::Sum,
             _ => BatchMode::Concat,
         },
-        codec: if args.flag("zstd") { PayloadCodec::Zstd } else { PayloadCodec::Raw },
+        codec: match args.get("codec") {
+            Some(s) => PayloadCodec::parse_name(s)
+                .filter(|c| *c != PayloadCodec::DeltaFull)
+                .with_context(|| format!("bad --codec `{s}` (raw|zstd|quant8)"))?,
+            None if args.flag("zstd") => PayloadCodec::Zstd,
+            None => PayloadCodec::Raw,
+        },
+        zstd_level: args.parse_or("zstd-level", lowdiff::checkpoint::format::DEFAULT_ZSTD_LEVEL)?,
+        delta_fulls: args.flag("delta-fulls"),
         seed: args.parse_or("seed", 42u64)?,
         mtbf_secs: args.get("mtbf").map(|s| s.parse()).transpose()?,
         eval_every: args.parse_or("eval-every", 10u64)?,

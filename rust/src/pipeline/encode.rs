@@ -10,18 +10,49 @@
 //! back an [`Encoded`] object carrying the manifest name and the
 //! copy-accounting the stats layer records. The buffer recycles into the
 //! pool when the persist stage drops its last reference.
+//!
+//! # Adaptive codec selection (codec diversity)
+//!
+//! The encoder separates the **configured lossless codec** (Raw/Zstd, from
+//! `CkptConfig`) from the **live diff codec**, which the control plane may
+//! move to [`PayloadCodec::Quant8`] via [`set_codec`](Encoder::set_codec).
+//! Every chain encode (diff or batch flush) is measured — raw bytes in,
+//! wire bytes out, encode nanoseconds — into per-codec counters (and the
+//! [`TelemetryBus`] when attached). With probing enabled, every
+//! [`PROBE_EVERY`]-th chain encode *also* runs the non-chosen codec into a
+//! reusable scratch buffer and records the result as a probe, so the
+//! actuator's bandit policy always compares **measured** ratios for both
+//! arms, never assumptions. Fulls can independently delta-encode against
+//! the last plain full ([`with_delta_fulls`](Encoder::with_delta_fulls)):
+//! the base's raw payload is held in a pooled buffer and re-anchored every
+//! [`DELTA_REBASE_EVERY`] fulls, so delta chains are depth ≤ 1 by
+//! construction.
+
+use std::cell::{Cell, RefCell};
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::checkpoint::batched::BatchBuffer;
-use crate::checkpoint::diff::{write_diff_into, DiffPayload};
-use crate::checkpoint::format::PayloadCodec;
-use crate::checkpoint::full::write_full_into;
+use crate::checkpoint::diff::{write_diff_into_level, DiffPayload};
+use crate::checkpoint::format::{PayloadCodec, DEFAULT_ZSTD_LEVEL, N_CODECS};
+use crate::checkpoint::full::{full_raw_payload, write_full_delta_into, write_full_into_level};
 use crate::checkpoint::manifest::Manifest;
+use crate::control::telemetry::TelemetryBus;
 use crate::optim::ModelState;
 use crate::sparse::SparseGrad;
 use crate::tensor::Flat;
 use crate::util::bufpool::{BufPool, PooledBuf};
+
+/// Every Nth chain encode also scratch-encodes the non-chosen codec so the
+/// bandit keeps fresh measurements of both arms (~6% encode overhead).
+pub const PROBE_EVERY: u64 = 16;
+
+/// A delta-full chain re-anchors (writes a plain full) after this many
+/// consecutive delta fulls, bounding recovery to base + 1 decode and GC
+/// retention to one extra object.
+pub const DELTA_REBASE_EVERY: u32 = 4;
 
 /// One encoded checkpoint object, ready for the persist stage.
 pub struct Encoded {
@@ -33,18 +64,108 @@ pub struct Encoded {
     pub copied: u64,
 }
 
+/// Per-codec measurements accumulated by one [`Encoder`] (drained into
+/// [`CkptStats`](crate::pipeline::CkptStats) at shutdown; mirrored live
+/// into the [`TelemetryBus`] when one is attached).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EncoderCodecStats {
+    pub bytes_in: [u64; N_CODECS],
+    pub bytes_out: [u64; N_CODECS],
+    pub encode_ns: [u64; N_CODECS],
+    pub probes: u64,
+    pub switches: u64,
+}
+
+/// The base full a delta-full chain encodes against.
+struct PrevFull {
+    step: u64,
+    /// the base's *raw payload* (sections concatenated), pool-recycled
+    payload: PooledBuf,
+    deltas_since: u32,
+}
+
 /// The snapshot/offload + encode stages.
 pub struct Encoder {
     pool: BufPool,
     model_sig: u64,
+    /// configured lossless codec (Raw/Zstd) — fulls and the non-quantized
+    /// bandit arm use this
     codec: PayloadCodec,
+    /// live diff/batch codec (the control plane's choice)
+    diff_codec: Cell<PayloadCodec>,
+    zstd_level: i32,
+    delta_fulls: bool,
+    probing: bool,
+    bus: Option<Arc<TelemetryBus>>,
+    stats: RefCell<EncoderCodecStats>,
+    chain_encodes: Cell<u64>,
+    probe_scratch: RefCell<Vec<u8>>,
+    prev_full: RefCell<Option<PrevFull>>,
 }
 
 impl Encoder {
     /// `pool_cap` buffers are retained for recycling; size it to the
     /// persist stage's in-flight cap plus slack for the one being filled.
     pub fn new(model_sig: u64, codec: PayloadCodec, pool_cap: usize) -> Encoder {
-        Encoder { pool: BufPool::new(pool_cap), model_sig, codec }
+        Encoder {
+            pool: BufPool::new(pool_cap),
+            model_sig,
+            codec,
+            diff_codec: Cell::new(codec),
+            zstd_level: DEFAULT_ZSTD_LEVEL,
+            delta_fulls: false,
+            probing: false,
+            bus: None,
+            stats: RefCell::new(EncoderCodecStats::default()),
+            chain_encodes: Cell::new(0),
+            probe_scratch: RefCell::new(Vec::new()),
+            prev_full: RefCell::new(None),
+        }
+    }
+
+    /// Set the zstd compression level (`--zstd-level`; default 1).
+    pub fn with_zstd_level(mut self, level: i32) -> Encoder {
+        self.zstd_level = level;
+        self
+    }
+
+    /// Attach the telemetry bus: per-codec measurements mirror into it
+    /// live, which is what the actuator's codec policy reads.
+    pub fn with_bus(mut self, bus: Option<Arc<TelemetryBus>>) -> Encoder {
+        self.bus = bus;
+        self
+    }
+
+    /// Enable delta-vs-previous encoding for fulls (flat LowDiff only; the
+    /// cluster and the compactor keep plain fulls).
+    pub fn with_delta_fulls(mut self, on: bool) -> Encoder {
+        self.delta_fulls = on;
+        self
+    }
+
+    /// Enable bandit probing: every [`PROBE_EVERY`]-th chain encode also
+    /// measures the non-chosen codec into a scratch buffer.
+    pub fn with_probing(mut self, on: bool) -> Encoder {
+        self.probing = on;
+        self
+    }
+
+    /// Live-switch the diff/batch codec (§V-C actuation; called at the
+    /// checkpointer's Retune safe point, so it never tears a container).
+    pub fn set_codec(&self, codec: PayloadCodec) {
+        if codec == self.diff_codec.get() {
+            return;
+        }
+        self.diff_codec.set(codec);
+        self.stats.borrow_mut().switches += 1;
+        if let Some(bus) = &self.bus {
+            bus.record_codec_switch();
+        }
+    }
+
+    /// The live diff/batch codec.
+    pub fn diff_codec(&self) -> PayloadCodec {
+        self.diff_codec.get()
     }
 
     /// Offload/compact stage: dense masked gradient → k-sparse wire form
@@ -53,17 +174,103 @@ impl Encoder {
         SparseGrad::from_dense(dense)
     }
 
+    fn record(&self, codec: PayloadCodec, bytes_in: u64, bytes_out: u64, ns: u64, probe: bool) {
+        {
+            let mut s = self.stats.borrow_mut();
+            let i = codec.idx();
+            s.bytes_in[i] += bytes_in;
+            s.bytes_out[i] += bytes_out;
+            s.encode_ns[i] += ns;
+            if probe {
+                s.probes += 1;
+            }
+        }
+        if let Some(bus) = &self.bus {
+            bus.record_codec(codec.idx(), bytes_in, bytes_out, ns);
+            if probe {
+                bus.record_codec_probe();
+            }
+        }
+    }
+
+    /// The bandit's other arm: quantize when running lossless, and vice
+    /// versa.
+    fn alternate(&self) -> PayloadCodec {
+        if self.diff_codec.get() == PayloadCodec::Quant8 {
+            self.codec
+        } else {
+            PayloadCodec::Quant8
+        }
+    }
+
+    /// True when this chain encode should also measure the other codec.
+    fn probe_due(&self) -> bool {
+        let n = self.chain_encodes.get() + 1;
+        self.chain_encodes.set(n);
+        self.probing && n % PROBE_EVERY == 0
+    }
+
     /// Encode one differential checkpoint for `step`.
     pub fn encode_diff(&self, step: u64, payload: &DiffPayload) -> Result<Encoded> {
+        let raw = payload.sparse().encoded_size() as u64;
+        if self.probe_due() {
+            let alt = self.alternate();
+            let mut scratch = self.probe_scratch.borrow_mut();
+            scratch.clear();
+            let t0 = Instant::now();
+            let n =
+                write_diff_into_level(payload, self.model_sig, step, alt, self.zstd_level, &mut scratch)?;
+            self.record(alt, raw, n as u64, t0.elapsed().as_nanos() as u64, true);
+        }
+        let codec = self.diff_codec.get();
         let mut buf = self.pool.checkout();
-        let copied = write_diff_into(payload, self.model_sig, step, self.codec, &mut buf)?;
+        let t0 = Instant::now();
+        let copied =
+            write_diff_into_level(payload, self.model_sig, step, codec, self.zstd_level, &mut buf)?;
+        self.record(codec, raw, copied as u64, t0.elapsed().as_nanos() as u64, false);
         Ok(Encoded { name: Manifest::diff_name(step), buf, copied: copied as u64 })
     }
 
-    /// Encode a full model-state checkpoint (named by `state.step`).
+    /// Encode a full model-state checkpoint (named by `state.step`). With
+    /// delta fulls enabled, non-anchor fulls XOR against the last plain
+    /// full's raw payload (held pooled) and re-anchor every
+    /// [`DELTA_REBASE_EVERY`] fulls.
     pub fn encode_full(&self, state: &ModelState) -> Result<Encoded> {
+        let raw = 12 * state.params.len() as u64;
         let mut buf = self.pool.checkout();
-        let copied = write_full_into(state, self.model_sig, self.codec, &mut buf)?;
+        let mut prev = self.prev_full.borrow_mut();
+        let t0 = Instant::now();
+        let (codec, copied) = match prev.as_mut() {
+            Some(p) if self.delta_fulls && p.deltas_since < DELTA_REBASE_EVERY => {
+                let n = write_full_delta_into(
+                    state,
+                    self.model_sig,
+                    p.step,
+                    &p.payload,
+                    self.zstd_level,
+                    &mut buf,
+                )?;
+                p.deltas_since += 1;
+                (PayloadCodec::DeltaFull, n)
+            }
+            _ => {
+                let n = write_full_into_level(
+                    state,
+                    self.model_sig,
+                    self.codec,
+                    self.zstd_level,
+                    &mut buf,
+                )?;
+                if self.delta_fulls {
+                    // re-anchor: this plain full becomes the delta base
+                    let mut base = self.pool.checkout();
+                    full_raw_payload(state, &mut base);
+                    *prev = Some(PrevFull { step: state.step, payload: base, deltas_since: 0 });
+                }
+                (self.codec, n)
+            }
+        };
+        self.record(codec, raw, copied as u64, t0.elapsed().as_nanos() as u64, false);
         Ok(Encoded { name: Manifest::full_name(state.step), buf, copied: copied as u64 })
     }
 
@@ -75,15 +282,37 @@ impl Encoder {
         if batch.is_empty() {
             return Ok(None);
         }
+        let raw = batch.buffered_bytes() as u64;
+        if self.probe_due() {
+            let alt = self.alternate();
+            let mut scratch = self.probe_scratch.borrow_mut();
+            scratch.clear();
+            let t0 = Instant::now();
+            if let Some((_, _, n)) =
+                batch.encode_pending_into_level(self.model_sig, alt, self.zstd_level, &mut scratch)?
+            {
+                self.record(alt, raw, n as u64, t0.elapsed().as_nanos() as u64, true);
+            }
+        }
+        let codec = self.diff_codec.get();
         let mut buf = self.pool.checkout();
-        match batch.flush_into(self.model_sig, self.codec, &mut buf)? {
-            Some((lo, hi, copied)) => Ok(Some(Encoded {
-                name: Manifest::batch_name(lo, hi),
-                buf,
-                copied: copied as u64 + batch.take_copied(),
-            })),
+        let t0 = Instant::now();
+        match batch.flush_into_level(self.model_sig, codec, self.zstd_level, &mut buf)? {
+            Some((lo, hi, copied)) => {
+                self.record(codec, raw, copied as u64, t0.elapsed().as_nanos() as u64, false);
+                Ok(Some(Encoded {
+                    name: Manifest::batch_name(lo, hi),
+                    buf,
+                    copied: copied as u64 + batch.take_copied(),
+                }))
+            }
             None => Ok(None),
         }
+    }
+
+    /// Per-codec measurements so far (cloned; the encoder keeps counting).
+    pub fn codec_stats(&self) -> EncoderCodecStats {
+        self.stats.borrow().clone()
     }
 
     pub fn pool_hits(&self) -> u64 {
@@ -100,7 +329,7 @@ mod tests {
     use super::*;
     use crate::checkpoint::batched::BatchMode;
     use crate::checkpoint::diff::write_diff;
-    use crate::checkpoint::full::write_full;
+    use crate::checkpoint::full::{read_full_resolving, write_full};
 
     fn sparse() -> SparseGrad {
         SparseGrad::from_dense(&Flat(vec![0.0, 1.0, 0.0, -2.0, 3.0]))
@@ -140,5 +369,96 @@ mod tests {
         let obj2 = enc.encode_diff(3, &DiffPayload::Gradient(sparse())).unwrap();
         drop(obj2);
         assert!(enc.pool_hits() >= 1, "second checkout must reuse the recycled buffer");
+    }
+
+    #[test]
+    fn set_codec_switches_live_and_counts() {
+        let enc = Encoder::new(7, PayloadCodec::Zstd, 2);
+        assert_eq!(enc.diff_codec(), PayloadCodec::Zstd);
+        let payload = DiffPayload::Gradient(sparse());
+        let zstd_obj = enc.encode_diff(1, &payload).unwrap();
+        enc.set_codec(PayloadCodec::Quant8);
+        enc.set_codec(PayloadCodec::Quant8); // no-op, not a switch
+        let q_obj = enc.encode_diff(2, &payload).unwrap();
+        assert_eq!(
+            &q_obj.buf[..],
+            &write_diff(&payload, 7, 2, PayloadCodec::Quant8).unwrap()[..]
+        );
+        let s = enc.codec_stats();
+        assert_eq!(s.switches, 1);
+        assert_eq!(s.bytes_out[PayloadCodec::Zstd.idx()], zstd_obj.buf.len() as u64);
+        assert_eq!(s.bytes_out[PayloadCodec::Quant8.idx()], q_obj.buf.len() as u64);
+        assert!(s.bytes_in[PayloadCodec::Zstd.idx()] > 0);
+    }
+
+    #[test]
+    fn probing_measures_the_other_arm_every_nth_encode() {
+        let enc = Encoder::new(7, PayloadCodec::Zstd, 2).with_probing(true);
+        let payload = DiffPayload::Gradient(sparse());
+        for step in 1..=(2 * PROBE_EVERY) {
+            let _ = enc.encode_diff(step, &payload).unwrap();
+        }
+        let s = enc.codec_stats();
+        assert_eq!(s.probes, 2, "one probe per PROBE_EVERY encodes");
+        assert!(
+            s.bytes_out[PayloadCodec::Quant8.idx()] > 0,
+            "the non-chosen codec was measured"
+        );
+        assert_eq!(s.switches, 0, "probing alone never switches");
+    }
+
+    #[test]
+    fn delta_fulls_chain_and_rebase() {
+        let sig = 7;
+        let enc = Encoder::new(sig, PayloadCodec::Zstd, 4).with_delta_fulls(true);
+        let mut state = ModelState::new(Flat(vec![0.5; 64]));
+        let mut objs = Vec::new();
+        for step in 1..=(DELTA_REBASE_EVERY as u64 + 2) {
+            state.step = step;
+            state.params.0[(step as usize) % 64] += 0.125;
+            let obj = enc.encode_full(&state).unwrap();
+            objs.push((step, obj.buf.detach(), state.clone()));
+        }
+        let stats = enc.codec_stats();
+        // full 1 plain (anchor), fulls 2..=5 delta, full 6 plain (rebase)
+        assert!(stats.bytes_out[PayloadCodec::DeltaFull.idx()] > 0);
+        let mut n_delta = 0;
+        for (step, bytes, want) in &objs {
+            let is_delta =
+                crate::checkpoint::format::peek_codec(bytes).unwrap() == PayloadCodec::DeltaFull;
+            if is_delta {
+                n_delta += 1;
+            } else {
+                assert!(*step == 1 || *step == DELTA_REBASE_EVERY as u64 + 2, "step {step}");
+            }
+            // every full (plain or delta) recovers bit-exactly
+            let back = read_full_resolving(bytes, sig, |base_step| {
+                let (_, base_bytes, _) = objs
+                    .iter()
+                    .find(|(s, _, _)| *s == base_step)
+                    .expect("base full was written");
+                Ok(base_bytes.clone())
+            })
+            .unwrap();
+            assert_eq!(&back, want, "step {step}");
+        }
+        assert_eq!(n_delta, DELTA_REBASE_EVERY as usize);
+    }
+
+    #[test]
+    fn stats_merge_carries_codec_counters() {
+        use crate::pipeline::CkptStats;
+        let mut a = CkptStats::default();
+        let b = CkptStats {
+            codec_bytes_in: [0, 0, 10, 0],
+            codec_bytes_out: [0, 0, 4, 0],
+            codec_probes: 3,
+            codec_switches: 1,
+            ..CkptStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.codec_bytes_in[2], 10);
+        assert_eq!(a.codec_bytes_out[2], 4);
+        assert_eq!((a.codec_probes, a.codec_switches), (3, 1));
     }
 }

@@ -87,6 +87,18 @@ pub struct CkptStats {
     pub spans_compacted: u64,
     /// deepest hierarchical span level this process wrote (0 = none)
     pub max_level: u16,
+    /// per-codec raw payload bytes offered to the encoder, indexed by
+    /// [`PayloadCodec::idx`](crate::checkpoint::format::PayloadCodec::idx)
+    /// (probe encodes included — measured, not assumed, compressibility)
+    pub codec_bytes_in: [u64; crate::checkpoint::format::N_CODECS],
+    /// per-codec achieved wire bytes
+    pub codec_bytes_out: [u64; crate::checkpoint::format::N_CODECS],
+    /// per-codec encode wall nanoseconds
+    pub codec_encode_ns: [u64; crate::checkpoint::format::N_CODECS],
+    /// bandit probe encodes (scratch encodes of the non-chosen codec)
+    pub codec_probes: u64,
+    /// live codec switches applied at the encoder
+    pub codec_switches: u64,
 }
 
 impl CkptStats {
@@ -113,6 +125,13 @@ impl CkptStats {
         self.raw_compacted += o.raw_compacted;
         self.spans_compacted += o.spans_compacted;
         self.max_level = self.max_level.max(o.max_level);
+        for i in 0..crate::checkpoint::format::N_CODECS {
+            self.codec_bytes_in[i] += o.codec_bytes_in[i];
+            self.codec_bytes_out[i] += o.codec_bytes_out[i];
+            self.codec_encode_ns[i] += o.codec_encode_ns[i];
+        }
+        self.codec_probes += o.codec_probes;
+        self.codec_switches += o.codec_switches;
     }
 }
 

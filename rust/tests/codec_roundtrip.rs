@@ -1,0 +1,307 @@
+//! Tier-1 codec contract suite (artifact-free; CI runs it via
+//! `--test codec_roundtrip`).
+//!
+//! Every payload codec must (a) round-trip through [`ContainerView`] —
+//! bit-identically for the lossless codecs, index-exact with bounded
+//! value error for Quant8 — (b) reject corrupt and truncated containers,
+//! and (c) confine Quant8's quantization error to encode time: the stored
+//! bytes decode to the same dequantized payload on every read, so replay
+//! error never compounds across recoveries. Wire layout in docs/FORMAT.md.
+
+use std::sync::Arc;
+
+use lowdiff::checkpoint::diff::{read_diff, write_diff, DiffPayload};
+use lowdiff::checkpoint::format::{
+    model_signature, peek_codec, ContainerView, PayloadCodec, DEFAULT_ZSTD_LEVEL,
+};
+use lowdiff::checkpoint::full::{
+    full_raw_payload, read_full, read_full_resolving, write_full, write_full_delta_into,
+};
+use lowdiff::checkpoint::manifest::Manifest;
+use lowdiff::compress::{topk_mask, QBLOCK};
+use lowdiff::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
+use lowdiff::coordinator::recovery::{recover, RecoveryMode};
+use lowdiff::optim::{Adam, ModelState};
+use lowdiff::prop_assert;
+use lowdiff::sparse::SparseGrad;
+use lowdiff::storage::{MemStore, StorageBackend};
+use lowdiff::tensor::Flat;
+use lowdiff::util::prop::{default_cases, prop_check};
+use lowdiff::util::rng::Rng;
+
+/// Random strided sparse gradient with normal float values.
+fn arb_sparse(rng: &mut Rng, max_dense: usize) -> SparseGrad {
+    let dense_len = rng.range(8, max_dense) as u32;
+    let stride = rng.range(1, 5) as u32;
+    let mut indices = Vec::new();
+    let mut i = rng.range(0, 3) as u32;
+    while i < dense_len {
+        indices.push(i);
+        i += stride;
+    }
+    let mut values = vec![0f32; indices.len()];
+    rng.fill_normal_f32(&mut values);
+    for v in values.iter_mut() {
+        if *v == 0.0 {
+            *v = 1.0;
+        }
+    }
+    SparseGrad { dense_len, indices, values }
+}
+
+/// Like [`arb_sparse`] but with values the Quant8 transform reproduces
+/// exactly: integers in [-127, 127] with each block's absmax pinned to
+/// 127, so the per-block scale is exactly 1.0 and round-trip is lossless.
+fn arb_sparse_scale_exact(rng: &mut Rng, max_dense: usize) -> SparseGrad {
+    let mut s = arb_sparse(rng, max_dense);
+    for v in s.values.iter_mut() {
+        *v = (rng.range(0, 255) as i64 - 127) as f32;
+    }
+    for block in s.values.chunks_mut(QBLOCK) {
+        block[0] = 127.0;
+    }
+    s
+}
+
+fn rand_state(rng: &mut Rng, n: usize, step: u64) -> ModelState {
+    let mut p = vec![0f32; n];
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    rng.fill_normal_f32(&mut p);
+    rng.fill_normal_f32(&mut m);
+    for x in v.iter_mut() {
+        *x = rng.next_f32();
+    }
+    ModelState { params: Flat(p), m: Flat(m), v: Flat(v), step }
+}
+
+#[test]
+fn lossless_codecs_roundtrip_bit_identically() {
+    prop_check("lossless_roundtrip", default_cases(), |rng| {
+        let s = arb_sparse(rng, 2000);
+        let p = DiffPayload::Gradient(s.clone());
+        for codec in [PayloadCodec::Raw, PayloadCodec::Zstd] {
+            let bytes = write_diff(&p, 7, 3, codec).unwrap();
+            let view = ContainerView::parse(&bytes).unwrap();
+            prop_assert!(view.codec == codec);
+            let sec = view.section("grad").unwrap();
+            prop_assert!(sec == s.to_bytes(), "{} section bytes differ", codec.name());
+            let (step, back) = read_diff(&bytes, 7).unwrap();
+            prop_assert!(step == 3 && back == p, "{} decode mismatch", codec.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quant8_roundtrips_exactly_on_scale_aligned_values() {
+    prop_check("quant8_exact", default_cases(), |rng| {
+        let s = arb_sparse_scale_exact(rng, 2000);
+        let p = DiffPayload::Gradient(s.clone());
+        let bytes = write_diff(&p, 7, 9, PayloadCodec::Quant8).unwrap();
+        // the view reconstructs the standard sparse wire, so downstream
+        // readers never see a codec-specific format
+        let view = ContainerView::parse(&bytes).unwrap();
+        prop_assert!(view.section("grad").unwrap() == s.to_bytes());
+        let (step, back) = read_diff(&bytes, 7).unwrap();
+        prop_assert!(step == 9 && back == p);
+        Ok(())
+    });
+}
+
+#[test]
+fn quant8_indices_exact_and_value_error_bounded() {
+    prop_check("quant8_bounded", default_cases(), |rng| {
+        let s = arb_sparse(rng, 4000);
+        let bytes =
+            write_diff(&DiffPayload::Gradient(s.clone()), 1, 1, PayloadCodec::Quant8).unwrap();
+        let (_, back) = read_diff(&bytes, 1).unwrap();
+        let b = back.sparse();
+        // the index stream is stored losslessly (varint deltas)
+        prop_assert!(b.indices == s.indices, "index stream must be exact");
+        prop_assert!(b.dense_len == s.dense_len);
+        // values: symmetric int8, error <= scale/2 per QBLOCK block
+        for (blk, (vs, bs)) in
+            s.values.chunks(QBLOCK).zip(b.values.chunks(QBLOCK)).enumerate()
+        {
+            let absmax = vs.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let bound = absmax / 127.0 * 0.51 + 1e-7;
+            for (v, d) in vs.iter().zip(bs.iter()) {
+                prop_assert!(
+                    (v - d).abs() <= bound,
+                    "block {blk}: |{v} - {d}| > {bound}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quant8_full_passthrough_is_lossless() {
+    // dense (non-sparse) sections pass through the Quant8 transform
+    // verbatim (tag 0), so a Quant8 full is bit-exact
+    let mut rng = Rng::new(5);
+    let sig = model_signature("t", 300);
+    let s = rand_state(&mut rng, 300, 17);
+    let bytes = write_full(&s, sig, PayloadCodec::Quant8).unwrap();
+    assert_eq!(peek_codec(&bytes).unwrap(), PayloadCodec::Quant8);
+    assert_eq!(read_full(&bytes, sig).unwrap(), s);
+}
+
+/// Header length of a container with the given section names — where the
+/// CRC-protected payload region starts.
+fn header_len(names: &[&str]) -> usize {
+    40 + names.iter().map(|n| 2 + n.len() + 8).sum::<usize>()
+}
+
+#[test]
+fn corrupt_and_truncated_containers_rejected() {
+    let mut rng = Rng::new(13);
+    let sig = model_signature("t", 256);
+    let state = rand_state(&mut rng, 256, 4);
+    let mut base_payload = Vec::new();
+    full_raw_payload(&state, &mut base_payload);
+    let mut next = state.clone();
+    next.step = 8;
+    next.params.0[3] += 1.0;
+    let mut delta = Vec::new();
+    write_full_delta_into(&next, sig, 4, &base_payload, DEFAULT_ZSTD_LEVEL, &mut delta).unwrap();
+
+    let grad = DiffPayload::Gradient(arb_sparse(&mut rng, 500));
+    let cases: Vec<(Vec<u8>, usize)> = vec![
+        (write_diff(&grad, sig, 1, PayloadCodec::Raw).unwrap(), header_len(&["grad"])),
+        (write_diff(&grad, sig, 1, PayloadCodec::Zstd).unwrap(), header_len(&["grad"])),
+        (write_diff(&grad, sig, 1, PayloadCodec::Quant8).unwrap(), header_len(&["grad"])),
+        (delta, header_len(&["params", "adam_m", "adam_v"])),
+    ];
+    for (bytes, hdr) in cases {
+        let parse = |b: &[u8]| -> anyhow::Result<()> {
+            ContainerView::parse_with_base(b, &base_payload).map(|_| ())
+        };
+        parse(&bytes).expect("pristine container must parse");
+        // any flip in the payload, CRC, or end-magic region must be caught
+        for at in hdr..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0xA5;
+            assert!(parse(&bad).is_err(), "flip at byte {at}/{} accepted", bytes.len());
+        }
+        // front/end magic flips too
+        for at in [0usize, 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0xFF;
+            assert!(parse(&bad).is_err(), "magic flip at {at} accepted");
+        }
+        // every truncation must be rejected, never mis-decoded
+        let mut t = 0usize;
+        while t < bytes.len() {
+            assert!(parse(&bytes[..t]).is_err(), "truncation to {t} bytes accepted");
+            t += 7;
+        }
+        assert!(parse(&bytes[..bytes.len() - 1]).is_err());
+    }
+}
+
+#[test]
+fn quant8_chain_replay_never_compounds_error() {
+    // Quantization error is paid once, at encode time: the stored bytes
+    // decode to the same dequantized gradient on every read, so recovery
+    // equals a single pass of the *stored* payloads over the optimizer —
+    // and repeated recoveries are bit-identical.
+    let n = 400;
+    let sig = model_signature("t", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let ck = Checkpointer::spawn(
+        Arc::clone(&store),
+        CkptConfig {
+            model_sig: sig,
+            codec: PayloadCodec::Quant8,
+            gc: false,
+            ..CkptConfig::default()
+        },
+    );
+    let mut rng = Rng::new(23);
+    let s0 = ModelState::new(Flat(vec![0.5; n]));
+    ck.queue.put(0, Arc::new(CkptItem::Full(s0.clone())));
+    let steps = 8u64;
+    for step in 1..=steps {
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        ck.queue.put(step, Arc::new(CkptItem::DiffDense(topk_mask(&Flat(g), n / 10))));
+    }
+    let stats = ck.finish();
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.diff_ckpts, steps);
+
+    // shadow: apply each stored (dequantized) payload exactly once
+    let adam = Adam::default();
+    let mut shadow = s0;
+    for step in 1..=steps {
+        let bytes = store.get(&Manifest::diff_name(step)).unwrap();
+        let (got_step, payload) = read_diff(&bytes, sig).unwrap();
+        assert_eq!(got_step, step);
+        adam.apply_sparse(&mut shadow, payload.sparse());
+    }
+
+    let (rec1, rs) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(rs.recovered_step, steps);
+    assert_eq!(rec1, shadow, "replay must equal one pass of the stored payloads");
+    let (rec2, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(rec1, rec2, "repeated recoveries must be bit-identical");
+}
+
+#[test]
+fn delta_fulls_recover_end_to_end_with_gc() {
+    let n = 320;
+    let sig = model_signature("t", n);
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let ck = Checkpointer::spawn(
+        Arc::clone(&store),
+        CkptConfig { model_sig: sig, delta_fulls: true, gc: true, ..CkptConfig::default() },
+    );
+    let adam = Adam::default();
+    let mut rng = Rng::new(31);
+    let mut want = ModelState::new(Flat(vec![0.25; n]));
+    ck.queue.put(0, Arc::new(CkptItem::Full(want.clone())));
+    for step in 1..=6u64 {
+        let mut g = vec![0f32; n];
+        rng.fill_normal_f32(&mut g);
+        let g = topk_mask(&Flat(g), n / 8);
+        adam.apply_sparse(&mut want, &SparseGrad::from_dense(&g));
+        ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+        if step == 4 {
+            // second full: the encoder deltas it against the step-0 base
+            ck.queue.put(step, Arc::new(CkptItem::Full(want.clone())));
+        }
+    }
+    let stats = ck.finish();
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.full_ckpts, 2);
+
+    // the newest full went out delta-encoded, and GC pinned its base
+    let newest = store.get(&Manifest::full_name(4)).unwrap();
+    assert_eq!(peek_codec(&newest).unwrap(), PayloadCodec::DeltaFull);
+    let base = store.get(&Manifest::full_name(0)).unwrap();
+    assert_ne!(peek_codec(&base).unwrap(), PayloadCodec::DeltaFull, "base stays plain");
+
+    // direct resolving read reconstructs the checkpointed state exactly
+    let mut at4 = read_full_resolving(&newest, sig, |step| {
+        assert_eq!(step, 0);
+        store.get(&Manifest::full_name(0))
+    })
+    .unwrap();
+    assert_eq!(at4.step, 4);
+
+    // replaying the tail diffs on top equals the final training state
+    for step in 5..=6u64 {
+        let bytes = store.get(&Manifest::diff_name(step)).unwrap();
+        let (_, payload) = read_diff(&bytes, sig).unwrap();
+        adam.apply_sparse(&mut at4, payload.sparse());
+    }
+    assert_eq!(at4, want);
+
+    // and the stock recovery path resolves the base transparently
+    let (rec, rs) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(rs.recovered_step, 6);
+    assert_eq!(rec, want);
+}

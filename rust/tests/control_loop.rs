@@ -82,7 +82,12 @@ fn induced_failures_tighten_full_every_and_recovery_stays_bit_identical() {
     let mut actuator = Actuator::new(
         params,
         1.0,
-        Retune { full_every: eff_full_every, batch_size: 1, compact_every: 0 },
+        Retune {
+            full_every: eff_full_every,
+            batch_size: 1,
+            compact_every: 0,
+            codec: lowdiff::checkpoint::format::PayloadCodec::Raw,
+        },
         ActuatorConfig { cooldown_ticks: 0, ..ActuatorConfig::default() },
     );
 
@@ -127,6 +132,7 @@ fn induced_failures_tighten_full_every_and_recovery_stays_bit_identical() {
                 Arc::new(CkptItem::Retune {
                     batch_size: r.batch_size,
                     compact_every: r.compact_every,
+                    codec: None,
                 }),
             );
         }

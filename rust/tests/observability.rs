@@ -212,7 +212,12 @@ fn http_plane_serves_consistent_views_of_a_live_cluster_run() {
     obs.set_control(ControlView {
         strategy: "lowdiff".into(),
         adaptive: true,
-        applied: Some(Retune { full_every: 0, batch_size: 1, compact_every: 3 }),
+        applied: Some(Retune {
+            full_every: 0,
+            batch_size: 1,
+            compact_every: 3,
+            codec: lowdiff::checkpoint::format::PayloadCodec::Raw,
+        }),
         ..ControlView::default()
     });
     let mut srv = ObsServer::serve(Arc::clone(&obs), "127.0.0.1:0").unwrap();
@@ -309,7 +314,12 @@ fn sidecars_persist_beside_the_chain_and_recovery_ignores_them() {
         mtbf_acc_secs: 1800.0,
         mtbf_acc_failures: 2.0,
         bw_est: 2e9,
-        applied: Retune { full_every: 32, batch_size: 2, compact_every: 4 },
+        applied: Retune {
+            full_every: 32,
+            batch_size: 2,
+            compact_every: 4,
+            codec: lowdiff::checkpoint::format::PayloadCodec::Quant8,
+        },
         retunes: 5,
     };
     st.save(store.as_ref()).unwrap();
