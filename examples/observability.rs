@@ -1,13 +1,16 @@
 //! Observability-plane demo — no PJRT artifacts needed.
 //!
-//! A two-rank cluster run with the full PR 8 observability surface
-//! attached: every pipeline stage traced into a ring buffer, per-rank
+//! A two-rank cluster run with the full observability surface attached:
+//! every pipeline stage traced into a ring buffer, every storage op
+//! histogrammed per tier through the [`Observed`] middleware, per-rank
 //! heartbeats feeding a failure detector, and the std-only HTTP plane
-//! serving `GET /stats`, `GET /metrics` (Prometheus), `GET /trace` and
-//! `GET /chain` live while epochs commit. Three quarters of the way in,
-//! one rank's heart stops: its epochs tear, the detector declares it
-//! dead, and recovery returns the consistent cut — bit-for-bit. The
-//! chrome://tracing journal is persisted beside the chain at the end.
+//! serving `GET /stats`, `GET /metrics` (Prometheus histograms), `GET
+//! /trace`, `GET /chain`, `GET /storage` and `GET /health` live while
+//! epochs commit. Three quarters of the way in, one rank's heart stops:
+//! its epochs tear, the detector declares it dead, and recovery returns
+//! the consistent cut — bit-for-bit. On the way out a chain scrub
+//! re-verifies every committed object and the (size-capped)
+//! chrome://tracing journal is persisted beside the chain.
 //!
 //!   cargo run --release --example observability -- \
 //!       [--ranks 2] [--steps 40] [--serve 127.0.0.1:0] [--hold-secs 0]
@@ -19,7 +22,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use lowdiff::checkpoint::format::model_signature;
+use lowdiff::checkpoint::format::{model_signature, PayloadCodec};
 use lowdiff::cluster::{
     partition_even, recover_cluster, Cluster, ClusterConfig, Detector, HeartbeatTable,
 };
@@ -28,8 +31,9 @@ use lowdiff::control::{
     ControlView, ObsServer, ObsState, Retune, TelemetryBus, Tracer, TRACE_OBJECT,
 };
 use lowdiff::optim::{Adam, ModelState};
+use lowdiff::pipeline::Scrubber;
 use lowdiff::sparse::SparseGrad;
-use lowdiff::storage::{LocalDir, StorageBackend};
+use lowdiff::storage::{LocalDir, Observed, StorageBackend, StorageObs};
 use lowdiff::tensor::Flat;
 use lowdiff::util::cli::Args;
 use lowdiff::util::rng::Rng;
@@ -49,23 +53,45 @@ fn main() -> Result<()> {
     let store: Arc<dyn StorageBackend> = Arc::new(LocalDir::new(&dir)?);
 
     // the observability plane: telemetry bus + trace ring + heartbeat
-    // table, all shared with the runtime, served over plain HTTP
+    // table + per-tier storage histograms, all shared with the runtime,
+    // served over plain HTTP
     let bus = Arc::new(TelemetryBus::new());
     let tracer = Arc::new(Tracer::default());
     let table = Arc::new(HeartbeatTable::new(ranks));
-    let obs = Arc::new(ObsState::new(
-        Arc::clone(&bus),
-        Some(Arc::clone(&tracer)),
-        Some(Arc::clone(&table)),
-        Some(Arc::clone(&store)),
-    ));
+    let storage_obs = Arc::new(StorageObs::new(50));
+    let store: Arc<dyn StorageBackend> = Arc::new(
+        Observed::new(store, Arc::clone(&storage_obs), "durable")
+            .with_trace(Some(Arc::clone(&tracer))),
+    );
+    // the background chain scrubber, on-demand mode (interval 0): the
+    // final notify below re-verifies every committed object's CRCs
+    let scrubber = Scrubber::spawn(Arc::clone(&store), Duration::ZERO);
+    let obs = Arc::new(
+        ObsState::new(
+            Arc::clone(&bus),
+            Some(Arc::clone(&tracer)),
+            Some(Arc::clone(&table)),
+            Some(Arc::clone(&store)),
+        )
+        .with_storage_obs(Arc::clone(&storage_obs))
+        .with_scrub(scrubber.live_handle())
+        .with_heartbeat_timeout(0.08),
+    );
     obs.set_control(ControlView {
         strategy: "lowdiff".into(),
-        applied: Some(Retune { full_every: 0, batch_size: 1, compact_every: 4 }),
+        applied: Some(Retune {
+            full_every: 0,
+            batch_size: 1,
+            compact_every: 4,
+            codec: PayloadCodec::Raw,
+        }),
         ..ControlView::default()
     });
     let mut server = ObsServer::serve(Arc::clone(&obs), args.get_or("serve", "127.0.0.1:0"))?;
-    println!("observability plane: http://{}/stats /metrics /trace /chain", server.local_addr());
+    println!(
+        "observability plane: http://{}/stats /metrics /trace /chain /storage /health",
+        server.local_addr()
+    );
 
     let cluster = Cluster::spawn(
         Arc::clone(&store),
@@ -149,11 +175,32 @@ fn main() -> Result<()> {
         recovered.params.l2_norm()
     );
 
-    // persist the trace journal beside the chain and publish the final
-    // control view for late scrapes
-    store.put(TRACE_OBJECT, tracer.to_chrome_jsonl().as_bytes())?;
+    // scrub the committed cover: every container CRC re-verified through
+    // the same store the ranks wrote — a clean run scrubs clean
+    scrubber.notify();
+    let scrub = scrubber.finish();
+    println!(
+        "scrub: {} passes, {} objects verified, {} corrupt, {} repaired",
+        scrub.passes, scrub.objects_scrubbed, scrub.corrupt, scrub.repaired
+    );
+    assert_eq!(scrub.corrupt, 0, "a healthy chain must scrub clean");
+    for t in storage_obs.tiers() {
+        println!(
+            "storage tier `{}`: {} ops total, {} slow (threshold 50ms)",
+            t.tier(),
+            t.total_ops(),
+            t.slow_ops()
+        );
+    }
+
+    // persist the (size-capped) trace journal beside the chain and
+    // publish the final control view for late scrapes
+    store.put(TRACE_OBJECT, tracer.to_chrome_jsonl_capped(256 * 1024).as_bytes())?;
     let (recorded, dropped) = tracer.counts();
-    println!("trace journal: {recorded} events ({dropped} dropped) -> {TRACE_OBJECT}");
+    println!(
+        "trace journal: {recorded} events ({dropped} ring-dropped, {} journal-dropped) -> {TRACE_OBJECT}",
+        tracer.journal_dropped()
+    );
     let mut view = obs.control();
     view.detected_failures = 1;
     obs.set_control(view);

@@ -1,0 +1,78 @@
+//! Observed-middleware overhead bench: the storage observability layer
+//! (per-op atomic counters + one `LogHistogram` record + the slow-op
+//! threshold check) must be invisible next to real I/O. The same put+get
+//! workload runs through a raw `MemStore` and through
+//! `Observed::new(mem, obs, "durable")`, and the observed path must stay
+//! within 5% of the unwrapped store.
+//!
+//! Run: `cargo bench --bench observed_overhead`; baseline in
+//! `BENCH_observed.json`. MemStore is the worst case for the middleware:
+//! a memcpy-only backend leaves nowhere for the bookkeeping to hide, so
+//! passing here bounds the overhead on any real tier from above.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::bench;
+use lowdiff::storage::{MemStore, Observed, StorageBackend, StorageObs};
+
+const OBJ_BYTES: usize = 256 << 10; // a typical batched diff span
+const N_OBJECTS: usize = 32;
+
+fn cycle(store: &Arc<dyn StorageBackend>, payload: &[u8]) {
+    for i in 0..N_OBJECTS {
+        store.put(&format!("diff-{i:08}-{i:08}.ckpt"), payload).unwrap();
+    }
+    for i in 0..N_OBJECTS {
+        let got = store.get(&format!("diff-{i:08}-{i:08}.ckpt")).unwrap();
+        assert_eq!(got.len(), payload.len());
+    }
+}
+
+fn main() {
+    let payload = vec![0x5Au8; OBJ_BYTES];
+    let bytes_per_op = 2 * OBJ_BYTES * N_OBJECTS; // one put + one get per object
+
+    let raw: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    // slow threshold far above any MemStore op: the hot path pays the
+    // comparison on every op, never the trace emission
+    let obs = Arc::new(StorageObs::new(1_000));
+    let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let observed: Arc<dyn StorageBackend> =
+        Arc::new(Observed::new(inner, Arc::clone(&obs), "durable"));
+
+    println!("== observed middleware overhead ({N_OBJECTS} x {OBJ_BYTES} B put+get) ==");
+    let b_raw = bench("memstore put+get (raw)", 600, || cycle(&raw, &payload));
+    b_raw.report_bytes(bytes_per_op);
+    let b_obs = bench("memstore put+get (observed)", 600, || cycle(&observed, &payload));
+    b_obs.report_bytes(bytes_per_op);
+
+    let raw_s = b_raw.median();
+    let obs_s = b_obs.median();
+    let overhead = obs_s / raw_s - 1.0;
+    println!("overhead: {:.2}%", overhead * 100.0);
+
+    // the middleware really recorded every op it was supposed to
+    let tiers = obs.tiers();
+    assert_eq!(tiers.len(), 1, "one tier label in play");
+    let ops = tiers[0].total_ops();
+    assert!(ops >= 2 * N_OBJECTS as u64, "puts and gets must be recorded: {ops}");
+    assert_eq!(obs.slow_ops(), 0, "nothing crosses a 1000ms threshold in memory");
+
+    // machine-readable block for BENCH_observed.json
+    println!("\n{{");
+    println!("  \"bench\": \"observed_overhead\",");
+    println!("  \"obj_bytes\": {OBJ_BYTES}, \"objects\": {N_OBJECTS},");
+    println!("  \"raw_secs_per_cycle\": {raw_s:.6},");
+    println!("  \"observed_secs_per_cycle\": {obs_s:.6},");
+    println!("  \"overhead_fraction\": {overhead:.4}");
+    println!("}}");
+
+    assert!(
+        overhead < 0.05,
+        "observed path must stay within 5% of raw: {:.2}%",
+        overhead * 100.0
+    );
+    println!("\nacceptance: observed overhead {:.2}% < 5% (PASS)", overhead * 100.0);
+}

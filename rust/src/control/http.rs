@@ -12,10 +12,17 @@
 //!   chrome://tracing event objects, JSON array;
 //! - `GET /chain` — live manifest cover computed by name parsing only
 //!   (objects, flat chain, per-rank cluster chains, replay bounds);
+//! - `GET /storage` — per-tier, per-op storage-plane table from the
+//!   [`StorageObs`] registry: counts, bytes, errors, histogram quantiles,
+//!   name-family traffic and slow-op counters, JSON;
+//! - `GET /health` — machine-readable liveness verdict
+//!   (`ok` / `degraded` / `dead` plus a `reasons` array), HTTP 503 when
+//!   dead so load-balancer-style probes work unmodified;
 //! - `POST /retune?full-every=..&batch-size=..&compact-every=..` — queue
 //!   a [`Retune`] request; missing knobs default to the currently
 //!   applied values;
-//! - `POST /compact?every=N` — queue a cluster merge-factor change.
+//! - `POST /compact?every=N` — queue a cluster merge-factor change;
+//! - `POST /scrub` — queue an immediate scrubber pass.
 //!
 //! The POST endpoints **never** mutate the runtime directly: they park
 //! the request in [`ObsState`] and the driver drains it with
@@ -45,8 +52,10 @@ use crate::cluster::heartbeat::HeartbeatTable;
 use crate::control::actuate::Retune;
 use crate::control::telemetry::TelemetryBus;
 use crate::control::trace::Tracer;
-use crate::storage::StorageBackend;
-use crate::util::json::{JsonArray, JsonObject};
+use crate::pipeline::scrub::ScrubStats;
+use crate::storage::{StorageBackend, StorageObs, FAMILY_NAMES, OP_NAMES};
+use crate::util::json::{string_token, JsonArray, JsonObject};
+use crate::util::stats::LogHistogram;
 
 /// What the driver publishes about the control loop for `/stats` and
 /// `/metrics` — refreshed at actuator tick boundaries.
@@ -66,6 +75,20 @@ pub struct ControlView {
     pub detected_failures: u64,
 }
 
+/// Report-only counters promoted to live gauges: the driver refreshes
+/// these at tick boundaries from whatever live stats handles the run's
+/// composition exposes, so `/metrics` and `/health` see them mid-run
+/// instead of only in the end-of-run [`RunReport`]
+/// (`RunReport`: [`crate::coordinator::metrics::RunReport`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReportGauges {
+    /// encode-buffer pool recycled checkouts / fresh allocations
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    /// GC deletes that failed with the object still present
+    pub gc_leaks: u64,
+}
+
 /// Shared state behind the HTTP plane: read-side handles on the
 /// telemetry/trace/heartbeat planes plus the parked control requests the
 /// driver drains at safe points.
@@ -74,9 +97,15 @@ pub struct ObsState {
     trace: Option<Arc<Tracer>>,
     heartbeats: Option<Arc<HeartbeatTable>>,
     store: Option<Arc<dyn StorageBackend>>,
+    storage_obs: Option<Arc<StorageObs>>,
+    scrub: Option<Arc<Mutex<ScrubStats>>>,
+    /// heartbeat failure-detection timeout, seconds (0 = no dead check)
+    hb_timeout: f64,
     control: Mutex<ControlView>,
+    gauges: Mutex<ReportGauges>,
     retune_req: Mutex<Option<Retune>>,
     compact_req: Mutex<Option<usize>>,
+    scrub_req: Mutex<bool>,
 }
 
 impl std::fmt::Debug for ObsState {
@@ -85,6 +114,8 @@ impl std::fmt::Debug for ObsState {
             .field("trace", &self.trace.is_some())
             .field("heartbeats", &self.heartbeats.is_some())
             .field("store", &self.store.is_some())
+            .field("storage_obs", &self.storage_obs.is_some())
+            .field("scrub", &self.scrub.is_some())
             .finish()
     }
 }
@@ -101,10 +132,36 @@ impl ObsState {
             trace,
             heartbeats,
             store,
+            storage_obs: None,
+            scrub: None,
+            hb_timeout: 0.0,
             control: Mutex::new(ControlView::default()),
+            gauges: Mutex::new(ReportGauges::default()),
             retune_req: Mutex::new(None),
             compact_req: Mutex::new(None),
+            scrub_req: Mutex::new(false),
         }
+    }
+
+    /// Attach the storage-plane registry (`GET /storage`, `/metrics`
+    /// histograms, the `/health` slow-I/O check).
+    pub fn with_storage_obs(mut self, obs: Arc<StorageObs>) -> ObsState {
+        self.storage_obs = Some(obs);
+        self
+    }
+
+    /// Attach the scrubber's live counters
+    /// ([`Scrubber::live_handle`](crate::pipeline::Scrubber::live_handle)).
+    pub fn with_scrub(mut self, live: Arc<Mutex<ScrubStats>>) -> ObsState {
+        self.scrub = Some(live);
+        self
+    }
+
+    /// Set the heartbeat failure-detection timeout `/health` uses to
+    /// declare ranks (and the run) dead.
+    pub fn with_heartbeat_timeout(mut self, secs: f64) -> ObsState {
+        self.hb_timeout = secs;
+        self
     }
 
     /// Refresh the published control view (driver, at tick boundaries).
@@ -134,6 +191,26 @@ impl ObsState {
 
     pub fn take_compact(&self) -> Option<usize> {
         self.compact_req.lock().expect("compact request").take()
+    }
+
+    /// Park an on-demand scrub-pass request (`POST /scrub`). The driver
+    /// drains it at the same control-tick safe points as `/compact` and
+    /// forwards it as a [`Scrubber::notify`](crate::pipeline::Scrubber::notify).
+    pub fn request_scrub(&self) {
+        *self.scrub_req.lock().expect("scrub request") = true;
+    }
+
+    pub fn take_scrub(&self) -> bool {
+        std::mem::take(&mut *self.scrub_req.lock().expect("scrub request"))
+    }
+
+    /// Refresh the report-only gauges (driver, at tick boundaries).
+    pub fn set_gauges(&self, g: ReportGauges) {
+        *self.gauges.lock().expect("report gauges") = g;
+    }
+
+    pub fn gauges(&self) -> ReportGauges {
+        *self.gauges.lock().expect("report gauges")
     }
 }
 
@@ -275,10 +352,154 @@ fn handle_conn(state: &ObsState, stream: &mut TcpStream) {
             },
             None => respond_json(stream, "404 Not Found", &error_json("no store attached")),
         },
+        ("GET", "/storage") => match &state.storage_obs {
+            Some(obs) => respond_json(stream, "200 OK", &storage_json(state, obs)),
+            None => {
+                respond_json(stream, "404 Not Found", &error_json("storage plane not observed"));
+            }
+        },
+        ("GET", "/health") => {
+            let (healthy, body) = health_json(state);
+            let status = if healthy { "200 OK" } else { "503 Service Unavailable" };
+            respond_json(stream, status, &body);
+        }
         ("POST", "/retune") => post_retune(state, query, stream),
         ("POST", "/compact") => post_compact(state, query, stream),
+        ("POST", "/scrub") => match &state.scrub {
+            Some(_) => {
+                state.request_scrub();
+                let mut o = JsonObject::new();
+                o.str("accepted", "scrub pass").str("applies", "next control tick");
+                respond_json(stream, "200 OK", &o.finish());
+            }
+            None => respond_json(stream, "404 Not Found", &error_json("no scrubber attached")),
+        },
         _ => respond_json(stream, "404 Not Found", &error_json("unknown endpoint")),
     }
+}
+
+/// `/health` verdict: `dead` (HTTP 503) when the heartbeat plane says a
+/// rank stopped beating past the detection timeout; `degraded` when the
+/// scrubber currently knows damaged committed objects, GC has leaked
+/// objects, or ≥1% of storage ops crossed the slow threshold (after a
+/// 100-op warmup); `ok` otherwise. Reasons are machine-readable tokens.
+fn health_json(state: &ObsState) -> (bool, String) {
+    let mut reasons: Vec<&str> = Vec::new();
+    let mut dead_ranks: Vec<usize> = Vec::new();
+    if let Some(hb) = &state.heartbeats {
+        if state.hb_timeout > 0.0 {
+            dead_ranks = hb.dead_ranks(Duration::from_secs_f64(state.hb_timeout));
+            if !dead_ranks.is_empty() {
+                reasons.push("heartbeat_dead");
+            }
+        }
+    }
+    let damaged = state.scrub.as_ref().map(|s| s.lock().expect("scrub stats").damaged);
+    if damaged.unwrap_or(0) > 0 {
+        reasons.push("scrub_corruption");
+    }
+    let g = state.gauges();
+    if g.gc_leaks > 0 {
+        reasons.push("gc_leaks");
+    }
+    let slow = state.storage_obs.as_ref().map(|o| (o.slow_ops(), o.total_ops()));
+    if let Some((slow_ops, total)) = slow {
+        if total > 100 && slow_ops.saturating_mul(100) > total {
+            reasons.push("slow_io");
+        }
+    }
+    let status = if !dead_ranks.is_empty() {
+        "dead"
+    } else if reasons.is_empty() {
+        "ok"
+    } else {
+        "degraded"
+    };
+    let mut o = JsonObject::new();
+    o.str("status", status);
+    let mut arr = JsonArray::new();
+    for r in &reasons {
+        arr.push_raw(&string_token(r));
+    }
+    o.raw("reasons", &arr.finish());
+    let mut dr = JsonArray::new();
+    for r in &dead_ranks {
+        dr.push_raw(&r.to_string());
+    }
+    o.raw("dead_ranks", &dr.finish());
+    match damaged {
+        Some(d) => o.u64("scrub_damaged", d),
+        None => o.raw("scrub_damaged", "null"),
+    };
+    o.u64("gc_leaks", g.gc_leaks);
+    match slow {
+        Some((s, t)) => o.u64("slow_ops", s).u64("storage_ops", t),
+        None => o.raw("slow_ops", "null"),
+    };
+    (status != "dead", o.finish())
+}
+
+/// Histogram quantile in seconds for one op's latency histogram (upper
+/// bucket bound, i.e. exact to within one power of two).
+fn lat_quantile_secs(h: &LogHistogram, q: f64) -> f64 {
+    h.quantile_ns(q) as f64 / 1e9
+}
+
+fn storage_json(state: &ObsState, obs: &StorageObs) -> String {
+    let mut o = JsonObject::new();
+    o.u64("slow_ops", obs.slow_ops())
+        .u64("total_ops", obs.total_ops())
+        .f64("slow_threshold_secs", obs.slow_threshold_ns() as f64 / 1e9);
+    let mut tiers = JsonArray::new();
+    for t in obs.tiers() {
+        let mut to = JsonObject::new();
+        to.str("tier", t.tier()).u64("slow_ops", t.slow_ops());
+        let mut ops = JsonObject::new();
+        for (i, name) in OP_NAMES.iter().enumerate() {
+            let s = t.op(i);
+            let count = s.count.load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
+            }
+            let mut oo = JsonObject::new();
+            oo.u64("count", count)
+                .u64("bytes", s.bytes.load(Ordering::Relaxed))
+                .u64("errors", s.errors.load(Ordering::Relaxed))
+                .f64("mean_secs", s.lat.mean_ns() / 1e9)
+                .f64("p50_secs", lat_quantile_secs(&s.lat, 0.5))
+                .f64("p99_secs", lat_quantile_secs(&s.lat, 0.99));
+            ops.raw(name, &oo.finish());
+        }
+        to.raw("ops", &ops.finish());
+        let mut fams = JsonObject::new();
+        for (i, name) in FAMILY_NAMES.iter().enumerate() {
+            let f = t.family(i);
+            let count = f.ops.load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
+            }
+            let mut fo = JsonObject::new();
+            fo.u64("ops", count).u64("bytes", f.bytes.load(Ordering::Relaxed));
+            fams.raw(name, &fo.finish());
+        }
+        to.raw("families", &fams.finish());
+        tiers.push_raw(&to.finish());
+    }
+    o.raw("tiers", &tiers.finish());
+    if let Some(s) = &state.scrub {
+        let s = s.lock().expect("scrub stats").clone();
+        let mut so = JsonObject::new();
+        so.u64("passes", s.passes)
+            .u64("objects_scrubbed", s.objects_scrubbed)
+            .u64("bytes_read", s.bytes_read)
+            .u64("corrupt", s.corrupt)
+            .u64("repaired", s.repaired)
+            .u64("damaged", s.damaged);
+        o.raw("scrub", &so.finish());
+    } else {
+        o.raw("scrub", "null");
+    }
+    o.finish()
 }
 
 fn post_retune(state: &ObsState, query: &str, stream: &mut TcpStream) {
@@ -529,6 +750,137 @@ fn metrics_text(state: &ObsState) -> String {
             ));
         }
     }
+    // report-only counters promoted to live series (driver-refreshed at
+    // tick boundaries) plus the scrub plane
+    {
+        let mut c = |name: &str, kind: &str, help: &str, value: String| {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            out.push_str(&format!("{name} {value}\n"));
+        };
+        let g = state.gauges();
+        c("lowdiff_pool_hits_total", "counter", "pooled encode buffers recycled", fi(g.pool_hits));
+        c("lowdiff_pool_misses_total", "counter", "fresh pool allocations", fi(g.pool_misses));
+        c("lowdiff_gc_leaked", "gauge", "failed GC deletes still present", fi(g.gc_leaks));
+        if let Some(t) = &state.trace {
+            let help = "oldest events cut from the persisted journal by the size cap";
+            c("lowdiff_trace_journal_dropped", "gauge", help, fi(t.journal_dropped()));
+        }
+        if let Some(s) = &state.scrub {
+            let s = s.lock().expect("scrub stats").clone();
+            c("lowdiff_scrub_passes_total", "counter", "scrub passes completed", fi(s.passes));
+            let objects = fi(s.objects_scrubbed);
+            c("lowdiff_scrub_objects_total", "counter", "object verifications", objects);
+            let read = fi(s.bytes_read);
+            c("lowdiff_scrub_bytes_total", "counter", "bytes read by the scrubber", read);
+            c("lowdiff_scrub_corrupt_total", "counter", "objects flagged corrupt", fi(s.corrupt));
+            c("lowdiff_scrub_repaired_total", "counter", "objects repaired", fi(s.repaired));
+            c("lowdiff_scrub_damaged", "gauge", "objects currently damaged", fi(s.damaged));
+        }
+        if let Some(obs) = &state.storage_obs {
+            let help = "storage ops at or above the slow threshold";
+            c("lowdiff_storage_slow_ops_total", "counter", help, fi(obs.slow_ops()));
+        }
+    }
+    if let Some(obs) = &state.storage_obs {
+        out.push_str(&storage_metrics_text(obs));
+    }
+    out
+}
+
+/// Storage-plane series: per-tier/per-op counters plus real Prometheus
+/// histogram exposition (`_bucket`/`_sum`/`_count`) straight from the
+/// lock-free [`LogHistogram`]s. Empty buckets are elided — the text
+/// format accepts any subset of `le` bounds as long as the counts are
+/// cumulative and the `+Inf` bucket is present — so output stays
+/// proportional to occupied buckets, not the 40-bucket range.
+fn storage_metrics_text(obs: &StorageObs) -> String {
+    let tiers = obs.tiers();
+    let mut out = String::new();
+    out.push_str("# HELP lowdiff_storage_ops_total storage ops per tier and op\n");
+    out.push_str("# TYPE lowdiff_storage_ops_total counter\n");
+    for t in &tiers {
+        for (i, op) in OP_NAMES.iter().enumerate() {
+            let n = t.op(i).count.load(Ordering::Relaxed);
+            if n > 0 {
+                let lbl = format!("{{tier=\"{}\",op=\"{op}\"}}", t.tier());
+                out.push_str(&format!("lowdiff_storage_ops_total{lbl} {n}\n"));
+            }
+        }
+    }
+    out.push_str("# HELP lowdiff_storage_op_bytes_total bytes moved per tier and op\n");
+    out.push_str("# TYPE lowdiff_storage_op_bytes_total counter\n");
+    for t in &tiers {
+        for (i, op) in OP_NAMES.iter().enumerate() {
+            if t.op(i).count.load(Ordering::Relaxed) > 0 {
+                let lbl = format!("{{tier=\"{}\",op=\"{op}\"}}", t.tier());
+                let b = t.op(i).bytes.load(Ordering::Relaxed);
+                out.push_str(&format!("lowdiff_storage_op_bytes_total{lbl} {b}\n"));
+            }
+        }
+    }
+    out.push_str("# HELP lowdiff_storage_op_errors_total failed storage ops per tier and op\n");
+    out.push_str("# TYPE lowdiff_storage_op_errors_total counter\n");
+    for t in &tiers {
+        for (i, op) in OP_NAMES.iter().enumerate() {
+            if t.op(i).count.load(Ordering::Relaxed) > 0 {
+                let lbl = format!("{{tier=\"{}\",op=\"{op}\"}}", t.tier());
+                let e = t.op(i).errors.load(Ordering::Relaxed);
+                out.push_str(&format!("lowdiff_storage_op_errors_total{lbl} {e}\n"));
+            }
+        }
+    }
+    out.push_str("# HELP lowdiff_storage_family_ops_total ops per tier and name family\n");
+    out.push_str("# TYPE lowdiff_storage_family_ops_total counter\n");
+    for t in &tiers {
+        for (i, fam) in FAMILY_NAMES.iter().enumerate() {
+            let n = t.family(i).ops.load(Ordering::Relaxed);
+            if n > 0 {
+                let lbl = format!("{{tier=\"{}\",family=\"{fam}\"}}", t.tier());
+                out.push_str(&format!("lowdiff_storage_family_ops_total{lbl} {n}\n"));
+            }
+        }
+    }
+    out.push_str("# HELP lowdiff_storage_family_bytes_total bytes per tier and name family\n");
+    out.push_str("# TYPE lowdiff_storage_family_bytes_total counter\n");
+    for t in &tiers {
+        for (i, fam) in FAMILY_NAMES.iter().enumerate() {
+            if t.family(i).ops.load(Ordering::Relaxed) > 0 {
+                let lbl = format!("{{tier=\"{}\",family=\"{fam}\"}}", t.tier());
+                let b = t.family(i).bytes.load(Ordering::Relaxed);
+                out.push_str(&format!("lowdiff_storage_family_bytes_total{lbl} {b}\n"));
+            }
+        }
+    }
+    out.push_str("# HELP lowdiff_storage_op_duration_seconds storage op latency per tier and op\n");
+    out.push_str("# TYPE lowdiff_storage_op_duration_seconds histogram\n");
+    for t in &tiers {
+        for (i, op) in OP_NAMES.iter().enumerate() {
+            let h = &t.op(i).lat;
+            let total = h.count();
+            if total == 0 {
+                continue;
+            }
+            let lbl = format!("tier=\"{}\",op=\"{op}\"", t.tier());
+            let mut cum = 0u64;
+            for (b, n) in h.bucket_counts().iter().enumerate() {
+                if *n == 0 {
+                    continue;
+                }
+                cum += n;
+                let le = LogHistogram::bucket_bound_ns(b) as f64 / 1e9;
+                out.push_str(&format!(
+                    "lowdiff_storage_op_duration_seconds_bucket{{{lbl},le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "lowdiff_storage_op_duration_seconds_bucket{{{lbl},le=\"+Inf\"}} {total}\n"
+            ));
+            let sum = h.sum_ns() as f64 / 1e9;
+            out.push_str(&format!("lowdiff_storage_op_duration_seconds_sum{{{lbl}}} {sum}\n"));
+            out.push_str(&format!("lowdiff_storage_op_duration_seconds_count{{{lbl}}} {total}\n"));
+        }
+    }
     out
 }
 
@@ -764,10 +1116,103 @@ mod tests {
         let (head, _) = http(addr, "POST", "/compact");
         assert!(head.starts_with("HTTP/1.1 400"));
 
-        // trace/chain absent: honest 404s
+        // trace/chain/storage/scrub absent: honest 404s
         let (head, _) = http(addr, "GET", "/trace");
         assert!(head.starts_with("HTTP/1.1 404"));
         let (head, _) = http(addr, "GET", "/chain");
         assert!(head.starts_with("HTTP/1.1 404"));
+        let (head, _) = http(addr, "GET", "/storage");
+        assert!(head.starts_with("HTTP/1.1 404"));
+        let (head, _) = http(addr, "POST", "/scrub");
+        assert!(head.starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn storage_health_and_scrub_endpoints() {
+        let bus = Arc::new(TelemetryBus::new());
+        let obs = Arc::new(StorageObs::new(0));
+        let observed =
+            crate::storage::Observed::new(Arc::new(MemStore::new()), Arc::clone(&obs), "durable");
+        observed.put(&Manifest::full_name(1), b"abc").unwrap();
+        observed.get(&Manifest::full_name(1)).unwrap();
+        let scrub = Arc::new(Mutex::new(ScrubStats::default()));
+        let state = Arc::new(
+            ObsState::new(bus, None, None, None)
+                .with_storage_obs(Arc::clone(&obs))
+                .with_scrub(Arc::clone(&scrub)),
+        );
+        let srv = ObsServer::serve(Arc::clone(&state), "127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+
+        let (head, body) = http(addr, "GET", "/storage");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(body.contains("\"tier\":\"durable\""), "{body}");
+        assert!(body.contains("\"put\":{\"count\":1"), "{body}");
+        assert!(body.contains("\"full\":{\"ops\":2"), "family traffic: {body}");
+        assert!(body.contains("\"scrub\":{\"passes\":0"), "{body}");
+
+        let (head, body) = http(addr, "GET", "/health");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(body.contains("\"status\":\"ok\""), "{body}");
+        assert!(body.contains("\"reasons\":[]"), "{body}");
+
+        // scrub damage degrades health with a machine-readable reason
+        scrub.lock().unwrap().damaged = 2;
+        let (head, body) = http(addr, "GET", "/health");
+        assert!(head.starts_with("HTTP/1.1 200"), "degraded is not dead: {head}");
+        assert!(body.contains("\"status\":\"degraded\""), "{body}");
+        assert!(body.contains("\"scrub_corruption\""), "{body}");
+        scrub.lock().unwrap().damaged = 0;
+
+        // gc leaks degrade too
+        state.set_gauges(ReportGauges { pool_hits: 5, pool_misses: 1, gc_leaks: 3 });
+        let (_, body) = http(addr, "GET", "/health");
+        assert!(body.contains("\"status\":\"degraded\""), "{body}");
+        assert!(body.contains("\"gc_leaks\""), "{body}");
+
+        // /metrics carries the promoted gauges and the real histogram
+        let (_, body) = http(addr, "GET", "/metrics");
+        assert!(body.contains("lowdiff_pool_hits_total 5"), "{body}");
+        assert!(body.contains("lowdiff_gc_leaked 3"));
+        assert!(body.contains("lowdiff_scrub_passes_total 0"));
+        assert!(body.contains("lowdiff_storage_slow_ops_total 0"));
+        assert!(
+            body.contains("lowdiff_storage_ops_total{tier=\"durable\",op=\"put\"} 1"),
+            "{body}"
+        );
+        assert!(
+            body.contains(
+                "lowdiff_storage_op_duration_seconds_bucket{tier=\"durable\",op=\"put\",le=\"+Inf\"} 1"
+            ),
+            "histogram +Inf bucket: {body}"
+        );
+        assert!(
+            body.contains("lowdiff_storage_op_duration_seconds_count{tier=\"durable\",op=\"get\"} 1"),
+            "{body}"
+        );
+
+        // POST /scrub parks a request the driver drains
+        let (head, _) = http(addr, "POST", "/scrub");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(state.take_scrub());
+        assert!(!state.take_scrub(), "drained");
+    }
+
+    #[test]
+    fn health_dead_on_stale_heartbeats() {
+        let bus = Arc::new(TelemetryBus::new());
+        let hb = Arc::new(HeartbeatTable::new(2));
+        // rank 1 never beats; rank 0 beats well past the tiny timeout, so
+        // activity-relative staleness declares rank 1 dead
+        thread::sleep(Duration::from_millis(20));
+        hb.beat(0, 1, 0);
+        let state =
+            Arc::new(ObsState::new(bus, None, Some(hb), None).with_heartbeat_timeout(0.001));
+        let srv = ObsServer::serve(Arc::clone(&state), "127.0.0.1:0").unwrap();
+        let (head, body) = http(srv.local_addr(), "GET", "/health");
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        assert!(body.contains("\"status\":\"dead\""), "{body}");
+        assert!(body.contains("\"heartbeat_dead\""), "{body}");
+        assert!(body.contains("\"dead_ranks\":[1]"), "{body}");
     }
 }

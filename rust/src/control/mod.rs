@@ -31,9 +31,17 @@
 //!   level, commit phases, replay) and serialize to a
 //!   chrome://tracing-compatible trace journal beside the chain;
 //! - [`http`] — a std-only threaded mini-HTTP server ([`ObsServer`])
-//!   exposing `GET /stats|/metrics|/trace|/chain` and `POST
-//!   /retune|/compact`, the latter routed through the same safe-point
-//!   paths the actuator uses.
+//!   exposing `GET /stats|/metrics|/trace|/chain|/storage|/health` and
+//!   `POST /retune|/compact|/scrub`, the mutating verbs routed through
+//!   the same safe-point paths the actuator uses.
+//!
+//! PR 10 deepens the storage plane: `/metrics` grows real Prometheus
+//! histograms from the [`Observed`](crate::storage::Observed)
+//! middleware's per-tier latency [`LogHistogram`](crate::util::stats::LogHistogram)s,
+//! `/storage` tabulates per-tier/per-op/per-family traffic, and
+//! `/health` folds heartbeat death, scrub damage
+//! ([`Scrubber`](crate::pipeline::Scrubber)), GC leaks and sustained
+//! slow I/O into one machine-readable verdict.
 //!
 //! Wiring, safety points and the scheduler policy are documented in
 //! `docs/CONTROL.md`; the observability surface in
@@ -49,7 +57,7 @@ pub use actuate::{
     converge_synthetic, replay_bound, Actuator, ActuatorConfig, ControlState, Retune, Window,
     CONTROL_STATE_OBJECT,
 };
-pub use http::{ControlView, ObsServer, ObsState};
+pub use http::{ControlView, ObsServer, ObsState, ReportGauges};
 pub use iosched::{autoscale_budget, GatedStore, IoGate, IoGateConfig, IoGateStats, PersistGuard};
 pub use telemetry::{BwEstimator, MtbfEstimator, Snapshot, TelemetryBus};
 pub use trace::{Span, StageSummary, TraceEvent, Tracer, TRACE_OBJECT};

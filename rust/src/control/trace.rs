@@ -107,6 +107,11 @@ pub struct Tracer {
     next_id: AtomicU64,
     recorded: AtomicU64,
     dropped: AtomicU64,
+    /// events excluded from the MOST RECENT capped journal write
+    /// ([`Tracer::to_chrome_jsonl_capped`]) — a gauge, not cumulative:
+    /// the journal is rewritten wholesale at every control tick, so
+    /// re-dropping the same old events each tick must not double-count
+    journal_dropped: AtomicU64,
 }
 
 impl Default for Tracer {
@@ -126,6 +131,7 @@ impl Tracer {
             next_id: AtomicU64::new(0),
             recorded: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            journal_dropped: AtomicU64::new(0),
         }
     }
 
@@ -222,8 +228,21 @@ impl Tracer {
     }
 
     /// Exact per-stage totals over the whole run, sorted by stage name.
+    /// When the byte-capped journal writer truncated events, a synthetic
+    /// `journal.dropped` row carries how many the latest journal lost.
     pub fn summary(&self) -> Vec<StageSummary> {
-        self.agg.lock().unwrap().values().copied().collect()
+        let mut out: Vec<StageSummary> = self.agg.lock().unwrap().values().copied().collect();
+        let jd = self.journal_dropped();
+        if jd > 0 {
+            out.push(StageSummary { name: "journal.dropped", count: jd, ..Default::default() });
+        }
+        out
+    }
+
+    /// Ring events that did not fit the byte budget on the most recent
+    /// [`Tracer::to_chrome_jsonl_capped`] call.
+    pub fn journal_dropped(&self) -> u64 {
+        self.journal_dropped.load(Ordering::Relaxed)
     }
 
     /// The retained ring as chrome://tracing JSONL (one event per line —
@@ -234,6 +253,34 @@ impl Tracer {
         let mut out = String::with_capacity(events.len() * 128);
         for ev in events {
             out.push_str(&ev.to_chrome_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// [`Tracer::to_chrome_jsonl`] under a byte budget
+    /// (`--trace-journal-max-kb`): the NEWEST events that fit are kept,
+    /// older ones are truncated away — the persisted journal stays a
+    /// bounded tail instead of growing with run length. The number
+    /// truncated is published via [`Tracer::journal_dropped`] (and as a
+    /// `journal.dropped` summary row).
+    pub fn to_chrome_jsonl_capped(&self, max_bytes: usize) -> String {
+        let events = self.recent(usize::MAX);
+        let mut lines: Vec<String> = Vec::new();
+        let mut total = 0usize;
+        for ev in events.iter().rev() {
+            let line = ev.to_chrome_json();
+            if total + line.len() + 1 > max_bytes {
+                break;
+            }
+            total += line.len() + 1;
+            lines.push(line);
+        }
+        self.journal_dropped
+            .store((events.len() - lines.len()) as u64, Ordering::Relaxed);
+        let mut out = String::with_capacity(total);
+        for line in lines.iter().rev() {
+            out.push_str(line);
             out.push('\n');
         }
         out
@@ -374,6 +421,29 @@ mod tests {
         assert!(lines[0].contains("flush \\\"q\\\""), "names are escaped: {}", lines[0]);
         assert!(lines[1].contains("\"ph\":\"i\"") && lines[1].contains("\"s\":\"g\""));
         assert!(lines[1].contains("\"extra\":3"));
+    }
+
+    #[test]
+    fn capped_journal_keeps_the_newest_tail_and_counts_drops() {
+        let t = Arc::new(Tracer::new(256));
+        for i in 0..100u64 {
+            t.instant("e", 0, i, 0);
+        }
+        let full = t.to_chrome_jsonl();
+        let capped = t.to_chrome_jsonl_capped(full.len() / 2);
+        assert!(capped.len() <= full.len() / 2);
+        let lines: Vec<&str> = capped.lines().collect();
+        assert!(!lines.is_empty() && lines.len() < 100);
+        assert!(lines.last().unwrap().contains("\"step\":99"), "newest event kept");
+        assert_eq!(t.journal_dropped(), (100 - lines.len()) as u64);
+        assert!(
+            t.summary().iter().any(|s| s.name == "journal.dropped" && s.count > 0),
+            "drops surface in the summary"
+        );
+        // an uncapped-size budget drops nothing and resets the gauge
+        let all = t.to_chrome_jsonl_capped(usize::MAX);
+        assert_eq!(all, full);
+        assert_eq!(t.journal_dropped(), 0);
     }
 
     #[test]

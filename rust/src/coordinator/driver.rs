@@ -29,10 +29,11 @@ use crate::cluster::{self, Cluster, ClusterConfig, Detector, HeartbeatTable};
 use crate::collective::sparse_allgather_sum;
 use crate::compress::topk_mask_with_scratch;
 use crate::control::actuate::{Actuator, ActuatorConfig, ControlState, Retune};
-use crate::control::http::{ControlView, ObsServer, ObsState};
+use crate::control::http::{ControlView, ObsServer, ObsState, ReportGauges};
 use crate::control::iosched::{autoscale_budget, IoGate, IoGateConfig};
 use crate::control::telemetry::TelemetryBus;
 use crate::control::trace::{Tracer, TRACE_OBJECT};
+use crate::pipeline::Scrubber;
 use crate::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
 use crate::coordinator::config_opt::SystemParams;
 use crate::coordinator::failure::{FailureInjector, FailureKind};
@@ -42,7 +43,7 @@ use crate::coordinator::recovery::{recover, RecoveryMode};
 use crate::optim::{Adam, ModelState};
 use crate::runtime::ModelRuntime;
 use crate::sparse::SparseGrad;
-use crate::storage::StorageBackend;
+use crate::storage::{Namespaced, Observed, StorageBackend, StorageObs};
 use crate::tensor::Flat;
 use crate::util::rng::Rng;
 
@@ -162,6 +163,20 @@ pub struct TrainConfig {
     /// declared dead and recovered through the same consistent-cut path
     /// injected deaths use; <= 0 disables
     pub heartbeat_timeout: f64,
+    /// storage-plane slow-op threshold (`--slow-io-ms`): an observed
+    /// storage op at or above this latency bumps the slow counters and
+    /// emits an `io.slow.*` trace event; 0 disables
+    pub slow_io_ms: u64,
+    /// size cap for the persisted trace journal
+    /// (`--trace-journal-max-kb`): the newest events that fit are kept,
+    /// oldest dropped first, drops reported in the trace summary
+    pub trace_journal_max_kb: usize,
+    /// background chain-scrubbing interval in seconds (`--scrub-secs`):
+    /// every interval the scrubber re-verifies the committed cover and
+    /// repairs damaged fast-tier copies from the durable tier; 0 spawns
+    /// the scrubber on-demand-only (`POST /scrub`) when the
+    /// observability plane is up
+    pub scrub_secs: f64,
 }
 
 impl Default for TrainConfig {
@@ -193,6 +208,9 @@ impl Default for TrainConfig {
             serve: None,
             trace: false,
             heartbeat_timeout: 0.0,
+            slow_io_ms: 100,
+            trace_journal_max_kb: 256,
+            scrub_secs: 0.0,
         }
     }
 }
@@ -326,8 +344,26 @@ pub fn train(
         Detector::spawn(Arc::clone(t), Duration::from_secs_f64(cfg.heartbeat_timeout), poll)
     });
 
+    // the storage-plane observability registry (docs/OBSERVABILITY.md):
+    // wrap the durable root in the [`Observed`] middleware so every
+    // physical op below this point is histogrammed per tier/op/family and
+    // ops past `--slow-io-ms` are traced; the rank namespaces and the
+    // in-memory fast tier get their own labels further down
+    let storage_obs: Option<Arc<StorageObs>> =
+        wants_obs.then(|| Arc::new(StorageObs::new(cfg.slow_io_ms)));
+    let store: Arc<dyn StorageBackend> = match &storage_obs {
+        Some(so) => {
+            Arc::new(Observed::new(store, Arc::clone(so), "durable").with_trace(tracer.clone()))
+        }
+        None => store,
+    };
+
     // per-strategy checkpointing processes
     let mem_tier: Arc<dyn StorageBackend> = Arc::new(crate::storage::MemStore::new());
+    let mem_tier: Arc<dyn StorageBackend> = match &storage_obs {
+        Some(so) => Arc::new(Observed::new(mem_tier, Arc::clone(so), "memory")),
+        None => mem_tier,
+    };
     // recovery/GC interop must see logical objects even when the
     // checkpointer writes them sharded; the cluster runtime builds its own
     // shard-aware views, so it gets the raw store
@@ -337,18 +373,39 @@ pub fn train(
         } else {
             Arc::clone(&store)
         };
+    // the background chain scrubber (docs/OBSERVABILITY.md): continuous
+    // re-verification of the committed cover through the logical view
+    // (shard indexes verify transitively), reads shaped through the same
+    // I/O gate compaction pays; interval 0 = on-demand only (POST /scrub)
+    let scrubber: Option<Scrubber> = (wants_obs || cfg.scrub_secs > 0.0).then(|| {
+        Scrubber::spawn_obs(
+            Arc::clone(&logical),
+            Duration::from_secs_f64(cfg.scrub_secs.max(0.0)),
+            gate.clone(),
+            tracer.clone(),
+        )
+    });
     // the observability/control HTTP plane: reads ride the bus/tracer/
-    // heartbeat handles directly; writes (POST /retune, /compact) park in
-    // the ObsState and the driver drains them at the same safe points the
-    // §V-C actuator uses — the server itself never touches a knob
+    // heartbeat handles directly; writes (POST /retune, /compact, /scrub)
+    // park in the ObsState and the driver drains them at the same safe
+    // points the §V-C actuator uses — the server itself never touches a
+    // knob
     let obs: Option<Arc<ObsState>> = wants_obs.then(|| {
         let obs_bus = Arc::clone(bus.as_ref().expect("observability implies a telemetry bus"));
-        Arc::new(ObsState::new(
+        let mut st = ObsState::new(
             obs_bus,
             tracer.clone(),
             heartbeats.clone(),
             Some(Arc::clone(&logical)),
-        ))
+        )
+        .with_heartbeat_timeout(cfg.heartbeat_timeout);
+        if let Some(so) = &storage_obs {
+            st = st.with_storage_obs(Arc::clone(so));
+        }
+        if let Some(s) = &scrubber {
+            st = st.with_scrub(s.live_handle());
+        }
+        Arc::new(st)
     });
     if let Some(o) = &obs {
         o.set_control(ControlView {
@@ -371,6 +428,7 @@ pub fn train(
         gate: gate.clone(),
         trace: tracer.clone(),
         heartbeats: heartbeats.clone(),
+        storage: storage_obs.clone(),
     };
     // interference-autoscaling window trackers (deltas between ticks)
     let mut last_deferred = 0.0f64;
@@ -649,6 +707,12 @@ pub fn train(
                         log::info!("manual compaction retune at step {target}: factor {mf}");
                         apply_retune(r, target, &mut eff, &procs, &mut report);
                     }
+                    if o.take_scrub() {
+                        if let Some(s) = &scrubber {
+                            log::info!("manual scrub pass requested at step {target}");
+                            s.notify();
+                        }
+                    }
                 }
                 // satellite: interference autoscaling — shrink the
                 // background budget when this window deferred persists or
@@ -682,7 +746,9 @@ pub fn train(
                     }
                 }
                 if let Some(t) = &tracer {
-                    if let Err(e) = store.put(TRACE_OBJECT, t.to_chrome_jsonl().as_bytes()) {
+                    let journal =
+                        t.to_chrome_jsonl_capped(cfg.trace_journal_max_kb.saturating_mul(1024));
+                    if let Err(e) = store.put(TRACE_OBJECT, journal.as_bytes()) {
                         log::warn!("trace journal persist failed: {e:#}");
                     }
                 }
@@ -807,6 +873,21 @@ pub fn train(
     report.zstd_level = eff.zstd_level;
     report.final_codec = eff.codec.name();
     report.final_io_budget = gate.as_ref().map(|g| g.rate()).unwrap_or(eff.io_budget);
+    // drain the scrubber: one final verification pass over the settled
+    // chain (so a clean exit always leaves a freshly verified cover),
+    // then fold its lifetime counters into the report
+    if let Some(s) = scrubber {
+        let st = s.finish();
+        report.scrub_passes = st.passes;
+        report.scrub_objects = st.objects_scrubbed;
+        report.scrub_corrupt = st.corrupt;
+        report.scrub_repaired = st.repaired;
+        report.scrub_damaged = st.damaged;
+    }
+    if let Some(so) = &storage_obs {
+        report.slow_ops = so.slow_ops();
+        report.storage_ops = so.total_ops();
+    }
     // final persistence of the run's observability artifacts: the settled
     // trace journal and the estimator state the next incarnation warm-
     // starts from — both beside the chain, both GC-immune sidecars
@@ -814,9 +895,11 @@ pub fn train(
         let (recorded, dropped) = t.counts();
         report.trace_events = recorded;
         report.trace_dropped = dropped;
-        if let Err(e) = store.put(TRACE_OBJECT, t.to_chrome_jsonl().as_bytes()) {
+        let journal = t.to_chrome_jsonl_capped(cfg.trace_journal_max_kb.saturating_mul(1024));
+        if let Err(e) = store.put(TRACE_OBJECT, journal.as_bytes()) {
             log::warn!("trace journal persist failed: {e:#}");
         }
+        report.trace_journal_dropped = t.journal_dropped();
     }
     if let Some(act) = &actuator {
         if let Err(e) = act.export_state().save(store.as_ref()) {
@@ -886,6 +969,13 @@ fn refresh_obs(
     report: &RunReport,
 ) {
     let Some(o) = obs else { return };
+    // report-only counters published as Prometheus series through the
+    // same state the /stats view rides
+    o.set_gauges(ReportGauges {
+        pool_hits: report.pool_hits,
+        pool_misses: report.pool_misses,
+        gc_leaks: report.gc_leaks,
+    });
     let (mtbf, bw) = actuator.as_ref().map(|a| a.estimates()).unwrap_or((0.0, 0.0));
     o.set_control(ControlView {
         strategy: cfg.strategy.name().into(),
@@ -978,6 +1068,7 @@ struct ObsHandles {
     gate: Option<Arc<IoGate>>,
     trace: Option<Arc<Tracer>>,
     heartbeats: Option<Arc<HeartbeatTable>>,
+    storage: Option<Arc<StorageObs>>,
 }
 
 /// The per-strategy background processes.
@@ -1034,8 +1125,14 @@ fn spawn_procs(
                 log::warn!("generation scan failed ({e:#}); starting at 0");
                 0
             });
+            // rank namespaces observed as ONE shared "rank" tier (the
+            // label folds all ranks together; the physical ops underneath
+            // still count in the wrapped root's "durable" tier)
+            let shared = Arc::clone(store);
+            let so = obs.storage.clone();
+            let tr = obs.trace.clone();
             Procs::Cluster {
-                cluster: Cluster::spawn(
+                cluster: Cluster::spawn_with(
                     Arc::clone(store),
                     parts,
                     ClusterConfig {
@@ -1052,6 +1149,19 @@ fn spawn_procs(
                         gate: obs.gate.clone(),
                         trace: obs.trace.clone(),
                         heartbeats: obs.heartbeats.clone(),
+                    },
+                    move |r| {
+                        let ns: Arc<dyn StorageBackend> = Arc::new(Namespaced::new(
+                            Arc::clone(&shared),
+                            Manifest::gen_rank_prefix(generation, r),
+                        ));
+                        match &so {
+                            Some(so) => Arc::new(
+                                Observed::new(ns, Arc::clone(so), "rank")
+                                    .with_trace(tr.clone()),
+                            ),
+                            None => ns,
+                        }
                     },
                 ),
             }

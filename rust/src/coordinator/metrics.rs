@@ -97,6 +97,21 @@ pub struct RunReport {
     /// and events dropped because the buffer wrapped
     pub trace_events: u64,
     pub trace_dropped: u64,
+    /// oldest events cut from the persisted trace journal by the
+    /// `--trace-journal-max-kb` size cap (gauge: as of the last rewrite)
+    pub trace_journal_dropped: u64,
+    /// storage plane (`Observed`): ops at or above `--slow-io-ms` and
+    /// the total ops observed across every tier
+    pub slow_ops: u64,
+    pub storage_ops: u64,
+    /// background scrubber: verification passes, objects verified,
+    /// distinct objects flagged corrupt, objects repaired (fast-tier
+    /// re-fetch), and the end-of-run damaged gauge
+    pub scrub_passes: u64,
+    pub scrub_objects: u64,
+    pub scrub_corrupt: u64,
+    pub scrub_repaired: u64,
+    pub scrub_damaged: u64,
     /// the I/O-gate byte budget in force at run end (equals the configured
     /// `--io-budget` unless interference autoscaling moved it)
     pub final_io_budget: f64,
@@ -243,6 +258,14 @@ impl RunReport {
             .f64("compact_secs", self.compact_secs)
             .u64("trace_events", self.trace_events)
             .u64("trace_dropped", self.trace_dropped)
+            .u64("trace_journal_dropped", self.trace_journal_dropped)
+            .u64("slow_ops", self.slow_ops)
+            .u64("storage_ops", self.storage_ops)
+            .u64("scrub_passes", self.scrub_passes)
+            .u64("scrub_objects", self.scrub_objects)
+            .u64("scrub_corrupt", self.scrub_corrupt)
+            .u64("scrub_repaired", self.scrub_repaired)
+            .u64("scrub_damaged", self.scrub_damaged)
             .raw("codec", &{
                 let mut codecs = JsonObject::new();
                 for c in PayloadCodec::ALL {
@@ -362,6 +385,14 @@ mod tests {
         assert!(j.contains("\"iters\":10"), "{j}");
         assert!(j.contains("\"detected_failures\":1"), "{j}");
         assert!(j.contains("\"trace_events\":7"), "{j}");
+        r.scrub_passes = 3;
+        r.scrub_corrupt = 1;
+        r.slow_ops = 2;
+        let j = r.to_json();
+        assert!(j.contains("\"scrub_passes\":3"), "{j}");
+        assert!(j.contains("\"scrub_corrupt\":1"), "{j}");
+        assert!(j.contains("\"slow_ops\":2"), "{j}");
+        assert!(j.contains("\"scrub_damaged\":0"), "{j}");
         assert!(j.contains("\"final_io_budget\":1500000"), "{j}");
         assert!(j.contains("\"zstd_level\":3"), "{j}");
         assert!(j.contains("\"final_codec\":\"quant8\""), "{j}");

@@ -58,9 +58,18 @@ commands:
            [--fsync]      fsync files AND parent dir on every put (durable)
            [--serve ADDR] observability/control plane: HTTP server on ADDR
                           (e.g. 127.0.0.1:9090) with GET /stats /metrics
-                          /trace /chain and POST /retune /compact
+                          /trace /chain /storage /health and POST /retune
+                          /compact /scrub
            [--trace]      record per-stage spans to a chrome://tracing
                           JSONL journal persisted beside the chain
+           [--trace-journal-max-kb KB]  cap the persisted journal at KB
+                          kilobytes, keeping the newest events (default 256)
+           [--slow-io-ms MS]  storage ops at or above MS latency count as
+                          slow and emit io.slow.* trace events (default
+                          100; 0 disables)
+           [--scrub-secs SECS]  background chain scrubbing: re-verify the
+                          committed cover every SECS and repair damaged
+                          fast-tier copies (0 = on-demand via POST /scrub)
            [--heartbeat-timeout SECS]  declare a silent rank dead after
                           SECS and recover via the consistent-cut path
                           (cluster runs; 0 disables)
@@ -142,6 +151,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         serve: args.get("serve").map(|s| s.to_string()),
         trace: args.flag("trace"),
         heartbeat_timeout: args.parse_or("heartbeat-timeout", 0.0f64)?,
+        slow_io_ms: args.parse_or("slow-io-ms", 100u64)?,
+        trace_journal_max_kb: args.parse_or("trace-journal-max-kb", 256usize)?,
+        scrub_secs: args.parse_or("scrub-secs", 0.0f64)?,
         ..TrainConfig::default()
     };
     if cfg.ranks > 1 && !cfg.uses_cluster() {

@@ -34,16 +34,25 @@
 //! merged container preserves every per-step payload). Invariants and the
 //! collectibility rule for superseded raw diffs are documented in
 //! `docs/PIPELINE.md`.
+//!
+//! [`scrub`] adds the background **chain scrubber**: a second Compactor-
+//! style thread that continuously re-verifies the committed cover
+//! (container CRCs, delta-full base pinning, shard indexes transitively)
+//! and repairs damaged fast-tier copies from the durable tier, so
+//! corruption is surfaced on the operator's schedule instead of at
+//! restore time (`docs/OBSERVABILITY.md`).
 
 pub mod compact;
 pub mod encode;
 pub mod persist;
+pub mod scrub;
 
 pub use compact::{
     compact_chain, compact_hierarchy, CompactStats, Compactor, CompactorConfig, DEFAULT_MAX_LEVEL,
 };
 pub use encode::{Encoded, Encoder};
 pub use persist::Sink;
+pub use scrub::{scrub_pass, verify_object, ScrubStats, Scrubber};
 
 /// Write-path counters shared by every pipeline composition (historically
 /// defined by the checkpointer; re-exported from there for compatibility).

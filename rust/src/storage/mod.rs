@@ -42,6 +42,10 @@
 //! - [`ImmutableStore`]: test harness rejecting any `put` to an existing
 //!   name — enforces the committed-names-are-immutable contract the
 //!   cluster's generation namespaces rely on.
+//! - [`Observed`]: observability middleware recording per-tier, per-op
+//!   and per-name-family counts, bytes and latency histograms into a
+//!   shared [`StorageObs`] registry, with slow-op trace events
+//!   (`docs/OBSERVABILITY.md`).
 //!
 //! # Failure model
 //!
@@ -65,6 +69,7 @@ mod immutable;
 mod local;
 mod mem;
 mod namespaced;
+mod observed;
 mod pool;
 mod sharded;
 mod throttled;
@@ -75,6 +80,7 @@ pub use immutable::ImmutableStore;
 pub use local::LocalDir;
 pub use mem::MemStore;
 pub use namespaced::Namespaced;
+pub use observed::{family_of, Observed, OpStats, StorageObs, TierObs, FAMILY_NAMES, OP_NAMES};
 pub use pool::{WriteHandle, WriterPool};
 pub use sharded::Sharded;
 pub use throttled::Throttled;

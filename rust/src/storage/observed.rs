@@ -1,0 +1,368 @@
+//! Deep storage-plane observability: the [`Observed`] middleware wraps
+//! any [`StorageBackend`] (the durable root, a `Tiered` fast tier, a
+//! cluster rank namespace) and records every op — put / get / delete /
+//! list / demote — into a shared [`StorageObs`] registry: per-tier,
+//! per-op counts, bytes, error counts and lock-free latency histograms
+//! ([`LogHistogram`]), plus per-name-family traffic counters classified
+//! through the existing [`Manifest`] parsers (full / diff / merged /
+//! record / sidecar). Ops slower than the registry's slow threshold
+//! (`--slow-io-ms`) bump a `slow_ops` counter and emit an `io.slow.*`
+//! event into the [`Tracer`] ring, so tail stalls are visible in the
+//! trace journal next to the pipeline spans they delayed.
+//!
+//! Same shape as [`Namespaced`](super::Namespaced) /
+//! [`GatedStore`](crate::control::GatedStore): a thin forwarding
+//! wrapper, zero behavior change, composable anywhere in the stack.
+//! The recording cost is one `Instant` pair and a handful of relaxed
+//! atomic increments per op (bounded memory — no sample vectors), which
+//! the `observed_overhead` bench pins at <5% of persist-path latency.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{StorageBackend, StorageStats};
+use crate::checkpoint::manifest::Manifest;
+use crate::control::actuate::CONTROL_STATE_OBJECT;
+use crate::control::trace::{Tracer, TRACE_OBJECT};
+use crate::util::stats::LogHistogram;
+
+/// Storage operations the middleware distinguishes.
+pub const OP_NAMES: [&str; 5] = ["put", "get", "delete", "list", "demote"];
+const N_OPS: usize = OP_NAMES.len();
+
+const OP_PUT: usize = 0;
+const OP_GET: usize = 1;
+const OP_DELETE: usize = 2;
+const OP_LIST: usize = 3;
+const OP_DEMOTE: usize = 4;
+
+/// static `Tracer` event names for slow ops, indexed like [`OP_NAMES`]
+/// (`TraceEvent` names are `&'static str`, so the object name cannot
+/// ride along — the tier histogram + journal timestamp locate it).
+const SLOW_NAMES: [&str; N_OPS] =
+    ["io.slow.put", "io.slow.get", "io.slow.delete", "io.slow.list", "io.slow.demote"];
+
+/// Name families traffic is classified into, via the [`Manifest`]
+/// parsers: chain objects by kind (`full` covers carry fulls, `diff`
+/// covers raw diffs and batches), `record` covers global commit records
+/// and shard artifacts (shard pieces + `.shards` indexes), `sidecar`
+/// the trace journal and control-state objects, `other` the rest.
+pub const FAMILY_NAMES: [&str; 6] = ["full", "diff", "merged", "record", "sidecar", "other"];
+const N_FAMILIES: usize = FAMILY_NAMES.len();
+
+/// Family index for an object name (see [`FAMILY_NAMES`]).
+pub fn family_of(name: &str) -> usize {
+    match Manifest::step_range(name) {
+        Some(("full", _, _)) | Some(("carry", _, _)) => 0,
+        Some(("diff", _, _)) | Some(("batch", _, _)) => 1,
+        Some(("merged", _, _)) => 2,
+        _ => {
+            if Manifest::parse_global(name).is_some() || Manifest::is_shard_artifact(name) {
+                3
+            } else if name.ends_with(TRACE_OBJECT) || name.ends_with(CONTROL_STATE_OBJECT) {
+                4
+            } else {
+                5
+            }
+        }
+    }
+}
+
+/// One op's counters on one tier.
+#[derive(Debug, Default)]
+pub struct OpStats {
+    pub count: AtomicU64,
+    pub bytes: AtomicU64,
+    pub errors: AtomicU64,
+    pub lat: LogHistogram,
+}
+
+/// One name family's traffic counters on one tier.
+#[derive(Debug, Default)]
+pub struct FamilyStats {
+    pub ops: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+/// Counters for one labeled tier; shared by every [`Observed`] wrapper
+/// carrying the same label (all cluster rank namespaces fold into one
+/// `rank` tier — bounded label cardinality by construction).
+#[derive(Debug)]
+pub struct TierObs {
+    tier: String,
+    ops: [OpStats; N_OPS],
+    families: [FamilyStats; N_FAMILIES],
+    slow_ops: AtomicU64,
+}
+
+impl TierObs {
+    fn new(tier: &str) -> TierObs {
+        TierObs {
+            tier: tier.to_string(),
+            ops: Default::default(),
+            families: Default::default(),
+            slow_ops: AtomicU64::new(0),
+        }
+    }
+
+    pub fn tier(&self) -> &str {
+        &self.tier
+    }
+
+    /// Per-op counters, indexed like [`OP_NAMES`].
+    pub fn op(&self, i: usize) -> &OpStats {
+        &self.ops[i]
+    }
+
+    /// Per-family counters, indexed like [`FAMILY_NAMES`].
+    pub fn family(&self, i: usize) -> &FamilyStats {
+        &self.families[i]
+    }
+
+    pub fn slow_ops(&self) -> u64 {
+        self.slow_ops.load(Ordering::Relaxed)
+    }
+
+    /// Ops recorded on this tier across every op kind.
+    pub fn total_ops(&self) -> u64 {
+        self.ops.iter().map(|o| o.count.load(Ordering::Relaxed)).sum()
+    }
+
+    fn record(&self, op: usize, family: usize, bytes: u64, ok: bool, ns: u64) {
+        let o = &self.ops[op];
+        o.count.fetch_add(1, Ordering::Relaxed);
+        o.bytes.fetch_add(bytes, Ordering::Relaxed);
+        if !ok {
+            o.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        o.lat.record_ns(ns);
+        let f = &self.families[family];
+        f.ops.fetch_add(1, Ordering::Relaxed);
+        f.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Process-wide registry of observed tiers plus the slow-op policy.
+/// One per run, shared between every [`Observed`] wrapper and the HTTP
+/// plane (`GET /storage`, `/metrics` histograms, `/health`).
+#[derive(Debug, Default)]
+pub struct StorageObs {
+    tiers: Mutex<Vec<Arc<TierObs>>>,
+    /// ops at or above this latency are slow (0 disables)
+    slow_ns: AtomicU64,
+    slow_ops: AtomicU64,
+}
+
+impl StorageObs {
+    pub fn new(slow_io_ms: u64) -> StorageObs {
+        let obs = StorageObs::default();
+        obs.slow_ns.store(slow_io_ms.saturating_mul(1_000_000), Ordering::Relaxed);
+        obs
+    }
+
+    /// Get-or-create the shared counters for a tier label.
+    pub fn tier(&self, name: &str) -> Arc<TierObs> {
+        let mut tiers = self.tiers.lock().unwrap();
+        if let Some(t) = tiers.iter().find(|t| t.tier == name) {
+            return Arc::clone(t);
+        }
+        let t = Arc::new(TierObs::new(name));
+        tiers.push(Arc::clone(&t));
+        t
+    }
+
+    /// Every registered tier, registration order (stable for exposition).
+    pub fn tiers(&self) -> Vec<Arc<TierObs>> {
+        self.tiers.lock().unwrap().clone()
+    }
+
+    /// Total ops across every tier that crossed the slow threshold.
+    pub fn slow_ops(&self) -> u64 {
+        self.slow_ops.load(Ordering::Relaxed)
+    }
+
+    /// Total ops recorded across every tier.
+    pub fn total_ops(&self) -> u64 {
+        self.tiers().iter().map(|t| t.total_ops()).sum()
+    }
+
+    pub fn slow_threshold_ns(&self) -> u64 {
+        self.slow_ns.load(Ordering::Relaxed)
+    }
+}
+
+/// The middleware. Wrap a backend, label the tier, optionally attach
+/// the tracer; every storage op forwards unchanged and is recorded.
+pub struct Observed {
+    inner: Arc<dyn StorageBackend>,
+    obs: Arc<StorageObs>,
+    tier: Arc<TierObs>,
+    trace: Option<Arc<Tracer>>,
+}
+
+impl Observed {
+    pub fn new(inner: Arc<dyn StorageBackend>, obs: Arc<StorageObs>, tier: &str) -> Observed {
+        let tier = obs.tier(tier);
+        Observed { inner, obs, tier, trace: None }
+    }
+
+    /// Attach the tracer slow ops report into.
+    pub fn with_trace(mut self, trace: Option<Arc<Tracer>>) -> Observed {
+        self.trace = trace;
+        self
+    }
+
+    fn record(&self, op: usize, family: usize, bytes: u64, ok: bool, t0: Instant) {
+        let ns = t0.elapsed().as_nanos() as u64;
+        self.tier.record(op, family, bytes, ok, ns);
+        let slow = self.obs.slow_threshold_ns();
+        if slow > 0 && ns >= slow {
+            self.obs.slow_ops.fetch_add(1, Ordering::Relaxed);
+            self.tier.slow_ops.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = &self.trace {
+                t.complete(SLOW_NAMES[op], ns as f64 / 1e9, 0, 0, bytes, 0);
+            }
+        }
+    }
+}
+
+impl StorageBackend for Observed {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let t0 = Instant::now();
+        let r = self.inner.put(name, bytes);
+        self.record(OP_PUT, family_of(name), bytes.len() as u64, r.is_ok(), t0);
+        r
+    }
+
+    fn get(&self, name: &str) -> Result<Vec<u8>> {
+        let t0 = Instant::now();
+        let r = self.inner.get(name);
+        let bytes = r.as_ref().map(|b| b.len() as u64).unwrap_or(0);
+        self.record(OP_GET, family_of(name), bytes, r.is_ok(), t0);
+        r
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        let t0 = Instant::now();
+        let r = self.inner.delete(name);
+        self.record(OP_DELETE, family_of(name), 0, r.is_ok(), t0);
+        r
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let t0 = Instant::now();
+        let r = self.inner.list();
+        // bytes for a list = names returned (a cheap cardinality proxy)
+        let n = r.as_ref().map(|v| v.len() as u64).unwrap_or(0);
+        self.record(OP_LIST, N_FAMILIES - 1, n, r.is_ok(), t0);
+        r
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        // forwarded unrecorded: backends answer from a stat/map probe and
+        // the default impl would otherwise double-count as a get
+        self.inner.exists(name)
+    }
+
+    fn put_vectored(&self, name: &str, parts: &[&[u8]]) -> Result<()> {
+        let t0 = Instant::now();
+        let r = self.inner.put_vectored(name, parts);
+        let bytes: u64 = parts.iter().map(|p| p.len() as u64).sum();
+        self.record(OP_PUT, family_of(name), bytes, r.is_ok(), t0);
+        r
+    }
+
+    fn demote(&self, name: &str) -> Result<bool> {
+        let t0 = Instant::now();
+        let r = self.inner.demote(name);
+        self.record(OP_DEMOTE, family_of(name), 0, r.is_ok(), t0);
+        r
+    }
+
+    fn storage_stats(&self) -> StorageStats {
+        self.inner.storage_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn wrapped() -> (Arc<StorageObs>, Observed) {
+        let obs = Arc::new(StorageObs::new(0));
+        let o = Observed::new(Arc::new(MemStore::new()), Arc::clone(&obs), "t");
+        (obs, o)
+    }
+
+    #[test]
+    fn classifies_name_families() {
+        assert_eq!(FAMILY_NAMES[family_of(&Manifest::full_name(10))], "full");
+        assert_eq!(FAMILY_NAMES[family_of(&Manifest::carry_name(10))], "full");
+        assert_eq!(FAMILY_NAMES[family_of(&Manifest::diff_name(11))], "diff");
+        assert_eq!(FAMILY_NAMES[family_of(&Manifest::batch_name(11, 12))], "diff");
+        assert_eq!(FAMILY_NAMES[family_of(&Manifest::merged_name(11, 14))], "merged");
+        assert_eq!(FAMILY_NAMES[family_of(&Manifest::global_name(0, 7))], "record");
+        let sharded = Manifest::shard_index_name(&Manifest::diff_name(11));
+        assert_eq!(FAMILY_NAMES[family_of(&sharded)], "record");
+        assert_eq!(FAMILY_NAMES[family_of(TRACE_OBJECT)], "sidecar");
+        assert_eq!(FAMILY_NAMES[family_of(CONTROL_STATE_OBJECT)], "sidecar");
+        assert_eq!(FAMILY_NAMES[family_of("random.bin")], "other");
+        // namespaced chain names classify through the prefix parsers
+        let ns = format!("{}{}", Manifest::gen_rank_prefix(1, 2), Manifest::diff_name(5));
+        assert_eq!(FAMILY_NAMES[family_of(&ns)], "diff");
+    }
+
+    #[test]
+    fn records_ops_bytes_and_errors() {
+        let (obs, o) = wrapped();
+        o.put(&Manifest::diff_name(1), b"abcd").unwrap();
+        assert_eq!(o.get(&Manifest::diff_name(1)).unwrap(), b"abcd");
+        assert!(o.get("missing").is_err());
+        o.list().unwrap();
+        o.delete(&Manifest::diff_name(1)).unwrap();
+        let t = obs.tier("t");
+        assert_eq!(t.op(OP_PUT).count.load(Ordering::Relaxed), 1);
+        assert_eq!(t.op(OP_PUT).bytes.load(Ordering::Relaxed), 4);
+        assert_eq!(t.op(OP_GET).count.load(Ordering::Relaxed), 2);
+        assert_eq!(t.op(OP_GET).errors.load(Ordering::Relaxed), 1);
+        assert_eq!(t.op(OP_GET).lat.count(), 2);
+        assert_eq!(t.op(OP_DELETE).count.load(Ordering::Relaxed), 1);
+        assert_eq!(t.op(OP_LIST).count.load(Ordering::Relaxed), 1);
+        assert_eq!(t.family(1).ops.load(Ordering::Relaxed), 3, "put+get+delete on a diff");
+        assert_eq!(t.total_ops(), 5);
+        assert_eq!(obs.total_ops(), 5);
+        assert_eq!(obs.slow_ops(), 0, "threshold disabled");
+    }
+
+    #[test]
+    fn slow_threshold_counts_and_traces() {
+        let obs = Arc::new(StorageObs::default());
+        // threshold 0 disabled by default; set 0ms->record everything slow
+        obs.slow_ns.store(1, Ordering::Relaxed);
+        let tracer = Arc::new(Tracer::new(64));
+        let o = Observed::new(Arc::new(MemStore::new()), Arc::clone(&obs), "t")
+            .with_trace(Some(Arc::clone(&tracer)));
+        o.put("x", b"1").unwrap();
+        assert_eq!(obs.slow_ops(), 1);
+        assert_eq!(obs.tier("t").slow_ops(), 1);
+        let ev = tracer.recent(8);
+        assert!(ev.iter().any(|e| e.name == "io.slow.put"), "slow put traced");
+    }
+
+    #[test]
+    fn same_label_shares_counters() {
+        let obs = Arc::new(StorageObs::new(0));
+        let a = Observed::new(Arc::new(MemStore::new()), Arc::clone(&obs), "rank");
+        let b = Observed::new(Arc::new(MemStore::new()), Arc::clone(&obs), "rank");
+        a.put("x", b"1").unwrap();
+        b.put("y", b"22").unwrap();
+        assert_eq!(obs.tiers().len(), 1);
+        let t = obs.tier("rank");
+        assert_eq!(t.op(OP_PUT).count.load(Ordering::Relaxed), 2);
+        assert_eq!(t.op(OP_PUT).bytes.load(Ordering::Relaxed), 3);
+    }
+}

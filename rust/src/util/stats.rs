@@ -1,5 +1,8 @@
-//! Streaming statistics (Welford) and percentile summaries for metrics and
-//! the bench harness (no criterion offline — DESIGN.md §2).
+//! Streaming statistics (Welford), percentile summaries and the
+//! lock-free [`LogHistogram`] for metrics and the bench harness (no
+//! criterion offline — DESIGN.md §2).
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Online mean/variance accumulator (Welford's algorithm).
 #[derive(Clone, Debug, Default)]
@@ -58,7 +61,135 @@ impl Welford {
     }
 }
 
-/// Exact percentile summary over a retained sample vector.
+/// Buckets in a [`LogHistogram`]: bucket `i` counts samples whose value
+/// in nanoseconds lies in `(2^(i-1), 2^i]` (bucket 0 takes 0 and 1 ns).
+/// 40 power-of-two buckets reach `2^39` ns ≈ 550 s — any slower storage
+/// op saturates into the last bucket rather than being dropped.
+pub const LOG_HISTOGRAM_BUCKETS: usize = 40;
+
+/// Lock-free log-scale histogram: fixed power-of-two nanosecond
+/// buckets, atomic relaxed increments (safe to share across writer
+/// threads by reference), mergeable across instances. This is the
+/// bounded hot-path recorder — O(1) memory and O(1) record — where
+/// [`Percentiles`] would retain every sample; quantiles come back as
+/// the matched bucket's upper bound, so they are exact to within one
+/// power of two (plenty for latency dashboards, not for asserting
+/// exact values in tests — keep `Percentiles` for those).
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: [AtomicU64; LOG_HISTOGRAM_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a nanosecond value: smallest `i` with
+    /// `ns <= 2^i`, clamped to the last (overflow) bucket.
+    fn index(ns: u64) -> usize {
+        let bits = (64 - ns.leading_zeros()) as usize;
+        // ns <= 1 -> bucket 0; an exact power of two stays in its own
+        // bucket (upper bounds are inclusive)
+        let i = if ns <= 1 {
+            0
+        } else if ns.is_power_of_two() {
+            bits - 1
+        } else {
+            bits
+        };
+        i.min(LOG_HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Upper bound (inclusive) of bucket `i`, in nanoseconds.
+    pub fn bucket_bound_ns(i: usize) -> u64 {
+        1u64 << i.min(62)
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        self.record_ns((secs.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns() as f64 / n as f64
+        }
+    }
+
+    /// Per-bucket counts (non-cumulative), oldest bound first.
+    pub fn bucket_counts(&self) -> [u64; LOG_HISTOGRAM_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// `q` in [0, 1]: upper bound (ns) of the first bucket at which the
+    /// cumulative count reaches `ceil(q * count)`. 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::bucket_bound_ns(i);
+            }
+        }
+        Self::bucket_bound_ns(LOG_HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Fold `other`'s counts into `self` (both may keep recording;
+    /// relaxed reads give a consistent-enough live snapshot).
+    pub fn merge_from(&self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = o.load(Ordering::Relaxed);
+            if v > 0 {
+                b.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns(), Ordering::Relaxed);
+    }
+}
+
+/// Exact percentile summary over a retained sample vector. Unbounded —
+/// it keeps every sample and sorts per quantile — so it belongs in
+/// tests and offline reporting that need exact values; hot paths record
+/// into a [`LogHistogram`] instead.
 #[derive(Clone, Debug, Default)]
 pub struct Percentiles {
     samples: Vec<f64>,
@@ -141,5 +272,54 @@ mod tests {
         w.push(3.0);
         assert_eq!(w.mean(), 3.0);
         assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_bucket_boundaries() {
+        // powers of two land in their own bucket (bounds inclusive);
+        // one past a power of two spills into the next
+        assert_eq!(LogHistogram::index(0), 0);
+        assert_eq!(LogHistogram::index(1), 0);
+        assert_eq!(LogHistogram::index(2), 1);
+        assert_eq!(LogHistogram::index(3), 2);
+        assert_eq!(LogHistogram::index(4), 2);
+        assert_eq!(LogHistogram::index(5), 3);
+        assert_eq!(LogHistogram::index(1 << 20), 20);
+        assert_eq!(LogHistogram::index((1 << 20) + 1), 21);
+        assert_eq!(LogHistogram::index(u64::MAX), LOG_HISTOGRAM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_bound_true_values() {
+        let h = LogHistogram::new();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_ns(), 101_500);
+        // the quantile is the matched bucket's upper bound: at least the
+        // true value, at most 2x it
+        let p50 = h.quantile_ns(0.5);
+        assert!((200..=512).contains(&p50), "p50 = {p50}");
+        let p100 = h.quantile_ns(1.0);
+        assert!((100_000..=131_072).contains(&p100), "p100 = {p100}");
+        assert_eq!(h.quantile_ns(0.0), h.quantile_ns(1.0 / 5.0));
+        let empty = LogHistogram::new();
+        assert_eq!(empty.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn log_histogram_merge_adds_counts() {
+        let a = LogHistogram::new();
+        let b = LogHistogram::new();
+        a.record_ns(10);
+        b.record_ns(10);
+        b.record_ns(1_000_000);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum_ns(), 1_000_020);
+        let counts = a.bucket_counts();
+        assert_eq!(counts[LogHistogram::index(10)], 2);
+        assert_eq!(counts[LogHistogram::index(1_000_000)], 1);
     }
 }

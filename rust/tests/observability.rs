@@ -14,25 +14,38 @@
 //!    counters once the run quiesces;
 //! 4. the trace journal and control-state sidecars persist beside the
 //!    chain without confusing any chain reader.
+//!
+//! And the PR 10 storage-plane guarantees:
+//! 5. `/metrics` is well-formed Prometheus exposition — every sample has
+//!    HELP/TYPE, series are unique, histogram buckets are cumulative and
+//!    end at `+Inf` agreeing with `_count` (a hand-rolled linter);
+//! 6. the chain scrubber flags durable damage BEFORE any recovery trusts
+//!    the chain, `/health` degrades with a machine-readable reason, and
+//!    fast-tier damage is repaired bit-identically from the durable copy
+//!    so recovery-after-scrub equals the undamaged recovery.
 
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use lowdiff::checkpoint::format::model_signature;
+use lowdiff::checkpoint::Manifest;
 use lowdiff::cluster::{
     partition_even, recover_cluster, Cluster, ClusterConfig, Detector, HeartbeatTable,
 };
 use lowdiff::compress::topk_mask;
 use lowdiff::control::{
-    ControlState, ControlView, ObsServer, ObsState, Retune, TelemetryBus, Tracer, TRACE_OBJECT,
+    ControlState, ControlView, ObsServer, ObsState, ReportGauges, Retune, TelemetryBus, Tracer,
+    TRACE_OBJECT,
 };
 use lowdiff::coordinator::checkpointer::{Checkpointer, CkptConfig, CkptItem};
 use lowdiff::coordinator::recovery::{recover, RecoveryMode};
 use lowdiff::optim::{Adam, ModelState};
+use lowdiff::pipeline::{scrub_pass, ScrubStats, Scrubber};
 use lowdiff::sparse::SparseGrad;
-use lowdiff::storage::{MemStore, StorageBackend};
+use lowdiff::storage::{MemStore, Observed, StorageBackend, StorageObs, Tiered};
 use lowdiff::tensor::Flat;
 use lowdiff::util::rng::Rng;
 
@@ -330,4 +343,253 @@ fn sidecars_persist_beside_the_chain_and_recovery_ignores_them() {
 
     let (got, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
     assert_eq!(got, want, "recovery is oblivious to the sidecars");
+}
+
+/// Hand-rolled Prometheus exposition linter: every sample carries
+/// HELP/TYPE, metric names use the legal charset, series are unique, and
+/// every histogram's buckets are cumulative, ascending in `le`, end at
+/// `+Inf` and agree with the family's `_count` sample.
+fn lint_prometheus(body: &str) {
+    let mut typed: HashMap<&str, &str> = HashMap::new();
+    let mut helped: HashSet<&str> = HashSet::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    // (histogram, labels-sans-le) -> [(le bound, cumulative count)]
+    let mut buckets: HashMap<(String, String), Vec<(f64, f64)>> = HashMap::new();
+    let mut counts: HashMap<(String, String), f64> = HashMap::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            helped.insert(rest.split_whitespace().next().expect("HELP names a metric"));
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE names a metric");
+            let kind = it.next().expect("TYPE carries a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown metric kind in {line}"
+            );
+            assert!(typed.insert(name, kind).is_none(), "duplicate TYPE for {name}");
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line}");
+        let (id, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("malformed sample: {line}"));
+        let value: f64 =
+            value.parse().unwrap_or_else(|_| panic!("non-numeric sample value: {line}"));
+        assert!(seen.insert(id.to_string()), "duplicate series {id}");
+        let (name, labels) = match id.split_once('{') {
+            Some((n, l)) => {
+                (n, l.strip_suffix('}').unwrap_or_else(|| panic!("unclosed labels: {line}")))
+            }
+            None => (id, ""),
+        };
+        assert!(
+            name.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+                && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "illegal metric name {name}"
+        );
+        // histogram samples use suffixed names; resolve the declared base
+        let base = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|s| name.strip_suffix(s).filter(|b| typed.get(b) == Some(&"histogram")))
+            .unwrap_or(name);
+        assert!(typed.contains_key(base), "sample {name} has no TYPE");
+        assert!(helped.contains(base), "sample {name} has no HELP");
+        if base != name && name.ends_with("_bucket") {
+            let (rest, le) =
+                labels.rsplit_once("le=\"").unwrap_or_else(|| panic!("bucket without le: {line}"));
+            let le = le.strip_suffix('"').expect("le bound is quoted");
+            let le: f64 =
+                if le == "+Inf" { f64::INFINITY } else { le.parse().expect("numeric le bound") };
+            let key = (base.to_string(), rest.trim_end_matches(',').to_string());
+            buckets.entry(key).or_default().push((le, value));
+        }
+        if base != name && name.ends_with("_count") {
+            counts.insert((base.to_string(), labels.to_string()), value);
+        }
+    }
+    assert!(!buckets.is_empty(), "the exposition must carry at least one histogram");
+    for ((name, labels), bs) in &buckets {
+        for w in bs.windows(2) {
+            assert!(w[0].0 < w[1].0, "{name}{{{labels}}}: le bounds must ascend");
+            assert!(w[0].1 <= w[1].1, "{name}{{{labels}}}: buckets must be cumulative");
+        }
+        let (last_le, last_v) = *bs.last().expect("non-empty bucket group");
+        assert!(last_le.is_infinite(), "{name}{{{labels}}}: missing +Inf bucket");
+        let total = counts
+            .get(&(name.clone(), labels.clone()))
+            .unwrap_or_else(|| panic!("{name}{{{labels}}} has buckets but no _count"));
+        assert_eq!(last_v, *total, "{name}{{{labels}}}: +Inf bucket must equal _count");
+    }
+}
+
+#[test]
+fn metrics_exposition_is_wellformed_prometheus() {
+    // PR 10 satellite: the full /metrics surface — observed storage tiers
+    // with latency histograms, scrub counters, report gauges, heartbeats,
+    // trace losses — survives a strict exposition lint
+    let inner: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let so = Arc::new(StorageObs::new(1_000));
+    let observed: Arc<dyn StorageBackend> =
+        Arc::new(Observed::new(inner, Arc::clone(&so), "durable"));
+    observed.put("full-00000000.ckpt", &vec![7u8; 256]).unwrap();
+    observed.get("full-00000000.ckpt").unwrap();
+    observed.list().unwrap();
+
+    let tracer = Arc::new(Tracer::default());
+    tracer.instant("persist.submit", 0, 1, 64);
+    let table = Arc::new(HeartbeatTable::new(2));
+    table.beat(0, 1, 1);
+    table.beat(1, 1, 1);
+    let scrub_live = Arc::new(std::sync::Mutex::new(ScrubStats::default()));
+    let obs = Arc::new(
+        ObsState::new(
+            Arc::new(TelemetryBus::new()),
+            Some(Arc::clone(&tracer)),
+            Some(Arc::clone(&table)),
+            Some(Arc::clone(&observed)),
+        )
+        .with_storage_obs(Arc::clone(&so))
+        .with_scrub(scrub_live)
+        .with_heartbeat_timeout(30.0),
+    );
+    obs.set_gauges(ReportGauges { pool_hits: 9, pool_misses: 2, gc_leaks: 0 });
+    let mut srv = ObsServer::serve(Arc::clone(&obs), "127.0.0.1:0").unwrap();
+    let (head, body) = http_get(srv.local_addr(), "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    lint_prometheus(&body);
+    // the labelled storage series really carry the traffic we drove
+    assert!(body.contains("lowdiff_storage_ops_total{tier=\"durable\",op=\"put\"} 1"), "{body}");
+    let get_inf =
+        "lowdiff_storage_op_duration_seconds_bucket{tier=\"durable\",op=\"get\",le=\"+Inf\"} 1";
+    assert!(body.contains(get_inf), "{body}");
+    assert_eq!(prom_u64(&body, "lowdiff_pool_hits_total"), 9);
+    assert_eq!(prom_u64(&body, "lowdiff_scrub_passes_total"), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn scrub_flags_durable_damage_before_recovery_and_health_degrades() {
+    // PR 10 tentpole: silent corruption of a committed span is surfaced
+    // by the scrubber BEFORE any recovery trusts the chain, and /health
+    // reports it with a machine-readable reason
+    let n = 80;
+    let sig = model_signature("obs-scrub", n);
+    let adam = Adam::default();
+    let store: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let ck = Checkpointer::spawn(
+        Arc::clone(&store),
+        CkptConfig { model_sig: sig, gc: false, ..CkptConfig::default() },
+    );
+    let mut rng = Rng::new(23);
+    let mut want = ModelState::new(Flat(vec![0.25; n]));
+    ck.queue.put(0, Arc::new(CkptItem::Full(want.clone())));
+    for step in 1..=4u64 {
+        let g = grad(&mut rng, n);
+        adam.apply_sparse(&mut want, &SparseGrad::from_dense(&g));
+        ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+    }
+    ck.finish();
+    // sanity: the undamaged chain recovers to the oracle
+    let (got, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(got, want);
+
+    // flip one byte in the middle of a committed diff span
+    let victim = store
+        .list()
+        .unwrap()
+        .into_iter()
+        .find(|nm| matches!(Manifest::step_range(nm), Some(("diff" | "batch" | "merged", _, _))))
+        .expect("a committed diff span to damage");
+    let mut bytes = store.get(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    store.put(&victim, &bytes).unwrap();
+
+    // the scrubber flags the damage (and nothing else)
+    let scrubber = Scrubber::spawn(Arc::clone(&store), Duration::ZERO);
+    let obs = Arc::new(
+        ObsState::new(Arc::new(TelemetryBus::new()), None, None, Some(Arc::clone(&store)))
+            .with_scrub(scrubber.live_handle()),
+    );
+    scrubber.notify();
+    let stats = scrubber.finish();
+    assert_eq!(stats.corrupt, 1, "exactly the damaged span is flagged: {stats:?}");
+    assert_eq!(stats.repaired, 0, "durable damage has no second copy to repair from");
+    assert_eq!(stats.damaged, 1, "{stats:?}");
+
+    // /health turns degraded — alive (200), but with the reason attached
+    let mut srv = ObsServer::serve(Arc::clone(&obs), "127.0.0.1:0").unwrap();
+    let (head, body) = http_get(srv.local_addr(), "/health");
+    assert!(head.starts_with("HTTP/1.1 200"), "degraded is still alive: {head}");
+    assert!(body.contains("\"status\":\"degraded\""), "{body}");
+    assert!(body.contains("\"scrub_corruption\""), "{body}");
+    assert_eq!(json_u64(&body, "scrub_damaged"), 1);
+    srv.shutdown();
+
+    // ...and the damage the scrubber saw is real: replaying through the
+    // damaged span can never silently reproduce the oracle state
+    let post = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay);
+    assert!(
+        post.is_err() || post.unwrap().0 != want,
+        "a CRC-damaged span must not replay to the oracle state"
+    );
+}
+
+#[test]
+fn tiered_fast_damage_scrub_repairs_and_recovery_matches_undamaged() {
+    // PR 10 tentpole: damage confined to the fast tier's cached copy is
+    // repaired bit-identically from the durable copy (demote -> re-fetch
+    // -> re-verify), so recovery after the scrub equals the undamaged one
+    let n = 80;
+    let sig = model_signature("obs-repair", n);
+    let adam = Adam::default();
+    let fast: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let durable: Arc<dyn StorageBackend> = Arc::new(MemStore::new());
+    let tiered = Arc::new(Tiered::new(Arc::clone(&fast), Arc::clone(&durable)));
+    let store: Arc<dyn StorageBackend> = tiered.clone();
+    let ck = Checkpointer::spawn(
+        Arc::clone(&store),
+        CkptConfig { model_sig: sig, gc: false, ..CkptConfig::default() },
+    );
+    let mut rng = Rng::new(29);
+    let mut want = ModelState::new(Flat(vec![0.25; n]));
+    ck.queue.put(0, Arc::new(CkptItem::Full(want.clone())));
+    for step in 1..=4u64 {
+        let g = grad(&mut rng, n);
+        adam.apply_sparse(&mut want, &SparseGrad::from_dense(&g));
+        ck.queue.put(step, Arc::new(CkptItem::DiffDense(g)));
+    }
+    ck.finish();
+    tiered.wait_idle();
+    let (undamaged, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(undamaged, want);
+
+    let victim = store
+        .list()
+        .unwrap()
+        .into_iter()
+        .find(|nm| matches!(Manifest::step_range(nm), Some(("diff" | "batch" | "merged", _, _))))
+        .expect("a committed diff span to damage");
+    let clean = durable.get(&victim).unwrap();
+    let mut bytes = fast.get(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    fast.put(&victim, &bytes).unwrap();
+
+    let mut stats = ScrubStats::default();
+    let mut known_bad = HashSet::new();
+    scrub_pass(store.as_ref(), &mut stats, &mut known_bad, None).unwrap();
+    assert_eq!(stats.corrupt, 1, "{stats:?}");
+    assert_eq!(stats.repaired, 1, "fast-tier damage repairs from the durable copy: {stats:?}");
+    assert_eq!(stats.damaged, 0, "nothing stays damaged after the repair: {stats:?}");
+    assert_eq!(store.get(&victim).unwrap(), clean, "repair is bit-identical");
+    assert_eq!(fast.get(&victim).unwrap(), clean, "the fast copy is re-warmed clean");
+
+    let (got, _) = recover(store.as_ref(), sig, &adam, RecoveryMode::SerialReplay).unwrap();
+    assert_eq!(got, undamaged, "recovery after the scrub equals the undamaged recovery");
 }
